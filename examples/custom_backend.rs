@@ -1,0 +1,109 @@
+//! Custom-backend demo (paper Appendix A: "identical sampling algorithms
+//! operate on AnnData, HuggingFace Datasets, TileDB-SOMA, or custom
+//! backends"): implement [`Backend`] for an in-memory store and run the
+//! unmodified scDataset pipeline over it.
+//!
+//! Run: `cargo run --release --example custom_backend`
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use scdata::coordinator::{LoaderConfig, ScDataset, Strategy};
+use scdata::store::iomodel::{AccessPattern, IoReport};
+use scdata::store::{
+    check_sorted_indices, contiguous_runs, Backend, CsrBatch, FetchResult, ObsColumn, ObsFrame,
+};
+
+/// A toy in-memory backend: every cell expresses exactly one gene whose
+/// index encodes the cell's class.
+struct ToyStore {
+    n_rows: usize,
+    n_cols: usize,
+    obs: ObsFrame,
+}
+
+impl ToyStore {
+    fn new(n_rows: usize, n_cols: usize, classes: usize) -> Result<ToyStore> {
+        let codes: Vec<u16> = (0..n_rows).map(|i| (i % classes) as u16).collect();
+        let mut obs = ObsFrame::new(n_rows);
+        obs.push(ObsColumn::new(
+            "class",
+            (0..classes).map(|c| format!("class{c}")).collect(),
+            codes,
+        )?)?;
+        Ok(ToyStore {
+            n_rows,
+            n_cols,
+            obs,
+        })
+    }
+}
+
+impl Backend for ToyStore {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+    fn obs(&self) -> &ObsFrame {
+        &self.obs
+    }
+    fn pattern(&self) -> AccessPattern {
+        AccessPattern::Mmap // in-memory: no call overhead, no row groups
+    }
+    fn name(&self) -> &str {
+        "toy-inmem"
+    }
+    fn fetch_rows(&self, sorted: &[u32]) -> Result<FetchResult> {
+        check_sorted_indices(sorted, self.n_rows)?;
+        let mut x = CsrBatch::empty(self.n_cols);
+        for &r in sorted {
+            x.indices.push(r % self.n_cols as u32);
+            x.data.push(1.0 + (r % 7) as f32);
+            x.indptr.push(x.indices.len() as u64);
+            x.n_rows += 1;
+        }
+        Ok(FetchResult {
+            x,
+            io: IoReport {
+                calls: 1,
+                runs: contiguous_runs(sorted).len() as u64,
+                rows: sorted.len() as u64,
+                bytes: sorted.len() as u64 * 8,
+                chunks: 0,
+                pages: 0,
+            },
+        })
+    }
+}
+
+fn main() -> Result<()> {
+    let backend: Arc<dyn Backend> = Arc::new(ToyStore::new(10_000, 32, 5)?);
+    let ds = ScDataset::new(
+        backend,
+        LoaderConfig {
+            strategy: Strategy::ClassBalanced {
+                block_size: 4,
+                label_col: "class".into(),
+            },
+            batch_size: 50,
+            fetch_factor: 8,
+            label_cols: vec!["class".into()],
+            seed: 3,
+            ..Default::default()
+        },
+    );
+    let mut counts = [0usize; 5];
+    let mut batches = 0;
+    for mb in ds.epoch(0)? {
+        let mb = mb?;
+        for &c in &mb.labels[0] {
+            counts[c as usize] += 1;
+        }
+        batches += 1;
+    }
+    println!("ran {batches} class-balanced minibatches over a custom in-memory backend");
+    println!("class counts (should be ≈ equal): {counts:?}");
+    Ok(())
+}

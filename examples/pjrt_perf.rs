@@ -1,0 +1,24 @@
+//! One-off §Perf L2 probe (not shipped): PJRT train-step latency.
+fn main() {
+    use scdata::runtime::{Runtime, Tensor};
+    let rt = Runtime::open("artifacts").unwrap();
+    for (g, k) in [(64usize, 6usize), (512, 38)] {
+        let exe = rt.load("train_step", g, k).unwrap();
+        let mut state: Vec<Tensor> = exe.entry.inputs[..7].iter().map(Tensor::zeros).collect();
+        let x = Tensor::F32(vec![0.5; 64 * g]);
+        let y = Tensor::I32((0..64).map(|i| (i % k) as i32).collect());
+        // warmup
+        for _ in 0..5 {
+            let mut inp = state.clone(); inp.push(x.clone()); inp.push(y.clone());
+            let out = exe.run(&inp).unwrap(); state = out[..7].to_vec();
+        }
+        let t0 = std::time::Instant::now();
+        let iters = 200;
+        for _ in 0..iters {
+            let mut inp = state.clone(); inp.push(x.clone()); inp.push(y.clone());
+            let out = exe.run(&inp).unwrap(); state = out[..7].to_vec();
+        }
+        let dt = t0.elapsed().as_secs_f64() / iters as f64;
+        println!("train_step g{g} c{k}: {:.1} µs/step ({:.0} samples/s)", dt * 1e6, 64.0 / dt);
+    }
+}

@@ -1,0 +1,85 @@
+//! End-to-end driver (DESIGN.md §2, E5): train the paper's §4.4 linear
+//! probes on a real (synthetic-Tahoe) on-disk dataset through the full
+//! three-layer stack — Rust scDataset pipeline → AOT-compiled JAX/Pallas
+//! train step via PJRT — and report loss curves, macro-F1, and the
+//! loading-strategy comparison. The run recorded in EXPERIMENTS.md §E5
+//! comes from this binary.
+//!
+//! Run: `make artifacts && cargo run --release --example train_classifier`
+//! (falls back to the pure-Rust reference engine if artifacts are missing).
+
+use std::sync::Arc;
+
+use scdata::coordinator::Strategy;
+use scdata::datagen::{generate, open_train_test, TahoeConfig};
+use scdata::runtime::Runtime;
+use scdata::store::Backend;
+use scdata::train::{train_eval, Engine, TaskSpec, TrainConfig};
+
+fn main() -> anyhow::Result<()> {
+    // Dataset: the tiny preset (64 genes) whose class counts match the
+    // shipped AOT artifact variants; ~8k cells keeps the demo < 1 min.
+    let dir = std::env::temp_dir().join("scdata-train-example");
+    if !dir.join("dataset.json").exists() {
+        println!("generating dataset under {} …", dir.display());
+        generate(&TahoeConfig::tiny(), &dir)?;
+    }
+    let (train_be, test_be) = open_train_test(&dir)?;
+    let train_be: Arc<dyn Backend> = Arc::new(train_be);
+    let test_be: Arc<dyn Backend> = Arc::new(test_be);
+    println!(
+        "train: {} cells (plates 0..n-1)   test: {} cells (held-out plate)",
+        train_be.n_rows(),
+        test_be.n_rows()
+    );
+
+    // Engine: PJRT over the AOT JAX/Pallas artifacts when available.
+    let (engine, lr) = match Runtime::open("artifacts") {
+        Ok(rt) => {
+            println!("engine: PJRT ({}) over AOT artifacts", rt.platform());
+            let lr = rt.manifest().lr as f32;
+            (Engine::Pjrt(Arc::new(rt)), lr)
+        }
+        Err(e) => {
+            println!("engine: pure-Rust fallback ({e})");
+            (Engine::Cpu, 1e-5)
+        }
+    };
+
+    // The paper's comparison: BlockShuffling(16, 256) vs Random vs
+    // Streaming, on two tasks.
+    let strategies = [
+        ("BlockShuffling(16,256)", Strategy::BlockShuffling { block_size: 16 }, 256),
+        ("Random sampling (b=1)", Strategy::BlockShuffling { block_size: 1 }, 256),
+        ("Streaming", Strategy::Streaming { shuffle_buffer: 0 }, 256),
+    ];
+    for task_name in ["cell_line", "moa_broad"] {
+        let task = TaskSpec::by_name(task_name).unwrap();
+        println!("\n=== task: {task_name} ===");
+        for (label, strategy, f) in &strategies {
+            let mut cfg = TrainConfig::new(task.clone(), strategy.clone(), 64, *f);
+            cfg.epochs = 3;
+            cfg.lr = lr;
+            cfg.seed = 0;
+            cfg.loss_every = 40;
+            let r = train_eval(train_be.clone(), test_be.clone(), &engine, &cfg)?;
+            println!(
+                "{label:<24} steps={:<5} macro-F1={:.3} acc={:.3}  train {:.1}s  sim-load {:.0}s",
+                r.steps, r.macro_f1, r.accuracy, r.train_secs, r.sim_load_secs
+            );
+            if *label == "BlockShuffling(16,256)" {
+                print!("  loss curve:");
+                for (s, l) in r.losses.iter().take(8) {
+                    print!(" {s}:{l:.3}");
+                }
+                println!();
+            }
+        }
+    }
+    println!(
+        "\nThe paper's §4.4 result in miniature: BlockShuffling matches random\n\
+         sampling while streaming lags — and the simulated load time shows the\n\
+         orders-of-magnitude I/O gap that motivates quasi-random sampling."
+    );
+    Ok(())
+}

@@ -1,0 +1,169 @@
+"""AOT lowering: JAX/Pallas → HLO text + manifest for the Rust runtime.
+
+Run once at build time (``make artifacts``); Python never appears on the
+data path. Interchange is HLO **text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emits, per (genes, classes) variant:
+  * ``train_step_g{G}_c{K}.hlo.txt`` — the full fused train step
+    (normalize → fwd → loss/grad → bwd → Adam), 9 inputs → 8-tuple output.
+  * ``predict_g{G}_c{K}.hlo.txt``    — normalize → logits, 3 inputs.
+plus ``manifest.json`` describing every artifact's argument shapes/dtypes
+(parsed by ``rust/src/runtime/artifact.rs``).
+
+Usage:
+  python -m compile.aot --out ../artifacts \
+      --variant 512:20,38,4,12 --variant 64:6,10,3,5 --batch 64
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jaxpr → HLO text (id-safe interchange).
+
+    ``compiler_ir(dialect="hlo")`` converts inside the *current* jaxlib, so
+    no stablehlo version skew can bite (converting the stablehlo text with
+    the old xla_extension fails on post-1.x syntax like
+    ``stablehlo.dynamic_slice ... sizes``, which Pallas interpret-mode
+    loops emit); XLA's HLO *text* grammar is stable enough for the 0.5.1
+    parser to consume.
+    """
+    return lowered.compiler_ir(dialect="hlo").as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def lower_train_step(genes: int, classes: int, batch: int, lr: float):
+    f32 = jnp.float32
+    args = (
+        jax.ShapeDtypeStruct((genes, classes), f32),  # w
+        jax.ShapeDtypeStruct((classes,), f32),        # b
+        jax.ShapeDtypeStruct((genes, classes), f32),  # m_w
+        jax.ShapeDtypeStruct((genes, classes), f32),  # v_w
+        jax.ShapeDtypeStruct((classes,), f32),        # m_b
+        jax.ShapeDtypeStruct((classes,), f32),        # v_b
+        jax.ShapeDtypeStruct((), f32),                # step
+        jax.ShapeDtypeStruct((batch, genes), f32),    # x
+        jax.ShapeDtypeStruct((batch,), jnp.int32),    # y
+    )
+    fn = lambda *a: model.train_step_flat(*a, lr=lr)  # noqa: E731
+    lowered = jax.jit(fn).lower(*args)
+    inputs = [
+        {"name": "w", **_spec((genes, classes))},
+        {"name": "b", **_spec((classes,))},
+        {"name": "m_w", **_spec((genes, classes))},
+        {"name": "v_w", **_spec((genes, classes))},
+        {"name": "m_b", **_spec((classes,))},
+        {"name": "v_b", **_spec((classes,))},
+        {"name": "step", **_spec(())},
+        {"name": "x", **_spec((batch, genes))},
+        {"name": "y", **_spec((batch,), "i32")},
+    ]
+    outputs = inputs[:7] + [{"name": "loss", **_spec(())}]
+    return lowered, inputs, outputs
+
+
+def lower_predict(genes: int, classes: int, batch: int):
+    f32 = jnp.float32
+    args = (
+        jax.ShapeDtypeStruct((genes, classes), f32),
+        jax.ShapeDtypeStruct((classes,), f32),
+        jax.ShapeDtypeStruct((batch, genes), f32),
+    )
+    lowered = jax.jit(model.predict).lower(*args)
+    inputs = [
+        {"name": "w", **_spec((genes, classes))},
+        {"name": "b", **_spec((classes,))},
+        {"name": "x", **_spec((batch, genes))},
+    ]
+    outputs = [{"name": "logits", **_spec((batch, classes))}]
+    return lowered, inputs, outputs
+
+
+def build(out_dir: str, variants, batch: int, lr: float, quiet=False):
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for genes, class_list in variants:
+        for classes in class_list:
+            for kind in ("train_step", "predict"):
+                if kind == "train_step":
+                    lowered, ins, outs = lower_train_step(genes, classes, batch, lr)
+                else:
+                    lowered, ins, outs = lower_predict(genes, classes, batch)
+                name = f"{kind}_g{genes}_c{classes}"
+                path = f"{name}.hlo.txt"
+                text = to_hlo_text(lowered)
+                with open(os.path.join(out_dir, path), "w") as f:
+                    f.write(text)
+                entries.append(
+                    {
+                        "name": name,
+                        "kind": kind,
+                        "genes": genes,
+                        "classes": classes,
+                        "batch": batch,
+                        "path": path,
+                        "inputs": ins,
+                        "outputs": outs,
+                        # multi-output functions lower to a tuple root;
+                        # single-output ones to a bare array
+                        "tuple_output": len(outs) > 1,
+                    }
+                )
+                if not quiet:
+                    print(f"lowered {name}: {len(text)} chars")
+    manifest = {
+        "version": 1,
+        "batch": batch,
+        "lr": lr,
+        "adam": {"b1": model.ADAM_B1, "b2": model.ADAM_B2, "eps": model.ADAM_EPS},
+        "entries": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    if not quiet:
+        print(f"wrote {len(entries)} artifacts + manifest to {out_dir}")
+    return manifest
+
+
+def parse_variant(s: str):
+    """'512:20,38,4,12' → (512, [20, 38, 4, 12])."""
+    genes, classes = s.split(":")
+    return int(genes), [int(c) for c in classes.split(",")]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--variant",
+        action="append",
+        default=[],
+        help="genes:classes,classes,... (repeatable)",
+    )
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=model.DEFAULT_LR)
+    args = ap.parse_args()
+    variants = [parse_variant(v) for v in args.variant] or [
+        # default dataset (datagen defaults): cell_line, drug, moa_broad, moa_fine
+        (512, [20, 38, 4, 12]),
+        # tiny test dataset
+        (64, [6, 10, 3, 5]),
+    ]
+    build(args.out, variants, args.batch, args.lr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,172 @@
+"""Pallas kernels for the linear-probe hot path (L1).
+
+Hardware adaptation (DESIGN.md §4): the paper trains its §4.4 probes on a
+DGX GPU, but this stack targets TPU idioms — tiles are (8, 128)-aligned for
+the VPU/MXU, the matmul grid accumulates over the contraction dimension so
+each step feeds the 128×128 MXU systolic array from VMEM-resident blocks,
+and ``BlockSpec`` index maps express the HBM→VMEM schedule that a CUDA
+implementation would express with threadblocks.
+
+All ``pallas_call``s use ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret mode lowers to plain HLO so the AOT
+artifacts execute anywhere (see /opt/xla-example/README.md). The BlockSpec
+structure is still the TPU schedule; DESIGN.md §7 records the estimated
+VMEM footprint / MXU utilization.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Contraction-dimension tile. 128 matches the MXU systolic array edge.
+TILE_G = 128
+
+
+def _pick_tile(g: int) -> int:
+    """Largest tile ≤ TILE_G that divides g (shapes here are powers of two;
+    falls back to g itself for small inputs)."""
+    t = min(g, TILE_G)
+    while g % t != 0:
+        t //= 2
+        if t == 0:
+            return g
+    return max(t, 1)
+
+
+def _linear_fwd_kernel(x_ref, w_ref, b_ref, o_ref):
+    """One grid step: accumulate x_blk @ w_blk into the resident out block,
+    adding the bias on the first step."""
+    k = pl.program_id(0)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.broadcast_to(b_ref[...], o_ref.shape)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def linear_fwd(x, w, b):
+    """Logits = x @ w + b via a G-tiled accumulation grid.
+
+    x: [m, g] f32, w: [g, k] f32, b: [k] f32 → [m, k] f32.
+    VMEM residency per step: m·tg + tg·k + m·k floats (≤ ~0.3 MiB at the
+    default m=64, g=512, k≤64 — far under the ~16 MiB VMEM budget).
+    """
+    m, g = x.shape
+    g2, k = w.shape
+    assert g == g2 and b.shape == (k,)
+    tg = _pick_tile(g)
+    grid = (g // tg,)
+    return pl.pallas_call(
+        _linear_fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, tg), lambda i: (0, i)),
+            pl.BlockSpec((tg, k), lambda i: (i, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+def _linear_bwd_kernel(x_ref, d_ref, dw_ref, db_ref):
+    """One grid step over G tiles: dW tile = x_blkᵀ @ dlogits (dlogits is
+    resident), db computed once on the first step."""
+    i = pl.program_id(0)
+    dw_ref[...] = jnp.dot(
+        x_ref[...].T, d_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(i == 0)
+    def _db():
+        db_ref[...] = jnp.sum(d_ref[...], axis=0)
+
+
+def linear_bwd(x, dlogits):
+    """dW = xᵀ @ dlogits (G-tiled grid), db = column sums.
+
+    x: [m, g], dlogits: [m, k] → ([g, k], [k]).
+    """
+    m, g = x.shape
+    m2, k = dlogits.shape
+    assert m == m2
+    tg = _pick_tile(g)
+    grid = (g // tg,)
+    return pl.pallas_call(
+        _linear_bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, tg), lambda i: (0, i)),
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tg, k), lambda i: (i, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, k), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=True,
+    )(x, dlogits)
+
+
+def _softmax_xent_kernel(logits_ref, onehot_ref, loss_ref, dlogits_ref):
+    """Row-parallel fused softmax + cross-entropy + gradient (VPU work:
+    elementwise + row reductions, no MXU)."""
+    logits = logits_ref[...]
+    onehot = onehot_ref[...]
+    m = logits.shape[0]
+    z = logits - jnp.max(logits, axis=1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(z), axis=1, keepdims=True))
+    logp = z - lse
+    loss_ref[...] = -jnp.sum(onehot * logp) / m
+    dlogits_ref[...] = (jnp.exp(logp) - onehot) / m
+
+
+def softmax_xent(logits, y_onehot):
+    """Mean CE loss and dlogits in one fused kernel.
+
+    logits: [m, k], y_onehot: [m, k] → (scalar, [m, k]).
+    """
+    m, k = logits.shape
+    return pl.pallas_call(
+        _softmax_xent_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((), jnp.float32),
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+        ],
+        interpret=True,
+    )(logits, y_onehot)
+
+
+def _log1p_norm_kernel(x_ref, o_ref, *, scale):
+    x = x_ref[...]
+    sums = jnp.sum(x, axis=1, keepdims=True)
+    safe = jnp.where(sums > 0, sums, 1.0)
+    o_ref[...] = jnp.log1p(x * (scale / safe))
+
+
+def log1p_norm(x, scale=1e4):
+    """CPM normalization + log1p (the fetch_transform step), row-tiled.
+
+    x: [m, g] → [m, g]. Rows are independent, so the grid tiles m in
+    8-row strips (f32 sublane height) while keeping all of g resident.
+    """
+    m, g = x.shape
+    tm = 8 if m % 8 == 0 else m
+    grid = (m // tm,)
+    return pl.pallas_call(
+        functools.partial(_log1p_norm_kernel, scale=scale),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tm, g), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tm, g), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, g), jnp.float32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+The pytest suite sweeps shapes/dtypes with hypothesis and asserts each
+Pallas kernel (interpret mode) matches these references to float32
+tolerance; the model layer is additionally cross-checked against
+``jax.grad`` autodiff in ``test_model.py``.
+"""
+
+import jax.numpy as jnp
+
+
+def log1p_norm(x, scale=1e4):
+    """CPM-style normalization + log1p (the paper's fetch_transform step):
+    each row is scaled to ``scale`` total counts, then log1p'd."""
+    sums = jnp.sum(x, axis=1, keepdims=True)
+    safe = jnp.where(sums > 0, sums, 1.0)
+    return jnp.log1p(x * (scale / safe))
+
+
+def linear_fwd(x, w, b):
+    """Logits = x @ w + b."""
+    return x @ w + b
+
+
+def softmax_xent(logits, y_onehot):
+    """Mean cross-entropy loss and dlogits = (softmax - onehot) / M."""
+    m = logits.shape[0]
+    z = logits - jnp.max(logits, axis=1, keepdims=True)
+    logp = z - jnp.log(jnp.sum(jnp.exp(z), axis=1, keepdims=True))
+    loss = -jnp.sum(y_onehot * logp) / m
+    dlogits = (jnp.exp(logp) - y_onehot) / m
+    return loss, dlogits
+
+
+def linear_bwd(x, dlogits):
+    """dW = x^T @ dlogits, db = column sums of dlogits."""
+    return x.T @ dlogits, jnp.sum(dlogits, axis=0)

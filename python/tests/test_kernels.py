@@ -1,0 +1,121 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle (ref.py),
+swept over shapes and value regimes with hypothesis."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import linear as K
+from compile.kernels import ref
+
+# Shape pools: powers of two (the kernels' tiling contract) plus small odds
+# where supported.
+MS = [1, 8, 64]
+GS = [16, 64, 128, 256, 512]
+KS = [2, 4, 5, 20, 38, 64]
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.sampled_from(MS),
+    g=st.sampled_from(GS),
+    k=st.sampled_from(KS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_fwd_matches_ref(m, g, k, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, m, g), rand(rng, g, k), rand(rng, k)
+    got = K.linear_fwd(x, w, b)
+    want = ref.linear_fwd(x, w, b)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.sampled_from(MS),
+    g=st.sampled_from(GS),
+    k=st.sampled_from(KS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_bwd_matches_ref(m, g, k, seed):
+    rng = np.random.default_rng(seed)
+    x, d = rand(rng, m, g), rand(rng, m, k)
+    dw, db = K.linear_bwd(x, d)
+    rw, rb = ref.linear_bwd(x, d)
+    np.testing.assert_allclose(np.array(dw), np.array(rw), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.array(db), np.array(rb), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.sampled_from(MS),
+    k=st.sampled_from(KS),
+    scale=st.sampled_from([0.1, 1.0, 30.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_xent_matches_ref(m, k, scale, seed):
+    rng = np.random.default_rng(seed)
+    logits = rand(rng, m, k) * scale  # include large-logit regime
+    y = rng.integers(0, k, m)
+    onehot = jnp.asarray(np.eye(k, dtype=np.float32)[y])
+    loss, dl = K.softmax_xent(logits, onehot)
+    rloss, rdl = ref.softmax_xent(logits, onehot)
+    np.testing.assert_allclose(float(loss), float(rloss), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.array(dl), np.array(rdl), rtol=1e-4, atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.sampled_from([1, 3, 8, 64]),
+    g=st.sampled_from(GS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_log1p_norm_matches_ref(m, g, seed):
+    rng = np.random.default_rng(seed)
+    # counts: non-negative, sparse-ish, including all-zero rows
+    x = np.maximum(rng.standard_normal((m, g)).astype(np.float32), 0.0)
+    x[rng.random(m) < 0.2] = 0.0
+    x = jnp.asarray(x)
+    got = K.log1p_norm(x)
+    want = ref.log1p_norm(x)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_dlogits_rows_sum_to_zero():
+    rng = np.random.default_rng(0)
+    logits = rand(rng, 16, 7)
+    onehot = jnp.asarray(np.eye(7, dtype=np.float32)[rng.integers(0, 7, 16)])
+    _, dl = K.softmax_xent(logits, onehot)
+    np.testing.assert_allclose(np.array(dl).sum(axis=1), 0.0, atol=1e-6)
+
+
+def test_log1p_norm_zero_row_stays_zero():
+    x = jnp.zeros((8, 32), jnp.float32)
+    out = K.log1p_norm(x)
+    np.testing.assert_array_equal(np.array(out), 0.0)
+
+
+def test_linear_fwd_odd_g_falls_back():
+    # g without a power-of-two tile divisor: kernel must still be correct.
+    rng = np.random.default_rng(1)
+    x, w, b = rand(rng, 4, 96), rand(rng, 96, 3), rand(rng, 3)
+    got = K.linear_fwd(x, w, b)
+    want = ref.linear_fwd(x, w, b)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-4)
+
+
+def test_pick_tile_divides():
+    for g in [1, 2, 16, 96, 100, 128, 500, 512, 4096]:
+        t = K._pick_tile(g)
+        assert t >= 1 and g % t == 0 and t <= max(g, 1)
+
+
+@pytest.mark.parametrize("g,expected", [(512, 128), (256, 128), (128, 128), (64, 64)])
+def test_pick_tile_prefers_mxu_width(g, expected):
+    assert K._pick_tile(g) == expected

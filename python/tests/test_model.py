@@ -1,0 +1,106 @@
+"""L2 correctness: the hand-derived fused train step vs jax.grad autodiff,
+Adam semantics, and training-dynamics sanity."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+
+
+def batch(rng, m, g, k):
+    x = np.maximum(rng.standard_normal((m, g)).astype(np.float32), 0.0) * 3.0
+    y = rng.integers(0, k, m).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    g=st.sampled_from([16, 64, 128]),
+    k=st.sampled_from([3, 5, 10]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gradients_match_autodiff(g, k, seed):
+    rng = np.random.default_rng(seed)
+    state = model.init_state(g, k, seed=1)
+    x, y = batch(rng, 8, g, k)
+
+    # autodiff grads of the pure-jnp reference loss
+    def loss_fn(w, b):
+        s = state._replace(w=w, b=b)
+        return model.reference_loss(s, x, y)
+
+    gw, gb = jax.grad(loss_fn, argnums=(0, 1))(state.w, state.b)
+
+    # hand-derived grads recovered from one zero-moment Adam step:
+    # after step 1 with zeroed moments, mhat = g, vhat = g², so
+    # delta = -lr * g/(|g| + eps) — sign only. Instead recompute grads
+    # directly through the kernel path:
+    from compile.kernels import linear as K
+
+    h = K.log1p_norm(x)
+    logits = K.linear_fwd(h, state.w, state.b)
+    onehot = jax.nn.one_hot(y, k, dtype=jnp.float32)
+    _, dlogits = K.softmax_xent(logits, onehot)
+    dw, db = K.linear_bwd(h, dlogits)
+
+    np.testing.assert_allclose(np.array(dw), np.array(gw), rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(np.array(db), np.array(gb), rtol=1e-3, atol=1e-5)
+
+
+def test_train_step_decreases_loss():
+    rng = np.random.default_rng(0)
+    g, k, m = 64, 4, 32
+    state = model.init_state(g, k)
+    # strongly separable synthetic problem
+    x = np.zeros((m, g), np.float32)
+    y = rng.integers(0, k, m).astype(np.int32)
+    for i, yi in enumerate(y):
+        x[i, yi * 8 : (yi + 1) * 8] = 10.0
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    step = jax.jit(lambda s, x, y: model.train_step(s, x, y, lr=0.1))
+    losses = []
+    for _ in range(60):
+        state, loss = step(state, x, y)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5, losses[::10]
+    assert float(state.step) == 60.0
+
+
+def test_train_step_flat_matches_structured():
+    rng = np.random.default_rng(3)
+    g, k = 32, 5
+    state = model.init_state(g, k, seed=2)
+    x, y = batch(rng, 8, g, k)
+    s1, l1 = model.train_step(state, x, y)
+    flat = model.train_step_flat(*state, x, y)
+    for a, b in zip(s1, flat[:-1]):
+        np.testing.assert_allclose(np.array(a), np.array(b))
+    np.testing.assert_allclose(float(l1), float(flat[-1]))
+
+
+def test_adam_bias_correction_first_step():
+    # After one step from zero moments, update must be ≈ -lr * sign(g).
+    g_val = jnp.asarray([[2.0], [-3.0]], jnp.float32)
+    p = jnp.zeros((2, 1), jnp.float32)
+    m = jnp.zeros_like(p)
+    v = jnp.zeros_like(p)
+    p2, _, _ = model._adam(p, m, v, g_val, jnp.asarray(1.0), lr=0.01)
+    np.testing.assert_allclose(
+        np.array(p2), -0.01 * np.sign(np.array(g_val)), rtol=1e-4
+    )
+
+
+def test_predict_uses_normalization():
+    rng = np.random.default_rng(5)
+    g, k = 32, 3
+    state = model.init_state(g, k, seed=0)
+    x, _ = batch(rng, 4, g, k)
+    logits = model.predict(state.w, state.b, x)
+    # scaling raw counts must not change predictions (CPM normalization)
+    logits_scaled = model.predict(state.w, state.b, x * 7.0)
+    np.testing.assert_allclose(
+        np.array(logits), np.array(logits_scaled), rtol=1e-4, atol=1e-5
+    )

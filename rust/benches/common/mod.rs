@@ -1,0 +1,55 @@
+//! Shared setup for the bench targets: a cached small dataset + sweep
+//! options tuned for bench runtime.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use scdata::bench_harness::SweepOptions;
+use scdata::datagen::{generate, open_collection, TahoeConfig};
+use scdata::store::Backend;
+
+/// Generate (once) and open the bench dataset: 4 plates × 8k cells ×
+/// 256 genes. Kept under target/ so repeated `cargo bench` runs reuse it.
+pub fn bench_backend() -> Arc<dyn Backend> {
+    let dir = bench_data_dir();
+    if !dir.join("dataset.json").exists() {
+        let cfg = TahoeConfig {
+            n_plates: 4,
+            cells_per_plate: 8_000,
+            n_genes: 256,
+            chunk_rows: 512,
+            ..TahoeConfig::tiny()
+        };
+        generate(&cfg, &dir).expect("generate bench dataset");
+    }
+    Arc::new(open_collection(&dir).expect("open bench dataset"))
+}
+
+pub fn bench_data_dir() -> PathBuf {
+    PathBuf::from("target/bench-data/tahoe-bench")
+}
+
+pub fn bench_opts() -> SweepOptions {
+    SweepOptions {
+        min_rows: 8_192,
+        max_fetches: 4,
+        ..SweepOptions::default()
+    }
+}
+
+/// Paper-row printer: one line per sweep point.
+pub fn print_points(title: &str, points: &[scdata::bench_harness::SweepPoint]) {
+    println!("\n== {title} ==");
+    for p in points {
+        println!(
+            "b={:<5} f={:<5} w={:<3} {:>10.1} samples/s (sim)  {:>12.0} samples/s (real)  H={:.2}±{:.2}",
+            p.block_size,
+            p.fetch_factor,
+            p.workers,
+            p.samples_per_sec,
+            p.real_samples_per_sec,
+            p.entropy_mean,
+            p.entropy_std
+        );
+    }
+}

@@ -1,0 +1,31 @@
+//! Bench: paper Figure 2 — AnnData-backend throughput over (block size ×
+//! fetch factor), plus the AnnLoader random-access baseline. A reduced
+//! grid keeps `cargo bench` fast; the full 6×6 grid is `scdata bench fig2`.
+
+mod common;
+
+use scdata::bench_harness::{annloader_baseline, throughput_grid};
+
+fn main() {
+    let backend = common::bench_backend();
+    let opts = common::bench_opts();
+    let base = annloader_baseline(&backend, &opts).unwrap();
+    println!(
+        "AnnLoader baseline: {:.1} samples/s (paper anchor: ~20)",
+        base.samples_per_sec
+    );
+    let grid = throughput_grid(&backend, &[1, 16, 256, 1024], &[1, 16, 256], &opts).unwrap();
+    common::print_points("Fig 2 (reduced grid)", &grid);
+    let best = grid
+        .iter()
+        .max_by(|a, b| a.samples_per_sec.partial_cmp(&b.samples_per_sec).unwrap())
+        .unwrap();
+    println!(
+        "\nmax speedup over AnnLoader: {:.0}× at (b={}, f={})  [paper: 204×]",
+        best.samples_per_sec / base.samples_per_sec,
+        best.block_size,
+        best.fetch_factor
+    );
+    // sanity: the paper's monotonicity must hold
+    assert!(best.samples_per_sec > 40.0 * base.samples_per_sec);
+}

@@ -1,0 +1,20 @@
+//! Bench: paper Figure 3 — sequential streaming throughput vs fetch
+//! factor (fixed per-call overhead amortization).
+
+mod common;
+
+use scdata::bench_harness::streaming_sweep;
+
+fn main() {
+    let backend = common::bench_backend();
+    let opts = common::bench_opts();
+    let series = streaming_sweep(&backend, &[1, 4, 16, 64, 256, 1024], &opts).unwrap();
+    common::print_points("Fig 3 — streaming vs fetch factor", &series);
+    let base = series[0].samples_per_sec;
+    let max = series
+        .iter()
+        .map(|p| p.samples_per_sec)
+        .fold(0.0f64, f64::max);
+    println!("\nstreaming speedup at max f: {:.1}× [paper: >15×]", max / base);
+    assert!(max / base > 10.0, "fetch-factor amortization collapsed");
+}

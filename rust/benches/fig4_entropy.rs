@@ -1,0 +1,35 @@
+//! Bench: paper Figure 4 — minibatch plate entropy vs (block size, fetch
+//! factor), with the Eq. 5 sandwich check.
+
+mod common;
+
+use scdata::coordinator::entropy::{corollary33_bounds, dist_entropy};
+use scdata::bench_harness::throughput_grid;
+
+fn main() {
+    let backend = common::bench_backend();
+    let mut opts = common::bench_opts();
+    opts.min_rows = 16_384;
+    let grid = throughput_grid(&backend, &[1, 16, 64, 256], &[1, 16, 256], &opts).unwrap();
+    common::print_points("Fig 4 — entropy grid", &grid);
+    let p = backend.obs().req_column("plate").unwrap().distribution();
+    println!("\nH(plates) = {:.3} bits", dist_entropy(&p));
+    let (lo, hi) = corollary33_bounds(&p, opts.batch_size, 16);
+    let f1 = grid
+        .iter()
+        .find(|q| q.block_size == 16 && q.fetch_factor == 1)
+        .unwrap();
+    let f256 = grid
+        .iter()
+        .find(|q| q.block_size == 16 && q.fetch_factor == 256)
+        .unwrap();
+    println!(
+        "Eq.5 at b=16: bounds [{:.2}, {:.2}]; empirical f=1: {:.2}, f=256: {:.2}",
+        lo.max(0.0),
+        hi,
+        f1.entropy_mean,
+        f256.entropy_mean
+    );
+    assert!(f256.entropy_mean > f1.entropy_mean, "fetch factor must recover entropy");
+    assert!(f256.entropy_mean <= hi + 0.15, "upper bound violated");
+}

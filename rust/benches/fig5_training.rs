@@ -1,0 +1,54 @@
+//! Bench: paper Figure 5 — training-strategy comparison (reduced: one task,
+//! capped steps). The full 4-task × 4-strategy × 2-seed run is
+//! `scdata bench fig5`.
+
+mod common;
+
+use std::sync::Arc;
+
+use scdata::coordinator::Strategy;
+use scdata::datagen::open_collection_subset;
+use scdata::store::Backend;
+use scdata::train::{train_eval, Engine, TaskSpec, TrainConfig};
+
+fn main() {
+    let _ = common::bench_backend(); // ensure dataset exists
+    let dir = common::bench_data_dir();
+    let train_be: Arc<dyn Backend> =
+        Arc::new(open_collection_subset(&dir, Some(0..3)).unwrap());
+    let test_be: Arc<dyn Backend> =
+        Arc::new(open_collection_subset(&dir, Some(3..4)).unwrap());
+    let task = TaskSpec::by_name("cell_line").unwrap();
+    println!("== Fig 5 (reduced: cell_line, cpu engine, 150 steps) ==");
+    let mut results = Vec::new();
+    for (name, strategy) in [
+        ("streaming", Strategy::Streaming { shuffle_buffer: 0 }),
+        (
+            "buffer",
+            Strategy::Streaming {
+                shuffle_buffer: 64 * 64,
+            },
+        ),
+        ("block(16)", Strategy::BlockShuffling { block_size: 16 }),
+        ("random", Strategy::BlockShuffling { block_size: 1 }),
+    ] {
+        let mut cfg = TrainConfig::new(task.clone(), strategy, 64, 64);
+        cfg.lr = 0.01;
+        cfg.max_steps = Some(150);
+        let t0 = std::time::Instant::now();
+        let r = train_eval(train_be.clone(), test_be.clone(), &Engine::Cpu, &cfg).unwrap();
+        println!(
+            "{name:<12} macro-F1 {:.3}  acc {:.3}  ({:.2}s wall, {:.0}s sim-load)",
+            r.macro_f1,
+            r.accuracy,
+            t0.elapsed().as_secs_f64(),
+            r.sim_load_secs
+        );
+        results.push((name, r.macro_f1));
+    }
+    let get = |n: &str| results.iter().find(|(m, _)| *m == n).unwrap().1;
+    assert!(
+        get("block(16)") > get("streaming"),
+        "block shuffling must beat streaming"
+    );
+}

@@ -1,0 +1,45 @@
+//! Bench: paper Figure 6 — HuggingFace-Datasets-like row-group backend:
+//! block size helps (~47× in the paper), fetch factor does not.
+
+mod common;
+
+use std::sync::Arc;
+
+use scdata::bench_harness::{annloader_baseline, throughput_grid};
+use scdata::store::rowgroup::{convert_to_rowgroup, RowGroupStore};
+use scdata::store::Backend;
+
+fn main() {
+    let src = common::bench_backend();
+    let path = common::bench_data_dir().join("bench.rgs");
+    if !path.exists() {
+        convert_to_rowgroup(src.as_ref(), &path, 1000).unwrap();
+    }
+    let backend: Arc<dyn Backend> = Arc::new(RowGroupStore::open(&path).unwrap());
+    let opts = common::bench_opts();
+    let base = annloader_baseline(&backend, &opts).unwrap();
+    let grid = throughput_grid(&backend, &[1, 16, 256, 1024], &[1, 64], &opts).unwrap();
+    println!("random baseline: {:.1} samples/s", base.samples_per_sec);
+    common::print_points("Fig 6 — row-group backend", &grid);
+    let get = |b: usize, f: usize| {
+        grid.iter()
+            .find(|p| p.block_size == b && p.fetch_factor == f)
+            .unwrap()
+            .samples_per_sec
+    };
+    let best = grid
+        .iter()
+        .map(|p| p.samples_per_sec)
+        .fold(0.0f64, f64::max);
+    println!(
+        "\nblock-size speedup: {:.0}× (best {:.0}×) [paper: 47×]; fetch-factor effect at b=16: {:.2}× [paper: ~1×]",
+        get(1024, 1) / get(1, 1),
+        best / base.samples_per_sec,
+        get(16, 64) / get(16, 1)
+    );
+    assert!(get(1024, 1) > 5.0 * get(1, 1), "block size must help");
+    assert!(
+        get(16, 64) < 1.3 * get(16, 1),
+        "fetch factor must NOT help a per-index backend"
+    );
+}

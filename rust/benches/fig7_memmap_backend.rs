@@ -1,0 +1,40 @@
+//! Bench: paper Figure 7 — BioNeMo-SCDL-like dense memmap backend: block
+//! size helps (~25× in the paper), fetch factor does not.
+
+mod common;
+
+use std::sync::Arc;
+
+use scdata::bench_harness::{annloader_baseline, throughput_grid};
+use scdata::store::memmap_dense::{convert_to_memmap, DenseMemmapStore};
+use scdata::store::Backend;
+
+fn main() {
+    let src = common::bench_backend();
+    let path = common::bench_data_dir().join("bench.dms");
+    if !path.exists() {
+        convert_to_memmap(src.as_ref(), &path, 4096).unwrap();
+    }
+    let backend: Arc<dyn Backend> = Arc::new(DenseMemmapStore::open(&path).unwrap());
+    let opts = common::bench_opts();
+    let base = annloader_baseline(&backend, &opts).unwrap();
+    let grid = throughput_grid(&backend, &[1, 16, 256, 1024], &[1, 64], &opts).unwrap();
+    println!("random baseline: {:.1} samples/s", base.samples_per_sec);
+    common::print_points("Fig 7 — memmap backend", &grid);
+    let get = |b: usize, f: usize| {
+        grid.iter()
+            .find(|p| p.block_size == b && p.fetch_factor == f)
+            .unwrap()
+            .samples_per_sec
+    };
+    println!(
+        "\nblock-size speedup: {:.0}× [paper: 25×]; fetch-factor effect at b=16: {:.2}× [paper: ~1×]",
+        get(1024, 1) / get(1, 1),
+        get(16, 64) / get(16, 1)
+    );
+    assert!(get(1024, 1) > 3.0 * get(1, 1), "block size must help");
+    assert!(
+        get(16, 64) < 1.3 * get(16, 1),
+        "fetch factor must NOT help the memmap backend"
+    );
+}

@@ -1,0 +1,140 @@
+//! Bench: coordinator hot paths (µ-benchmarks for the §Perf pass):
+//! epoch-plan generation, fetch coalescing, in-memory reshuffle +
+//! minibatch split, sparse→dense, entropy metering.
+
+mod common;
+
+use scdata::bench_harness::{bench_throughput, black_box};
+use scdata::coordinator::entropy::batch_label_entropy;
+use scdata::coordinator::{build_plan, Strategy};
+use scdata::store::{contiguous_runs, Backend as _, CsrBatch};
+use scdata::util::rng::Rng;
+
+fn main() {
+    // 1. Plan generation at n = 10M (the paper's "~400 MB of indices at
+    //    10^8 cells" must be trivially cheap).
+    let n = 10_000_000usize;
+    let r = bench_throughput("plan/block-shuffle 10M idx", 1, 5, || {
+        let p = build_plan(
+            &Strategy::BlockShuffling { block_size: 16 },
+            n,
+            64,
+            256,
+            7,
+            0,
+            None,
+            false,
+        )
+        .unwrap();
+        black_box(p.order.len())
+    });
+    println!("{}", r.report_line());
+
+    // 2. Sorting + run coalescing of one fetch batch (64 × 256 indices).
+    let mut rng = Rng::new(1);
+    let fetch: Vec<u32> = (0..64 * 256).map(|_| rng.below(10_000_000) as u32).collect();
+    let r = bench_throughput("fetch/sort+coalesce 16k idx", 2, 20, || {
+        let mut v = fetch.clone();
+        v.sort_unstable();
+        v.dedup();
+        black_box(contiguous_runs(&v).len())
+    });
+    println!("{}", r.report_line());
+
+    // 3. Reshuffle + split of a realistic fetch buffer (16k rows × ~50 nnz).
+    let mut batch = CsrBatch::empty(512);
+    for i in 0..16_384u32 {
+        for j in 0..50u32 {
+            batch.indices.push((i + j * 7) % 512);
+            batch.data.push(1.0);
+        }
+        batch.indptr.push(batch.indices.len() as u64);
+        batch.n_rows += 1;
+    }
+    let perm = Rng::new(2).permutation(16_384);
+    let r = bench_throughput("buffer/reshuffle 16k rows", 1, 10, || {
+        black_box(batch.select_rows(&perm).n_rows)
+    });
+    println!("{}", r.report_line());
+
+    // 4. Sparse→dense of one minibatch (64 × 512).
+    let mb = batch.slice_rows(0, 64);
+    let mut dense = vec![0f32; 64 * 512];
+    let r = bench_throughput("batch/to_dense 64×512", 10, 200, || {
+        mb.to_dense_into(&mut dense);
+        black_box(dense[0]);
+        64
+    });
+    println!("{}", r.report_line());
+
+    // 5. Entropy meter on a minibatch.
+    let codes: Vec<u16> = (0..64).map(|i| (i % 14) as u16).collect();
+    let r = bench_throughput("entropy/batch 64", 10, 500, || {
+        black_box(batch_label_entropy(&codes, 14));
+        64
+    });
+    println!("{}", r.report_line());
+
+    // 6. Real store fetch paths (decompress + row extraction dominate the
+    //    wall-clock pipeline; the §Perf targets live here).
+    let backend = common::bench_backend();
+    let n = backend.n_rows() as u32;
+    let mut rng = Rng::new(7);
+    // scattered blocks of 16 (the b=16 hot path)
+    let mut blocked: Vec<u32> = Vec::new();
+    while blocked.len() < 4096 {
+        let start = rng.below((n - 16) as u64) as u32 & !15;
+        blocked.extend(start..start + 16);
+    }
+    blocked.sort_unstable();
+    blocked.dedup();
+    let r = bench_throughput("store/fetch 4k rows, b=16 blocks", 2, 10, || {
+        let got = backend.fetch_rows(&blocked).unwrap();
+        black_box(got.x.n_rows)
+    });
+    println!("{}", r.report_line());
+    // sequential scan of 16k rows (streaming hot path)
+    let seq: Vec<u32> = (0..16_384).collect();
+    let r = bench_throughput("store/fetch 16k rows sequential", 2, 10, || {
+        let got = backend.fetch_rows(&seq).unwrap();
+        black_box(got.x.n_rows)
+    });
+    println!("{}", r.report_line());
+
+    // 7. Chunk-size ablation (DESIGN.md ablation: decompress waste for
+    //    scattered block reads scales with chunk_rows/block_size).
+    use scdata::datagen::{generate, open_collection, TahoeConfig};
+    for chunk_rows in [128usize, 512, 2048] {
+        let dir = std::path::PathBuf::from(format!("target/bench-data/chunk{chunk_rows}"));
+        if !dir.join("dataset.json").exists() {
+            let cfg = TahoeConfig {
+                n_plates: 2,
+                cells_per_plate: 16_000,
+                n_genes: 256,
+                chunk_rows,
+                ..TahoeConfig::tiny()
+            };
+            generate(&cfg, &dir).unwrap();
+        }
+        let store = open_collection(&dir).unwrap();
+        let n = store.n_rows() as u32;
+        let mut rng = Rng::new(9);
+        let mut blocked: Vec<u32> = Vec::new();
+        while blocked.len() < 2048 {
+            let start = rng.below((n - 16) as u64) as u32 & !15;
+            blocked.extend(start..start + 16);
+        }
+        blocked.sort_unstable();
+        blocked.dedup();
+        let r = bench_throughput(
+            &format!("store/blocked fetch, chunk_rows={chunk_rows}"),
+            2,
+            10,
+            || {
+                let got = store.fetch_rows(&blocked).unwrap();
+                black_box(got.x.n_rows)
+            },
+        );
+        println!("{}", r.report_line());
+    }
+}

@@ -1,0 +1,232 @@
+//! Baseline loaders the paper compares against (§1, §2, §4).
+//!
+//! * [`AnnLoaderSim`] — AnnLoader: a map-style loader that issues **one
+//!   batched read of m scattered random indices per minibatch** (batch
+//!   sampler semantics). This is the ~20 samples/s baseline of Figure 2.
+//!   An independent implementation (not a reconfigured `ScDataset`) so the
+//!   comparison is honest.
+//! * [`streaming_loader`] — pure sequential streaming (§4.4 strategy 1):
+//!   `ScDataset` with `Streaming`, f = 1 (AnnLoader's streaming mode).
+//! * [`shuffle_buffer_loader`] — WebDataset/Ray-style rolling shuffle
+//!   buffer (§4.4 strategy 2).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::{LoaderConfig, Minibatch, ScDataset, Strategy};
+use crate::store::{Backend, IoReport};
+use crate::util::rng::Rng;
+
+/// Independent AnnLoader reimplementation: epoch permutation of cells, one
+/// batched fetch of `m` scattered indices per minibatch, no prefetching, no
+/// fetch batching, no multiprocessing (AnnLoader does not support workers).
+pub struct AnnLoaderSim {
+    backend: Arc<dyn Backend>,
+    batch_size: usize,
+    label_cols: Vec<String>,
+    seed: u64,
+}
+
+impl AnnLoaderSim {
+    pub fn new(
+        backend: Arc<dyn Backend>,
+        batch_size: usize,
+        label_cols: Vec<String>,
+        seed: u64,
+    ) -> AnnLoaderSim {
+        AnnLoaderSim {
+            backend,
+            batch_size,
+            label_cols,
+            seed,
+        }
+    }
+
+    /// Iterate one epoch; collects one `IoReport` per minibatch into
+    /// `reports` if provided.
+    pub fn epoch(&self, epoch: u64) -> AnnLoaderIter {
+        let mut rng = Rng::new(self.seed).fork(epoch);
+        let order = rng.permutation(self.backend.n_rows());
+        AnnLoaderIter {
+            backend: self.backend.clone(),
+            order,
+            offset: 0,
+            batch_size: self.batch_size,
+            label_cols: self.label_cols.clone(),
+            reports: Vec::new(),
+        }
+    }
+}
+
+pub struct AnnLoaderIter {
+    backend: Arc<dyn Backend>,
+    order: Vec<u32>,
+    offset: usize,
+    batch_size: usize,
+    label_cols: Vec<String>,
+    /// One report per served minibatch.
+    pub reports: Vec<IoReport>,
+}
+
+impl Iterator for AnnLoaderIter {
+    type Item = Result<Minibatch>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.offset >= self.order.len() {
+            return None;
+        }
+        let end = (self.offset + self.batch_size).min(self.order.len());
+        let batch_idx = &self.order[self.offset..end];
+        self.offset = end;
+        let mut sorted = batch_idx.to_vec();
+        sorted.sort_unstable();
+        let fetched = match self.backend.fetch_rows(&sorted) {
+            Ok(f) => f,
+            Err(e) => return Some(Err(e)),
+        };
+        self.reports.push(fetched.io);
+        // AnnLoader returns rows in sampler order.
+        let positions: Vec<u32> = batch_idx
+            .iter()
+            .map(|&i| sorted.binary_search(&i).unwrap() as u32)
+            .collect();
+        let x = fetched.x.select_rows(&positions);
+        let rows = batch_idx.to_vec();
+        let labels = match self.backend.obs().gather(&self.label_cols, &rows) {
+            Ok(l) => l,
+            Err(e) => return Some(Err(e)),
+        };
+        Some(Ok(Minibatch { x, rows, labels }))
+    }
+}
+
+/// §4.4 strategy 1: sequential streaming, no shuffling, minibatch-at-a-time
+/// (fetch factor 1 — the AnnLoader streaming pattern Figure 3 starts from).
+pub fn streaming_loader(
+    backend: Arc<dyn Backend>,
+    batch_size: usize,
+    label_cols: Vec<String>,
+    seed: u64,
+) -> ScDataset {
+    ScDataset::new(
+        backend,
+        LoaderConfig {
+            strategy: Strategy::Streaming { shuffle_buffer: 0 },
+            batch_size,
+            fetch_factor: 1,
+            label_cols,
+            seed,
+            ..Default::default()
+        },
+    )
+}
+
+/// §4.4 strategy 2: streaming through a rolling shuffle buffer of
+/// `buffer_rows` cells (the paper uses 16,384 = 64 × 256), fetched
+/// sequentially with a matching fetch factor.
+pub fn shuffle_buffer_loader(
+    backend: Arc<dyn Backend>,
+    batch_size: usize,
+    buffer_rows: usize,
+    label_cols: Vec<String>,
+    seed: u64,
+) -> ScDataset {
+    let fetch_factor = (buffer_rows / batch_size).max(1);
+    ScDataset::new(
+        backend,
+        LoaderConfig {
+            strategy: Strategy::Streaming {
+                shuffle_buffer: buffer_rows,
+            },
+            batch_size,
+            fetch_factor,
+            label_cols,
+            seed,
+            ..Default::default()
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate, open_collection, TahoeConfig};
+    use crate::util::tempdir::TempDir;
+
+    fn backend() -> (TempDir, Arc<dyn Backend>) {
+        let dir = TempDir::new("base").unwrap();
+        let mut cfg = TahoeConfig::tiny();
+        cfg.n_plates = 2;
+        cfg.cells_per_plate = 300;
+        generate(&cfg, dir.path()).unwrap();
+        let coll = open_collection(dir.path()).unwrap();
+        (dir, Arc::new(coll))
+    }
+
+    #[test]
+    fn annloader_covers_epoch_once() {
+        let (_d, b) = backend();
+        let n = b.n_rows();
+        let loader = AnnLoaderSim::new(b, 32, vec!["plate".into()], 1);
+        let mut rows = Vec::new();
+        let mut batches = 0;
+        for mb in loader.epoch(0) {
+            let mb = mb.unwrap();
+            assert_eq!(mb.labels[0].len(), mb.rows.len());
+            rows.extend(mb.rows);
+            batches += 1;
+        }
+        rows.sort_unstable();
+        assert_eq!(rows, (0..n as u32).collect::<Vec<_>>());
+        assert_eq!(batches, n.div_ceil(32));
+    }
+
+    #[test]
+    fn annloader_issues_one_scattered_call_per_batch() {
+        let (_d, b) = backend();
+        let loader = AnnLoaderSim::new(b, 64, vec![], 1);
+        let mut iter = loader.epoch(0);
+        let _ = iter.next().unwrap().unwrap();
+        assert_eq!(iter.reports.len(), 1);
+        let io = iter.reports[0];
+        assert_eq!(io.rows, 64);
+        // random permutation of 600 rows: 64 draws are nearly all isolated
+        assert!(io.runs > 48, "runs {}", io.runs);
+    }
+
+    #[test]
+    fn annloader_epochs_differ() {
+        let (_d, b) = backend();
+        let loader = AnnLoaderSim::new(b, 32, vec![], 1);
+        let first = |e: u64| loader.epoch(e).next().unwrap().unwrap().rows;
+        assert_ne!(first(0), first(1));
+        assert_eq!(first(0), first(0));
+    }
+
+    #[test]
+    fn streaming_loader_is_sequential() {
+        let (_d, b) = backend();
+        let loader = streaming_loader(b.clone(), 25, vec![], 0);
+        let mut rows = Vec::new();
+        for mb in loader.epoch(0).unwrap() {
+            rows.extend(mb.unwrap().rows);
+        }
+        assert_eq!(rows, (0..b.n_rows() as u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shuffle_buffer_loader_shuffles_locally() {
+        let (_d, b) = backend();
+        let loader = shuffle_buffer_loader(b.clone(), 16, 128, vec![], 0);
+        let mut rows = Vec::new();
+        for mb in loader.epoch(0).unwrap() {
+            rows.extend(mb.unwrap().rows);
+        }
+        let n = b.n_rows();
+        assert_ne!(rows, (0..n as u32).collect::<Vec<_>>());
+        let mut sorted = rows;
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..n as u32).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,20 @@
+//! Benchmark harness: regenerates every figure and table in the paper's
+//! evaluation (see DESIGN.md §2 for the experiment index) and provides the
+//! timing shim used by the `cargo bench` targets.
+
+pub mod report;
+pub mod sweep;
+pub mod timing;
+
+pub use sweep::{
+    annloader_baseline, measure_config, multiworker_grid, streaming_sweep, throughput_grid,
+    SweepOptions, SweepPoint,
+};
+pub use timing::{bench, bench_throughput, black_box, BenchResult};
+
+/// The paper's Figure-2 grid.
+pub const PAPER_GRID: [usize; 6] = [1, 4, 16, 64, 256, 1024];
+/// The paper's Table-1 multiprocessing search space.
+pub const TABLE2_BLOCKS: [usize; 4] = [4, 16, 64, 256];
+pub const TABLE2_FETCH: [usize; 4] = [4, 16, 64, 256];
+pub const TABLE2_WORKERS: [usize; 4] = [4, 8, 12, 16];

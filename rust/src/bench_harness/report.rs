@@ -1,0 +1,147 @@
+//! Table/figure-shaped reporting: prints the same rows/series the paper
+//! reports and writes machine-readable JSON under `results/`.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+use super::sweep::SweepPoint;
+
+/// Render a Figure-2-style grid (rows = block size, cols = fetch factor)
+/// of a chosen metric.
+pub fn grid_table(
+    points: &[SweepPoint],
+    metric: impl Fn(&SweepPoint) -> f64,
+    title: &str,
+) -> String {
+    let mut blocks: Vec<usize> = points.iter().map(|p| p.block_size).collect();
+    blocks.sort_unstable();
+    blocks.dedup();
+    let mut factors: Vec<usize> = points.iter().map(|p| p.fetch_factor).collect();
+    factors.sort_unstable();
+    factors.dedup();
+    let mut s = format!("## {title}\n\n| block \\ fetch |");
+    for f in &factors {
+        s += &format!(" {f} |");
+    }
+    s += "\n|---|";
+    for _ in &factors {
+        s += "---|";
+    }
+    s += "\n";
+    for b in &blocks {
+        s += &format!("| **{b}** |");
+        for f in &factors {
+            match points
+                .iter()
+                .find(|p| p.block_size == *b && p.fetch_factor == *f)
+            {
+                Some(p) => s += &format!(" {:.1} |", metric(p)),
+                None => s += " – |",
+            }
+        }
+        s += "\n";
+    }
+    s
+}
+
+/// Render Table-2-style rows (block, fetch, workers, samples/s, entropy).
+pub fn worker_table(points: &[SweepPoint], title: &str) -> String {
+    let mut s = format!(
+        "## {title}\n\n| block | fetch | workers | samples/s | entropy μ | entropy σ |\n|---|---|---|---|---|---|\n"
+    );
+    for p in points {
+        s += &format!(
+            "| {} | {} | {} | {:.0} | {:.2} | {:.2} |\n",
+            p.block_size,
+            p.fetch_factor,
+            p.workers,
+            p.samples_per_sec,
+            p.entropy_mean,
+            p.entropy_std
+        );
+    }
+    s
+}
+
+/// Serialize sweep points to JSON.
+pub fn points_to_json(points: &[SweepPoint]) -> Json {
+    Json::Arr(
+        points
+            .iter()
+            .map(|p| {
+                let mut o = Json::obj();
+                o.set("block_size", Json::Num(p.block_size as f64))
+                    .set("fetch_factor", Json::Num(p.fetch_factor as f64))
+                    .set("workers", Json::Num(p.workers as f64))
+                    .set("samples_per_sec", Json::Num(p.samples_per_sec))
+                    .set(
+                        "real_samples_per_sec",
+                        Json::Num(p.real_samples_per_sec),
+                    )
+                    .set("entropy_mean", Json::Num(p.entropy_mean))
+                    .set("entropy_std", Json::Num(p.entropy_std))
+                    .set("rows", Json::Num(p.rows as f64))
+                    .set("fetches", Json::Num(p.fetches as f64));
+                o
+            })
+            .collect(),
+    )
+}
+
+/// Write an experiment result file under `results/`.
+pub fn write_result(dir: impl AsRef<Path>, name: &str, body: Json) -> Result<std::path::PathBuf> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, body.to_pretty())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::iomodel::{IoReport, SimResult};
+    use crate::util::tempdir::TempDir;
+
+    fn point(b: usize, f: usize, sps: f64) -> SweepPoint {
+        SweepPoint {
+            block_size: b,
+            fetch_factor: f,
+            workers: 1,
+            samples_per_sec: sps,
+            real_samples_per_sec: sps * 2.0,
+            entropy_mean: 3.5,
+            entropy_std: 0.1,
+            rows: 100,
+            fetches: 2,
+            sim: SimResult::default(),
+            totals: IoReport::default(),
+        }
+    }
+
+    #[test]
+    fn grid_renders_all_cells() {
+        let pts = vec![point(1, 1, 20.0), point(1, 4, 70.0), point(16, 1, 80.0)];
+        let t = grid_table(&pts, |p| p.samples_per_sec, "Fig2");
+        assert!(t.contains("| **1** | 20.0 | 70.0 |"), "{t}");
+        assert!(t.contains("| **16** | 80.0 | – |"), "{t}");
+    }
+
+    #[test]
+    fn worker_table_renders() {
+        let t = worker_table(&[point(4, 4, 289.0)], "Table 2");
+        assert!(t.contains("| 4 | 4 | 1 | 289 | 3.50 | 0.10 |"), "{t}");
+    }
+
+    #[test]
+    fn json_roundtrip_and_write() {
+        let dir = TempDir::new("rep").unwrap();
+        let j = points_to_json(&[point(1, 1, 20.0)]);
+        let p = write_result(dir.path(), "fig2", j.clone()).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(p).unwrap()).unwrap();
+        assert_eq!(back, j);
+    }
+}

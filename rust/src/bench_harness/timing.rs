@@ -1,0 +1,115 @@
+//! Minimal timing harness for `cargo bench` targets (the offline build has
+//! no criterion). Warmup + N timed iterations, mean ± σ, criterion-like
+//! one-line output.
+
+use crate::util::stats::{fmt_nanos, mean, std_dev};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    /// Optional throughput denominator (items per iteration).
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn items_per_sec(&self) -> Option<f64> {
+        self.items_per_iter
+            .map(|n| n / (self.mean_ns / 1e9))
+    }
+
+    pub fn report_line(&self) -> String {
+        let thr = match self.items_per_sec() {
+            Some(t) => format!("  thrpt: {}", crate::util::stats::fmt_rate(t)),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} time: [{} ± {}]{}",
+            self.name,
+            fmt_nanos(self.mean_ns),
+            fmt_nanos(self.std_ns),
+            thr
+        )
+    }
+}
+
+/// Benchmark `f` with `warmup` unmeasured and `iters` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = std::time::Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: mean(&samples),
+        std_ns: std_dev(&samples),
+        items_per_iter: None,
+    }
+}
+
+/// Like [`bench`] but annotates throughput (items processed per iteration).
+pub fn bench_throughput<F: FnMut() -> usize>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    let mut items = 0usize;
+    for _ in 0..iters.max(1) {
+        let t0 = std::time::Instant::now();
+        items = f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: mean(&samples),
+        std_ns: std_dev(&samples),
+        items_per_iter: Some(items as f64),
+    }
+}
+
+/// Prevent the optimizer from eliding a value (ptr read volatile trick).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("spin", 1, 5, || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(black_box(i));
+            }
+            black_box(s);
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.report_line().contains("spin"));
+    }
+
+    #[test]
+    fn throughput_annotates() {
+        let r = bench_throughput("items", 0, 3, || 100);
+        assert!(r.items_per_sec().unwrap() > 0.0);
+        assert!(r.report_line().contains("thrpt"));
+    }
+}

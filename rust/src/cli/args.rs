@@ -1,0 +1,145 @@
+//! Hand-rolled CLI argument parsing (the offline build has no `clap`).
+//!
+//! Grammar: `scdata <command> [<subcommand>] [--flag [value]] ...`.
+//! A `--flag` followed by another `--flag` (or end of input) is boolean.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = items.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                // --key=value or --key value or boolean --key
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn req_str(&self, key: &str) -> Result<String> {
+        self.flags
+            .get(key)
+            .cloned()
+            .ok_or_else(|| anyhow!("missing required flag --{key}"))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        self.flags.get(key).map(|v| v != "false").unwrap_or(false)
+    }
+
+    /// Comma-separated usize list.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| anyhow!("--{key}: bad integer '{s}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn mixes_positional_and_flags() {
+        let a = parse("bench fig2 --data /tmp/d --quick --block 16");
+        assert_eq!(a.positional, vec!["bench", "fig2"]);
+        assert_eq!(a.str_or("data", ""), "/tmp/d");
+        assert!(a.bool("quick"));
+        assert_eq!(a.usize_or("block", 0).unwrap(), 16);
+        assert!(!a.bool("missing"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("train --task=drug --lr=0.01");
+        assert_eq!(a.str_or("task", ""), "drug");
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.01);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("bench --grid 1,4,16");
+        assert_eq!(a.usize_list_or("grid", &[]).unwrap(), vec![1, 4, 16]);
+        assert_eq!(
+            parse("bench").usize_list_or("grid", &[2]).unwrap(),
+            vec![2]
+        );
+    }
+
+    #[test]
+    fn errors() {
+        let a = parse("x --n abc");
+        assert!(a.usize_or("n", 0).is_err());
+        assert!(a.req_str("nope").is_err());
+        assert!(Args::parse(vec!["--".to_string()]).is_err());
+    }
+
+    #[test]
+    fn trailing_bool_flag() {
+        let a = parse("cmd --verbose");
+        assert!(a.bool("verbose"));
+    }
+}

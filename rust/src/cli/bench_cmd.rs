@@ -1,0 +1,447 @@
+//! `scdata bench <experiment>` — regenerates every figure and table in the
+//! paper's evaluation (experiment index: DESIGN.md §2). Results print as
+//! paper-shaped tables and are written to `results/<name>.json`.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::bench_harness::report::{grid_table, points_to_json, worker_table, write_result};
+use crate::bench_harness::{
+    annloader_baseline, measure_config, multiworker_grid, streaming_sweep, throughput_grid,
+    SweepOptions, PAPER_GRID, TABLE2_BLOCKS, TABLE2_FETCH, TABLE2_WORKERS,
+};
+use crate::config::AppConfig;
+use crate::coordinator::entropy::{corollary33_bounds, dist_entropy};
+use crate::coordinator::Strategy;
+use crate::datagen;
+use crate::store::memmap_dense::{convert_to_memmap, DenseMemmapStore};
+use crate::store::rowgroup::{convert_to_rowgroup, RowGroupStore};
+use crate::store::Backend;
+use crate::train::{train_eval, TaskSpec, TrainConfig, TASKS};
+use crate::util::json::Json;
+
+use super::args::Args;
+use super::commands::{app_config, make_engine};
+
+pub fn bench(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(String::as_str)
+        .unwrap_or("all");
+    let cfg = app_config(args)?;
+    let quick = args.bool("quick");
+    match which {
+        "fig2" => fig2(args, &cfg, quick)?,
+        "fig3" => fig3(args, &cfg, quick)?,
+        "fig4" => fig4(args, &cfg, quick)?,
+        "eq5" => eq5(args, &cfg)?,
+        "fig5" => fig5(args, &cfg, quick)?,
+        "fig6" => fig6(args, &cfg, quick)?,
+        "fig7" => fig7(args, &cfg, quick)?,
+        "table2" => table2(args, &cfg, quick)?,
+        "all" => {
+            for exp in ["fig2", "fig3", "fig4", "eq5", "fig5", "fig6", "fig7", "table2"] {
+                println!("\n===== {exp} =====");
+                let mut sub = args.clone();
+                sub.positional = vec!["bench".into(), exp.into()];
+                bench(&sub)?;
+            }
+        }
+        other => bail!("unknown experiment '{other}' (fig2..fig7, eq5, table2, all)"),
+    }
+    Ok(())
+}
+
+fn grids(quick: bool) -> (Vec<usize>, Vec<usize>) {
+    if quick {
+        (vec![1, 16, 256], vec![1, 16, 256])
+    } else {
+        (PAPER_GRID.to_vec(), PAPER_GRID.to_vec())
+    }
+}
+
+fn sweep_opts(cfg: &AppConfig, quick: bool) -> SweepOptions {
+    SweepOptions {
+        min_rows: if quick { 4_096 } else { 16_384 },
+        max_fetches: if quick { 2 } else { 4 },
+        batch_size: cfg.batch_size,
+        label_col: "plate".into(),
+        seed: cfg.seed,
+        disk: cfg.disk,
+    }
+}
+
+fn open(cfg: &AppConfig) -> Result<Arc<dyn Backend>> {
+    let coll = datagen::open_collection(&cfg.data_dir)?;
+    Ok(Arc::new(coll))
+}
+
+/// Figure 2: AnnData throughput grid + AnnLoader baseline + speedup.
+fn fig2(_args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
+    let backend = open(cfg)?;
+    let opts = sweep_opts(cfg, quick);
+    let (bs, fs) = grids(quick);
+    let base = annloader_baseline(&backend, &opts)?;
+    let grid = throughput_grid(&backend, &bs, &fs, &opts)?;
+    println!(
+        "AnnLoader baseline (pure random): {:.1} samples/s (paper: ~20)",
+        base.samples_per_sec
+    );
+    println!(
+        "{}",
+        grid_table(&grid, |p| p.samples_per_sec, "Fig 2 — samples/sec (virtual disk)")
+    );
+    println!(
+        "{}",
+        grid_table(
+            &grid,
+            |p| p.samples_per_sec / base.samples_per_sec,
+            "Fig 2 — speedup over AnnLoader (paper max: 204×)"
+        )
+    );
+    let best = grid
+        .iter()
+        .max_by(|a, b| a.samples_per_sec.partial_cmp(&b.samples_per_sec).unwrap())
+        .unwrap();
+    println!(
+        "max speedup: {:.0}× at (b={}, f={})",
+        best.samples_per_sec / base.samples_per_sec,
+        best.block_size,
+        best.fetch_factor
+    );
+    let mut body = Json::obj();
+    body.set("experiment", Json::Str("fig2".into()))
+        .set("baseline_samples_per_sec", Json::Num(base.samples_per_sec))
+        .set(
+            "max_speedup",
+            Json::Num(best.samples_per_sec / base.samples_per_sec),
+        )
+        .set("grid", points_to_json(&grid));
+    write_result(&cfg.results_dir, "fig2", body)?;
+    Ok(())
+}
+
+/// Figure 3: streaming throughput vs fetch factor.
+fn fig3(_args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
+    let backend = open(cfg)?;
+    let opts = sweep_opts(cfg, quick);
+    let (_, fs) = grids(quick);
+    let series = streaming_sweep(&backend, &fs, &opts)?;
+    let base = series
+        .iter()
+        .find(|p| p.fetch_factor == 1)
+        .map(|p| p.samples_per_sec)
+        .unwrap_or(1.0);
+    println!("Fig 3 — sequential streaming (AnnLoader-style baseline = f=1)\n");
+    println!("| fetch factor | samples/s | speedup |");
+    println!("|---|---|---|");
+    for p in &series {
+        println!(
+            "| {} | {:.0} | {:.1}× |",
+            p.fetch_factor,
+            p.samples_per_sec,
+            p.samples_per_sec / base
+        );
+    }
+    let max_speedup = series
+        .iter()
+        .map(|p| p.samples_per_sec / base)
+        .fold(0.0, f64::max);
+    println!("\nmax streaming speedup: {max_speedup:.1}× (paper: >15× at f=1024)");
+    let mut body = Json::obj();
+    body.set("experiment", Json::Str("fig3".into()))
+        .set("max_speedup", Json::Num(max_speedup))
+        .set("series", points_to_json(&series));
+    write_result(&cfg.results_dir, "fig3", body)?;
+    Ok(())
+}
+
+/// Figure 4: minibatch plate entropy vs (b, f).
+fn fig4(_args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
+    let backend = open(cfg)?;
+    let mut opts = sweep_opts(cfg, quick);
+    opts.min_rows = if quick { 8_192 } else { 32_768 };
+    let (bs, fs) = grids(quick);
+    let grid = throughput_grid(&backend, &bs, &fs, &opts)?;
+    // reference lines
+    let random = measure_config(
+        &backend,
+        Strategy::BlockShuffling { block_size: 1 },
+        16,
+        1,
+        &opts,
+    )?;
+    let streaming = measure_config(
+        &backend,
+        Strategy::Streaming { shuffle_buffer: 0 },
+        16,
+        1,
+        &opts,
+    )?;
+    let plate_dist = backend.obs().req_column("plate")?.distribution();
+    println!(
+        "H(plates) = {:.3} bits over {} plates",
+        dist_entropy(&plate_dist),
+        plate_dist.len()
+    );
+    println!(
+        "random-sampling reference: {:.3} ± {:.3}; streaming reference: {:.3} ± {:.3}\n",
+        random.entropy_mean, random.entropy_std, streaming.entropy_mean, streaming.entropy_std
+    );
+    println!(
+        "{}",
+        grid_table(&grid, |p| p.entropy_mean, "Fig 4 — batch plate entropy (bits)")
+    );
+    // the paper's collapse check: entropy ≈ 0 whenever b ≥ m·f
+    for p in &grid {
+        if p.block_size >= cfg.batch_size * p.fetch_factor {
+            assert!(
+                p.entropy_mean < 0.35,
+                "entropy should collapse at b ≥ m·f: b={} f={} H={}",
+                p.block_size,
+                p.fetch_factor,
+                p.entropy_mean
+            );
+        }
+    }
+    let mut body = Json::obj();
+    body.set("experiment", Json::Str("fig4".into()))
+        .set("h_plates", Json::Num(dist_entropy(&plate_dist)))
+        .set("random_ref", Json::Num(random.entropy_mean))
+        .set("streaming_ref", Json::Num(streaming.entropy_mean))
+        .set("grid", points_to_json(&grid));
+    write_result(&cfg.results_dir, "fig4", body)?;
+    Ok(())
+}
+
+/// Eq. 5 / §3.4: sandwich bounds vs empirical entropy at (m=64, b=16).
+fn eq5(_args: &Args, cfg: &AppConfig) -> Result<()> {
+    let backend = open(cfg)?;
+    let opts = sweep_opts(cfg, false);
+    let m = cfg.batch_size;
+    let b = 16;
+    let p = backend.obs().req_column("plate")?.distribution();
+    let (lo, hi) = corollary33_bounds(&p, m, b);
+    let f1 = measure_config(
+        &backend,
+        Strategy::BlockShuffling { block_size: b },
+        1,
+        1,
+        &opts,
+    )?;
+    let f256 = measure_config(
+        &backend,
+        Strategy::BlockShuffling { block_size: b },
+        256,
+        1,
+        &opts,
+    )?;
+    println!("Eq. 5 — Corollary 3.3 sandwich at m={m}, b={b}, K={}", p.len());
+    println!("  H(p)          = {:.3} bits", dist_entropy(&p));
+    println!("  lower bound   = {:.3}   (paper, K=14: 1.43)", lo.max(0.0));
+    println!("  upper bound   = {:.3}   (paper, K=14: 3.63)", hi);
+    println!(
+        "  empirical f=1   : {:.3} ± {:.3}   (paper: 1.76 ± 0.33)",
+        f1.entropy_mean, f1.entropy_std
+    );
+    println!(
+        "  empirical f=256 : {:.3} ± {:.3}   (paper: 3.61 ± 0.08)",
+        f256.entropy_mean, f256.entropy_std
+    );
+    assert!(
+        f1.entropy_mean >= lo.max(0.0) - 3.0 * f1.entropy_std.max(0.05)
+            && f256.entropy_mean <= hi + 3.0 * f256.entropy_std.max(0.05),
+        "empirical entropies violate the sandwich"
+    );
+    let mut body = Json::obj();
+    body.set("experiment", Json::Str("eq5".into()))
+        .set("h_p", Json::Num(dist_entropy(&p)))
+        .set("lower", Json::Num(lo))
+        .set("upper", Json::Num(hi))
+        .set("empirical_f1_mean", Json::Num(f1.entropy_mean))
+        .set("empirical_f1_std", Json::Num(f1.entropy_std))
+        .set("empirical_f256_mean", Json::Num(f256.entropy_mean))
+        .set("empirical_f256_std", Json::Num(f256.entropy_std));
+    write_result(&cfg.results_dir, "eq5", body)?;
+    Ok(())
+}
+
+/// Figure 5: 4 tasks × 4 loading strategies, macro-F1 (mean ± std over seeds).
+fn fig5(args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
+    let (train_be, test_be) = datagen::open_train_test(&cfg.data_dir)?;
+    let train_be: Arc<dyn Backend> = Arc::new(train_be);
+    let test_be: Arc<dyn Backend> = Arc::new(test_be);
+    let engine = make_engine(args, cfg)?;
+    let seeds: Vec<u64> = (0..args.usize_or("seeds", 2)? as u64).collect();
+    let lr = args.f64_or("lr", if quick { 0.01 } else { 1e-3 })? as f32;
+    let epochs = args.usize_or("epochs", 1)?;
+    let f = 256;
+    let strategies: Vec<(&str, Strategy)> = vec![
+        ("Streaming", Strategy::Streaming { shuffle_buffer: 0 }),
+        (
+            "Shuffle buffer",
+            Strategy::Streaming {
+                shuffle_buffer: cfg.batch_size * f,
+            },
+        ),
+        (
+            "BlockShuffling(16,256)",
+            Strategy::BlockShuffling { block_size: 16 },
+        ),
+        ("Random (b=1)", Strategy::BlockShuffling { block_size: 1 }),
+    ];
+    let tasks: Vec<TaskSpec> = if quick {
+        vec![
+            TaskSpec::by_name("cell_line").unwrap(),
+            TaskSpec::by_name("moa_broad").unwrap(),
+        ]
+    } else {
+        TASKS.to_vec()
+    };
+    let mut rows = Vec::new();
+    println!("Fig 5 — macro F1 (mean ± std over {} seeds)\n", seeds.len());
+    println!("| task | {} |", strategies.iter().map(|s| s.0).collect::<Vec<_>>().join(" | "));
+    println!("|---|{}|", "---|".repeat(strategies.len()));
+    for task in &tasks {
+        let mut line = format!("| {} |", task.name);
+        for (sname, strategy) in &strategies {
+            let mut f1s = Vec::new();
+            let mut load_secs = Vec::new();
+            for &seed in &seeds {
+                let mut tc = TrainConfig::new(task.clone(), strategy.clone(), cfg.batch_size, f);
+                tc.lr = lr;
+                tc.epochs = epochs;
+                tc.seed = seed;
+                if quick {
+                    tc.max_steps = Some(60);
+                }
+                let r = train_eval(train_be.clone(), test_be.clone(), &engine, &tc)?;
+                f1s.push(r.macro_f1);
+                load_secs.push(r.sim_load_secs);
+            }
+            let mean = crate::util::stats::mean(&f1s);
+            let std = crate::util::stats::std_dev(&f1s);
+            line += &format!(" {mean:.3}±{std:.3} |");
+            let mut o = Json::obj();
+            o.set("task", Json::Str(task.name.into()))
+                .set("strategy", Json::Str((*sname).into()))
+                .set("f1_mean", Json::Num(mean))
+                .set("f1_std", Json::Num(std))
+                .set(
+                    "sim_load_secs",
+                    Json::Num(crate::util::stats::mean(&load_secs)),
+                );
+            rows.push(o);
+        }
+        println!("{line}");
+    }
+    let mut body = Json::obj();
+    body.set("experiment", Json::Str("fig5".into()))
+        .set("engine", Json::Str(engine.name().into()))
+        .set("rows", Json::Arr(rows));
+    write_result(&cfg.results_dir, "fig5", body)?;
+    Ok(())
+}
+
+/// Figure 6: HuggingFace-Datasets-like backend (block size helps, f doesn't).
+fn fig6(_args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
+    let src = open(cfg)?;
+    let path = cfg.data_dir.join("converted.rgs");
+    if !path.exists() {
+        println!("converting to row-group format (one-time, like HF parquet export)…");
+        convert_to_rowgroup(src.as_ref(), &path, 1000)?;
+    }
+    let backend: Arc<dyn Backend> = Arc::new(RowGroupStore::open(&path)?);
+    backend_grid_figure(&backend, cfg, quick, "fig6", "Fig 6 — HF-Datasets-like backend (paper: 47× from block size, f flat)")
+}
+
+/// Figure 7: BioNeMo-SCDL-like memmap backend.
+fn fig7(_args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
+    let src = open(cfg)?;
+    let path = cfg.data_dir.join("converted.dms");
+    if !path.exists() {
+        println!("converting to dense memmap format (one-time, like SCDL export)…");
+        convert_to_memmap(src.as_ref(), &path, 4096)?;
+    }
+    let backend: Arc<dyn Backend> = Arc::new(DenseMemmapStore::open(&path)?);
+    backend_grid_figure(&backend, cfg, quick, "fig7", "Fig 7 — BioNeMo-like memmap backend (paper: 25× from block size, f flat)")
+}
+
+fn backend_grid_figure(
+    backend: &Arc<dyn Backend>,
+    cfg: &AppConfig,
+    quick: bool,
+    name: &str,
+    title: &str,
+) -> Result<()> {
+    let opts = sweep_opts(cfg, quick);
+    let (bs, fs) = grids(quick);
+    let base = annloader_baseline(backend, &opts)?;
+    let grid = throughput_grid(backend, &bs, &fs, &opts)?;
+    println!("baseline (random, per-index): {:.1} samples/s", base.samples_per_sec);
+    println!("{}", grid_table(&grid, |p| p.samples_per_sec, title));
+    let best = grid
+        .iter()
+        .max_by(|a, b| a.samples_per_sec.partial_cmp(&b.samples_per_sec).unwrap())
+        .unwrap();
+    println!(
+        "max speedup from block sampling: {:.0}× at (b={}, f={})",
+        best.samples_per_sec / base.samples_per_sec,
+        best.block_size,
+        best.fetch_factor
+    );
+    let mut body = Json::obj();
+    body.set("experiment", Json::Str(name.into()))
+        .set("baseline_samples_per_sec", Json::Num(base.samples_per_sec))
+        .set(
+            "max_speedup",
+            Json::Num(best.samples_per_sec / base.samples_per_sec),
+        )
+        .set("grid", points_to_json(&grid));
+    write_result(&cfg.results_dir, name, body)?;
+    Ok(())
+}
+
+/// Table 2: multiprocessing grid.
+fn table2(_args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
+    let backend = open(cfg)?;
+    let opts = sweep_opts(cfg, quick);
+    let (bs, fs, ws) = if quick {
+        (vec![16usize], vec![64usize, 256], vec![4usize, 16])
+    } else {
+        (
+            TABLE2_BLOCKS.to_vec(),
+            TABLE2_FETCH.to_vec(),
+            TABLE2_WORKERS.to_vec(),
+        )
+    };
+    let points = multiworker_grid(&backend, &bs, &fs, &ws, &opts)?;
+    println!("{}", worker_table(&points, "Table 2 — multiprocessing throughput"));
+    // Appendix E comparison: equal-buffer multiworker vs single-worker.
+    if let (Some(multi), Ok(single)) = (
+        points
+            .iter()
+            .find(|p| p.block_size == 16 && p.fetch_factor == 256 && p.workers == 4),
+        measure_config(
+            &backend,
+            Strategy::BlockShuffling { block_size: 16 },
+            1024,
+            1,
+            &opts,
+        ),
+    ) {
+        println!(
+            "equal-memory comparison (b=16): 4 workers × f=256 → {:.0}/s vs 1 worker × f=1024 → {:.0}/s ({:.1}×; paper: 2.5×)",
+            multi.samples_per_sec,
+            single.samples_per_sec,
+            multi.samples_per_sec / single.samples_per_sec
+        );
+    }
+    let mut body = Json::obj();
+    body.set("experiment", Json::Str("table2".into()))
+        .set("grid", points_to_json(&points));
+    write_result(&cfg.results_dir, "table2", body)?;
+    Ok(())
+}

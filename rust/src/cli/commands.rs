@@ -1,0 +1,316 @@
+//! Non-bench CLI commands: gen-data, info, train, autotune, calibrate.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::config::AppConfig;
+use crate::coordinator::autotune::{tune, TuneInputs, TuneOptions};
+use crate::coordinator::Strategy;
+use crate::datagen::{self, TahoeConfig};
+use crate::store::iomodel::{simulate_loader, AccessPattern, IoReport};
+use crate::store::Backend;
+use crate::train::{train_eval, Engine, TaskSpec, TrainConfig};
+use crate::util::stats::{fmt_bytes, fmt_rate};
+
+use super::args::Args;
+
+pub(super) fn app_config(args: &Args) -> Result<AppConfig> {
+    let mut cfg = match args.flags.get("config") {
+        Some(path) => AppConfig::from_file(path)?,
+        None => AppConfig::default(),
+    };
+    if let Some(d) = args.flags.get("data") {
+        cfg.data_dir = d.into();
+    }
+    if let Some(d) = args.flags.get("artifacts") {
+        cfg.artifacts_dir = d.into();
+    }
+    if let Some(d) = args.flags.get("results") {
+        cfg.results_dir = d.into();
+    }
+    Ok(cfg)
+}
+
+fn preset(name: &str) -> Result<TahoeConfig> {
+    Ok(match name {
+        "tiny" => TahoeConfig::tiny(),
+        "small" => TahoeConfig {
+            n_plates: 8,
+            cells_per_plate: 12_500,
+            ..TahoeConfig::default()
+        },
+        "default" => TahoeConfig::default(),
+        other => bail!("unknown preset '{other}' (tiny|small|default)"),
+    })
+}
+
+pub fn gen_data(args: &Args) -> Result<()> {
+    let out = args.req_str("out")?;
+    let mut cfg = preset(&args.str_or("preset", "small"))?;
+    cfg.n_plates = args.usize_or("plates", cfg.n_plates)?;
+    cfg.cells_per_plate = args.usize_or("cells", cfg.cells_per_plate)?;
+    cfg.n_genes = args.usize_or("genes", cfg.n_genes)?;
+    cfg.n_cell_lines = args.usize_or("cell-lines", cfg.n_cell_lines)?;
+    cfg.n_drugs = args.usize_or("drugs", cfg.n_drugs)?;
+    cfg.chunk_rows = args.usize_or("chunk-rows", cfg.chunk_rows)?;
+    cfg.seed = args.usize_or("seed", cfg.seed as usize)? as u64;
+    let t0 = std::time::Instant::now();
+    let paths = datagen::generate(&cfg, &out)?;
+    let bytes: u64 = paths
+        .iter()
+        .map(|p| std::fs::metadata(p).map(|m| m.len()).unwrap_or(0))
+        .sum();
+    println!(
+        "generated {} cells × {} genes in {} plates ({}) in {:.1}s → {}",
+        cfg.total_cells(),
+        cfg.n_genes,
+        cfg.n_plates,
+        fmt_bytes(bytes),
+        t0.elapsed().as_secs_f64(),
+        out
+    );
+    Ok(())
+}
+
+pub fn info(args: &Args) -> Result<()> {
+    let cfg = app_config(args)?;
+    let coll = datagen::open_collection(&cfg.data_dir)?;
+    println!("dataset: {}", cfg.data_dir.display());
+    println!("  cells: {}   genes: {}", coll.n_rows(), coll.n_cols());
+    println!("  plates: {}", coll.n_plates());
+    for col in &coll.obs().columns {
+        let dist = col.distribution();
+        let h = crate::coordinator::entropy::dist_entropy(&dist);
+        println!(
+            "  obs '{}': {} categories, H = {:.2} bits",
+            col.name,
+            col.n_categories(),
+            h
+        );
+    }
+    for p in 0..coll.n_plates() {
+        let (s, e) = coll.plate_range(p);
+        println!("  plate {p}: rows {s}..{e} ({} cells)", e - s);
+    }
+    Ok(())
+}
+
+pub(super) fn parse_strategy(args: &Args) -> Result<Strategy> {
+    let block = args.usize_or("block", 16)?;
+    let fetch = args.usize_or("fetch", 256)?;
+    Ok(match args.str_or("strategy", "block").as_str() {
+        "random" => Strategy::BlockShuffling { block_size: 1 },
+        "streaming" => Strategy::Streaming { shuffle_buffer: 0 },
+        "buffer" => Strategy::Streaming {
+            shuffle_buffer: args.usize_or("buffer", 64 * fetch)?,
+        },
+        "block" => Strategy::BlockShuffling { block_size: block },
+        "class-balanced" => Strategy::ClassBalanced {
+            block_size: block,
+            label_col: args.str_or("task", "cell_line"),
+        },
+        other => bail!("unknown strategy '{other}'"),
+    })
+}
+
+pub(super) fn make_engine(args: &Args, cfg: &AppConfig) -> Result<Engine> {
+    Ok(match args.str_or("engine", "cpu").as_str() {
+        "cpu" => Engine::Cpu,
+        "pjrt" => Engine::Pjrt(Arc::new(crate::runtime::Runtime::open(
+            &cfg.artifacts_dir,
+        )?)),
+        other => bail!("unknown engine '{other}' (cpu|pjrt)"),
+    })
+}
+
+pub fn train(args: &Args) -> Result<()> {
+    let cfg = app_config(args)?;
+    let task = TaskSpec::by_name(&args.str_or("task", "cell_line"))
+        .ok_or_else(|| anyhow::anyhow!("unknown task (cell_line|drug|moa_broad|moa_fine)"))?;
+    let (train_be, test_be) = datagen::open_train_test(&cfg.data_dir)?;
+    let train_be: Arc<dyn Backend> = Arc::new(train_be);
+    let test_be: Arc<dyn Backend> = Arc::new(test_be);
+    let strategy = parse_strategy(args)?;
+    let engine = make_engine(args, &cfg)?;
+    let mut tc = TrainConfig::new(
+        task,
+        strategy,
+        cfg.batch_size,
+        args.usize_or("fetch", 256)?,
+    );
+    tc.epochs = args.usize_or("epochs", 1)?;
+    tc.lr = args.f64_or("lr", 1e-5)? as f32;
+    tc.seed = args.usize_or("seed", cfg.seed as usize)? as u64;
+    if let Some(ms) = args.flags.get("max-steps") {
+        tc.max_steps = Some(ms.parse()?);
+    }
+    let report = train_eval(train_be, test_be, &engine, &tc)?;
+    println!(
+        "task={} strategy={} engine={}",
+        report.task, report.strategy, report.engine
+    );
+    println!(
+        "  steps={} final_loss={:.4} macro_f1={:.4} accuracy={:.4}",
+        report.steps, report.final_loss, report.macro_f1, report.accuracy
+    );
+    println!(
+        "  train {:.1}s  eval {:.1}s  simulated-load {:.1}s",
+        report.train_secs, report.eval_secs, report.sim_load_secs
+    );
+    for (s, l) in &report.losses {
+        println!("  step {s:>6}  loss {l:.4}");
+    }
+    Ok(())
+}
+
+pub fn autotune(args: &Args) -> Result<()> {
+    let cfg = app_config(args)?;
+    let coll = datagen::open_collection(&cfg.data_dir)?;
+    let plate_dist = coll.obs().req_column("plate")?.distribution();
+    let avg_row_bytes = {
+        // probe a small sample for mean stored bytes/row
+        let idx: Vec<u32> = (0..coll.n_rows().min(1024) as u32).collect();
+        let io = coll.fetch_rows(&idx)?.io;
+        (io.bytes / io.rows.max(1)).max(1)
+    };
+    let inputs = TuneInputs {
+        n_rows: coll.n_rows(),
+        avg_row_bytes,
+        dense_row_bytes: (coll.n_cols() * 4) as u64,
+        label_dist: plate_dist,
+        batch_size: cfg.batch_size,
+        pattern: coll.pattern(),
+        disk: cfg.disk,
+    };
+    let result = tune(&inputs, &TuneOptions::default());
+    println!("H(plates) = {:.2} bits", result.h_p);
+    println!(
+        "recommended: block_size={} fetch_factor={} (predicted {}, entropy ≥ {:.2} bits, buffer {})",
+        result.best.block_size,
+        result.best.fetch_factor,
+        fmt_rate(result.best.predicted_samples_per_sec),
+        result.best.entropy_lower_bound,
+        fmt_bytes(result.best.buffer_bytes)
+    );
+    println!("\ngrid (predicted samples/s, * = feasible):");
+    for p in &result.grid {
+        println!(
+            "  b={:<5} f={:<5} {:>12} {}",
+            p.block_size,
+            p.fetch_factor,
+            fmt_rate(p.predicted_samples_per_sec),
+            if p.feasible { "*" } else { "" }
+        );
+    }
+    Ok(())
+}
+
+/// Print the virtual-disk anchors vs the paper's measured values.
+pub fn calibrate(args: &Args) -> Result<()> {
+    let cfg = app_config(args)?;
+    let disk = cfg.disk;
+    let row_bytes = 410u64; // Tahoe-100M: ~3.3 KB/cell at full scale, scaled
+    let m = 64u64;
+    let anchor = |runs: u64, rows: u64, f: u64| -> f64 {
+        let io = IoReport {
+            calls: 1,
+            runs,
+            rows,
+            bytes: rows * row_bytes,
+            chunks: runs,
+            pages: 0,
+        };
+        let fetches = vec![io; 8];
+        simulate_loader(
+            &disk,
+            AccessPattern::BatchedCoalesced,
+            &fetches,
+            1,
+            (m * f) as usize,
+        )
+        .samples_per_sec()
+    };
+    let random = anchor(m, m, 1);
+    let stream1 = anchor(1, m, 1);
+    let stream1024 = anchor(1, m * 1024, 1024);
+    let b16f1024 = anchor(m * 1024 / 16, m * 1024, 1024);
+    let b1024f1024 = anchor(64 + 16, m * 1024, 1024);
+    println!("virtual-disk anchors (samples/sec) vs paper (Tahoe-100M):");
+    println!("  {:<34} {:>10}   paper", "configuration", "model");
+    println!("  {:<34} {:>10.1}   ~20", "random access (b=1, f=1)", random);
+    println!("  {:<34} {:>10.1}   (Fig 3 baseline)", "streaming, f=1", stream1);
+    println!(
+        "  {:<34} {:>10.1}   >15× streaming ({}×)",
+        "streaming, f=1024",
+        stream1024,
+        (stream1024 / stream1).round()
+    );
+    println!("  {:<34} {:>10.1}   1854", "block shuffle b=16, f=1024", b16f1024);
+    println!(
+        "  {:<34} {:>10.1}   ~4080 (204×)  ({}×)",
+        "block shuffle b=1024, f=1024",
+        b1024f1024,
+        (b1024f1024 / random).round()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    fn argv(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn gen_info_autotune_roundtrip() {
+        let dir = TempDir::new("cli").unwrap();
+        let out = dir.path().to_string_lossy().to_string();
+        gen_data(&argv(&format!(
+            "gen-data --out {out} --preset tiny --plates 3 --cells 400"
+        )))
+        .unwrap();
+        info(&argv(&format!("info --data {out}"))).unwrap();
+        autotune(&argv(&format!("autotune --data {out}"))).unwrap();
+    }
+
+    #[test]
+    fn calibrate_prints() {
+        calibrate(&argv("calibrate")).unwrap();
+    }
+
+    #[test]
+    fn strategy_parsing() {
+        assert_eq!(
+            parse_strategy(&argv("x --strategy random")).unwrap(),
+            Strategy::BlockShuffling { block_size: 1 }
+        );
+        assert!(matches!(
+            parse_strategy(&argv("x --strategy buffer --fetch 4")).unwrap(),
+            Strategy::Streaming { shuffle_buffer } if shuffle_buffer == 256
+        ));
+        assert!(parse_strategy(&argv("x --strategy zap")).is_err());
+    }
+
+    #[test]
+    fn bad_preset_errors() {
+        assert!(gen_data(&argv("gen-data --out /tmp/x --preset huge")).is_err());
+    }
+
+    #[test]
+    fn train_cpu_quick() {
+        let dir = TempDir::new("cli-train").unwrap();
+        let out = dir.path().to_string_lossy().to_string();
+        gen_data(&argv(&format!(
+            "gen-data --out {out} --preset tiny --cells 600"
+        )))
+        .unwrap();
+        train(&argv(&format!(
+            "train --data {out} --task moa_broad --strategy block --block 8 --fetch 4 --max-steps 6 --lr 0.01"
+        )))
+        .unwrap();
+    }
+}

@@ -1,0 +1,74 @@
+//! Command-line interface (the launcher). `scdata <command> ...`; see
+//! `scdata help` or the README for the full surface.
+
+pub mod args;
+pub mod bench_cmd;
+pub mod commands;
+
+use anyhow::{bail, Result};
+
+use args::Args;
+
+pub const HELP: &str = "\
+scdata — scDataset reproduction (Rust + JAX + Pallas)
+
+USAGE:
+  scdata <command> [options]
+
+COMMANDS:
+  gen-data    Generate the synthetic Tahoe-mini dataset
+              --out DIR [--preset tiny|small|default] [--plates N]
+              [--cells N] [--genes N] [--cell-lines N] [--drugs N]
+              [--chunk-rows N] [--seed N]
+  info        Describe a dataset directory: --data DIR
+  train       Train + evaluate one linear probe (§4.4)
+              --data DIR --task cell_line|drug|moa_broad|moa_fine
+              [--strategy random|streaming|buffer|block] [--block N]
+              [--fetch N] [--engine cpu|pjrt] [--artifacts DIR]
+              [--epochs N] [--lr F] [--max-steps N] [--seed N]
+  bench       Regenerate paper figures/tables
+              fig2|fig3|fig4|eq5|fig5|fig6|fig7|table2|all
+              --data DIR [--results DIR] [--quick] [--engine cpu|pjrt]
+              [--config FILE] [--seeds N]
+  autotune    Recommend (block size, fetch factor): --data DIR
+  calibrate   Print virtual-disk anchors vs the paper's measurements
+  help        Show this message
+
+The virtual-disk model can be overridden with --config FILE (TOML, see
+configs/default.toml).";
+
+/// Entry point used by `main.rs` and by the CLI integration tests.
+pub fn run<I: IntoIterator<Item = String>>(argv: I) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "gen-data" => commands::gen_data(&args),
+        "info" => commands::info(&args),
+        "train" => commands::train(&args),
+        "autotune" => commands::autotune(&args),
+        "calibrate" => commands::calibrate(&args),
+        "bench" => bench_cmd::bench(&args),
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `scdata help`)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn help_runs() {
+        run(vec!["help".to_string()]).unwrap();
+        run(Vec::<String>::new()).unwrap();
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        let e = run(vec!["frobnicate".to_string()]).unwrap_err().to_string();
+        assert!(e.contains("frobnicate"));
+    }
+}

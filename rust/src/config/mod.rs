@@ -1,0 +1,119 @@
+//! Application configuration: defaults, TOML files (`configs/*.toml`) and
+//! disk-model overrides shared by the CLI, benches and examples.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::store::iomodel::DiskModel;
+use crate::util::toml::TomlDoc;
+
+/// Top-level app configuration.
+#[derive(Clone, Debug)]
+pub struct AppConfig {
+    pub data_dir: PathBuf,
+    pub artifacts_dir: PathBuf,
+    pub results_dir: PathBuf,
+    pub batch_size: usize,
+    pub seed: u64,
+    pub disk: DiskModel,
+}
+
+impl Default for AppConfig {
+    fn default() -> AppConfig {
+        AppConfig {
+            data_dir: PathBuf::from("data/tahoe-mini"),
+            artifacts_dir: PathBuf::from("artifacts"),
+            results_dir: PathBuf::from("results"),
+            batch_size: 64,
+            seed: 7,
+            disk: DiskModel::sata_ssd_hdf5(),
+        }
+    }
+}
+
+impl AppConfig {
+    /// Load from a TOML file; missing keys keep defaults.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<AppConfig> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> Result<AppConfig> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = AppConfig::default();
+        cfg.data_dir = PathBuf::from(doc.str_or("data_dir", &cfg.data_dir.to_string_lossy()));
+        cfg.artifacts_dir =
+            PathBuf::from(doc.str_or("artifacts_dir", &cfg.artifacts_dir.to_string_lossy()));
+        cfg.results_dir =
+            PathBuf::from(doc.str_or("results_dir", &cfg.results_dir.to_string_lossy()));
+        cfg.batch_size = doc.usize_or("batch_size", cfg.batch_size);
+        cfg.seed = doc.usize_or("seed", cfg.seed as usize) as u64;
+        // [io] table: disk-model overrides
+        let d = &mut cfg.disk;
+        d.call_overhead_us = doc.f64_or("io.call_overhead_us", d.call_overhead_us);
+        d.run_cost_max_us = doc.f64_or("io.run_cost_max_us", d.run_cost_max_us);
+        d.run_cost_min_us = doc.f64_or("io.run_cost_min_us", d.run_cost_min_us);
+        d.run_amortize_k = doc.f64_or("io.run_amortize_k", d.run_amortize_k);
+        d.run_amortize_p = doc.f64_or("io.run_amortize_p", d.run_amortize_p);
+        d.consumer_cpu_us = doc.f64_or("io.consumer_cpu_us", d.consumer_cpu_us);
+        d.call_share = doc.f64_or("io.call_share", d.call_share);
+        d.qd_boost = doc.f64_or("io.qd_boost", d.qd_boost);
+        d.mmap_seek_us = doc.f64_or("io.mmap_seek_us", d.mmap_seek_us);
+        d.mmap_cell_cpu_us = doc.f64_or("io.mmap_cell_cpu_us", d.mmap_cell_cpu_us);
+        d.bytes_per_us = doc.f64_or("io.bytes_per_us", d.bytes_per_us);
+        d.cell_cpu_us = doc.f64_or("io.cell_cpu_us", d.cell_cpu_us);
+        d.rowgroup_open_us = doc.f64_or("io.rowgroup_open_us", d.rowgroup_open_us);
+        d.row_access_us = doc.f64_or("io.row_access_us", d.row_access_us);
+        d.buffer_mgmt_us = doc.f64_or("io.buffer_mgmt_us", d.buffer_mgmt_us);
+        d.page_fault_us = doc.f64_or("io.page_fault_us", d.page_fault_us);
+        d.page_bytes = doc.usize_or("io.page_bytes", d.page_bytes as usize) as u64;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults() {
+        let c = AppConfig::default();
+        assert_eq!(c.batch_size, 64);
+        assert!(c.data_dir.ends_with("tahoe-mini"));
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let c = AppConfig::from_toml(
+            r#"
+data_dir = "/tmp/x"
+batch_size = 32
+seed = 11
+
+[io]
+call_overhead_us = 1000.0
+cell_cpu_us = 5
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.data_dir, PathBuf::from("/tmp/x"));
+        assert_eq!(c.batch_size, 32);
+        assert_eq!(c.seed, 11);
+        assert_eq!(c.disk.call_overhead_us, 1000.0);
+        assert_eq!(c.disk.cell_cpu_us, 5.0);
+        // untouched keys keep calibrated defaults
+        assert_eq!(
+            c.disk.run_cost_max_us,
+            DiskModel::sata_ssd_hdf5().run_cost_max_us
+        );
+    }
+
+    #[test]
+    fn bad_file_errors() {
+        assert!(AppConfig::from_file("/nonexistent.toml").is_err());
+        assert!(AppConfig::from_toml("x 1").is_err());
+    }
+}

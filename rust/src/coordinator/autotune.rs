@@ -1,0 +1,223 @@
+//! Experimental (b, f) auto-tuner (paper §5: "scDataset provides
+//! experimental support for automated profiling to recommend (b, f)
+//! parameters based on dataset and hardware characteristics").
+//!
+//! The tuner is analytic: it predicts per-configuration throughput from the
+//! virtual-disk cost model (the same terms a profiling pass would fit) and
+//! minibatch diversity from the Corollary 3.3 lower bound, then picks the
+//! cheapest configuration whose diversity loss stays within a tolerance of
+//! H(p) and whose fetch buffer fits the memory budget.
+
+use crate::store::iomodel::{AccessPattern, DiskModel, IoReport};
+
+use super::entropy::{corollary33_bounds, dist_entropy};
+
+/// Dataset/hardware facts the tuner needs.
+#[derive(Clone, Debug)]
+pub struct TuneInputs {
+    pub n_rows: usize,
+    /// Mean stored bytes per row (sparse payload).
+    pub avg_row_bytes: u64,
+    /// In-memory bytes per row once densified (`n_genes × 4` for f32).
+    pub dense_row_bytes: u64,
+    /// Label distribution whose diversity must be preserved (e.g. plates).
+    pub label_dist: Vec<f64>,
+    pub batch_size: usize,
+    pub pattern: AccessPattern,
+    pub disk: DiskModel,
+}
+
+/// Tuner constraints.
+#[derive(Clone, Debug)]
+pub struct TuneOptions {
+    /// Acceptable entropy loss below H(p), in bits.
+    pub entropy_slack_bits: f64,
+    /// Fetch-buffer memory budget, bytes.
+    pub memory_budget_bytes: u64,
+    /// Candidate grids (defaults: the paper's Figure-2 grid).
+    pub block_sizes: Vec<usize>,
+    pub fetch_factors: Vec<usize>,
+}
+
+impl Default for TuneOptions {
+    fn default() -> TuneOptions {
+        TuneOptions {
+            entropy_slack_bits: 0.15,
+            memory_budget_bytes: 2 << 30, // 2 GiB of buffered minibatches
+            block_sizes: vec![1, 4, 16, 64, 256, 1024],
+            fetch_factors: vec![1, 4, 16, 64, 256, 1024],
+        }
+    }
+}
+
+/// One evaluated configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct TunePoint {
+    pub block_size: usize,
+    pub fetch_factor: usize,
+    pub predicted_samples_per_sec: f64,
+    pub entropy_lower_bound: f64,
+    pub entropy_upper_bound: f64,
+    pub buffer_bytes: u64,
+    pub feasible: bool,
+}
+
+/// Tuner output: the chosen point plus the whole evaluated grid (for
+/// reports).
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    pub best: TunePoint,
+    pub grid: Vec<TunePoint>,
+    pub h_p: f64,
+}
+
+/// Predicted steady-state single-worker throughput for (b, f): one fetch of
+/// `m·f` rows in ~`⌈m·f/b⌉` runs (uniformly sampled blocks are almost never
+/// adjacent), served synchronously.
+pub fn predict_throughput(inputs: &TuneInputs, b: usize, f: usize) -> f64 {
+    let rows = (inputs.batch_size * f) as u64;
+    let runs = rows.div_ceil(b as u64).max(1);
+    let io = IoReport {
+        calls: 1,
+        runs,
+        rows,
+        bytes: rows * inputs.avg_row_bytes,
+        chunks: runs,
+        pages: runs + rows * inputs.dense_row_bytes / inputs.disk.page_bytes,
+    };
+    let us = inputs.disk.disk_us(inputs.pattern, &io, 1)
+        + inputs.disk.cpu_us(inputs.pattern, &io, rows as usize);
+    rows as f64 / (us / 1e6)
+}
+
+/// Evaluate the grid and choose the best feasible point.
+pub fn tune(inputs: &TuneInputs, opts: &TuneOptions) -> TuneResult {
+    let h_p = dist_entropy(&inputs.label_dist);
+    let mut grid = Vec::new();
+    for &b in &opts.block_sizes {
+        for &f in &opts.fetch_factors {
+            let (lo, hi) = corollary33_bounds(&inputs.label_dist, inputs.batch_size, b);
+            // With fetch factor f, the effective per-minibatch block count
+            // is f·m/b, so the f-adjusted conservative bound interpolates
+            // toward the upper bound (Cor. 3.3 discussion): we use the
+            // bound with effective block size b/f (≥1).
+            let eff_b = (b as f64 / f as f64).max(1.0).round() as usize;
+            let (eff_lo, _) =
+                corollary33_bounds(&inputs.label_dist, inputs.batch_size, eff_b);
+            let buffer_bytes =
+                (inputs.batch_size * f) as u64 * inputs.dense_row_bytes;
+            let sps = predict_throughput(inputs, b, f);
+            let feasible = eff_lo >= h_p - opts.entropy_slack_bits
+                && buffer_bytes <= opts.memory_budget_bytes;
+            grid.push(TunePoint {
+                block_size: b,
+                fetch_factor: f,
+                predicted_samples_per_sec: sps,
+                // f-adjusted conservative bound (≥ the f=1 bound `lo`).
+                entropy_lower_bound: eff_lo.max(lo).max(0.0),
+                entropy_upper_bound: hi,
+                buffer_bytes,
+                feasible,
+            });
+        }
+    }
+    let best = grid
+        .iter()
+        .filter(|p| p.feasible)
+        .max_by(|a, b| {
+            a.predicted_samples_per_sec
+                .partial_cmp(&b.predicted_samples_per_sec)
+                .unwrap()
+        })
+        .copied()
+        // Nothing feasible (e.g. zero slack): fall back to b=1 max-f.
+        .unwrap_or_else(|| {
+            grid.iter()
+                .filter(|p| p.block_size == 1)
+                .max_by(|a, b| {
+                    a.predicted_samples_per_sec
+                        .partial_cmp(&b.predicted_samples_per_sec)
+                        .unwrap()
+                })
+                .copied()
+                .unwrap()
+        });
+    TuneResult { best, grid, h_p }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs() -> TuneInputs {
+        TuneInputs {
+            n_rows: 700_000,
+            avg_row_bytes: 410,
+            dense_row_bytes: 512 * 4,
+            label_dist: vec![1.0 / 14.0; 14],
+            batch_size: 64,
+            pattern: AccessPattern::BatchedCoalesced,
+            disk: DiskModel::sata_ssd_hdf5(),
+        }
+    }
+
+    #[test]
+    fn throughput_monotone_in_f_for_batched() {
+        let inp = inputs();
+        let mut prev = 0.0;
+        for f in [1usize, 4, 16, 64, 256] {
+            let t = predict_throughput(&inp, 16, f);
+            assert!(t > prev, "f={f}: {t} !> {prev}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn throughput_monotone_in_b() {
+        let inp = inputs();
+        let mut prev = 0.0;
+        for b in [1usize, 4, 16, 64] {
+            let t = predict_throughput(&inp, b, 16);
+            assert!(t > prev, "b={b}: {t} !> {prev}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn tuner_picks_feasible_fast_point() {
+        let r = tune(&inputs(), &TuneOptions::default());
+        assert!(r.best.feasible);
+        assert!(r.best.fetch_factor >= 16, "best {:?}", r.best);
+        assert!(r.best.entropy_lower_bound >= r.h_p - 0.15 - 1e-9);
+        assert_eq!(r.grid.len(), 36);
+    }
+
+    #[test]
+    fn tight_memory_budget_caps_fetch_factor() {
+        let inp = inputs();
+        let mut opts = TuneOptions::default();
+        // budget for at most 64*16 dense rows
+        opts.memory_budget_bytes = (64 * 16) as u64 * inp.dense_row_bytes;
+        let r = tune(&inp, &opts);
+        assert!(r.best.fetch_factor <= 16, "best {:?}", r.best);
+    }
+
+    #[test]
+    fn zero_slack_falls_back_to_b1() {
+        let inp = inputs();
+        let mut opts = TuneOptions::default();
+        opts.entropy_slack_bits = -1.0; // impossible
+        let r = tune(&inp, &opts);
+        assert_eq!(r.best.block_size, 1);
+    }
+
+    #[test]
+    fn per_index_backend_sees_no_f_gain() {
+        let mut inp = inputs();
+        inp.pattern = AccessPattern::PerIndex;
+        let t1 = predict_throughput(&inp, 64, 1);
+        let t256 = predict_throughput(&inp, 64, 256);
+        // fetch factor may only help marginally (< 10%) for per-index
+        assert!(t256 < t1 * 1.1, "t1={t1} t256={t256}");
+    }
+}

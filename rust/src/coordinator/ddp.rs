@@ -1,0 +1,117 @@
+//! Distributed work partitioning (paper Appendix B).
+//!
+//! All ranks deterministically build the *same* epoch plan from a shared
+//! seed (the "broadcast seed"); work is then divided at the **fetch** level:
+//! rank r processes fetches r, r+W, r+2W, … round-robin. With DataLoader
+//! workers enabled, each rank's fetches are further subdivided among its
+//! workers the same way, giving the two-level R × W hierarchy without any
+//! coordination on the data path.
+
+/// The fetch ids a given (rank, worker) processes.
+///
+/// * `n_fetches` — fetches in the epoch plan.
+/// * `rank`, `world_size` — DDP position (world_size ≥ 1).
+/// * `worker`, `num_workers` — worker position within the rank; pass
+///   `(0, 1)` for a single-process loader.
+pub fn assigned_fetches(
+    n_fetches: usize,
+    rank: usize,
+    world_size: usize,
+    worker: usize,
+    num_workers: usize,
+) -> Vec<usize> {
+    assert!(world_size >= 1 && rank < world_size, "bad rank");
+    let workers = num_workers.max(1);
+    assert!(worker < workers, "bad worker");
+    (0..n_fetches)
+        .filter(|i| i % world_size == rank)
+        .enumerate()
+        .filter(|(j, _)| j % workers == worker)
+        .map(|(_, i)| i)
+        .collect()
+}
+
+/// Simulated broadcast of the shared seed from rank 0 (in a real deployment
+/// this is a collective; here it documents + tests the contract that every
+/// rank derives plans from rank 0's seed, not its own).
+pub fn broadcast_seed(rank0_seed: u64, _rank: usize) -> u64 {
+    rank0_seed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn paper_example_4_ranks_100_fetches() {
+        // Appendix B: with 4 ranks and 100 fetches, rank 0 processes
+        // {0, 4, 8, ..., 96}, rank 1 {1, 5, 9, ..., 97}.
+        let r0 = assigned_fetches(100, 0, 4, 0, 1);
+        let r1 = assigned_fetches(100, 1, 4, 0, 1);
+        assert_eq!(r0[..3], [0, 4, 8]);
+        assert_eq!(*r0.last().unwrap(), 96);
+        assert_eq!(r1[..3], [1, 5, 9]);
+        assert_eq!(*r1.last().unwrap(), 97);
+    }
+
+    #[test]
+    fn workers_subdivide_rank_fetches() {
+        let rank_all = assigned_fetches(40, 1, 2, 0, 1);
+        let w0 = assigned_fetches(40, 1, 2, 0, 2);
+        let w1 = assigned_fetches(40, 1, 2, 1, 2);
+        let mut merged = [w0.clone(), w1.clone()].concat();
+        merged.sort_unstable();
+        assert_eq!(merged, rank_all);
+        assert!(w0.iter().all(|i| !w1.contains(i)));
+    }
+
+    #[test]
+    fn prop_partition_disjoint_and_exhaustive() {
+        check("ddp-partition", 64, |rng| {
+            let n = rng.range(0, 200);
+            let world = rng.range(1, 6);
+            let workers = rng.range(1, 5);
+            let mut seen = vec![0usize; n];
+            for r in 0..world {
+                for w in 0..workers {
+                    for &i in &assigned_fetches(n, r, world, w, workers) {
+                        seen[i] += 1;
+                    }
+                }
+            }
+            prop_assert!(
+                seen.iter().all(|&c| c == 1),
+                "fetches not covered exactly once: {seen:?}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_balanced_within_one() {
+        check("ddp-balance", 32, |rng| {
+            let n = rng.range(1, 300);
+            let world = rng.range(1, 5);
+            let workers = rng.range(1, 4);
+            let mut counts = Vec::new();
+            for r in 0..world {
+                for w in 0..workers {
+                    counts.push(assigned_fetches(n, r, world, w, workers).len());
+                }
+            }
+            let min = counts.iter().min().unwrap();
+            let max = counts.iter().max().unwrap();
+            prop_assert!(max - min <= 1, "imbalance: {counts:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn broadcast_seed_is_rank0s() {
+        for r in 0..8 {
+            assert_eq!(broadcast_seed(1234, r), 1234);
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Minibatch label entropy: the paper's §3.4 theory.
+//!
+//! Implements the plug-in entropy H(C) (Eq. 1), the expected-entropy
+//! expansions of Theorems 3.1 (large fetch factor) and 3.2 (no batched
+//! fetching), and the Corollary 3.3 sandwich bounds used to validate the
+//! (b, f) trade-off empirically (paper Eq. 5 and Figure 4).
+
+const LN2: f64 = std::f64::consts::LN_2;
+
+/// Plug-in entropy (bits) of a count vector (Eq. 1).
+pub fn plugin_entropy(counts: &[usize]) -> f64 {
+    let total: usize = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let t = total as f64;
+    counts
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / t;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+/// Entropy (bits) of a probability distribution.
+pub fn dist_entropy(p: &[f64]) -> f64 {
+    p.iter()
+        .filter(|&&x| x > 0.0)
+        .map(|&x| -x * x.log2())
+        .sum()
+}
+
+/// Entropy of one minibatch's label codes.
+pub fn batch_label_entropy(codes: &[u16], n_classes: usize) -> f64 {
+    let mut counts = vec![0usize; n_classes];
+    for &c in codes {
+        counts[c as usize] += 1;
+    }
+    plugin_entropy(&counts)
+}
+
+/// Theorem 3.1: E[H(C)] as f → ∞ (IID sampling of m cells from p):
+/// `H(p) − (K−1)/(2 m ln 2)`.
+pub fn thm31_large_fetch(p: &[f64], m: usize) -> f64 {
+    let k = p.iter().filter(|&&x| x > 0.0).count();
+    dist_entropy(p) - (k as f64 - 1.0) / (2.0 * m as f64 * LN2)
+}
+
+/// Theorem 3.2: E[H(C)] at f = 1 with homogeneous blocks: the effective
+/// sample size is B = m/b blocks: `H(p) − (K−1)/(2 B ln 2)`.
+pub fn thm32_no_fetch(p: &[f64], m: usize, b: usize) -> f64 {
+    let k = p.iter().filter(|&&x| x > 0.0).count();
+    let big_b = (m as f64 / b as f64).max(1.0);
+    dist_entropy(p) - (k as f64 - 1.0) / (2.0 * big_b * LN2)
+}
+
+/// Corollary 3.3 sandwich: lower `H(p) − (K−1)b/(2m ln2)`, upper
+/// `H(p) − (K−1)/(2m ln2)`. Lower is clamped at 0 (entropy is
+/// non-negative; the paper's Eq. 5 quotes the unclamped value 1.43 for
+/// b=16, m=64, K=14 — we return the unclamped bound and let callers clamp).
+pub fn corollary33_bounds(p: &[f64], m: usize, b: usize) -> (f64, f64) {
+    let k = p.iter().filter(|&&x| x > 0.0).count() as f64;
+    let hp = dist_entropy(p);
+    let lower = hp - (k - 1.0) * b as f64 / (2.0 * m as f64 * LN2);
+    let upper = hp - (k - 1.0) / (2.0 * m as f64 * LN2);
+    (lower, upper)
+}
+
+/// Mean ± sample-std of per-batch entropies.
+pub fn entropy_mean_std(batch_entropies: &[f64]) -> (f64, f64) {
+    (
+        crate::util::stats::mean(batch_entropies),
+        crate::util::stats::std_dev(batch_entropies),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn uniform_counts_give_log_k() {
+        let h = plugin_entropy(&[5, 5, 5, 5]);
+        assert!((h - 2.0).abs() < 1e-12);
+        assert_eq!(plugin_entropy(&[10, 0, 0]), 0.0);
+        assert_eq!(plugin_entropy(&[]), 0.0);
+        assert_eq!(plugin_entropy(&[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn dist_entropy_basics() {
+        assert!((dist_entropy(&[0.5, 0.5]) - 1.0).abs() < 1e-12);
+        assert!((dist_entropy(&[1.0]) - 0.0).abs() < 1e-12);
+        let p14 = vec![1.0 / 14.0; 14];
+        assert!((dist_entropy(&p14) - 14f64.log2()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_entropy_from_codes() {
+        let h = batch_label_entropy(&[0, 0, 1, 1], 3);
+        assert!((h - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_eq5_bounds_reproduced() {
+        // Paper: 14 plates, empirical H(p) = 3.78 bits, m=64, b=16 =>
+        // 1.43 ≤ E[H] ≤ 3.63 (Eq. 5). Construct a 14-class distribution
+        // with H(p) ≈ 3.78 (paper: plate sizes 4.7%..10.4%).
+        let p = paper_plate_distribution();
+        let hp = dist_entropy(&p);
+        assert!((hp - 3.78).abs() < 0.02, "H(p) = {hp}");
+        let (lo, hi) = corollary33_bounds(&p, 64, 16);
+        assert!((lo - 1.43).abs() < 0.05, "lower {lo}");
+        assert!((hi - 3.63).abs() < 0.05, "upper {hi}");
+    }
+
+    /// A 14-plate distribution matching the paper's description (sizes
+    /// ranging 4.7%–10.4%, H = 3.78 bits).
+    pub fn paper_plate_distribution() -> Vec<f64> {
+        let raw = [
+            10.4, 10.4, 10.4, 10.39, 10.38, 10.34, 10.26, 10.11, 9.84, 9.42, 8.78, 7.84,
+            6.51, 4.7,
+        ];
+        let s: f64 = raw.iter().sum();
+        raw.iter().map(|x| x / s).collect()
+    }
+
+    #[test]
+    fn thm32_collapses_at_b_eq_m() {
+        // b = m => B = 1: E[H] = H(p) - (K-1)/(2 ln 2): large bias.
+        let p = vec![0.25; 4];
+        let e = thm32_no_fetch(&p, 64, 64);
+        assert!((e - (2.0 - 3.0 / (2.0 * LN2))).abs() < 1e-12);
+        // and Thm 3.1 bias is much smaller
+        assert!(thm31_large_fetch(&p, 64) > e);
+    }
+
+    #[test]
+    fn empirical_multinomial_matches_thm31() {
+        // Draw m IID labels from p many times; mean plug-in entropy should
+        // match H(p) - (K-1)/(2m ln2) closely.
+        let p = vec![0.4, 0.3, 0.2, 0.1];
+        let m = 64;
+        let mut rng = Rng::new(11);
+        let cum: Vec<f64> = p
+            .iter()
+            .scan(0.0, |s, &x| {
+                *s += x;
+                Some(*s)
+            })
+            .collect();
+        let mut hs = Vec::new();
+        for _ in 0..4000 {
+            let mut counts = vec![0usize; p.len()];
+            for _ in 0..m {
+                let u = rng.f64();
+                let k = cum.iter().position(|&c| u < c).unwrap_or(p.len() - 1);
+                counts[k] += 1;
+            }
+            hs.push(plugin_entropy(&counts));
+        }
+        let (mean, _) = entropy_mean_std(&hs);
+        let expect = thm31_large_fetch(&p, m);
+        assert!(
+            (mean - expect).abs() < 0.01,
+            "empirical {mean} vs theory {expect}"
+        );
+    }
+
+    #[test]
+    fn empirical_block_sampling_matches_thm32() {
+        // f=1 block sampling: draw B = m/b blocks IID from p; each block
+        // contributes b identical labels. Mean entropy ≈ Thm 3.2.
+        let p = vec![0.5, 0.25, 0.25];
+        let (m, b) = (64, 16);
+        let big_b = m / b;
+        let mut rng = Rng::new(12);
+        let cum: Vec<f64> = p
+            .iter()
+            .scan(0.0, |s, &x| {
+                *s += x;
+                Some(*s)
+            })
+            .collect();
+        let mut hs = Vec::new();
+        for _ in 0..6000 {
+            let mut counts = vec![0usize; p.len()];
+            for _ in 0..big_b {
+                let u = rng.f64();
+                let k = cum.iter().position(|&c| u < c).unwrap_or(p.len() - 1);
+                counts[k] += b;
+            }
+            hs.push(plugin_entropy(&counts));
+        }
+        let (mean, _) = entropy_mean_std(&hs);
+        let expect = thm32_no_fetch(&p, m, b);
+        // O(B^-2) residual is visible at B=4; allow a loose band.
+        assert!(
+            (mean - expect).abs() < 0.12,
+            "empirical {mean} vs theory {expect}"
+        );
+    }
+
+    #[test]
+    fn prop_bounds_sandwich_theorems() {
+        check("entropy-sandwich", 64, |rng| {
+            let k = rng.range(2, 12);
+            let mut p: Vec<f64> = (0..k).map(|_| rng.f64() + 0.05).collect();
+            let s: f64 = p.iter().sum();
+            p.iter_mut().for_each(|x| *x /= s);
+            let b = 1 << rng.range(0, 6);
+            let m = b * rng.range(1, 8); // m multiple of b
+            let (lo, hi) = corollary33_bounds(&p, m, b);
+            prop_assert!(lo <= hi + 1e-12, "lo {lo} > hi {hi}");
+            let t32 = thm32_no_fetch(&p, m, b);
+            let t31 = thm31_large_fetch(&p, m);
+            prop_assert!(
+                lo - 1e-9 <= t32 && t32 <= hi + 1e-9,
+                "thm32 {t32} outside [{lo},{hi}]"
+            );
+            prop_assert!((t31 - hi).abs() < 1e-9, "thm31 {t31} != upper {hi}");
+            Ok(())
+        });
+    }
+}

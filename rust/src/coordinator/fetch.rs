@@ -1,0 +1,134 @@
+//! Fetch execution — Algorithm 1 lines 6–9.
+//!
+//! A fetch takes the (unsorted, possibly duplicated) index multiset of one
+//! fetch batch, sorts and de-duplicates it for the backend (line 7: "sort
+//! indices in ascending order, enabling storage backends to coalesce nearby
+//! reads"), loads the data (line 8), then materializes the in-memory
+//! reshuffle (line 9) as a gather over the unique rows.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::store::{Backend, CsrBatch, IoReport};
+use crate::util::rng::Rng;
+
+/// A loaded, reshuffled fetch buffer ready to be split into minibatches.
+#[derive(Clone, Debug)]
+pub struct FetchedChunk {
+    /// Rows in post-shuffle order.
+    pub x: CsrBatch,
+    /// Global row ids aligned with `x` rows.
+    pub rows: Vec<u32>,
+    /// Label codes aligned with `x` rows, one vec per requested obs column.
+    pub labels: Vec<Vec<u16>>,
+    /// I/O accounting for the backend call(s).
+    pub io: IoReport,
+}
+
+/// Execute one fetch.
+///
+/// * `indices` — the fetch batch (multiset; weighted strategies may repeat
+///   blocks).
+/// * `shuffle` — `Some(rng)` applies the line-9 in-memory reshuffle;
+///   `None` keeps stream order (pure streaming).
+pub fn run_fetch(
+    backend: &Arc<dyn Backend>,
+    indices: &[u32],
+    label_cols: &[String],
+    mut shuffle: Option<&mut Rng>,
+) -> Result<FetchedChunk> {
+    // Sort + dedup for the disk.
+    let mut sorted: Vec<u32> = indices.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    let fetched = backend.fetch_rows(&sorted)?;
+
+    // Map the original multiset onto positions in the unique sorted batch.
+    let mut positions: Vec<u32> = indices
+        .iter()
+        .map(|&i| sorted.binary_search(&i).expect("index vanished") as u32)
+        .collect();
+    if let Some(rng) = shuffle.as_deref_mut() {
+        rng.shuffle(&mut positions);
+    }
+
+    let rows: Vec<u32> = positions.iter().map(|&p| sorted[p as usize]).collect();
+    let x = fetched.x.select_rows(&positions);
+    let labels = backend.obs().gather(label_cols, &rows)?;
+    Ok(FetchedChunk {
+        x,
+        rows,
+        labels,
+        io: fetched.io,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate, open_collection, TahoeConfig};
+    use crate::util::tempdir::TempDir;
+
+    fn backend() -> (TempDir, Arc<dyn Backend>) {
+        let dir = TempDir::new("fetch").unwrap();
+        let mut cfg = TahoeConfig::tiny();
+        cfg.n_plates = 2;
+        cfg.cells_per_plate = 500;
+        generate(&cfg, dir.path()).unwrap();
+        let coll = open_collection(dir.path()).unwrap();
+        (dir, Arc::new(coll))
+    }
+
+    #[test]
+    fn preserves_multiset_and_alignment() {
+        let (_d, b) = backend();
+        let indices = vec![10u32, 700, 10, 3, 999, 700];
+        let mut rng = Rng::new(5);
+        let cols = vec!["plate".to_string(), "drug".to_string()];
+        let chunk = run_fetch(&b, &indices, &cols, Some(&mut rng)).unwrap();
+        assert_eq!(chunk.x.n_rows, 6);
+        let mut got = chunk.rows.clone();
+        got.sort_unstable();
+        assert_eq!(got, vec![3, 10, 10, 700, 700, 999]);
+        // labels align with rows
+        let plate_col = b.obs().column("plate").unwrap();
+        for (j, &r) in chunk.rows.iter().enumerate() {
+            assert_eq!(chunk.labels[0][j], plate_col.codes[r as usize]);
+        }
+        // x rows match a direct fetch of the same global rows
+        for (j, &r) in chunk.rows.iter().enumerate() {
+            let direct = b.fetch_rows(&[r]).unwrap().x;
+            assert_eq!(chunk.x.row(j), direct.row(0), "row {j} (global {r})");
+        }
+    }
+
+    #[test]
+    fn no_shuffle_keeps_order() {
+        let (_d, b) = backend();
+        let indices = vec![5u32, 6, 7, 8];
+        let chunk = run_fetch(&b, &indices, &[], None).unwrap();
+        assert_eq!(chunk.rows, indices);
+        assert!(chunk.labels.is_empty());
+    }
+
+    #[test]
+    fn shuffle_changes_order_deterministically() {
+        let (_d, b) = backend();
+        let indices: Vec<u32> = (0..128).collect();
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let a = run_fetch(&b, &indices, &[], Some(&mut r1)).unwrap();
+        let c = run_fetch(&b, &indices, &[], Some(&mut r2)).unwrap();
+        assert_eq!(a.rows, c.rows);
+        assert_ne!(a.rows, indices, "shuffle must permute");
+    }
+
+    #[test]
+    fn io_reports_dedup_rows() {
+        let (_d, b) = backend();
+        let chunk = run_fetch(&b, &[4, 4, 4, 4], &[], None).unwrap();
+        assert_eq!(chunk.io.rows, 1, "backend sees unique rows only");
+        assert_eq!(chunk.x.n_rows, 4, "multiset is reconstructed");
+    }
+}

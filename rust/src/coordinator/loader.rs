@@ -1,0 +1,786 @@
+//! `ScDataset` — the user-facing loader (the PyTorch `IterableDataset`
+//! analogue) tying the plan, fetch execution, shuffle buffer, worker pool
+//! and DDP partitioning together.
+//!
+//! * `num_workers == 0`: synchronous iteration in the caller's thread
+//!   (deterministic order — plan order).
+//! * `num_workers > 0`: a thread pool; each worker owns a disjoint fetch
+//!   list (Appendix B round-robin) and streams minibatches into a bounded
+//!   channel — the bound is the backpressure that keeps prefetch memory at
+//!   `prefetch_depth` fetches per worker, like PyTorch's `prefetch_factor`.
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::store::{Backend, CsrBatch, IoReport};
+use crate::util::rng::Rng;
+
+use super::ddp::assigned_fetches;
+use super::fetch::run_fetch;
+use super::plan::{build_plan, EpochPlan, Strategy};
+
+/// One training minibatch.
+#[derive(Clone, Debug)]
+pub struct Minibatch {
+    /// Sparse expression rows (`batch_size × n_genes`; the final batch of an
+    /// epoch may be short unless `drop_last`).
+    pub x: CsrBatch,
+    /// Global row ids, aligned with `x` rows.
+    pub rows: Vec<u32>,
+    /// Label codes per requested obs column (config order), aligned with
+    /// `x` rows.
+    pub labels: Vec<Vec<u16>>,
+}
+
+/// Loader configuration (paper §3.3 parameters plus runtime knobs).
+#[derive(Clone, Debug)]
+pub struct LoaderConfig {
+    pub strategy: Strategy,
+    /// Minibatch size `m`.
+    pub batch_size: usize,
+    /// Fetch factor `f`.
+    pub fetch_factor: usize,
+    /// Obs columns whose codes ride along with each minibatch.
+    pub label_cols: Vec<String>,
+    /// Root seed (rank-0 broadcast value).
+    pub seed: u64,
+    /// 0 = synchronous; >0 spawns that many fetch worker threads.
+    pub num_workers: usize,
+    /// Fetches buffered per worker before backpressure stalls it.
+    pub prefetch_depth: usize,
+    /// Drop the trailing partial fetch.
+    pub drop_last: bool,
+    /// DDP rank / world size (fetch-level round robin).
+    pub rank: usize,
+    pub world_size: usize,
+}
+
+impl Default for LoaderConfig {
+    fn default() -> LoaderConfig {
+        LoaderConfig {
+            strategy: Strategy::BlockShuffling { block_size: 16 },
+            batch_size: 64,
+            fetch_factor: 16,
+            label_cols: Vec::new(),
+            seed: 0,
+            num_workers: 0,
+            prefetch_depth: 2,
+            drop_last: false,
+            rank: 0,
+            world_size: 1,
+        }
+    }
+}
+
+/// Accumulated loading statistics for one epoch iteration.
+#[derive(Clone, Debug, Default)]
+pub struct LoadStats {
+    pub batches: u64,
+    pub rows: u64,
+    pub fetches: u64,
+    /// Aggregate I/O accounting.
+    pub io: IoReport,
+    /// Per-fetch reports (feed these to `iomodel::simulate_loader`).
+    pub fetch_reports: Vec<IoReport>,
+    /// Wall-clock nanoseconds spent inside backend fetch calls.
+    pub real_fetch_ns: u64,
+}
+
+/// The loader.
+pub struct ScDataset {
+    backend: Arc<dyn Backend>,
+    cfg: LoaderConfig,
+}
+
+impl ScDataset {
+    pub fn new(backend: Arc<dyn Backend>, cfg: LoaderConfig) -> ScDataset {
+        ScDataset { backend, cfg }
+    }
+
+    pub fn config(&self) -> &LoaderConfig {
+        &self.cfg
+    }
+
+    pub fn backend(&self) -> &Arc<dyn Backend> {
+        &self.backend
+    }
+
+    /// Build this epoch's plan (identical on every rank).
+    pub fn plan(&self, epoch: u64) -> Result<EpochPlan> {
+        build_plan(
+            &self.cfg.strategy,
+            self.backend.n_rows(),
+            self.cfg.batch_size,
+            self.cfg.fetch_factor,
+            self.cfg.seed,
+            epoch,
+            Some(self.backend.obs()),
+            self.cfg.drop_last,
+        )
+    }
+
+    /// Iterate one epoch. Statistics are observable through
+    /// [`EpochIter::stats`] while iterating and after exhaustion.
+    pub fn epoch(&self, epoch: u64) -> Result<EpochIter> {
+        let plan = self.plan(epoch)?;
+        let n_fetches = plan.n_fetches();
+        let stats = Arc::new(Mutex::new(LoadStats::default()));
+        let use_buffer = matches!(
+            self.cfg.strategy,
+            Strategy::Streaming { shuffle_buffer } if shuffle_buffer > 0
+        );
+        let shuffle_in_fetch = !matches!(self.cfg.strategy, Strategy::Streaming { .. });
+        if self.cfg.num_workers == 0 {
+            let fetch_ids = assigned_fetches(n_fetches, self.cfg.rank, self.cfg.world_size, 0, 1);
+            let source = FetchStream {
+                backend: self.backend.clone(),
+                plan: Arc::new(plan),
+                fetch_ids,
+                next: 0,
+                label_cols: self.cfg.label_cols.clone(),
+                rng: Rng::new(self.cfg.seed).fork(0x10_000 + epoch),
+                shuffle_in_fetch,
+                stats: stats.clone(),
+            };
+            let inner: Box<dyn Iterator<Item = Result<Minibatch>> + Send> = if use_buffer {
+                let cap = match self.cfg.strategy {
+                    Strategy::Streaming { shuffle_buffer } => shuffle_buffer,
+                    _ => unreachable!(),
+                };
+                Box::new(ShuffleBufferIter::new(
+                    source,
+                    self.cfg.batch_size,
+                    cap,
+                    Rng::new(self.cfg.seed).fork(0x20_000 + epoch),
+                    self.cfg.drop_last,
+                ))
+            } else {
+                Box::new(SplitIter::new(source, self.cfg.batch_size, self.cfg.drop_last))
+            };
+            return Ok(EpochIter {
+                inner,
+                stats,
+                _workers: Vec::new(),
+            });
+        }
+
+        // Worker-pool path.
+        let workers = self.cfg.num_workers;
+        let cap = (self.cfg.prefetch_depth.max(1)) * workers * self.cfg.fetch_factor;
+        let (tx, rx) = sync_channel::<Result<Minibatch>>(cap);
+        let plan = Arc::new(plan);
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let fetch_ids =
+                assigned_fetches(n_fetches, self.cfg.rank, self.cfg.world_size, w, workers);
+            let source = FetchStream {
+                backend: self.backend.clone(),
+                plan: plan.clone(),
+                fetch_ids,
+                next: 0,
+                label_cols: self.cfg.label_cols.clone(),
+                // Distinct stream per (epoch, worker) — same for every rank.
+                rng: Rng::new(self.cfg.seed).fork(0x10_000 + epoch).fork(w as u64),
+                shuffle_in_fetch,
+                stats: stats.clone(),
+            };
+            let tx = tx.clone();
+            let batch_size = self.cfg.batch_size;
+            let drop_last = self.cfg.drop_last;
+            let buffer_cap = match self.cfg.strategy {
+                Strategy::Streaming { shuffle_buffer } if shuffle_buffer > 0 => {
+                    Some(shuffle_buffer)
+                }
+                _ => None,
+            };
+            let seed = self.cfg.seed;
+            let handle = std::thread::Builder::new()
+                .name(format!("scdata-worker-{w}"))
+                .spawn(move || {
+                    let iter: Box<dyn Iterator<Item = Result<Minibatch>>> =
+                        if let Some(cap) = buffer_cap {
+                            Box::new(ShuffleBufferIter::new(
+                                source,
+                                batch_size,
+                                cap,
+                                Rng::new(seed).fork(0x20_000 + epoch).fork(w as u64),
+                                drop_last,
+                            ))
+                        } else {
+                            Box::new(SplitIter::new(source, batch_size, drop_last))
+                        };
+                    for item in iter {
+                        // A send error means the consumer hung up: stop.
+                        if tx.send(item).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .expect("spawn worker");
+            handles.push(handle);
+        }
+        drop(tx); // channel closes when all workers finish
+        Ok(EpochIter {
+            inner: Box::new(ChannelIter { rx }),
+            stats,
+            _workers: handles,
+        })
+    }
+}
+
+/// Iterator over an epoch's minibatches.
+pub struct EpochIter {
+    inner: Box<dyn Iterator<Item = Result<Minibatch>> + Send>,
+    stats: Arc<Mutex<LoadStats>>,
+    _workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl EpochIter {
+    /// Snapshot of loading statistics so far.
+    pub fn stats(&self) -> LoadStats {
+        self.stats.lock().unwrap().clone()
+    }
+}
+
+impl Iterator for EpochIter {
+    type Item = Result<Minibatch>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let item = self.inner.next();
+        if let Some(Ok(mb)) = &item {
+            let mut s = self.stats.lock().unwrap();
+            s.batches += 1;
+            s.rows += mb.x.n_rows as u64;
+        }
+        item
+    }
+}
+
+struct ChannelIter {
+    rx: Receiver<Result<Minibatch>>,
+}
+
+impl Iterator for ChannelIter {
+    type Item = Result<Minibatch>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        self.rx.recv().ok()
+    }
+}
+
+/// Streams fetched (and optionally reshuffled) chunks from the plan.
+struct FetchStream {
+    backend: Arc<dyn Backend>,
+    plan: Arc<EpochPlan>,
+    fetch_ids: Vec<usize>,
+    next: usize,
+    label_cols: Vec<String>,
+    rng: Rng,
+    shuffle_in_fetch: bool,
+    stats: Arc<Mutex<LoadStats>>,
+}
+
+impl FetchStream {
+    fn next_chunk(&mut self) -> Option<Result<super::fetch::FetchedChunk>> {
+        let id = *self.fetch_ids.get(self.next)?;
+        self.next += 1;
+        let indices = self.plan.fetch_indices(id);
+        let t0 = std::time::Instant::now();
+        let result = run_fetch(
+            &self.backend,
+            indices,
+            &self.label_cols,
+            if self.shuffle_in_fetch {
+                Some(&mut self.rng)
+            } else {
+                None
+            },
+        );
+        let dt = t0.elapsed().as_nanos() as u64;
+        if let Ok(chunk) = &result {
+            let mut s = self.stats.lock().unwrap();
+            s.fetches += 1;
+            s.io.add(&chunk.io);
+            s.fetch_reports.push(chunk.io);
+            s.real_fetch_ns += dt;
+        }
+        Some(result)
+    }
+}
+
+/// Splits fetched chunks into minibatches of `m` (Algorithm 1 lines 10–12).
+struct SplitIter {
+    source: FetchStream,
+    batch_size: usize,
+    drop_last: bool,
+    current: Option<super::fetch::FetchedChunk>,
+    offset: usize,
+    done: bool,
+}
+
+impl SplitIter {
+    fn new(source: FetchStream, batch_size: usize, drop_last: bool) -> SplitIter {
+        SplitIter {
+            source,
+            batch_size,
+            drop_last,
+            current: None,
+            offset: 0,
+            done: false,
+        }
+    }
+}
+
+impl Iterator for SplitIter {
+    type Item = Result<Minibatch>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.done {
+            return None;
+        }
+        loop {
+            if let Some(chunk) = &self.current {
+                let n = chunk.x.n_rows;
+                if self.offset < n {
+                    let end = (self.offset + self.batch_size).min(n);
+                    if end - self.offset < self.batch_size && self.drop_last {
+                        self.current = None;
+                        self.offset = 0;
+                        continue;
+                    }
+                    let mb = Minibatch {
+                        x: chunk.x.slice_rows(self.offset, end),
+                        rows: chunk.rows[self.offset..end].to_vec(),
+                        labels: chunk
+                            .labels
+                            .iter()
+                            .map(|col| col[self.offset..end].to_vec())
+                            .collect(),
+                    };
+                    self.offset = end;
+                    return Some(Ok(mb));
+                }
+                self.current = None;
+                self.offset = 0;
+            }
+            match self.source.next_chunk() {
+                None => {
+                    self.done = true;
+                    return None;
+                }
+                Some(Err(e)) => {
+                    self.done = true;
+                    return Some(Err(e));
+                }
+                Some(Ok(chunk)) => {
+                    self.current = Some(chunk);
+                    self.offset = 0;
+                }
+            }
+        }
+    }
+}
+
+/// WebDataset-style rolling shuffle buffer over a sequential stream: keep a
+/// window of `capacity` rows; each emitted row is drawn uniformly from the
+/// window and replaced by the next stream row. Used by
+/// `Strategy::Streaming { shuffle_buffer > 0 }` and the shuffle-buffer
+/// baseline of §4.4.
+struct ShuffleBufferIter {
+    source: FetchStream,
+    batch_size: usize,
+    capacity: usize,
+    rng: Rng,
+    drop_last: bool,
+    /// Window entries: (global row, labels-per-column, row batch-of-one).
+    window: Vec<(u32, Vec<u16>, CsrBatch)>,
+    pending: Option<(super::fetch::FetchedChunk, usize)>,
+    done_filling: bool,
+    finished: bool,
+}
+
+impl ShuffleBufferIter {
+    fn new(
+        source: FetchStream,
+        batch_size: usize,
+        capacity: usize,
+        rng: Rng,
+        drop_last: bool,
+    ) -> ShuffleBufferIter {
+        ShuffleBufferIter {
+            source,
+            batch_size,
+            capacity: capacity.max(1),
+            rng,
+            drop_last,
+            window: Vec::new(),
+            pending: None,
+            done_filling: false,
+            finished: false,
+        }
+    }
+
+    /// Pull the next stream row into `pending`/window; false when the
+    /// stream is exhausted.
+    fn pull_row(&mut self) -> Result<bool> {
+        loop {
+            if let Some((chunk, off)) = &mut self.pending {
+                if *off < chunk.x.n_rows {
+                    let i = *off;
+                    *off += 1;
+                    let row_batch = chunk.x.slice_rows(i, i + 1);
+                    let labels: Vec<u16> = chunk.labels.iter().map(|c| c[i]).collect();
+                    self.window.push((chunk.rows[i], labels, row_batch));
+                    return Ok(true);
+                }
+                self.pending = None;
+            }
+            match self.source.next_chunk() {
+                None => return Ok(false),
+                Some(Err(e)) => return Err(e),
+                Some(Ok(chunk)) => self.pending = Some((chunk, 0)),
+            }
+        }
+    }
+
+    /// Remove and return a uniformly random window entry.
+    fn draw(&mut self) -> (u32, Vec<u16>, CsrBatch) {
+        let i = self.rng.range(0, self.window.len());
+        self.window.swap_remove(i)
+    }
+}
+
+impl Iterator for ShuffleBufferIter {
+    type Item = Result<Minibatch>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.finished {
+            return None;
+        }
+        let n_cols = self.source.backend.n_cols();
+        let n_label_cols = self.source.label_cols.len();
+        let mut x = CsrBatch::empty(n_cols);
+        let mut rows = Vec::with_capacity(self.batch_size);
+        let mut labels: Vec<Vec<u16>> = vec![Vec::with_capacity(self.batch_size); n_label_cols];
+        while rows.len() < self.batch_size {
+            // Keep the window full while the stream lasts.
+            while !self.done_filling && self.window.len() < self.capacity {
+                match self.pull_row() {
+                    Ok(true) => {}
+                    Ok(false) => {
+                        self.done_filling = true;
+                    }
+                    Err(e) => {
+                        self.finished = true;
+                        return Some(Err(e));
+                    }
+                }
+            }
+            if self.window.is_empty() {
+                break;
+            }
+            let (row, lab, rb) = self.draw();
+            x.append(&rb);
+            rows.push(row);
+            for (c, l) in labels.iter_mut().zip(lab) {
+                c.push(l);
+            }
+        }
+        if rows.is_empty() || (rows.len() < self.batch_size && self.drop_last) {
+            self.finished = true;
+            return None;
+        }
+        Some(Ok(Minibatch { x, rows, labels }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate, open_collection, TahoeConfig};
+    use crate::util::tempdir::TempDir;
+
+    fn backend(cells_per_plate: usize) -> (TempDir, Arc<dyn Backend>) {
+        let dir = TempDir::new("loader").unwrap();
+        let mut cfg = TahoeConfig::tiny();
+        cfg.n_plates = 3;
+        cfg.cells_per_plate = cells_per_plate;
+        generate(&cfg, dir.path()).unwrap();
+        let coll = open_collection(dir.path()).unwrap();
+        (dir, Arc::new(coll))
+    }
+
+    fn collect_rows(iter: EpochIter) -> Vec<u32> {
+        let mut rows = Vec::new();
+        for mb in iter {
+            let mb = mb.unwrap();
+            assert_eq!(mb.x.n_rows, mb.rows.len());
+            for l in &mb.labels {
+                assert_eq!(l.len(), mb.rows.len());
+            }
+            rows.extend(&mb.rows);
+        }
+        rows
+    }
+
+    #[test]
+    fn epoch_covers_every_row_exactly_once() {
+        let (_d, b) = backend(300);
+        let n = b.n_rows();
+        for workers in [0usize, 3] {
+            let ds = ScDataset::new(
+                b.clone(),
+                LoaderConfig {
+                    strategy: Strategy::BlockShuffling { block_size: 8 },
+                    batch_size: 32,
+                    fetch_factor: 4,
+                    num_workers: workers,
+                    label_cols: vec!["plate".into()],
+                    ..Default::default()
+                },
+            );
+            let mut rows = collect_rows(ds.epoch(0).unwrap());
+            rows.sort_unstable();
+            assert_eq!(
+                rows,
+                (0..n as u32).collect::<Vec<_>>(),
+                "workers={workers}"
+            );
+        }
+    }
+
+    #[test]
+    fn batches_have_requested_size() {
+        let (_d, b) = backend(300);
+        let ds = ScDataset::new(
+            b,
+            LoaderConfig {
+                batch_size: 50,
+                fetch_factor: 2,
+                drop_last: true,
+                ..Default::default()
+            },
+        );
+        for mb in ds.epoch(0).unwrap() {
+            assert_eq!(mb.unwrap().x.n_rows, 50);
+        }
+    }
+
+    #[test]
+    fn streaming_preserves_order() {
+        let (_d, b) = backend(200);
+        let ds = ScDataset::new(
+            b.clone(),
+            LoaderConfig {
+                strategy: Strategy::Streaming { shuffle_buffer: 0 },
+                batch_size: 16,
+                fetch_factor: 4,
+                ..Default::default()
+            },
+        );
+        let rows = collect_rows(ds.epoch(0).unwrap());
+        assert_eq!(rows, (0..b.n_rows() as u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shuffle_buffer_covers_epoch_and_shuffles() {
+        let (_d, b) = backend(200);
+        let n = b.n_rows();
+        let ds = ScDataset::new(
+            b,
+            LoaderConfig {
+                strategy: Strategy::Streaming {
+                    shuffle_buffer: 64,
+                },
+                batch_size: 16,
+                fetch_factor: 4,
+                ..Default::default()
+            },
+        );
+        let rows = collect_rows(ds.epoch(0).unwrap());
+        assert_ne!(rows, (0..n as u32).collect::<Vec<_>>(), "must shuffle");
+        let mut sorted = rows.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..n as u32).collect::<Vec<_>>(), "must cover");
+        // locality: a small buffer cannot move rows far from their stream
+        // position on average (residence time in the window is
+        // Geometric(1/capacity), mean = capacity).
+        let mean_disp = rows
+            .iter()
+            .enumerate()
+            .map(|(pos, &r)| (pos as i64 - r as i64).unsigned_abs() as f64)
+            .sum::<f64>()
+            / rows.len() as f64;
+        assert!(mean_disp < 4.0 * 64.0, "mean displacement {mean_disp}");
+        assert!(mean_disp > 2.0, "buffer did not move anything: {mean_disp}");
+    }
+
+    #[test]
+    fn labels_align_with_rows() {
+        let (_d, b) = backend(200);
+        let plate = b.obs().column("plate").unwrap().codes.clone();
+        let drug = b.obs().column("drug").unwrap().codes.clone();
+        let ds = ScDataset::new(
+            b,
+            LoaderConfig {
+                strategy: Strategy::BlockShuffling { block_size: 4 },
+                batch_size: 32,
+                fetch_factor: 2,
+                label_cols: vec!["plate".into(), "drug".into()],
+                ..Default::default()
+            },
+        );
+        for mb in ds.epoch(0).unwrap() {
+            let mb = mb.unwrap();
+            for (j, &r) in mb.rows.iter().enumerate() {
+                assert_eq!(mb.labels[0][j], plate[r as usize]);
+                assert_eq!(mb.labels[1][j], drug[r as usize]);
+            }
+        }
+    }
+
+    #[test]
+    fn ddp_ranks_partition_epoch() {
+        let (_d, b) = backend(300);
+        let n = b.n_rows();
+        let world = 3;
+        let mut all = Vec::new();
+        for rank in 0..world {
+            let ds = ScDataset::new(
+                b.clone(),
+                LoaderConfig {
+                    strategy: Strategy::BlockShuffling { block_size: 8 },
+                    batch_size: 16,
+                    fetch_factor: 2,
+                    rank,
+                    world_size: world,
+                    seed: 99,
+                    ..Default::default()
+                },
+            );
+            all.extend(collect_rows(ds.epoch(0).unwrap()));
+        }
+        all.sort_unstable();
+        assert_eq!(all, (0..n as u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn epochs_reshuffle() {
+        let (_d, b) = backend(200);
+        let ds = ScDataset::new(
+            b,
+            LoaderConfig {
+                strategy: Strategy::BlockShuffling { block_size: 4 },
+                batch_size: 16,
+                fetch_factor: 2,
+                ..Default::default()
+            },
+        );
+        let e0 = collect_rows(ds.epoch(0).unwrap());
+        let e0b = collect_rows(ds.epoch(0).unwrap());
+        let e1 = collect_rows(ds.epoch(1).unwrap());
+        assert_eq!(e0, e0b, "same epoch must reproduce");
+        assert_ne!(e0, e1, "different epochs must differ");
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let (_d, b) = backend(200);
+        let ds = ScDataset::new(
+            b.clone(),
+            LoaderConfig {
+                batch_size: 25,
+                fetch_factor: 2,
+                ..Default::default()
+            },
+        );
+        let mut iter = ds.epoch(0).unwrap();
+        while iter.next().is_some() {}
+        let s = iter.stats();
+        assert_eq!(s.rows as usize, b.n_rows());
+        assert_eq!(s.fetches as usize, s.fetch_reports.len());
+        assert!(s.io.runs > 0 && s.io.bytes > 0);
+        assert!(s.real_fetch_ns > 0);
+        assert_eq!(s.batches, (b.n_rows() as u64).div_ceil(25));
+    }
+
+    #[test]
+    fn worker_pool_reports_errors() {
+        // Using a weighted strategy with wrong weights length fails at plan
+        // time (before workers); exercise a run-time error instead by
+        // requesting a missing label column.
+        let (_d, b) = backend(100);
+        let ds = ScDataset::new(
+            b,
+            LoaderConfig {
+                label_cols: vec!["not-a-column".into()],
+                num_workers: 2,
+                ..Default::default()
+            },
+        );
+        let mut iter = ds.epoch(0).unwrap();
+        let first = iter.next().unwrap();
+        assert!(first.is_err());
+    }
+
+    #[test]
+    fn weighted_strategy_flows_through_loader() {
+        let (_d, b) = backend(100);
+        let n = b.n_rows();
+        let mut weights = vec![0.0; n];
+        // Only the first 40 cells can be sampled.
+        for w in weights.iter_mut().take(40) {
+            *w = 1.0;
+        }
+        let ds = ScDataset::new(
+            b,
+            LoaderConfig {
+                strategy: Strategy::BlockWeighted {
+                    block_size: 4,
+                    weights,
+                },
+                batch_size: 20,
+                fetch_factor: 2,
+                ..Default::default()
+            },
+        );
+        let rows = collect_rows(ds.epoch(0).unwrap());
+        assert!(!rows.is_empty());
+        assert!(rows.iter().all(|&r| r < 40), "sampled outside support");
+    }
+
+    #[test]
+    fn class_balanced_flows_through_loader() {
+        let (_d, b) = backend(200);
+        let ds = ScDataset::new(
+            b.clone(),
+            LoaderConfig {
+                strategy: Strategy::ClassBalanced {
+                    block_size: 1,
+                    label_col: "moa_broad".into(),
+                },
+                batch_size: 32,
+                fetch_factor: 4,
+                label_cols: vec!["moa_broad".into()],
+                ..Default::default()
+            },
+        );
+        let k = b.obs().column("moa_broad").unwrap().n_categories();
+        let mut counts = vec![0usize; k];
+        for mb in ds.epoch(0).unwrap() {
+            for &c in &mb.unwrap().labels[0] {
+                counts[c as usize] += 1;
+            }
+        }
+        let total: usize = counts.iter().sum();
+        for (c, &cnt) in counts.iter().enumerate() {
+            let frac = cnt as f64 / total as f64;
+            assert!(
+                (frac - 1.0 / k as f64).abs() < 0.1,
+                "class {c} fraction {frac}"
+            );
+        }
+    }
+}

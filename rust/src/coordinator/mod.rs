@@ -1,0 +1,15 @@
+//! The scDataset coordinator — the paper's contribution (Sections 3.1–3.4,
+//! Appendices A–B): index planning with block sampling, batched fetching,
+//! sampling strategies, the fetch pipeline with worker pools and
+//! backpressure, DDP-style fetch partitioning, the minibatch-entropy
+//! theory, and the experimental (b, f) auto-tuner.
+
+pub mod autotune;
+pub mod ddp;
+pub mod entropy;
+pub mod fetch;
+pub mod loader;
+pub mod plan;
+
+pub use loader::{EpochIter, LoadStats, LoaderConfig, Minibatch, ScDataset};
+pub use plan::{build_plan, EpochPlan, Strategy};

@@ -1,0 +1,445 @@
+//! Epoch index planning — Algorithm 1 of the paper.
+//!
+//! A plan materializes the epoch's shuffled index order `I_shuffled`
+//! (Algorithm 1 lines 1–4; the paper notes this is cheap — ~400 MB of
+//! int32 even at 10⁸ cells) and partitions it into fetch batches of size
+//! `m·f` (line 5). Sampling strategies (§3.3) differ only in how the order
+//! is produced:
+//!
+//! * `Streaming` — identity order (optionally consumed through a shuffle
+//!   buffer downstream).
+//! * `BlockShuffling` — partition into contiguous blocks of size `b`,
+//!   shuffle the block order, concatenate. `b = 1` is true random sampling
+//!   (the AnnLoader-equivalent).
+//! * `BlockWeightedSampling` — blocks drawn **with replacement** from an
+//!   alias table over block weights (sum of member cell weights).
+//! * `ClassBalancedSampling` — block-weighted with weights `1 / freq(class)`
+//!   taken from an obs column.
+
+use anyhow::{bail, Result};
+
+use crate::store::obs::ObsFrame;
+use crate::util::rng::{AliasTable, Rng};
+
+/// How epoch order is generated (paper §3.3).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Strategy {
+    /// Sequential pass over the dataset. `shuffle_buffer` > 0 enables the
+    /// WebDataset-style rolling buffer at consumption time.
+    Streaming { shuffle_buffer: usize },
+    /// Block sampling with the given block size.
+    BlockShuffling { block_size: usize },
+    /// Block sampling with per-cell weights.
+    BlockWeighted {
+        block_size: usize,
+        weights: Vec<f64>,
+    },
+    /// Block sampling with weights `1/freq(label)` from an obs column.
+    ClassBalanced {
+        block_size: usize,
+        label_col: String,
+    },
+}
+
+impl Strategy {
+    /// True random sampling = block shuffling with b = 1.
+    pub fn true_random() -> Strategy {
+        Strategy::BlockShuffling { block_size: 1 }
+    }
+
+    pub fn block_size(&self) -> usize {
+        match self {
+            Strategy::Streaming { .. } => 1,
+            Strategy::BlockShuffling { block_size }
+            | Strategy::BlockWeighted { block_size, .. }
+            | Strategy::ClassBalanced { block_size, .. } => *block_size,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Streaming { shuffle_buffer: 0 } => "streaming",
+            Strategy::Streaming { .. } => "streaming+buffer",
+            Strategy::BlockShuffling { block_size: 1 } => "random",
+            Strategy::BlockShuffling { .. } => "block-shuffling",
+            Strategy::BlockWeighted { .. } => "block-weighted",
+            Strategy::ClassBalanced { .. } => "class-balanced",
+        }
+    }
+}
+
+/// The materialized epoch order, split into fetch batches.
+#[derive(Clone, Debug)]
+pub struct EpochPlan {
+    /// `I_shuffled` — every cell index exactly once for shuffling/streaming
+    /// strategies; with-replacement samples for weighted strategies.
+    pub order: Vec<u32>,
+    /// Fetch batch size `m·f` in rows.
+    pub fetch_rows: usize,
+    /// Minibatch size `m`.
+    pub batch_size: usize,
+    /// Whether trailing partial *minibatches* are dropped (applied at
+    /// split time, not here — a partial fetch still yields its full
+    /// minibatches).
+    pub drop_last: bool,
+}
+
+impl EpochPlan {
+    /// Number of fetch batches in the epoch (a trailing partial fetch is
+    /// always scheduled; `drop_last` only affects minibatch splitting).
+    pub fn n_fetches(&self) -> usize {
+        self.order.len().div_ceil(self.fetch_rows)
+    }
+
+    /// The (unsorted) index slice of fetch `i`.
+    pub fn fetch_indices(&self, i: usize) -> &[u32] {
+        let start = i * self.fetch_rows;
+        let end = ((i + 1) * self.fetch_rows).min(self.order.len());
+        &self.order[start..end]
+    }
+
+    /// Total rows the epoch will yield (full minibatches only if
+    /// `drop_last`).
+    pub fn epoch_rows(&self) -> usize {
+        (0..self.n_fetches()).map(|i| self.fetch_indices(i).len()).sum()
+    }
+}
+
+/// Block descriptor used during planning.
+#[derive(Clone, Copy, Debug)]
+struct Block {
+    start: u32,
+    len: u32,
+}
+
+fn blocks_of(n: usize, b: usize) -> Vec<Block> {
+    assert!(b > 0);
+    let mut out = Vec::with_capacity(n.div_ceil(b));
+    let mut s = 0usize;
+    while s < n {
+        let len = b.min(n - s);
+        out.push(Block {
+            start: s as u32,
+            len: len as u32,
+        });
+        s += len;
+    }
+    out
+}
+
+/// Build the epoch plan (Algorithm 1 lines 1–5).
+///
+/// `obs` is required for `ClassBalanced`. `epoch` perturbs the seed so each
+/// epoch gets a fresh permutation while remaining reproducible — the same
+/// (seed, epoch) always yields the same plan on every rank (the paper's
+/// broadcast-seed contract, Appendix B).
+pub fn build_plan(
+    strategy: &Strategy,
+    n: usize,
+    batch_size: usize,
+    fetch_factor: usize,
+    seed: u64,
+    epoch: u64,
+    obs: Option<&ObsFrame>,
+    drop_last: bool,
+) -> Result<EpochPlan> {
+    if n == 0 {
+        bail!("empty dataset");
+    }
+    if batch_size == 0 || fetch_factor == 0 {
+        bail!("batch_size and fetch_factor must be positive");
+    }
+    if n > u32::MAX as usize {
+        bail!("dataset too large for u32 indices");
+    }
+    let mut rng = Rng::new(seed).fork(epoch);
+    let order: Vec<u32> = match strategy {
+        Strategy::Streaming { .. } => (0..n as u32).collect(),
+        Strategy::BlockShuffling { block_size } => {
+            if *block_size == 0 {
+                bail!("block_size must be positive");
+            }
+            let mut blocks = blocks_of(n, *block_size);
+            rng.shuffle(&mut blocks);
+            let mut order = Vec::with_capacity(n);
+            for blk in blocks {
+                order.extend(blk.start..blk.start + blk.len);
+            }
+            order
+        }
+        Strategy::BlockWeighted {
+            block_size,
+            weights,
+        } => {
+            if weights.len() != n {
+                bail!("weights length {} != dataset size {n}", weights.len());
+            }
+            sample_weighted_blocks(n, *block_size, weights, &mut rng)?
+        }
+        Strategy::ClassBalanced {
+            block_size,
+            label_col,
+        } => {
+            let obs = obs.ok_or_else(|| {
+                anyhow::anyhow!("ClassBalanced requires obs metadata")
+            })?;
+            let col = obs.req_column(label_col)?;
+            let dist = col.distribution();
+            let weights: Vec<f64> = col
+                .codes
+                .iter()
+                .map(|&c| {
+                    let p = dist[c as usize];
+                    if p > 0.0 {
+                        1.0 / p
+                    } else {
+                        0.0
+                    }
+                })
+                .collect();
+            sample_weighted_blocks(n, *block_size, &weights, &mut rng)?
+        }
+    };
+    Ok(EpochPlan {
+        order,
+        fetch_rows: batch_size * fetch_factor,
+        batch_size,
+        drop_last,
+    })
+}
+
+/// Draw ~n/b blocks with replacement, proportional to block weight, and
+/// concatenate their member indices (one "epoch-equivalent" of samples).
+fn sample_weighted_blocks(
+    n: usize,
+    block_size: usize,
+    cell_weights: &[f64],
+    rng: &mut Rng,
+) -> Result<Vec<u32>> {
+    if block_size == 0 {
+        bail!("block_size must be positive");
+    }
+    let blocks = blocks_of(n, block_size);
+    let block_weights: Vec<f64> = blocks
+        .iter()
+        .map(|b| {
+            cell_weights[b.start as usize..(b.start + b.len) as usize]
+                .iter()
+                .sum()
+        })
+        .collect();
+    let table = AliasTable::new(&block_weights);
+    let draws = n.div_ceil(block_size);
+    let mut order = Vec::with_capacity(draws * block_size);
+    for _ in 0..draws {
+        let b = &blocks[table.sample(rng) as usize];
+        order.extend(b.start..b.start + b.len);
+    }
+    Ok(order)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::store::obs::{ObsColumn, ObsFrame};
+    use crate::util::proptest::check;
+
+    fn plan(strategy: &Strategy, n: usize, m: usize, f: usize) -> EpochPlan {
+        build_plan(strategy, n, m, f, 42, 0, None, false).unwrap()
+    }
+
+    #[test]
+    fn streaming_is_identity() {
+        let p = plan(&Strategy::Streaming { shuffle_buffer: 0 }, 100, 8, 2);
+        assert_eq!(p.order, (0..100).collect::<Vec<u32>>());
+        assert_eq!(p.n_fetches(), 7); // ceil(100/16)
+        assert_eq!(p.fetch_indices(6).len(), 4);
+        assert_eq!(p.epoch_rows(), 100);
+    }
+
+    #[test]
+    fn block_shuffle_is_permutation() {
+        for (n, b) in [(100, 16), (100, 1), (100, 100), (97, 8), (5, 7)] {
+            let p = plan(&Strategy::BlockShuffling { block_size: b }, n, 4, 2);
+            let mut sorted = p.order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..n as u32).collect::<Vec<_>>(), "n={n} b={b}");
+        }
+    }
+
+    #[test]
+    fn block_shuffle_preserves_intra_block_contiguity() {
+        let b = 16;
+        let p = plan(&Strategy::BlockShuffling { block_size: b }, 160, 4, 2);
+        // Every aligned block-start position must begin a contiguous run of b.
+        for chunk in p.order.chunks(b) {
+            for w in chunk.windows(2) {
+                assert_eq!(w[1], w[0] + 1, "block interior must be contiguous");
+            }
+            assert_eq!(chunk[0] % b as u32, 0, "runs must be block-aligned");
+        }
+    }
+
+    #[test]
+    fn block_shuffle_actually_shuffles() {
+        let p = plan(&Strategy::BlockShuffling { block_size: 4 }, 1000, 4, 2);
+        assert_ne!(p.order, (0..1000).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn epochs_differ_seeds_reproduce() {
+        let s = Strategy::BlockShuffling { block_size: 4 };
+        let a = build_plan(&s, 200, 4, 2, 7, 0, None, false).unwrap();
+        let b = build_plan(&s, 200, 4, 2, 7, 0, None, false).unwrap();
+        let c = build_plan(&s, 200, 4, 2, 7, 1, None, false).unwrap();
+        let d = build_plan(&s, 200, 4, 2, 8, 0, None, false).unwrap();
+        assert_eq!(a.order, b.order);
+        assert_ne!(a.order, c.order);
+        assert_ne!(a.order, d.order);
+    }
+
+    #[test]
+    fn drop_last_keeps_partial_fetch() {
+        // drop_last drops partial *minibatches* downstream; the plan must
+        // still schedule the trailing partial fetch (a fetch can hold many
+        // complete minibatches even when itself partial).
+        let s = Strategy::Streaming { shuffle_buffer: 0 };
+        let p = build_plan(&s, 100, 8, 2, 1, 0, None, true).unwrap();
+        assert_eq!(p.n_fetches(), 7);
+        assert_eq!(p.epoch_rows(), 100);
+    }
+
+    #[test]
+    fn weighted_prefers_heavy_blocks() {
+        let n = 1000;
+        let mut weights = vec![1.0; n];
+        for w in weights.iter_mut().take(100) {
+            *w = 50.0; // first 100 cells heavily weighted
+        }
+        let s = Strategy::BlockWeighted {
+            block_size: 10,
+            weights,
+        };
+        let p = plan(&s, n, 10, 1);
+        let heavy = p.order.iter().filter(|&&i| i < 100).count() as f64 / p.order.len() as f64;
+        // heavy fraction should far exceed the unweighted 10%
+        assert!(heavy > 0.5, "heavy fraction {heavy}");
+    }
+
+    #[test]
+    fn class_balanced_equalizes() {
+        // 90% class 0, 10% class 1 -> balanced sampling should pull class 1
+        // to roughly half.
+        let n = 2000;
+        let codes: Vec<u16> = (0..n).map(|i| u16::from(i % 10 == 0)).collect();
+        let mut obs = ObsFrame::new(n);
+        obs.push(
+            ObsColumn::new("y", vec!["a".into(), "b".into()], codes.clone()).unwrap(),
+        )
+        .unwrap();
+        let s = Strategy::ClassBalanced {
+            block_size: 1,
+            label_col: "y".into(),
+        };
+        let p = build_plan(&s, n, 10, 1, 3, 0, Some(&obs), false).unwrap();
+        let frac1 = p
+            .order
+            .iter()
+            .filter(|&&i| codes[i as usize] == 1)
+            .count() as f64
+            / p.order.len() as f64;
+        assert!((frac1 - 0.5).abs() < 0.1, "class-1 fraction {frac1}");
+    }
+
+    #[test]
+    fn class_balanced_requires_obs() {
+        let s = Strategy::ClassBalanced {
+            block_size: 1,
+            label_col: "y".into(),
+        };
+        assert!(build_plan(&s, 10, 2, 1, 0, 0, None, false).is_err());
+    }
+
+    #[test]
+    fn rejects_degenerate_params() {
+        let s = Strategy::true_random();
+        assert!(build_plan(&s, 0, 4, 1, 0, 0, None, false).is_err());
+        assert!(build_plan(&s, 10, 0, 1, 0, 0, None, false).is_err());
+        assert!(build_plan(&s, 10, 4, 0, 0, 0, None, false).is_err());
+        let s = Strategy::BlockShuffling { block_size: 0 };
+        assert!(build_plan(&s, 10, 4, 1, 0, 0, None, false).is_err());
+        let s = Strategy::BlockWeighted {
+            block_size: 2,
+            weights: vec![1.0; 3],
+        };
+        assert!(build_plan(&s, 10, 4, 1, 0, 0, None, false).is_err());
+    }
+
+    #[test]
+    fn strategy_names() {
+        assert_eq!(Strategy::true_random().name(), "random");
+        assert_eq!(
+            Strategy::Streaming { shuffle_buffer: 0 }.name(),
+            "streaming"
+        );
+        assert_eq!(
+            Strategy::Streaming {
+                shuffle_buffer: 100
+            }
+            .name(),
+            "streaming+buffer"
+        );
+        assert_eq!(
+            Strategy::BlockShuffling { block_size: 16 }.name(),
+            "block-shuffling"
+        );
+    }
+
+    #[test]
+    fn prop_block_shuffle_permutation_invariant() {
+        check("plan-permutation", 64, |rng| {
+            let n = rng.range(1, 500);
+            let b = rng.range(1, 40);
+            let m = rng.range(1, 17);
+            let f = rng.range(1, 9);
+            let seed = rng.next_u64();
+            let s = Strategy::BlockShuffling { block_size: b };
+            let p = build_plan(&s, n, m, f, seed, 0, None, false)
+                .map_err(|e| e.to_string())?;
+            let mut sorted = p.order.clone();
+            sorted.sort_unstable();
+            prop_assert!(
+                sorted == (0..n as u32).collect::<Vec<_>>(),
+                "not a permutation for n={n} b={b}"
+            );
+            // fetch batches tile the order exactly
+            let total: usize = (0..p.n_fetches()).map(|i| p.fetch_indices(i).len()).sum();
+            prop_assert!(total == n, "fetch tiling lost rows: {total} != {n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_weighted_epoch_length_close_to_n() {
+        check("weighted-length", 32, |rng| {
+            let n = rng.range(10, 400);
+            let b = rng.range(1, 20);
+            let weights: Vec<f64> = (0..n).map(|_| rng.f64() + 0.01).collect();
+            let s = Strategy::BlockWeighted {
+                block_size: b,
+                weights,
+            };
+            let p = build_plan(&s, n, 4, 2, rng.next_u64(), 0, None, false)
+                .map_err(|e| e.to_string())?;
+            // draws = ceil(n/b) blocks, each ≤ b cells
+            prop_assert!(
+                p.order.len() <= n.div_ceil(b) * b && p.order.len() >= n.div_ceil(b),
+                "epoch length {} out of range for n={n} b={b}",
+                p.order.len()
+            );
+            prop_assert!(p.order.iter().all(|&i| (i as usize) < n), "index range");
+            Ok(())
+        });
+    }
+}

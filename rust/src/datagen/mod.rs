@@ -1,0 +1,23 @@
+//! Synthetic Tahoe-mini dataset generator.
+//!
+//! The paper evaluates on Tahoe-100M (100M cells × 62,710 genes, 14 plate
+//! files, ~2,000 cells per (cell line × drug × dosage) condition, cells of
+//! one condition stored contiguously). That dataset is a 314 GB download we
+//! substitute with a structurally faithful generator (DESIGN.md §3): every
+//! loading-path phenomenon the paper measures is *layout*-driven — plate
+//! files, condition-contiguous rows, sparse CSR chunks — and every learning
+//! phenomenon is *label-hierarchy*-driven (cell line ≫ drug signal, MoA as
+//! a drug partition). Both are reproduced here at configurable scale.
+//!
+//! Expression model: each condition (cell line, drug, dosage) has a gene
+//! profile `p_cond ∝ base ⊙ exp(cl_effect + dose · drug_effect)`; a cell
+//! draws `nnz ~ Poisson(mean_nnz)` transcripts from `Cat(p_cond)` (the
+//! standard multinomial view of scRNA-seq counts). Cell-line effects are
+//! strong, drug effects weaker — so a linear probe reproduces the paper's
+//! task ordering (cell line easiest, drug hardest, MoA in between).
+
+pub mod tahoe;
+
+pub use tahoe::{
+    generate, open_collection, open_collection_subset, open_train_test, TahoeConfig,
+};

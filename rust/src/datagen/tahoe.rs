@@ -1,0 +1,572 @@
+//! Tahoe-mini generator implementation. See module docs in `datagen/mod.rs`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::store::anndata::{SparseChunkStore, StoreWriter};
+use crate::store::collection::PlateCollection;
+use crate::store::obs::{ObsColumn, ObsFrame};
+use crate::util::json::Json;
+use crate::util::rng::{AliasTable, Rng};
+
+/// Generator parameters. Defaults give a ~700k-cell, ~280 MB dataset that
+/// mirrors Tahoe-100M's structure at 1/143 the cell count.
+#[derive(Clone, Debug)]
+pub struct TahoeConfig {
+    pub n_plates: usize,
+    pub cells_per_plate: usize,
+    pub n_genes: usize,
+    pub n_cell_lines: usize,
+    pub n_drugs: usize,
+    pub n_dosages: usize,
+    pub n_moa_broad: usize,
+    pub n_moa_fine: usize,
+    /// Mean transcripts (nonzeros) per cell.
+    pub mean_nnz: f64,
+    /// Rows per compressed storage chunk (HDF5-chunk analogue).
+    pub chunk_rows: usize,
+    pub compress: bool,
+    pub seed: u64,
+}
+
+impl Default for TahoeConfig {
+    fn default() -> TahoeConfig {
+        TahoeConfig {
+            n_plates: 14,
+            cells_per_plate: 50_000,
+            n_genes: 512,
+            n_cell_lines: 20,
+            n_drugs: 38,
+            n_dosages: 3,
+            n_moa_broad: 4,
+            n_moa_fine: 12,
+            mean_nnz: 50.0,
+            chunk_rows: 256, // §Perf: 256 balances scattered-block decompress waste vs chunk-table overhead (see hotpath bench ablation)
+            compress: true,
+            seed: 7,
+        }
+    }
+}
+
+impl TahoeConfig {
+    /// A tiny configuration for unit/integration tests (~8k cells, <2 MB).
+    pub fn tiny() -> TahoeConfig {
+        TahoeConfig {
+            n_plates: 4,
+            cells_per_plate: 2_000,
+            n_genes: 64,
+            n_cell_lines: 6,
+            n_drugs: 10,
+            n_dosages: 3,
+            n_moa_broad: 3,
+            n_moa_fine: 5,
+            mean_nnz: 12.0,
+            chunk_rows: 128,
+            compress: true,
+            seed: 7,
+        }
+    }
+
+    pub fn total_cells(&self) -> usize {
+        self.n_plates * self.cells_per_plate
+    }
+
+    pub fn n_conditions(&self) -> usize {
+        self.n_cell_lines * self.n_drugs * self.n_dosages
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.n_plates < 2 {
+            bail!("need ≥2 plates (train + held-out test plate)");
+        }
+        if self.n_moa_fine > self.n_drugs || self.n_moa_broad > self.n_moa_fine {
+            bail!("need moa_broad ≤ moa_fine ≤ drugs");
+        }
+        if self.n_genes < 8 || self.n_cell_lines < 2 || self.n_drugs < 2 {
+            bail!("degenerate config");
+        }
+        Ok(())
+    }
+}
+
+/// One experimental condition.
+#[derive(Clone, Copy, Debug)]
+struct Condition {
+    cell_line: u16,
+    drug: u16,
+    dosage: u16,
+}
+
+/// Per-condition expression profiles (alias tables over genes).
+struct Profiles {
+    /// Lazily built alias tables, one per condition index.
+    tables: Vec<Option<AliasTable>>,
+    base: Vec<f64>,
+    cl_effect: Vec<Vec<f64>>,   // [cell_line][gene]
+    drug_effect: Vec<Vec<f64>>, // [drug][gene]
+    n_dosages: usize,
+}
+
+impl Profiles {
+    fn new(cfg: &TahoeConfig, rng: &mut Rng) -> Profiles {
+        let g = cfg.n_genes;
+        // Power-law-ish baseline (few highly expressed genes).
+        let base: Vec<f64> = (0..g).map(|_| rng.gamma(0.6, 1.0) + 1e-3).collect();
+        // Strong sparse cell-line signatures: ~10% of genes up/down 8x.
+        let cl_effect: Vec<Vec<f64>> = (0..cfg.n_cell_lines)
+            .map(|_| {
+                (0..g)
+                    .map(|_| {
+                        if rng.bernoulli(0.10) {
+                            if rng.bernoulli(0.5) {
+                                2.1
+                            } else {
+                                -2.1
+                            }
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        // Weaker sparse drug signatures: ~5% of genes up/down ~2.2x.
+        let drug_effect: Vec<Vec<f64>> = (0..cfg.n_drugs)
+            .map(|_| {
+                (0..g)
+                    .map(|_| {
+                        if rng.bernoulli(0.05) {
+                            if rng.bernoulli(0.5) {
+                                0.8
+                            } else {
+                                -0.8
+                            }
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        Profiles {
+            tables: vec![None; cfg.n_conditions()],
+            base,
+            cl_effect,
+            drug_effect,
+            n_dosages: cfg.n_dosages,
+        }
+    }
+
+    fn cond_index(&self, c: Condition, n_drugs: usize) -> usize {
+        (c.cell_line as usize * n_drugs + c.drug as usize) * self.n_dosages
+            + c.dosage as usize
+    }
+
+    fn table(&mut self, c: Condition, n_drugs: usize) -> &AliasTable {
+        let idx = self.cond_index(c, n_drugs);
+        if self.tables[idx].is_none() {
+            let dose = (c.dosage as f64 + 1.0) / self.n_dosages as f64;
+            let w: Vec<f64> = self
+                .base
+                .iter()
+                .enumerate()
+                .map(|(g, &b)| {
+                    b * (self.cl_effect[c.cell_line as usize][g]
+                        + dose * self.drug_effect[c.drug as usize][g])
+                        .exp()
+                })
+                .collect();
+            self.tables[idx] = Some(AliasTable::new(&w));
+        }
+        self.tables[idx].as_ref().unwrap()
+    }
+}
+
+/// Sample one cell's sparse counts from a condition profile.
+fn sample_cell(
+    profiles: &mut Profiles,
+    cond: Condition,
+    n_drugs: usize,
+    n_genes: usize,
+    mean_nnz: f64,
+    rng: &mut Rng,
+    counts_scratch: &mut Vec<f32>,
+) -> (Vec<u32>, Vec<f32>) {
+    counts_scratch.clear();
+    counts_scratch.resize(n_genes, 0.0);
+    let n_tx = rng.poisson(mean_nnz).max(1);
+    let table = profiles.table(cond, n_drugs);
+    for _ in 0..n_tx {
+        let g = table.sample(rng) as usize;
+        counts_scratch[g] += 1.0;
+    }
+    let mut cols = Vec::new();
+    let mut vals = Vec::new();
+    for (g, &v) in counts_scratch.iter().enumerate() {
+        if v > 0.0 {
+            cols.push(g as u32);
+            vals.push(v);
+        }
+    }
+    (cols, vals)
+}
+
+/// Build the per-plate condition schedule. Plates 0..n-2 receive conditions
+/// round-robin (each plate sees a *subset* of conditions — the plate-scale
+/// heterogeneity driving the paper's streaming bias). The last plate cycles
+/// through **all** conditions so it contains at least one occurrence of
+/// every cell line and drug (the paper's held-out plate-14 property).
+fn plate_conditions(cfg: &TahoeConfig, plate: usize) -> Vec<Condition> {
+    let drugs: Vec<usize> = if plate == cfg.n_plates - 1 {
+        (0..cfg.n_drugs).collect()
+    } else {
+        // Each train plate receives a disjoint drug subset (as in
+        // Tahoe-100M, where plates correspond to drug panels).
+        let train_plates = cfg.n_plates - 1;
+        (0..cfg.n_drugs)
+            .filter(|d| d % train_plates == plate)
+            .collect()
+    };
+    let mut conds = Vec::new();
+    for cl in 0..cfg.n_cell_lines {
+        for &d in &drugs {
+            for dos in 0..cfg.n_dosages {
+                conds.push(Condition {
+                    cell_line: cl as u16,
+                    drug: d as u16,
+                    dosage: dos as u16,
+                });
+            }
+        }
+    }
+    conds
+}
+
+/// Drug → MoA mapping: drugs are partitioned into fine MoA classes, which
+/// nest into broad MoA classes.
+fn moa_maps(cfg: &TahoeConfig) -> (Vec<u16>, Vec<u16>) {
+    let fine_of_drug: Vec<u16> = (0..cfg.n_drugs)
+        .map(|d| (d % cfg.n_moa_fine) as u16)
+        .collect();
+    let broad_of_fine: Vec<u16> = (0..cfg.n_moa_fine)
+        .map(|f| (f % cfg.n_moa_broad) as u16)
+        .collect();
+    let broad_of_drug = fine_of_drug
+        .iter()
+        .map(|&f| broad_of_fine[f as usize])
+        .collect();
+    (fine_of_drug, broad_of_drug)
+}
+
+fn category_names(prefix: &str, n: usize) -> Vec<String> {
+    (0..n).map(|i| format!("{prefix}{i}")).collect()
+}
+
+/// Generate the dataset into `dir` (one `.scs` per plate + `dataset.json`).
+/// Returns the plate paths.
+pub fn generate(cfg: &TahoeConfig, dir: impl AsRef<Path>) -> Result<Vec<PathBuf>> {
+    cfg.validate()?;
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir).with_context(|| format!("mkdir {}", dir.display()))?;
+    let mut root_rng = Rng::new(cfg.seed);
+    let mut profiles = Profiles::new(cfg, &mut root_rng);
+    let (fine_of_drug, broad_of_drug) = moa_maps(cfg);
+    let mut paths = Vec::new();
+    let mut scratch = Vec::new();
+    for plate in 0..cfg.n_plates {
+        let mut rng = root_rng.fork(1000 + plate as u64);
+        let conds = plate_conditions(cfg, plate);
+        let per_cond = (cfg.cells_per_plate / conds.len()).max(1);
+        let path = dir.join(format!("plate{plate:02}.scs"));
+        let mut w = StoreWriter::create(&path, cfg.n_genes, cfg.chunk_rows, cfg.compress)?;
+        let mut cl_codes = Vec::new();
+        let mut drug_codes = Vec::new();
+        let mut dos_codes = Vec::new();
+        let mut fine_codes = Vec::new();
+        let mut broad_codes = Vec::new();
+        let mut written = 0usize;
+        'outer: loop {
+            // Cells of one condition are contiguous (the paper's layout).
+            for &cond in &conds {
+                for _ in 0..per_cond {
+                    if written == cfg.cells_per_plate {
+                        break 'outer;
+                    }
+                    let (cols, vals) = sample_cell(
+                        &mut profiles,
+                        cond,
+                        cfg.n_drugs,
+                        cfg.n_genes,
+                        cfg.mean_nnz,
+                        &mut rng,
+                        &mut scratch,
+                    );
+                    w.push_row(&cols, &vals)?;
+                    cl_codes.push(cond.cell_line);
+                    drug_codes.push(cond.drug);
+                    dos_codes.push(cond.dosage);
+                    fine_codes.push(fine_of_drug[cond.drug as usize]);
+                    broad_codes.push(broad_of_drug[cond.drug as usize]);
+                    written += 1;
+                }
+            }
+            if written == cfg.cells_per_plate {
+                break;
+            }
+        }
+        let n = written;
+        let mut obs = ObsFrame::new(n);
+        obs.push(ObsColumn::new(
+            "plate",
+            vec![format!("plate{plate:02}")],
+            vec![0; n],
+        )?)?;
+        obs.push(ObsColumn::new(
+            "cell_line",
+            category_names("CL", cfg.n_cell_lines),
+            cl_codes,
+        )?)?;
+        obs.push(ObsColumn::new(
+            "drug",
+            category_names("drug", cfg.n_drugs),
+            drug_codes,
+        )?)?;
+        obs.push(ObsColumn::new(
+            "dosage",
+            category_names("dose", cfg.n_dosages),
+            dos_codes,
+        )?)?;
+        obs.push(ObsColumn::new(
+            "moa_fine",
+            category_names("moaF", cfg.n_moa_fine),
+            fine_codes,
+        )?)?;
+        obs.push(ObsColumn::new(
+            "moa_broad",
+            category_names("moaB", cfg.n_moa_broad),
+            broad_codes,
+        )?)?;
+        paths.push(w.finish(&obs)?);
+    }
+    // dataset manifest
+    let mut meta = Json::obj();
+    meta.set("format", Json::Str("tahoe-mini/scs".into()))
+        .set("n_plates", Json::Num(cfg.n_plates as f64))
+        .set("cells_per_plate", Json::Num(cfg.cells_per_plate as f64))
+        .set("n_genes", Json::Num(cfg.n_genes as f64))
+        .set("n_cell_lines", Json::Num(cfg.n_cell_lines as f64))
+        .set("n_drugs", Json::Num(cfg.n_drugs as f64))
+        .set("n_dosages", Json::Num(cfg.n_dosages as f64))
+        .set("n_moa_broad", Json::Num(cfg.n_moa_broad as f64))
+        .set("n_moa_fine", Json::Num(cfg.n_moa_fine as f64))
+        .set("mean_nnz", Json::Num(cfg.mean_nnz))
+        .set("chunk_rows", Json::Num(cfg.chunk_rows as f64))
+        .set("seed", Json::Num(cfg.seed as f64))
+        .set(
+            "plates",
+            Json::Arr(
+                paths
+                    .iter()
+                    .map(|p| Json::Str(p.file_name().unwrap().to_string_lossy().into()))
+                    .collect(),
+            ),
+        );
+    std::fs::write(dir.join("dataset.json"), meta.to_pretty())?;
+    Ok(paths)
+}
+
+/// Open a generated dataset directory as a lazy plate collection.
+pub fn open_collection(dir: impl AsRef<Path>) -> Result<PlateCollection<SparseChunkStore>> {
+    open_collection_subset(dir, None)
+}
+
+/// Open a subset of plates (by plate index). `None` opens all. Used for
+/// the paper's split: plates 0..n−2 train, last plate test (§4.4).
+pub fn open_collection_subset(
+    dir: impl AsRef<Path>,
+    plates: Option<std::ops::Range<usize>>,
+) -> Result<PlateCollection<SparseChunkStore>> {
+    let dir = dir.as_ref();
+    let meta_path = dir.join("dataset.json");
+    let meta = Json::parse(
+        &std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("read {}", meta_path.display()))?,
+    )?;
+    let names = meta
+        .req("plates")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("plates must be an array"))?;
+    let range = plates.unwrap_or(0..names.len());
+    if range.end > names.len() || range.is_empty() {
+        anyhow::bail!(
+            "plate range {range:?} invalid for {} plates",
+            names.len()
+        );
+    }
+    let mut stores = Vec::with_capacity(range.len());
+    for p in &names[range] {
+        let name = p
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("plate entry must be a string"))?;
+        stores.push(SparseChunkStore::open(dir.join(name))?);
+    }
+    PlateCollection::new(stores)
+}
+
+/// The paper's train/test split: (plates 0..n−1, last plate).
+pub fn open_train_test(
+    dir: impl AsRef<Path>,
+) -> Result<(
+    PlateCollection<SparseChunkStore>,
+    PlateCollection<SparseChunkStore>,
+)> {
+    let dir = dir.as_ref();
+    let all = open_collection(dir)?;
+    let n = all.n_plates();
+    if n < 2 {
+        anyhow::bail!("need ≥2 plates for a train/test split");
+    }
+    let train = open_collection_subset(dir, Some(0..n - 1))?;
+    let test = open_collection_subset(dir, Some(n - 1..n))?;
+    Ok((train, test))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::Backend;
+    use crate::util::tempdir::TempDir;
+
+    fn tiny_dir() -> (TempDir, PlateCollection<SparseChunkStore>) {
+        let dir = TempDir::new("tahoe").unwrap();
+        let cfg = TahoeConfig::tiny();
+        generate(&cfg, dir.path()).unwrap();
+        let coll = open_collection(dir.path()).unwrap();
+        (dir, coll)
+    }
+
+    #[test]
+    fn generates_expected_shape() {
+        let (_d, coll) = tiny_dir();
+        let cfg = TahoeConfig::tiny();
+        assert_eq!(coll.n_plates(), cfg.n_plates);
+        assert_eq!(coll.n_rows(), cfg.total_cells());
+        assert_eq!(coll.n_cols(), cfg.n_genes);
+        for name in ["plate", "cell_line", "drug", "dosage", "moa_fine", "moa_broad"] {
+            assert!(coll.obs().column(name).is_some(), "missing {name}");
+        }
+        assert_eq!(
+            coll.obs().column("plate").unwrap().n_categories(),
+            cfg.n_plates
+        );
+    }
+
+    #[test]
+    fn rows_have_counts() {
+        let (_d, coll) = tiny_dir();
+        let got = coll.fetch_rows(&[0, 1, 2, 3, 4]).unwrap().x;
+        got.validate().unwrap();
+        for r in 0..5 {
+            let (idx, vals) = got.row(r);
+            assert!(!idx.is_empty(), "row {r} empty");
+            assert!(vals.iter().all(|&v| v >= 1.0 && v.fract() == 0.0));
+        }
+    }
+
+    #[test]
+    fn last_plate_covers_all_cell_lines_and_drugs() {
+        let (_d, coll) = tiny_dir();
+        let cfg = TahoeConfig::tiny();
+        let (start, end) = coll.plate_range(cfg.n_plates - 1);
+        let cl = &coll.obs().column("cell_line").unwrap().codes[start..end];
+        let drugs = &coll.obs().column("drug").unwrap().codes[start..end];
+        let mut cl_seen = vec![false; cfg.n_cell_lines];
+        let mut drug_seen = vec![false; cfg.n_drugs];
+        for (&c, &d) in cl.iter().zip(drugs) {
+            cl_seen[c as usize] = true;
+            drug_seen[d as usize] = true;
+        }
+        assert!(cl_seen.iter().all(|&s| s), "missing cell line in test plate");
+        assert!(drug_seen.iter().all(|&s| s), "missing drug in test plate");
+    }
+
+    #[test]
+    fn adjacent_cells_share_condition() {
+        // The paper's key layout property: contiguous regions are
+        // condition-homogeneous. Check that most adjacent pairs share a
+        // drug label within a plate.
+        let (_d, coll) = tiny_dir();
+        let drug = &coll.obs().column("drug").unwrap().codes;
+        let same = drug
+            .windows(2)
+            .filter(|w| w[0] == w[1])
+            .count() as f64
+            / (drug.len() - 1) as f64;
+        assert!(same > 0.9, "adjacency homogeneity too low: {same}");
+    }
+
+    #[test]
+    fn train_plates_are_heterogeneous_across_plates() {
+        // Different train plates see different condition subsets.
+        let cfg = TahoeConfig::tiny();
+        let c0 = plate_conditions(&cfg, 0);
+        let c1 = plate_conditions(&cfg, 1);
+        let d0: std::collections::HashSet<u16> = c0.iter().map(|c| c.drug).collect();
+        let d1: std::collections::HashSet<u16> = c1.iter().map(|c| c.drug).collect();
+        assert!(d0.is_disjoint(&d1), "train plates share drugs");
+        // but every plate sees every cell line
+        let cl0: std::collections::HashSet<u16> = c0.iter().map(|c| c.cell_line).collect();
+        assert_eq!(cl0.len(), cfg.n_cell_lines);
+        let last = plate_conditions(&cfg, cfg.n_plates - 1);
+        assert_eq!(last.len(), cfg.n_conditions());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let dir_a = TempDir::new("ta").unwrap();
+        let dir_b = TempDir::new("tb").unwrap();
+        let mut cfg = TahoeConfig::tiny();
+        cfg.n_plates = 2;
+        cfg.cells_per_plate = 200;
+        generate(&cfg, dir_a.path()).unwrap();
+        generate(&cfg, dir_b.path()).unwrap();
+        let a = open_collection(dir_a.path()).unwrap();
+        let b = open_collection(dir_b.path()).unwrap();
+        let idx: Vec<u32> = (0..100).collect();
+        assert_eq!(
+            a.fetch_rows(&idx).unwrap().x,
+            b.fetch_rows(&idx).unwrap().x
+        );
+    }
+
+    #[test]
+    fn moa_nests() {
+        let cfg = TahoeConfig::tiny();
+        let (fine, broad) = moa_maps(&cfg);
+        assert_eq!(fine.len(), cfg.n_drugs);
+        // same fine => same broad
+        for d1 in 0..cfg.n_drugs {
+            for d2 in 0..cfg.n_drugs {
+                if fine[d1] == fine[d2] {
+                    assert_eq!(broad[d1], broad[d2]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let mut cfg = TahoeConfig::tiny();
+        cfg.n_plates = 1;
+        assert!(generate(&cfg, "/tmp/never-used").is_err());
+        let mut cfg = TahoeConfig::tiny();
+        cfg.n_moa_fine = cfg.n_drugs + 1;
+        assert!(generate(&cfg, "/tmp/never-used").is_err());
+    }
+
+    #[test]
+    fn open_collection_missing_dir_errors() {
+        assert!(open_collection("/nonexistent/scdata-test").is_err());
+    }
+}

@@ -1,0 +1,34 @@
+//! **scdata** — reproduction of *"scDataset: Scalable Data Loading for Deep
+//! Learning on Large-Scale Single-Cell Omics"* (D'Ascenzo & Cultrera di
+//! Montesano, 2025) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! * [`coordinator`] — the paper's contribution: block sampling, batched
+//!   fetching (Algorithm 1), sampling strategies, the fetch pipeline with
+//!   worker pools and backpressure, DDP-style rank partitioning, and the
+//!   minibatch-entropy theory of §3.4.
+//! * [`store`] — storage substrates: an AnnData/HDF5-like sparse chunk
+//!   store, HuggingFace-like row groups, BioNeMo-like dense memmaps, and
+//!   the calibrated virtual-disk cost model.
+//! * [`datagen`] — the synthetic Tahoe-mini dataset.
+//! * [`baselines`] — AnnLoader, sequential streaming and shuffle-buffer
+//!   loaders the paper compares against.
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
+//!   (build-time Python, never on the data path).
+//! * [`train`] — the §4.4 linear-probe training/evaluation harness.
+//! * [`bench_harness`] — regenerates every figure and table of the paper.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod baselines;
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod datagen;
+pub mod runtime;
+pub mod store;
+pub mod train;
+pub mod util;
+
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,8 @@
+//! `scdata` launcher — thin shell over [`scdata::cli`].
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = scdata::cli::run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,193 @@
+//! AOT artifact manifest (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element type of an artifact tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// Shape + dtype of one executable argument or result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        let name = j.req("name")?.as_str().unwrap_or_default().to_string();
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("shape must be an array"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad shape element")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(j.req("dtype")?.as_str().unwrap_or("f32"))?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+/// One AOT-lowered executable.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: String,
+    pub genes: usize,
+    pub classes: usize,
+    pub batch: usize,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub tuple_output: bool,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub lr: f64,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text)?;
+        let batch = j.req("batch")?.as_usize().ok_or_else(|| anyhow!("bad batch"))?;
+        let lr = j.req("lr")?.as_f64().ok_or_else(|| anyhow!("bad lr"))?;
+        let mut entries = Vec::new();
+        for e in j
+            .req("entries")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("entries must be an array"))?
+        {
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                e.req(key)?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("{key} must be an array"))?
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect()
+            };
+            entries.push(ArtifactEntry {
+                name: e.req("name")?.as_str().unwrap_or_default().to_string(),
+                kind: e.req("kind")?.as_str().unwrap_or_default().to_string(),
+                genes: e.req("genes")?.as_usize().unwrap_or(0),
+                classes: e.req("classes")?.as_usize().unwrap_or(0),
+                batch: e.req("batch")?.as_usize().unwrap_or(0),
+                path: dir.join(e.req("path")?.as_str().unwrap_or_default()),
+                inputs: parse_specs("inputs")?,
+                outputs: parse_specs("outputs")?,
+                tuple_output: e
+                    .get("tuple_output")
+                    .and_then(|v| v.as_bool())
+                    .unwrap_or(true),
+            });
+        }
+        Ok(Manifest {
+            dir,
+            batch,
+            lr,
+            entries,
+        })
+    }
+
+    /// Find an entry by kind and shape variant.
+    pub fn find(&self, kind: &str, genes: usize, classes: usize) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.genes == genes && e.classes == classes)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact {kind} for genes={genes} classes={classes}; available: {}",
+                    self.entries
+                        .iter()
+                        .map(|e| e.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "batch": 8, "lr": 0.01,
+      "adam": {"b1": 0.9, "b2": 0.999, "eps": 1e-08},
+      "entries": [
+        {"name": "train_step_g32_c4", "kind": "train_step", "genes": 32,
+         "classes": 4, "batch": 8, "path": "train_step_g32_c4.hlo.txt",
+         "tuple_output": true,
+         "inputs": [{"name": "w", "shape": [32, 4], "dtype": "f32"},
+                    {"name": "y", "shape": [8], "dtype": "i32"}],
+         "outputs": [{"name": "w", "shape": [32, 4], "dtype": "f32"},
+                     {"name": "loss", "shape": [], "dtype": "f32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let dir = TempDir::new("mani").unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let m = Manifest::load(dir.path()).unwrap();
+        assert_eq!(m.batch, 8);
+        assert_eq!(m.lr, 0.01);
+        let e = m.find("train_step", 32, 4).unwrap();
+        assert_eq!(e.inputs[0].shape, vec![32, 4]);
+        assert_eq!(e.inputs[1].dtype, Dtype::I32);
+        assert_eq!(e.outputs[1].elements(), 1);
+        assert!(e.tuple_output);
+        assert!(m.find("train_step", 99, 4).is_err());
+        assert!(e.path.ends_with("train_step_g32_c4.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make() {
+        let dir = TempDir::new("mani").unwrap();
+        let err = Manifest::load(dir.path()).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let dir = TempDir::new("mani").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            SAMPLE.replace("\"i32\"", "\"f64\""),
+        )
+        .unwrap();
+        assert!(Manifest::load(dir.path()).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO text)
+//! and executes them from the Rust data path. Python never runs here.
+
+pub mod artifact;
+pub mod pjrt;
+
+pub use artifact::{ArtifactEntry, Dtype, Manifest, TensorSpec};
+pub use pjrt::{Executable, Runtime, Tensor};

@@ -1,0 +1,236 @@
+//! Lazy concatenation of per-plate stores (AnnData `concat(..., lazy=True)`
+//! analogue). Tahoe-100M ships as 14 plate files; the collection presents
+//! them as one indexable dataset without rewriting anything on disk —
+//! exactly the property scDataset relies on ("no format conversion").
+
+use anyhow::{bail, Result};
+
+use super::iomodel::{AccessPattern, IoReport};
+use super::obs::ObsFrame;
+use super::{Backend, CsrBatch, FetchResult};
+
+/// A row-wise concatenation of homogeneous backends.
+pub struct PlateCollection<B: Backend> {
+    plates: Vec<B>,
+    /// Cumulative row offsets; `offsets[i]` = first global row of plate i,
+    /// with a final sentinel = total rows.
+    offsets: Vec<usize>,
+    obs: ObsFrame,
+    n_cols: usize,
+    pattern: AccessPattern,
+    name: String,
+}
+
+impl<B: Backend> PlateCollection<B> {
+    pub fn new(plates: Vec<B>) -> Result<PlateCollection<B>> {
+        if plates.is_empty() {
+            bail!("empty collection");
+        }
+        let n_cols = plates[0].n_cols();
+        let pattern = plates[0].pattern();
+        for p in &plates {
+            if p.n_cols() != n_cols {
+                bail!(
+                    "plate gene-count mismatch: {} vs {n_cols}",
+                    p.n_cols()
+                );
+            }
+        }
+        let mut offsets = Vec::with_capacity(plates.len() + 1);
+        let mut total = 0usize;
+        for p in &plates {
+            offsets.push(total);
+            total += p.n_rows();
+        }
+        offsets.push(total);
+        let frames: Vec<&ObsFrame> = plates.iter().map(|p| p.obs()).collect();
+        let obs = ObsFrame::concat(&frames)?;
+        let name = format!("collection[{}×{}]", plates.len(), plates[0].name());
+        Ok(PlateCollection {
+            plates,
+            offsets,
+            obs,
+            n_cols,
+            pattern,
+            name,
+        })
+    }
+
+    pub fn n_plates(&self) -> usize {
+        self.plates.len()
+    }
+
+    /// Global row range `[start, end)` of plate `i`.
+    pub fn plate_range(&self, i: usize) -> (usize, usize) {
+        (self.offsets[i], self.offsets[i + 1])
+    }
+
+    /// Which plate a global row belongs to (binary search).
+    pub fn plate_of(&self, row: usize) -> usize {
+        debug_assert!(row < *self.offsets.last().unwrap());
+        match self.offsets.binary_search(&row) {
+            Ok(i) if i == self.offsets.len() - 1 => i - 1,
+            Ok(i) => i,
+            Err(i) => i - 1,
+        }
+    }
+
+    pub fn plate(&self, i: usize) -> &B {
+        &self.plates[i]
+    }
+}
+
+impl<B: Backend> Backend for PlateCollection<B> {
+    fn n_rows(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn obs(&self) -> &ObsFrame {
+        &self.obs
+    }
+
+    fn pattern(&self) -> AccessPattern {
+        self.pattern
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn fetch_rows(&self, sorted: &[u32]) -> Result<FetchResult> {
+        super::check_sorted_indices(sorted, self.n_rows())?;
+        let mut x = CsrBatch::empty(self.n_cols);
+        let mut io = IoReport::default();
+        let mut i = 0usize;
+        let mut local: Vec<u32> = Vec::new();
+        while i < sorted.len() {
+            let plate = self.plate_of(sorted[i] as usize);
+            let (start, end) = self.plate_range(plate);
+            local.clear();
+            while i < sorted.len() && (sorted[i] as usize) < end {
+                local.push(sorted[i] - start as u32);
+                i += 1;
+            }
+            let part = self.plates[plate].fetch_rows(&local)?;
+            x.append(&part.x);
+            io.add(&part.io);
+        }
+        Ok(FetchResult { x, io })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::anndata::{SparseChunkStore, StoreWriter};
+    use crate::store::obs::ObsColumn;
+    use crate::util::tempdir::TempDir;
+
+    fn plate(dir: &TempDir, name: &str, n_rows: usize, plate_label: &str) -> SparseChunkStore {
+        let mut w = StoreWriter::create(dir.join(name), 8, 4, true).unwrap();
+        for r in 0..n_rows {
+            // one nonzero per row encoding the (plate, row) identity via value
+            w.push_row(&[(r % 8) as u32], &[r as f32]).unwrap();
+        }
+        let mut obs = ObsFrame::new(n_rows);
+        obs.push(
+            ObsColumn::new(
+                "plate",
+                vec![plate_label.to_string()],
+                vec![0; n_rows],
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        SparseChunkStore::open(w.finish(&obs).unwrap()).unwrap()
+    }
+
+    fn collection(dir: &TempDir) -> PlateCollection<SparseChunkStore> {
+        let plates = vec![
+            plate(dir, "p0.scs", 10, "plate0"),
+            plate(dir, "p1.scs", 6, "plate1"),
+            plate(dir, "p2.scs", 14, "plate2"),
+        ];
+        PlateCollection::new(plates).unwrap()
+    }
+
+    #[test]
+    fn concatenates_rows_and_obs() {
+        let dir = TempDir::new("coll").unwrap();
+        let c = collection(&dir);
+        assert_eq!(c.n_rows(), 30);
+        assert_eq!(c.n_plates(), 3);
+        let col = c.obs().column("plate").unwrap();
+        assert_eq!(col.categories, vec!["plate0", "plate1", "plate2"]);
+        assert_eq!(col.codes[9], 0);
+        assert_eq!(col.codes[10], 1);
+        assert_eq!(col.codes[16], 2);
+    }
+
+    #[test]
+    fn plate_of_boundaries() {
+        let dir = TempDir::new("coll").unwrap();
+        let c = collection(&dir);
+        assert_eq!(c.plate_of(0), 0);
+        assert_eq!(c.plate_of(9), 0);
+        assert_eq!(c.plate_of(10), 1);
+        assert_eq!(c.plate_of(15), 1);
+        assert_eq!(c.plate_of(16), 2);
+        assert_eq!(c.plate_of(29), 2);
+        assert_eq!(c.plate_range(1), (10, 16));
+    }
+
+    #[test]
+    fn fetch_spans_plates() {
+        let dir = TempDir::new("coll").unwrap();
+        let c = collection(&dir);
+        // rows 8..=11 span plates 0 and 1; row 20 is plate 2.
+        let got = c.fetch_rows(&[8, 9, 10, 11, 20]).unwrap();
+        assert_eq!(got.x.n_rows, 5);
+        // plate-local row values: plate0 rows 8,9 -> 8.0, 9.0; plate1 rows 0,1 -> 0.0, 1.0
+        assert_eq!(got.x.row(0).1, &[8.0]);
+        assert_eq!(got.x.row(1).1, &[9.0]);
+        assert_eq!(got.x.row(2).1, &[0.0]);
+        assert_eq!(got.x.row(3).1, &[1.0]);
+        assert_eq!(got.x.row(4).1, &[4.0]); // plate2 local row 4
+        // 3 plates touched -> 3 calls; runs: [8,9],[10,11] split per plate + [20]
+        assert_eq!(got.io.calls, 3);
+        assert_eq!(got.io.runs, 3);
+        assert_eq!(got.io.rows, 5);
+    }
+
+    #[test]
+    fn rejects_mismatched_gene_counts() {
+        let dir = TempDir::new("coll").unwrap();
+        let a = plate(&dir, "a.scs", 4, "pa");
+        let mut w = StoreWriter::create(dir.join("b.scs"), 16, 4, true).unwrap();
+        w.push_row(&[0], &[1.0]).unwrap();
+        let mut obs = ObsFrame::new(1);
+        obs.push(ObsColumn::new("plate", vec!["pb".into()], vec![0]).unwrap())
+            .unwrap();
+        let b = SparseChunkStore::open(w.finish(&obs).unwrap()).unwrap();
+        assert!(PlateCollection::new(vec![a, b]).is_err());
+    }
+
+    #[test]
+    fn empty_collection_rejected() {
+        let r: Result<PlateCollection<SparseChunkStore>> = PlateCollection::new(vec![]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn full_scan_matches_per_plate() {
+        let dir = TempDir::new("coll").unwrap();
+        let c = collection(&dir);
+        let all: Vec<u32> = (0..30).collect();
+        let got = c.fetch_rows(&all).unwrap();
+        got.x.validate().unwrap();
+        assert_eq!(got.x.n_rows, 30);
+        assert_eq!(got.io.calls, 3);
+        assert_eq!(got.io.runs, 3); // one run per plate
+    }
+}

@@ -1,0 +1,280 @@
+//! Compressed sparse row (CSR) batch type.
+//!
+//! All storage backends yield fetched cells as a [`CsrBatch`]: the cell ×
+//! gene expression submatrix in CSR layout, mirroring AnnData's sparse `X`.
+//! The coordinator reshuffles rows in memory (paper Algorithm 1, line 9)
+//! via [`CsrBatch::select_rows`], and the trainer densifies minibatches via
+//! [`CsrBatch::to_dense`] (the paper's `fetch_transform` sparse→dense step).
+
+use anyhow::{bail, Result};
+
+/// A batch of sparse rows (cells) over `n_cols` genes.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CsrBatch {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Row extents; `len == n_rows + 1`, `indptr[0] == 0`.
+    pub indptr: Vec<u64>,
+    /// Column indices per row, each row's slice sorted ascending.
+    pub indices: Vec<u32>,
+    /// Values aligned with `indices`.
+    pub data: Vec<f32>,
+}
+
+impl CsrBatch {
+    /// An empty batch with a fixed column count.
+    pub fn empty(n_cols: usize) -> CsrBatch {
+        CsrBatch {
+            n_rows: 0,
+            n_cols,
+            indptr: vec![0],
+            indices: Vec::new(),
+            data: Vec::new(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Row `i` as (indices, values) slices.
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let s = self.indptr[i] as usize;
+        let e = self.indptr[i + 1] as usize;
+        (&self.indices[s..e], &self.data[s..e])
+    }
+
+    /// Validate structural invariants (used by tests and the store reader).
+    pub fn validate(&self) -> Result<()> {
+        if self.indptr.len() != self.n_rows + 1 {
+            bail!("indptr len {} != n_rows+1 {}", self.indptr.len(), self.n_rows + 1);
+        }
+        if self.indptr[0] != 0 {
+            bail!("indptr[0] != 0");
+        }
+        if *self.indptr.last().unwrap() as usize != self.data.len()
+            || self.indices.len() != self.data.len()
+        {
+            bail!("nnz mismatch");
+        }
+        for w in self.indptr.windows(2) {
+            if w[1] < w[0] {
+                bail!("indptr not monotone");
+            }
+        }
+        for i in 0..self.n_rows {
+            let (idx, _) = self.row(i);
+            for w in idx.windows(2) {
+                if w[1] <= w[0] {
+                    bail!("row {i}: column indices not strictly increasing");
+                }
+            }
+            if let Some(&last) = idx.last() {
+                if last as usize >= self.n_cols {
+                    bail!("row {i}: column {last} out of range {}", self.n_cols);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Append all rows of `other` (must agree on `n_cols`).
+    pub fn append(&mut self, other: &CsrBatch) {
+        assert_eq!(self.n_cols, other.n_cols, "column count mismatch");
+        let base = *self.indptr.last().unwrap();
+        self.indptr
+            .extend(other.indptr.iter().skip(1).map(|&p| base + p));
+        self.indices.extend_from_slice(&other.indices);
+        self.data.extend_from_slice(&other.data);
+        self.n_rows += other.n_rows;
+    }
+
+    /// Gather rows in the given order into a new batch (the in-memory
+    /// reshuffle). `order` entries index into `self` rows and may repeat.
+    pub fn select_rows(&self, order: &[u32]) -> CsrBatch {
+        let mut nnz = 0usize;
+        for &r in order {
+            let r = r as usize;
+            nnz += (self.indptr[r + 1] - self.indptr[r]) as usize;
+        }
+        let mut out = CsrBatch {
+            n_rows: order.len(),
+            n_cols: self.n_cols,
+            indptr: Vec::with_capacity(order.len() + 1),
+            indices: Vec::with_capacity(nnz),
+            data: Vec::with_capacity(nnz),
+        };
+        out.indptr.push(0);
+        for &r in order {
+            let (idx, val) = self.row(r as usize);
+            out.indices.extend_from_slice(idx);
+            out.data.extend_from_slice(val);
+            out.indptr.push(out.indices.len() as u64);
+        }
+        out
+    }
+
+    /// A contiguous row range view copied into a new batch.
+    pub fn slice_rows(&self, start: usize, end: usize) -> CsrBatch {
+        assert!(start <= end && end <= self.n_rows);
+        let s = self.indptr[start] as usize;
+        let e = self.indptr[end] as usize;
+        CsrBatch {
+            n_rows: end - start,
+            n_cols: self.n_cols,
+            indptr: self.indptr[start..=end]
+                .iter()
+                .map(|&p| p - self.indptr[start])
+                .collect(),
+            indices: self.indices[s..e].to_vec(),
+            data: self.data[s..e].to_vec(),
+        }
+    }
+
+    /// Densify to row-major `n_rows × n_cols` f32.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.n_rows * self.n_cols];
+        self.to_dense_into(&mut out);
+        out
+    }
+
+    /// Densify into a caller-provided buffer (hot path: avoids realloc).
+    /// The buffer is zeroed and must have length `n_rows * n_cols`.
+    pub fn to_dense_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.n_rows * self.n_cols);
+        out.fill(0.0);
+        for r in 0..self.n_rows {
+            let (idx, val) = self.row(r);
+            let row = &mut out[r * self.n_cols..(r + 1) * self.n_cols];
+            for (&c, &v) in idx.iter().zip(val) {
+                row[c as usize] = v;
+            }
+        }
+    }
+
+    /// Build from dense row-major data, dropping zeros.
+    pub fn from_dense(rows: usize, cols: usize, dense: &[f32]) -> CsrBatch {
+        assert_eq!(dense.len(), rows * cols);
+        let mut b = CsrBatch::empty(cols);
+        b.n_rows = rows;
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = dense[r * cols + c];
+                if v != 0.0 {
+                    b.indices.push(c as u32);
+                    b.data.push(v);
+                }
+            }
+            b.indptr.push(b.indices.len() as u64);
+        }
+        b
+    }
+
+    /// Per-row sums (library size), used by normalization.
+    pub fn row_sums(&self) -> Vec<f32> {
+        (0..self.n_rows)
+            .map(|r| self.row(r).1.iter().sum())
+            .collect()
+    }
+
+    /// Approximate heap footprint in bytes.
+    pub fn mem_bytes(&self) -> usize {
+        self.indptr.len() * 8 + self.indices.len() * 4 + self.data.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CsrBatch {
+        // rows: [ {1: 2.0, 3: 1.0}, {}, {0: 5.0} ]  over 4 cols
+        CsrBatch {
+            n_rows: 3,
+            n_cols: 4,
+            indptr: vec![0, 2, 2, 3],
+            indices: vec![1, 3, 0],
+            data: vec![2.0, 1.0, 5.0],
+        }
+    }
+
+    #[test]
+    fn validates() {
+        sample().validate().unwrap();
+        let mut bad = sample();
+        bad.indices[1] = 9; // out of range
+        assert!(bad.validate().is_err());
+        let mut bad = sample();
+        bad.indptr = vec![0, 3, 2, 3]; // not monotone
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let b = sample();
+        let d = b.to_dense();
+        assert_eq!(
+            d,
+            vec![0.0, 2.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 5.0, 0.0, 0.0, 0.0]
+        );
+        let back = CsrBatch::from_dense(3, 4, &d);
+        assert_eq!(back, b);
+    }
+
+    #[test]
+    fn select_rows_reorders_and_repeats() {
+        let b = sample();
+        let s = b.select_rows(&[2, 0, 0]);
+        s.validate().unwrap();
+        assert_eq!(s.n_rows, 3);
+        assert_eq!(s.row(0), (&[0u32][..], &[5.0f32][..]));
+        assert_eq!(s.row(1), (&[1u32, 3][..], &[2.0f32, 1.0][..]));
+        assert_eq!(s.row(2), s.row(1));
+    }
+
+    #[test]
+    fn append_concatenates() {
+        let mut a = sample();
+        let b = sample();
+        a.append(&b);
+        a.validate().unwrap();
+        assert_eq!(a.n_rows, 6);
+        assert_eq!(a.row(3), b.row(0));
+        assert_eq!(a.nnz(), 6);
+    }
+
+    #[test]
+    fn slice_rows_window() {
+        let b = sample();
+        let s = b.slice_rows(1, 3);
+        s.validate().unwrap();
+        assert_eq!(s.n_rows, 2);
+        assert_eq!(s.row(0).0.len(), 0);
+        assert_eq!(s.row(1), (&[0u32][..], &[5.0f32][..]));
+        let all = b.slice_rows(0, 3);
+        assert_eq!(all, b);
+        let none = b.slice_rows(2, 2);
+        assert_eq!(none.n_rows, 0);
+    }
+
+    #[test]
+    fn row_sums() {
+        assert_eq!(sample().row_sums(), vec![3.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn empty_batch() {
+        let e = CsrBatch::empty(7);
+        e.validate().unwrap();
+        assert_eq!(e.to_dense().len(), 0);
+        assert_eq!(e.mem_bytes(), 8);
+    }
+
+    #[test]
+    fn dense_into_reuses_buffer() {
+        let b = sample();
+        let mut buf = vec![9.0f32; 12];
+        b.to_dense_into(&mut buf);
+        assert_eq!(buf, b.to_dense());
+    }
+}

@@ -1,0 +1,322 @@
+//! `DenseMemmapStore` — the BioNeMo-SCDL analogue (`.dms`).
+//!
+//! BioNeMo-SCDL converts AnnData into memory-mapped NumPy arrays: dense,
+//! larger on disk (1.1 TB for Tahoe-100M vs 314 GB sparse), but rows are
+//! addressable by offset arithmetic with no per-call software overhead.
+//! Appendix D shows block size still helps (contiguous rows share pages,
+//! sequential page-ins are cheap) while fetch factor does not (there is no
+//! call-level overhead to amortize).
+//!
+//! Layout: magic, header (n_rows, n_cols, payload_off, obs_off, obs_len),
+//! page-aligned dense f32 row-major payload (memory-mapped via `libc::mmap`
+//! — the offline build has no `memmap2`), then the obs block.
+
+use std::fs::File;
+use std::os::unix::fs::FileExt;
+use std::os::unix::io::AsRawFd;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::csr::CsrBatch;
+use super::iomodel::{AccessPattern, IoReport};
+use super::obs::ObsFrame;
+use super::{check_sorted_indices, contiguous_runs, Backend, FetchResult};
+
+const MAGIC: &[u8; 8] = b"SCDMS1\n\0";
+const HEADER_LEN: u64 = 48; // magic + 5 × u64
+const PAGE: u64 = 4096;
+
+/// Convert any backend into a `.dms` dense memmap file.
+pub fn convert_to_memmap(
+    src: &dyn Backend,
+    path: impl AsRef<Path>,
+    batch_rows: usize,
+) -> Result<PathBuf> {
+    use std::io::Write;
+    assert!(batch_rows > 0);
+    let path = path.as_ref().to_path_buf();
+    let mut file = File::create(&path).with_context(|| format!("create {}", path.display()))?;
+    let n_rows = src.n_rows();
+    let n_cols = src.n_cols();
+    let payload_off = (HEADER_LEN + PAGE - 1) / PAGE * PAGE;
+    let payload_len = (n_rows * n_cols * 4) as u64;
+    let obs_bytes = src.obs().serialize();
+    // header
+    let mut head = Vec::with_capacity(HEADER_LEN as usize);
+    head.extend_from_slice(MAGIC);
+    for v in [
+        n_rows as u64,
+        n_cols as u64,
+        payload_off,
+        payload_off + payload_len,
+        obs_bytes.len() as u64,
+    ] {
+        head.extend_from_slice(&v.to_le_bytes());
+    }
+    file.write_all(&head)?;
+    // payload (dense, streamed in batches)
+    file.set_len(payload_off + payload_len)?;
+    let mut start = 0usize;
+    let mut dense_buf: Vec<f32> = Vec::new();
+    while start < n_rows {
+        let end = (start + batch_rows).min(n_rows);
+        let idx: Vec<u32> = (start as u32..end as u32).collect();
+        let batch = src.fetch_rows(&idx)?.x;
+        dense_buf.resize(batch.n_rows * n_cols, 0.0);
+        batch.to_dense_into(&mut dense_buf);
+        let mut bytes = Vec::with_capacity(dense_buf.len() * 4);
+        for &v in &dense_buf {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        file.write_all_at(&bytes, payload_off + (start * n_cols * 4) as u64)?;
+        start = end;
+    }
+    // obs appended after payload
+    file.write_all_at(&obs_bytes, payload_off + payload_len)?;
+    file.sync_all().ok();
+    Ok(path)
+}
+
+/// Read-only mmap wrapper (read-only mapping is Send + Sync safe).
+struct Mmap {
+    ptr: *const u8,
+    len: usize,
+}
+
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    fn map(file: &File, len: usize) -> Result<Mmap> {
+        if len == 0 {
+            return Ok(Mmap {
+                ptr: std::ptr::null(),
+                len: 0,
+            });
+        }
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ,
+                libc::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == libc::MAP_FAILED {
+            bail!("mmap failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(Mmap {
+            ptr: ptr as *const u8,
+            len,
+        })
+    }
+
+    fn slice(&self, off: usize, len: usize) -> &[u8] {
+        assert!(off + len <= self.len);
+        unsafe { std::slice::from_raw_parts(self.ptr.add(off), len) }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        if !self.ptr.is_null() {
+            unsafe {
+                libc::munmap(self.ptr as *mut libc::c_void, self.len);
+            }
+        }
+    }
+}
+
+/// Read-only handle to a `.dms` file.
+pub struct DenseMemmapStore {
+    mmap: Mmap,
+    n_rows: usize,
+    n_cols: usize,
+    payload_off: usize,
+    obs: ObsFrame,
+}
+
+impl DenseMemmapStore {
+    pub fn open(path: impl AsRef<Path>) -> Result<DenseMemmapStore> {
+        let path = path.as_ref();
+        let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let file_len = file.metadata()?.len() as usize;
+        if (file_len as u64) < HEADER_LEN {
+            bail!("{}: too short", path.display());
+        }
+        let mut head = vec![0u8; HEADER_LEN as usize];
+        file.read_exact_at(&mut head, 0)?;
+        if &head[..8] != MAGIC {
+            bail!("{}: bad magic", path.display());
+        }
+        let u = |i: usize| {
+            u64::from_le_bytes(head[8 + i * 8..16 + i * 8].try_into().unwrap())
+        };
+        let (n_rows, n_cols, payload_off, obs_off, obs_len) =
+            (u(0) as usize, u(1) as usize, u(2) as usize, u(3) as usize, u(4) as usize);
+        if obs_off + obs_len > file_len {
+            bail!("{}: truncated", path.display());
+        }
+        let mut obs_buf = vec![0u8; obs_len];
+        file.read_exact_at(&mut obs_buf, obs_off as u64)?;
+        let obs = ObsFrame::deserialize(&obs_buf)?;
+        let mmap = Mmap::map(&file, obs_off)?; // map through the payload
+        Ok(DenseMemmapStore {
+            mmap,
+            n_rows,
+            n_cols,
+            payload_off,
+            obs,
+        })
+    }
+
+    fn row_bytes(&self) -> usize {
+        self.n_cols * 4
+    }
+
+    /// Dense row view (zero-copy from the map).
+    fn row_slice(&self, row: usize) -> &[u8] {
+        self.mmap
+            .slice(self.payload_off + row * self.row_bytes(), self.row_bytes())
+    }
+}
+
+impl Backend for DenseMemmapStore {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn obs(&self) -> &ObsFrame {
+        &self.obs
+    }
+
+    fn pattern(&self) -> AccessPattern {
+        AccessPattern::Mmap
+    }
+
+    fn name(&self) -> &str {
+        "bionemo-memmap"
+    }
+
+    fn fetch_rows(&self, sorted: &[u32]) -> Result<FetchResult> {
+        check_sorted_indices(sorted, self.n_rows)?;
+        let runs = contiguous_runs(sorted);
+        let mut x = CsrBatch::empty(self.n_cols);
+        for &row in sorted {
+            let raw = self.row_slice(row as usize);
+            for (c, chunk) in raw.chunks_exact(4).enumerate() {
+                let v = f32::from_le_bytes(chunk.try_into().unwrap());
+                if v != 0.0 {
+                    x.indices.push(c as u32);
+                    x.data.push(v);
+                }
+            }
+            x.indptr.push(x.indices.len() as u64);
+            x.n_rows += 1;
+        }
+        // Page accounting: each run of contiguous rows touches
+        // ceil(run_bytes / page) (+1 for misalignment) distinct pages.
+        let rb = self.row_bytes() as u64;
+        let pages: u64 = runs
+            .iter()
+            .map(|&(_, len)| (len as u64 * rb + PAGE - 1) / PAGE + 1)
+            .sum();
+        Ok(FetchResult {
+            x,
+            io: IoReport {
+                calls: sorted.len() as u64,
+                runs: runs.len() as u64,
+                rows: sorted.len() as u64,
+                bytes: sorted.len() as u64 * rb,
+                chunks: 0,
+                pages,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::anndata::{SparseChunkStore, StoreWriter};
+    use crate::store::obs::ObsColumn;
+    use crate::util::tempdir::TempDir;
+
+    fn source(dir: &TempDir, n_rows: usize, n_cols: usize) -> SparseChunkStore {
+        let mut w = StoreWriter::create(dir.join("src.scs"), n_cols, 4, true).unwrap();
+        for r in 0..n_rows {
+            let c = (r % n_cols) as u32;
+            w.push_row(&[c], &[(r + 1) as f32]).unwrap();
+        }
+        let mut obs = ObsFrame::new(n_rows);
+        obs.push(ObsColumn::new("plate", vec!["p".into()], vec![0; n_rows]).unwrap())
+            .unwrap();
+        SparseChunkStore::open(w.finish(&obs).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn conversion_roundtrip() {
+        let dir = TempDir::new("dms").unwrap();
+        let src = source(&dir, 19, 8);
+        let path = convert_to_memmap(&src, dir.join("t.dms"), 6).unwrap();
+        let dm = DenseMemmapStore::open(path).unwrap();
+        assert_eq!(dm.n_rows(), 19);
+        assert_eq!(dm.n_cols(), 8);
+        let all: Vec<u32> = (0..19).collect();
+        let a = src.fetch_rows(&all).unwrap().x;
+        let b = dm.fetch_rows(&all).unwrap().x;
+        assert_eq!(a, b);
+        assert_eq!(dm.obs().column("plate").unwrap().codes.len(), 19);
+    }
+
+    #[test]
+    fn page_accounting_prefers_contiguous() {
+        let dir = TempDir::new("dms").unwrap();
+        let src = source(&dir, 64, 512); // 2 KiB rows
+        let path = convert_to_memmap(&src, dir.join("t.dms"), 16).unwrap();
+        let dm = DenseMemmapStore::open(path).unwrap();
+        let contiguous: Vec<u32> = (0..16).collect();
+        let scattered: Vec<u32> = (0..16).map(|i| i * 4).collect();
+        let a = dm.fetch_rows(&contiguous).unwrap().io;
+        let b = dm.fetch_rows(&scattered).unwrap().io;
+        assert!(a.pages < b.pages, "{} !< {}", a.pages, b.pages);
+        assert_eq!(a.bytes, b.bytes);
+    }
+
+    #[test]
+    fn pattern_is_mmap() {
+        let dir = TempDir::new("dms").unwrap();
+        let src = source(&dir, 8, 8);
+        let path = convert_to_memmap(&src, dir.join("t.dms"), 4).unwrap();
+        let dm = DenseMemmapStore::open(path).unwrap();
+        assert_eq!(dm.pattern(), AccessPattern::Mmap);
+    }
+
+    #[test]
+    fn open_rejects_garbage() {
+        let dir = TempDir::new("dms").unwrap();
+        let p = dir.join("bad.dms");
+        std::fs::write(&p, b"nope").unwrap();
+        assert!(DenseMemmapStore::open(&p).is_err());
+    }
+
+    #[test]
+    fn scattered_fetch_matches_source() {
+        let dir = TempDir::new("dms").unwrap();
+        let src = source(&dir, 40, 8);
+        let path = convert_to_memmap(&src, dir.join("t.dms"), 7).unwrap();
+        let dm = DenseMemmapStore::open(path).unwrap();
+        let idx = [0u32, 5, 6, 31, 39];
+        assert_eq!(
+            src.fetch_rows(&idx).unwrap().x,
+            dm.fetch_rows(&idx).unwrap().x
+        );
+    }
+}

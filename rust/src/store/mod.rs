@@ -1,0 +1,115 @@
+//! Storage substrates.
+//!
+//! The paper evaluates three storage backends (AnnData/HDF5 in the main
+//! text; HuggingFace-Datasets and BioNeMo-SCDL in Appendix D). This module
+//! implements an on-disk analogue of each — built from scratch — behind the
+//! common [`Backend`] trait the coordinator fetches through, plus the
+//! virtual-disk cost model ([`iomodel`]) that maps access patterns back to
+//! the paper's measured cost regime.
+
+pub mod anndata;
+pub mod collection;
+pub mod csr;
+pub mod iomodel;
+pub mod memmap_dense;
+pub mod multimodal;
+pub mod obs;
+pub mod rowgroup;
+pub mod zarr_like;
+
+use anyhow::Result;
+
+pub use csr::CsrBatch;
+pub use iomodel::{AccessPattern, DiskModel, IoReport};
+pub use obs::{ObsColumn, ObsFrame};
+
+/// Data returned by one fetch call: the expression submatrix for the
+/// requested rows (in request order) plus the I/O accounting for the
+/// virtual disk.
+#[derive(Clone, Debug)]
+pub struct FetchResult {
+    pub x: CsrBatch,
+    pub io: IoReport,
+}
+
+/// An indexable on-disk cell × gene collection.
+///
+/// `fetch_rows` takes **sorted, de-duplicated** row indices — Algorithm 1
+/// line 7 sorts each fetch batch before hitting the disk precisely so that
+/// backends can coalesce contiguous runs. Backends must return rows in the
+/// given (sorted) order; the coordinator reshuffles in memory afterwards.
+pub trait Backend: Send + Sync {
+    fn n_rows(&self) -> usize;
+    fn n_cols(&self) -> usize;
+    /// Per-cell metadata (kept in memory, as in AnnData's `obs`).
+    fn obs(&self) -> &ObsFrame;
+    /// Which virtual-disk cost recipe this backend's accesses follow.
+    fn pattern(&self) -> AccessPattern;
+    /// Fetch the given sorted row indices.
+    fn fetch_rows(&self, sorted: &[u32]) -> Result<FetchResult>;
+    /// Human-readable backend name for reports.
+    fn name(&self) -> &str;
+}
+
+/// Decompose sorted indices into maximal contiguous runs `(start, len)`.
+pub fn contiguous_runs(sorted: &[u32]) -> Vec<(u32, u32)> {
+    let mut runs = Vec::new();
+    let mut it = sorted.iter();
+    let Some(&first) = it.next() else {
+        return runs;
+    };
+    let mut start = first;
+    let mut len = 1u32;
+    for &i in it {
+        if i == start + len {
+            len += 1;
+        } else {
+            runs.push((start, len));
+            start = i;
+            len = 1;
+        }
+    }
+    runs.push((start, len));
+    runs
+}
+
+/// Validate that indices are sorted ascending with no duplicates and in
+/// range. Backends call this at their boundary.
+pub fn check_sorted_indices(sorted: &[u32], n_rows: usize) -> Result<()> {
+    for w in sorted.windows(2) {
+        if w[1] <= w[0] {
+            anyhow::bail!("indices not strictly ascending: {} then {}", w[0], w[1]);
+        }
+    }
+    if let Some(&last) = sorted.last() {
+        if last as usize >= n_rows {
+            anyhow::bail!("index {last} out of range ({n_rows} rows)");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_decomposition() {
+        assert_eq!(contiguous_runs(&[]), vec![]);
+        assert_eq!(contiguous_runs(&[5]), vec![(5, 1)]);
+        assert_eq!(
+            contiguous_runs(&[0, 1, 2, 5, 6, 9]),
+            vec![(0, 3), (5, 2), (9, 1)]
+        );
+        assert_eq!(contiguous_runs(&[3, 4, 5, 6]), vec![(3, 4)]);
+    }
+
+    #[test]
+    fn sorted_check() {
+        assert!(check_sorted_indices(&[0, 1, 5], 6).is_ok());
+        assert!(check_sorted_indices(&[1, 1], 6).is_err());
+        assert!(check_sorted_indices(&[2, 1], 6).is_err());
+        assert!(check_sorted_indices(&[0, 6], 6).is_err());
+        assert!(check_sorted_indices(&[], 0).is_ok());
+    }
+}

@@ -1,0 +1,317 @@
+//! Per-cell observation metadata (the AnnData `obs` dataframe analogue).
+//!
+//! Tahoe-100M's obs columns are categorical (plate, cell line, drug, dosage,
+//! MoA). We store them as u16 codes + a category string table, kept fully in
+//! memory (2 bytes × cells × columns is small even at atlas scale) and
+//! serialized into a compact binary block inside store files.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One categorical column.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsColumn {
+    pub name: String,
+    pub categories: Vec<String>,
+    /// One code per cell; `codes[i] < categories.len()`.
+    pub codes: Vec<u16>,
+}
+
+impl ObsColumn {
+    pub fn new(name: &str, categories: Vec<String>, codes: Vec<u16>) -> Result<ObsColumn> {
+        let k = categories.len();
+        if k > u16::MAX as usize + 1 {
+            bail!("too many categories in '{name}'");
+        }
+        if let Some(&bad) = codes.iter().find(|&&c| c as usize >= k) {
+            bail!("code {bad} out of range for '{name}' ({k} categories)");
+        }
+        Ok(ObsColumn {
+            name: name.to_string(),
+            categories,
+            codes,
+        })
+    }
+
+    pub fn n_categories(&self) -> usize {
+        self.categories.len()
+    }
+
+    /// Empirical category distribution (sums to 1 over non-empty input).
+    pub fn distribution(&self) -> Vec<f64> {
+        let mut counts = vec![0usize; self.categories.len()];
+        for &c in &self.codes {
+            counts[c as usize] += 1;
+        }
+        let total = self.codes.len().max(1) as f64;
+        counts.iter().map(|&c| c as f64 / total).collect()
+    }
+}
+
+/// A set of categorical columns over the same cells.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ObsFrame {
+    pub n_rows: usize,
+    pub columns: Vec<ObsColumn>,
+}
+
+impl ObsFrame {
+    pub fn new(n_rows: usize) -> ObsFrame {
+        ObsFrame {
+            n_rows,
+            columns: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, col: ObsColumn) -> Result<()> {
+        if col.codes.len() != self.n_rows {
+            bail!(
+                "column '{}' has {} rows, frame has {}",
+                col.name,
+                col.codes.len(),
+                self.n_rows
+            );
+        }
+        if self.column(&col.name).is_some() {
+            bail!("duplicate column '{}'", col.name);
+        }
+        self.columns.push(col);
+        Ok(())
+    }
+
+    pub fn column(&self, name: &str) -> Option<&ObsColumn> {
+        self.columns.iter().find(|c| c.name == name)
+    }
+
+    pub fn req_column(&self, name: &str) -> Result<&ObsColumn> {
+        self.column(name).ok_or_else(|| {
+            anyhow!(
+                "no obs column '{name}' (have: {})",
+                self.columns
+                    .iter()
+                    .map(|c| c.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })
+    }
+
+    /// Gather codes for `rows` from the named columns (in `names` order).
+    pub fn gather(&self, names: &[String], rows: &[u32]) -> Result<Vec<Vec<u16>>> {
+        names
+            .iter()
+            .map(|n| {
+                let col = self.req_column(n)?;
+                Ok(rows.iter().map(|&r| col.codes[r as usize]).collect())
+            })
+            .collect()
+    }
+
+    /// Concatenate frames row-wise; columns must match by name and the
+    /// category tables are merged (codes remapped).
+    pub fn concat(frames: &[&ObsFrame]) -> Result<ObsFrame> {
+        let first = frames
+            .first()
+            .ok_or_else(|| anyhow!("concat of zero frames"))?;
+        let names: Vec<String> = first.columns.iter().map(|c| c.name.clone()).collect();
+        let n_rows: usize = frames.iter().map(|f| f.n_rows).sum();
+        let mut out = ObsFrame::new(n_rows);
+        for name in &names {
+            // Build merged category table.
+            let mut cat_index: BTreeMap<String, u16> = BTreeMap::new();
+            let mut categories: Vec<String> = Vec::new();
+            let mut codes: Vec<u16> = Vec::with_capacity(n_rows);
+            for f in frames {
+                let col = f.req_column(name)?;
+                let remap: Vec<u16> = col
+                    .categories
+                    .iter()
+                    .map(|c| {
+                        *cat_index.entry(c.clone()).or_insert_with(|| {
+                            categories.push(c.clone());
+                            (categories.len() - 1) as u16
+                        })
+                    })
+                    .collect();
+                codes.extend(col.codes.iter().map(|&c| remap[c as usize]));
+            }
+            out.push(ObsColumn::new(name, categories, codes)?)?;
+        }
+        Ok(out)
+    }
+
+    // ---- binary serialization (inside .scs files) -------------------------
+
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        write_u64(&mut buf, self.n_rows as u64);
+        write_u64(&mut buf, self.columns.len() as u64);
+        for col in &self.columns {
+            write_str(&mut buf, &col.name);
+            write_u64(&mut buf, col.categories.len() as u64);
+            for c in &col.categories {
+                write_str(&mut buf, c);
+            }
+            for &code in &col.codes {
+                buf.extend_from_slice(&code.to_le_bytes());
+            }
+        }
+        buf
+    }
+
+    pub fn deserialize(mut r: &[u8]) -> Result<ObsFrame> {
+        let n_rows = read_u64(&mut r)? as usize;
+        let n_cols = read_u64(&mut r)? as usize;
+        let mut frame = ObsFrame::new(n_rows);
+        for _ in 0..n_cols {
+            let name = read_str(&mut r)?;
+            let n_cat = read_u64(&mut r)? as usize;
+            let mut categories = Vec::with_capacity(n_cat);
+            for _ in 0..n_cat {
+                categories.push(read_str(&mut r)?);
+            }
+            let mut codes = vec![0u16; n_rows];
+            let need = n_rows * 2;
+            if r.len() < need {
+                bail!("obs block truncated");
+            }
+            for (i, chunk) in r[..need].chunks_exact(2).enumerate() {
+                codes[i] = u16::from_le_bytes([chunk[0], chunk[1]]);
+            }
+            r = &r[need..];
+            frame.push(ObsColumn::new(&name, categories, codes)?)?;
+        }
+        Ok(frame)
+    }
+}
+
+fn write_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn write_str(buf: &mut Vec<u8>, s: &str) {
+    write_u64(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn read_u64(r: &mut &[u8]) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b).context("short read (u64)")?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_str(r: &mut &[u8]) -> Result<String> {
+    let len = read_u64(r)? as usize;
+    if r.len() < len {
+        bail!("short read (string)");
+    }
+    let s = std::str::from_utf8(&r[..len])
+        .context("invalid utf8 in obs")?
+        .to_string();
+    *r = &r[len..];
+    Ok(s)
+}
+
+/// Write helper kept for API symmetry with readers elsewhere.
+pub fn write_all(w: &mut impl Write, frame: &ObsFrame) -> Result<()> {
+    w.write_all(&frame.serialize())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame() -> ObsFrame {
+        let mut f = ObsFrame::new(4);
+        f.push(
+            ObsColumn::new(
+                "plate",
+                vec!["p1".into(), "p2".into()],
+                vec![0, 0, 1, 1],
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        f.push(
+            ObsColumn::new(
+                "drug",
+                vec!["dmso".into(), "a".into(), "b".into()],
+                vec![0, 1, 2, 1],
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        f
+    }
+
+    #[test]
+    fn roundtrip_serialization() {
+        let f = frame();
+        let bytes = f.serialize();
+        let back = ObsFrame::deserialize(&bytes).unwrap();
+        assert_eq!(f, back);
+    }
+
+    #[test]
+    fn deserialize_rejects_truncation() {
+        let bytes = frame().serialize();
+        for cut in [1, 9, bytes.len() - 1] {
+            assert!(ObsFrame::deserialize(&bytes[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn gather_codes() {
+        let f = frame();
+        let got = f
+            .gather(&["drug".to_string(), "plate".to_string()], &[3, 0])
+            .unwrap();
+        assert_eq!(got, vec![vec![1, 0], vec![1, 0]]);
+        assert!(f.gather(&["nope".to_string()], &[0]).is_err());
+    }
+
+    #[test]
+    fn code_range_enforced() {
+        assert!(ObsColumn::new("x", vec!["a".into()], vec![0, 1]).is_err());
+    }
+
+    #[test]
+    fn row_count_enforced() {
+        let mut f = ObsFrame::new(3);
+        let col = ObsColumn::new("x", vec!["a".into()], vec![0, 0]).unwrap();
+        assert!(f.push(col).is_err());
+    }
+
+    #[test]
+    fn duplicate_column_rejected() {
+        let mut f = frame();
+        let dup = ObsColumn::new("plate", vec!["z".into()], vec![0, 0, 0, 0]).unwrap();
+        assert!(f.push(dup).is_err());
+    }
+
+    #[test]
+    fn concat_merges_categories() {
+        let mut a = ObsFrame::new(2);
+        a.push(ObsColumn::new("c", vec!["x".into(), "y".into()], vec![0, 1]).unwrap())
+            .unwrap();
+        let mut b = ObsFrame::new(2);
+        b.push(ObsColumn::new("c", vec!["y".into(), "z".into()], vec![0, 1]).unwrap())
+            .unwrap();
+        let m = ObsFrame::concat(&[&a, &b]).unwrap();
+        assert_eq!(m.n_rows, 4);
+        let col = m.column("c").unwrap();
+        assert_eq!(col.categories, vec!["x", "y", "z"]);
+        assert_eq!(col.codes, vec![0, 1, 1, 2]);
+    }
+
+    #[test]
+    fn distribution_sums_to_one() {
+        let f = frame();
+        let d = f.column("drug").unwrap().distribution();
+        assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(d, vec![0.25, 0.5, 0.25]);
+    }
+}

@@ -1,0 +1,240 @@
+//! Pure-Rust reference implementation of the L2 model (log1p-CPM →
+//! linear → softmax-CE → Adam). Two jobs:
+//!
+//! 1. cross-check the PJRT/Pallas path numerically (integration tests
+//!    assert both engines produce the same losses to f32 tolerance);
+//! 2. act as a fallback engine so loading benchmarks and examples run
+//!    even before `make artifacts`.
+//!
+//! Mirrors `python/compile/model.py` exactly (same constants, same op
+//! order within rows).
+
+/// Adam hyperparameters (kept equal to the Python side).
+pub const ADAM_B1: f32 = 0.9;
+pub const ADAM_B2: f32 = 0.999;
+pub const ADAM_EPS: f32 = 1e-8;
+pub const NORM_SCALE: f32 = 1e4;
+
+/// Model + optimizer state.
+#[derive(Clone, Debug)]
+pub struct CpuModel {
+    pub genes: usize,
+    pub classes: usize,
+    pub w: Vec<f32>,   // [genes × classes], row-major
+    pub b: Vec<f32>,   // [classes]
+    pub m_w: Vec<f32>,
+    pub v_w: Vec<f32>,
+    pub m_b: Vec<f32>,
+    pub v_b: Vec<f32>,
+    pub step: f32,
+    pub lr: f32,
+}
+
+impl CpuModel {
+    pub fn new(genes: usize, classes: usize, lr: f32, seed: u64) -> CpuModel {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let w = (0..genes * classes)
+            .map(|_| (rng.normal() * 0.01) as f32)
+            .collect();
+        CpuModel {
+            genes,
+            classes,
+            w,
+            b: vec![0.0; classes],
+            m_w: vec![0.0; genes * classes],
+            v_w: vec![0.0; genes * classes],
+            m_b: vec![0.0; classes],
+            v_b: vec![0.0; classes],
+            step: 0.0,
+            lr,
+        }
+    }
+
+    /// Overwrite parameters (e.g. from PJRT state for cross-checks).
+    pub fn set_params(&mut self, w: &[f32], b: &[f32]) {
+        self.w.copy_from_slice(w);
+        self.b.copy_from_slice(b);
+    }
+
+    /// log1p-CPM normalize a dense row-major batch in place.
+    pub fn normalize(&self, x: &mut [f32], rows: usize) {
+        debug_assert_eq!(x.len(), rows * self.genes);
+        for r in 0..rows {
+            let row = &mut x[r * self.genes..(r + 1) * self.genes];
+            let sum: f32 = row.iter().sum();
+            let scale = if sum > 0.0 { NORM_SCALE / sum } else { NORM_SCALE };
+            for v in row.iter_mut() {
+                *v = (*v * scale).ln_1p();
+            }
+        }
+    }
+
+    /// Logits for a *normalized* batch.
+    fn logits(&self, h: &[f32], rows: usize) -> Vec<f32> {
+        let (g, k) = (self.genes, self.classes);
+        let mut out = vec![0f32; rows * k];
+        for r in 0..rows {
+            let hrow = &h[r * g..(r + 1) * g];
+            let orow = &mut out[r * k..(r + 1) * k];
+            orow.copy_from_slice(&self.b);
+            for (gi, &hv) in hrow.iter().enumerate() {
+                if hv != 0.0 {
+                    let wrow = &self.w[gi * k..(gi + 1) * k];
+                    for (o, &wv) in orow.iter_mut().zip(wrow) {
+                        *o += hv * wv;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Predict logits from raw counts.
+    pub fn predict(&self, x_raw: &[f32], rows: usize) -> Vec<f32> {
+        let mut h = x_raw.to_vec();
+        self.normalize(&mut h, rows);
+        self.logits(&h, rows)
+    }
+
+    /// One Adam step on a raw-count batch; returns the mean CE loss.
+    pub fn train_step(&mut self, x_raw: &[f32], y: &[u16], rows: usize) -> f32 {
+        debug_assert_eq!(y.len(), rows);
+        let (g, k) = (self.genes, self.classes);
+        let mut h = x_raw.to_vec();
+        self.normalize(&mut h, rows);
+        let logits = self.logits(&h, rows);
+        // softmax + CE + dlogits
+        let mut dlogits = vec![0f32; rows * k];
+        let mut loss = 0f32;
+        for r in 0..rows {
+            let lrow = &logits[r * k..(r + 1) * k];
+            let max = lrow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0f32;
+            for &v in lrow {
+                denom += (v - max).exp();
+            }
+            let log_denom = denom.ln();
+            let yr = y[r] as usize;
+            loss += -(lrow[yr] - max - log_denom);
+            let drow = &mut dlogits[r * k..(r + 1) * k];
+            for (c, &v) in lrow.iter().enumerate() {
+                let p = (v - max - log_denom).exp();
+                drow[c] = (p - if c == yr { 1.0 } else { 0.0 }) / rows as f32;
+            }
+        }
+        loss /= rows as f32;
+        // backward: dW = h^T dlogits ; db = colsum(dlogits)
+        let mut dw = vec![0f32; g * k];
+        let mut db = vec![0f32; k];
+        for r in 0..rows {
+            let hrow = &h[r * g..(r + 1) * g];
+            let drow = &dlogits[r * k..(r + 1) * k];
+            for (c, &dv) in drow.iter().enumerate() {
+                db[c] += dv;
+            }
+            for (gi, &hv) in hrow.iter().enumerate() {
+                if hv != 0.0 {
+                    let wrow = &mut dw[gi * k..(gi + 1) * k];
+                    for (o, &dv) in wrow.iter_mut().zip(drow) {
+                        *o += hv * dv;
+                    }
+                }
+            }
+        }
+        // Adam
+        self.step += 1.0;
+        let bc1 = 1.0 - ADAM_B1.powf(self.step);
+        let bc2 = 1.0 - ADAM_B2.powf(self.step);
+        adam_update(&mut self.w, &mut self.m_w, &mut self.v_w, &dw, bc1, bc2, self.lr);
+        adam_update(&mut self.b, &mut self.m_b, &mut self.v_b, &db, bc1, bc2, self.lr);
+        loss
+    }
+}
+
+fn adam_update(
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    bc1: f32,
+    bc2: f32,
+    lr: f32,
+) {
+    for i in 0..p.len() {
+        m[i] = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * g[i];
+        v[i] = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * g[i] * g[i];
+        let mhat = m[i] / bc1;
+        let vhat = v[i] / bc2;
+        p[i] -= lr * mhat / (vhat.sqrt() + ADAM_EPS);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn separable_batch(rows: usize, genes: usize, classes: usize) -> (Vec<f32>, Vec<u16>) {
+        let mut x = vec![0f32; rows * genes];
+        let mut y = vec![0u16; rows];
+        let span = genes / classes;
+        for i in 0..rows {
+            let c = i % classes;
+            y[i] = c as u16;
+            for g in 0..span {
+                x[i * genes + c * span + g] = 40.0;
+            }
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn learns_separable_problem() {
+        let (g, k, m) = (32, 4, 32);
+        let mut model = CpuModel::new(g, k, 0.05, 0);
+        let (x, y) = separable_batch(m, g, k);
+        let first = model.train_step(&x, &y, m);
+        let mut last = first;
+        for _ in 0..80 {
+            last = model.train_step(&x, &y, m);
+        }
+        assert!(last < first * 0.2, "loss {first} -> {last}");
+        // predictions correct
+        let logits = model.predict(&x, m);
+        let pred = super::super::metrics::argmax_rows(&logits, k);
+        assert_eq!(pred, y);
+        assert_eq!(model.step, 81.0);
+    }
+
+    #[test]
+    fn normalization_is_scale_invariant() {
+        let model = CpuModel::new(8, 2, 0.01, 1);
+        let x: Vec<f32> = vec![1.0, 0.0, 2.0, 0.0, 3.0, 0.0, 4.0, 0.0];
+        let a = model.predict(&x, 1);
+        let x7: Vec<f32> = x.iter().map(|v| v * 7.0).collect();
+        let b = model.predict(&x7, 1);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-5, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn zero_row_is_finite() {
+        let mut model = CpuModel::new(8, 2, 0.01, 1);
+        let x = vec![0f32; 8];
+        let loss = model.train_step(&x, &[0], 1);
+        assert!(loss.is_finite());
+        assert!(model.predict(&x, 1).iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn loss_matches_log_k_at_init() {
+        // With near-zero weights the initial loss must be ≈ ln(K).
+        let (g, k, m) = (16, 5, 20);
+        let mut model = CpuModel::new(g, k, 1e-5, 2);
+        let (x, y) = separable_batch(m, g, k);
+        let loss = model.train_step(&x, &y, m);
+        // init weights are N(0, 0.01) against O(8) normalized features, so
+        // allow a modest deviation from exactly ln(K)
+        assert!((loss - (k as f32).ln()).abs() < 0.2, "loss {loss}");
+    }
+}

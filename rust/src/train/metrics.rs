@@ -1,0 +1,140 @@
+//! Classification metrics for the §4.4 evaluation (macro F1, accuracy).
+
+/// Streaming confusion matrix.
+#[derive(Clone, Debug)]
+pub struct Confusion {
+    pub k: usize,
+    /// counts[true][pred]
+    pub counts: Vec<u64>,
+}
+
+impl Confusion {
+    pub fn new(k: usize) -> Confusion {
+        Confusion {
+            k,
+            counts: vec![0; k * k],
+        }
+    }
+
+    pub fn update(&mut self, truth: &[u16], pred: &[u16]) {
+        assert_eq!(truth.len(), pred.len());
+        for (&t, &p) in truth.iter().zip(pred) {
+            self.counts[t as usize * self.k + p as usize] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        let correct: u64 = (0..self.k).map(|i| self.counts[i * self.k + i]).sum();
+        correct as f64 / total as f64
+    }
+
+    /// Per-class F1; classes absent from both truth and prediction yield
+    /// None (they are excluded from the macro average, matching sklearn's
+    /// behaviour on labels absent from the evaluation set).
+    pub fn f1_per_class(&self) -> Vec<Option<f64>> {
+        (0..self.k)
+            .map(|c| {
+                let tp = self.counts[c * self.k + c];
+                let fp: u64 = (0..self.k)
+                    .filter(|&t| t != c)
+                    .map(|t| self.counts[t * self.k + c])
+                    .sum();
+                let fn_: u64 = (0..self.k)
+                    .filter(|&p| p != c)
+                    .map(|p| self.counts[c * self.k + p])
+                    .sum();
+                if tp + fp + fn_ == 0 {
+                    None
+                } else {
+                    Some(2.0 * tp as f64 / (2.0 * tp as f64 + fp as f64 + fn_ as f64))
+                }
+            })
+            .collect()
+    }
+
+    /// Macro-averaged F1 over classes present in truth or predictions.
+    pub fn macro_f1(&self) -> f64 {
+        let per = self.f1_per_class();
+        let present: Vec<f64> = per.into_iter().flatten().collect();
+        if present.is_empty() {
+            0.0
+        } else {
+            present.iter().sum::<f64>() / present.len() as f64
+        }
+    }
+}
+
+/// Row-wise argmax over logits laid out [rows × k].
+pub fn argmax_rows(logits: &[f32], k: usize) -> Vec<u16> {
+    assert!(k > 0 && logits.len() % k == 0);
+    logits
+        .chunks_exact(k)
+        .map(|row| {
+            let mut best = 0usize;
+            for (i, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            best as u16
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_predictions() {
+        let mut c = Confusion::new(3);
+        c.update(&[0, 1, 2, 1], &[0, 1, 2, 1]);
+        assert_eq!(c.accuracy(), 1.0);
+        assert_eq!(c.macro_f1(), 1.0);
+    }
+
+    #[test]
+    fn known_f1_values() {
+        // truth: [0,0,1,1], pred: [0,1,1,1]
+        // class0: tp=1 fp=0 fn=1 -> f1 = 2/3
+        // class1: tp=2 fp=1 fn=0 -> f1 = 4/5
+        let mut c = Confusion::new(2);
+        c.update(&[0, 0, 1, 1], &[0, 1, 1, 1]);
+        let f1 = c.f1_per_class();
+        assert!((f1[0].unwrap() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((f1[1].unwrap() - 0.8).abs() < 1e-12);
+        assert!((c.macro_f1() - (2.0 / 3.0 + 0.8) / 2.0).abs() < 1e-12);
+        assert_eq!(c.accuracy(), 0.75);
+    }
+
+    #[test]
+    fn absent_class_excluded_from_macro() {
+        let mut c = Confusion::new(3); // class 2 never appears
+        c.update(&[0, 1], &[0, 1]);
+        assert_eq!(c.macro_f1(), 1.0);
+        assert_eq!(c.f1_per_class()[2], None);
+    }
+
+    #[test]
+    fn empty_confusion() {
+        let c = Confusion::new(4);
+        assert_eq!(c.accuracy(), 0.0);
+        assert_eq!(c.macro_f1(), 0.0);
+    }
+
+    #[test]
+    fn argmax() {
+        let logits = [0.1f32, 0.9, -1.0, 3.0, 2.0, 2.5];
+        assert_eq!(argmax_rows(&logits, 3), vec![1, 0]);
+        // ties resolve to the first maximum
+        assert_eq!(argmax_rows(&[1.0f32, 1.0], 2), vec![0]);
+    }
+}

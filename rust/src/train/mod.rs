@@ -1,0 +1,12 @@
+//! §4.4 training/evaluation: the four linear-probe tasks, the PJRT and
+//! pure-Rust engines, and macro-F1 metrics.
+
+pub mod linear_cpu;
+pub mod metrics;
+pub mod tasks;
+pub mod trainer;
+
+pub use linear_cpu::CpuModel;
+pub use metrics::{argmax_rows, Confusion};
+pub use tasks::{TaskSpec, TASKS};
+pub use trainer::{train_eval, Engine, TrainConfig, TrainReport};

@@ -1,0 +1,55 @@
+//! The §4.4 prediction tasks: linear probes over obs label columns.
+
+use anyhow::Result;
+
+use crate::store::Backend;
+
+/// A classification task = one obs label column.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TaskSpec {
+    pub name: &'static str,
+    pub label_col: &'static str,
+}
+
+/// The paper's four tasks (cell line, drug, MoA broad + fine).
+pub const TASKS: [TaskSpec; 4] = [
+    TaskSpec {
+        name: "cell_line",
+        label_col: "cell_line",
+    },
+    TaskSpec {
+        name: "drug",
+        label_col: "drug",
+    },
+    TaskSpec {
+        name: "moa_broad",
+        label_col: "moa_broad",
+    },
+    TaskSpec {
+        name: "moa_fine",
+        label_col: "moa_fine",
+    },
+];
+
+impl TaskSpec {
+    pub fn by_name(name: &str) -> Option<TaskSpec> {
+        TASKS.iter().find(|t| t.name == name).cloned()
+    }
+
+    /// Number of classes this task has on a given dataset.
+    pub fn n_classes(&self, backend: &dyn Backend) -> Result<usize> {
+        Ok(backend.obs().req_column(self.label_col)?.n_categories())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup() {
+        assert_eq!(TaskSpec::by_name("drug").unwrap().label_col, "drug");
+        assert!(TaskSpec::by_name("nope").is_none());
+        assert_eq!(TASKS.len(), 4);
+    }
+}

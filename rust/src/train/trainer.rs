@@ -1,0 +1,355 @@
+//! End-to-end training/evaluation driver for the §4.4 experiments: feed the
+//! scDataset pipeline into the AOT-compiled train step (PJRT engine) or the
+//! pure-Rust reference model (CPU engine), then evaluate macro-F1 on the
+//! held-out test plate.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{LoaderConfig, ScDataset, Strategy};
+use crate::runtime::{Runtime, Tensor};
+use crate::store::Backend;
+
+use super::linear_cpu::CpuModel;
+use super::metrics::{argmax_rows, Confusion};
+use super::tasks::TaskSpec;
+
+/// Which compute engine drives the model math.
+pub enum Engine {
+    /// AOT JAX/Pallas artifacts via PJRT (the production path).
+    Pjrt(Arc<Runtime>),
+    /// Pure-Rust reference (cross-check / artifact-free fallback).
+    Cpu,
+}
+
+impl Engine {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Pjrt(_) => "pjrt",
+            Engine::Cpu => "cpu",
+        }
+    }
+}
+
+/// Training run configuration.
+pub struct TrainConfig {
+    pub task: TaskSpec,
+    pub loader: LoaderConfig,
+    pub epochs: usize,
+    pub lr: f32,
+    /// Optional cap on optimizer steps (for quick benches).
+    pub max_steps: Option<usize>,
+    /// Record the loss every this many steps.
+    pub loss_every: usize,
+    pub seed: u64,
+}
+
+impl TrainConfig {
+    pub fn new(task: TaskSpec, strategy: Strategy, batch: usize, fetch_factor: usize) -> Self {
+        TrainConfig {
+            loader: LoaderConfig {
+                strategy,
+                batch_size: batch,
+                fetch_factor,
+                label_cols: vec![task.label_col.to_string()],
+                drop_last: true, // AOT artifacts have a fixed batch dim
+                ..Default::default()
+            },
+            task,
+            epochs: 1,
+            lr: 1e-5,
+            max_steps: None,
+            loss_every: 50,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub task: String,
+    pub strategy: String,
+    pub engine: String,
+    pub steps: usize,
+    pub losses: Vec<(usize, f64)>,
+    pub final_loss: f64,
+    pub macro_f1: f64,
+    pub accuracy: f64,
+    pub train_secs: f64,
+    pub eval_secs: f64,
+    /// Virtual-disk time of the training epoch's fetches (single worker),
+    /// from the calibrated cost model.
+    pub sim_load_secs: f64,
+}
+
+/// Train on `train_backend`, evaluate on `test_backend`.
+pub fn train_eval(
+    train_backend: Arc<dyn Backend>,
+    test_backend: Arc<dyn Backend>,
+    engine: &Engine,
+    cfg: &TrainConfig,
+) -> Result<TrainReport> {
+    let genes = train_backend.n_cols();
+    let classes = cfg.task.n_classes(train_backend.as_ref())?;
+    let m = cfg.loader.batch_size;
+    let mut loader_cfg = cfg.loader.clone();
+    loader_cfg.seed = cfg.seed;
+    loader_cfg.label_cols = vec![cfg.task.label_col.to_string()];
+    loader_cfg.drop_last = true;
+    let ds = ScDataset::new(train_backend.clone(), loader_cfg);
+
+    // Engine state.
+    let mut cpu = CpuModel::new(genes, classes, cfg.lr, cfg.seed);
+    let mut pjrt_state: Option<(Arc<crate::runtime::Executable>, Vec<Tensor>)> = None;
+    if let Engine::Pjrt(rt) = engine {
+        if (rt.manifest().lr - cfg.lr as f64).abs() > 1e-12 {
+            bail!(
+                "artifact lr {} != requested lr {} (rebuild artifacts with --lr)",
+                rt.manifest().lr,
+                cfg.lr
+            );
+        }
+        if rt.manifest().batch != m {
+            bail!(
+                "artifact batch {} != loader batch {m} (rebuild artifacts with --batch)",
+                rt.manifest().batch
+            );
+        }
+        let exe = rt.load("train_step", genes, classes)?;
+        // Initialize from the CPU model so both engines share init.
+        let state = vec![
+            Tensor::F32(cpu.w.clone()),
+            Tensor::F32(cpu.b.clone()),
+            Tensor::F32(vec![0.0; genes * classes]),
+            Tensor::F32(vec![0.0; genes * classes]),
+            Tensor::F32(vec![0.0; classes]),
+            Tensor::F32(vec![0.0; classes]),
+            Tensor::F32(vec![0.0]),
+        ];
+        pjrt_state = Some((exe, state));
+    }
+
+    let mut losses = Vec::new();
+    let mut steps = 0usize;
+    let mut dense = vec![0f32; m * genes];
+    let mut sim_reports = Vec::new();
+    let t_train = std::time::Instant::now();
+    'epochs: for epoch in 0..cfg.epochs {
+        let mut iter = ds.epoch(epoch as u64)?;
+        for mb in iter.by_ref() {
+            let mb = mb.context("loading minibatch")?;
+            if mb.x.n_rows != m {
+                continue; // partial batch (only possible without drop_last)
+            }
+            mb.x.to_dense_into(&mut dense);
+            let y = &mb.labels[0];
+            let loss = match (&engine, &mut pjrt_state) {
+                (Engine::Cpu, _) => cpu.train_step(&dense, y, m) as f64,
+                (Engine::Pjrt(_), Some((exe, state))) => {
+                    let mut inputs = state.clone();
+                    inputs.push(Tensor::F32(dense.clone()));
+                    inputs.push(Tensor::I32(y.iter().map(|&c| c as i32).collect()));
+                    let out = exe.run(&inputs)?;
+                    let loss = out[7].scalar()?;
+                    *state = out[..7].to_vec();
+                    loss
+                }
+                _ => unreachable!(),
+            };
+            if steps % cfg.loss_every == 0 {
+                losses.push((steps, loss));
+            }
+            steps += 1;
+            if cfg.max_steps.is_some_and(|cap| steps >= cap) {
+                sim_reports = iter.stats().fetch_reports;
+                break 'epochs;
+            }
+        }
+        sim_reports = iter.stats().fetch_reports;
+    }
+    let train_secs = t_train.elapsed().as_secs_f64();
+    let final_loss = losses.last().map(|&(_, l)| l).unwrap_or(f64::NAN);
+
+    // Push final PJRT params into the CPU model for unified evaluation.
+    if let Some((_, state)) = &pjrt_state {
+        cpu.set_params(state[0].as_f32()?, state[1].as_f32()?);
+    }
+
+    // Evaluate on the held-out plate (streamed sequentially with a high
+    // fetch factor — the paper's §4.2 inference recommendation).
+    let t_eval = std::time::Instant::now();
+    let eval_cfg = LoaderConfig {
+        strategy: Strategy::Streaming { shuffle_buffer: 0 },
+        batch_size: m,
+        fetch_factor: 64,
+        label_cols: vec![cfg.task.label_col.to_string()],
+        seed: 0,
+        drop_last: false,
+        ..Default::default()
+    };
+    let eval_ds = ScDataset::new(test_backend.clone(), eval_cfg);
+    let mut confusion = Confusion::new(classes);
+    let mut predict_exe = None;
+    if let Engine::Pjrt(rt) = engine {
+        predict_exe = Some(rt.load("predict", genes, classes)?);
+    }
+    for mb in eval_ds.epoch(0)? {
+        let mb = mb?;
+        let rows = mb.x.n_rows;
+        let logits = match (&engine, &predict_exe, &pjrt_state) {
+            (Engine::Pjrt(_), Some(exe), Some((_, state))) if rows == m => {
+                let mut dense_eval = vec![0f32; m * genes];
+                mb.x.to_dense_into(&mut dense_eval);
+                let out = exe.run(&[
+                    state[0].clone(),
+                    state[1].clone(),
+                    Tensor::F32(dense_eval),
+                ])?;
+                out[0].as_f32()?.to_vec()
+            }
+            // CPU path also covers the PJRT trailing partial batch (the
+            // artifact has a fixed batch dimension).
+            _ => {
+                let mut d = vec![0f32; rows * genes];
+                mb.x.to_dense_into(&mut d);
+                cpu.predict(&d, rows)
+            }
+        };
+        let pred = argmax_rows(&logits, classes);
+        confusion.update(&mb.labels[0], &pred);
+    }
+    let eval_secs = t_eval.elapsed().as_secs_f64();
+
+    // Virtual-disk cost of the training epoch (what the paper's Figure 5
+    // "end-to-end training time" is made of).
+    let disk = crate::store::DiskModel::sata_ssd_hdf5();
+    let sim = crate::store::iomodel::simulate_loader(
+        &disk,
+        train_backend.pattern(),
+        &sim_reports,
+        1,
+        m * cfg.loader.fetch_factor,
+    );
+
+    Ok(TrainReport {
+        task: cfg.task.name.to_string(),
+        strategy: format!(
+            "{}(b={},f={})",
+            cfg.loader.strategy.name(),
+            cfg.loader.strategy.block_size(),
+            cfg.loader.fetch_factor
+        ),
+        engine: engine.name().to_string(),
+        steps,
+        losses,
+        final_loss,
+        macro_f1: confusion.macro_f1(),
+        accuracy: confusion.accuracy(),
+        train_secs,
+        eval_secs,
+        sim_load_secs: sim.makespan_us / 1e6,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate, open_train_test, TahoeConfig};
+    use crate::util::tempdir::TempDir;
+
+    fn dataset() -> (TempDir, Arc<dyn Backend>, Arc<dyn Backend>) {
+        let dir = TempDir::new("train").unwrap();
+        let mut cfg = TahoeConfig::tiny();
+        cfg.cells_per_plate = 1500;
+        generate(&cfg, dir.path()).unwrap();
+        let (train, test) = open_train_test(dir.path()).unwrap();
+        (dir, Arc::new(train), Arc::new(test))
+    }
+
+    #[test]
+    fn cpu_training_beats_chance_on_cell_line() {
+        let (_d, train, test) = dataset();
+        let task = TaskSpec::by_name("cell_line").unwrap();
+        let classes = task.n_classes(train.as_ref()).unwrap();
+        let mut cfg = TrainConfig::new(
+            task,
+            Strategy::BlockShuffling { block_size: 1 },
+            64,
+            16,
+        );
+        cfg.epochs = 4;
+        cfg.lr = 0.01; // tiny data needs a bigger lr than the paper's
+        let report = train_eval(train, test, &Engine::Cpu, &cfg).unwrap();
+        let chance = 1.0 / classes as f64;
+        assert!(
+            report.accuracy > 2.0 * chance,
+            "accuracy {} vs chance {chance}",
+            report.accuracy
+        );
+        assert!(report.macro_f1 > chance, "f1 {}", report.macro_f1);
+        assert!(report.final_loss.is_finite());
+        assert!(report.sim_load_secs > 0.0);
+    }
+
+    #[test]
+    fn streaming_underperforms_shuffling() {
+        // The paper's core §4.4 finding, reproduced in miniature: pure
+        // sequential streaming (plate/condition-ordered) generalizes worse
+        // than block shuffling on drug classification.
+        let (_d, train, test) = dataset();
+        let task = TaskSpec::by_name("drug").unwrap();
+        let run = |strategy: Strategy| {
+            let mut cfg = TrainConfig::new(task.clone(), strategy, 64, 8);
+            cfg.epochs = 2;
+            cfg.lr = 0.01;
+            train_eval(train.clone(), test.clone(), &Engine::Cpu, &cfg)
+                .unwrap()
+                .macro_f1
+        };
+        let stream_f1 = run(Strategy::Streaming { shuffle_buffer: 0 });
+        let shuffled_f1 = run(Strategy::BlockShuffling { block_size: 16 });
+        assert!(
+            shuffled_f1 > stream_f1 + 0.02,
+            "shuffled {shuffled_f1} vs streaming {stream_f1}"
+        );
+    }
+
+    #[test]
+    fn pjrt_and_cpu_engines_agree() {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping: artifacts missing");
+            return;
+        }
+        let (_d, train, test) = dataset();
+        let task = TaskSpec::by_name("moa_broad").unwrap();
+        let mut cfg = TrainConfig::new(
+            task,
+            Strategy::BlockShuffling { block_size: 16 },
+            64,
+            4,
+        );
+        cfg.max_steps = Some(12);
+        cfg.loss_every = 1;
+        cfg.lr = 1e-5; // must match artifacts
+        let rt = Arc::new(Runtime::open("artifacts").unwrap());
+        let a = train_eval(
+            train.clone(),
+            test.clone(),
+            &Engine::Pjrt(rt),
+            &cfg,
+        )
+        .unwrap();
+        let b = train_eval(train, test, &Engine::Cpu, &cfg).unwrap();
+        assert_eq!(a.steps, b.steps);
+        for ((sa, la), (sb, lb)) in a.losses.iter().zip(&b.losses) {
+            assert_eq!(sa, sb);
+            assert!(
+                (la - lb).abs() < 1e-4 * (1.0 + la.abs()),
+                "loss diverged at step {sa}: pjrt {la} vs cpu {lb}"
+            );
+        }
+        assert!((a.macro_f1 - b.macro_f1).abs() < 0.05);
+    }
+}

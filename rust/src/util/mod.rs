@@ -1,0 +1,10 @@
+//! Foundation utilities implemented from scratch for the offline build:
+//! deterministic RNG, JSON/TOML parsing, temp dirs, a property-test harness
+//! and small stat/format helpers (see DESIGN.md §3.1).
+
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod tempdir;
+pub mod toml;

@@ -1,0 +1,114 @@
+//! Seeded randomized property-test harness.
+//!
+//! The offline build has no `proptest` crate; this module provides the piece
+//! the test suite relies on: run a property over many randomly generated
+//! cases, and when a case fails, report the exact seed so the failure can be
+//! replayed deterministically (`SCDATA_PROPTEST_SEED=<seed> cargo test ...`).
+//! There is no shrinking — generators are expected to keep cases small.
+
+use super::rng::Rng;
+
+/// Default number of cases per property.
+pub const DEFAULT_CASES: u64 = 128;
+
+/// Run `prop` over `cases` random cases. The property receives a fresh
+/// deterministic [`Rng`] per case. On failure (panic or `Err`), the case
+/// seed is reported in the panic message.
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    // Replay mode: run a single seed.
+    if let Ok(s) = std::env::var("SCDATA_PROPTEST_SEED") {
+        let seed: u64 = s.parse().expect("SCDATA_PROPTEST_SEED must be u64");
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at replay seed {seed}: {msg}");
+        }
+        return;
+    }
+    let base = 0x5cda7a5e_u64;
+    for case in 0..cases {
+        let seed = base
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case)
+            .wrapping_add(fxhash(name));
+        let mut rng = Rng::new(seed);
+        // AssertUnwindSafe: a panicking case aborts the whole property, so
+        // observing torn state is impossible.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut local = rng.clone();
+            prop(&mut local)
+        }));
+        match result {
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => panic!(
+                "property '{name}' failed on case {case} (replay with SCDATA_PROPTEST_SEED={seed}): {msg}"
+            ),
+            Err(_) => panic!(
+                "property '{name}' panicked on case {case} (replay with SCDATA_PROPTEST_SEED={seed})"
+            ),
+        }
+        // keep rng moving even though each case re-seeds (cheap)
+        let _ = rng.next_u64();
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Convenience: assert with formatted message inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return Err(format!($($arg)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::sync::atomic::AtomicU64::new(0);
+        check("always-true", 16, |_rng| {
+            count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            Ok(())
+        });
+        assert_eq!(count.load(std::sync::atomic::Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always-false", 4, |_rng| Err("boom".to_string()));
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("SCDATA_PROPTEST_SEED="), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn cases_get_distinct_randomness() {
+        let seen = std::sync::Mutex::new(std::collections::HashSet::new());
+        check("distinct", 8, |rng| {
+            seen.lock().unwrap().insert(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen.lock().unwrap().len(), 8);
+    }
+}

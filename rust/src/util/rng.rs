@@ -1,0 +1,500 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The build environment vendors no `rand` crate, so this module implements
+//! the small set of generators the project needs: a SplitMix64 seeder, a
+//! Xoshiro256++ core generator, Fisher–Yates shuffling, range sampling,
+//! Walker alias tables for weighted categorical sampling, and the
+//! Poisson / Gamma / Negative-Binomial samplers used by the synthetic
+//! Tahoe-mini data generator.
+//!
+//! Everything is deterministic given a seed; streams can be forked with
+//! [`Rng::fork`] so workers and ranks derive independent sub-streams from a
+//! shared root seed (mirroring scDataset's broadcast-seed design, paper
+//! Appendix B).
+
+/// SplitMix64 step; used for seeding and stream forking.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Xoshiro256++ PRNG (Blackman & Vigna). Fast, 256-bit state, passes BigCrush.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal variate from the polar method.
+    gauss_cache: Option<f64>,
+}
+
+impl Rng {
+    /// Construct from a 64-bit seed via SplitMix64 expansion.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, gauss_cache: None }
+    }
+
+    /// Derive an independent sub-stream (e.g. per worker / per rank / per
+    /// epoch). Mixes the label into the state via SplitMix64 so forks with
+    /// different labels are decorrelated.
+    pub fn fork(&self, label: u64) -> Rng {
+        let mut sm = self
+            .s[0]
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(label ^ 0xD1B54A32D192ED03);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, gauss_cache: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1)
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Unbiased uniform integer in [0, n) (Lemire's rejection method).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0, "below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        let n = xs.len();
+        if n < 2 {
+            return;
+        }
+        for i in (1..n).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Random permutation of 0..n as u32 (n must fit in u32).
+    pub fn permutation(&mut self, n: usize) -> Vec<u32> {
+        assert!(n <= u32::MAX as usize);
+        let mut v: Vec<u32> = (0..n as u32).collect();
+        self.shuffle(&mut v);
+        v
+    }
+
+    /// Choose a random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.range(0, xs.len())]
+    }
+
+    /// Standard normal via the polar (Marsaglia) method with caching.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.gauss_cache.take() {
+            return z;
+        }
+        loop {
+            let u = 2.0 * self.f64() - 1.0;
+            let v = 2.0 * self.f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let k = (-2.0 * s.ln() / s).sqrt();
+                self.gauss_cache = Some(v * k);
+                return u * k;
+            }
+        }
+    }
+
+    /// Poisson(lambda). Knuth multiplication for small lambda, normal
+    /// approximation with continuity correction for large lambda (the data
+    /// generator only needs distributional shape, not tail exactness).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let x = lambda + lambda.sqrt() * self.normal() + 0.5;
+            if x < 0.0 {
+                0
+            } else {
+                x as u64
+            }
+        }
+    }
+
+    /// Gamma(shape k, scale theta) via Marsaglia–Tsang; boost for k < 1.
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        debug_assert!(shape > 0.0 && scale > 0.0);
+        if shape < 1.0 {
+            // Gamma(k) = Gamma(k+1) * U^{1/k}
+            let g = self.gamma(shape + 1.0, 1.0);
+            let u = self.f64().max(f64::MIN_POSITIVE);
+            return g * u.powf(1.0 / shape) * scale;
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let mut x;
+            let mut v;
+            loop {
+                x = self.normal();
+                v = 1.0 + c * x;
+                if v > 0.0 {
+                    break;
+                }
+            }
+            v = v * v * v;
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x * x * x * x {
+                return d * v * scale;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v * scale;
+            }
+        }
+    }
+
+    /// Negative binomial via the Gamma–Poisson mixture: mean `mu`,
+    /// dispersion `r` (variance = mu + mu^2/r). Standard scRNA-seq count
+    /// model.
+    pub fn neg_binomial(&mut self, mu: f64, r: f64) -> u64 {
+        if mu <= 0.0 {
+            return 0;
+        }
+        let lambda = self.gamma(r, mu / r);
+        self.poisson(lambda)
+    }
+}
+
+/// Walker alias table for O(1) weighted categorical sampling. Used by the
+/// `BlockWeightedSampling` / `ClassBalancedSampling` strategies where blocks
+/// are drawn with replacement proportionally to their weight.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    /// Build from non-negative weights (not necessarily normalized).
+    /// Panics if all weights are zero or any is negative/non-finite.
+    pub fn new(weights: &[f64]) -> AliasTable {
+        let n = weights.len();
+        assert!(n > 0, "empty weight vector");
+        let total: f64 = weights.iter().sum();
+        assert!(
+            total > 0.0 && total.is_finite(),
+            "weights must sum to a positive finite value"
+        );
+        for &w in weights {
+            assert!(w >= 0.0 && w.is_finite(), "negative or non-finite weight");
+        }
+        let mut prob: Vec<f64> = weights.iter().map(|w| w * n as f64 / total).collect();
+        let mut alias = vec![0u32; n];
+        let mut small: Vec<u32> = Vec::new();
+        let mut large: Vec<u32> = Vec::new();
+        for (i, &p) in prob.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while let (Some(s), Some(l)) = (small.pop(), large.pop()) {
+            alias[s as usize] = l;
+            prob[l as usize] -= 1.0 - prob[s as usize];
+            if prob[l as usize] < 1.0 {
+                small.push(l);
+            } else {
+                large.push(l);
+            }
+        }
+        // Numerical leftovers settle at probability 1.
+        for i in small.into_iter().chain(large) {
+            prob[i as usize] = 1.0;
+        }
+        AliasTable { prob, alias }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Draw one index.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        let i = rng.below(self.prob.len() as u64) as usize;
+        if rng.f64() < self.prob[i] {
+            i as u32
+        } else {
+            self.alias[i]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn forks_are_decorrelated() {
+        let root = Rng::new(7);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn fork_is_deterministic() {
+        let root = Rng::new(9);
+        let mut a = root.fork(3);
+        let mut b = root.fork(3);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(2);
+        let mut seen = [false; 7];
+        for _ in 0..1_000 {
+            let x = r.below(7) as usize;
+            assert!(x < 7);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn below_is_roughly_uniform() {
+        let mut r = Rng::new(3);
+        let n = 10u64;
+        let trials = 100_000;
+        let mut counts = vec![0usize; n as usize];
+        for _ in 0..trials {
+            counts[r.below(n) as usize] += 1;
+        }
+        let expect = trials as f64 / n as f64;
+        for &c in &counts {
+            assert!((c as f64 - expect).abs() < 5.0 * expect.sqrt());
+        }
+    }
+
+    #[test]
+    fn permutation_is_a_permutation() {
+        let mut r = Rng::new(4);
+        for n in [0usize, 1, 2, 17, 1000] {
+            let p = r.permutation(n);
+            let mut sorted = p.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..n as u32).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn shuffle_preserves_multiset() {
+        let mut r = Rng::new(5);
+        let mut v: Vec<u32> = (0..100).map(|i| i % 13).collect();
+        let mut orig = v.clone();
+        r.shuffle(&mut v);
+        orig.sort_unstable();
+        let mut got = v.clone();
+        got.sort_unstable();
+        assert_eq!(orig, got);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(6);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.normal();
+            s += z;
+            s2 += z * z;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn poisson_mean_small_and_large_lambda() {
+        let mut r = Rng::new(7);
+        for lambda in [0.5, 3.0, 80.0] {
+            let n = 50_000;
+            let s: u64 = (0..n).map(|_| r.poisson(lambda)).sum();
+            let mean = s as f64 / n as f64;
+            assert!(
+                (mean - lambda).abs() < 0.05 * lambda.max(1.0),
+                "lambda {lambda} mean {mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn gamma_mean() {
+        let mut r = Rng::new(8);
+        for (k, theta) in [(0.5, 2.0), (2.0, 3.0), (9.0, 0.5)] {
+            let n = 50_000;
+            let s: f64 = (0..n).map(|_| r.gamma(k, theta)).sum();
+            let mean = s / n as f64;
+            let expect = k * theta;
+            assert!((mean - expect).abs() < 0.06 * expect, "{k},{theta}: {mean}");
+        }
+    }
+
+    #[test]
+    fn neg_binomial_mean_and_overdispersion() {
+        let mut r = Rng::new(9);
+        let (mu, disp) = (10.0, 2.0);
+        let n = 100_000;
+        let mut s = 0.0;
+        let mut s2 = 0.0;
+        for _ in 0..n {
+            let x = r.neg_binomial(mu, disp) as f64;
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        let expect_var = mu + mu * mu / disp; // 60
+        assert!((mean - mu).abs() < 0.05 * mu, "mean {mean}");
+        assert!((var - expect_var).abs() < 0.1 * expect_var, "var {var}");
+    }
+
+    #[test]
+    fn alias_table_matches_weights() {
+        let weights = [1.0, 2.0, 3.0, 4.0];
+        let t = AliasTable::new(&weights);
+        let mut r = Rng::new(10);
+        let n = 200_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            counts[t.sample(&mut r) as usize] += 1;
+        }
+        let total: f64 = weights.iter().sum();
+        for (i, &w) in weights.iter().enumerate() {
+            let expect = n as f64 * w / total;
+            assert!(
+                (counts[i] as f64 - expect).abs() < 5.0 * expect.sqrt(),
+                "idx {i}: {} vs {expect}",
+                counts[i]
+            );
+        }
+    }
+
+    #[test]
+    fn alias_table_degenerate_single() {
+        let t = AliasTable::new(&[5.0]);
+        let mut r = Rng::new(11);
+        for _ in 0..10 {
+            assert_eq!(t.sample(&mut r), 0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn alias_table_rejects_all_zero() {
+        AliasTable::new(&[0.0, 0.0]);
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut r = Rng::new(12);
+        let hits = (0..100_000).filter(|_| r.bernoulli(0.3)).count();
+        assert!((hits as f64 / 100_000.0 - 0.3).abs() < 0.01);
+    }
+}

@@ -1,0 +1,88 @@
+//! Self-cleaning temporary directories (the offline build has no `tempfile`
+//! crate). Used by tests, benches and the quickstart example to hold
+//! generated stores.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A temporary directory removed on drop.
+pub struct TempDir {
+    path: PathBuf,
+    keep: bool,
+}
+
+impl TempDir {
+    /// Create a fresh directory under the system temp dir. The name embeds
+    /// pid + a process-wide counter + a time component so concurrent test
+    /// processes do not collide.
+    pub fn new(tag: &str) -> std::io::Result<TempDir> {
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let path = std::env::temp_dir().join(format!(
+            "scdata-{tag}-{}-{n}-{:x}",
+            std::process::id(),
+            t & 0xffff_ffff
+        ));
+        std::fs::create_dir_all(&path)?;
+        Ok(TempDir { path, keep: false })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn join(&self, name: &str) -> PathBuf {
+        self.path.join(name)
+    }
+
+    /// Leak the directory (skip cleanup), returning its path.
+    pub fn keep(mut self) -> PathBuf {
+        self.keep = true;
+        self.path.clone()
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        if !self.keep {
+            let _ = std::fs::remove_dir_all(&self.path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creates_and_cleans() {
+        let p;
+        {
+            let d = TempDir::new("t").unwrap();
+            p = d.path().to_path_buf();
+            std::fs::write(d.join("x.txt"), "hi").unwrap();
+            assert!(p.exists());
+        }
+        assert!(!p.exists());
+    }
+
+    #[test]
+    fn distinct_paths() {
+        let a = TempDir::new("t").unwrap();
+        let b = TempDir::new("t").unwrap();
+        assert_ne!(a.path(), b.path());
+    }
+
+    #[test]
+    fn keep_leaks() {
+        let d = TempDir::new("t").unwrap();
+        let p = d.keep();
+        assert!(p.exists());
+        std::fs::remove_dir_all(&p).unwrap();
+    }
+}

@@ -1,0 +1,277 @@
+//! Minimal TOML subset parser for the config system.
+//!
+//! Supports: `[table]` and `[table.sub]` headers, `key = value` pairs with
+//! string / integer / float / boolean / flat-array values, comments (`#`),
+//! and bare or quoted keys. Values are exposed through the same dotted-path
+//! lookup the config system uses (`io.call_overhead_us`). This is not a
+//! general TOML implementation — it covers what `scdata` config files need
+//! (see `configs/*.toml`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+}
+
+/// A parsed document: flat map from dotted path to value.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc> {
+        let mut entries = BTreeMap::new();
+        let mut prefix = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated table header", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("line {}: empty table name", lineno + 1);
+                }
+                prefix = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim().trim_matches('"');
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .map_err(|e| anyhow!("line {}: {}", lineno + 1, e))?;
+            let path = if prefix.is_empty() {
+                key.to_string()
+            } else {
+                format!("{prefix}.{key}")
+            };
+            entries.insert(path, val);
+        }
+        Ok(TomlDoc { entries })
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.entries.get(path)
+    }
+
+    pub fn str_or<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.get(path).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, path: &str, default: usize) -> usize {
+        self.get(path).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside of a quoted string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    other => bail!("bad escape {:?}", other),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(TomlValue::Str(out));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let clean = s.replace('_', "");
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = clean.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value '{s}'")
+}
+
+/// Split an array body on commas that are not inside strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_tables_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+# top comment
+name = "tahoe-mini"
+cells = 700_000
+frac = 0.5  # trailing comment
+flag = true
+
+[io]
+call_overhead_us = 250000.0
+runs = [1, 4, 16]
+label = "a # not comment"
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "tahoe-mini");
+        assert_eq!(doc.get("cells").unwrap().as_i64(), Some(700000));
+        assert_eq!(doc.f64_or("frac", 0.0), 0.5);
+        assert!(doc.bool_or("flag", false));
+        assert_eq!(doc.f64_or("io.call_overhead_us", 0.0), 250000.0);
+        assert_eq!(doc.str_or("io.label", ""), "a # not comment");
+        let arr = doc.get("io.runs").unwrap();
+        match arr {
+            TomlValue::Arr(v) => assert_eq!(v.len(), 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.usize_or("x", 7), 7);
+        assert_eq!(doc.str_or("y", "d"), "d");
+    }
+
+    #[test]
+    fn string_escapes() {
+        let doc = TomlDoc::parse(r#"s = "a\nb\"c""#).unwrap();
+        assert_eq!(doc.str_or("s", ""), "a\nb\"c");
+    }
+
+    #[test]
+    fn errors_are_located() {
+        let e = TomlDoc::parse("x 1").unwrap_err().to_string();
+        assert!(e.contains("line 1"), "{e}");
+        assert!(TomlDoc::parse("[open").is_err());
+        assert!(TomlDoc::parse("k = ").is_err());
+        assert!(TomlDoc::parse("k = zap").is_err());
+    }
+
+    #[test]
+    fn nested_table_paths() {
+        let doc = TomlDoc::parse("[a.b]\nc = 1").unwrap();
+        assert_eq!(doc.usize_or("a.b.c", 0), 1);
+    }
+
+    #[test]
+    fn negative_and_exponent_numbers() {
+        let doc = TomlDoc::parse("a = -3\nb = 1e3\nc = -2.5").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_i64(), Some(-3));
+        assert_eq!(doc.f64_or("b", 0.0), 1000.0);
+        assert_eq!(doc.f64_or("c", 0.0), -2.5);
+    }
+}

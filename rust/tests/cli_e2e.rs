@@ -1,0 +1,77 @@
+//! CLI integration: drive the launcher end-to-end on a temp dataset,
+//! including the figure/table regeneration commands in --quick mode.
+
+use scdata::cli::run;
+use scdata::util::tempdir::TempDir;
+
+fn argv(s: &str) -> Vec<String> {
+    s.split_whitespace().map(String::from).collect()
+}
+
+/// One shared flow to avoid regenerating datasets per test.
+#[test]
+fn full_cli_flow() {
+    let dir = TempDir::new("cli-e2e").unwrap();
+    let data = dir.join("data");
+    let results = dir.join("results");
+    let data_s = data.to_string_lossy().to_string();
+    let results_s = results.to_string_lossy().to_string();
+
+    // gen-data + info
+    run(argv(&format!(
+        "gen-data --out {data_s} --preset tiny --plates 4 --cells 1500"
+    )))
+    .unwrap();
+    run(argv(&format!("info --data {data_s}"))).unwrap();
+
+    // bench: every experiment that doesn't need artifacts, in quick mode
+    for exp in ["fig2", "fig3", "fig4", "eq5", "fig6", "fig7", "table2"] {
+        run(argv(&format!(
+            "bench {exp} --data {data_s} --results {results_s} --quick"
+        )))
+        .unwrap_or_else(|e| panic!("bench {exp} failed: {e:#}"));
+        assert!(
+            results.join(format!("{exp}.json")).exists(),
+            "missing results/{exp}.json"
+        );
+    }
+
+    // fig5 quick (cpu engine)
+    run(argv(&format!(
+        "bench fig5 --data {data_s} --results {results_s} --quick --seeds 1 --engine cpu"
+    )))
+    .unwrap();
+    assert!(results.join("fig5.json").exists());
+
+    // train + autotune + calibrate
+    run(argv(&format!(
+        "train --data {data_s} --task moa_broad --strategy block --block 8 --fetch 8 --max-steps 5 --lr 0.01"
+    )))
+    .unwrap();
+    run(argv(&format!("autotune --data {data_s}"))).unwrap();
+    run(argv("calibrate")).unwrap();
+}
+
+#[test]
+fn bench_rejects_unknown_experiment() {
+    let err = run(argv("bench fig99")).unwrap_err().to_string();
+    assert!(err.contains("fig99"), "{err}");
+}
+
+#[test]
+fn train_requires_valid_task() {
+    let dir = TempDir::new("cli-task").unwrap();
+    let data = dir.join("d");
+    run(argv(&format!(
+        "gen-data --out {} --preset tiny --plates 2 --cells 200",
+        data.display()
+    )))
+    .unwrap();
+    let err = run(argv(&format!(
+        "train --data {} --task bogus",
+        data.display()
+    )))
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("unknown task"), "{err}");
+}

@@ -1,0 +1,232 @@
+//! Cross-module integration: datagen → stores → coordinator, across every
+//! strategy, backend and parallelism mode, plus failure injection.
+
+use std::sync::Arc;
+
+use scdata::coordinator::{LoaderConfig, ScDataset, Strategy};
+use scdata::datagen::{generate, open_collection, TahoeConfig};
+use scdata::store::memmap_dense::{convert_to_memmap, DenseMemmapStore};
+use scdata::store::rowgroup::{convert_to_rowgroup, RowGroupStore};
+use scdata::store::Backend;
+use scdata::util::tempdir::TempDir;
+
+fn dataset(cells: usize) -> (TempDir, Arc<dyn Backend>) {
+    let dir = TempDir::new("e2e").unwrap();
+    let mut cfg = TahoeConfig::tiny();
+    cfg.cells_per_plate = cells;
+    generate(&cfg, dir.path()).unwrap();
+    let coll = open_collection(dir.path()).unwrap();
+    (dir, Arc::new(coll))
+}
+
+fn epoch_rows(ds: &ScDataset) -> Vec<u32> {
+    let mut rows = Vec::new();
+    for mb in ds.epoch(0).unwrap() {
+        rows.extend(mb.unwrap().rows);
+    }
+    rows
+}
+
+#[test]
+fn every_strategy_covers_or_samples_correctly() {
+    let (_d, backend) = dataset(800);
+    let n = backend.n_rows();
+    let strategies = vec![
+        Strategy::Streaming { shuffle_buffer: 0 },
+        Strategy::Streaming {
+            shuffle_buffer: 256,
+        },
+        Strategy::BlockShuffling { block_size: 1 },
+        Strategy::BlockShuffling { block_size: 16 },
+        Strategy::BlockShuffling { block_size: 4096 },
+        Strategy::ClassBalanced {
+            block_size: 4,
+            label_col: "moa_broad".into(),
+        },
+    ];
+    for strategy in strategies {
+        let weighted = matches!(strategy, Strategy::ClassBalanced { .. });
+        let ds = ScDataset::new(
+            backend.clone(),
+            LoaderConfig {
+                strategy: strategy.clone(),
+                batch_size: 48,
+                fetch_factor: 3,
+                label_cols: vec!["plate".into()],
+                ..Default::default()
+            },
+        );
+        let mut rows = epoch_rows(&ds);
+        rows.sort_unstable();
+        if weighted {
+            // with-replacement: roughly one epoch's worth, all in range
+            assert!(rows.len() >= n / 2 && rows.len() <= 2 * n, "{strategy:?}");
+            assert!(rows.iter().all(|&r| (r as usize) < n));
+        } else {
+            assert_eq!(rows, (0..n as u32).collect::<Vec<_>>(), "{strategy:?}");
+        }
+    }
+}
+
+#[test]
+fn worker_counts_agree_on_coverage() {
+    let (_d, backend) = dataset(700);
+    let n = backend.n_rows();
+    for workers in [0usize, 1, 2, 5] {
+        let ds = ScDataset::new(
+            backend.clone(),
+            LoaderConfig {
+                strategy: Strategy::BlockShuffling { block_size: 8 },
+                batch_size: 32,
+                fetch_factor: 2,
+                num_workers: workers,
+                ..Default::default()
+            },
+        );
+        let mut rows = epoch_rows(&ds);
+        rows.sort_unstable();
+        assert_eq!(rows.len(), n, "workers={workers}");
+        assert_eq!(rows, (0..n as u32).collect::<Vec<_>>());
+    }
+}
+
+#[test]
+fn two_level_ddp_times_workers_partition() {
+    let (_d, backend) = dataset(600);
+    let n = backend.n_rows();
+    let mut all = Vec::new();
+    for rank in 0..2 {
+        let ds = ScDataset::new(
+            backend.clone(),
+            LoaderConfig {
+                strategy: Strategy::BlockShuffling { block_size: 4 },
+                batch_size: 16,
+                fetch_factor: 2,
+                num_workers: 3,
+                rank,
+                world_size: 2,
+                seed: 5,
+                ..Default::default()
+            },
+        );
+        all.extend(epoch_rows(&ds));
+    }
+    all.sort_unstable();
+    assert_eq!(all, (0..n as u32).collect::<Vec<_>>());
+}
+
+#[test]
+fn all_backends_yield_identical_cells() {
+    let (dir, anndata) = dataset(500);
+    let rgs_path = dir.join("c.rgs");
+    let dms_path = dir.join("c.dms");
+    convert_to_rowgroup(anndata.as_ref(), &rgs_path, 200).unwrap();
+    convert_to_memmap(anndata.as_ref(), &dms_path, 512).unwrap();
+    let rowgroup: Arc<dyn Backend> = Arc::new(RowGroupStore::open(&rgs_path).unwrap());
+    let memmap: Arc<dyn Backend> = Arc::new(DenseMemmapStore::open(&dms_path).unwrap());
+    // identical loader config must yield identical cells in identical
+    // order regardless of backend
+    let run = |b: &Arc<dyn Backend>| {
+        let ds = ScDataset::new(
+            b.clone(),
+            LoaderConfig {
+                strategy: Strategy::BlockShuffling { block_size: 16 },
+                batch_size: 64,
+                fetch_factor: 4,
+                seed: 9,
+                ..Default::default()
+            },
+        );
+        let mut out = Vec::new();
+        for mb in ds.epoch(0).unwrap() {
+            let mb = mb.unwrap();
+            out.push((mb.rows.clone(), mb.x.clone()));
+        }
+        out
+    };
+    let a = run(&anndata);
+    let r = run(&rowgroup);
+    let m = run(&memmap);
+    assert_eq!(a.len(), r.len());
+    for ((ra, xa), (rr, xr)) in a.iter().zip(&r) {
+        assert_eq!(ra, rr);
+        assert_eq!(xa, xr);
+    }
+    for ((ra, xa), (rm, xm)) in a.iter().zip(&m) {
+        assert_eq!(ra, rm);
+        assert_eq!(xa, xm);
+    }
+}
+
+#[test]
+fn corrupted_plate_file_reports_error() {
+    let dir = TempDir::new("corrupt").unwrap();
+    let mut cfg = TahoeConfig::tiny();
+    cfg.n_plates = 2;
+    cfg.cells_per_plate = 300;
+    let paths = generate(&cfg, dir.path()).unwrap();
+    // truncate the second plate: opening the collection must fail loudly
+    let bytes = std::fs::read(&paths[1]).unwrap();
+    std::fs::write(&paths[1], &bytes[..bytes.len() / 2]).unwrap();
+    assert!(open_collection(dir.path()).is_err());
+}
+
+#[test]
+fn missing_label_column_fails_at_first_batch() {
+    let (_d, backend) = dataset(300);
+    let ds = ScDataset::new(
+        backend,
+        LoaderConfig {
+            label_cols: vec!["no_such_column".into()],
+            ..Default::default()
+        },
+    );
+    let first = ds.epoch(0).unwrap().next().unwrap();
+    let err = first.unwrap_err().to_string();
+    assert!(err.contains("no_such_column"), "{err}");
+}
+
+#[test]
+fn backpressure_bounded_channel_does_not_deadlock() {
+    // Tiny prefetch depth + many workers: consumer drains slowly.
+    let (_d, backend) = dataset(500);
+    let ds = ScDataset::new(
+        backend,
+        LoaderConfig {
+            strategy: Strategy::BlockShuffling { block_size: 8 },
+            batch_size: 16,
+            fetch_factor: 2,
+            num_workers: 4,
+            prefetch_depth: 1,
+            ..Default::default()
+        },
+    );
+    let mut count = 0;
+    for mb in ds.epoch(0).unwrap() {
+        mb.unwrap();
+        count += 1;
+        if count % 10 == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+    assert!(count > 0);
+}
+
+#[test]
+fn dropping_iterator_midway_stops_workers() {
+    let (_d, backend) = dataset(800);
+    let ds = ScDataset::new(
+        backend,
+        LoaderConfig {
+            strategy: Strategy::BlockShuffling { block_size: 8 },
+            batch_size: 16,
+            fetch_factor: 2,
+            num_workers: 4,
+            prefetch_depth: 1,
+            ..Default::default()
+        },
+    );
+    let mut iter = ds.epoch(0).unwrap();
+    let _ = iter.next().unwrap().unwrap();
+    drop(iter); // must not hang on worker join
+}

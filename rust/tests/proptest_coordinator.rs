@@ -1,0 +1,359 @@
+//! Randomized property tests over the full coordinator stack (the
+//! `proptest`-style suite; generators and replay via
+//! `scdata::util::proptest` — set `SCDATA_PROPTEST_SEED=<seed>` to replay a
+//! reported failure).
+
+use std::sync::Arc;
+
+use scdata::coordinator::entropy::{
+    batch_label_entropy, corollary33_bounds, dist_entropy,
+};
+use scdata::coordinator::{LoaderConfig, ScDataset, Strategy};
+use scdata::datagen::{generate, open_collection, TahoeConfig};
+use scdata::prop_assert;
+use scdata::store::anndata::{SparseChunkStore, StoreWriter};
+use scdata::store::iomodel::{simulate_loader, AccessPattern, DiskModel, IoReport};
+use scdata::store::{Backend, ObsFrame};
+use scdata::util::proptest::check;
+use scdata::util::rng::Rng;
+use scdata::util::tempdir::TempDir;
+
+/// Build a random small store; returns the expected rows for comparison.
+fn random_store(
+    rng: &mut Rng,
+    dir: &TempDir,
+    name: &str,
+) -> (SparseChunkStore, Vec<(Vec<u32>, Vec<f32>)>) {
+    let n_rows = rng.range(1, 200);
+    let n_cols = rng.range(4, 64);
+    let chunk_rows = rng.range(1, 40);
+    let compress = rng.bernoulli(0.5);
+    let mut w = StoreWriter::create(dir.join(name), n_cols, chunk_rows, compress).unwrap();
+    let mut rows = Vec::new();
+    for _ in 0..n_rows {
+        let nnz = rng.range(0, n_cols.min(12));
+        let mut cols: Vec<u32> = (0..n_cols as u32).collect();
+        rng.shuffle(&mut cols);
+        let mut cols: Vec<u32> = cols[..nnz].to_vec();
+        cols.sort_unstable();
+        let vals: Vec<f32> = cols.iter().map(|_| rng.f32() * 10.0).collect();
+        w.push_row(&cols, &vals).unwrap();
+        rows.push((cols, vals));
+    }
+    let obs = ObsFrame::new(n_rows);
+    let store = SparseChunkStore::open(w.finish(&obs).unwrap()).unwrap();
+    (store, rows)
+}
+
+#[test]
+fn prop_store_fetch_matches_written_rows() {
+    check("store-roundtrip-fuzz", 40, |rng| {
+        let dir = TempDir::new("prop-store").unwrap();
+        let (store, rows) = random_store(rng, &dir, "s.scs");
+        // random sorted unique subset
+        let n = store.n_rows();
+        let take = rng.range(1, n + 1);
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut idx);
+        let mut idx: Vec<u32> = idx[..take].to_vec();
+        idx.sort_unstable();
+        let got = store.fetch_rows(&idx).map_err(|e| e.to_string())?;
+        got.x.validate().map_err(|e| e.to_string())?;
+        prop_assert!(got.x.n_rows == take, "row count");
+        for (j, &r) in idx.iter().enumerate() {
+            let (ci, cv) = got.x.row(j);
+            let (ei, ev) = (&rows[r as usize].0, &rows[r as usize].1);
+            prop_assert!(ci == &ei[..] && cv == &ev[..], "row {r} mismatch");
+        }
+        // I/O accounting invariants
+        prop_assert!(got.io.rows == take as u64, "io.rows");
+        prop_assert!(got.io.runs >= 1 && got.io.runs <= take as u64, "io.runs");
+        prop_assert!(
+            got.io.chunks >= 1 && got.io.chunks <= store.n_chunks() as u64,
+            "io.chunks {} of {}",
+            got.io.chunks,
+            store.n_chunks()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_epoch_is_exact_cover_for_shuffling_strategies() {
+    // Shared dataset across cases (generation is the expensive part).
+    let dir = TempDir::new("prop-cover").unwrap();
+    let mut cfg = TahoeConfig::tiny();
+    cfg.n_plates = 3;
+    cfg.cells_per_plate = 400;
+    generate(&cfg, dir.path()).unwrap();
+    let backend: Arc<dyn Backend> = Arc::new(open_collection(dir.path()).unwrap());
+    let n = backend.n_rows();
+    check("epoch-cover-fuzz", 24, |rng| {
+        let strategy = match rng.range(0, 3) {
+            0 => Strategy::Streaming {
+                shuffle_buffer: if rng.bernoulli(0.5) {
+                    rng.range(1, 300)
+                } else {
+                    0
+                },
+            },
+            1 => Strategy::BlockShuffling {
+                block_size: rng.range(1, 200),
+            },
+            _ => Strategy::BlockShuffling { block_size: 1 },
+        };
+        let cfg = LoaderConfig {
+            strategy,
+            batch_size: rng.range(1, 100),
+            fetch_factor: rng.range(1, 10),
+            num_workers: rng.range(0, 4),
+            seed: rng.next_u64(),
+            drop_last: false,
+            ..Default::default()
+        };
+        let ds = ScDataset::new(backend.clone(), cfg.clone());
+        let mut rows = Vec::new();
+        for mb in ds.epoch(rng.next_u64()).map_err(|e| e.to_string())? {
+            let mb = mb.map_err(|e| e.to_string())?;
+            prop_assert!(mb.x.n_rows <= cfg.batch_size, "oversized batch");
+            rows.extend(mb.rows);
+        }
+        rows.sort_unstable();
+        prop_assert!(
+            rows == (0..n as u32).collect::<Vec<_>>(),
+            "epoch must cover every row exactly once ({:?})",
+            cfg.strategy
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_drop_last_yields_only_full_batches() {
+    let dir = TempDir::new("prop-drop").unwrap();
+    let mut cfg = TahoeConfig::tiny();
+    cfg.n_plates = 2;
+    cfg.cells_per_plate = 300;
+    generate(&cfg, dir.path()).unwrap();
+    let backend: Arc<dyn Backend> = Arc::new(open_collection(dir.path()).unwrap());
+    check("drop-last-fuzz", 16, |rng| {
+        let m = rng.range(1, 120);
+        let ds = ScDataset::new(
+            backend.clone(),
+            LoaderConfig {
+                strategy: Strategy::BlockShuffling {
+                    block_size: rng.range(1, 50),
+                },
+                batch_size: m,
+                fetch_factor: rng.range(1, 8),
+                drop_last: true,
+                seed: rng.next_u64(),
+                ..Default::default()
+            },
+        );
+        let mut total = 0usize;
+        for mb in ds.epoch(0).map_err(|e| e.to_string())? {
+            let mb = mb.map_err(|e| e.to_string())?;
+            prop_assert!(mb.x.n_rows == m, "partial batch leaked: {}", mb.x.n_rows);
+            total += m;
+        }
+        prop_assert!(total <= backend.n_rows(), "overcount");
+        prop_assert!(
+            backend.n_rows() - total < m * rng.range(1, 2).max(1) * 16,
+            "dropped too much"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ddp_world_partitions_exactly() {
+    let dir = TempDir::new("prop-ddp").unwrap();
+    let mut cfg = TahoeConfig::tiny();
+    cfg.n_plates = 2;
+    cfg.cells_per_plate = 350;
+    generate(&cfg, dir.path()).unwrap();
+    let backend: Arc<dyn Backend> = Arc::new(open_collection(dir.path()).unwrap());
+    let n = backend.n_rows();
+    check("ddp-fuzz", 12, |rng| {
+        let world = rng.range(1, 5);
+        let workers = rng.range(0, 3);
+        let seed = rng.next_u64();
+        let epoch = rng.next_u64();
+        // all ranks must share the SAME strategy (broadcast-seed contract)
+        let block_size = rng.range(1, 64);
+        let mut all = Vec::new();
+        for rank in 0..world {
+            let ds = ScDataset::new(
+                backend.clone(),
+                LoaderConfig {
+                    strategy: Strategy::BlockShuffling { block_size },
+                    batch_size: 32,
+                    fetch_factor: 2,
+                    num_workers: workers,
+                    rank,
+                    world_size: world,
+                    seed,
+                    ..Default::default()
+                },
+            );
+            for mb in ds.epoch(epoch).map_err(|e| e.to_string())? {
+                all.extend(mb.map_err(|e| e.to_string())?.rows);
+            }
+        }
+        all.sort_unstable();
+        prop_assert!(
+            all == (0..n as u32).collect::<Vec<_>>(),
+            "world={world} workers={workers} lost or duplicated rows"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_entropy_bounds_hold_on_real_pipeline() {
+    let dir = TempDir::new("prop-ent").unwrap();
+    let mut cfg = TahoeConfig::tiny();
+    cfg.n_plates = 4;
+    cfg.cells_per_plate = 1000;
+    generate(&cfg, dir.path()).unwrap();
+    let backend: Arc<dyn Backend> = Arc::new(open_collection(dir.path()).unwrap());
+    let p = backend.obs().req_column("plate").unwrap().distribution();
+    check("pipeline-entropy-bounds", 8, |rng| {
+        let b = 1usize << rng.range(0, 6);
+        let m = 64usize;
+        let f = 1usize << rng.range(0, 7);
+        let ds = ScDataset::new(
+            backend.clone(),
+            LoaderConfig {
+                strategy: Strategy::BlockShuffling { block_size: b },
+                batch_size: m,
+                fetch_factor: f,
+                label_cols: vec!["plate".into()],
+                seed: rng.next_u64(),
+                drop_last: true,
+                ..Default::default()
+            },
+        );
+        let mut hs = Vec::new();
+        for mb in ds.epoch(0).map_err(|e| e.to_string())?.take(40) {
+            let mb = mb.map_err(|e| e.to_string())?;
+            hs.push(batch_label_entropy(&mb.labels[0], p.len()));
+        }
+        let mean = hs.iter().sum::<f64>() / hs.len() as f64;
+        let (_, hi) = corollary33_bounds(&p, m, b);
+        // Upper bound holds within sampling noise; the f-dependent lower
+        // bound is covered by unit tests (here block homogeneity is only
+        // approximate at condition boundaries).
+        prop_assert!(
+            mean <= hi + 0.25,
+            "mean {mean} exceeds upper bound {hi} (b={b}, f={f})"
+        );
+        prop_assert!(mean >= -1e-9 && mean <= dist_entropy(&p) + 1e-9, "range");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simulator_monotonicities() {
+    check("simulator-monotone", 64, |rng| {
+        let model = DiskModel::sata_ssd_hdf5();
+        let rows = rng.range(64, 20_000) as u64;
+        let runs = rng.range(1, rows as usize) as u64;
+        let bytes = rows * rng.range(50, 4_000) as u64;
+        let io = IoReport {
+            calls: 1,
+            runs,
+            rows,
+            bytes,
+            chunks: runs,
+            pages: runs + bytes / 4096,
+        };
+        // more runs (same rows) never cheaper
+        let fewer = IoReport {
+            runs: (runs / 2).max(1),
+            ..io
+        };
+        for pattern in [
+            AccessPattern::BatchedCoalesced,
+            AccessPattern::PerIndex,
+            AccessPattern::Mmap,
+        ] {
+            let a = model.disk_us(pattern, &fewer, 1);
+            let b = model.disk_us(pattern, &io, 1);
+            prop_assert!(a <= b + 1e-9, "{pattern:?}: fewer runs cost more");
+        }
+        // workers never hurt
+        let fetches = vec![io; rng.range(1, 20)];
+        let mut prev = 0.0;
+        for w in [1usize, 2, 4, 8, 16] {
+            let r = simulate_loader(
+                &model,
+                AccessPattern::BatchedCoalesced,
+                &fetches,
+                w,
+                rows as usize,
+            );
+            let sps = r.samples_per_sec();
+            prop_assert!(
+                sps >= prev - 1e-6,
+                "throughput fell at w={w}: {sps} < {prev}"
+            );
+            prev = sps;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weighted_sampling_respects_zero_weights() {
+    let dir = TempDir::new("prop-weight").unwrap();
+    let mut cfg = TahoeConfig::tiny();
+    cfg.n_plates = 2;
+    cfg.cells_per_plate = 250;
+    generate(&cfg, dir.path()).unwrap();
+    let backend: Arc<dyn Backend> = Arc::new(open_collection(dir.path()).unwrap());
+    let n = backend.n_rows();
+    check("weighted-support", 12, |rng| {
+        let block = rng.range(1, 10);
+        // random support: weights zero outside it (aligned to blocks so a
+        // block's weight is zero iff all members are zero)
+        let support_blocks = rng.range(1, n / block.max(1) / 2 + 2);
+        let mut weights = vec![0.0f64; n];
+        for bi in 0..support_blocks {
+            for j in 0..block {
+                let i = bi * block + j;
+                if i < n {
+                    weights[i] = 1.0;
+                }
+            }
+        }
+        let support = weights.iter().filter(|&&w| w > 0.0).count();
+        if support == 0 {
+            return Ok(());
+        }
+        let ds = ScDataset::new(
+            backend.clone(),
+            LoaderConfig {
+                strategy: Strategy::BlockWeighted {
+                    block_size: block,
+                    weights: weights.clone(),
+                },
+                batch_size: 16,
+                fetch_factor: 2,
+                seed: rng.next_u64(),
+                ..Default::default()
+            },
+        );
+        for mb in ds.epoch(0).map_err(|e| e.to_string())?.take(10) {
+            let mb = mb.map_err(|e| e.to_string())?;
+            for &r in &mb.rows {
+                prop_assert!(
+                    weights[r as usize] > 0.0,
+                    "sampled zero-weight row {r}"
+                );
+            }
+        }
+        Ok(())
+    });
+}

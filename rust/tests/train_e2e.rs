@@ -1,0 +1,103 @@
+//! Training integration across the full stack: scDataset pipeline → PJRT
+//! (AOT JAX/Pallas) engine, gated on `make artifacts` having run.
+
+use std::sync::Arc;
+
+use scdata::coordinator::Strategy;
+use scdata::datagen::{generate, open_train_test, TahoeConfig};
+use scdata::runtime::Runtime;
+use scdata::store::Backend;
+use scdata::train::{train_eval, Engine, TaskSpec, TrainConfig};
+use scdata::util::tempdir::TempDir;
+
+fn artifacts() -> Option<Arc<Runtime>> {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        Some(Arc::new(Runtime::open("artifacts").unwrap()))
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn dataset() -> (TempDir, Arc<dyn Backend>, Arc<dyn Backend>) {
+    let dir = TempDir::new("train-e2e").unwrap();
+    let mut cfg = TahoeConfig::tiny();
+    cfg.cells_per_plate = 1200;
+    generate(&cfg, dir.path()).unwrap();
+    let (train, test) = open_train_test(dir.path()).unwrap();
+    (dir, Arc::new(train), Arc::new(test))
+}
+
+#[test]
+fn pjrt_full_run_all_tasks() {
+    let Some(rt) = artifacts() else { return };
+    let (_d, train_be, test_be) = dataset();
+    for task_name in ["cell_line", "drug", "moa_broad", "moa_fine"] {
+        let task = TaskSpec::by_name(task_name).unwrap();
+        let mut cfg = TrainConfig::new(
+            task,
+            Strategy::BlockShuffling { block_size: 16 },
+            64,
+            8,
+        );
+        cfg.max_steps = Some(20);
+        cfg.lr = 1e-5;
+        let r = train_eval(
+            train_be.clone(),
+            test_be.clone(),
+            &Engine::Pjrt(rt.clone()),
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(r.steps, 20, "{task_name}");
+        assert!(r.final_loss.is_finite(), "{task_name}");
+        assert!(r.macro_f1 >= 0.0 && r.macro_f1 <= 1.0);
+    }
+}
+
+#[test]
+fn pjrt_loss_decreases_over_epoch() {
+    let Some(rt) = artifacts() else { return };
+    let (_d, train_be, test_be) = dataset();
+    let task = TaskSpec::by_name("cell_line").unwrap();
+    let mut cfg = TrainConfig::new(
+        task,
+        Strategy::BlockShuffling { block_size: 16 },
+        64,
+        16,
+    );
+    cfg.epochs = 6;
+    cfg.lr = 1e-5;
+    cfg.loss_every = 10;
+    let r = train_eval(train_be, test_be, &Engine::Pjrt(rt), &cfg).unwrap();
+    let first: f64 = r.losses.iter().take(3).map(|&(_, l)| l).sum::<f64>() / 3.0;
+    let last: f64 = r.losses.iter().rev().take(3).map(|&(_, l)| l).sum::<f64>() / 3.0;
+    assert!(
+        last < first,
+        "loss did not trend down: {first:.4} -> {last:.4} ({:?})",
+        r.losses
+    );
+}
+
+#[test]
+fn strategies_rank_as_in_paper_cpu() {
+    // Figure 5's qualitative ranking on the CPU engine (fast):
+    // block shuffling ≈ random > streaming for the drug task.
+    let (_d, train_be, test_be) = dataset();
+    let task = TaskSpec::by_name("drug").unwrap();
+    let mut f1 = std::collections::BTreeMap::new();
+    for (name, strategy) in [
+        ("stream", Strategy::Streaming { shuffle_buffer: 0 }),
+        ("block", Strategy::BlockShuffling { block_size: 16 }),
+        ("random", Strategy::BlockShuffling { block_size: 1 }),
+    ] {
+        let mut cfg = TrainConfig::new(task.clone(), strategy, 64, 8);
+        cfg.epochs = 2;
+        cfg.lr = 0.01;
+        let r = train_eval(train_be.clone(), test_be.clone(), &Engine::Cpu, &cfg).unwrap();
+        f1.insert(name, r.macro_f1);
+    }
+    assert!(f1["block"] > f1["stream"], "{f1:?}");
+    assert!(f1["random"] > f1["stream"], "{f1:?}");
+    assert!((f1["block"] - f1["random"]).abs() < 0.12, "{f1:?}");
+}
