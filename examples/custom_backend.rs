@@ -71,8 +71,7 @@ impl Backend for ToyStore {
                 runs: contiguous_runs(sorted).len() as u64,
                 rows: sorted.len() as u64,
                 bytes: sorted.len() as u64 * 8,
-                chunks: 0,
-                pages: 0,
+                ..IoReport::default()
             },
         })
     }

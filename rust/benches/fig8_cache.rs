@@ -1,0 +1,76 @@
+//! Bench: Figure 8 — block-granular cache + readahead. Measures the bytes
+//! that actually hit the storage backend and the virtual-disk rows/s with
+//! the cache on vs off, over repeated block-sampling epochs (the cache
+//! persists across epochs, so epoch 1 measures steady-state reuse).
+
+mod common;
+
+use scdata::bench_harness::measure_cache_epochs;
+use scdata::coordinator::Strategy;
+use scdata::util::stats::{fmt_bytes, fmt_rate};
+
+fn main() {
+    let backend = common::bench_backend();
+    let mut opts = common::bench_opts();
+    let strategy = Strategy::BlockShuffling { block_size: 16 };
+    let (fetch_factor, epochs) = (64usize, 2usize);
+
+    let off = measure_cache_epochs(&backend, strategy.clone(), fetch_factor, epochs, &opts)
+        .unwrap();
+
+    opts.cache_bytes = 64 << 20;
+    opts.cache_block_rows = 512; // = the bench dataset's chunk_rows
+    opts.locality_window = 8;
+    opts.readahead = true;
+    let on =
+        measure_cache_epochs(&backend, strategy, fetch_factor, epochs, &opts).unwrap();
+
+    println!("== Fig 8 — block cache (64 MiB, window 8, readahead) vs none ==\n");
+    println!("| epoch | bytes read (off) | bytes read (on) | hits | misses | evictions |");
+    println!("|---|---|---|---|---|---|");
+    for e in 0..epochs {
+        println!(
+            "| {e} | {} | {} | {} | {} | {} |",
+            fmt_bytes(off.epoch_bytes[e]),
+            fmt_bytes(on.epoch_bytes[e]),
+            on.epoch_hits[e],
+            on.epoch_misses[e],
+            on.epoch_evictions[e],
+        );
+    }
+    println!(
+        "\ntotal backend bytes: off {} → on {} ({:.1}% saved)",
+        fmt_bytes(off.total_bytes),
+        fmt_bytes(on.total_bytes),
+        100.0 * (1.0 - on.total_bytes as f64 / off.total_bytes.max(1) as f64),
+    );
+    println!(
+        "block hit rate: {:.1}%   steady-state rows/s: off {} → on {}",
+        100.0 * on.hit_rate,
+        fmt_rate(off.samples_per_sec),
+        fmt_rate(on.samples_per_sec)
+    );
+
+    // Acceptance: the cache must strictly reduce backend bytes for the
+    // block-sampling run, the warm epoch must be (almost) free, and the
+    // steady-state virtual-disk throughput must not regress.
+    assert!(
+        on.total_bytes < off.total_bytes,
+        "cache on must read strictly fewer backend bytes: {} !< {}",
+        on.total_bytes,
+        off.total_bytes
+    );
+    assert!(
+        on.epoch_bytes[epochs - 1] < on.epoch_bytes[0] / 2,
+        "warm epoch should be mostly cache hits: {:?}",
+        on.epoch_bytes
+    );
+    assert!(on.hit_rate > 0.3, "hit rate collapsed: {}", on.hit_rate);
+    assert!(
+        on.samples_per_sec >= off.samples_per_sec,
+        "steady-state throughput regressed: {} < {}",
+        on.samples_per_sec,
+        off.samples_per_sec
+    );
+    assert_eq!(on.epoch_rows, off.epoch_rows, "row streams must agree");
+}

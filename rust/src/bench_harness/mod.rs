@@ -7,8 +7,8 @@ pub mod sweep;
 pub mod timing;
 
 pub use sweep::{
-    annloader_baseline, measure_config, multiworker_grid, streaming_sweep, throughput_grid,
-    SweepOptions, SweepPoint,
+    annloader_baseline, measure_cache_epochs, measure_config, multiworker_grid, streaming_sweep,
+    throughput_grid, CacheRun, SweepOptions, SweepPoint,
 };
 pub use timing::{bench, bench_throughput, black_box, BenchResult};
 

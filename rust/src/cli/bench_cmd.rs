@@ -8,8 +8,8 @@ use anyhow::{bail, Result};
 
 use crate::bench_harness::report::{grid_table, points_to_json, worker_table, write_result};
 use crate::bench_harness::{
-    annloader_baseline, measure_config, multiworker_grid, streaming_sweep, throughput_grid,
-    SweepOptions, PAPER_GRID, TABLE2_BLOCKS, TABLE2_FETCH, TABLE2_WORKERS,
+    annloader_baseline, measure_cache_epochs, measure_config, multiworker_grid, streaming_sweep,
+    throughput_grid, SweepOptions, PAPER_GRID, TABLE2_BLOCKS, TABLE2_FETCH, TABLE2_WORKERS,
 };
 use crate::config::AppConfig;
 use crate::coordinator::entropy::{corollary33_bounds, dist_entropy};
@@ -20,6 +20,7 @@ use crate::store::rowgroup::{convert_to_rowgroup, RowGroupStore};
 use crate::store::Backend;
 use crate::train::{train_eval, TaskSpec, TrainConfig, TASKS};
 use crate::util::json::Json;
+use crate::util::stats::{fmt_bytes, fmt_rate};
 
 use super::args::Args;
 use super::commands::{app_config, make_engine};
@@ -40,16 +41,19 @@ pub fn bench(args: &Args) -> Result<()> {
         "fig5" => fig5(args, &cfg, quick)?,
         "fig6" => fig6(args, &cfg, quick)?,
         "fig7" => fig7(args, &cfg, quick)?,
+        "fig8" => fig8(args, &cfg, quick)?,
         "table2" => table2(args, &cfg, quick)?,
         "all" => {
-            for exp in ["fig2", "fig3", "fig4", "eq5", "fig5", "fig6", "fig7", "table2"] {
+            for exp in [
+                "fig2", "fig3", "fig4", "eq5", "fig5", "fig6", "fig7", "fig8", "table2",
+            ] {
                 println!("\n===== {exp} =====");
                 let mut sub = args.clone();
                 sub.positional = vec!["bench".into(), exp.into()];
                 bench(&sub)?;
             }
         }
-        other => bail!("unknown experiment '{other}' (fig2..fig7, eq5, table2, all)"),
+        other => bail!("unknown experiment '{other}' (fig2..fig8, eq5, table2, all)"),
     }
     Ok(())
 }
@@ -70,6 +74,7 @@ fn sweep_opts(cfg: &AppConfig, quick: bool) -> SweepOptions {
         label_col: "plate".into(),
         seed: cfg.seed,
         disk: cfg.disk,
+        ..SweepOptions::default()
     }
 }
 
@@ -401,6 +406,70 @@ fn backend_grid_figure(
         )
         .set("grid", points_to_json(&grid));
     write_result(&cfg.results_dir, name, body)?;
+    Ok(())
+}
+
+/// Figure 8: block cache + readahead — backend bytes read and rows/s with
+/// the cache on vs off over repeated block-sampling epochs.
+fn fig8(args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
+    let backend = open(cfg)?;
+    let mut opts = sweep_opts(cfg, quick);
+    let epochs = args.usize_or("epochs", 2)?.max(1);
+    let b = args.usize_or("block", 16)?;
+    let f = args.usize_or("fetch", if quick { 16 } else { 64 })?;
+    let cache_mb = args.usize_or(
+        "cache-mb",
+        if cfg.cache_mb > 0 { cfg.cache_mb } else { 64 },
+    )?;
+    let window = args.usize_or("locality-window", cfg.locality_window.max(8))?;
+    let strategy = Strategy::BlockShuffling { block_size: b };
+
+    let off = measure_cache_epochs(&backend, strategy.clone(), f, epochs, &opts)?;
+    opts.cache_bytes = cache_mb << 20;
+    opts.cache_block_rows = cfg.cache_block_rows;
+    opts.locality_window = window;
+    opts.readahead = args.bool("readahead") || cfg.readahead;
+    let on = measure_cache_epochs(&backend, strategy, f, epochs, &opts)?;
+
+    println!(
+        "Fig 8 — block cache ({} MiB, block_rows={}, window={}, readahead={}) vs no cache; b={b}, f={f}\n",
+        cache_mb, cfg.cache_block_rows, window, opts.readahead
+    );
+    println!("| epoch | bytes read (off) | bytes read (on) | hits | misses | evictions |");
+    println!("|---|---|---|---|---|---|");
+    for e in 0..epochs {
+        println!(
+            "| {e} | {} | {} | {} | {} | {} |",
+            fmt_bytes(off.epoch_bytes[e]),
+            fmt_bytes(on.epoch_bytes[e]),
+            on.epoch_hits[e],
+            on.epoch_misses[e],
+            on.epoch_evictions[e],
+        );
+    }
+    println!(
+        "\ntotal backend bytes: off {} → on {} ({:.1}% saved), hit rate {:.1}%",
+        fmt_bytes(off.total_bytes),
+        fmt_bytes(on.total_bytes),
+        100.0 * (1.0 - on.total_bytes as f64 / off.total_bytes.max(1) as f64),
+        100.0 * on.hit_rate
+    );
+    println!(
+        "steady-state virtual-disk throughput: off {} → on {}",
+        fmt_rate(off.samples_per_sec),
+        fmt_rate(on.samples_per_sec)
+    );
+    let mut body = Json::obj();
+    body.set("experiment", Json::Str("fig8".into()))
+        .set("cache_mb", Json::Num(cache_mb as f64))
+        .set("locality_window", Json::Num(window as f64))
+        .set("epochs", Json::Num(epochs as f64))
+        .set("bytes_off", Json::Num(off.total_bytes as f64))
+        .set("bytes_on", Json::Num(on.total_bytes as f64))
+        .set("hit_rate", Json::Num(on.hit_rate))
+        .set("samples_per_sec_off", Json::Num(off.samples_per_sec))
+        .set("samples_per_sec_on", Json::Num(on.samples_per_sec));
+    write_result(&cfg.results_dir, "fig8", body)?;
     Ok(())
 }
 

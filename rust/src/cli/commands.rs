@@ -145,6 +145,12 @@ pub fn train(args: &Args) -> Result<()> {
     if let Some(ms) = args.flags.get("max-steps") {
         tc.max_steps = Some(ms.parse()?);
     }
+    // Block cache + readahead + cache-aware scheduling (flags override
+    // the `[cache]` config table).
+    tc.loader.cache_bytes = args.usize_or("cache-mb", cfg.cache_mb)? << 20;
+    tc.loader.cache_block_rows = cfg.cache_block_rows;
+    tc.loader.readahead = args.bool("readahead") || cfg.readahead;
+    tc.loader.locality_window = args.usize_or("locality-window", cfg.locality_window)?;
     let report = train_eval(train_be, test_be, &engine, &tc)?;
     println!(
         "task={} strategy={} engine={}",
@@ -183,13 +189,30 @@ pub fn autotune(args: &Args) -> Result<()> {
         pattern: coll.pattern(),
         disk: cfg.disk,
     };
-    let result = tune(&inputs, &TuneOptions::default());
+    let opts = TuneOptions {
+        cache_bytes: (args.usize_or("cache-mb", cfg.cache_mb)? as u64) << 20,
+        ..TuneOptions::default()
+    };
+    let result = tune(&inputs, &opts);
     println!("H(plates) = {:.2} bits", result.h_p);
+    if opts.cache_bytes > 0 {
+        let dataset_bytes = inputs.n_rows as u64 * inputs.avg_row_bytes;
+        println!(
+            "block cache: {} budget over {} stored payload (steady-state hit fraction ≈ {:.0}%)",
+            fmt_bytes(opts.cache_bytes),
+            fmt_bytes(dataset_bytes),
+            100.0 * (opts.cache_bytes as f64 / dataset_bytes.max(1) as f64).min(1.0)
+        );
+    }
+    // When a cache is configured, configurations are ranked (and shown)
+    // by their cache-adjusted steady-state throughput.
+    let cache_on = opts.cache_bytes > 0;
     println!(
-        "recommended: block_size={} fetch_factor={} (predicted {}, entropy ≥ {:.2} bits, buffer {})",
+        "recommended: block_size={} fetch_factor={} (predicted {}{}, entropy ≥ {:.2} bits, buffer {})",
         result.best.block_size,
         result.best.fetch_factor,
-        fmt_rate(result.best.predicted_samples_per_sec),
+        fmt_rate(result.best.effective_samples_per_sec(cache_on)),
+        if cache_on { " cached" } else { "" },
         result.best.entropy_lower_bound,
         fmt_bytes(result.best.buffer_bytes)
     );
@@ -199,7 +222,7 @@ pub fn autotune(args: &Args) -> Result<()> {
             "  b={:<5} f={:<5} {:>12} {}",
             p.block_size,
             p.fetch_factor,
-            fmt_rate(p.predicted_samples_per_sec),
+            fmt_rate(p.effective_samples_per_sec(cache_on)),
             if p.feasible { "*" } else { "" }
         );
     }
@@ -219,7 +242,7 @@ pub fn calibrate(args: &Args) -> Result<()> {
             rows,
             bytes: rows * row_bytes,
             chunks: runs,
-            pages: 0,
+            ..IoReport::default()
         };
         let fetches = vec![io; 8];
         simulate_loader(

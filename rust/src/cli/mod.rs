@@ -26,13 +26,25 @@ COMMANDS:
               [--strategy random|streaming|buffer|block] [--block N]
               [--fetch N] [--engine cpu|pjrt] [--artifacts DIR]
               [--epochs N] [--lr F] [--max-steps N] [--seed N]
+              [--cache-mb N] [--readahead] [--locality-window N]
   bench       Regenerate paper figures/tables
-              fig2|fig3|fig4|eq5|fig5|fig6|fig7|table2|all
+              fig2|fig3|fig4|eq5|fig5|fig6|fig7|fig8|table2|all
               --data DIR [--results DIR] [--quick] [--engine cpu|pjrt]
               [--config FILE] [--seeds N]
+              fig8 also takes [--cache-mb N] [--readahead]
+              [--locality-window N] [--epochs N] [--block N] [--fetch N]
   autotune    Recommend (block size, fetch factor): --data DIR
+              [--cache-mb N]
   calibrate   Print virtual-disk anchors vs the paper's measurements
   help        Show this message
+
+The block cache: --cache-mb sets the byte budget of the block-granular
+LRU cache wrapped around the storage backend (0 = off), --readahead
+prefetches the next scheduled fetch's blocks in the background, and
+--locality-window N lets the cache-aware scheduler execute fetches up to
+N positions out of order to maximize block reuse (delivery order, and
+therefore the minibatch stream, is unchanged). Defaults come from the
+[cache] table of --config FILE.
 
 The virtual-disk model can be overridden with --config FILE (TOML, see
 configs/default.toml).";

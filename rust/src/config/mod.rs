@@ -17,6 +17,14 @@ pub struct AppConfig {
     pub batch_size: usize,
     pub seed: u64,
     pub disk: DiskModel,
+    /// `[cache]` table: block-cache budget in MiB (0 disables caching).
+    pub cache_mb: usize,
+    /// Rows per cached block (cache + scheduler granularity).
+    pub cache_block_rows: usize,
+    /// Enable the asynchronous readahead worker.
+    pub readahead: bool,
+    /// Cache-aware fetch scheduling window (≤ 1 disables reordering).
+    pub locality_window: usize,
 }
 
 impl Default for AppConfig {
@@ -28,6 +36,10 @@ impl Default for AppConfig {
             batch_size: 64,
             seed: 7,
             disk: DiskModel::sata_ssd_hdf5(),
+            cache_mb: 0,
+            cache_block_rows: 256,
+            readahead: false,
+            locality_window: 0,
         }
     }
 }
@@ -51,6 +63,11 @@ impl AppConfig {
             PathBuf::from(doc.str_or("results_dir", &cfg.results_dir.to_string_lossy()));
         cfg.batch_size = doc.usize_or("batch_size", cfg.batch_size);
         cfg.seed = doc.usize_or("seed", cfg.seed as usize) as u64;
+        // [cache] table: block cache + readahead + scheduler
+        cfg.cache_mb = doc.usize_or("cache.mb", cfg.cache_mb);
+        cfg.cache_block_rows = doc.usize_or("cache.block_rows", cfg.cache_block_rows);
+        cfg.readahead = doc.bool_or("cache.readahead", cfg.readahead);
+        cfg.locality_window = doc.usize_or("cache.locality_window", cfg.locality_window);
         // [io] table: disk-model overrides
         let d = &mut cfg.disk;
         d.call_overhead_us = doc.f64_or("io.call_overhead_us", d.call_overhead_us);
@@ -109,6 +126,28 @@ cell_cpu_us = 5
             c.disk.run_cost_max_us,
             DiskModel::sata_ssd_hdf5().run_cost_max_us
         );
+    }
+
+    #[test]
+    fn cache_table_parses() {
+        let c = AppConfig::from_toml(
+            r#"
+[cache]
+mb = 128
+block_rows = 512
+readahead = true
+locality_window = 8
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.cache_mb, 128);
+        assert_eq!(c.cache_block_rows, 512);
+        assert!(c.readahead);
+        assert_eq!(c.locality_window, 8);
+        // defaults: cache off
+        let d = AppConfig::default();
+        assert_eq!(d.cache_mb, 0);
+        assert!(!d.readahead);
     }
 
     #[test]

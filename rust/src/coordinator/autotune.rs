@@ -37,6 +37,10 @@ pub struct TuneOptions {
     /// Candidate grids (defaults: the paper's Figure-2 grid).
     pub block_sizes: Vec<usize>,
     pub fetch_factors: Vec<usize>,
+    /// Block-cache byte budget (`--cache-mb`); 0 = no cache. When set,
+    /// configurations are ranked by their cache-adjusted steady-state
+    /// throughput.
+    pub cache_bytes: u64,
 }
 
 impl Default for TuneOptions {
@@ -46,6 +50,7 @@ impl Default for TuneOptions {
             memory_budget_bytes: 2 << 30, // 2 GiB of buffered minibatches
             block_sizes: vec![1, 4, 16, 64, 256, 1024],
             fetch_factors: vec![1, 4, 16, 64, 256, 1024],
+            cache_bytes: 0,
         }
     }
 }
@@ -56,10 +61,25 @@ pub struct TunePoint {
     pub block_size: usize,
     pub fetch_factor: usize,
     pub predicted_samples_per_sec: f64,
+    /// Steady-state throughput with the configured block cache (equals
+    /// `predicted_samples_per_sec` when no cache is configured).
+    pub predicted_samples_per_sec_cached: f64,
     pub entropy_lower_bound: f64,
     pub entropy_upper_bound: f64,
     pub buffer_bytes: u64,
     pub feasible: bool,
+}
+
+impl TunePoint {
+    /// The throughput this point is ranked (and should be displayed) by:
+    /// the cache-adjusted prediction when a cache is configured.
+    pub fn effective_samples_per_sec(&self, cache_on: bool) -> f64 {
+        if cache_on {
+            self.predicted_samples_per_sec_cached
+        } else {
+            self.predicted_samples_per_sec
+        }
+    }
 }
 
 /// Tuner output: the chosen point plus the whole evaluated grid (for
@@ -84,9 +104,54 @@ pub fn predict_throughput(inputs: &TuneInputs, b: usize, f: usize) -> f64 {
         bytes: rows * inputs.avg_row_bytes,
         chunks: runs,
         pages: runs + rows * inputs.dense_row_bytes / inputs.disk.page_bytes,
+        ..IoReport::default()
     };
     let us = inputs.disk.disk_us(inputs.pattern, &io, 1)
         + inputs.disk.cpu_us(inputs.pattern, &io, rows as usize);
+    rows as f64 / (us / 1e6)
+}
+
+/// Predicted steady-state throughput for (b, f) with a block cache of
+/// `cache_bytes`: across epochs a `min(1, cache/payload)` fraction of the
+/// stored rows stays resident and is served without disk I/O, shrinking
+/// the disk-side runs/bytes; worker-side per-row transform costs are
+/// unchanged (every emitted row is still decoded/densified).
+pub fn predict_throughput_cached(
+    inputs: &TuneInputs,
+    b: usize,
+    f: usize,
+    cache_bytes: u64,
+) -> f64 {
+    if cache_bytes == 0 {
+        return predict_throughput(inputs, b, f);
+    }
+    let rows = (inputs.batch_size * f) as u64;
+    let dataset_bytes = (inputs.n_rows as u64 * inputs.avg_row_bytes).max(1);
+    let hit = (cache_bytes as f64 / dataset_bytes as f64).min(1.0);
+    let miss_rows = (rows as f64 * (1.0 - hit)).round() as u64;
+    let miss_runs = if miss_rows == 0 {
+        0
+    } else {
+        miss_rows.div_ceil(b as u64).max(1)
+    };
+    let disk_io = IoReport {
+        calls: u64::from(miss_rows > 0),
+        runs: miss_runs,
+        rows: miss_rows,
+        bytes: miss_rows * inputs.avg_row_bytes,
+        chunks: miss_runs,
+        pages: miss_runs + miss_rows * inputs.dense_row_bytes / inputs.disk.page_bytes,
+        ..IoReport::default()
+    };
+    let cpu_io = IoReport {
+        calls: 1,
+        runs: rows.div_ceil(b as u64).max(1),
+        rows,
+        bytes: rows * inputs.avg_row_bytes,
+        ..IoReport::default()
+    };
+    let us = inputs.disk.disk_us(inputs.pattern, &disk_io, 1)
+        + inputs.disk.cpu_us(inputs.pattern, &cpu_io, rows as usize);
     rows as f64 / (us / 1e6)
 }
 
@@ -107,12 +172,14 @@ pub fn tune(inputs: &TuneInputs, opts: &TuneOptions) -> TuneResult {
             let buffer_bytes =
                 (inputs.batch_size * f) as u64 * inputs.dense_row_bytes;
             let sps = predict_throughput(inputs, b, f);
+            let sps_cached = predict_throughput_cached(inputs, b, f, opts.cache_bytes);
             let feasible = eff_lo >= h_p - opts.entropy_slack_bits
                 && buffer_bytes <= opts.memory_budget_bytes;
             grid.push(TunePoint {
                 block_size: b,
                 fetch_factor: f,
                 predicted_samples_per_sec: sps,
+                predicted_samples_per_sec_cached: sps_cached,
                 // f-adjusted conservative bound (≥ the f=1 bound `lo`).
                 entropy_lower_bound: eff_lo.max(lo).max(0.0),
                 entropy_upper_bound: hi,
@@ -121,24 +188,18 @@ pub fn tune(inputs: &TuneInputs, opts: &TuneOptions) -> TuneResult {
             });
         }
     }
+    // Rank by cache-adjusted throughput when a cache is configured.
+    let rank = |p: &TunePoint| p.effective_samples_per_sec(opts.cache_bytes > 0);
     let best = grid
         .iter()
         .filter(|p| p.feasible)
-        .max_by(|a, b| {
-            a.predicted_samples_per_sec
-                .partial_cmp(&b.predicted_samples_per_sec)
-                .unwrap()
-        })
+        .max_by(|a, b| rank(a).partial_cmp(&rank(b)).unwrap())
         .copied()
         // Nothing feasible (e.g. zero slack): fall back to b=1 max-f.
         .unwrap_or_else(|| {
             grid.iter()
                 .filter(|p| p.block_size == 1)
-                .max_by(|a, b| {
-                    a.predicted_samples_per_sec
-                        .partial_cmp(&b.predicted_samples_per_sec)
-                        .unwrap()
-                })
+                .max_by(|a, b| rank(a).partial_cmp(&rank(b)).unwrap())
                 .copied()
                 .unwrap()
         });
@@ -195,9 +256,11 @@ mod tests {
     #[test]
     fn tight_memory_budget_caps_fetch_factor() {
         let inp = inputs();
-        let mut opts = TuneOptions::default();
-        // budget for at most 64*16 dense rows
-        opts.memory_budget_bytes = (64 * 16) as u64 * inp.dense_row_bytes;
+        let opts = TuneOptions {
+            // budget for at most 64*16 dense rows
+            memory_budget_bytes: (64 * 16) as u64 * inp.dense_row_bytes,
+            ..TuneOptions::default()
+        };
         let r = tune(&inp, &opts);
         assert!(r.best.fetch_factor <= 16, "best {:?}", r.best);
     }
@@ -205,10 +268,54 @@ mod tests {
     #[test]
     fn zero_slack_falls_back_to_b1() {
         let inp = inputs();
-        let mut opts = TuneOptions::default();
-        opts.entropy_slack_bits = -1.0; // impossible
+        let opts = TuneOptions {
+            entropy_slack_bits: -1.0, // impossible
+            ..TuneOptions::default()
+        };
         let r = tune(&inp, &opts);
         assert_eq!(r.best.block_size, 1);
+    }
+
+    #[test]
+    fn cache_prediction_speeds_up_and_saturates() {
+        let inp = inputs();
+        let plain = predict_throughput(&inp, 16, 64);
+        // No cache: identical prediction.
+        assert_eq!(predict_throughput_cached(&inp, 16, 64, 0), plain);
+        // Monotone in cache size, strictly faster once the cache holds a
+        // meaningful payload fraction.
+        let payload = inp.n_rows as u64 * inp.avg_row_bytes;
+        let half = predict_throughput_cached(&inp, 16, 64, payload / 2);
+        let full = predict_throughput_cached(&inp, 16, 64, payload);
+        assert!(half > plain, "half-cache {half} !> plain {plain}");
+        assert!(full >= half, "full {full} !>= half {half}");
+        // Fully cached: disk time gone, but per-row CPU still bounds it.
+        let huge = predict_throughput_cached(&inp, 16, 64, 100 * payload);
+        assert!((huge - full).abs() < 1e-6 * full.max(1.0));
+        assert!(huge.is_finite());
+    }
+
+    #[test]
+    fn tuner_with_cache_ranks_by_cached_throughput() {
+        let inp = inputs();
+        let opts = TuneOptions {
+            cache_bytes: inp.n_rows as u64 * inp.avg_row_bytes, // full
+            ..TuneOptions::default()
+        };
+        let r = tune(&inp, &opts);
+        assert!(r.best.feasible);
+        assert!(
+            r.best.predicted_samples_per_sec_cached
+                >= r.best.predicted_samples_per_sec
+        );
+        // Without a cache the two predictions coincide on every point.
+        let r0 = tune(&inp, &TuneOptions::default());
+        for p in &r0.grid {
+            assert_eq!(
+                p.predicted_samples_per_sec,
+                p.predicted_samples_per_sec_cached
+            );
+        }
     }
 
     #[test]

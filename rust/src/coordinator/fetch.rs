@@ -26,24 +26,41 @@ pub struct FetchedChunk {
     pub io: IoReport,
 }
 
-/// Execute one fetch.
-///
-/// * `indices` — the fetch batch (multiset; weighted strategies may repeat
-///   blocks).
-/// * `shuffle` — `Some(rng)` applies the line-9 in-memory reshuffle;
-///   `None` keeps stream order (pure streaming).
-pub fn run_fetch(
-    backend: &Arc<dyn Backend>,
-    indices: &[u32],
-    label_cols: &[String],
-    mut shuffle: Option<&mut Rng>,
-) -> Result<FetchedChunk> {
-    // Sort + dedup for the disk.
+/// The I/O half of a fetch: the backend result over the sorted unique
+/// indices, before the in-memory reshuffle. Produced by [`execute_fetch`]
+/// (possibly out of delivery order, under the cache-aware scheduler) and
+/// turned into a [`FetchedChunk`] by [`finish_fetch`] at delivery time.
+#[derive(Clone, Debug)]
+pub struct ExecutedFetch {
+    /// Sorted, de-duplicated row ids sent to the backend (line 7).
+    pub sorted: Vec<u32>,
+    /// Backend result aligned with `sorted`.
+    pub fetched: crate::store::FetchResult,
+}
+
+/// Algorithm 1 lines 7–8: sort + dedup the fetch batch and load it from
+/// the backend. This is the only part that touches storage, so the
+/// scheduler may run it ahead of delivery order.
+pub fn execute_fetch(backend: &Arc<dyn Backend>, indices: &[u32]) -> Result<ExecutedFetch> {
     let mut sorted: Vec<u32> = indices.to_vec();
     sorted.sort_unstable();
     sorted.dedup();
     let fetched = backend.fetch_rows(&sorted)?;
+    Ok(ExecutedFetch { sorted, fetched })
+}
 
+/// Algorithm 1 line 9: materialize the in-memory reshuffle over an
+/// executed fetch. Must be called in **delivery order** — the shuffle RNG
+/// stream is consumed here, which keeps the emitted minibatch sequence
+/// independent of the execution order chosen by the scheduler.
+pub fn finish_fetch(
+    ex: ExecutedFetch,
+    indices: &[u32],
+    backend: &Arc<dyn Backend>,
+    label_cols: &[String],
+    mut shuffle: Option<&mut Rng>,
+) -> Result<FetchedChunk> {
+    let ExecutedFetch { sorted, fetched } = ex;
     // Map the original multiset onto positions in the unique sorted batch.
     let mut positions: Vec<u32> = indices
         .iter()
@@ -52,7 +69,6 @@ pub fn run_fetch(
     if let Some(rng) = shuffle.as_deref_mut() {
         rng.shuffle(&mut positions);
     }
-
     let rows: Vec<u32> = positions.iter().map(|&p| sorted[p as usize]).collect();
     let x = fetched.x.select_rows(&positions);
     let labels = backend.obs().gather(label_cols, &rows)?;
@@ -62,6 +78,22 @@ pub fn run_fetch(
         labels,
         io: fetched.io,
     })
+}
+
+/// Execute one fetch end-to-end (lines 6–9).
+///
+/// * `indices` — the fetch batch (multiset; weighted strategies may repeat
+///   blocks).
+/// * `shuffle` — `Some(rng)` applies the line-9 in-memory reshuffle;
+///   `None` keeps stream order (pure streaming).
+pub fn run_fetch(
+    backend: &Arc<dyn Backend>,
+    indices: &[u32],
+    label_cols: &[String],
+    shuffle: Option<&mut Rng>,
+) -> Result<FetchedChunk> {
+    let ex = execute_fetch(backend, indices)?;
+    finish_fetch(ex, indices, backend, label_cols, shuffle)
 }
 
 #[cfg(test)]

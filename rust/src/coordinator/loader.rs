@@ -9,17 +9,19 @@
 //!   channel — the bound is the backpressure that keeps prefetch memory at
 //!   `prefetch_depth` fetches per worker, like PyTorch's `prefetch_factor`.
 
+use std::collections::HashMap;
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
+use crate::store::cache::{CacheConfig, CacheStats, CachingBackend};
 use crate::store::{Backend, CsrBatch, IoReport};
 use crate::util::rng::Rng;
 
 use super::ddp::assigned_fetches;
-use super::fetch::run_fetch;
-use super::plan::{build_plan, EpochPlan, Strategy};
+use super::fetch::{execute_fetch, finish_fetch, ExecutedFetch};
+use super::plan::{build_plan, locality_schedule, EpochPlan, Strategy};
 
 /// One training minibatch.
 #[derive(Clone, Debug)]
@@ -35,6 +37,27 @@ pub struct Minibatch {
 }
 
 /// Loader configuration (paper §3.3 parameters plus runtime knobs).
+///
+/// # Example: enable the block cache + cache-aware scheduling
+///
+/// The CLI flags `--cache-mb 64 --readahead --locality-window 8` map onto
+/// the config like this:
+///
+/// ```
+/// use scdata::coordinator::{LoaderConfig, Strategy};
+///
+/// let cfg = LoaderConfig {
+///     strategy: Strategy::BlockShuffling { block_size: 16 },
+///     cache_bytes: 64 << 20,  // --cache-mb 64
+///     readahead: true,        // --readahead
+///     locality_window: 8,     // --locality-window 8
+///     ..Default::default()
+/// };
+/// assert_eq!(cfg.cache_bytes, 64 << 20);
+/// ```
+///
+/// With identical seeds, the cache and scheduler change only the I/O
+/// trace — never the emitted minibatch stream (`tests/determinism.rs`).
 #[derive(Clone, Debug)]
 pub struct LoaderConfig {
     pub strategy: Strategy,
@@ -55,6 +78,25 @@ pub struct LoaderConfig {
     /// DDP rank / world size (fetch-level round robin).
     pub rank: usize,
     pub world_size: usize,
+    /// Byte budget for the block-granular LRU cache wrapped around the
+    /// backend (`--cache-mb`); 0 disables caching. The cache is shared by
+    /// all workers and persists across epochs.
+    pub cache_bytes: usize,
+    /// Rows per cached block — the granularity of both the cache and the
+    /// locality scheduler. Align with the store's chunk size for best
+    /// reuse.
+    pub cache_block_rows: usize,
+    /// Asynchronously prefetch the next scheduled fetch's blocks into the
+    /// cache (`--readahead`; requires `cache_bytes > 0`).
+    pub readahead: bool,
+    /// Cache-aware fetch scheduling window (`--locality-window`): fetches
+    /// are *executed* up to this many positions out of order to maximize
+    /// block overlap between consecutive backend reads, then delivered in
+    /// plan order. ≤ 1 disables reordering. Works without the cache too
+    /// (temporal locality still helps the OS page cache), but pays a
+    /// reorder buffer of up to `window + 1` decoded fetches per worker —
+    /// most useful together with `cache_bytes > 0`.
+    pub locality_window: usize,
 }
 
 impl Default for LoaderConfig {
@@ -70,6 +112,10 @@ impl Default for LoaderConfig {
             drop_last: false,
             rank: 0,
             world_size: 1,
+            cache_bytes: 0,
+            cache_block_rows: 256,
+            readahead: false,
+            locality_window: 0,
         }
     }
 }
@@ -90,21 +136,56 @@ pub struct LoadStats {
 
 /// The loader.
 pub struct ScDataset {
+    /// The fetch target: the raw backend, or the [`CachingBackend`]
+    /// wrapped around it when `cache_bytes > 0`.
     backend: Arc<dyn Backend>,
+    cache: Option<Arc<CachingBackend>>,
     cfg: LoaderConfig,
 }
 
 impl ScDataset {
     pub fn new(backend: Arc<dyn Backend>, cfg: LoaderConfig) -> ScDataset {
-        ScDataset { backend, cfg }
+        let cache = if cfg.cache_bytes > 0 {
+            Some(Arc::new(CachingBackend::new(
+                backend.clone(),
+                CacheConfig {
+                    capacity_bytes: cfg.cache_bytes,
+                    block_rows: cfg.cache_block_rows.max(1),
+                    readahead: cfg.readahead,
+                },
+            )))
+        } else {
+            None
+        };
+        let backend: Arc<dyn Backend> = match &cache {
+            Some(c) => c.clone(),
+            None => backend,
+        };
+        ScDataset {
+            backend,
+            cache,
+            cfg,
+        }
     }
 
     pub fn config(&self) -> &LoaderConfig {
         &self.cfg
     }
 
+    /// The backend fetches are served from (the cache wrapper when
+    /// caching is enabled).
     pub fn backend(&self) -> &Arc<dyn Backend> {
         &self.backend
+    }
+
+    /// The cache wrapper, when caching is enabled.
+    pub fn cache(&self) -> Option<&Arc<CachingBackend>> {
+        self.cache.as_ref()
+    }
+
+    /// Cumulative block-cache statistics; `None` when caching is off.
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
     }
 
     /// Build this epoch's plan (identical on every rank).
@@ -124,7 +205,7 @@ impl ScDataset {
     /// Iterate one epoch. Statistics are observable through
     /// [`EpochIter::stats`] while iterating and after exhaustion.
     pub fn epoch(&self, epoch: u64) -> Result<EpochIter> {
-        let plan = self.plan(epoch)?;
+        let plan = Arc::new(self.plan(epoch)?);
         let n_fetches = plan.n_fetches();
         let stats = Arc::new(Mutex::new(LoadStats::default()));
         let use_buffer = matches!(
@@ -132,18 +213,37 @@ impl ScDataset {
             Strategy::Streaming { shuffle_buffer } if shuffle_buffer > 0
         );
         let shuffle_in_fetch = !matches!(self.cfg.strategy, Strategy::Streaming { .. });
-        if self.cfg.num_workers == 0 {
-            let fetch_ids = assigned_fetches(n_fetches, self.cfg.rank, self.cfg.world_size, 0, 1);
-            let source = FetchStream {
+        let window = self.cfg.locality_window;
+        let block_rows = self.cfg.cache_block_rows.max(1);
+        let readahead = self.cfg.readahead && self.cache.is_some();
+        // Shared constructor: the cache-aware scheduler picks the
+        // *execution* order within the bounded window; delivery stays in
+        // plan order so the emitted stream is schedule-independent.
+        let make_stream = |fetch_ids: Vec<usize>, rng: Rng| -> FetchStream {
+            let exec_order = if window > 1 {
+                locality_schedule(&plan, &fetch_ids, block_rows, window)
+            } else {
+                fetch_ids.clone()
+            };
+            FetchStream {
                 backend: self.backend.clone(),
-                plan: Arc::new(plan),
+                cache: self.cache.clone(),
+                plan: plan.clone(),
                 fetch_ids,
-                next: 0,
+                exec_order,
+                next_deliver: 0,
+                next_exec: 0,
+                pending: HashMap::new(),
+                readahead,
                 label_cols: self.cfg.label_cols.clone(),
-                rng: Rng::new(self.cfg.seed).fork(0x10_000 + epoch),
+                rng,
                 shuffle_in_fetch,
                 stats: stats.clone(),
-            };
+            }
+        };
+        if self.cfg.num_workers == 0 {
+            let fetch_ids = assigned_fetches(n_fetches, self.cfg.rank, self.cfg.world_size, 0, 1);
+            let source = make_stream(fetch_ids, Rng::new(self.cfg.seed).fork(0x10_000 + epoch));
             let inner: Box<dyn Iterator<Item = Result<Minibatch>> + Send> = if use_buffer {
                 let cap = match self.cfg.strategy {
                     Strategy::Streaming { shuffle_buffer } => shuffle_buffer,
@@ -170,22 +270,16 @@ impl ScDataset {
         let workers = self.cfg.num_workers;
         let cap = (self.cfg.prefetch_depth.max(1)) * workers * self.cfg.fetch_factor;
         let (tx, rx) = sync_channel::<Result<Minibatch>>(cap);
-        let plan = Arc::new(plan);
         let mut handles = Vec::new();
         for w in 0..workers {
             let fetch_ids =
                 assigned_fetches(n_fetches, self.cfg.rank, self.cfg.world_size, w, workers);
-            let source = FetchStream {
-                backend: self.backend.clone(),
-                plan: plan.clone(),
+            // Distinct shuffle stream per (epoch, worker) — same for
+            // every rank.
+            let source = make_stream(
                 fetch_ids,
-                next: 0,
-                label_cols: self.cfg.label_cols.clone(),
-                // Distinct stream per (epoch, worker) — same for every rank.
-                rng: Rng::new(self.cfg.seed).fork(0x10_000 + epoch).fork(w as u64),
-                shuffle_in_fetch,
-                stats: stats.clone(),
-            };
+                Rng::new(self.cfg.seed).fork(0x10_000 + epoch).fork(w as u64),
+            );
             let tx = tx.clone();
             let batch_size = self.cfg.batch_size;
             let drop_last = self.cfg.drop_last;
@@ -271,11 +365,27 @@ impl Iterator for ChannelIter {
 }
 
 /// Streams fetched (and optionally reshuffled) chunks from the plan.
+///
+/// Fetches are *executed* against the backend in `exec_order` (the
+/// cache-aware schedule) but *delivered* in `fetch_ids` (plan) order;
+/// out-of-order completions wait in `pending` (bounded by the locality
+/// window). The line-9 shuffle RNG is consumed at delivery time, so the
+/// emitted minibatch stream is identical whatever the execution order.
 struct FetchStream {
     backend: Arc<dyn Backend>,
+    /// Set when caching is enabled — the readahead hook lives here.
+    cache: Option<Arc<CachingBackend>>,
     plan: Arc<EpochPlan>,
+    /// Delivery order: this stream's fetch ids, in plan order.
     fetch_ids: Vec<usize>,
-    next: usize,
+    /// Execution order: bounded-window permutation of `fetch_ids`.
+    exec_order: Vec<usize>,
+    next_deliver: usize,
+    next_exec: usize,
+    /// Executed-but-undelivered fetches (≤ window + 1 entries).
+    pending: HashMap<usize, ExecutedFetch>,
+    /// Prefetch the next scheduled fetch's blocks while executing.
+    readahead: bool,
     label_cols: Vec<String>,
     rng: Rng,
     shuffle_in_fetch: bool,
@@ -284,29 +394,48 @@ struct FetchStream {
 
 impl FetchStream {
     fn next_chunk(&mut self) -> Option<Result<super::fetch::FetchedChunk>> {
-        let id = *self.fetch_ids.get(self.next)?;
-        self.next += 1;
-        let indices = self.plan.fetch_indices(id);
-        let t0 = std::time::Instant::now();
-        let result = run_fetch(
+        let id = *self.fetch_ids.get(self.next_deliver)?;
+        self.next_deliver += 1;
+        // Run scheduled fetches until the one to deliver is resident.
+        while !self.pending.contains_key(&id) {
+            let eid = self.exec_order[self.next_exec];
+            self.next_exec += 1;
+            if self.readahead {
+                if let (Some(cache), Some(&nid)) =
+                    (self.cache.as_ref(), self.exec_order.get(self.next_exec))
+                {
+                    // Kick off readahead of the *next* scheduled fetch's
+                    // blocks; it overlaps with this fetch's decode.
+                    cache.prefetch(self.plan.fetch_indices(nid));
+                }
+            }
+            let t0 = std::time::Instant::now();
+            match execute_fetch(&self.backend, self.plan.fetch_indices(eid)) {
+                Ok(ex) => {
+                    let dt = t0.elapsed().as_nanos() as u64;
+                    let mut s = self.stats.lock().unwrap();
+                    s.fetches += 1;
+                    s.io.add(&ex.fetched.io);
+                    s.fetch_reports.push(ex.fetched.io);
+                    s.real_fetch_ns += dt;
+                    drop(s);
+                    self.pending.insert(eid, ex);
+                }
+                Err(e) => return Some(Err(e)),
+            }
+        }
+        let ex = self.pending.remove(&id).expect("executed above");
+        Some(finish_fetch(
+            ex,
+            self.plan.fetch_indices(id),
             &self.backend,
-            indices,
             &self.label_cols,
             if self.shuffle_in_fetch {
                 Some(&mut self.rng)
             } else {
                 None
             },
-        );
-        let dt = t0.elapsed().as_nanos() as u64;
-        if let Ok(chunk) = &result {
-            let mut s = self.stats.lock().unwrap();
-            s.fetches += 1;
-            s.io.add(&chunk.io);
-            s.fetch_reports.push(chunk.io);
-            s.real_fetch_ns += dt;
-        }
-        Some(result)
+        ))
     }
 }
 
@@ -704,6 +833,72 @@ mod tests {
         assert!(s.io.runs > 0 && s.io.bytes > 0);
         assert!(s.real_fetch_ns > 0);
         assert_eq!(s.batches, (b.n_rows() as u64).div_ceil(25));
+    }
+
+    #[test]
+    fn cache_and_scheduler_preserve_coverage() {
+        let (_d, b) = backend(300);
+        let n = b.n_rows();
+        for (window, readahead, workers) in
+            [(0usize, false, 0usize), (8, false, 0), (8, true, 0), (8, true, 3)]
+        {
+            let ds = ScDataset::new(
+                b.clone(),
+                LoaderConfig {
+                    strategy: Strategy::BlockShuffling { block_size: 8 },
+                    batch_size: 32,
+                    fetch_factor: 2,
+                    label_cols: vec!["plate".into()],
+                    num_workers: workers,
+                    cache_bytes: 1 << 20,
+                    cache_block_rows: 64,
+                    readahead,
+                    locality_window: window,
+                    ..Default::default()
+                },
+            );
+            let mut rows = collect_rows(ds.epoch(0).unwrap());
+            rows.sort_unstable();
+            assert_eq!(
+                rows,
+                (0..n as u32).collect::<Vec<_>>(),
+                "window={window} readahead={readahead} workers={workers}"
+            );
+            let stats = ds.cache_stats().unwrap();
+            assert!(stats.misses + stats.prefetched_blocks > 0);
+        }
+    }
+
+    #[test]
+    fn warm_cache_epoch_reads_no_bytes() {
+        let (_d, b) = backend(300);
+        let ds = ScDataset::new(
+            b,
+            LoaderConfig {
+                strategy: Strategy::BlockShuffling { block_size: 8 },
+                batch_size: 32,
+                fetch_factor: 2,
+                cache_bytes: 64 << 20,
+                cache_block_rows: 64,
+                ..Default::default()
+            },
+        );
+        for mb in ds.epoch(0).unwrap() {
+            mb.unwrap();
+        }
+        let cold = ds.cache_stats().unwrap().total_bytes_read();
+        assert!(cold > 0);
+        // Epoch 1 reshuffles but touches the same rows: all resident.
+        for mb in ds.epoch(1).unwrap() {
+            mb.unwrap();
+        }
+        let warm = ds.cache_stats().unwrap();
+        assert_eq!(
+            warm.total_bytes_read(),
+            cold,
+            "a warm epoch must be served entirely from the cache"
+        );
+        assert!(warm.hits > 0);
     }
 
     #[test]

@@ -12,4 +12,4 @@ pub mod loader;
 pub mod plan;
 
 pub use loader::{EpochIter, LoadStats, LoaderConfig, Minibatch, ScDataset};
-pub use plan::{build_plan, EpochPlan, Strategy};
+pub use plan::{build_plan, locality_schedule, EpochPlan, Strategy};

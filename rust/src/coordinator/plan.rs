@@ -105,6 +105,98 @@ impl EpochPlan {
     }
 }
 
+/// Cache-aware fetch scheduling: choose the order in which a worker's
+/// fetch batches are *executed against the backend* so that consecutive
+/// fetches share as many cache blocks (`block_rows`-row ranges) as
+/// possible, reordering only within a bounded window of the original
+/// order.
+///
+/// The returned vector is a permutation of `fetch_ids` (the worker's
+/// assigned fetch ids, in delivery order). Invariants, property-tested in
+/// `tests/proptest_coordinator.rs`:
+///
+/// * **permutation** — every fetch id appears exactly once, so the
+///   per-epoch row-id multiset is untouched;
+/// * **bounded displacement** — the element executed at step `j` comes
+///   from original position `o` with `|o − j| ≤ window` (greedy selection
+///   looks at most `window` ahead; an aging rule force-picks the head once
+///   it has been delayed `window` steps), which also bounds the loader's
+///   reorder buffer;
+/// * **delivery order unchanged** — callers still *emit* minibatches in
+///   `fetch_ids` order (the loader buffers out-of-order completions), so
+///   minibatch-diversity guarantees and the emitted stream are untouched.
+///
+/// Greedy score: number of shared cache-block ids with the previously
+/// executed fetch; ties break toward the earliest original position, so
+/// the schedule is deterministic. `window ≤ 1` disables reordering.
+pub fn locality_schedule(
+    plan: &EpochPlan,
+    fetch_ids: &[usize],
+    block_rows: usize,
+    window: usize,
+) -> Vec<usize> {
+    if window <= 1 || block_rows == 0 || fetch_ids.len() <= 2 {
+        return fetch_ids.to_vec();
+    }
+    let br = block_rows as u32;
+    // Sorted unique cache-block ids touched by each fetch.
+    let block_sets: Vec<Vec<u32>> = fetch_ids
+        .iter()
+        .map(|&id| {
+            let mut blocks: Vec<u32> =
+                plan.fetch_indices(id).iter().map(|&r| r / br).collect();
+            blocks.sort_unstable();
+            blocks.dedup();
+            blocks
+        })
+        .collect();
+    // `remaining` holds original positions, in original order.
+    let mut remaining: std::collections::VecDeque<usize> = (0..fetch_ids.len()).collect();
+    let mut out = Vec::with_capacity(fetch_ids.len());
+    let mut prev: Option<usize> = None;
+    for step in 0..fetch_ids.len() {
+        let pick = if remaining[0] + window <= step {
+            // Aging: the head has been delayed `window` steps — force it.
+            0
+        } else if let Some(pv) = prev {
+            let lookahead = window.min(remaining.len());
+            let mut best = 0usize;
+            let mut best_score = sorted_overlap(&block_sets[pv], &block_sets[remaining[0]]);
+            for c in 1..lookahead {
+                let score = sorted_overlap(&block_sets[pv], &block_sets[remaining[c]]);
+                if score > best_score {
+                    best = c;
+                    best_score = score;
+                }
+            }
+            best
+        } else {
+            0
+        };
+        let pos = remaining.remove(pick).expect("pick within remaining");
+        prev = Some(pos);
+        out.push(fetch_ids[pos]);
+    }
+    out
+}
+
+/// Count the common elements of two sorted, de-duplicated slices.
+fn sorted_overlap(a: &[u32], b: &[u32]) -> usize {
+    let (mut i, mut j, mut n) = (0usize, 0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                n += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    n
+}
+
 /// Block descriptor used during planning.
 #[derive(Clone, Copy, Debug)]
 struct Block {
@@ -394,6 +486,96 @@ mod tests {
             Strategy::BlockShuffling { block_size: 16 }.name(),
             "block-shuffling"
         );
+    }
+
+    /// Hand-built plan whose fetches touch known cache blocks: with
+    /// `fetch_rows = 16` and `block_rows = 16`, fetch i covers the two
+    /// 16-row blocks listed in `block_pairs[i]`.
+    fn plan_with_block_pairs(block_pairs: &[(u32, u32)]) -> EpochPlan {
+        let mut order = Vec::new();
+        for &(a, b) in block_pairs {
+            order.extend(a * 16..a * 16 + 8);
+            order.extend(b * 16..b * 16 + 8);
+        }
+        EpochPlan {
+            order,
+            fetch_rows: 16,
+            batch_size: 8,
+            drop_last: false,
+        }
+    }
+
+    fn adjacent_overlap(plan: &EpochPlan, sched: &[usize], block_rows: u32) -> usize {
+        let sets: Vec<Vec<u32>> = sched
+            .iter()
+            .map(|&id| {
+                let mut s: Vec<u32> = plan
+                    .fetch_indices(id)
+                    .iter()
+                    .map(|&r| r / block_rows)
+                    .collect();
+                s.sort_unstable();
+                s.dedup();
+                s
+            })
+            .collect();
+        sets.windows(2).map(|w| sorted_overlap(&w[0], &w[1])).sum()
+    }
+
+    #[test]
+    fn locality_schedule_noop_when_disabled() {
+        let p = plan(&Strategy::BlockShuffling { block_size: 8 }, 256, 8, 2);
+        let ids: Vec<usize> = (0..p.n_fetches()).collect();
+        assert_eq!(locality_schedule(&p, &ids, 16, 0), ids);
+        assert_eq!(locality_schedule(&p, &ids, 16, 1), ids);
+        assert_eq!(locality_schedule(&p, &ids, 0, 8), ids);
+    }
+
+    #[test]
+    fn locality_schedule_is_bounded_permutation() {
+        let p = plan(&Strategy::BlockShuffling { block_size: 4 }, 1000, 8, 2);
+        let ids: Vec<usize> = (0..p.n_fetches()).collect();
+        for window in [2usize, 4, 16] {
+            let sched = locality_schedule(&p, &ids, 32, window);
+            let mut sorted = sched.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, ids, "must be a permutation (window={window})");
+            for (j, &id) in sched.iter().enumerate() {
+                // fetch ids here are their own original positions
+                assert!(
+                    id.abs_diff(j) <= window,
+                    "displacement bound violated: window={window} pos={j} orig={id}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn locality_schedule_deterministic() {
+        let p = plan(&Strategy::BlockShuffling { block_size: 4 }, 500, 8, 2);
+        let ids: Vec<usize> = (0..p.n_fetches()).collect();
+        assert_eq!(
+            locality_schedule(&p, &ids, 16, 4),
+            locality_schedule(&p, &ids, 16, 4)
+        );
+    }
+
+    #[test]
+    fn locality_schedule_groups_overlapping_fetches() {
+        // Fetches alternate between two disjoint block chains; adjacent
+        // overlap in plan order is zero, but a window-3 schedule can chain
+        // same-group fetches (which share one block each).
+        let p = plan_with_block_pairs(&[(0, 1), (4, 5), (1, 2), (5, 6), (2, 3), (6, 7)]);
+        let ids: Vec<usize> = (0..p.n_fetches()).collect();
+        assert_eq!(adjacent_overlap(&p, &ids, 16), 0);
+        let sched = locality_schedule(&p, &ids, 16, 3);
+        assert!(
+            adjacent_overlap(&p, &sched, 16) > 0,
+            "scheduler found no block overlap: {sched:?}"
+        );
+        let mut sorted = sched.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, ids);
     }
 
     #[test]

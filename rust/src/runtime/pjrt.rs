@@ -1,117 +1,19 @@
 //! PJRT execution of AOT artifacts (the only place the `xla` crate is
 //! touched). HLO text → `HloModuleProto::from_text_file` → compile once →
 //! execute many; executables are cached per artifact name.
+//!
+//! The `xla` crate is not available in the offline build, so the whole
+//! PJRT path is gated behind the `pjrt` cargo feature (which expects a
+//! vendored `xla` crate). Without it a stub [`Runtime`] with the same API
+//! reports PJRT as unavailable at `open` time and callers fall back to the
+//! pure-Rust CPU engine. [`Tensor`] (the host-side tensor type the trainer
+//! exchanges with either engine) is always available.
 
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use anyhow::{anyhow, bail, Result};
 
-use anyhow::{anyhow, bail, Context, Result};
-
-use super::artifact::{ArtifactEntry, Dtype, Manifest, TensorSpec};
-
-/// PJRT runtime handle over an artifact directory.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: Mutex<HashMap<String, Arc<Executable>>>,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client and load the manifest.
-    pub fn open(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
-        Ok(Runtime {
-            client,
-            manifest,
-            cache: Mutex::new(HashMap::new()),
-        })
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch from cache) the artifact for (kind, genes, classes).
-    pub fn load(&self, kind: &str, genes: usize, classes: usize) -> Result<Arc<Executable>> {
-        let entry = self.manifest.find(kind, genes, classes)?.clone();
-        {
-            let cache = self.cache.lock().unwrap();
-            if let Some(exe) = cache.get(&entry.name) {
-                return Ok(exe.clone());
-            }
-        }
-        let proto = xla::HloModuleProto::from_text_file(&entry.path)
-            .map_err(|e| anyhow!("parse {}: {e}", entry.path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {}: {e}", entry.name))?;
-        let exe = Arc::new(Executable { exe, entry });
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(exe.entry.name.clone(), exe.clone());
-        Ok(exe)
-    }
-}
-
-/// A compiled artifact ready to execute.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub entry: ArtifactEntry,
-}
-
-impl Executable {
-    /// Execute with host tensors; returns one host tensor per manifest
-    /// output (tuple roots are decomposed).
-    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        if inputs.len() != self.entry.inputs.len() {
-            bail!(
-                "{}: expected {} inputs, got {}",
-                self.entry.name,
-                self.entry.inputs.len(),
-                inputs.len()
-            );
-        }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (t, spec) in inputs.iter().zip(&self.entry.inputs) {
-            literals.push(t.to_literal(spec).with_context(|| {
-                format!("argument '{}' of {}", spec.name, self.entry.name)
-            })?);
-        }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {}: {e}", self.entry.name))?;
-        let root = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e}"))?;
-        let parts: Vec<xla::Literal> = if self.entry.tuple_output {
-            root.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?
-        } else {
-            vec![root]
-        };
-        if parts.len() != self.entry.outputs.len() {
-            bail!(
-                "{}: expected {} outputs, got {}",
-                self.entry.name,
-                self.entry.outputs.len(),
-                parts.len()
-            );
-        }
-        parts
-            .into_iter()
-            .zip(&self.entry.outputs)
-            .map(|(lit, spec)| Tensor::from_literal(&lit, spec))
-            .collect()
-    }
-}
+use super::artifact::{Dtype, TensorSpec};
+#[cfg(not(feature = "pjrt"))]
+use super::artifact::{ArtifactEntry, Manifest};
 
 /// A host-side tensor: shape is implied by the manifest spec it travels
 /// with; data is row-major.
@@ -167,18 +69,198 @@ impl Tensor {
                 .ok_or_else(|| anyhow!("empty tensor")),
         }
     }
+}
 
-    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
-        if self.len() != spec.elements() {
+// ---------------------------------------------------------------------------
+// Stub runtime (default offline build): same API surface, fails at open.
+// ---------------------------------------------------------------------------
+
+/// Stub PJRT runtime: the offline build has no `xla` crate, so opening
+/// always fails with an actionable message and callers fall back to the
+/// CPU engine.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    #[allow(dead_code)]
+    manifest: Manifest,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    pub fn open(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        // Surface missing-artifact errors first so the message matches the
+        // real runtime's behaviour, then report the missing PJRT support.
+        let _ = Manifest::load(artifacts_dir)?;
+        bail!(
+            "PJRT support is not compiled in (rebuild with `--features pjrt` \
+             and a vendored `xla` crate); use the cpu engine instead"
+        )
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "pjrt-stub".to_string()
+    }
+
+    pub fn load(
+        &self,
+        kind: &str,
+        _genes: usize,
+        _classes: usize,
+    ) -> Result<std::sync::Arc<Executable>> {
+        bail!("PJRT support is not compiled in (artifact '{kind}' unavailable)")
+    }
+}
+
+/// Stub executable: never constructed by the stub runtime; exists so the
+/// trainer's PJRT code paths typecheck in the offline build.
+#[cfg(not(feature = "pjrt"))]
+pub struct Executable {
+    pub entry: ArtifactEntry,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Executable {
+    pub fn run(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        bail!("PJRT support is not compiled in")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Real runtime (requires the `pjrt` feature + a vendored `xla` crate).
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+pub use real::{Executable, Runtime};
+
+#[cfg(feature = "pjrt")]
+mod real {
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex};
+
+    use anyhow::{anyhow, bail, Context, Result};
+
+    use super::super::artifact::{ArtifactEntry, Dtype, Manifest, TensorSpec};
+    use super::Tensor;
+
+    /// PJRT runtime handle over an artifact directory.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: Mutex<HashMap<String, Arc<Executable>>>,
+    }
+
+    impl Runtime {
+        /// Create a CPU PJRT client and load the manifest.
+        pub fn open(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+            let manifest = Manifest::load(artifacts_dir)?;
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+            Ok(Runtime {
+                client,
+                manifest,
+                cache: Mutex::new(HashMap::new()),
+            })
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile (or fetch from cache) the artifact for (kind, genes, classes).
+        pub fn load(&self, kind: &str, genes: usize, classes: usize) -> Result<Arc<Executable>> {
+            let entry = self.manifest.find(kind, genes, classes)?.clone();
+            {
+                let cache = self.cache.lock().unwrap();
+                if let Some(exe) = cache.get(&entry.name) {
+                    return Ok(exe.clone());
+                }
+            }
+            let proto = xla::HloModuleProto::from_text_file(&entry.path)
+                .map_err(|e| anyhow!("parse {}: {e}", entry.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e}", entry.name))?;
+            let exe = Arc::new(Executable { exe, entry });
+            self.cache
+                .lock()
+                .unwrap()
+                .insert(exe.entry.name.clone(), exe.clone());
+            Ok(exe)
+        }
+    }
+
+    /// A compiled artifact ready to execute.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub entry: ArtifactEntry,
+    }
+
+    impl Executable {
+        /// Execute with host tensors; returns one host tensor per manifest
+        /// output (tuple roots are decomposed).
+        pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            if inputs.len() != self.entry.inputs.len() {
+                bail!(
+                    "{}: expected {} inputs, got {}",
+                    self.entry.name,
+                    self.entry.inputs.len(),
+                    inputs.len()
+                );
+            }
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (t, spec) in inputs.iter().zip(&self.entry.inputs) {
+                literals.push(to_literal(t, spec).with_context(|| {
+                    format!("argument '{}' of {}", spec.name, self.entry.name)
+                })?);
+            }
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("execute {}: {e}", self.entry.name))?;
+            let root = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e}"))?;
+            let parts: Vec<xla::Literal> = if self.entry.tuple_output {
+                root.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?
+            } else {
+                vec![root]
+            };
+            if parts.len() != self.entry.outputs.len() {
+                bail!(
+                    "{}: expected {} outputs, got {}",
+                    self.entry.name,
+                    self.entry.outputs.len(),
+                    parts.len()
+                );
+            }
+            parts
+                .into_iter()
+                .zip(&self.entry.outputs)
+                .map(|(lit, spec)| from_literal(&lit, spec))
+                .collect()
+        }
+    }
+
+    fn to_literal(t: &Tensor, spec: &TensorSpec) -> Result<xla::Literal> {
+        if t.len() != spec.elements() {
             bail!(
                 "size mismatch: tensor has {} elements, spec {:?} needs {}",
-                self.len(),
+                t.len(),
                 spec.shape,
                 spec.elements()
             );
         }
         let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-        let lit = match (self, spec.dtype) {
+        let lit = match (t, spec.dtype) {
             (Tensor::F32(v), Dtype::F32) => xla::Literal::vec1(v),
             (Tensor::I32(v), Dtype::I32) => xla::Literal::vec1(v),
             _ => bail!("dtype mismatch for '{}'", spec.name),
@@ -210,106 +292,124 @@ impl Tensor {
 mod tests {
     use super::*;
 
-    fn artifacts_available() -> bool {
-        std::path::Path::new("artifacts/manifest.json").exists()
-    }
-
-    /// End-to-end: compile the tiny train-step artifact and drive a few
-    /// steps; loss must drop on a separable toy problem. Skipped when
-    /// `make artifacts` has not been run.
     #[test]
-    fn train_step_executes_and_learns() {
-        if !artifacts_available() {
-            eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
-            return;
-        }
-        let rt = Runtime::open("artifacts").unwrap();
-        let (genes, classes, m) = (64usize, 6usize, 64usize);
-        let exe = rt.load("train_step", genes, classes).unwrap();
-        // init state
-        let mut rng = crate::util::rng::Rng::new(0);
-        let mut state: Vec<Tensor> = exe.entry.inputs[..7]
-            .iter()
-            .map(Tensor::zeros)
-            .collect();
-        if let Tensor::F32(w) = &mut state[0] {
-            for x in w.iter_mut() {
-                *x = (rng.normal() * 0.01) as f32;
-            }
-        }
-        // separable batch: class c -> block of genes [8c, 8c+8) hot
-        let mut x = vec![0f32; m * genes];
-        let mut y = vec![0i32; m];
-        for i in 0..m {
-            let c = i % classes;
-            y[i] = c as i32;
-            for g in 0..8 {
-                x[i * genes + c * 8 + g] = 50.0;
-            }
-        }
-        let mut first = None;
-        let mut last = 0.0;
-        for _ in 0..30 {
-            let mut inputs = state.clone();
-            inputs.push(Tensor::F32(x.clone()));
-            inputs.push(Tensor::I32(y.clone()));
-            let out = exe.run(&inputs).unwrap();
-            last = out[7].scalar().unwrap();
-            first.get_or_insert(last);
-            state = out[..7].to_vec();
-        }
-        let first = first.unwrap();
-        assert!(
-            last < first,
-            "loss did not decrease: {first} -> {last}"
-        );
-        // step counter advanced
-        assert_eq!(state[6].scalar().unwrap(), 30.0);
-        // predict artifact agrees on shapes
-        let pred = rt.load("predict", genes, classes).unwrap();
-        let logits = pred
-            .run(&[state[0].clone(), state[1].clone(), Tensor::F32(x)])
-            .unwrap();
-        assert_eq!(logits[0].len(), m * classes);
-    }
-
-    #[test]
-    fn tensor_shape_checks() {
+    fn tensor_basics() {
         let spec = TensorSpec {
             name: "x".into(),
             shape: vec![2, 3],
             dtype: Dtype::F32,
         };
-        let t = Tensor::F32(vec![0.0; 5]);
-        assert!(t.to_literal(&spec).is_err());
-        let t = Tensor::I32(vec![0; 6]);
-        assert!(t.to_literal(&spec).is_err(), "dtype mismatch");
         let t = Tensor::zeros(&spec);
         assert_eq!(t.len(), 6);
-        assert!(t.to_literal(&spec).is_ok());
+        assert!(!t.is_empty());
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+        assert_eq!(t.scalar().unwrap(), 0.0);
+        let i = Tensor::I32(vec![7, 8]);
+        assert_eq!(i.scalar().unwrap(), 7.0);
+        assert!(Tensor::F32(vec![]).scalar().is_err());
     }
 
+    #[cfg(not(feature = "pjrt"))]
     #[test]
-    fn executable_cache_returns_same_instance() {
-        if !artifacts_available() {
-            return;
-        }
-        let rt = Runtime::open("artifacts").unwrap();
-        let a = rt.load("predict", 64, 6).unwrap();
-        let b = rt.load("predict", 64, 6).unwrap();
-        assert!(Arc::ptr_eq(&a, &b));
+    fn stub_runtime_reports_unavailable() {
+        use crate::util::tempdir::TempDir;
+        // Missing manifest: the manifest error surfaces first.
+        let dir = TempDir::new("pjrt-stub").unwrap();
+        let err = Runtime::open(dir.path()).unwrap_err().to_string();
+        assert!(err.contains("manifest"), "{err}");
+        // With a manifest present, the stub reports missing PJRT support.
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"version": 1, "batch": 8, "lr": 0.01, "entries": []}"#,
+        )
+        .unwrap();
+        let err = Runtime::open(dir.path()).unwrap_err().to_string();
+        assert!(err.contains("PJRT support"), "{err}");
     }
 
-    #[test]
-    fn missing_artifact_lists_alternatives() {
-        if !artifacts_available() {
-            return;
+    #[cfg(feature = "pjrt")]
+    mod real_runtime {
+        use super::super::*;
+
+        fn artifacts_available() -> bool {
+            std::path::Path::new("artifacts/manifest.json").exists()
         }
-        let rt = Runtime::open("artifacts").unwrap();
-        let err = match rt.load("train_step", 3, 3) {
-            Err(e) => e.to_string(),
-            Ok(_) => panic!("expected missing artifact"),
-        };
-        assert!(err.contains("available"), "{err}");
+
+        /// End-to-end: compile the tiny train-step artifact and drive a few
+        /// steps; loss must drop on a separable toy problem. Skipped when
+        /// `make artifacts` has not been run.
+        #[test]
+        fn train_step_executes_and_learns() {
+            if !artifacts_available() {
+                eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+                return;
+            }
+            let rt = Runtime::open("artifacts").unwrap();
+            let (genes, classes, m) = (64usize, 6usize, 64usize);
+            let exe = rt.load("train_step", genes, classes).unwrap();
+            let mut rng = crate::util::rng::Rng::new(0);
+            let mut state: Vec<Tensor> = exe.entry.inputs[..7]
+                .iter()
+                .map(Tensor::zeros)
+                .collect();
+            if let Tensor::F32(w) = &mut state[0] {
+                for x in w.iter_mut() {
+                    *x = (rng.normal() * 0.01) as f32;
+                }
+            }
+            let mut x = vec![0f32; m * genes];
+            let mut y = vec![0i32; m];
+            for i in 0..m {
+                let c = i % classes;
+                y[i] = c as i32;
+                for g in 0..8 {
+                    x[i * genes + c * 8 + g] = 50.0;
+                }
+            }
+            let mut first = None;
+            let mut last = 0.0;
+            for _ in 0..30 {
+                let mut inputs = state.clone();
+                inputs.push(Tensor::F32(x.clone()));
+                inputs.push(Tensor::I32(y.clone()));
+                let out = exe.run(&inputs).unwrap();
+                last = out[7].scalar().unwrap();
+                first.get_or_insert(last);
+                state = out[..7].to_vec();
+            }
+            let first = first.unwrap();
+            assert!(last < first, "loss did not decrease: {first} -> {last}");
+            assert_eq!(state[6].scalar().unwrap(), 30.0);
+            let pred = rt.load("predict", genes, classes).unwrap();
+            let logits = pred
+                .run(&[state[0].clone(), state[1].clone(), Tensor::F32(x)])
+                .unwrap();
+            assert_eq!(logits[0].len(), m * classes);
+        }
+
+        #[test]
+        fn executable_cache_returns_same_instance() {
+            if !artifacts_available() {
+                return;
+            }
+            let rt = Runtime::open("artifacts").unwrap();
+            let a = rt.load("predict", 64, 6).unwrap();
+            let b = rt.load("predict", 64, 6).unwrap();
+            assert!(std::sync::Arc::ptr_eq(&a, &b));
+        }
+
+        #[test]
+        fn missing_artifact_lists_alternatives() {
+            if !artifacts_available() {
+                return;
+            }
+            let rt = Runtime::open("artifacts").unwrap();
+            let err = match rt.load("train_step", 3, 3) {
+                Err(e) => e.to_string(),
+                Ok(_) => panic!("expected missing artifact"),
+            };
+            assert!(err.contains("available"), "{err}");
+        }
     }
 }

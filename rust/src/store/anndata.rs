@@ -475,7 +475,7 @@ impl Backend for SparseChunkStore {
                 rows: sorted.len() as u64,
                 bytes,
                 chunks: chunks_touched,
-                pages: 0,
+                ..IoReport::default()
             },
         })
     }

@@ -1,0 +1,835 @@
+//! Block-granular LRU cache + readahead layer over any [`Backend`].
+//!
+//! [`CachingBackend`] wraps an inner backend and caches **decoded
+//! [`CsrBatch`] blocks** (fixed runs of `block_rows` rows, keyed by block
+//! id) under a configurable byte budget with LRU eviction. Re-reading rows
+//! whose block is resident costs no backend I/O at all — the next
+//! multiplier after coalesced block reads (see PAPERS.md: Redox/Brand and
+//! RINAS both report cross-fetch block reuse as the dominant remaining
+//! win). An optional background worker prefetches the blocks of the *next
+//! planned fetch* ([`CachingBackend::prefetch`]) so a scheduled fetch finds
+//! its blocks already resident.
+//!
+//! Accounting: every [`FetchResult`] carries the inner backend's actual
+//! I/O (bytes/calls/runs are what really hit the disk this call — zero on
+//! a full hit) plus `cache_hits` / `cache_misses` / `cache_evictions`
+//! block counters threaded through [`IoReport`]. Aggregate counters
+//! (including readahead-lane bytes, which do not appear in per-fetch
+//! reports) are exposed via [`CachingBackend::stats`].
+//!
+//! Determinism contract: the wrapper returns byte-identical row data to
+//! the inner backend for any request, so enabling the cache never changes
+//! the minibatch stream — only the I/O trace (verified by
+//! `tests/determinism.rs`).
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::csr::CsrBatch;
+use super::iomodel::{AccessPattern, IoReport};
+use super::obs::ObsFrame;
+use super::{check_sorted_indices, Backend, FetchResult};
+
+/// Cache configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheConfig {
+    /// Byte budget for resident decoded blocks (heap footprint estimate
+    /// via [`CsrBatch::mem_bytes`]). Blocks larger than the whole budget
+    /// are served but never cached.
+    pub capacity_bytes: usize,
+    /// Rows per cached block. Aligning this with the inner store's
+    /// compressed chunk size (e.g. `TahoeConfig::chunk_rows`) means one
+    /// miss decodes each chunk exactly once.
+    pub block_rows: usize,
+    /// Spawn the asynchronous readahead worker thread.
+    pub readahead: bool,
+}
+
+impl Default for CacheConfig {
+    fn default() -> CacheConfig {
+        CacheConfig {
+            capacity_bytes: 256 << 20,
+            block_rows: 256,
+            readahead: false,
+        }
+    }
+}
+
+/// Cumulative cache statistics (monotone counters + current residency).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    /// Blocks served from the cache.
+    pub hits: u64,
+    /// Blocks loaded from the inner backend on the fetch path.
+    pub misses: u64,
+    /// Blocks evicted to stay within the byte budget.
+    pub evictions: u64,
+    /// Blocks loaded by `prefetch` (not counted as misses).
+    pub prefetched_blocks: u64,
+    /// Inner-backend bytes read on the synchronous fetch path.
+    pub bytes_read: u64,
+    /// Inner-backend bytes read by the readahead worker.
+    pub readahead_bytes: u64,
+    /// Blocks currently resident.
+    pub resident_blocks: u64,
+    /// Bytes currently resident.
+    pub resident_bytes: u64,
+}
+
+impl CacheStats {
+    /// Total bytes actually read from the inner backend (both lanes).
+    pub fn total_bytes_read(&self) -> u64 {
+        self.bytes_read + self.readahead_bytes
+    }
+
+    /// Block hit rate over the fetch path; 0 when nothing was requested.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct CachedBlock {
+    /// Shared so hit materialization can clone the handle under the lock
+    /// and copy rows *outside* it (keeps multi-worker hits parallel).
+    x: Arc<CsrBatch>,
+    bytes: usize,
+    /// LRU tick of the last touch (key into `CacheState::lru`).
+    tick: u64,
+}
+
+#[derive(Default)]
+struct CacheState {
+    blocks: HashMap<u32, CachedBlock>,
+    /// tick → block id, ordered oldest-first.
+    lru: BTreeMap<u64, u32>,
+    /// Blocks some lane is currently loading. A lane that wants one of
+    /// these waits on `CacheCore::loaded_cv` instead of re-reading, so
+    /// the fetch path and the readahead worker never duplicate I/O.
+    loading: HashSet<u32>,
+    tick: u64,
+    bytes: usize,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    prefetched: u64,
+    bytes_read: u64,
+    readahead_bytes: u64,
+}
+
+/// Shared cache core (the readahead worker holds a second `Arc`).
+struct CacheCore {
+    inner: Arc<dyn Backend>,
+    cfg: CacheConfig,
+    state: Mutex<CacheState>,
+    /// Signalled whenever an in-flight block load settles (insert or
+    /// failure), waking lanes parked on that block.
+    loaded_cv: Condvar,
+}
+
+impl CacheCore {
+    /// Insert a loaded block, touching the LRU and evicting oldest-first
+    /// until the budget holds. Returns the number of evictions.
+    fn insert_block(&self, st: &mut CacheState, b: u32, x: Arc<CsrBatch>) -> u64 {
+        let bytes = x.mem_bytes();
+        if bytes > self.cfg.capacity_bytes {
+            return 0; // uncacheable: larger than the whole budget
+        }
+        st.tick += 1;
+        let tick = st.tick;
+        if let Some(old) = st.blocks.insert(b, CachedBlock { x, bytes, tick }) {
+            // concurrent double-load: replace, keep accounting consistent
+            st.bytes -= old.bytes;
+            st.lru.remove(&old.tick);
+        }
+        st.lru.insert(tick, b);
+        st.bytes += bytes;
+        let mut evicted = 0u64;
+        while st.bytes > self.cfg.capacity_bytes {
+            let Some((&t, &victim)) = st.lru.iter().next() else {
+                break;
+            };
+            if victim == b {
+                break; // never evict the block just inserted
+            }
+            st.lru.remove(&t);
+            if let Some(old) = st.blocks.remove(&victim) {
+                st.bytes -= old.bytes;
+            }
+            st.evictions += 1;
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// Mark a resident block most-recently-used.
+    fn touch(&self, st: &mut CacheState, b: u32) {
+        st.tick += 1;
+        let tick = st.tick;
+        if let Some(cb) = st.blocks.get_mut(&b) {
+            st.lru.remove(&cb.tick);
+            cb.tick = tick;
+            st.lru.insert(tick, b);
+        }
+    }
+
+    /// Load the given (sorted, unique) block ids from the inner backend,
+    /// coalescing consecutive blocks into one batched call. Returns the
+    /// inner I/O plus one decoded batch per block, in input order.
+    fn load_blocks(&self, blocks: &[u32]) -> Result<(IoReport, Vec<(u32, CsrBatch)>)> {
+        let n_rows = self.inner.n_rows() as u64;
+        let br = self.cfg.block_rows as u64;
+        let mut io = IoReport::default();
+        let mut out: Vec<(u32, CsrBatch)> = Vec::with_capacity(blocks.len());
+        let mut i = 0usize;
+        while i < blocks.len() {
+            let mut j = i + 1;
+            while j < blocks.len() && blocks[j] == blocks[j - 1] + 1 {
+                j += 1;
+            }
+            let row_start = blocks[i] as u64 * br;
+            let row_end = ((blocks[j - 1] as u64 + 1) * br).min(n_rows);
+            let idx: Vec<u32> = (row_start as u32..row_end as u32).collect();
+            let part = self.inner.fetch_rows(&idx)?;
+            io.add(&part.io);
+            for &b in &blocks[i..j] {
+                let bs = (b as u64 * br - row_start) as usize;
+                let be = (((b as u64 + 1) * br).min(n_rows) - row_start) as usize;
+                out.push((b, part.x.slice_rows(bs, be)));
+            }
+            i = j;
+        }
+        Ok((io, out))
+    }
+
+    /// Bring the blocks covering `rows` into the cache (used by both the
+    /// synchronous `prefetch` fallback and the readahead worker). Blocks
+    /// that are resident or already being loaded by another lane are
+    /// skipped.
+    fn prefetch_rows(&self, rows: &[u32], readahead_lane: bool) -> Result<()> {
+        let n = self.inner.n_rows() as u32;
+        let br = self.cfg.block_rows as u32;
+        let mut blocks: Vec<u32> = rows
+            .iter()
+            .filter(|&&r| r < n)
+            .map(|&r| r / br)
+            .collect();
+        blocks.sort_unstable();
+        blocks.dedup();
+        let missing: Vec<u32> = {
+            let mut st = self.state.lock().unwrap();
+            let mut missing = Vec::new();
+            for b in blocks {
+                if !st.blocks.contains_key(&b) && !st.loading.contains(&b) {
+                    st.loading.insert(b);
+                    missing.push(b);
+                }
+            }
+            missing
+        };
+        if missing.is_empty() {
+            return Ok(());
+        }
+        let load_result = self.load_blocks(&missing);
+        let mut st = self.state.lock().unwrap();
+        for b in &missing {
+            st.loading.remove(b);
+        }
+        let result = match load_result {
+            Ok((io, loaded)) => {
+                if readahead_lane {
+                    st.readahead_bytes += io.bytes;
+                } else {
+                    st.bytes_read += io.bytes;
+                }
+                st.prefetched += loaded.len() as u64;
+                for (b, x) in loaded {
+                    self.insert_block(&mut st, b, Arc::new(x));
+                }
+                Ok(())
+            }
+            Err(e) => Err(e),
+        };
+        drop(st);
+        self.loaded_cv.notify_all();
+        result
+    }
+
+    /// The cached fetch path: hits are gathered from resident blocks,
+    /// misses are loaded block-granular (coalesced) from the inner backend.
+    fn fetch_rows_cached(&self, sorted: &[u32]) -> Result<FetchResult> {
+        check_sorted_indices(sorted, self.inner.n_rows())?;
+        if sorted.is_empty() {
+            return Ok(FetchResult {
+                x: CsrBatch::empty(self.inner.n_cols()),
+                io: IoReport::default(),
+            });
+        }
+        let br = self.cfg.block_rows as u32;
+        // Group the sorted request by block: (block id, block-local rows).
+        let mut groups: Vec<(u32, Vec<u32>)> = Vec::new();
+        for &r in sorted {
+            let b = r / br;
+            match groups.last_mut() {
+                Some((gb, local)) if *gb == b => local.push(r - b * br),
+                _ => groups.push((b, vec![r - b * br])),
+            }
+        }
+        // Pass 1: under the lock only clone block handles (`Arc`) and
+        // claim misses as in-flight; the row copies happen outside so
+        // concurrent workers' hits stay parallel. Blocks another lane is
+        // loading go on the wait list instead of being re-read.
+        let mut parts: Vec<Option<CsrBatch>> = vec![None; groups.len()];
+        let mut hit_blocks: Vec<(usize, Arc<CsrBatch>)> = Vec::new();
+        let mut missing: Vec<(usize, u32)> = Vec::new();
+        let mut waiting: Vec<(usize, u32)> = Vec::new();
+        let mut hits = 0u64;
+        let mut misses;
+        {
+            let mut st = self.state.lock().unwrap();
+            for (gi, (b, _local)) in groups.iter().enumerate() {
+                if let Some(blk) = st.blocks.get(b).map(|cb| cb.x.clone()) {
+                    self.touch(&mut st, *b);
+                    hit_blocks.push((gi, blk));
+                    hits += 1;
+                } else if st.loading.contains(b) {
+                    waiting.push((gi, *b));
+                } else {
+                    st.loading.insert(*b);
+                    missing.push((gi, *b));
+                }
+            }
+            st.hits += hits;
+            st.misses += missing.len() as u64;
+            misses = missing.len() as u64;
+        }
+        for (gi, blk) in hit_blocks {
+            parts[gi] = Some(blk.select_rows(&groups[gi].1));
+        }
+        // Pass 2 (no lock held during I/O or row copies): load claimed
+        // misses, then insert under the lock.
+        let mut io = IoReport::default();
+        let mut evicted = 0u64;
+        if !missing.is_empty() {
+            let block_ids: Vec<u32> = missing.iter().map(|&(_, b)| b).collect();
+            let load_result = self.load_blocks(&block_ids);
+            match load_result {
+                Ok((inner_io, loaded)) => {
+                    io.add(&inner_io);
+                    for (k, &(gi, _)) in missing.iter().enumerate() {
+                        parts[gi] = Some(loaded[k].1.select_rows(&groups[gi].1));
+                    }
+                    let mut st = self.state.lock().unwrap();
+                    for &(_, b) in &missing {
+                        st.loading.remove(&b);
+                    }
+                    st.bytes_read += inner_io.bytes;
+                    for (b, x) in loaded {
+                        evicted += self.insert_block(&mut st, b, Arc::new(x));
+                    }
+                    drop(st);
+                    self.loaded_cv.notify_all();
+                }
+                Err(e) => {
+                    let mut st = self.state.lock().unwrap();
+                    for &(_, b) in &missing {
+                        st.loading.remove(&b);
+                    }
+                    drop(st);
+                    self.loaded_cv.notify_all();
+                    return Err(e);
+                }
+            }
+        }
+        // Pass 3: resolve blocks another lane was loading — wait for the
+        // insert (a hit, no I/O). If that lane failed or the block was
+        // evicted before we woke, *claim* it under the same lock before
+        // loading on this lane, so concurrent waiters can't duplicate
+        // the read either.
+        for &(gi, b) in &waiting {
+            let mut claimed = false;
+            let mut resolved: Option<Arc<CsrBatch>> = None;
+            {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if let Some(blk) = st.blocks.get(&b).map(|cb| cb.x.clone()) {
+                        self.touch(&mut st, b);
+                        st.hits += 1;
+                        hits += 1;
+                        resolved = Some(blk);
+                        break;
+                    }
+                    if !st.loading.contains(&b) {
+                        st.loading.insert(b);
+                        claimed = true;
+                        break;
+                    }
+                    st = self.loaded_cv.wait(st).unwrap();
+                }
+            }
+            match resolved {
+                Some(blk) => parts[gi] = Some(blk.select_rows(&groups[gi].1)),
+                None => {
+                    debug_assert!(claimed);
+                    let load_result = self.load_blocks(&[b]);
+                    let mut st = self.state.lock().unwrap();
+                    st.loading.remove(&b);
+                    match load_result {
+                        Ok((inner_io, mut loaded)) => {
+                            let (bb, x) = loaded.pop().expect("one block loaded");
+                            parts[gi] = Some(x.select_rows(&groups[gi].1));
+                            io.add(&inner_io);
+                            st.bytes_read += inner_io.bytes;
+                            st.misses += 1;
+                            misses += 1;
+                            evicted += self.insert_block(&mut st, bb, Arc::new(x));
+                            drop(st);
+                            self.loaded_cv.notify_all();
+                        }
+                        Err(e) => {
+                            drop(st);
+                            self.loaded_cv.notify_all();
+                            return Err(e);
+                        }
+                    }
+                }
+            }
+        }
+        // Concatenate in request (sorted) order.
+        let mut x = CsrBatch::empty(self.inner.n_cols());
+        for p in parts {
+            x.append(&p.expect("every block group resolved"));
+        }
+        io.rows = sorted.len() as u64;
+        io.cache_hits = hits;
+        io.cache_misses = misses;
+        io.cache_evictions = evicted;
+        Ok(FetchResult { x, io })
+    }
+}
+
+struct Readahead {
+    /// `Mutex` for `Sync` (mpsc senders are not shareable); `None` after
+    /// shutdown.
+    tx: Mutex<Option<Sender<Vec<u32>>>>,
+    /// Outstanding request count + wakeup for [`CachingBackend::wait_readahead_idle`].
+    pending: Arc<(Mutex<u64>, Condvar)>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// A [`Backend`] wrapper adding the block cache + readahead. Construct
+/// once and share (`Arc`) across workers/epochs — residency persists.
+pub struct CachingBackend {
+    core: Arc<CacheCore>,
+    name: String,
+    readahead: Option<Readahead>,
+}
+
+impl CachingBackend {
+    pub fn new(inner: Arc<dyn Backend>, cfg: CacheConfig) -> CachingBackend {
+        let cfg = CacheConfig {
+            block_rows: cfg.block_rows.max(1),
+            ..cfg
+        };
+        let name = format!("cache[{}]", inner.name());
+        let core = Arc::new(CacheCore {
+            inner,
+            cfg,
+            state: Mutex::new(CacheState::default()),
+            loaded_cv: Condvar::new(),
+        });
+        let readahead = if cfg.readahead {
+            let (tx, rx) = channel::<Vec<u32>>();
+            let pending: Arc<(Mutex<u64>, Condvar)> = Arc::new((Mutex::new(0), Condvar::new()));
+            let worker_core = core.clone();
+            let worker_pending = pending.clone();
+            let handle = std::thread::Builder::new()
+                .name("scdata-readahead".into())
+                .spawn(move || {
+                    while let Ok(rows) = rx.recv() {
+                        // Background lane: errors surface on the next
+                        // synchronous fetch of the same rows.
+                        let _ = worker_core.prefetch_rows(&rows, true);
+                        let (lock, cv) = &*worker_pending;
+                        *lock.lock().unwrap() -= 1;
+                        cv.notify_all();
+                    }
+                })
+                .expect("spawn readahead worker");
+            Some(Readahead {
+                tx: Mutex::new(Some(tx)),
+                pending,
+                handle: Some(handle),
+            })
+        } else {
+            None
+        };
+        CachingBackend {
+            core,
+            name,
+            readahead,
+        }
+    }
+
+    /// Request that the blocks covering `rows` become resident. With the
+    /// readahead worker enabled this is asynchronous (returns
+    /// immediately); otherwise the blocks are loaded synchronously.
+    /// Duplicate/out-of-range rows are tolerated — this takes the *raw*
+    /// planned fetch indices, unsorted.
+    pub fn prefetch(&self, rows: &[u32]) {
+        match &self.readahead {
+            Some(ra) => {
+                let guard = ra.tx.lock().unwrap();
+                if let Some(tx) = guard.as_ref() {
+                    let (lock, _) = &*ra.pending;
+                    *lock.lock().unwrap() += 1;
+                    if tx.send(rows.to_vec()).is_err() {
+                        let (lock, cv) = &*ra.pending;
+                        *lock.lock().unwrap() -= 1;
+                        cv.notify_all();
+                    }
+                }
+            }
+            None => {
+                let _ = self.core.prefetch_rows(rows, false);
+            }
+        }
+    }
+
+    /// Block until every outstanding readahead request has been served
+    /// (no-op without the worker). Used by tests and benches.
+    pub fn wait_readahead_idle(&self) {
+        if let Some(ra) = &self.readahead {
+            let (lock, cv) = &*ra.pending;
+            let mut g = lock.lock().unwrap();
+            while *g > 0 {
+                g = cv.wait(g).unwrap();
+            }
+        }
+    }
+
+    /// Snapshot of the cumulative cache statistics.
+    pub fn stats(&self) -> CacheStats {
+        let st = self.core.state.lock().unwrap();
+        CacheStats {
+            hits: st.hits,
+            misses: st.misses,
+            evictions: st.evictions,
+            prefetched_blocks: st.prefetched,
+            bytes_read: st.bytes_read,
+            readahead_bytes: st.readahead_bytes,
+            resident_blocks: st.blocks.len() as u64,
+            resident_bytes: st.bytes as u64,
+        }
+    }
+
+    /// Drop all resident blocks and reset every counter.
+    pub fn clear(&self) {
+        let mut st = self.core.state.lock().unwrap();
+        *st = CacheState::default();
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.core.cfg.capacity_bytes
+    }
+
+    pub fn block_rows(&self) -> usize {
+        self.core.cfg.block_rows
+    }
+
+    pub fn inner(&self) -> &Arc<dyn Backend> {
+        &self.core.inner
+    }
+}
+
+impl Drop for CachingBackend {
+    fn drop(&mut self) {
+        if let Some(mut ra) = self.readahead.take() {
+            *ra.tx.lock().unwrap() = None; // disconnect → worker exits
+            if let Some(h) = ra.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Backend for CachingBackend {
+    fn n_rows(&self) -> usize {
+        self.core.inner.n_rows()
+    }
+
+    fn n_cols(&self) -> usize {
+        self.core.inner.n_cols()
+    }
+
+    fn obs(&self) -> &ObsFrame {
+        self.core.inner.obs()
+    }
+
+    fn pattern(&self) -> AccessPattern {
+        self.core.inner.pattern()
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn fetch_rows(&self, sorted: &[u32]) -> Result<FetchResult> {
+        self.core.fetch_rows_cached(sorted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::anndata::{SparseChunkStore, StoreWriter};
+    use crate::store::obs::ObsColumn;
+    use crate::util::rng::Rng;
+    use crate::util::tempdir::TempDir;
+
+    /// A deterministic store: row r has one nonzero at column r % 8 with
+    /// value r; chunk_rows 4 so cache blocks and storage chunks differ.
+    fn store(dir: &TempDir, n_rows: usize) -> Arc<dyn Backend> {
+        let mut w = StoreWriter::create(dir.join("src.scs"), 8, 4, true).unwrap();
+        for r in 0..n_rows {
+            w.push_row(&[(r % 8) as u32], &[r as f32]).unwrap();
+        }
+        let mut obs = ObsFrame::new(n_rows);
+        obs.push(ObsColumn::new("plate", vec!["p".into()], vec![0; n_rows]).unwrap())
+            .unwrap();
+        Arc::new(SparseChunkStore::open(w.finish(&obs).unwrap()).unwrap())
+    }
+
+    fn cache(inner: &Arc<dyn Backend>, capacity: usize, block_rows: usize) -> CachingBackend {
+        CachingBackend::new(
+            inner.clone(),
+            CacheConfig {
+                capacity_bytes: capacity,
+                block_rows,
+                readahead: false,
+            },
+        )
+    }
+
+    #[test]
+    fn hit_miss_accounting_and_no_reread() {
+        let dir = TempDir::new("cache").unwrap();
+        let inner = store(&dir, 64);
+        let c = cache(&inner, 1 << 20, 8);
+        let r1 = c.fetch_rows(&[0, 1, 2]).unwrap();
+        assert_eq!(r1.io.cache_misses, 1);
+        assert_eq!(r1.io.cache_hits, 0);
+        assert_eq!(r1.io.rows, 3);
+        assert!(r1.io.bytes > 0, "first touch must read from the backend");
+        // Same block again: pure hit, zero backend I/O.
+        let r2 = c.fetch_rows(&[3, 4]).unwrap();
+        assert_eq!(r2.io.cache_hits, 1);
+        assert_eq!(r2.io.cache_misses, 0);
+        assert_eq!(r2.io.bytes, 0, "hits must never re-read");
+        assert_eq!(r2.io.calls, 0);
+        assert_eq!(r2.io.rows, 2);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 1, 0));
+        assert_eq!(s.resident_blocks, 1);
+        assert!(s.resident_bytes > 0);
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cached_rows_match_inner_backend() {
+        let dir = TempDir::new("cache").unwrap();
+        let inner = store(&dir, 100);
+        // Small budget so eviction churn is exercised too.
+        let c = cache(&inner, 2_000, 7);
+        let mut rng = Rng::new(3);
+        let mut prev_bytes = 0u64;
+        for _ in 0..30 {
+            let take = rng.range(1, 40);
+            let mut idx: Vec<u32> = (0..100).collect();
+            rng.shuffle(&mut idx);
+            let mut idx: Vec<u32> = idx[..take].to_vec();
+            idx.sort_unstable();
+            let got = c.fetch_rows(&idx).unwrap();
+            got.x.validate().unwrap();
+            assert_eq!(got.x, inner.fetch_rows(&idx).unwrap().x);
+            // cumulative bytes-read is monotone non-decreasing
+            let s = c.stats();
+            assert!(s.bytes_read >= prev_bytes);
+            prev_bytes = s.bytes_read;
+            assert!(s.resident_bytes as usize <= c.capacity_bytes());
+        }
+    }
+
+    #[test]
+    fn partial_tail_block_roundtrips() {
+        let dir = TempDir::new("cache").unwrap();
+        let inner = store(&dir, 30); // blocks of 8 → last block has 6 rows
+        let c = cache(&inner, 1 << 20, 8);
+        let all: Vec<u32> = (0..30).collect();
+        let got = c.fetch_rows(&all).unwrap();
+        assert_eq!(got.x, inner.fetch_rows(&all).unwrap().x);
+        assert_eq!(got.io.cache_misses, 4);
+        let again = c.fetch_rows(&all).unwrap();
+        assert_eq!(again.io.cache_hits, 4);
+        assert_eq!(again.io.bytes, 0);
+    }
+
+    #[test]
+    fn eviction_under_tiny_budget() {
+        let dir = TempDir::new("cache").unwrap();
+        let inner = store(&dir, 64);
+        // Measure one block's footprint first.
+        let probe = cache(&inner, 1 << 20, 8);
+        probe.fetch_rows(&[0]).unwrap();
+        let block_bytes = probe.stats().resident_bytes as usize;
+        assert!(block_bytes > 0);
+        // Budget for exactly one block.
+        let c = cache(&inner, block_bytes, 8);
+        c.fetch_rows(&[0]).unwrap(); // block 0 resident
+        c.fetch_rows(&[8]).unwrap(); // block 1 evicts block 0
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.resident_blocks, 1);
+        let r = c.fetch_rows(&[0]).unwrap(); // block 0 was evicted
+        assert_eq!(r.io.cache_misses, 1);
+        assert!(r.io.bytes > 0);
+    }
+
+    #[test]
+    fn lru_order_evicts_least_recently_used() {
+        let dir = TempDir::new("cache").unwrap();
+        let inner = store(&dir, 64);
+        let probe = cache(&inner, 1 << 20, 8);
+        probe.fetch_rows(&[0]).unwrap();
+        let block_bytes = probe.stats().resident_bytes as usize;
+        // Budget for exactly two blocks.
+        let c = cache(&inner, 2 * block_bytes, 8);
+        c.fetch_rows(&[0]).unwrap(); // block 0
+        c.fetch_rows(&[8]).unwrap(); // block 1
+        c.fetch_rows(&[1]).unwrap(); // touch block 0 → block 1 is LRU
+        c.fetch_rows(&[16]).unwrap(); // block 2 → evicts block 1
+        let r0 = c.fetch_rows(&[2]).unwrap();
+        assert_eq!(r0.io.cache_hits, 1, "block 0 must have survived");
+        let r1 = c.fetch_rows(&[9]).unwrap();
+        assert_eq!(r1.io.cache_misses, 1, "block 1 must have been evicted");
+    }
+
+    #[test]
+    fn oversized_block_served_but_not_cached() {
+        let dir = TempDir::new("cache").unwrap();
+        let inner = store(&dir, 64);
+        let c = cache(&inner, 16, 8); // budget smaller than any block
+        let a = c.fetch_rows(&[0, 1]).unwrap();
+        let b = c.fetch_rows(&[0, 1]).unwrap();
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.io.cache_misses, 1);
+        assert_eq!(b.io.cache_misses, 1, "uncacheable block misses again");
+        let s = c.stats();
+        assert_eq!(s.resident_blocks, 0);
+        assert_eq!(s.evictions, 0);
+    }
+
+    #[test]
+    fn synchronous_prefetch_populates_cache() {
+        let dir = TempDir::new("cache").unwrap();
+        let inner = store(&dir, 64);
+        let c = cache(&inner, 1 << 20, 8);
+        // Raw planned indices: unsorted, with duplicates.
+        c.prefetch(&[9, 1, 1, 0]);
+        let s = c.stats();
+        assert_eq!(s.prefetched_blocks, 2);
+        assert_eq!(s.misses, 0, "prefetch loads are not misses");
+        let r = c.fetch_rows(&[0, 9]).unwrap();
+        assert_eq!(r.io.cache_hits, 2);
+        assert_eq!(r.io.bytes, 0);
+    }
+
+    #[test]
+    fn async_readahead_correctness() {
+        let dir = TempDir::new("cache").unwrap();
+        let inner = store(&dir, 64);
+        let c = CachingBackend::new(
+            inner.clone(),
+            CacheConfig {
+                capacity_bytes: 1 << 20,
+                block_rows: 8,
+                readahead: true,
+            },
+        );
+        c.prefetch(&[0, 1, 2, 17]);
+        c.wait_readahead_idle();
+        let s = c.stats();
+        assert_eq!(s.prefetched_blocks, 2);
+        assert!(s.readahead_bytes > 0);
+        assert_eq!(s.bytes_read, 0);
+        let r = c.fetch_rows(&[0, 17]).unwrap();
+        assert_eq!(r.io.cache_hits, 2);
+        assert_eq!(r.io.bytes, 0);
+        assert_eq!(r.x, inner.fetch_rows(&[0, 17]).unwrap().x);
+        // Already-resident blocks are not re-fetched by readahead.
+        let before = c.stats().readahead_bytes;
+        c.prefetch(&[0, 1]);
+        c.wait_readahead_idle();
+        assert_eq!(c.stats().readahead_bytes, before);
+    }
+
+    #[test]
+    fn coalesces_adjacent_missing_blocks() {
+        let dir = TempDir::new("cache").unwrap();
+        let inner = store(&dir, 64);
+        let c = cache(&inner, 1 << 20, 8);
+        // Rows spanning blocks 0..4 contiguously: one coalesced inner call.
+        let idx: Vec<u32> = (0..32).collect();
+        let r = c.fetch_rows(&idx).unwrap();
+        assert_eq!(r.io.cache_misses, 4);
+        assert_eq!(r.io.calls, 1, "adjacent missing blocks must coalesce");
+        assert_eq!(r.io.runs, 1);
+    }
+
+    #[test]
+    fn rejects_bad_indices() {
+        let dir = TempDir::new("cache").unwrap();
+        let inner = store(&dir, 10);
+        let c = cache(&inner, 1 << 20, 4);
+        assert!(c.fetch_rows(&[2, 1]).is_err());
+        assert!(c.fetch_rows(&[10]).is_err());
+        assert!(c.fetch_rows(&[]).is_ok());
+        assert_eq!(c.fetch_rows(&[]).unwrap().x.n_rows, 0);
+    }
+
+    #[test]
+    fn clear_resets_residency_and_counters() {
+        let dir = TempDir::new("cache").unwrap();
+        let inner = store(&dir, 64);
+        let c = cache(&inner, 1 << 20, 8);
+        c.fetch_rows(&[0, 1]).unwrap();
+        assert!(c.stats().resident_blocks > 0);
+        c.clear();
+        let s = c.stats();
+        assert_eq!(s.resident_blocks, 0);
+        assert_eq!(s.misses, 0);
+        assert_eq!(s.bytes_read, 0);
+    }
+
+    #[test]
+    fn delegates_metadata() {
+        let dir = TempDir::new("cache").unwrap();
+        let inner = store(&dir, 20);
+        let c = cache(&inner, 1 << 20, 8);
+        assert_eq!(c.n_rows(), 20);
+        assert_eq!(c.n_cols(), 8);
+        assert_eq!(c.pattern(), inner.pattern());
+        assert!(c.name().starts_with("cache["));
+        assert_eq!(c.obs().n_rows, 20);
+        assert_eq!(c.block_rows(), 8);
+        assert!(Arc::ptr_eq(c.inner(), &inner));
+    }
+}

@@ -40,6 +40,13 @@ pub struct IoReport {
     pub chunks: u64,
     /// Distinct pages touched (mmap backends).
     pub pages: u64,
+    /// Cache blocks served from the block cache (zero for uncached
+    /// backends; see [`crate::store::cache::CachingBackend`]).
+    pub cache_hits: u64,
+    /// Cache blocks loaded from the inner backend on a miss.
+    pub cache_misses: u64,
+    /// Cache blocks evicted to stay within the byte budget.
+    pub cache_evictions: u64,
 }
 
 impl IoReport {
@@ -50,6 +57,9 @@ impl IoReport {
         self.bytes += other.bytes;
         self.chunks += other.chunks;
         self.pages += other.pages;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.cache_evictions += other.cache_evictions;
     }
 }
 
@@ -357,6 +367,7 @@ mod tests {
             bytes: rows * bytes_per_row,
             chunks: runs,
             pages: runs + rows * bytes_per_row / 4096,
+            ..IoReport::default()
         }
     }
 

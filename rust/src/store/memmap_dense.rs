@@ -235,8 +235,8 @@ impl Backend for DenseMemmapStore {
                 runs: runs.len() as u64,
                 rows: sorted.len() as u64,
                 bytes: sorted.len() as u64 * rb,
-                chunks: 0,
                 pages,
+                ..IoReport::default()
             },
         })
     }

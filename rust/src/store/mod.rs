@@ -5,9 +5,11 @@
 //! implements an on-disk analogue of each — built from scratch — behind the
 //! common [`Backend`] trait the coordinator fetches through, plus the
 //! virtual-disk cost model ([`iomodel`]) that maps access patterns back to
-//! the paper's measured cost regime.
+//! the paper's measured cost regime, and the block-granular LRU cache +
+//! readahead layer ([`cache`]) that any backend can be wrapped in.
 
 pub mod anndata;
+pub mod cache;
 pub mod collection;
 pub mod csr;
 pub mod iomodel;
@@ -19,6 +21,7 @@ pub mod zarr_like;
 
 use anyhow::Result;
 
+pub use cache::{CacheConfig, CacheStats, CachingBackend};
 pub use csr::CsrBatch;
 pub use iomodel::{AccessPattern, DiskModel, IoReport};
 pub use obs::{ObsColumn, ObsFrame};

@@ -276,7 +276,7 @@ impl Backend for RowGroupStore {
                 rows: sorted.len() as u64,
                 bytes: sorted.len() as u64 * self.avg_row_bytes,
                 chunks: runs.len() as u64,
-                pages: 0,
+                ..IoReport::default()
             },
         })
     }

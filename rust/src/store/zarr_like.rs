@@ -278,7 +278,7 @@ impl Backend for ShardedZarrStore {
                 rows: sorted.len() as u64,
                 bytes,
                 chunks: chunks_touched,
-                pages: 0,
+                ..IoReport::default()
             },
         })
     }
@@ -342,7 +342,7 @@ mod tests {
             rows: 4096,
             bytes: 4096 * 400,
             chunks: 16,
-            pages: 0,
+            ..IoReport::default()
         };
         let hdf5 = simulate_loader(
             &m,

@@ -1,0 +1,253 @@
+//! Determinism guarantees (ISSUE 2 acceptance):
+//!
+//! * with a fixed seed, `num_workers = 0` and `num_workers = 4` yield the
+//!   identical per-epoch multiset of global row ids;
+//! * enabling the block cache and/or the cache-aware scheduler changes
+//!   neither the per-epoch row-id multiset nor (for `num_workers = 0`)
+//!   the exact minibatch stream — rows, expression data and labels.
+
+use std::sync::Arc;
+
+use scdata::coordinator::{LoaderConfig, ScDataset, Strategy};
+use scdata::datagen::{generate, open_collection, TahoeConfig};
+use scdata::store::{Backend, CsrBatch};
+use scdata::util::tempdir::TempDir;
+
+fn dataset(cells_per_plate: usize) -> (TempDir, Arc<dyn Backend>) {
+    let dir = TempDir::new("determinism").unwrap();
+    let mut cfg = TahoeConfig::tiny();
+    cfg.n_plates = 3;
+    cfg.cells_per_plate = cells_per_plate;
+    generate(&cfg, dir.path()).unwrap();
+    let coll = open_collection(dir.path()).unwrap();
+    (dir, Arc::new(coll))
+}
+
+/// The exact emitted minibatch stream: (rows, expression, labels).
+type Stream = Vec<(Vec<u32>, CsrBatch, Vec<Vec<u16>>)>;
+
+fn stream(ds: &ScDataset, epoch: u64) -> Stream {
+    ds.epoch(epoch)
+        .unwrap()
+        .map(|mb| {
+            let mb = mb.unwrap();
+            (mb.rows, mb.x, mb.labels)
+        })
+        .collect()
+}
+
+fn multiset(ds: &ScDataset, epoch: u64) -> Vec<u32> {
+    let mut rows: Vec<u32> = stream(ds, epoch)
+        .into_iter()
+        .flat_map(|(r, _, _)| r)
+        .collect();
+    rows.sort_unstable();
+    rows
+}
+
+fn base_cfg() -> LoaderConfig {
+    LoaderConfig {
+        strategy: Strategy::BlockShuffling { block_size: 8 },
+        batch_size: 32,
+        fetch_factor: 2,
+        label_cols: vec!["plate".into()],
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn worker_counts_yield_identical_multiset() {
+    let (_d, b) = dataset(400);
+    for epoch in [0u64, 1] {
+        let w0 = ScDataset::new(b.clone(), base_cfg());
+        let w4 = ScDataset::new(
+            b.clone(),
+            LoaderConfig {
+                num_workers: 4,
+                ..base_cfg()
+            },
+        );
+        assert_eq!(
+            multiset(&w0, epoch),
+            multiset(&w4, epoch),
+            "workers must not change the epoch-{epoch} row multiset"
+        );
+    }
+}
+
+#[test]
+fn worker_counts_agree_with_cache_and_scheduler() {
+    let (_d, b) = dataset(400);
+    let cached = |workers: usize| {
+        ScDataset::new(
+            b.clone(),
+            LoaderConfig {
+                num_workers: workers,
+                cache_bytes: 8 << 20,
+                cache_block_rows: 64,
+                readahead: true,
+                locality_window: 6,
+                ..base_cfg()
+            },
+        )
+    };
+    let plain = ScDataset::new(b.clone(), base_cfg());
+    for epoch in [0u64, 1] {
+        let expect = multiset(&plain, epoch);
+        assert_eq!(multiset(&cached(0), epoch), expect);
+        assert_eq!(multiset(&cached(4), epoch), expect);
+    }
+}
+
+#[test]
+fn cache_and_scheduler_do_not_change_the_stream() {
+    let (_d, b) = dataset(400);
+    let base = ScDataset::new(b.clone(), base_cfg());
+    let variants: Vec<(&str, LoaderConfig)> = vec![
+        (
+            "cache",
+            LoaderConfig {
+                cache_bytes: 8 << 20,
+                cache_block_rows: 64,
+                ..base_cfg()
+            },
+        ),
+        (
+            "scheduler",
+            LoaderConfig {
+                locality_window: 8,
+                ..base_cfg()
+            },
+        ),
+        (
+            "cache+scheduler",
+            LoaderConfig {
+                cache_bytes: 8 << 20,
+                cache_block_rows: 64,
+                locality_window: 8,
+                ..base_cfg()
+            },
+        ),
+        (
+            "cache+scheduler+readahead",
+            LoaderConfig {
+                cache_bytes: 8 << 20,
+                cache_block_rows: 64,
+                locality_window: 8,
+                readahead: true,
+                ..base_cfg()
+            },
+        ),
+        (
+            "tiny-cache (evicting)",
+            LoaderConfig {
+                cache_bytes: 20_000,
+                cache_block_rows: 32,
+                locality_window: 4,
+                ..base_cfg()
+            },
+        ),
+    ];
+    for epoch in [0u64, 1] {
+        let expect = stream(&base, epoch);
+        assert!(!expect.is_empty());
+        for (name, cfg) in &variants {
+            let ds = ScDataset::new(b.clone(), cfg.clone());
+            let got = stream(&ds, epoch);
+            assert_eq!(
+                got.len(),
+                expect.len(),
+                "{name}: minibatch count changed (epoch {epoch})"
+            );
+            for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+                assert_eq!(g.0, e.0, "{name}: rows diverged at minibatch {i}");
+                assert_eq!(g.1, e.1, "{name}: expression data diverged at minibatch {i}");
+                assert_eq!(g.2, e.2, "{name}: labels diverged at minibatch {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_and_shuffle_buffer_unaffected_by_cache() {
+    let (_d, b) = dataset(300);
+    for strategy in [
+        Strategy::Streaming { shuffle_buffer: 0 },
+        Strategy::Streaming { shuffle_buffer: 64 },
+    ] {
+        let mk = |cache: bool| {
+            ScDataset::new(
+                b.clone(),
+                LoaderConfig {
+                    strategy: strategy.clone(),
+                    batch_size: 16,
+                    fetch_factor: 4,
+                    seed: 3,
+                    cache_bytes: if cache { 8 << 20 } else { 0 },
+                    cache_block_rows: 64,
+                    ..Default::default()
+                },
+            )
+        };
+        let off = stream(&mk(false), 0);
+        let on = stream(&mk(true), 0);
+        assert_eq!(off.len(), on.len());
+        for ((ro, xo, _), (rn, xn, _)) in off.iter().zip(&on) {
+            assert_eq!(ro, rn);
+            assert_eq!(xo, xn);
+        }
+    }
+}
+
+#[test]
+fn weighted_sampling_stream_invariant_under_cache() {
+    let (_d, b) = dataset(300);
+    let n = b.n_rows();
+    let weights: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
+    let mk = |cache: bool| {
+        ScDataset::new(
+            b.clone(),
+            LoaderConfig {
+                strategy: Strategy::BlockWeighted {
+                    block_size: 4,
+                    weights: weights.clone(),
+                },
+                batch_size: 25,
+                fetch_factor: 3,
+                seed: 9,
+                cache_bytes: if cache { 4 << 20 } else { 0 },
+                cache_block_rows: 32,
+                locality_window: 8,
+                readahead: cache,
+                ..Default::default()
+            },
+        )
+    };
+    // With-replacement sampling repeats blocks within one epoch — the
+    // cache's best case. The emitted stream must still be identical.
+    let off = stream(&mk(false), 0);
+    let on = stream(&mk(true), 0);
+    assert_eq!(off, on);
+}
+
+#[test]
+fn cache_actually_engaged_while_streams_match() {
+    // Guard against the invariance tests passing because the cache was
+    // silently bypassed: the cached run must record hits.
+    let (_d, b) = dataset(300);
+    let ds = ScDataset::new(
+        b,
+        LoaderConfig {
+            cache_bytes: 8 << 20,
+            cache_block_rows: 64,
+            locality_window: 8,
+            ..base_cfg()
+        },
+    );
+    let _ = stream(&ds, 0);
+    let _ = stream(&ds, 1); // warm epoch
+    let stats = ds.cache_stats().unwrap();
+    assert!(stats.hits > 0, "cache never hit: {stats:?}");
+    assert!(stats.misses > 0);
+}

@@ -8,7 +8,7 @@ use std::sync::Arc;
 use scdata::coordinator::entropy::{
     batch_label_entropy, corollary33_bounds, dist_entropy,
 };
-use scdata::coordinator::{LoaderConfig, ScDataset, Strategy};
+use scdata::coordinator::{build_plan, locality_schedule, LoaderConfig, ScDataset, Strategy};
 use scdata::datagen::{generate, open_collection, TahoeConfig};
 use scdata::prop_assert;
 use scdata::store::anndata::{SparseChunkStore, StoreWriter};
@@ -255,6 +255,119 @@ fn prop_entropy_bounds_hold_on_real_pipeline() {
 }
 
 #[test]
+fn prop_locality_schedule_is_bounded_permutation() {
+    check("locality-schedule", 48, |rng| {
+        let n = rng.range(50, 1500);
+        let m = rng.range(1, 33);
+        let f = rng.range(1, 9);
+        let b = rng.range(1, 64);
+        let window = rng.range(2, 20);
+        let block_rows = rng.range(1, 300);
+        let strategy = if rng.bernoulli(0.5) {
+            Strategy::BlockShuffling { block_size: b }
+        } else {
+            // with-replacement: fetches repeat blocks → real overlap
+            Strategy::BlockWeighted {
+                block_size: b,
+                weights: (0..n).map(|_| rng.f64() + 0.01).collect(),
+            }
+        };
+        let plan = build_plan(&strategy, n, m, f, rng.next_u64(), 0, None, false)
+            .map_err(|e| e.to_string())?;
+        // Whole-epoch list and a strided (DDP-worker-like) sublist.
+        let all: Vec<usize> = (0..plan.n_fetches()).collect();
+        let stride = rng.range(1, 4);
+        let sub: Vec<usize> = all.iter().copied().step_by(stride).collect();
+        for ids in [&all, &sub] {
+            let sched = locality_schedule(&plan, ids, block_rows, window);
+            // 1) permutation of the input fetch list
+            let mut a = sched.clone();
+            a.sort_unstable();
+            let mut e = ids.to_vec();
+            e.sort_unstable();
+            prop_assert!(a == e, "not a permutation (window={window})");
+            // 2) bounded displacement w.r.t. the input order
+            for (j, id) in sched.iter().enumerate() {
+                let o = ids.iter().position(|x| x == id).unwrap();
+                prop_assert!(
+                    o.abs_diff(j) <= window,
+                    "window bound violated: pos {j} orig {o} window {window}"
+                );
+            }
+            // 3) row-id multiset over the schedule is unchanged
+            let mut orig: Vec<u32> = ids
+                .iter()
+                .flat_map(|&i| plan.fetch_indices(i).to_vec())
+                .collect();
+            let mut resched: Vec<u32> = sched
+                .iter()
+                .flat_map(|&i| plan.fetch_indices(i).to_vec())
+                .collect();
+            orig.sort_unstable();
+            resched.sort_unstable();
+            prop_assert!(orig == resched, "row multiset changed");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cached_loader_covers_and_matches_plain_stream() {
+    let dir = TempDir::new("prop-cache").unwrap();
+    let mut cfg = TahoeConfig::tiny();
+    cfg.n_plates = 3;
+    cfg.cells_per_plate = 350;
+    generate(&cfg, dir.path()).unwrap();
+    let backend: Arc<dyn Backend> = Arc::new(open_collection(dir.path()).unwrap());
+    let n = backend.n_rows();
+    check("cached-loader", 10, |rng| {
+        let base = LoaderConfig {
+            strategy: Strategy::BlockShuffling {
+                block_size: rng.range(1, 48),
+            },
+            batch_size: rng.range(1, 80),
+            fetch_factor: rng.range(1, 6),
+            seed: rng.next_u64(),
+            num_workers: rng.range(0, 3),
+            ..Default::default()
+        };
+        let cached = LoaderConfig {
+            cache_bytes: rng.range(10_000, 8 << 20),
+            cache_block_rows: rng.range(1, 400),
+            locality_window: rng.range(0, 12),
+            readahead: rng.bernoulli(0.5),
+            ..base.clone()
+        };
+        let epoch = rng.range(0, 3) as u64;
+        let run = |cfg: &LoaderConfig| -> Result<Vec<Vec<u32>>, String> {
+            let ds = ScDataset::new(backend.clone(), cfg.clone());
+            let mut out = Vec::new();
+            for mb in ds.epoch(epoch).map_err(|e| e.to_string())? {
+                out.push(mb.map_err(|e| e.to_string())?.rows);
+            }
+            Ok(out)
+        };
+        let plain = run(&base)?;
+        let with_cache = run(&cached)?;
+        // exact cover in both cases
+        let mut all: Vec<u32> = with_cache.iter().flatten().copied().collect();
+        all.sort_unstable();
+        prop_assert!(
+            all == (0..n as u32).collect::<Vec<_>>(),
+            "cached epoch lost/duplicated rows"
+        );
+        // single-process: the exact minibatch sequence must be identical
+        if base.num_workers == 0 {
+            prop_assert!(
+                plain == with_cache,
+                "cache/scheduler changed the emitted stream"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_simulator_monotonicities() {
     check("simulator-monotone", 64, |rng| {
         let model = DiskModel::sata_ssd_hdf5();
@@ -268,6 +381,7 @@ fn prop_simulator_monotonicities() {
             bytes,
             chunks: runs,
             pages: runs + bytes / 4096,
+            ..IoReport::default()
         };
         // more runs (same rows) never cheaper
         let fewer = IoReport {
