@@ -1,5 +1,9 @@
 //! Shared setup for the bench targets: a cached small dataset + sweep
 //! options tuned for bench runtime.
+//!
+//! Each bench binary compiles this module independently and uses a
+//! different subset of the helpers, so unused-item lints are silenced.
+#![allow(dead_code)]
 
 use std::path::PathBuf;
 use std::sync::Arc;

@@ -7,8 +7,9 @@ pub mod sweep;
 pub mod timing;
 
 pub use sweep::{
-    annloader_baseline, measure_cache_epochs, measure_config, multiworker_grid, streaming_sweep,
-    throughput_grid, CacheRun, SweepOptions, SweepPoint,
+    annloader_baseline, measure_cache_epochs, measure_config, measure_decode_point,
+    measure_decode_sweep, multiworker_grid, streaming_sweep, throughput_grid, CacheRun,
+    DecodePoint, SweepOptions, SweepPoint,
 };
 pub use timing::{bench, bench_throughput, black_box, BenchResult};
 

@@ -55,6 +55,10 @@ pub struct SweepOptions {
     pub readahead: bool,
     /// Cache-aware fetch scheduling window (≤ 1 = off).
     pub locality_window: usize,
+    /// Intra-fetch decode parallelism (1 = serial, 0 = auto).
+    pub decode_threads: usize,
+    /// Read-coalescing gap tolerance in bytes (0 = off).
+    pub coalesce_gap_bytes: usize,
 }
 
 impl Default for SweepOptions {
@@ -70,6 +74,8 @@ impl Default for SweepOptions {
             cache_block_rows: 256,
             readahead: false,
             locality_window: 0,
+            decode_threads: 1,
+            coalesce_gap_bytes: 0,
         }
     }
 }
@@ -96,6 +102,8 @@ pub fn measure_config(
         cache_block_rows: opts.cache_block_rows,
         readahead: opts.readahead,
         locality_window: opts.locality_window,
+        decode_threads: opts.decode_threads,
+        coalesce_gap_bytes: opts.coalesce_gap_bytes,
         ..Default::default()
     };
     let ds = ScDataset::new(backend.clone(), cfg);
@@ -294,6 +302,8 @@ pub fn measure_cache_epochs(
         cache_block_rows: opts.cache_block_rows,
         readahead: opts.readahead,
         locality_window: opts.locality_window,
+        decode_threads: opts.decode_threads,
+        coalesce_gap_bytes: opts.coalesce_gap_bytes,
         ..Default::default()
     };
     let ds = ScDataset::new(backend.clone(), cfg);
@@ -363,6 +373,95 @@ pub fn measure_cache_epochs(
     Ok(run)
 }
 
+/// One measured decode-pipeline configuration (Figure 9). Unlike the
+/// virtual-disk sweeps, the headline number here is **real wall-clock**
+/// rows/s: decode parallelism and read coalescing change how fast this
+/// machine actually decodes, which the cost model does not simulate.
+#[derive(Clone, Debug)]
+pub struct DecodePoint {
+    pub decode_threads: usize,
+    pub coalesce_gap_bytes: usize,
+    /// Wall-clock throughput of one drained epoch on the real files.
+    pub real_samples_per_sec: f64,
+    pub rows: u64,
+    /// Ranged backend reads actually issued (post-coalescing).
+    pub read_calls: u64,
+    /// Reads that would have been issued without coalescing.
+    pub read_calls_raw: u64,
+    /// Sorted row-id multiset of the epoch — equality across points
+    /// proves the pipeline is execution-only.
+    pub row_multiset: Vec<u32>,
+}
+
+/// Drain one full epoch at the given decode-pipeline setting and measure
+/// real wall clock + read-call accounting.
+pub fn measure_decode_point(
+    backend: &Arc<dyn Backend>,
+    strategy: Strategy,
+    fetch_factor: usize,
+    decode_threads: usize,
+    coalesce_gap_bytes: usize,
+    opts: &SweepOptions,
+) -> Result<DecodePoint> {
+    let cfg = LoaderConfig {
+        strategy,
+        batch_size: opts.batch_size,
+        fetch_factor,
+        seed: opts.seed,
+        cache_bytes: opts.cache_bytes,
+        cache_block_rows: opts.cache_block_rows,
+        readahead: opts.readahead,
+        locality_window: opts.locality_window,
+        decode_threads,
+        coalesce_gap_bytes,
+        ..Default::default()
+    };
+    let ds = ScDataset::new(backend.clone(), cfg);
+    let t0 = std::time::Instant::now();
+    let mut iter = ds.epoch(0)?;
+    let mut rows: Vec<u32> = Vec::new();
+    for mb in iter.by_ref() {
+        rows.extend(mb?.rows);
+    }
+    let real_secs = t0.elapsed().as_secs_f64();
+    let io = iter.stats().io;
+    rows.sort_unstable();
+    Ok(DecodePoint {
+        decode_threads,
+        coalesce_gap_bytes,
+        real_samples_per_sec: rows.len() as f64 / real_secs.max(1e-9),
+        rows: rows.len() as u64,
+        read_calls: io.read_calls,
+        read_calls_raw: io.read_calls_raw,
+        row_multiset: rows,
+    })
+}
+
+/// Figure 9: decode-scaling sweep — one point per `decode_threads`
+/// candidate at a fixed coalescing gap.
+pub fn measure_decode_sweep(
+    backend: &Arc<dyn Backend>,
+    strategy: Strategy,
+    fetch_factor: usize,
+    threads_grid: &[usize],
+    coalesce_gap_bytes: usize,
+    opts: &SweepOptions,
+) -> Result<Vec<DecodePoint>> {
+    threads_grid
+        .iter()
+        .map(|&t| {
+            measure_decode_point(
+                backend,
+                strategy.clone(),
+                fetch_factor,
+                t,
+                coalesce_gap_bytes,
+                opts,
+            )
+        })
+        .collect()
+}
+
 /// Table 2: multiprocessing grid (block × fetch × workers) via the DES.
 pub fn multiworker_grid(
     backend: &Arc<dyn Backend>,
@@ -429,6 +528,8 @@ impl SweepPoint {
             cache_hits: self.totals.cache_hits / n,
             cache_misses: self.totals.cache_misses / n,
             cache_evictions: self.totals.cache_evictions / n,
+            read_calls: self.totals.read_calls / n,
+            read_calls_raw: self.totals.read_calls_raw / n,
         }
     }
 }
@@ -493,6 +594,30 @@ mod tests {
         assert!(on.epoch_bytes[1] < on.epoch_bytes[0], "warm epoch must hit");
         assert!(on.hit_rate > 0.0);
         assert_eq!(on.epoch_rows, off.epoch_rows);
+    }
+
+    #[test]
+    fn decode_sweep_is_execution_only() {
+        let (_d, b) = backend();
+        let opts = SweepOptions::default();
+        let strategy = Strategy::BlockShuffling { block_size: 16 };
+        let pts =
+            measure_decode_sweep(&b, strategy.clone(), 4, &[1, 4], 64 << 10, &opts).unwrap();
+        assert_eq!(pts.len(), 2);
+        assert_eq!(
+            pts[0].row_multiset, pts[1].row_multiset,
+            "decode threads must not change the epoch"
+        );
+        let off = measure_decode_point(&b, strategy, 4, 1, 0, &opts).unwrap();
+        assert_eq!(off.row_multiset, pts[0].row_multiset);
+        assert_eq!(off.read_calls, off.read_calls_raw, "gap 0 never merges");
+        assert!(
+            pts[0].read_calls < off.read_calls,
+            "coalescing must cut backend read calls: {} !< {}",
+            pts[0].read_calls,
+            off.read_calls
+        );
+        assert_eq!(pts[0].read_calls_raw, off.read_calls_raw);
     }
 
     #[test]

@@ -151,6 +151,10 @@ pub fn train(args: &Args) -> Result<()> {
     tc.loader.cache_block_rows = cfg.cache_block_rows;
     tc.loader.readahead = args.bool("readahead") || cfg.readahead;
     tc.loader.locality_window = args.usize_or("locality-window", cfg.locality_window)?;
+    // Intra-fetch decode pipeline (flags override the `[io]` table).
+    tc.loader.decode_threads = args.usize_or("decode-threads", cfg.decode_threads)?;
+    tc.loader.coalesce_gap_bytes =
+        args.usize_or("coalesce-gap-bytes", cfg.coalesce_gap_bytes)?;
     let report = train_eval(train_be, test_be, &engine, &tc)?;
     println!(
         "task={} strategy={} engine={}",
@@ -191,6 +195,10 @@ pub fn autotune(args: &Args) -> Result<()> {
     };
     let opts = TuneOptions {
         cache_bytes: (args.usize_or("cache-mb", cfg.cache_mb)? as u64) << 20,
+        decode_threads: args.usize_list_or(
+            "decode-threads",
+            &TuneOptions::default().decode_threads,
+        )?,
         ..TuneOptions::default()
     };
     let result = tune(&inputs, &opts);
@@ -208,9 +216,10 @@ pub fn autotune(args: &Args) -> Result<()> {
     // by their cache-adjusted steady-state throughput.
     let cache_on = opts.cache_bytes > 0;
     println!(
-        "recommended: block_size={} fetch_factor={} (predicted {}{}, entropy ≥ {:.2} bits, buffer {})",
+        "recommended: block_size={} fetch_factor={} decode_threads={} (predicted {}{}, entropy ≥ {:.2} bits, buffer {})",
         result.best.block_size,
         result.best.fetch_factor,
+        result.best.decode_threads,
         fmt_rate(result.best.effective_samples_per_sec(cache_on)),
         if cache_on { " cached" } else { "" },
         result.best.entropy_lower_bound,
@@ -219,9 +228,10 @@ pub fn autotune(args: &Args) -> Result<()> {
     println!("\ngrid (predicted samples/s, * = feasible):");
     for p in &result.grid {
         println!(
-            "  b={:<5} f={:<5} {:>12} {}",
+            "  b={:<5} f={:<5} dt={:<3} {:>12} {}",
             p.block_size,
             p.fetch_factor,
+            p.decode_threads,
             fmt_rate(p.effective_samples_per_sec(cache_on)),
             if p.feasible { "*" } else { "" }
         );

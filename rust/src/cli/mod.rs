@@ -27,14 +27,17 @@ COMMANDS:
               [--fetch N] [--engine cpu|pjrt] [--artifacts DIR]
               [--epochs N] [--lr F] [--max-steps N] [--seed N]
               [--cache-mb N] [--readahead] [--locality-window N]
+              [--decode-threads N] [--coalesce-gap-bytes N]
   bench       Regenerate paper figures/tables
-              fig2|fig3|fig4|eq5|fig5|fig6|fig7|fig8|table2|all
+              fig2|fig3|fig4|eq5|fig5|fig6|fig7|fig8|fig9|table2|all
               --data DIR [--results DIR] [--quick] [--engine cpu|pjrt]
               [--config FILE] [--seeds N]
               fig8 also takes [--cache-mb N] [--readahead]
               [--locality-window N] [--epochs N] [--block N] [--fetch N]
-  autotune    Recommend (block size, fetch factor): --data DIR
-              [--cache-mb N]
+              fig9 also takes [--threads-grid 1,2,4]
+              [--coalesce-gap-bytes N] [--block N] [--fetch N] [--smoke]
+  autotune    Recommend (block size, fetch factor, decode threads):
+              --data DIR [--cache-mb N] [--decode-threads 1,2,4]
   calibrate   Print virtual-disk anchors vs the paper's measurements
   help        Show this message
 
@@ -45,6 +48,13 @@ prefetches the next scheduled fetch's blocks in the background, and
 N positions out of order to maximize block reuse (delivery order, and
 therefore the minibatch stream, is unchanged). Defaults come from the
 [cache] table of --config FILE.
+
+The decode pipeline: --decode-threads N reads+decompresses the chunks of
+one fetch concurrently on a shared pool (1 = serial, 0 = one per core)
+and --coalesce-gap-bytes N merges chunk reads whose file gap is <= N
+bytes into single ranged I/O calls (0 = off). Both are execution-only:
+the emitted minibatch stream is bit-identical for any setting. Defaults
+come from the [io] table of --config FILE.
 
 The virtual-disk model can be overridden with --config FILE (TOML, see
 configs/default.toml).";

@@ -25,6 +25,12 @@ pub struct AppConfig {
     pub readahead: bool,
     /// Cache-aware fetch scheduling window (≤ 1 disables reordering).
     pub locality_window: usize,
+    /// `[io]` table: intra-fetch decode parallelism (1 = serial,
+    /// 0 = auto/one per core).
+    pub decode_threads: usize,
+    /// `[io]` table: gap tolerance in bytes for coalescing near-adjacent
+    /// chunk reads into single ranged I/O calls (0 = off).
+    pub coalesce_gap_bytes: usize,
 }
 
 impl Default for AppConfig {
@@ -40,6 +46,8 @@ impl Default for AppConfig {
             cache_block_rows: 256,
             readahead: false,
             locality_window: 0,
+            decode_threads: 1,
+            coalesce_gap_bytes: 0,
         }
     }
 }
@@ -68,7 +76,10 @@ impl AppConfig {
         cfg.cache_block_rows = doc.usize_or("cache.block_rows", cfg.cache_block_rows);
         cfg.readahead = doc.bool_or("cache.readahead", cfg.readahead);
         cfg.locality_window = doc.usize_or("cache.locality_window", cfg.locality_window);
-        // [io] table: disk-model overrides
+        // [io] table: decode pipeline + disk-model overrides
+        cfg.decode_threads = doc.usize_or("io.decode_threads", cfg.decode_threads);
+        cfg.coalesce_gap_bytes =
+            doc.usize_or("io.coalesce_gap_bytes", cfg.coalesce_gap_bytes);
         let d = &mut cfg.disk;
         d.call_overhead_us = doc.f64_or("io.call_overhead_us", d.call_overhead_us);
         d.run_cost_max_us = doc.f64_or("io.run_cost_max_us", d.run_cost_max_us);
@@ -126,6 +137,24 @@ cell_cpu_us = 5
             c.disk.run_cost_max_us,
             DiskModel::sata_ssd_hdf5().run_cost_max_us
         );
+    }
+
+    #[test]
+    fn io_pipeline_keys_parse() {
+        let c = AppConfig::from_toml(
+            r#"
+[io]
+decode_threads = 4
+coalesce_gap_bytes = 65536
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.decode_threads, 4);
+        assert_eq!(c.coalesce_gap_bytes, 65536);
+        // defaults: serial decode, coalescing off
+        let d = AppConfig::default();
+        assert_eq!(d.decode_threads, 1);
+        assert_eq!(d.coalesce_gap_bytes, 0);
     }
 
     #[test]

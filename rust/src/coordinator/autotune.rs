@@ -41,6 +41,10 @@ pub struct TuneOptions {
     /// configurations are ranked by their cache-adjusted steady-state
     /// throughput.
     pub cache_bytes: u64,
+    /// Candidate intra-fetch decode parallelism (`--decode-threads`
+    /// sweep). Decode parallelism divides the parallelizable share of the
+    /// worker-lane per-row CPU ([`DECODE_PARALLEL_FRACTION`], Amdahl).
+    pub decode_threads: Vec<usize>,
 }
 
 impl Default for TuneOptions {
@@ -51,8 +55,21 @@ impl Default for TuneOptions {
             block_sizes: vec![1, 4, 16, 64, 256, 1024],
             fetch_factors: vec![1, 4, 16, 64, 256, 1024],
             cache_bytes: 0,
+            decode_threads: vec![1, 2, 4],
         }
     }
+}
+
+/// Share of the worker-lane per-row CPU the decode pool parallelizes
+/// (chunk read + decompress + extraction); the rest — reshuffle gather,
+/// batch assembly, tensor hand-off — stays serial per fetch.
+pub const DECODE_PARALLEL_FRACTION: f64 = 0.7;
+
+/// Amdahl factor the per-row worker CPU shrinks by at `threads`-way
+/// decode parallelism.
+fn decode_scale(threads: usize) -> f64 {
+    let t = threads.max(1) as f64;
+    (1.0 - DECODE_PARALLEL_FRACTION) + DECODE_PARALLEL_FRACTION / t
 }
 
 /// One evaluated configuration.
@@ -60,6 +77,8 @@ impl Default for TuneOptions {
 pub struct TunePoint {
     pub block_size: usize,
     pub fetch_factor: usize,
+    /// Intra-fetch decode parallelism this point was evaluated at.
+    pub decode_threads: usize,
     pub predicted_samples_per_sec: f64,
     /// Steady-state throughput with the configured block cache (equals
     /// `predicted_samples_per_sec` when no cache is configured).
@@ -93,8 +112,34 @@ pub struct TuneResult {
 
 /// Predicted steady-state single-worker throughput for (b, f): one fetch of
 /// `m·f` rows in ~`⌈m·f/b⌉` runs (uniformly sampled blocks are almost never
-/// adjacent), served synchronously.
+/// adjacent), served synchronously, decoded serially.
 pub fn predict_throughput(inputs: &TuneInputs, b: usize, f: usize) -> f64 {
+    predict_throughput_decode(inputs, b, f, 1)
+}
+
+/// Worker-lane CPU for one fetch with `decode_threads`-way intra-fetch
+/// decode parallelism: the fixed (per-call) share is untouched, the
+/// per-row share shrinks by the Amdahl factor.
+fn worker_us_decode(
+    inputs: &TuneInputs,
+    io: &IoReport,
+    buffer_rows: usize,
+    decode_threads: usize,
+) -> f64 {
+    let full = inputs.disk.cpu_us(inputs.pattern, io, buffer_rows);
+    let fixed = inputs
+        .disk
+        .cpu_us(inputs.pattern, &IoReport { rows: 0, ..*io }, buffer_rows);
+    fixed + (full - fixed) * decode_scale(decode_threads)
+}
+
+/// [`predict_throughput`] at a given intra-fetch decode parallelism.
+pub fn predict_throughput_decode(
+    inputs: &TuneInputs,
+    b: usize,
+    f: usize,
+    decode_threads: usize,
+) -> f64 {
     let rows = (inputs.batch_size * f) as u64;
     let runs = rows.div_ceil(b as u64).max(1);
     let io = IoReport {
@@ -107,7 +152,7 @@ pub fn predict_throughput(inputs: &TuneInputs, b: usize, f: usize) -> f64 {
         ..IoReport::default()
     };
     let us = inputs.disk.disk_us(inputs.pattern, &io, 1)
-        + inputs.disk.cpu_us(inputs.pattern, &io, rows as usize);
+        + worker_us_decode(inputs, &io, rows as usize, decode_threads);
     rows as f64 / (us / 1e6)
 }
 
@@ -121,9 +166,10 @@ pub fn predict_throughput_cached(
     b: usize,
     f: usize,
     cache_bytes: u64,
+    decode_threads: usize,
 ) -> f64 {
     if cache_bytes == 0 {
-        return predict_throughput(inputs, b, f);
+        return predict_throughput_decode(inputs, b, f, decode_threads);
     }
     let rows = (inputs.batch_size * f) as u64;
     let dataset_bytes = (inputs.n_rows as u64 * inputs.avg_row_bytes).max(1);
@@ -151,13 +197,18 @@ pub fn predict_throughput_cached(
         ..IoReport::default()
     };
     let us = inputs.disk.disk_us(inputs.pattern, &disk_io, 1)
-        + inputs.disk.cpu_us(inputs.pattern, &cpu_io, rows as usize);
+        + worker_us_decode(inputs, &cpu_io, rows as usize, decode_threads);
     rows as f64 / (us / 1e6)
 }
 
 /// Evaluate the grid and choose the best feasible point.
 pub fn tune(inputs: &TuneInputs, opts: &TuneOptions) -> TuneResult {
     let h_p = dist_entropy(&inputs.label_dist);
+    let decode_grid: &[usize] = if opts.decode_threads.is_empty() {
+        &[1]
+    } else {
+        &opts.decode_threads
+    };
     let mut grid = Vec::new();
     for &b in &opts.block_sizes {
         for &f in &opts.fetch_factors {
@@ -171,21 +222,25 @@ pub fn tune(inputs: &TuneInputs, opts: &TuneOptions) -> TuneResult {
                 corollary33_bounds(&inputs.label_dist, inputs.batch_size, eff_b);
             let buffer_bytes =
                 (inputs.batch_size * f) as u64 * inputs.dense_row_bytes;
-            let sps = predict_throughput(inputs, b, f);
-            let sps_cached = predict_throughput_cached(inputs, b, f, opts.cache_bytes);
             let feasible = eff_lo >= h_p - opts.entropy_slack_bits
                 && buffer_bytes <= opts.memory_budget_bytes;
-            grid.push(TunePoint {
-                block_size: b,
-                fetch_factor: f,
-                predicted_samples_per_sec: sps,
-                predicted_samples_per_sec_cached: sps_cached,
-                // f-adjusted conservative bound (≥ the f=1 bound `lo`).
-                entropy_lower_bound: eff_lo.max(lo).max(0.0),
-                entropy_upper_bound: hi,
-                buffer_bytes,
-                feasible,
-            });
+            for &dt in decode_grid {
+                let sps = predict_throughput_decode(inputs, b, f, dt);
+                let sps_cached =
+                    predict_throughput_cached(inputs, b, f, opts.cache_bytes, dt);
+                grid.push(TunePoint {
+                    block_size: b,
+                    fetch_factor: f,
+                    decode_threads: dt,
+                    predicted_samples_per_sec: sps,
+                    predicted_samples_per_sec_cached: sps_cached,
+                    // f-adjusted conservative bound (≥ the f=1 bound `lo`).
+                    entropy_lower_bound: eff_lo.max(lo).max(0.0),
+                    entropy_upper_bound: hi,
+                    buffer_bytes,
+                    feasible,
+                });
+            }
         }
     }
     // Rank by cache-adjusted throughput when a cache is configured.
@@ -250,7 +305,23 @@ mod tests {
         assert!(r.best.feasible);
         assert!(r.best.fetch_factor >= 16, "best {:?}", r.best);
         assert!(r.best.entropy_lower_bound >= r.h_p - 0.15 - 1e-9);
-        assert_eq!(r.grid.len(), 36);
+        // 6 block sizes × 6 fetch factors × 3 decode-thread candidates.
+        assert_eq!(r.grid.len(), 108);
+        // Decode parallelism is pure upside in the model, so the winner
+        // sits at the top of the sweep.
+        assert_eq!(r.best.decode_threads, 4);
+    }
+
+    #[test]
+    fn decode_threads_scale_throughput_with_diminishing_returns() {
+        let inp = inputs();
+        let t1 = predict_throughput_decode(&inp, 16, 64, 1);
+        let t2 = predict_throughput_decode(&inp, 16, 64, 2);
+        let t4 = predict_throughput_decode(&inp, 16, 64, 4);
+        assert!(t2 > t1 && t4 > t2, "t1={t1} t2={t2} t4={t4}");
+        // Amdahl: the 2→4 step buys less than the 1→2 step.
+        assert!(t4 / t2 < t2 / t1);
+        assert_eq!(predict_throughput(&inp, 16, 64), t1);
     }
 
     #[test]
@@ -281,18 +352,22 @@ mod tests {
         let inp = inputs();
         let plain = predict_throughput(&inp, 16, 64);
         // No cache: identical prediction.
-        assert_eq!(predict_throughput_cached(&inp, 16, 64, 0), plain);
+        assert_eq!(predict_throughput_cached(&inp, 16, 64, 0, 1), plain);
         // Monotone in cache size, strictly faster once the cache holds a
         // meaningful payload fraction.
         let payload = inp.n_rows as u64 * inp.avg_row_bytes;
-        let half = predict_throughput_cached(&inp, 16, 64, payload / 2);
-        let full = predict_throughput_cached(&inp, 16, 64, payload);
+        let half = predict_throughput_cached(&inp, 16, 64, payload / 2, 1);
+        let full = predict_throughput_cached(&inp, 16, 64, payload, 1);
         assert!(half > plain, "half-cache {half} !> plain {plain}");
         assert!(full >= half, "full {full} !>= half {half}");
         // Fully cached: disk time gone, but per-row CPU still bounds it.
-        let huge = predict_throughput_cached(&inp, 16, 64, 100 * payload);
+        let huge = predict_throughput_cached(&inp, 16, 64, 100 * payload, 1);
         assert!((huge - full).abs() < 1e-6 * full.max(1.0));
         assert!(huge.is_finite());
+        // Decode parallelism compounds with the cache: once disk time is
+        // gone the worker lane is all that remains, so threads help more.
+        let huge4 = predict_throughput_cached(&inp, 16, 64, 100 * payload, 4);
+        assert!(huge4 > huge, "cached+threads {huge4} !> cached {huge}");
     }
 
     #[test]

@@ -10,20 +10,54 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::store::{Backend, CsrBatch, IoReport};
+use crate::store::{Backend, BufferPool, CsrBatch, IoReport};
 use crate::util::rng::Rng;
 
 /// A loaded, reshuffled fetch buffer ready to be split into minibatches.
+///
+/// The reshuffle is **lazy** (the fused gather): instead of materializing
+/// the full `m·f`-row post-shuffle copy up front and slicing minibatches
+/// off it (two copies per emitted row), the chunk keeps the backend's
+/// unique sorted rows plus the shuffled position map, and [`split`]
+/// gathers each minibatch directly — one copy per emitted row.
+///
+/// [`split`]: FetchedChunk::split
 #[derive(Clone, Debug)]
 pub struct FetchedChunk {
-    /// Rows in post-shuffle order.
-    pub x: CsrBatch,
-    /// Global row ids aligned with `x` rows.
+    /// The backend result over the sorted unique row ids.
+    pub unique: CsrBatch,
+    /// Post-shuffle multiset order: positions into `unique` rows.
+    pub positions: Vec<u32>,
+    /// Global row ids in post-shuffle order (aligned with `positions`).
     pub rows: Vec<u32>,
-    /// Label codes aligned with `x` rows, one vec per requested obs column.
+    /// Label codes aligned with `rows`, one vec per requested obs column.
     pub labels: Vec<Vec<u16>>,
     /// I/O accounting for the backend call(s).
     pub io: IoReport,
+}
+
+impl FetchedChunk {
+    /// Rows this chunk will emit (the multiset size, not the unique count).
+    pub fn n_rows(&self) -> usize {
+        self.positions.len()
+    }
+
+    /// Gather emitted rows `[start, end)` into a minibatch — the fused
+    /// gather that replaces `select_rows` + `slice_rows`.
+    pub fn split(&self, start: usize, end: usize) -> CsrBatch {
+        self.unique.select_rows(&self.positions[start..end])
+    }
+
+    /// Materialize the whole reshuffled buffer (tests and simple callers).
+    pub fn materialize(&self) -> CsrBatch {
+        self.split(0, self.positions.len())
+    }
+
+    /// Hand the unique-row arena back to the shared buffer pool once the
+    /// chunk is fully split.
+    pub fn recycle(self) {
+        BufferPool::global().give_batch(self.unique);
+    }
 }
 
 /// The I/O half of a fetch: the backend result over the sorted unique
@@ -34,6 +68,10 @@ pub struct FetchedChunk {
 pub struct ExecutedFetch {
     /// Sorted, de-duplicated row ids sent to the backend (line 7).
     pub sorted: Vec<u32>,
+    /// For each original (plan-order) index, its position in `sorted` —
+    /// built by the same merge that dedups, so mapping the multiset back
+    /// costs nothing extra.
+    pub positions: Vec<u32>,
     /// Backend result aligned with `sorted`.
     pub fetched: crate::store::FetchResult,
 }
@@ -41,39 +79,55 @@ pub struct ExecutedFetch {
 /// Algorithm 1 lines 7–8: sort + dedup the fetch batch and load it from
 /// the backend. This is the only part that touches storage, so the
 /// scheduler may run it ahead of delivery order.
+///
+/// The position map falls out of a single merge over the argsorted
+/// indices (O(k) after the sort line 7 already pays), replacing the old
+/// per-index `binary_search` in `finish_fetch` (O(k log u)).
 pub fn execute_fetch(backend: &Arc<dyn Backend>, indices: &[u32]) -> Result<ExecutedFetch> {
-    let mut sorted: Vec<u32> = indices.to_vec();
-    sorted.sort_unstable();
-    sorted.dedup();
+    let k = indices.len();
+    let mut order: Vec<u32> = (0..k as u32).collect();
+    order.sort_unstable_by_key(|&i| indices[i as usize]);
+    let mut sorted: Vec<u32> = Vec::with_capacity(k);
+    let mut positions = vec![0u32; k];
+    for &oi in &order {
+        let v = indices[oi as usize];
+        if sorted.last() != Some(&v) {
+            sorted.push(v);
+        }
+        positions[oi as usize] = (sorted.len() - 1) as u32;
+    }
     let fetched = backend.fetch_rows(&sorted)?;
-    Ok(ExecutedFetch { sorted, fetched })
+    Ok(ExecutedFetch {
+        sorted,
+        positions,
+        fetched,
+    })
 }
 
-/// Algorithm 1 line 9: materialize the in-memory reshuffle over an
-/// executed fetch. Must be called in **delivery order** — the shuffle RNG
-/// stream is consumed here, which keeps the emitted minibatch sequence
-/// independent of the execution order chosen by the scheduler.
+/// Algorithm 1 line 9: set up the in-memory reshuffle over an executed
+/// fetch. Must be called in **delivery order** — the shuffle RNG stream
+/// is consumed here, which keeps the emitted minibatch sequence
+/// independent of the execution order chosen by the scheduler. The data
+/// itself is gathered lazily by [`FetchedChunk::split`].
 pub fn finish_fetch(
     ex: ExecutedFetch,
-    indices: &[u32],
     backend: &Arc<dyn Backend>,
     label_cols: &[String],
     mut shuffle: Option<&mut Rng>,
 ) -> Result<FetchedChunk> {
-    let ExecutedFetch { sorted, fetched } = ex;
-    // Map the original multiset onto positions in the unique sorted batch.
-    let mut positions: Vec<u32> = indices
-        .iter()
-        .map(|&i| sorted.binary_search(&i).expect("index vanished") as u32)
-        .collect();
+    let ExecutedFetch {
+        sorted,
+        mut positions,
+        fetched,
+    } = ex;
     if let Some(rng) = shuffle.as_deref_mut() {
         rng.shuffle(&mut positions);
     }
     let rows: Vec<u32> = positions.iter().map(|&p| sorted[p as usize]).collect();
-    let x = fetched.x.select_rows(&positions);
     let labels = backend.obs().gather(label_cols, &rows)?;
     Ok(FetchedChunk {
-        x,
+        unique: fetched.x,
+        positions,
         rows,
         labels,
         io: fetched.io,
@@ -93,7 +147,7 @@ pub fn run_fetch(
     shuffle: Option<&mut Rng>,
 ) -> Result<FetchedChunk> {
     let ex = execute_fetch(backend, indices)?;
-    finish_fetch(ex, indices, backend, label_cols, shuffle)
+    finish_fetch(ex, backend, label_cols, shuffle)
 }
 
 #[cfg(test)]
@@ -119,7 +173,7 @@ mod tests {
         let mut rng = Rng::new(5);
         let cols = vec!["plate".to_string(), "drug".to_string()];
         let chunk = run_fetch(&b, &indices, &cols, Some(&mut rng)).unwrap();
-        assert_eq!(chunk.x.n_rows, 6);
+        assert_eq!(chunk.n_rows(), 6);
         let mut got = chunk.rows.clone();
         got.sort_unstable();
         assert_eq!(got, vec![3, 10, 10, 700, 700, 999]);
@@ -128,11 +182,31 @@ mod tests {
         for (j, &r) in chunk.rows.iter().enumerate() {
             assert_eq!(chunk.labels[0][j], plate_col.codes[r as usize]);
         }
-        // x rows match a direct fetch of the same global rows
+        // the fused gather matches a direct fetch of the same global rows
+        let x = chunk.materialize();
+        assert_eq!(x.n_rows, 6);
         for (j, &r) in chunk.rows.iter().enumerate() {
             let direct = b.fetch_rows(&[r]).unwrap().x;
-            assert_eq!(chunk.x.row(j), direct.row(0), "row {j} (global {r})");
+            assert_eq!(x.row(j), direct.row(0), "row {j} (global {r})");
         }
+        // per-minibatch splits agree with the materialized whole
+        let lo = chunk.split(0, 3);
+        let hi = chunk.split(3, 6);
+        assert_eq!(lo.row(2), x.row(2));
+        assert_eq!(hi.row(0), x.row(3));
+    }
+
+    #[test]
+    fn position_map_matches_binary_search() {
+        let (_d, b) = backend();
+        let indices = vec![42u32, 7, 42, 7, 7, 900, 0];
+        let ex = execute_fetch(&b, &indices).unwrap();
+        let expect: Vec<u32> = indices
+            .iter()
+            .map(|&i| ex.sorted.binary_search(&i).unwrap() as u32)
+            .collect();
+        assert_eq!(ex.positions, expect, "merge must equal per-index search");
+        assert_eq!(ex.sorted, vec![0, 7, 42, 900]);
     }
 
     #[test]
@@ -161,6 +235,8 @@ mod tests {
         let (_d, b) = backend();
         let chunk = run_fetch(&b, &[4, 4, 4, 4], &[], None).unwrap();
         assert_eq!(chunk.io.rows, 1, "backend sees unique rows only");
-        assert_eq!(chunk.x.n_rows, 4, "multiset is reconstructed");
+        assert_eq!(chunk.n_rows(), 4, "multiset is reconstructed");
+        assert_eq!(chunk.unique.n_rows, 1, "only the unique row is held");
+        assert_eq!(chunk.materialize().n_rows, 4);
     }
 }

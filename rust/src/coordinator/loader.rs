@@ -16,7 +16,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::store::cache::{CacheConfig, CacheStats, CachingBackend};
-use crate::store::{Backend, CsrBatch, IoReport};
+use crate::store::{Backend, CsrBatch, IoPipeline, IoReport};
 use crate::util::rng::Rng;
 
 use super::ddp::assigned_fetches;
@@ -97,6 +97,24 @@ pub struct LoaderConfig {
     /// reorder buffer of up to `window + 1` decoded fetches per worker —
     /// most useful together with `cache_bytes > 0`.
     pub locality_window: usize,
+    /// Intra-fetch decode parallelism (`--decode-threads`): how many of
+    /// one fetch's chunks read+decompress concurrently on the shared
+    /// decode pool. `1` = serial (default), `0` = auto (one per core).
+    /// Execution-only — the emitted minibatch stream is bit-identical for
+    /// any setting (`tests/determinism.rs`).
+    pub decode_threads: usize,
+    /// Gap tolerance in bytes for merging near-adjacent chunk reads into
+    /// single ranged I/O calls (`--coalesce-gap-bytes`); `0` disables
+    /// coalescing. Also execution-only.
+    pub coalesce_gap_bytes: usize,
+}
+
+/// The execution-only pipeline knobs a config maps onto the backend.
+fn io_pipeline(cfg: &LoaderConfig) -> IoPipeline {
+    IoPipeline {
+        decode_threads: cfg.decode_threads,
+        coalesce_gap_bytes: cfg.coalesce_gap_bytes as u64,
+    }
 }
 
 impl Default for LoaderConfig {
@@ -116,6 +134,8 @@ impl Default for LoaderConfig {
             cache_block_rows: 256,
             readahead: false,
             locality_window: 0,
+            decode_threads: 1,
+            coalesce_gap_bytes: 0,
         }
     }
 }
@@ -161,6 +181,9 @@ impl ScDataset {
             Some(c) => c.clone(),
             None => backend,
         };
+        // Execution-only decode/coalescing knobs; the cache wrapper
+        // forwards them to the inner store where the read path lives.
+        backend.set_io_pipeline(io_pipeline(&cfg));
         ScDataset {
             backend,
             cache,
@@ -205,6 +228,14 @@ impl ScDataset {
     /// Iterate one epoch. Statistics are observable through
     /// [`EpochIter::stats`] while iterating and after exhaustion.
     pub fn epoch(&self, epoch: u64) -> Result<EpochIter> {
+        // Re-apply this dataset's pipeline knobs: the backend may be
+        // shared by several datasets (the knobs live on the backend, and
+        // the last writer wins), so whoever starts iterating gets their
+        // own settings. Output never depends on them — only the I/O
+        // trace — but interleaving epochs of two differently-configured
+        // datasets over one backend makes read-call accounting reflect a
+        // mix of both configs.
+        self.backend.set_io_pipeline(io_pipeline(&self.cfg));
         let plan = Arc::new(self.plan(epoch)?);
         let n_fetches = plan.n_fetches();
         let stats = Arc::new(Mutex::new(LoadStats::default()));
@@ -427,7 +458,6 @@ impl FetchStream {
         let ex = self.pending.remove(&id).expect("executed above");
         Some(finish_fetch(
             ex,
-            self.plan.fetch_indices(id),
             &self.backend,
             &self.label_cols,
             if self.shuffle_in_fetch {
@@ -471,16 +501,18 @@ impl Iterator for SplitIter {
         }
         loop {
             if let Some(chunk) = &self.current {
-                let n = chunk.x.n_rows;
+                let n = chunk.n_rows();
                 if self.offset < n {
                     let end = (self.offset + self.batch_size).min(n);
                     if end - self.offset < self.batch_size && self.drop_last {
-                        self.current = None;
+                        self.current.take().expect("checked above").recycle();
                         self.offset = 0;
                         continue;
                     }
                     let mb = Minibatch {
-                        x: chunk.x.slice_rows(self.offset, end),
+                        // Fused gather: one copy straight from the unique
+                        // fetched rows (no full-buffer reshuffle copy).
+                        x: chunk.split(self.offset, end),
                         rows: chunk.rows[self.offset..end].to_vec(),
                         labels: chunk
                             .labels
@@ -491,7 +523,7 @@ impl Iterator for SplitIter {
                     self.offset = end;
                     return Some(Ok(mb));
                 }
-                self.current = None;
+                self.current.take().expect("checked above").recycle();
                 self.offset = 0;
             }
             match self.source.next_chunk() {
@@ -556,15 +588,16 @@ impl ShuffleBufferIter {
     fn pull_row(&mut self) -> Result<bool> {
         loop {
             if let Some((chunk, off)) = &mut self.pending {
-                if *off < chunk.x.n_rows {
+                if *off < chunk.n_rows() {
                     let i = *off;
                     *off += 1;
-                    let row_batch = chunk.x.slice_rows(i, i + 1);
+                    let row_batch = chunk.split(i, i + 1);
                     let labels: Vec<u16> = chunk.labels.iter().map(|c| c[i]).collect();
                     self.window.push((chunk.rows[i], labels, row_batch));
                     return Ok(true);
                 }
-                self.pending = None;
+                let (chunk, _) = self.pending.take().expect("checked above");
+                chunk.recycle();
             }
             match self.source.next_chunk() {
                 None => return Ok(false),
@@ -899,6 +932,64 @@ mod tests {
             "a warm epoch must be served entirely from the cache"
         );
         assert!(warm.hits > 0);
+    }
+
+    #[test]
+    fn decode_pipeline_preserves_coverage() {
+        let (_d, b) = backend(300);
+        let n = b.n_rows();
+        for (threads, gap) in [(1usize, 0usize), (4, 0), (0, 64 << 10), (4, 64 << 10)] {
+            let ds = ScDataset::new(
+                b.clone(),
+                LoaderConfig {
+                    strategy: Strategy::BlockShuffling { block_size: 8 },
+                    batch_size: 32,
+                    fetch_factor: 4,
+                    label_cols: vec!["plate".into()],
+                    decode_threads: threads,
+                    coalesce_gap_bytes: gap,
+                    ..Default::default()
+                },
+            );
+            let mut rows = collect_rows(ds.epoch(0).unwrap());
+            rows.sort_unstable();
+            assert_eq!(
+                rows,
+                (0..n as u32).collect::<Vec<_>>(),
+                "threads={threads} gap={gap}"
+            );
+        }
+    }
+
+    #[test]
+    fn coalescing_issues_fewer_read_calls() {
+        let (_d, b) = backend(300);
+        let run = |gap: usize| {
+            let ds = ScDataset::new(
+                b.clone(),
+                LoaderConfig {
+                    strategy: Strategy::BlockShuffling { block_size: 8 },
+                    batch_size: 32,
+                    fetch_factor: 4,
+                    coalesce_gap_bytes: gap,
+                    ..Default::default()
+                },
+            );
+            let mut iter = ds.epoch(0).unwrap();
+            while iter.next().is_some() {}
+            iter.stats().io
+        };
+        let off = run(0);
+        let on = run(1 << 20);
+        assert_eq!(off.read_calls, off.read_calls_raw, "gap 0 never merges");
+        assert!(
+            on.read_calls < on.read_calls_raw,
+            "coalescing must merge reads: {} !< {}",
+            on.read_calls,
+            on.read_calls_raw
+        );
+        assert_eq!(on.read_calls_raw, off.read_calls_raw);
+        assert_eq!(on.bytes, off.bytes, "payload accounting is unchanged");
     }
 
     #[test]

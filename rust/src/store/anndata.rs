@@ -29,16 +29,17 @@
 //! concatenated, then all values (f32).
 
 use std::fs::File;
-use std::io::{Read, Write};
+use std::io::Write;
 use std::os::unix::fs::FileExt;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
-use flate2::read::DeflateDecoder;
 use flate2::write::DeflateEncoder;
 use flate2::Compression;
 
-use super::csr::CsrBatch;
+use super::decode::{
+    chunk_pieces, extract_chunk_rows, read_decode_groups, BufferPool, IoPipeline, PipelineCell,
+};
 use super::iomodel::{AccessPattern, IoReport};
 use super::obs::ObsFrame;
 use super::{check_sorted_indices, contiguous_runs, Backend, FetchResult};
@@ -46,65 +47,6 @@ use super::{check_sorted_indices, contiguous_runs, Backend, FetchResult};
 const MAGIC: &[u8; 8] = b"SCDATA1\n";
 const FOOTER_LEN: u64 = 80;
 const FLAG_DEFLATE: u64 = 1;
-
-/// Append little-endian u32s from raw bytes. On little-endian targets this
-/// is a single bulk copy (§Perf: the per-element `from_le_bytes` loop was a
-/// measurable share of fetch time).
-fn copy_le_u32(bytes: &[u8], out: &mut Vec<u32>) {
-    debug_assert_eq!(bytes.len() % 4, 0);
-    let n = bytes.len() / 4;
-    #[cfg(target_endian = "little")]
-    {
-        let old = out.len();
-        out.reserve(n);
-        // SAFETY: u32 has no invalid bit patterns; we copy exactly n*4
-        // bytes into freshly reserved capacity and then fix the length.
-        unsafe {
-            std::ptr::copy_nonoverlapping(
-                bytes.as_ptr(),
-                out.as_mut_ptr().add(old) as *mut u8,
-                n * 4,
-            );
-            out.set_len(old + n);
-        }
-    }
-    #[cfg(not(target_endian = "little"))]
-    {
-        out.extend(
-            bytes
-                .chunks_exact(4)
-                .map(|c| u32::from_le_bytes(c.try_into().unwrap())),
-        );
-    }
-}
-
-/// Append little-endian f32s from raw bytes (same strategy).
-fn copy_le_f32(bytes: &[u8], out: &mut Vec<f32>) {
-    debug_assert_eq!(bytes.len() % 4, 0);
-    let n = bytes.len() / 4;
-    #[cfg(target_endian = "little")]
-    {
-        let old = out.len();
-        out.reserve(n);
-        // SAFETY: as for copy_le_u32 (every bit pattern is a valid f32).
-        unsafe {
-            std::ptr::copy_nonoverlapping(
-                bytes.as_ptr(),
-                out.as_mut_ptr().add(old) as *mut u8,
-                n * 4,
-            );
-            out.set_len(old + n);
-        }
-    }
-    #[cfg(not(target_endian = "little"))]
-    {
-        out.extend(
-            bytes
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes(c.try_into().unwrap())),
-        );
-    }
-}
 
 /// Streaming writer for `.scs` files.
 pub struct StoreWriter {
@@ -270,6 +212,8 @@ pub struct SparseChunkStore {
     /// (offset, comp_len, raw_len) per chunk.
     chunk_table: Vec<(u64, u64, u64)>,
     obs: ObsFrame,
+    /// Decode-parallelism / read-coalescing knobs (execution-only).
+    pipeline: PipelineCell,
 }
 
 impl SparseChunkStore {
@@ -334,6 +278,7 @@ impl SparseChunkStore {
             indptr,
             chunk_table,
             obs,
+            pipeline: PipelineCell::default(),
         })
     }
 
@@ -353,67 +298,14 @@ impl SparseChunkStore {
         *self.indptr.last().unwrap()
     }
 
-    /// Read + decompress one chunk's payload into `raw` (reused across
-    /// chunks within a fetch — §Perf: avoids one large allocation per
-    /// chunk). `comp` is the compressed-bytes scratch buffer.
-    fn load_chunk_into(
-        &self,
-        chunk: usize,
-        comp: &mut Vec<u8>,
-        raw: &mut Vec<u8>,
-    ) -> Result<()> {
-        let (off, comp_len, raw_len) = self.chunk_table[chunk];
-        comp.clear();
-        comp.resize(comp_len as usize, 0);
-        self.file
-            .read_exact_at(comp, off)
-            .with_context(|| format!("read chunk {chunk} of {}", self.path.display()))?;
-        if self.compressed {
-            raw.clear();
-            raw.reserve(raw_len as usize);
-            DeflateDecoder::new(&comp[..])
-                .read_to_end(raw)
-                .with_context(|| format!("decompress chunk {chunk}"))?;
-            if raw.len() != raw_len as usize {
-                bail!("chunk {chunk}: raw length mismatch");
-            }
-        } else {
-            std::mem::swap(comp, raw);
-        }
-        Ok(())
-    }
-
-    /// Copy a contiguous row range `[row_start, row_end)` (all inside
-    /// `chunk`) out of a loaded chunk payload into `out`. Handling whole
-    /// runs at once lets the nonzeros move as two bulk copies instead of
-    /// per-row element loops (§Perf).
-    fn extract_rows(
-        &self,
-        chunk: usize,
-        payload: &[u8],
-        row_start: usize,
-        row_end: usize,
-        out: &mut CsrBatch,
-    ) {
-        let c0 = chunk * self.chunk_rows;
-        let base = self.indptr[c0];
-        let chunk_nnz = {
-            let c1 = ((chunk + 1) * self.chunk_rows).min(self.n_rows);
-            (self.indptr[c1] - base) as usize
-        };
-        let s = (self.indptr[row_start] - base) as usize;
-        let e = (self.indptr[row_end] - base) as usize;
-        let idx_bytes = &payload[s * 4..e * 4];
-        let val_off = chunk_nnz * 4;
-        let val_bytes = &payload[val_off + s * 4..val_off + e * 4];
-        copy_le_u32(idx_bytes, &mut out.indices);
-        copy_le_f32(val_bytes, &mut out.data);
-        let out_base = out.indptr[out.n_rows] as i64 - self.indptr[row_start] as i64;
-        for r in row_start..row_end {
-            out.indptr
-                .push((self.indptr[r + 1] as i64 + out_base) as u64);
-        }
-        out.n_rows += row_end - row_start;
+    /// Load + decode every chunk in `chunks` (ascending, unique) through
+    /// the intra-fetch pipeline ([`read_decode_groups`]: gap-tolerant
+    /// ranged reads + the shared decode pool). Returns the decoded
+    /// payloads in `chunks` order plus the number of ranged reads issued.
+    fn load_chunks(&self, chunks: &[usize], pipeline: IoPipeline) -> Result<(Vec<Vec<u8>>, usize)> {
+        let table: Vec<(u64, u64, u64)> = chunks.iter().map(|&c| self.chunk_table[c]).collect();
+        read_decode_groups(vec![(&self.file, table)], self.compressed, pipeline)
+            .with_context(|| format!("fetch chunks from {}", self.path.display()))
     }
 }
 
@@ -441,30 +333,41 @@ impl Backend for SparseChunkStore {
     fn fetch_rows(&self, sorted: &[u32]) -> Result<FetchResult> {
         check_sorted_indices(sorted, self.n_rows)?;
         let runs = contiguous_runs(sorted);
-        let mut x = CsrBatch::empty(self.n_cols);
+        // Split runs at chunk boundaries so every piece extracts as one
+        // bulk copy; chunk ids are non-decreasing across pieces.
+        let pieces = chunk_pieces(&runs, self.chunk_rows, self.n_rows);
+        let mut chunks: Vec<usize> = pieces.iter().map(|&(c, _, _)| c).collect();
+        chunks.dedup();
+        let pipeline = self.pipeline.get();
+        let (payloads, n_reads) = self.load_chunks(&chunks, pipeline)?;
+        // Fused extraction in request order from the decoded payloads.
+        let pool = BufferPool::global();
+        let mut x = pool.take_batch(self.n_cols);
+        let total_nnz: usize = pieces
+            .iter()
+            .map(|&(_, s, e)| (self.indptr[e] - self.indptr[s]) as usize)
+            .sum();
+        x.reserve_extra(sorted.len(), total_nnz);
         let mut bytes = 0u64;
-        let mut chunks_touched = 0u64;
-        let mut cur_chunk = usize::MAX;
-        let mut comp: Vec<u8> = Vec::new();
-        let mut payload: Vec<u8> = Vec::new();
-        // Walk each contiguous run, splitting it at chunk boundaries so
-        // every piece extracts as one bulk copy.
-        for &(start, len) in &runs {
-            let mut row = start as usize;
-            let run_end = start as usize + len as usize;
-            while row < run_end {
-                let chunk = row / self.chunk_rows;
-                if chunk != cur_chunk {
-                    self.load_chunk_into(chunk, &mut comp, &mut payload)?;
-                    cur_chunk = chunk;
-                    chunks_touched += 1;
-                }
-                let chunk_end = ((chunk + 1) * self.chunk_rows).min(self.n_rows);
-                let piece_end = run_end.min(chunk_end);
-                self.extract_rows(chunk, &payload, row, piece_end, &mut x);
-                bytes += (self.indptr[piece_end] - self.indptr[row]) * 8;
-                row = piece_end;
+        let mut ci = 0usize;
+        for &(chunk, s, e) in &pieces {
+            while chunks[ci] != chunk {
+                ci += 1;
             }
+            extract_chunk_rows(
+                &self.indptr,
+                self.chunk_rows,
+                self.n_rows,
+                chunk,
+                &payloads[ci],
+                s,
+                e,
+                &mut x,
+            );
+            bytes += (self.indptr[e] - self.indptr[s]) * 8;
+        }
+        for p in payloads {
+            pool.give_buf(p);
         }
         debug_assert!(x.validate().is_ok());
         Ok(FetchResult {
@@ -474,10 +377,16 @@ impl Backend for SparseChunkStore {
                 runs: runs.len() as u64,
                 rows: sorted.len() as u64,
                 bytes,
-                chunks: chunks_touched,
+                chunks: chunks.len() as u64,
+                read_calls: n_reads as u64,
+                read_calls_raw: chunks.len() as u64,
                 ..IoReport::default()
             },
         })
+    }
+
+    fn set_io_pipeline(&self, pipeline: IoPipeline) {
+        self.pipeline.set(pipeline);
     }
 }
 
@@ -560,6 +469,49 @@ mod tests {
             .map(|&r| rows[r].0.len() as u64 * 8)
             .sum();
         assert_eq!(got.io.bytes, expect_bytes);
+    }
+
+    #[test]
+    fn coalesced_reads_and_parallel_decode_are_identical() {
+        for compress in [false, true] {
+            let dir = TempDir::new("scs").unwrap();
+            let (store, _) = build(&dir, 64, 16, 8, compress);
+            // rows touch chunks 0, 1, 2, 4, 7 (chunk 3, 5, 6 skipped)
+            let idx: Vec<u32> = vec![0, 1, 9, 17, 33, 34, 63];
+            let base = store.fetch_rows(&idx).unwrap();
+            assert_eq!(base.io.read_calls, 5, "coalescing off: one read per chunk");
+            assert_eq!(base.io.read_calls_raw, 5);
+            // Huge gap + parallel decode: one merged ranged read, same rows.
+            store.set_io_pipeline(IoPipeline {
+                decode_threads: 4,
+                coalesce_gap_bytes: 1 << 20,
+            });
+            let piped = store.fetch_rows(&idx).unwrap();
+            assert_eq!(piped.x, base.x, "pipeline must be execution-only");
+            assert_eq!(piped.io.read_calls, 1);
+            assert_eq!(piped.io.read_calls_raw, 5);
+            assert_eq!(piped.io.chunks, base.io.chunks);
+            assert_eq!(piped.io.bytes, base.io.bytes);
+            assert_eq!(piped.io.runs, base.io.runs);
+            // Tight gap: only adjacent chunks merge (0-2 are contiguous in
+            // the file; the skipped chunks leave real gaps).
+            store.set_io_pipeline(IoPipeline {
+                decode_threads: 2,
+                coalesce_gap_bytes: 1,
+            });
+            let tight = store.fetch_rows(&idx).unwrap();
+            assert_eq!(tight.x, base.x);
+            // Chunks 0..3 are contiguous in the file and merge; the
+            // skipped chunks leave real gaps that a 1-byte tolerance
+            // cannot bridge.
+            assert!(
+                tight.io.read_calls >= 2 && tight.io.read_calls < tight.io.read_calls_raw,
+                "tight gap must merge only near-adjacent chunks: {:?}",
+                tight.io
+            );
+            // Restore defaults for any later use of this store.
+            store.set_io_pipeline(IoPipeline::default());
+        }
     }
 
     #[test]

@@ -30,6 +30,7 @@ use std::thread::JoinHandle;
 use anyhow::Result;
 
 use super::csr::CsrBatch;
+use super::decode::{BufferPool, IoPipeline};
 use super::iomodel::{AccessPattern, IoReport};
 use super::obs::ObsFrame;
 use super::{check_sorted_indices, Backend, FetchResult};
@@ -205,6 +206,9 @@ impl CacheCore {
                 let be = (((b as u64 + 1) * br).min(n_rows) - row_start) as usize;
                 out.push((b, part.x.slice_rows(bs, be)));
             }
+            // The batch was carved into per-block copies; recycle its
+            // arenas for the next fetch.
+            BufferPool::global().give_batch(part.x);
             i = j;
         }
         Ok((io, out))
@@ -403,8 +407,14 @@ impl CacheCore {
                 }
             }
         }
-        // Concatenate in request (sorted) order.
-        let mut x = CsrBatch::empty(self.inner.n_cols());
+        // Concatenate in request (sorted) order, reserving from the known
+        // total nnz so the batch allocates once.
+        let mut x = BufferPool::global().take_batch(self.inner.n_cols());
+        let total_nnz: usize = parts
+            .iter()
+            .map(|p| p.as_ref().map(CsrBatch::nnz).unwrap_or(0))
+            .sum();
+        x.reserve_extra(sorted.len(), total_nnz);
         for p in parts {
             x.append(&p.expect("every block group resolved"));
         }
@@ -584,6 +594,12 @@ impl Backend for CachingBackend {
 
     fn fetch_rows(&self, sorted: &[u32]) -> Result<FetchResult> {
         self.core.fetch_rows_cached(sorted)
+    }
+
+    fn set_io_pipeline(&self, pipeline: IoPipeline) {
+        // Miss fills and readahead loads run through the inner backend,
+        // which is where decode parallelism and coalescing live.
+        self.core.inner.set_io_pipeline(pipeline);
     }
 }
 

@@ -5,9 +5,10 @@
 
 use anyhow::{bail, Result};
 
+use super::decode::BufferPool;
 use super::iomodel::{AccessPattern, IoReport};
 use super::obs::ObsFrame;
-use super::{Backend, CsrBatch, FetchResult};
+use super::{Backend, CsrBatch, FetchResult, IoPipeline};
 
 /// A row-wise concatenation of homogeneous backends.
 pub struct PlateCollection<B: Backend> {
@@ -118,8 +119,17 @@ impl<B: Backend> Backend for PlateCollection<B> {
             let part = self.plates[plate].fetch_rows(&local)?;
             x.append(&part.x);
             io.add(&part.io);
+            // The plate batch was copied into the concatenation; recycle
+            // its arenas for the next fetch.
+            BufferPool::global().give_batch(part.x);
         }
         Ok(FetchResult { x, io })
+    }
+
+    fn set_io_pipeline(&self, pipeline: IoPipeline) {
+        for p in &self.plates {
+            p.set_io_pipeline(pipeline);
+        }
     }
 }
 

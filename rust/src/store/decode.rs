@@ -1,0 +1,792 @@
+//! Intra-fetch parallel decode pipeline (ISSUE 3).
+//!
+//! The paper turns random access into large sequential reads; once block
+//! sampling and the block cache are in place, the next multiplier is how
+//! fast one fetch's chunks move from disk bytes to decoded CSR rows
+//! (Redox/Brand: batched random access with read coalescing; RINAS:
+//! overlapping decode with delivery — see PAPERS.md). This module holds the
+//! pieces the storage backends share:
+//!
+//! * [`DecodePool`] — a process-wide, grow-on-demand thread pool that
+//!   decompresses the chunks of one fetch concurrently
+//!   (`--decode-threads` / `[io] decode_threads`);
+//! * [`coalesce_ranges`] — a gap-tolerant read coalescer that merges
+//!   near-adjacent chunk reads into single ranged I/O calls
+//!   (`--coalesce-gap-bytes`), with pre/post-coalescing call counts
+//!   threaded through [`IoReport`](super::iomodel::IoReport);
+//! * [`BufferPool`] — recycles compressed/payload scratch buffers and
+//!   [`CsrBatch`] arenas across fetches instead of reallocating;
+//! * the chunk payload codec shared by the `.scs` and zarr-like stores
+//!   ([`decode_payload`], [`extract_chunk_rows`], [`chunk_pieces`]).
+//!
+//! **Determinism contract:** everything here is execution-only, like
+//! `locality_schedule`. Decoded bytes and extracted rows are bit-identical
+//! for any `decode_threads` / `coalesce_gap_bytes` setting — results are
+//! keyed by job index, never by completion order — so the emitted
+//! minibatch stream never changes (enforced by `tests/determinism.rs` and
+//! the pipeline proptests).
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::Read;
+use std::os::unix::fs::FileExt;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+use flate2::read::DeflateDecoder;
+
+use super::csr::CsrBatch;
+
+/// Hard cap on decode parallelism (a runaway-config backstop; real chunk
+/// decodes stop scaling long before this).
+pub const MAX_DECODE_THREADS: usize = 32;
+
+/// Execution-only I/O pipeline knobs a [`Backend`](super::Backend) may
+/// honor. Changing these alters the I/O trace (read call counts, wall
+/// clock), never the fetched rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IoPipeline {
+    /// Maximum concurrent chunk decodes per fetch: `1` = serial (the
+    /// default), `0` = auto (one per available core, capped at
+    /// [`MAX_DECODE_THREADS`]).
+    pub decode_threads: usize,
+    /// Merge chunk reads whose file-offset gap is at most this many bytes
+    /// into one ranged I/O call (gap bytes are read and discarded). `0`
+    /// disables coalescing entirely — one read per chunk, the historical
+    /// behavior.
+    pub coalesce_gap_bytes: u64,
+}
+
+impl Default for IoPipeline {
+    fn default() -> IoPipeline {
+        IoPipeline {
+            decode_threads: 1,
+            coalesce_gap_bytes: 0,
+        }
+    }
+}
+
+impl IoPipeline {
+    /// `decode_threads` with `0` resolved to the machine's parallelism.
+    pub fn resolved_decode_threads(&self) -> usize {
+        let n = if self.decode_threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            self.decode_threads
+        };
+        n.clamp(1, MAX_DECODE_THREADS)
+    }
+}
+
+/// Interior-mutable [`IoPipeline`] holder so backends can accept
+/// `set_io_pipeline(&self, ..)` through the shared `Arc<dyn Backend>`.
+#[derive(Debug)]
+pub struct PipelineCell {
+    threads: AtomicUsize,
+    gap: AtomicU64,
+}
+
+impl Default for PipelineCell {
+    fn default() -> PipelineCell {
+        PipelineCell::new(IoPipeline::default())
+    }
+}
+
+impl PipelineCell {
+    pub fn new(p: IoPipeline) -> PipelineCell {
+        PipelineCell {
+            threads: AtomicUsize::new(p.decode_threads),
+            gap: AtomicU64::new(p.coalesce_gap_bytes),
+        }
+    }
+
+    pub fn set(&self, p: IoPipeline) {
+        self.threads.store(p.decode_threads, Ordering::Relaxed);
+        self.gap.store(p.coalesce_gap_bytes, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> IoPipeline {
+        IoPipeline {
+            decode_threads: self.threads.load(Ordering::Relaxed),
+            coalesce_gap_bytes: self.gap.load(Ordering::Relaxed),
+        }
+    }
+}
+
+type Job = Box<dyn FnOnce() + Send>;
+
+struct PoolQueue {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    queue: Mutex<PoolQueue>,
+    cv: Condvar,
+}
+
+/// A shared decode thread pool. Workers are spawned lazily up to the
+/// parallelism actually requested (never more than
+/// [`MAX_DECODE_THREADS`]) and are shared by every backend in the
+/// process; each `run_batch` call keeps at most its own `max_parallel`
+/// jobs in flight, so one fetch cannot monopolize the pool beyond its
+/// configured decode budget.
+pub struct DecodePool {
+    shared: Arc<PoolShared>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Default for DecodePool {
+    fn default() -> DecodePool {
+        DecodePool::new()
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.jobs.pop_front() {
+                    break j;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+impl DecodePool {
+    pub fn new() -> DecodePool {
+        DecodePool {
+            shared: Arc::new(PoolShared {
+                queue: Mutex::new(PoolQueue {
+                    jobs: VecDeque::new(),
+                    shutdown: false,
+                }),
+                cv: Condvar::new(),
+            }),
+            workers: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The process-wide pool every backend decodes through.
+    pub fn global() -> &'static DecodePool {
+        static POOL: OnceLock<DecodePool> = OnceLock::new();
+        POOL.get_or_init(DecodePool::new)
+    }
+
+    /// Workers currently alive (grow-only).
+    pub fn worker_count(&self) -> usize {
+        self.workers.lock().unwrap().len()
+    }
+
+    fn ensure_workers(&self, want: usize) {
+        let want = want.min(MAX_DECODE_THREADS);
+        let mut ws = self.workers.lock().unwrap();
+        while ws.len() < want {
+            let shared = self.shared.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("scdata-decode-{}", ws.len()))
+                .spawn(move || worker_loop(shared))
+                .expect("spawn decode worker");
+            ws.push(h);
+        }
+    }
+
+    fn push(&self, job: Job) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.jobs.push_back(job);
+        drop(q);
+        self.shared.cv.notify_one();
+    }
+
+    /// Run `jobs` with at most `max_parallel` of them in flight at once,
+    /// returning results **in job order** regardless of completion order
+    /// (the determinism contract). `max_parallel <= 1` runs everything
+    /// inline on the calling thread — byte-identical output, no pool.
+    /// A panicking job is re-raised on the calling thread.
+    pub fn run_batch<T, F>(&self, jobs: Vec<F>, max_parallel: usize) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        let par = max_parallel.min(n).min(MAX_DECODE_THREADS);
+        if par <= 1 {
+            return jobs.into_iter().map(|f| f()).collect();
+        }
+        self.ensure_workers(par);
+        let (tx, rx) = channel::<(usize, std::thread::Result<T>)>();
+        let mut pending = jobs.into_iter().enumerate();
+        let submit = |(i, f): (usize, F)| {
+            let tx = tx.clone();
+            self.push(Box::new(move || {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+                let _ = tx.send((i, r));
+            }));
+        };
+        for _ in 0..par {
+            submit(pending.next().expect("par <= n"));
+        }
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = rx.recv().expect("decode worker lost");
+            match r {
+                Ok(v) => out[i] = Some(v),
+                Err(p) => std::panic::resume_unwind(p),
+            }
+            if let Some(job) = pending.next() {
+                submit(job);
+            }
+        }
+        out.into_iter()
+            .map(|o| o.expect("every decode job completed"))
+            .collect()
+    }
+}
+
+impl Drop for DecodePool {
+    fn drop(&mut self) {
+        self.shared.queue.lock().unwrap().shutdown = true;
+        self.shared.cv.notify_all();
+        for h in self.workers.get_mut().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// Buffer-pool retention caps: recycling is best-effort — anything over
+// these limits is simply dropped so a single giant fetch cannot pin
+// memory forever.
+const MAX_POOLED_BUFS: usize = 64;
+const MAX_POOLED_BUF_BYTES: usize = 16 << 20;
+const MAX_POOLED_BATCHES: usize = 16;
+const MAX_POOLED_BATCH_BYTES: usize = 128 << 20;
+
+/// Recycles `comp`/`payload` scratch buffers and [`CsrBatch`] arenas
+/// across fetches (§Perf: the fetch hot path previously paid fresh
+/// allocations for every chunk read, every decoded payload and every
+/// fetch buffer).
+pub struct BufferPool {
+    bufs: Mutex<Vec<Vec<u8>>>,
+    batches: Mutex<Vec<CsrBatch>>,
+}
+
+impl Default for BufferPool {
+    fn default() -> BufferPool {
+        BufferPool::new()
+    }
+}
+
+impl BufferPool {
+    pub fn new() -> BufferPool {
+        BufferPool {
+            bufs: Mutex::new(Vec::new()),
+            batches: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The process-wide pool shared by all backends and the loader.
+    pub fn global() -> &'static BufferPool {
+        static POOL: OnceLock<BufferPool> = OnceLock::new();
+        POOL.get_or_init(BufferPool::new)
+    }
+
+    /// An empty byte buffer, reusing a recycled allocation when one is
+    /// available.
+    pub fn take_buf(&self) -> Vec<u8> {
+        self.bufs.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return a byte buffer for reuse.
+    pub fn give_buf(&self, mut buf: Vec<u8>) {
+        if buf.capacity() == 0 || buf.capacity() > MAX_POOLED_BUF_BYTES {
+            return;
+        }
+        buf.clear();
+        let mut p = self.bufs.lock().unwrap();
+        if p.len() < MAX_POOLED_BUFS {
+            p.push(buf);
+        }
+    }
+
+    /// An empty `CsrBatch` over `n_cols` columns, reusing recycled
+    /// arenas when available.
+    pub fn take_batch(&self, n_cols: usize) -> CsrBatch {
+        let mut b = self.batches.lock().unwrap().pop().unwrap_or_default();
+        b.n_rows = 0;
+        b.n_cols = n_cols;
+        b.indptr.clear();
+        b.indptr.push(0);
+        b.indices.clear();
+        b.data.clear();
+        b
+    }
+
+    /// Return a batch's arenas for reuse.
+    pub fn give_batch(&self, b: CsrBatch) {
+        let cap_bytes =
+            b.indptr.capacity() * 8 + b.indices.capacity() * 4 + b.data.capacity() * 4;
+        if cap_bytes == 0 || cap_bytes > MAX_POOLED_BATCH_BYTES {
+            return;
+        }
+        let mut p = self.batches.lock().unwrap();
+        if p.len() < MAX_POOLED_BATCHES {
+            p.push(b);
+        }
+    }
+
+    #[cfg(test)]
+    fn pooled_bufs(&self) -> usize {
+        self.bufs.lock().unwrap().len()
+    }
+}
+
+/// One ranged I/O call covering one or more chunk payloads.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RangedRead {
+    /// File offset the read starts at.
+    pub offset: u64,
+    /// Bytes to read (includes any tolerated gaps between members).
+    pub len: usize,
+    /// `(caller-side chunk index, byte offset of that chunk's payload
+    /// inside this read's buffer)`.
+    pub members: Vec<(usize, usize)>,
+}
+
+/// Merge ascending, non-overlapping `(offset, len)` chunk ranges into
+/// ranged reads. Two consecutive ranges merge when the gap between them
+/// is at most `gap_bytes` (gap bytes are read and thrown away — trading
+/// a little bandwidth for far fewer I/O calls, as in Redox/Brand's
+/// batched range reads). `gap_bytes == 0` disables coalescing: every
+/// range becomes its own read.
+pub fn coalesce_ranges(ranges: &[(u64, u64)], gap_bytes: u64) -> Vec<RangedRead> {
+    let mut reads: Vec<RangedRead> = Vec::with_capacity(ranges.len());
+    for (i, &(off, len)) in ranges.iter().enumerate() {
+        if let Some(r) = reads.last_mut() {
+            let end = r.offset + r.len as u64;
+            debug_assert!(off >= end, "ranges must be ascending and disjoint");
+            if gap_bytes > 0 && off <= end + gap_bytes {
+                r.members.push((i, (off - r.offset) as usize));
+                r.len = (off + len - r.offset) as usize;
+                continue;
+            }
+        }
+        reads.push(RangedRead {
+            offset: off,
+            len: len as usize,
+            members: vec![(i, 0)],
+        });
+    }
+    reads
+}
+
+/// Decode one chunk payload (deflate or stored raw) into a pooled buffer.
+/// The raw path pays one copy out of the source buffer — coalesced reads
+/// put several chunks in one shared buffer, so handing the buffer itself
+/// over (the old `mem::swap` trick) is no longer possible.
+pub fn decode_payload(comp: &[u8], raw_len: usize, compressed: bool) -> Result<Vec<u8>> {
+    let mut raw = BufferPool::global().take_buf();
+    if compressed {
+        raw.reserve(raw_len);
+        DeflateDecoder::new(comp).read_to_end(&mut raw)?;
+        if raw.len() != raw_len {
+            bail!("chunk payload: raw length mismatch ({} != {raw_len})", raw.len());
+        }
+    } else {
+        raw.extend_from_slice(comp);
+    }
+    Ok(raw)
+}
+
+/// One chunk's compressed bytes: `(read buffer, offset, comp_len)` — a
+/// shared slice of a coalesced ranged read.
+pub type ChunkSrc = (Arc<Vec<u8>>, usize, usize);
+
+/// Decode a batch of chunk payloads with up to `max_parallel` concurrent
+/// decodes on the shared pool. Results are in input order.
+pub fn decode_chunk_batch(
+    srcs: Vec<ChunkSrc>,
+    raw_lens: Vec<usize>,
+    compressed: bool,
+    max_parallel: usize,
+) -> Vec<Result<Vec<u8>>> {
+    debug_assert_eq!(srcs.len(), raw_lens.len());
+    let jobs: Vec<_> = srcs
+        .into_iter()
+        .zip(raw_lens)
+        .map(|((buf, off, len), raw_len)| {
+            move || decode_payload(&buf[off..off + len], raw_len, compressed)
+        })
+        .collect();
+    DecodePool::global().run_batch(jobs, max_parallel)
+}
+
+/// Execute the read + decode half of one fetch, shared by the `.scs` and
+/// zarr-like stores. Each group is one file plus the ascending
+/// `(offset, comp_len, raw_len)` table of its touched chunks; ranges
+/// coalesce *within* a group (reads never span files), all groups' chunks
+/// then decode together on the shared pool. Returns the decoded payloads
+/// in input order (groups concatenated) plus the number of ranged reads
+/// issued.
+pub fn read_decode_groups(
+    groups: Vec<(&File, Vec<(u64, u64, u64)>)>,
+    compressed: bool,
+    pipeline: IoPipeline,
+) -> Result<(Vec<Vec<u8>>, usize)> {
+    let pool = BufferPool::global();
+    let n_chunks: usize = groups.iter().map(|(_, c)| c.len()).sum();
+    let mut srcs: Vec<Option<ChunkSrc>> = vec![None; n_chunks];
+    let mut raw_lens: Vec<usize> = Vec::with_capacity(n_chunks);
+    let mut read_bufs = Vec::new();
+    let mut n_reads = 0usize;
+    let mut base = 0usize;
+    for (file, chunks) in &groups {
+        raw_lens.extend(chunks.iter().map(|&(_, _, rl)| rl as usize));
+        let ranges: Vec<(u64, u64)> = chunks.iter().map(|&(off, cl, _)| (off, cl)).collect();
+        let reads = coalesce_ranges(&ranges, pipeline.coalesce_gap_bytes);
+        n_reads += reads.len();
+        for r in &reads {
+            let mut buf = pool.take_buf();
+            buf.resize(r.len, 0);
+            file.read_exact_at(&mut buf, r.offset).with_context(|| {
+                format!("read {} chunk(s) at offset {}", r.members.len(), r.offset)
+            })?;
+            let buf = Arc::new(buf);
+            for &(ci, off) in &r.members {
+                srcs[base + ci] = Some((buf.clone(), off, chunks[ci].1 as usize));
+            }
+            read_bufs.push(buf);
+        }
+        base += chunks.len();
+    }
+    let srcs: Vec<ChunkSrc> = srcs
+        .into_iter()
+        .map(|s| s.expect("every chunk covered by a ranged read"))
+        .collect();
+    let decoded =
+        decode_chunk_batch(srcs, raw_lens, compressed, pipeline.resolved_decode_threads());
+    for b in read_bufs {
+        if let Ok(v) = Arc::try_unwrap(b) {
+            pool.give_buf(v);
+        }
+    }
+    let mut payloads = Vec::with_capacity(decoded.len());
+    for (i, p) in decoded.into_iter().enumerate() {
+        payloads.push(p.with_context(|| format!("decode chunk #{i}"))?);
+    }
+    Ok((payloads, n_reads))
+}
+
+/// Split contiguous row runs at `chunk_rows` boundaries into extraction
+/// pieces `(chunk, row_start, row_end)`. Chunk ids are non-decreasing
+/// because the runs come from sorted indices.
+pub fn chunk_pieces(
+    runs: &[(u32, u32)],
+    chunk_rows: usize,
+    n_rows: usize,
+) -> Vec<(usize, usize, usize)> {
+    let mut pieces = Vec::with_capacity(runs.len());
+    for &(start, len) in runs {
+        let mut row = start as usize;
+        let run_end = start as usize + len as usize;
+        while row < run_end {
+            let chunk = row / chunk_rows;
+            let chunk_end = ((chunk + 1) * chunk_rows).min(n_rows);
+            let piece_end = run_end.min(chunk_end);
+            pieces.push((chunk, row, piece_end));
+            row = piece_end;
+        }
+    }
+    pieces
+}
+
+/// Append little-endian u32s from raw bytes. On little-endian targets this
+/// is a single bulk copy (§Perf: the per-element `from_le_bytes` loop was a
+/// measurable share of fetch time).
+pub fn copy_le_u32(bytes: &[u8], out: &mut Vec<u32>) {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    let n = bytes.len() / 4;
+    #[cfg(target_endian = "little")]
+    {
+        let old = out.len();
+        out.reserve(n);
+        // SAFETY: u32 has no invalid bit patterns; we copy exactly n*4
+        // bytes into freshly reserved capacity and then fix the length.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                bytes.as_ptr(),
+                out.as_mut_ptr().add(old) as *mut u8,
+                n * 4,
+            );
+            out.set_len(old + n);
+        }
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        out.extend(
+            bytes
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().unwrap())),
+        );
+    }
+}
+
+/// Append little-endian f32s from raw bytes (same strategy).
+pub fn copy_le_f32(bytes: &[u8], out: &mut Vec<f32>) {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    let n = bytes.len() / 4;
+    #[cfg(target_endian = "little")]
+    {
+        let old = out.len();
+        out.reserve(n);
+        // SAFETY: as for copy_le_u32 (every bit pattern is a valid f32).
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                bytes.as_ptr(),
+                out.as_mut_ptr().add(old) as *mut u8,
+                n * 4,
+            );
+            out.set_len(old + n);
+        }
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        out.extend(
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap())),
+        );
+    }
+}
+
+/// Copy a contiguous row range `[row_start, row_end)` (all inside `chunk`)
+/// out of a decoded chunk payload — all column indices (u32) concatenated,
+/// then all values (f32), the layout shared by the `.scs` and zarr-like
+/// stores — into `out`. Whole ranges move as two bulk copies instead of
+/// per-row element loops.
+#[allow(clippy::too_many_arguments)]
+pub fn extract_chunk_rows(
+    indptr: &[u64],
+    chunk_rows: usize,
+    n_rows: usize,
+    chunk: usize,
+    payload: &[u8],
+    row_start: usize,
+    row_end: usize,
+    out: &mut CsrBatch,
+) {
+    let c0 = chunk * chunk_rows;
+    let base = indptr[c0];
+    let chunk_nnz = {
+        let c1 = ((chunk + 1) * chunk_rows).min(n_rows);
+        (indptr[c1] - base) as usize
+    };
+    let s = (indptr[row_start] - base) as usize;
+    let e = (indptr[row_end] - base) as usize;
+    let idx_bytes = &payload[s * 4..e * 4];
+    let val_off = chunk_nnz * 4;
+    let val_bytes = &payload[val_off + s * 4..val_off + e * 4];
+    copy_le_u32(idx_bytes, &mut out.indices);
+    copy_le_f32(val_bytes, &mut out.data);
+    let out_base = out.indptr[out.n_rows] as i64 - indptr[row_start] as i64;
+    for r in row_start..row_end {
+        out.indptr.push((indptr[r + 1] as i64 + out_base) as u64);
+    }
+    out.n_rows += row_end - row_start;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_resolution() {
+        let p = IoPipeline::default();
+        assert_eq!(p.decode_threads, 1);
+        assert_eq!(p.coalesce_gap_bytes, 0);
+        assert_eq!(p.resolved_decode_threads(), 1);
+        let auto = IoPipeline {
+            decode_threads: 0,
+            ..p
+        };
+        assert!(auto.resolved_decode_threads() >= 1);
+        let huge = IoPipeline {
+            decode_threads: 10_000,
+            ..p
+        };
+        assert_eq!(huge.resolved_decode_threads(), MAX_DECODE_THREADS);
+    }
+
+    #[test]
+    fn pipeline_cell_roundtrip() {
+        let cell = PipelineCell::default();
+        assert_eq!(cell.get(), IoPipeline::default());
+        let p = IoPipeline {
+            decode_threads: 4,
+            coalesce_gap_bytes: 1234,
+        };
+        cell.set(p);
+        assert_eq!(cell.get(), p);
+    }
+
+    #[test]
+    fn pool_results_in_job_order() {
+        let pool = DecodePool::new();
+        // Jobs finish out of order (later jobs sleep less); results must
+        // come back in job order anyway.
+        let jobs: Vec<_> = (0..16u64)
+            .map(|i| {
+                move || {
+                    std::thread::sleep(std::time::Duration::from_micros(
+                        (16 - i) * 200,
+                    ));
+                    i * i
+                }
+            })
+            .collect();
+        let got = pool.run_batch(jobs, 4);
+        assert_eq!(got, (0..16u64).map(|i| i * i).collect::<Vec<_>>());
+        assert!(pool.worker_count() == 4, "grow-on-demand to requested par");
+    }
+
+    #[test]
+    fn pool_inline_when_serial() {
+        let pool = DecodePool::new();
+        let jobs: Vec<_> = (0..4u32).map(|i| move || i + 1).collect();
+        assert_eq!(pool.run_batch(jobs, 1), vec![1, 2, 3, 4]);
+        assert_eq!(pool.worker_count(), 0, "serial batches never spawn");
+        let empty: Vec<Box<dyn FnOnce() -> u32 + Send>> = Vec::new();
+        assert!(pool.run_batch(empty, 8).is_empty());
+    }
+
+    #[test]
+    fn pool_shared_across_batches() {
+        let pool = DecodePool::new();
+        for round in 0..3u32 {
+            let jobs: Vec<_> = (0..8u32).map(move |i| move || i + round).collect();
+            let got = pool.run_batch(jobs, 3);
+            assert_eq!(got, (0..8u32).map(|i| i + round).collect::<Vec<_>>());
+        }
+        assert_eq!(pool.worker_count(), 3, "workers are reused, not respawned");
+    }
+
+    #[test]
+    fn coalesce_semantics() {
+        let ranges = [(0u64, 10u64), (10, 10), (25, 5), (100, 10)];
+        // Off: one read per range.
+        let off = coalesce_ranges(&ranges, 0);
+        assert_eq!(off.len(), 4);
+        assert!(off.iter().all(|r| r.members.len() == 1));
+        // Gap 5: [0,10)+[10,20) merge (gap 0), [25,30) merges (gap 5),
+        // [100,110) stays separate (gap 70).
+        let on = coalesce_ranges(&ranges, 5);
+        assert_eq!(on.len(), 2);
+        assert_eq!(on[0].offset, 0);
+        assert_eq!(on[0].len, 30);
+        assert_eq!(on[0].members, vec![(0, 0), (1, 10), (2, 25)]);
+        assert_eq!(on[1].offset, 100);
+        assert_eq!(on[1].len, 10);
+        // Huge gap: everything merges into one read.
+        let all = coalesce_ranges(&ranges, 1 << 20);
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].len, 110);
+        assert!(coalesce_ranges(&[], 64).is_empty());
+    }
+
+    #[test]
+    fn payload_roundtrip_and_parallel_decode_identical() {
+        use flate2::write::DeflateEncoder;
+        use flate2::Compression;
+        use std::io::Write;
+        // Build a few deflate payloads.
+        let raws: Vec<Vec<u8>> = (0..12u8)
+            .map(|k| (0..4096).map(|i| (i as u8).wrapping_mul(k + 1)).collect())
+            .collect();
+        let comps: Vec<Vec<u8>> = raws
+            .iter()
+            .map(|r| {
+                let mut enc = DeflateEncoder::new(Vec::new(), Compression::fast());
+                enc.write_all(r).unwrap();
+                enc.finish().unwrap()
+            })
+            .collect();
+        let srcs = |comps: &[Vec<u8>]| {
+            comps
+                .iter()
+                .map(|c| (Arc::new(c.clone()), 0usize, c.len()))
+                .collect::<Vec<_>>()
+        };
+        let lens: Vec<usize> = raws.iter().map(Vec::len).collect();
+        let serial = decode_chunk_batch(srcs(&comps), lens.clone(), true, 1);
+        let parallel = decode_chunk_batch(srcs(&comps), lens.clone(), true, 4);
+        for ((s, p), raw) in serial.into_iter().zip(parallel).zip(&raws) {
+            let s = s.unwrap();
+            assert_eq!(&s, raw);
+            assert_eq!(s, p.unwrap(), "parallel decode must be bit-identical");
+        }
+        // Raw (uncompressed) path and length-mismatch detection.
+        let raw = decode_payload(&raws[0], raws[0].len(), false).unwrap();
+        assert_eq!(raw, raws[0]);
+        assert!(decode_payload(&comps[0], raws[0].len() + 1, true).is_err());
+    }
+
+    #[test]
+    fn buffer_pool_recycles() {
+        let pool = BufferPool::new();
+        let mut b = pool.take_buf();
+        b.resize(1000, 7);
+        let ptr = b.as_ptr();
+        pool.give_buf(b);
+        assert_eq!(pool.pooled_bufs(), 1);
+        let b2 = pool.take_buf();
+        assert!(b2.is_empty());
+        assert!(b2.capacity() >= 1000);
+        assert_eq!(b2.as_ptr(), ptr, "allocation must be reused");
+        // Oversized buffers are dropped, not pooled.
+        pool.give_buf(vec![0u8; MAX_POOLED_BUF_BYTES + 1]);
+        assert_eq!(pool.pooled_bufs(), 0);
+        // Zero-capacity buffers are not worth pooling.
+        pool.give_buf(Vec::new());
+        assert_eq!(pool.pooled_bufs(), 0);
+    }
+
+    #[test]
+    fn batch_pool_resets_state() {
+        let pool = BufferPool::new();
+        let mut b = pool.take_batch(8);
+        b.indices.extend_from_slice(&[1, 2, 3]);
+        b.data.extend_from_slice(&[1.0, 2.0, 3.0]);
+        b.indptr.push(3);
+        b.n_rows = 1;
+        pool.give_batch(b);
+        let b2 = pool.take_batch(16);
+        assert_eq!(b2.n_rows, 0);
+        assert_eq!(b2.n_cols, 16);
+        assert_eq!(b2.indptr, vec![0]);
+        assert!(b2.indices.is_empty() && b2.data.is_empty());
+        assert!(b2.indices.capacity() >= 3, "arena must be recycled");
+        b2.validate().unwrap();
+    }
+
+    #[test]
+    fn pieces_split_at_chunk_boundaries() {
+        // runs [3..11) and [20..21) with chunk_rows = 4 over 30 rows
+        let pieces = chunk_pieces(&[(3, 8), (20, 1)], 4, 30);
+        assert_eq!(
+            pieces,
+            vec![(0, 3, 4), (1, 4, 8), (2, 8, 11), (5, 20, 21)]
+        );
+        assert!(chunk_pieces(&[], 4, 30).is_empty());
+    }
+}

@@ -47,6 +47,15 @@ pub struct IoReport {
     pub cache_misses: u64,
     /// Cache blocks evicted to stay within the byte budget.
     pub cache_evictions: u64,
+    /// Ranged read calls actually issued against storage after
+    /// gap-tolerant coalescing (see [`crate::store::decode`]). Execution
+    /// accounting only — the virtual-disk cost model keys off `calls`
+    /// and `runs`, which are unchanged by the pipeline.
+    pub read_calls: u64,
+    /// Read calls that would have been issued without coalescing (one
+    /// per storage chunk touched); `read_calls < read_calls_raw` is the
+    /// coalescer's win.
+    pub read_calls_raw: u64,
 }
 
 impl IoReport {
@@ -60,6 +69,8 @@ impl IoReport {
         self.cache_hits += other.cache_hits;
         self.cache_misses += other.cache_misses;
         self.cache_evictions += other.cache_evictions;
+        self.read_calls += other.read_calls;
+        self.read_calls_raw += other.read_calls_raw;
     }
 }
 

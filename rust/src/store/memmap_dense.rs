@@ -19,6 +19,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use super::csr::CsrBatch;
+use super::decode::{BufferPool, IoPipeline, PipelineCell};
 use super::iomodel::{AccessPattern, IoReport};
 use super::obs::ObsFrame;
 use super::{check_sorted_indices, contiguous_runs, Backend, FetchResult};
@@ -137,6 +138,9 @@ pub struct DenseMemmapStore {
     n_cols: usize,
     payload_off: usize,
     obs: ObsFrame,
+    /// Decode-parallelism knobs (the dense→sparse conversion is this
+    /// backend's decode cost; coalescing does not apply to a memmap).
+    pipeline: PipelineCell,
 }
 
 impl DenseMemmapStore {
@@ -170,6 +174,7 @@ impl DenseMemmapStore {
             n_cols,
             payload_off,
             obs,
+            pipeline: PipelineCell::default(),
         })
     }
 
@@ -182,7 +187,29 @@ impl DenseMemmapStore {
         self.mmap
             .slice(self.payload_off + row * self.row_bytes(), self.row_bytes())
     }
+
+    /// Sparsify a span of rows into `out` (the per-row decode work).
+    fn convert_rows(&self, rows: &[u32], out: &mut CsrBatch) {
+        for &row in rows {
+            let raw = self.row_slice(row as usize);
+            for (c, chunk) in raw.chunks_exact(4).enumerate() {
+                let v = f32::from_le_bytes(chunk.try_into().unwrap());
+                if v != 0.0 {
+                    out.indices.push(c as u32);
+                    out.data.push(v);
+                }
+            }
+            out.indptr.push(out.indices.len() as u64);
+            out.n_rows += 1;
+        }
+    }
 }
+
+/// Minimum rows each parallel span must carry. Conversion threads are
+/// scoped spawns per fetch (the shared decode pool needs `'static` jobs,
+/// which a borrow of the mmap cannot provide), so a span has to amortize
+/// its ~100 µs spawn cost; small fetches sparsify serially.
+const PARALLEL_CONVERT_MIN_ROWS: usize = 512;
 
 impl Backend for DenseMemmapStore {
     fn n_rows(&self) -> usize {
@@ -208,18 +235,42 @@ impl Backend for DenseMemmapStore {
     fn fetch_rows(&self, sorted: &[u32]) -> Result<FetchResult> {
         check_sorted_indices(sorted, self.n_rows)?;
         let runs = contiguous_runs(sorted);
-        let mut x = CsrBatch::empty(self.n_cols);
-        for &row in sorted {
-            let raw = self.row_slice(row as usize);
-            for (c, chunk) in raw.chunks_exact(4).enumerate() {
-                let v = f32::from_le_bytes(chunk.try_into().unwrap());
-                if v != 0.0 {
-                    x.indices.push(c as u32);
-                    x.data.push(v);
-                }
+        // One thread per PARALLEL_CONVERT_MIN_ROWS span, capped by the
+        // configured decode budget.
+        let threads = self
+            .pipeline
+            .get()
+            .resolved_decode_threads()
+            .min(sorted.len() / PARALLEL_CONVERT_MIN_ROWS);
+        let mut x = BufferPool::global().take_batch(self.n_cols);
+        if threads > 1 {
+            // Parallel sparsify: contiguous spans convert concurrently,
+            // then concatenate in span order — bit-identical to the
+            // serial pass for any thread count.
+            let span = sorted.len().div_ceil(threads);
+            let parts: Vec<CsrBatch> = std::thread::scope(|s| {
+                let handles: Vec<_> = sorted
+                    .chunks(span)
+                    .map(|rows| {
+                        s.spawn(move || {
+                            let mut part = CsrBatch::empty(self.n_cols);
+                            self.convert_rows(rows, &mut part);
+                            part
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("convert span"))
+                    .collect()
+            });
+            let total_nnz: usize = parts.iter().map(CsrBatch::nnz).sum();
+            x.reserve_extra(sorted.len(), total_nnz);
+            for p in parts {
+                x.append(&p);
             }
-            x.indptr.push(x.indices.len() as u64);
-            x.n_rows += 1;
+        } else {
+            self.convert_rows(sorted, &mut x);
         }
         // Page accounting: each run of contiguous rows touches
         // ceil(run_bytes / page) (+1 for misalignment) distinct pages.
@@ -239,6 +290,10 @@ impl Backend for DenseMemmapStore {
                 ..IoReport::default()
             },
         })
+    }
+
+    fn set_io_pipeline(&self, pipeline: IoPipeline) {
+        self.pipeline.set(pipeline);
     }
 }
 
@@ -297,6 +352,24 @@ mod tests {
         let path = convert_to_memmap(&src, dir.join("t.dms"), 4).unwrap();
         let dm = DenseMemmapStore::open(path).unwrap();
         assert_eq!(dm.pattern(), AccessPattern::Mmap);
+    }
+
+    #[test]
+    fn parallel_sparsify_is_identical() {
+        let dir = TempDir::new("dms").unwrap();
+        // 2048 rows = 4 spans of PARALLEL_CONVERT_MIN_ROWS at 4 threads.
+        let src = source(&dir, 2048, 16);
+        let path = convert_to_memmap(&src, dir.join("t.dms"), 256).unwrap();
+        let dm = DenseMemmapStore::open(path).unwrap();
+        let idx: Vec<u32> = (0..2048).collect();
+        let base = dm.fetch_rows(&idx).unwrap();
+        dm.set_io_pipeline(IoPipeline {
+            decode_threads: 4,
+            coalesce_gap_bytes: 0,
+        });
+        let par = dm.fetch_rows(&idx).unwrap();
+        assert_eq!(base.x, par.x, "parallel sparsify must be bit-identical");
+        assert_eq!(base.io, par.io, "I/O accounting is unchanged");
     }
 
     #[test]

@@ -5,13 +5,16 @@
 //! implements an on-disk analogue of each — built from scratch — behind the
 //! common [`Backend`] trait the coordinator fetches through, plus the
 //! virtual-disk cost model ([`iomodel`]) that maps access patterns back to
-//! the paper's measured cost regime, and the block-granular LRU cache +
-//! readahead layer ([`cache`]) that any backend can be wrapped in.
+//! the paper's measured cost regime, the block-granular LRU cache +
+//! readahead layer ([`cache`]) that any backend can be wrapped in, and the
+//! intra-fetch parallel decode pipeline ([`decode`]: shared decode thread
+//! pool, gap-tolerant read coalescer, recycled buffer pools).
 
 pub mod anndata;
 pub mod cache;
 pub mod collection;
 pub mod csr;
+pub mod decode;
 pub mod iomodel;
 pub mod memmap_dense;
 pub mod multimodal;
@@ -23,6 +26,7 @@ use anyhow::Result;
 
 pub use cache::{CacheConfig, CacheStats, CachingBackend};
 pub use csr::CsrBatch;
+pub use decode::{BufferPool, DecodePool, IoPipeline};
 pub use iomodel::{AccessPattern, DiskModel, IoReport};
 pub use obs::{ObsColumn, ObsFrame};
 
@@ -52,6 +56,11 @@ pub trait Backend: Send + Sync {
     fn fetch_rows(&self, sorted: &[u32]) -> Result<FetchResult>;
     /// Human-readable backend name for reports.
     fn name(&self) -> &str;
+    /// Configure the execution-only I/O pipeline (intra-fetch decode
+    /// parallelism + read coalescing; see [`decode`]). Changing the
+    /// pipeline never changes fetched rows — only the I/O trace.
+    /// Backends without a tunable read path ignore it.
+    fn set_io_pipeline(&self, _pipeline: IoPipeline) {}
 }
 
 /// Decompose sorted indices into maximal contiguous runs `(start, len)`.

@@ -14,7 +14,7 @@ use anyhow::{bail, Result};
 use super::csr::CsrBatch;
 use super::iomodel::{AccessPattern, IoReport};
 use super::obs::ObsFrame;
-use super::{Backend, FetchResult};
+use super::{Backend, FetchResult, IoPipeline};
 
 /// Two synchronized modalities presented as one wider backend.
 pub struct ZipBackend<A: Backend, B: Backend> {
@@ -96,6 +96,7 @@ impl<A: Backend, B: Backend> Backend for ZipBackend<A, B> {
         debug_assert_eq!(ra.x.n_rows, rb.x.n_rows);
         let cut = self.split_col() as u32;
         let mut x = CsrBatch::empty(self.n_cols());
+        x.reserve_extra(ra.x.n_rows, ra.x.nnz() + rb.x.nnz());
         for r in 0..ra.x.n_rows {
             let (ia, va) = ra.x.row(r);
             let (ib, vb) = rb.x.row(r);
@@ -110,6 +111,11 @@ impl<A: Backend, B: Backend> Backend for ZipBackend<A, B> {
         io.add(&ra.io);
         io.add(&rb.io);
         Ok(FetchResult { x, io })
+    }
+
+    fn set_io_pipeline(&self, pipeline: IoPipeline) {
+        self.a.set_io_pipeline(pipeline);
+        self.b.set_io_pipeline(pipeline);
     }
 }
 

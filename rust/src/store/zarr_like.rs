@@ -12,16 +12,16 @@
 //! keeping identical coalescing behaviour for block sampling.
 
 use std::fs::File;
-use std::io::{Read, Write};
-use std::os::unix::fs::FileExt;
+use std::io::Write;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
-use flate2::read::DeflateDecoder;
 use flate2::write::DeflateEncoder;
 use flate2::Compression;
 
-use super::csr::CsrBatch;
+use super::decode::{
+    chunk_pieces, extract_chunk_rows, read_decode_groups, BufferPool, IoPipeline, PipelineCell,
+};
 use super::iomodel::{AccessPattern, IoReport};
 use super::obs::ObsFrame;
 use super::{check_sorted_indices, contiguous_runs, Backend, FetchResult};
@@ -125,6 +125,8 @@ pub struct ShardedZarrStore {
     shards: Vec<std::sync::OnceLock<File>>,
     indptr: Vec<u64>,
     obs: ObsFrame,
+    /// Decode-parallelism / read-coalescing knobs (execution-only).
+    pipeline: PipelineCell,
 }
 
 impl ShardedZarrStore {
@@ -177,6 +179,7 @@ impl ShardedZarrStore {
             shards: (0..n_shards).map(|_| std::sync::OnceLock::new()).collect(),
             indptr,
             obs,
+            pipeline: PipelineCell::default(),
         })
     }
 
@@ -197,21 +200,33 @@ impl ShardedZarrStore {
         Ok(self.shards[id].get().unwrap())
     }
 
-    fn load_chunk(&self, chunk: usize, raw: &mut Vec<u8>) -> Result<()> {
-        let (shard, off, comp_len, raw_len) = self.chunk_index[chunk];
-        let mut comp = vec![0u8; comp_len as usize];
-        self.shard(shard as usize)?
-            .read_exact_at(&mut comp, off)
-            .with_context(|| format!("read chunk {chunk}"))?;
-        raw.clear();
-        raw.reserve(raw_len as usize);
-        DeflateDecoder::new(&comp[..])
-            .read_to_end(raw)
-            .with_context(|| format!("decompress chunk {chunk}"))?;
-        if raw.len() != raw_len as usize {
-            bail!("chunk {chunk}: raw length mismatch");
+    /// Load + decode every chunk in `chunks` (ascending, unique) through
+    /// the intra-fetch pipeline ([`read_decode_groups`]). Chunk ranges
+    /// coalesce **within each shard** (reads never span shard objects —
+    /// they are separate files, as separate cloud objects would be);
+    /// decode fans out across the shared pool. Returns decoded payloads
+    /// in `chunks` order plus the number of ranged reads issued.
+    fn load_chunks(&self, chunks: &[usize], pipeline: IoPipeline) -> Result<(Vec<Vec<u8>>, usize)> {
+        let mut groups: Vec<(&File, Vec<(u64, u64, u64)>)> = Vec::new();
+        let mut i = 0usize;
+        while i < chunks.len() {
+            let shard = self.chunk_index[chunks[i]].0;
+            let mut j = i + 1;
+            while j < chunks.len() && self.chunk_index[chunks[j]].0 == shard {
+                j += 1;
+            }
+            let table: Vec<(u64, u64, u64)> = chunks[i..j]
+                .iter()
+                .map(|&c| {
+                    let (_, off, comp_len, raw_len) = self.chunk_index[c];
+                    (off, comp_len, raw_len)
+                })
+                .collect();
+            groups.push((self.shard(shard as usize)?, table));
+            i = j;
         }
-        Ok(())
+        read_decode_groups(groups, true, pipeline)
+            .with_context(|| format!("fetch chunks from {}", self.dir.display()))
     }
 }
 
@@ -239,37 +254,40 @@ impl Backend for ShardedZarrStore {
     fn fetch_rows(&self, sorted: &[u32]) -> Result<FetchResult> {
         check_sorted_indices(sorted, self.n_rows)?;
         let runs = contiguous_runs(sorted);
-        let mut x = CsrBatch::empty(self.n_cols);
+        let pieces = chunk_pieces(&runs, self.chunk_rows, self.n_rows);
+        let mut chunks: Vec<usize> = pieces.iter().map(|&(c, _, _)| c).collect();
+        chunks.dedup();
+        let pipeline = self.pipeline.get();
+        let (payloads, n_reads) = self.load_chunks(&chunks, pipeline)?;
+        let pool = BufferPool::global();
+        let mut x = pool.take_batch(self.n_cols);
+        let total_nnz: usize = pieces
+            .iter()
+            .map(|&(_, s, e)| (self.indptr[e] - self.indptr[s]) as usize)
+            .sum();
+        x.reserve_extra(sorted.len(), total_nnz);
         let mut bytes = 0u64;
-        let mut chunks_touched = 0u64;
-        let mut cur_chunk = usize::MAX;
-        let mut payload: Vec<u8> = Vec::new();
-        for &row in sorted {
-            let row = row as usize;
-            let chunk = row / self.chunk_rows;
-            if chunk != cur_chunk {
-                self.load_chunk(chunk, &mut payload)?;
-                cur_chunk = chunk;
-                chunks_touched += 1;
+        let mut ci = 0usize;
+        for &(chunk, s, e) in &pieces {
+            while chunks[ci] != chunk {
+                ci += 1;
             }
-            // chunk-local extraction
-            let c0 = chunk * self.chunk_rows;
-            let base = self.indptr[c0];
-            let c1 = ((chunk + 1) * self.chunk_rows).min(self.n_rows);
-            let chunk_nnz = (self.indptr[c1] - base) as usize;
-            let s = (self.indptr[row] - base) as usize;
-            let e = (self.indptr[row + 1] - base) as usize;
-            for c in payload[s * 4..e * 4].chunks_exact(4) {
-                x.indices.push(u32::from_le_bytes(c.try_into().unwrap()));
-            }
-            let voff = chunk_nnz * 4;
-            for c in payload[voff + s * 4..voff + e * 4].chunks_exact(4) {
-                x.data.push(f32::from_le_bytes(c.try_into().unwrap()));
-            }
-            x.indptr.push(x.indices.len() as u64);
-            x.n_rows += 1;
-            bytes += (self.indptr[row + 1] - self.indptr[row]) * 8;
+            extract_chunk_rows(
+                &self.indptr,
+                self.chunk_rows,
+                self.n_rows,
+                chunk,
+                &payloads[ci],
+                s,
+                e,
+                &mut x,
+            );
+            bytes += (self.indptr[e] - self.indptr[s]) * 8;
         }
+        for p in payloads {
+            pool.give_buf(p);
+        }
+        debug_assert!(x.validate().is_ok());
         Ok(FetchResult {
             x,
             io: IoReport {
@@ -277,10 +295,16 @@ impl Backend for ShardedZarrStore {
                 runs: runs.len() as u64,
                 rows: sorted.len() as u64,
                 bytes,
-                chunks: chunks_touched,
+                chunks: chunks.len() as u64,
+                read_calls: n_reads as u64,
+                read_calls_raw: chunks.len() as u64,
                 ..IoReport::default()
             },
         })
+    }
+
+    fn set_io_pipeline(&self, pipeline: IoPipeline) {
+        self.pipeline.set(pipeline);
     }
 }
 
@@ -365,6 +389,30 @@ mod tests {
             zarr.samples_per_sec(),
             hdf5.samples_per_sec()
         );
+    }
+
+    #[test]
+    fn pipeline_is_execution_only_and_reads_respect_shards() {
+        let dir = TempDir::new("zarr").unwrap();
+        let src = source(&dir, 60);
+        // 8 chunks of 8 rows, 2 chunks per shard → 4 shard files.
+        let zdir = convert_to_zarr(&src, dir.join("z"), 8, 2).unwrap();
+        let z = ShardedZarrStore::open(&zdir).unwrap();
+        let idx: Vec<u32> = (0..60).collect();
+        let base = z.fetch_rows(&idx).unwrap();
+        assert_eq!(base.io.read_calls, 8, "coalescing off: one read per chunk");
+        assert_eq!(base.io.read_calls_raw, 8);
+        z.set_io_pipeline(IoPipeline {
+            decode_threads: 4,
+            coalesce_gap_bytes: 1 << 20,
+        });
+        let piped = z.fetch_rows(&idx).unwrap();
+        assert_eq!(piped.x, base.x, "pipeline must be execution-only");
+        assert_eq!(
+            piped.io.read_calls, 4,
+            "reads coalesce within but never across shard objects"
+        );
+        assert_eq!(piped.io.read_calls_raw, 8);
     }
 
     #[test]

@@ -25,7 +25,9 @@ fn full_cli_flow() {
     run(argv(&format!("info --data {data_s}"))).unwrap();
 
     // bench: every experiment that doesn't need artifacts, in quick mode
-    for exp in ["fig2", "fig3", "fig4", "eq5", "fig6", "fig7", "fig8", "table2"] {
+    for exp in [
+        "fig2", "fig3", "fig4", "eq5", "fig6", "fig7", "fig8", "fig9", "table2",
+    ] {
         run(argv(&format!(
             "bench {exp} --data {data_s} --results {results_s} --quick"
         )))

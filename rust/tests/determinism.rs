@@ -1,10 +1,13 @@
-//! Determinism guarantees (ISSUE 2 acceptance):
+//! Determinism guarantees (ISSUE 2 + ISSUE 3 acceptance):
 //!
 //! * with a fixed seed, `num_workers = 0` and `num_workers = 4` yield the
 //!   identical per-epoch multiset of global row ids;
 //! * enabling the block cache and/or the cache-aware scheduler changes
 //!   neither the per-epoch row-id multiset nor (for `num_workers = 0`)
-//!   the exact minibatch stream — rows, expression data and labels.
+//!   the exact minibatch stream — rows, expression data and labels;
+//! * the intra-fetch decode pipeline (`decode_threads`,
+//!   `coalesce_gap_bytes`) is execution-only: any setting, combined with
+//!   any cache/scheduler setting, emits the bit-identical stream.
 
 use std::sync::Arc;
 
@@ -167,6 +170,133 @@ fn cache_and_scheduler_do_not_change_the_stream() {
             }
         }
     }
+}
+
+#[test]
+fn decode_pipeline_does_not_change_the_stream() {
+    let (_d, b) = dataset(400);
+    let base = ScDataset::new(b.clone(), base_cfg());
+    let variants: Vec<(&str, LoaderConfig)> = vec![
+        (
+            "decode-threads=4",
+            LoaderConfig {
+                decode_threads: 4,
+                ..base_cfg()
+            },
+        ),
+        (
+            "decode-threads=auto",
+            LoaderConfig {
+                decode_threads: 0,
+                ..base_cfg()
+            },
+        ),
+        (
+            "coalesce-gap=64k",
+            LoaderConfig {
+                coalesce_gap_bytes: 64 << 10,
+                ..base_cfg()
+            },
+        ),
+        (
+            "coalesce-gap=1 (adjacent only)",
+            LoaderConfig {
+                coalesce_gap_bytes: 1,
+                ..base_cfg()
+            },
+        ),
+        (
+            "decode+coalesce",
+            LoaderConfig {
+                decode_threads: 4,
+                coalesce_gap_bytes: 64 << 10,
+                ..base_cfg()
+            },
+        ),
+        (
+            "decode+coalesce+cache+scheduler+readahead",
+            LoaderConfig {
+                decode_threads: 0,
+                coalesce_gap_bytes: 64 << 10,
+                cache_bytes: 8 << 20,
+                cache_block_rows: 64,
+                locality_window: 8,
+                readahead: true,
+                ..base_cfg()
+            },
+        ),
+    ];
+    for epoch in [0u64, 1] {
+        let expect = stream(&base, epoch);
+        assert!(!expect.is_empty());
+        for (name, cfg) in &variants {
+            let ds = ScDataset::new(b.clone(), cfg.clone());
+            let got = stream(&ds, epoch);
+            assert_eq!(
+                got.len(),
+                expect.len(),
+                "{name}: minibatch count changed (epoch {epoch})"
+            );
+            for (i, (g, e)) in got.iter().zip(&expect).enumerate() {
+                assert_eq!(g.0, e.0, "{name}: rows diverged at minibatch {i}");
+                assert_eq!(g.1, e.1, "{name}: expression data diverged at minibatch {i}");
+                assert_eq!(g.2, e.2, "{name}: labels diverged at minibatch {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_pipeline_multiset_invariant_with_workers() {
+    let (_d, b) = dataset(400);
+    let plain = ScDataset::new(b.clone(), base_cfg());
+    for epoch in [0u64, 1] {
+        let expect = multiset(&plain, epoch);
+        for workers in [0usize, 4] {
+            let ds = ScDataset::new(
+                b.clone(),
+                LoaderConfig {
+                    num_workers: workers,
+                    decode_threads: 4,
+                    coalesce_gap_bytes: 64 << 10,
+                    ..base_cfg()
+                },
+            );
+            assert_eq!(
+                multiset(&ds, epoch),
+                expect,
+                "workers={workers}, epoch={epoch}"
+            );
+        }
+    }
+}
+
+#[test]
+fn coalescing_engaged_while_streams_match() {
+    // Guard against the invariance tests passing because the coalescer
+    // was silently bypassed: the merged run must issue fewer reads.
+    let (_d, b) = dataset(400);
+    let run = |gap: usize| {
+        let ds = ScDataset::new(
+            b.clone(),
+            LoaderConfig {
+                coalesce_gap_bytes: gap,
+                ..base_cfg()
+            },
+        );
+        let mut iter = ds.epoch(0).unwrap();
+        while iter.next().is_some() {}
+        iter.stats().io
+    };
+    let off = run(0);
+    let on = run(1 << 20);
+    assert_eq!(off.read_calls, off.read_calls_raw);
+    assert!(
+        on.read_calls < on.read_calls_raw,
+        "coalescer never merged: {:?}",
+        on
+    );
+    assert_eq!(on.read_calls_raw, off.read_calls_raw);
 }
 
 #[test]

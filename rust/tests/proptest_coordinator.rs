@@ -368,6 +368,76 @@ fn prop_cached_loader_covers_and_matches_plain_stream() {
 }
 
 #[test]
+fn prop_decode_pipeline_stream_invariant() {
+    // ISSUE 3 acceptance: any (decode_threads, coalesce_gap_bytes,
+    // cache on/off) combination yields the identical minibatch stream
+    // (rows + expression data + labels) and per-epoch row multiset.
+    let dir = TempDir::new("prop-decode").unwrap();
+    let mut cfg = TahoeConfig::tiny();
+    cfg.n_plates = 3;
+    cfg.cells_per_plate = 350;
+    generate(&cfg, dir.path()).unwrap();
+    let backend: Arc<dyn Backend> = Arc::new(open_collection(dir.path()).unwrap());
+    let n = backend.n_rows();
+    check("decode-pipeline", 10, |rng| {
+        let base = LoaderConfig {
+            strategy: Strategy::BlockShuffling {
+                block_size: rng.range(1, 48),
+            },
+            batch_size: rng.range(1, 80),
+            fetch_factor: rng.range(1, 6),
+            seed: rng.next_u64(),
+            label_cols: vec!["plate".into()],
+            ..Default::default()
+        };
+        let cache_on = rng.bernoulli(0.5);
+        let piped = LoaderConfig {
+            decode_threads: rng.range(0, 9),
+            coalesce_gap_bytes: match rng.range(0, 3) {
+                0 => 0,
+                1 => rng.range(1, 256),
+                _ => rng.range(256, 2 << 20),
+            },
+            cache_bytes: if cache_on { rng.range(10_000, 8 << 20) } else { 0 },
+            cache_block_rows: rng.range(1, 400),
+            locality_window: rng.range(0, 12),
+            readahead: cache_on && rng.bernoulli(0.5),
+            ..base.clone()
+        };
+        let epoch = rng.range(0, 3) as u64;
+        type Stream = Vec<(Vec<u32>, scdata::store::CsrBatch, Vec<Vec<u16>>)>;
+        let run = |cfg: &LoaderConfig| -> Result<Stream, String> {
+            let ds = ScDataset::new(backend.clone(), cfg.clone());
+            let mut out = Vec::new();
+            for mb in ds.epoch(epoch).map_err(|e| e.to_string())? {
+                let mb = mb.map_err(|e| e.to_string())?;
+                out.push((mb.rows, mb.x, mb.labels));
+            }
+            Ok(out)
+        };
+        let plain = run(&base)?;
+        let with_pipeline = run(&piped)?;
+        prop_assert!(
+            plain == with_pipeline,
+            "decode pipeline changed the emitted stream (threads={} gap={} cache={})",
+            piped.decode_threads,
+            piped.coalesce_gap_bytes,
+            cache_on
+        );
+        let mut all: Vec<u32> = with_pipeline
+            .iter()
+            .flat_map(|(r, _, _)| r.iter().copied())
+            .collect();
+        all.sort_unstable();
+        prop_assert!(
+            all == (0..n as u32).collect::<Vec<_>>(),
+            "pipeline epoch lost/duplicated rows"
+        );
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_simulator_monotonicities() {
     check("simulator-monotone", 64, |rng| {
         let model = DiskModel::sata_ssd_hdf5();
