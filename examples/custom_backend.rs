@@ -1,14 +1,18 @@
 //! Custom-backend demo (paper Appendix A: "identical sampling algorithms
 //! operate on AnnData, HuggingFace Datasets, TileDB-SOMA, or custom
 //! backends"): implement [`Backend`] for an in-memory store and run the
-//! unmodified scDataset pipeline over it.
+//! unmodified scDataset pipeline over it — including the paper's
+//! composable transforms: a `fetch_transform` (per-fetch log1p
+//! normalization over the whole `m·f`-row block-batch) and a
+//! `batch_transform` (per-minibatch label remap), installed through the
+//! builder.
 //!
 //! Run: `cargo run --release --example custom_backend`
 
 use std::sync::Arc;
 
 use anyhow::Result;
-use scdata::coordinator::{LoaderConfig, ScDataset, Strategy};
+use scdata::coordinator::{ScDataset, Strategy};
 use scdata::store::iomodel::{AccessPattern, IoReport};
 use scdata::store::{
     check_sorted_indices, contiguous_runs, Backend, CsrBatch, FetchResult, ObsColumn, ObsFrame,
@@ -79,20 +83,37 @@ impl Backend for ToyStore {
 
 fn main() -> Result<()> {
     let backend: Arc<dyn Backend> = Arc::new(ToyStore::new(10_000, 32, 5)?);
-    let ds = ScDataset::new(
-        backend,
-        LoaderConfig {
-            strategy: Strategy::ClassBalanced {
-                block_size: 4,
-                label_col: "class".into(),
-            },
-            batch_size: 50,
-            fetch_factor: 8,
-            label_cols: vec!["class".into()],
-            seed: 3,
-            ..Default::default()
-        },
-    );
+    // Raw values are 1 + (row % 7) ∈ [1, 7]; after log1p every value is
+    // in (0.69, 2.08) — cheap to verify below.
+    let log1p_max = (8.0f32).ln();
+    let ds = ScDataset::builder(backend)
+        .strategy(Strategy::ClassBalanced {
+            block_size: 4,
+            label_col: "class".into(),
+        })
+        .batch_size(50)
+        .fetch_factor(8)
+        .label_col("class")
+        .seed(3)
+        // The paper's fetch_transform: runs once per fetched block-batch
+        // (m·f = 400 rows) inside the worker, before the shuffled split —
+        // normalization amortized over the whole fetch, exactly where
+        // scDataset's fetch_transform_adata runs.
+        .fetch_transform(|view| {
+            for v in view.x.data.iter_mut() {
+                *v = v.ln_1p();
+            }
+            Ok(())
+        })
+        // The paper's batch_transform: per-minibatch, after the gather.
+        // Here: remap the 5 fine classes onto 2 coarse ones.
+        .batch_transform(|mb| {
+            for l in mb.labels[0].iter_mut() {
+                *l %= 2;
+            }
+            Ok(())
+        })
+        .build()?;
     let mut counts = [0usize; 5];
     let mut batches = 0;
     for mb in ds.epoch(0)? {
@@ -100,9 +121,18 @@ fn main() -> Result<()> {
         for &c in &mb.labels[0] {
             counts[c as usize] += 1;
         }
+        assert!(
+            mb.x.data.iter().all(|&v| v > 0.0 && v <= log1p_max),
+            "fetch_transform must have log1p-normalized every value"
+        );
         batches += 1;
     }
     println!("ran {batches} class-balanced minibatches over a custom in-memory backend");
-    println!("class counts (should be ≈ equal): {counts:?}");
+    println!("coarse label counts after batch_transform remap: {counts:?}");
+    assert_eq!(
+        counts[2] + counts[3] + counts[4],
+        0,
+        "batch_transform collapsed labels onto 2 coarse classes"
+    );
     Ok(())
 }

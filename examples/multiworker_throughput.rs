@@ -7,7 +7,7 @@
 
 use std::sync::Arc;
 
-use scdata::coordinator::{LoaderConfig, ScDataset, Strategy};
+use scdata::coordinator::{ScDataset, Strategy, WorkerConfig};
 use scdata::datagen::{generate, open_collection, TahoeConfig};
 use scdata::store::iomodel::simulate_loader;
 use scdata::store::{Backend, DiskModel};
@@ -34,18 +34,16 @@ fn main() -> anyhow::Result<()> {
     println!("|---|---|---|");
     let disk = DiskModel::sata_ssd_hdf5();
     for workers in [0usize, 2, 4, 8] {
-        let ds = ScDataset::new(
-            backend.clone(),
-            LoaderConfig {
-                strategy: Strategy::BlockShuffling { block_size: 16 },
-                batch_size: 64,
-                fetch_factor: 64,
+        let ds = ScDataset::builder(backend.clone())
+            .strategy(Strategy::BlockShuffling { block_size: 16 })
+            .batch_size(64)
+            .fetch_factor(64)
+            .workers(WorkerConfig {
                 num_workers: workers,
                 prefetch_depth: 2,
-                seed: 1,
-                ..Default::default()
-            },
-        );
+            })
+            .seed(1)
+            .build()?;
         let t0 = std::time::Instant::now();
         let mut rows = 0usize;
         let mut iter = ds.epoch(0)?;

@@ -7,7 +7,7 @@
 use std::sync::Arc;
 
 use scdata::coordinator::entropy::batch_label_entropy;
-use scdata::coordinator::{LoaderConfig, ScDataset, Strategy};
+use scdata::coordinator::{ScDataset, Strategy};
 use scdata::datagen::{generate, open_collection, TahoeConfig};
 use scdata::store::Backend;
 
@@ -37,18 +37,16 @@ fn main() -> anyhow::Result<()> {
 
     // 3. The paper's recommended configuration: block sampling (b=16) with
     //    batched fetching (f=256 would be production; 32 keeps the demo
-    //    snappy), minibatch size 64.
-    let ds = ScDataset::new(
-        collection.clone() as Arc<dyn Backend>,
-        LoaderConfig {
-            strategy: Strategy::BlockShuffling { block_size: 16 },
-            batch_size: 64,
-            fetch_factor: 32,
-            label_cols: vec!["plate".into(), "cell_line".into()],
-            seed: 0,
-            ..Default::default()
-        },
-    );
+    //    snappy), minibatch size 64. The builder validates everything at
+    //    build() time (try --readahead without a cache budget: a typed
+    //    BuildError instead of a silent no-op).
+    let ds = ScDataset::builder(collection.clone() as Arc<dyn Backend>)
+        .strategy(Strategy::BlockShuffling { block_size: 16 })
+        .batch_size(64)
+        .fetch_factor(32)
+        .label_cols(["plate", "cell_line"])
+        .seed(0)
+        .build()?;
 
     let n_plates = collection.obs().req_column("plate")?.n_categories();
     let t0 = std::time::Instant::now();

@@ -10,7 +10,7 @@
 
 use std::sync::Arc;
 
-use scdata::coordinator::Strategy;
+use scdata::coordinator::{SamplingConfig, Strategy};
 use scdata::datagen::{generate, open_train_test, TahoeConfig};
 use scdata::runtime::Runtime;
 use scdata::store::Backend;
@@ -57,7 +57,15 @@ fn main() -> anyhow::Result<()> {
         let task = TaskSpec::by_name(task_name).unwrap();
         println!("\n=== task: {task_name} ===");
         for (label, strategy, f) in &strategies {
-            let mut cfg = TrainConfig::new(task.clone(), strategy.clone(), 64, *f);
+            let mut cfg = TrainConfig::new(
+                task.clone(),
+                SamplingConfig {
+                    strategy: strategy.clone(),
+                    batch_size: 64,
+                    fetch_factor: *f,
+                    ..SamplingConfig::default()
+                },
+            );
             cfg.epochs = 3;
             cfg.lr = lr;
             cfg.seed = 0;

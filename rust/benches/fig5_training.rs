@@ -6,7 +6,7 @@ mod common;
 
 use std::sync::Arc;
 
-use scdata::coordinator::Strategy;
+use scdata::coordinator::{SamplingConfig, Strategy};
 use scdata::datagen::open_collection_subset;
 use scdata::store::Backend;
 use scdata::train::{train_eval, Engine, TaskSpec, TrainConfig};
@@ -32,7 +32,15 @@ fn main() {
         ("block(16)", Strategy::BlockShuffling { block_size: 16 }),
         ("random", Strategy::BlockShuffling { block_size: 1 }),
     ] {
-        let mut cfg = TrainConfig::new(task.clone(), strategy, 64, 64);
+        let mut cfg = TrainConfig::new(
+            task.clone(),
+            SamplingConfig {
+                strategy,
+                batch_size: 64,
+                fetch_factor: 64,
+                ..SamplingConfig::default()
+            },
+        );
         cfg.lr = 0.01;
         cfg.max_steps = Some(150);
         let t0 = std::time::Instant::now();

@@ -6,7 +6,7 @@
 mod common;
 
 use scdata::bench_harness::measure_cache_epochs;
-use scdata::coordinator::Strategy;
+use scdata::coordinator::{CacheConfig, Strategy};
 use scdata::util::stats::{fmt_bytes, fmt_rate};
 
 fn main() {
@@ -18,10 +18,12 @@ fn main() {
     let off = measure_cache_epochs(&backend, strategy.clone(), fetch_factor, epochs, &opts)
         .unwrap();
 
-    opts.cache_bytes = 64 << 20;
-    opts.cache_block_rows = 512; // = the bench dataset's chunk_rows
-    opts.locality_window = 8;
-    opts.readahead = true;
+    opts.cache = CacheConfig {
+        bytes: 64 << 20,
+        block_rows: 512, // = the bench dataset's chunk_rows
+        readahead: true,
+        locality_window: 8,
+    };
     let on =
         measure_cache_epochs(&backend, strategy, fetch_factor, epochs, &opts).unwrap();
 

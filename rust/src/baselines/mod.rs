@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::coordinator::{LoaderConfig, Minibatch, ScDataset, Strategy};
+use crate::coordinator::{Minibatch, ScDataset, Strategy};
 use crate::store::{Backend, IoReport};
 use crate::util::rng::Rng;
 
@@ -108,18 +108,14 @@ pub fn streaming_loader(
     batch_size: usize,
     label_cols: Vec<String>,
     seed: u64,
-) -> ScDataset {
-    ScDataset::new(
-        backend,
-        LoaderConfig {
-            strategy: Strategy::Streaming { shuffle_buffer: 0 },
-            batch_size,
-            fetch_factor: 1,
-            label_cols,
-            seed,
-            ..Default::default()
-        },
-    )
+) -> Result<ScDataset> {
+    Ok(ScDataset::builder(backend)
+        .strategy(Strategy::Streaming { shuffle_buffer: 0 })
+        .batch_size(batch_size)
+        .fetch_factor(1)
+        .label_cols(label_cols)
+        .seed(seed)
+        .build()?)
 }
 
 /// §4.4 strategy 2: streaming through a rolling shuffle buffer of
@@ -131,21 +127,17 @@ pub fn shuffle_buffer_loader(
     buffer_rows: usize,
     label_cols: Vec<String>,
     seed: u64,
-) -> ScDataset {
+) -> Result<ScDataset> {
     let fetch_factor = (buffer_rows / batch_size).max(1);
-    ScDataset::new(
-        backend,
-        LoaderConfig {
-            strategy: Strategy::Streaming {
-                shuffle_buffer: buffer_rows,
-            },
-            batch_size,
-            fetch_factor,
-            label_cols,
-            seed,
-            ..Default::default()
-        },
-    )
+    Ok(ScDataset::builder(backend)
+        .strategy(Strategy::Streaming {
+            shuffle_buffer: buffer_rows,
+        })
+        .batch_size(batch_size)
+        .fetch_factor(fetch_factor)
+        .label_cols(label_cols)
+        .seed(seed)
+        .build()?)
 }
 
 #[cfg(test)]
@@ -207,7 +199,7 @@ mod tests {
     #[test]
     fn streaming_loader_is_sequential() {
         let (_d, b) = backend();
-        let loader = streaming_loader(b.clone(), 25, vec![], 0);
+        let loader = streaming_loader(b.clone(), 25, vec![], 0).unwrap();
         let mut rows = Vec::new();
         for mb in loader.epoch(0).unwrap() {
             rows.extend(mb.unwrap().rows);
@@ -218,7 +210,7 @@ mod tests {
     #[test]
     fn shuffle_buffer_loader_shuffles_locally() {
         let (_d, b) = backend();
-        let loader = shuffle_buffer_loader(b.clone(), 16, 128, vec![], 0);
+        let loader = shuffle_buffer_loader(b.clone(), 16, 128, vec![], 0).unwrap();
         let mut rows = Vec::new();
         for mb in loader.epoch(0).unwrap() {
             rows.extend(mb.unwrap().rows);

@@ -12,7 +12,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::coordinator::entropy::batch_label_entropy;
-use crate::coordinator::{LoaderConfig, ScDataset, Strategy};
+use crate::coordinator::{CacheConfig, IoConfig, SamplingConfig, ScDataset, Strategy};
 use crate::store::iomodel::{simulate_loader, DiskModel, IoReport, SimResult};
 use crate::store::Backend;
 
@@ -36,7 +36,8 @@ pub struct SweepPoint {
     pub totals: IoReport,
 }
 
-/// Sweep controls.
+/// Sweep controls. The loader tuning knobs are the builder's own typed
+/// sub-configs ([`CacheConfig`], [`IoConfig`]).
 #[derive(Clone, Debug)]
 pub struct SweepOptions {
     /// Minimum rows to pull per configuration (more ⇒ tighter estimates).
@@ -47,18 +48,11 @@ pub struct SweepOptions {
     pub label_col: String,
     pub seed: u64,
     pub disk: DiskModel,
-    /// Block-cache byte budget for the measured loader (0 = off).
-    pub cache_bytes: usize,
-    /// Rows per cached block.
-    pub cache_block_rows: usize,
-    /// Enable asynchronous readahead.
-    pub readahead: bool,
-    /// Cache-aware fetch scheduling window (≤ 1 = off).
-    pub locality_window: usize,
-    /// Intra-fetch decode parallelism (1 = serial, 0 = auto).
-    pub decode_threads: usize,
-    /// Read-coalescing gap tolerance in bytes (0 = off).
-    pub coalesce_gap_bytes: usize,
+    /// Block cache + readahead + locality scheduler for the measured
+    /// loader (default: off).
+    pub cache: CacheConfig,
+    /// Decode pipeline for the measured loader (default: serial).
+    pub io: IoConfig,
 }
 
 impl Default for SweepOptions {
@@ -70,12 +64,8 @@ impl Default for SweepOptions {
             label_col: "plate".into(),
             seed: 7,
             disk: DiskModel::sata_ssd_hdf5(),
-            cache_bytes: 0,
-            cache_block_rows: 256,
-            readahead: false,
-            locality_window: 0,
-            decode_threads: 1,
-            coalesce_gap_bytes: 0,
+            cache: CacheConfig::default(),
+            io: IoConfig::default(),
         }
     }
 }
@@ -89,24 +79,20 @@ pub fn measure_config(
     opts: &SweepOptions,
 ) -> Result<SweepPoint> {
     let block_size = strategy.block_size();
-    let cfg = LoaderConfig {
-        strategy,
-        batch_size: opts.batch_size,
-        fetch_factor,
-        label_cols: vec![opts.label_col.clone()],
-        seed: opts.seed,
-        // The sweep itself runs synchronously; worker scaling is modeled by
-        // the DES (the real thread pool is exercised in integration tests).
-        num_workers: 0,
-        cache_bytes: opts.cache_bytes,
-        cache_block_rows: opts.cache_block_rows,
-        readahead: opts.readahead,
-        locality_window: opts.locality_window,
-        decode_threads: opts.decode_threads,
-        coalesce_gap_bytes: opts.coalesce_gap_bytes,
-        ..Default::default()
-    };
-    let ds = ScDataset::new(backend.clone(), cfg);
+    // The sweep itself runs synchronously; worker scaling is modeled by
+    // the DES (the real thread pool is exercised in integration tests).
+    let ds = ScDataset::builder(backend.clone())
+        .sampling(SamplingConfig {
+            strategy,
+            batch_size: opts.batch_size,
+            fetch_factor,
+            seed: opts.seed,
+            drop_last: false,
+        })
+        .label_col(opts.label_col.clone())
+        .cache(opts.cache)
+        .io(opts.io)
+        .build()?;
     let fetch_rows = opts.batch_size * fetch_factor;
     let want_fetches = (opts.min_rows.div_ceil(fetch_rows)).clamp(1, opts.max_fetches);
     let k = backend
@@ -293,20 +279,17 @@ pub fn measure_cache_epochs(
     epochs: usize,
     opts: &SweepOptions,
 ) -> Result<CacheRun> {
-    let cfg = LoaderConfig {
-        strategy,
-        batch_size: opts.batch_size,
-        fetch_factor,
-        seed: opts.seed,
-        cache_bytes: opts.cache_bytes,
-        cache_block_rows: opts.cache_block_rows,
-        readahead: opts.readahead,
-        locality_window: opts.locality_window,
-        decode_threads: opts.decode_threads,
-        coalesce_gap_bytes: opts.coalesce_gap_bytes,
-        ..Default::default()
-    };
-    let ds = ScDataset::new(backend.clone(), cfg);
+    let ds = ScDataset::builder(backend.clone())
+        .sampling(SamplingConfig {
+            strategy,
+            batch_size: opts.batch_size,
+            fetch_factor,
+            seed: opts.seed,
+            drop_last: false,
+        })
+        .cache(opts.cache)
+        .io(opts.io)
+        .build()?;
     let mut run = CacheRun::default();
     let mut prev_true_bytes = 0u64;
     let mut prev_ra_bytes = 0u64;
@@ -403,20 +386,22 @@ pub fn measure_decode_point(
     coalesce_gap_bytes: usize,
     opts: &SweepOptions,
 ) -> Result<DecodePoint> {
-    let cfg = LoaderConfig {
-        strategy,
-        batch_size: opts.batch_size,
-        fetch_factor,
-        seed: opts.seed,
-        cache_bytes: opts.cache_bytes,
-        cache_block_rows: opts.cache_block_rows,
-        readahead: opts.readahead,
-        locality_window: opts.locality_window,
-        decode_threads,
-        coalesce_gap_bytes,
-        ..Default::default()
-    };
-    let ds = ScDataset::new(backend.clone(), cfg);
+    let ds = ScDataset::builder(backend.clone())
+        .sampling(SamplingConfig {
+            strategy,
+            batch_size: opts.batch_size,
+            fetch_factor,
+            seed: opts.seed,
+            drop_last: false,
+        })
+        .cache(opts.cache)
+        // The sweep point's pipeline setting supersedes the option
+        // defaults — this is the quantity being swept.
+        .io(IoConfig {
+            decode_threads,
+            coalesce_gap_bytes,
+        })
+        .build()?;
     let t0 = std::time::Instant::now();
     let mut iter = ds.epoch(0)?;
     let mut rows: Vec<u32> = Vec::new();
@@ -581,9 +566,12 @@ mod tests {
         let off = measure_cache_epochs(&b, strategy.clone(), 4, 2, &opts).unwrap();
         assert!(off.total_bytes > 0);
         assert_eq!(off.hit_rate, 0.0);
-        opts.cache_bytes = 256 << 20;
-        opts.cache_block_rows = 512;
-        opts.locality_window = 8;
+        opts.cache = CacheConfig {
+            bytes: 256 << 20,
+            block_rows: 512,
+            locality_window: 8,
+            ..CacheConfig::default()
+        };
         let on = measure_cache_epochs(&b, strategy, 4, 2, &opts).unwrap();
         assert!(
             on.total_bytes < off.total_bytes,

@@ -1,4 +1,9 @@
-//! Hand-rolled CLI argument parsing (the offline build has no `clap`).
+//! Hand-rolled CLI argument parsing (the offline build has no `clap`),
+//! plus the **shared flag→typed-config helpers** every command uses to
+//! turn loader-tuning flags into the builder's sub-configs. The `train`,
+//! `bench fig8`/`fig9` and `autotune` paths all go through
+//! [`Args::cache_config`] / [`Args::io_config`] instead of each keeping
+//! its own copy of the mapping.
 //!
 //! Grammar: `scdata <command> [<subcommand>] [--flag [value]] ...`.
 //! A `--flag` followed by another `--flag` (or end of input) is boolean.
@@ -6,6 +11,9 @@
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
+
+use crate::config::AppConfig;
+use crate::coordinator::{CacheConfig, IoConfig};
 
 #[derive(Clone, Debug, Default)]
 pub struct Args {
@@ -78,6 +86,41 @@ impl Args {
         self.flags.get(key).map(|v| v != "false").unwrap_or(false)
     }
 
+    /// The shared `--cache-mb` / `--cache-block-rows` / `--readahead` /
+    /// `--locality-window` → [`CacheConfig`] mapping. `defaults` carries
+    /// the values flags fall back to (usually `AppConfig::cache`, possibly
+    /// adjusted by the command — e.g. `bench fig8` raises the budget).
+    pub fn cache_config(&self, defaults: CacheConfig) -> Result<CacheConfig> {
+        Ok(CacheConfig {
+            bytes: self.usize_or("cache-mb", defaults.bytes >> 20)? << 20,
+            block_rows: self.usize_or("cache-block-rows", defaults.block_rows)?,
+            // An explicit flag wins either way (`--readahead false` must
+            // be able to disable a config-enabled readahead).
+            readahead: match self.flags.get("readahead") {
+                Some(v) => v != "false",
+                None => defaults.readahead,
+            },
+            locality_window: self.usize_or("locality-window", defaults.locality_window)?,
+        })
+    }
+
+    /// The shared `--decode-threads` / `--coalesce-gap-bytes` →
+    /// [`IoConfig`] mapping.
+    pub fn io_config(&self, defaults: IoConfig) -> Result<IoConfig> {
+        Ok(IoConfig {
+            decode_threads: self.usize_or("decode-threads", defaults.decode_threads)?,
+            coalesce_gap_bytes: self
+                .usize_or("coalesce-gap-bytes", defaults.coalesce_gap_bytes)?,
+        })
+    }
+
+    /// Both loader-tuning sub-configs at once, defaulted from the app
+    /// config's `[cache]` / `[io]` tables — the one-stop helper for
+    /// commands without special defaulting.
+    pub fn loader_tuning(&self, cfg: &AppConfig) -> Result<(CacheConfig, IoConfig)> {
+        Ok((self.cache_config(cfg.cache)?, self.io_config(cfg.io)?))
+    }
+
     /// Comma-separated usize list.
     pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
         match self.flags.get(key) {
@@ -141,5 +184,46 @@ mod tests {
     fn trailing_bool_flag() {
         let a = parse("cmd --verbose");
         assert!(a.bool("verbose"));
+    }
+
+    #[test]
+    fn cache_and_io_flags_map_onto_typed_configs() {
+        let cfg = AppConfig::default();
+        let a = parse("train --cache-mb 64 --readahead --locality-window 8 --decode-threads 4");
+        let (cache, io) = a.loader_tuning(&cfg).unwrap();
+        assert_eq!(cache.bytes, 64 << 20);
+        assert!(cache.readahead);
+        assert_eq!(cache.locality_window, 8);
+        assert_eq!(cache.block_rows, cfg.cache.block_rows, "unset flag keeps config");
+        assert_eq!(io.decode_threads, 4);
+        assert_eq!(io.coalesce_gap_bytes, cfg.io.coalesce_gap_bytes);
+    }
+
+    #[test]
+    fn tuning_flags_fall_back_to_given_defaults() {
+        let a = parse("bench fig8");
+        let defaults = CacheConfig {
+            bytes: 32 << 20,
+            block_rows: 512,
+            readahead: true,
+            locality_window: 6,
+        };
+        assert_eq!(a.cache_config(defaults).unwrap(), defaults);
+        let a = parse("bench fig8 --cache-mb 8 --cache-block-rows 128");
+        let got = a.cache_config(defaults).unwrap();
+        assert_eq!(got.bytes, 8 << 20);
+        assert_eq!(got.block_rows, 128);
+        assert!(got.readahead, "config-enabled readahead survives");
+        // an explicit flag must also be able to turn it OFF
+        let a = parse("bench fig8 --readahead false");
+        assert!(!a.cache_config(defaults).unwrap().readahead);
+    }
+
+    #[test]
+    fn bad_tuning_flags_error() {
+        let a = parse("train --cache-mb lots");
+        assert!(a.cache_config(CacheConfig::default()).is_err());
+        let a = parse("train --decode-threads many");
+        assert!(a.io_config(IoConfig::default()).is_err());
     }
 }

@@ -14,7 +14,7 @@ use crate::bench_harness::{
 };
 use crate::config::AppConfig;
 use crate::coordinator::entropy::{corollary33_bounds, dist_entropy};
-use crate::coordinator::Strategy;
+use crate::coordinator::{SamplingConfig, Strategy};
 use crate::datagen;
 use crate::store::memmap_dense::{convert_to_memmap, DenseMemmapStore};
 use crate::store::rowgroup::{convert_to_rowgroup, RowGroupStore};
@@ -317,7 +317,16 @@ fn fig5(args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
             let mut f1s = Vec::new();
             let mut load_secs = Vec::new();
             for &seed in &seeds {
-                let mut tc = TrainConfig::new(task.clone(), strategy.clone(), cfg.batch_size, f);
+                let mut tc = TrainConfig::new(
+                    task.clone(),
+                    SamplingConfig {
+                        strategy: strategy.clone(),
+                        batch_size: cfg.batch_size,
+                        fetch_factor: f,
+                        drop_last: true,
+                        ..SamplingConfig::default()
+                    },
+                );
                 tc.lr = lr;
                 tc.epochs = epochs;
                 tc.seed = seed;
@@ -419,23 +428,26 @@ fn fig8(args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
     let epochs = args.usize_or("epochs", 2)?.max(1);
     let b = args.usize_or("block", 16)?;
     let f = args.usize_or("fetch", if quick { 16 } else { 64 })?;
-    let cache_mb = args.usize_or(
-        "cache-mb",
-        if cfg.cache_mb > 0 { cfg.cache_mb } else { 64 },
-    )?;
-    let window = args.usize_or("locality-window", cfg.locality_window.max(8))?;
+    // Shared flag→CacheConfig mapping, with fig8-specific fallbacks: a
+    // 64 MiB budget and a window of ≥ 8 when the config leaves them off.
+    let mut defaults = cfg.cache;
+    if defaults.bytes == 0 {
+        defaults.bytes = 64 << 20;
+    }
+    defaults.locality_window = defaults.locality_window.max(8);
+    let cache = args.cache_config(defaults)?;
     let strategy = Strategy::BlockShuffling { block_size: b };
 
     let off = measure_cache_epochs(&backend, strategy.clone(), f, epochs, &opts)?;
-    opts.cache_bytes = cache_mb << 20;
-    opts.cache_block_rows = cfg.cache_block_rows;
-    opts.locality_window = window;
-    opts.readahead = args.bool("readahead") || cfg.readahead;
+    opts.cache = cache;
     let on = measure_cache_epochs(&backend, strategy, f, epochs, &opts)?;
 
     println!(
         "Fig 8 — block cache ({} MiB, block_rows={}, window={}, readahead={}) vs no cache; b={b}, f={f}\n",
-        cache_mb, cfg.cache_block_rows, window, opts.readahead
+        cache.bytes >> 20,
+        cache.block_rows,
+        cache.locality_window,
+        cache.readahead
     );
     println!("| epoch | bytes read (off) | bytes read (on) | hits | misses | evictions |");
     println!("|---|---|---|---|---|---|");
@@ -463,8 +475,8 @@ fn fig8(args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
     );
     let mut body = Json::obj();
     body.set("experiment", Json::Str("fig8".into()))
-        .set("cache_mb", Json::Num(cache_mb as f64))
-        .set("locality_window", Json::Num(window as f64))
+        .set("cache_mb", Json::Num((cache.bytes >> 20) as f64))
+        .set("locality_window", Json::Num(cache.locality_window as f64))
         .set("epochs", Json::Num(epochs as f64))
         .set("bytes_off", Json::Num(off.total_bytes as f64))
         .set("bytes_on", Json::Num(on.total_bytes as f64))
@@ -487,14 +499,14 @@ fn fig9(args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
     let opts = sweep_opts(cfg, quick);
     let grid = args.usize_list_or("threads-grid", &[1, 2, 4])?;
     ensure!(!grid.is_empty(), "--threads-grid must not be empty");
-    let gap = args.usize_or(
-        "coalesce-gap-bytes",
-        if cfg.coalesce_gap_bytes > 0 {
-            cfg.coalesce_gap_bytes
-        } else {
-            64 << 10
-        },
-    )?;
+    // Shared flag→IoConfig mapping; fig9 defaults to a 64 KiB gap when
+    // the config leaves coalescing off (the sweep needs something to
+    // measure). --threads-grid supersedes the scalar decode_threads.
+    let mut defaults = cfg.io;
+    if defaults.coalesce_gap_bytes == 0 {
+        defaults.coalesce_gap_bytes = 64 << 10;
+    }
+    let gap = args.io_config(defaults)?.coalesce_gap_bytes;
     let b = args.usize_or("block", 16)?;
     let f = args.usize_or("fetch", if quick { 8 } else { 64 })?;
     let strategy = Strategy::BlockShuffling { block_size: b };

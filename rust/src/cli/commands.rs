@@ -6,7 +6,7 @@ use anyhow::{bail, Result};
 
 use crate::config::AppConfig;
 use crate::coordinator::autotune::{tune, TuneInputs, TuneOptions};
-use crate::coordinator::Strategy;
+use crate::coordinator::{SamplingConfig, Strategy};
 use crate::datagen::{self, TahoeConfig};
 use crate::store::iomodel::{simulate_loader, AccessPattern, IoReport};
 use crate::store::Backend;
@@ -135,26 +135,28 @@ pub fn train(args: &Args) -> Result<()> {
     let engine = make_engine(args, &cfg)?;
     let mut tc = TrainConfig::new(
         task,
-        strategy,
-        cfg.batch_size,
-        args.usize_or("fetch", 256)?,
+        SamplingConfig {
+            strategy,
+            batch_size: cfg.batch_size,
+            fetch_factor: args.usize_or("fetch", cfg.fetch_factor)?,
+            seed: args.usize_or("seed", cfg.seed as usize)? as u64,
+            drop_last: true,
+        },
     );
     tc.epochs = args.usize_or("epochs", 1)?;
     tc.lr = args.f64_or("lr", 1e-5)? as f32;
-    tc.seed = args.usize_or("seed", cfg.seed as usize)? as u64;
+    tc.seed = tc.loader.sampling.seed;
     if let Some(ms) = args.flags.get("max-steps") {
         tc.max_steps = Some(ms.parse()?);
     }
-    // Block cache + readahead + cache-aware scheduling (flags override
-    // the `[cache]` config table).
-    tc.loader.cache_bytes = args.usize_or("cache-mb", cfg.cache_mb)? << 20;
-    tc.loader.cache_block_rows = cfg.cache_block_rows;
-    tc.loader.readahead = args.bool("readahead") || cfg.readahead;
-    tc.loader.locality_window = args.usize_or("locality-window", cfg.locality_window)?;
-    // Intra-fetch decode pipeline (flags override the `[io]` table).
-    tc.loader.decode_threads = args.usize_or("decode-threads", cfg.decode_threads)?;
-    tc.loader.coalesce_gap_bytes =
-        args.usize_or("coalesce-gap-bytes", cfg.coalesce_gap_bytes)?;
+    // Cache + decode-pipeline tuning: flags override the `[cache]`/`[io]`
+    // config tables through the shared helper. The `[workers]` table has
+    // no flags; it applies as-is. (Sweeps/autotune intentionally ignore
+    // it: worker scaling there is modeled by the DES.)
+    let (cache, io) = args.loader_tuning(&cfg)?;
+    tc.loader.cache = cache;
+    tc.loader.io = io;
+    tc.loader.workers = cfg.workers;
     let report = train_eval(train_be, test_be, &engine, &tc)?;
     println!(
         "task={} strategy={} engine={}",
@@ -193,8 +195,11 @@ pub fn autotune(args: &Args) -> Result<()> {
         pattern: coll.pattern(),
         disk: cfg.disk,
     };
+    // The shared cache mapping; autotune's --decode-threads is a sweep
+    // *list* (unlike train's scalar), so it is parsed separately.
+    let cache = args.cache_config(cfg.cache)?;
     let opts = TuneOptions {
-        cache_bytes: (args.usize_or("cache-mb", cfg.cache_mb)? as u64) << 20,
+        cache_bytes: cache.bytes as u64,
         decode_threads: args.usize_list_or(
             "decode-threads",
             &TuneOptions::default().decode_threads,

@@ -26,14 +26,16 @@ COMMANDS:
               [--strategy random|streaming|buffer|block] [--block N]
               [--fetch N] [--engine cpu|pjrt] [--artifacts DIR]
               [--epochs N] [--lr F] [--max-steps N] [--seed N]
-              [--cache-mb N] [--readahead] [--locality-window N]
+              [--cache-mb N] [--cache-block-rows N] [--readahead]
+              [--locality-window N]
               [--decode-threads N] [--coalesce-gap-bytes N]
   bench       Regenerate paper figures/tables
               fig2|fig3|fig4|eq5|fig5|fig6|fig7|fig8|fig9|table2|all
               --data DIR [--results DIR] [--quick] [--engine cpu|pjrt]
               [--config FILE] [--seeds N]
-              fig8 also takes [--cache-mb N] [--readahead]
-              [--locality-window N] [--epochs N] [--block N] [--fetch N]
+              fig8 also takes [--cache-mb N] [--cache-block-rows N]
+              [--readahead] [--locality-window N] [--epochs N]
+              [--block N] [--fetch N]
               fig9 also takes [--threads-grid 1,2,4]
               [--coalesce-gap-bytes N] [--block N] [--fetch N] [--smoke]
   autotune    Recommend (block size, fetch factor, decode threads):
@@ -41,9 +43,16 @@ COMMANDS:
   calibrate   Print virtual-disk anchors vs the paper's measurements
   help        Show this message
 
+All loader-tuning flags map onto the builder's typed sub-configs through
+one shared helper (train, bench fig8/fig9 and autotune agree exactly),
+and invalid combinations fail fast with a typed error — e.g.
+--readahead without --cache-mb, or --locality-window with --strategy
+streaming.
+
 The block cache: --cache-mb sets the byte budget of the block-granular
-LRU cache wrapped around the storage backend (0 = off), --readahead
-prefetches the next scheduled fetch's blocks in the background, and
+LRU cache wrapped around the storage backend (0 = off),
+--cache-block-rows the rows per cached block, --readahead prefetches
+the next scheduled fetch's blocks in the background, and
 --locality-window N lets the cache-aware scheduler execute fetches up to
 N positions out of order to maximize block reuse (delivery order, and
 therefore the minibatch stream, is unchanged). Defaults come from the

@@ -1,10 +1,20 @@
 //! Application configuration: defaults, TOML files (`configs/*.toml`) and
 //! disk-model overrides shared by the CLI, benches and examples.
+//!
+//! The loader knobs are the **same typed sub-configs the builder takes**
+//! ([`WorkerConfig`], [`CacheConfig`], [`IoConfig`] from
+//! `crate::coordinator`), parsed from `[workers]` / `[cache]` / `[io]`
+//! TOML tables plus a `[sampling]` table for batch size, fetch factor and
+//! seed. [`AppConfig::defaults_toml`] renders the canonical defaults from
+//! the very same `Default` impls, so code, docs and
+//! `configs/default.toml` cannot drift (tests assert the shipped file
+//! parses identically).
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::{CacheConfig, IoConfig, SamplingConfig, WorkerConfig};
 use crate::store::iomodel::DiskModel;
 use crate::util::toml::TomlDoc;
 
@@ -14,40 +24,46 @@ pub struct AppConfig {
     pub data_dir: PathBuf,
     pub artifacts_dir: PathBuf,
     pub results_dir: PathBuf,
+    /// `[sampling] batch_size` (legacy top-level `batch_size` accepted).
     pub batch_size: usize,
+    /// `[sampling] fetch_factor` — the CLI training default. The paper's
+    /// production recommendation (256) rather than the library default
+    /// (16): CLI runs are throughput benchmarks, library callers choose
+    /// explicitly.
+    pub fetch_factor: usize,
+    /// `[sampling] seed` (legacy top-level `seed` accepted).
     pub seed: u64,
     pub disk: DiskModel,
-    /// `[cache]` table: block-cache budget in MiB (0 disables caching).
-    pub cache_mb: usize,
-    /// Rows per cached block (cache + scheduler granularity).
-    pub cache_block_rows: usize,
-    /// Enable the asynchronous readahead worker.
-    pub readahead: bool,
-    /// Cache-aware fetch scheduling window (≤ 1 disables reordering).
-    pub locality_window: usize,
-    /// `[io]` table: intra-fetch decode parallelism (1 = serial,
-    /// 0 = auto/one per core).
-    pub decode_threads: usize,
-    /// `[io]` table: gap tolerance in bytes for coalescing near-adjacent
-    /// chunk reads into single ranged I/O calls (0 = off).
-    pub coalesce_gap_bytes: usize,
+    /// `[workers]` table: worker pool + backpressure defaults (applied by
+    /// `train`; sweeps model worker scaling through the DES instead).
+    pub workers: WorkerConfig,
+    /// `[cache]` table: block cache + readahead + locality scheduler.
+    pub cache: CacheConfig,
+    /// `[io]` table: intra-fetch decode pipeline. Like `fetch_factor`,
+    /// the app default diverges from the library default on purpose:
+    /// CLI runs get auto decode parallelism + 64 KiB read coalescing
+    /// (both execution-only — the stream is bit-identical), while
+    /// `IoConfig::default()` stays serial/off for library callers.
+    pub io: IoConfig,
 }
 
 impl Default for AppConfig {
     fn default() -> AppConfig {
+        let sampling = SamplingConfig::default();
         AppConfig {
             data_dir: PathBuf::from("data/tahoe-mini"),
             artifacts_dir: PathBuf::from("artifacts"),
             results_dir: PathBuf::from("results"),
-            batch_size: 64,
+            batch_size: sampling.batch_size,
+            fetch_factor: 256,
             seed: 7,
             disk: DiskModel::sata_ssd_hdf5(),
-            cache_mb: 0,
-            cache_block_rows: 256,
-            readahead: false,
-            locality_window: 0,
-            decode_threads: 1,
-            coalesce_gap_bytes: 0,
+            workers: WorkerConfig::default(),
+            cache: CacheConfig::default(),
+            io: IoConfig {
+                decode_threads: 0,          // auto: one per core
+                coalesce_gap_bytes: 64 << 10,
+            },
         }
     }
 }
@@ -69,17 +85,28 @@ impl AppConfig {
             PathBuf::from(doc.str_or("artifacts_dir", &cfg.artifacts_dir.to_string_lossy()));
         cfg.results_dir =
             PathBuf::from(doc.str_or("results_dir", &cfg.results_dir.to_string_lossy()));
-        cfg.batch_size = doc.usize_or("batch_size", cfg.batch_size);
-        cfg.seed = doc.usize_or("seed", cfg.seed as usize) as u64;
+        // [sampling] table (legacy top-level batch_size/seed still accepted)
+        cfg.batch_size = doc.usize_or(
+            "sampling.batch_size",
+            doc.usize_or("batch_size", cfg.batch_size),
+        );
+        cfg.fetch_factor = doc.usize_or("sampling.fetch_factor", cfg.fetch_factor);
+        cfg.seed =
+            doc.usize_or("sampling.seed", doc.usize_or("seed", cfg.seed as usize)) as u64;
+        // [workers] table
+        cfg.workers.num_workers = doc.usize_or("workers.num_workers", cfg.workers.num_workers);
+        cfg.workers.prefetch_depth =
+            doc.usize_or("workers.prefetch_depth", cfg.workers.prefetch_depth);
         // [cache] table: block cache + readahead + scheduler
-        cfg.cache_mb = doc.usize_or("cache.mb", cfg.cache_mb);
-        cfg.cache_block_rows = doc.usize_or("cache.block_rows", cfg.cache_block_rows);
-        cfg.readahead = doc.bool_or("cache.readahead", cfg.readahead);
-        cfg.locality_window = doc.usize_or("cache.locality_window", cfg.locality_window);
+        cfg.cache.bytes = doc.usize_or("cache.mb", cfg.cache.bytes >> 20) << 20;
+        cfg.cache.block_rows = doc.usize_or("cache.block_rows", cfg.cache.block_rows);
+        cfg.cache.readahead = doc.bool_or("cache.readahead", cfg.cache.readahead);
+        cfg.cache.locality_window =
+            doc.usize_or("cache.locality_window", cfg.cache.locality_window);
         // [io] table: decode pipeline + disk-model overrides
-        cfg.decode_threads = doc.usize_or("io.decode_threads", cfg.decode_threads);
-        cfg.coalesce_gap_bytes =
-            doc.usize_or("io.coalesce_gap_bytes", cfg.coalesce_gap_bytes);
+        cfg.io.decode_threads = doc.usize_or("io.decode_threads", cfg.io.decode_threads);
+        cfg.io.coalesce_gap_bytes =
+            doc.usize_or("io.coalesce_gap_bytes", cfg.io.coalesce_gap_bytes);
         let d = &mut cfg.disk;
         d.call_overhead_us = doc.f64_or("io.call_overhead_us", d.call_overhead_us);
         d.run_cost_max_us = doc.f64_or("io.run_cost_max_us", d.run_cost_max_us);
@@ -100,17 +127,104 @@ impl AppConfig {
         d.page_bytes = doc.usize_or("io.page_bytes", d.page_bytes as usize) as u64;
         Ok(cfg)
     }
+
+    /// Render the canonical defaults as TOML, generated from the same
+    /// `Default` impls the builder uses. `configs/default.toml` is this
+    /// document plus comments; a test asserts the two parse identically,
+    /// so the shipped file (and any doc table derived from it) can never
+    /// drift from the code.
+    pub fn defaults_toml() -> String {
+        let d = AppConfig::default();
+        format!(
+            "data_dir = \"{data}\"\n\
+             artifacts_dir = \"{art}\"\n\
+             results_dir = \"{res}\"\n\
+             \n\
+             [sampling]\n\
+             batch_size = {m}\n\
+             fetch_factor = {f}\n\
+             seed = {seed}\n\
+             \n\
+             [workers]\n\
+             num_workers = {nw}\n\
+             prefetch_depth = {pd}\n\
+             \n\
+             [cache]\n\
+             mb = {mb}\n\
+             block_rows = {br}\n\
+             readahead = {ra}\n\
+             locality_window = {lw}\n\
+             \n\
+             [io]\n\
+             decode_threads = {dt}\n\
+             coalesce_gap_bytes = {gap}\n",
+            data = d.data_dir.display(),
+            art = d.artifacts_dir.display(),
+            res = d.results_dir.display(),
+            m = d.batch_size,
+            f = d.fetch_factor,
+            seed = d.seed,
+            nw = d.workers.num_workers,
+            pd = d.workers.prefetch_depth,
+            mb = d.cache.bytes >> 20,
+            br = d.cache.block_rows,
+            ra = d.cache.readahead,
+            lw = d.cache.locality_window,
+            dt = d.io.decode_threads,
+            gap = d.io.coalesce_gap_bytes,
+        )
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn assert_same_loader_keys(a: &AppConfig, b: &AppConfig) {
+        assert_eq!(a.data_dir, b.data_dir);
+        assert_eq!(a.artifacts_dir, b.artifacts_dir);
+        assert_eq!(a.results_dir, b.results_dir);
+        assert_eq!(a.batch_size, b.batch_size);
+        assert_eq!(a.fetch_factor, b.fetch_factor);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.workers, b.workers);
+        assert_eq!(a.cache, b.cache);
+        assert_eq!(a.io, b.io);
+    }
+
     #[test]
     fn defaults() {
         let c = AppConfig::default();
         assert_eq!(c.batch_size, 64);
         assert!(c.data_dir.ends_with("tahoe-mini"));
+        // single source: the app defaults ARE the builder sub-config
+        // defaults (fetch_factor and [io] are the documented CLI
+        // exceptions — paper-production fetch size, decode auto +
+        // coalescing on; both execution-only).
+        assert_eq!(c.workers, WorkerConfig::default());
+        assert_eq!(c.cache, CacheConfig::default());
+        assert_eq!(c.io.decode_threads, 0, "CLI default: auto decode");
+        assert_eq!(c.io.coalesce_gap_bytes, 64 << 10, "CLI default: coalescing on");
+        assert_eq!(c.batch_size, SamplingConfig::default().batch_size);
+    }
+
+    #[test]
+    fn generated_defaults_round_trip() {
+        // defaults_toml() → from_toml() must reproduce AppConfig::default()
+        // exactly: the generated document is the single source docs and
+        // configs/default.toml are held to.
+        let parsed = AppConfig::from_toml(&AppConfig::defaults_toml()).unwrap();
+        assert_same_loader_keys(&parsed, &AppConfig::default());
+    }
+
+    #[test]
+    fn shipped_default_toml_matches_builder_defaults() {
+        // The human-commented configs/default.toml must parse to the same
+        // config as the generated defaults — this is the drift guard the
+        // old flat LoaderConfig doc table lacked.
+        let shipped =
+            AppConfig::from_toml(include_str!("../../../configs/default.toml")).unwrap();
+        assert_same_loader_keys(&shipped, &AppConfig::default());
     }
 
     #[test]
@@ -128,8 +242,8 @@ cell_cpu_us = 5
         )
         .unwrap();
         assert_eq!(c.data_dir, PathBuf::from("/tmp/x"));
-        assert_eq!(c.batch_size, 32);
-        assert_eq!(c.seed, 11);
+        assert_eq!(c.batch_size, 32, "legacy top-level batch_size still works");
+        assert_eq!(c.seed, 11, "legacy top-level seed still works");
         assert_eq!(c.disk.call_overhead_us, 1000.0);
         assert_eq!(c.disk.cell_cpu_us, 5.0);
         // untouched keys keep calibrated defaults
@@ -137,6 +251,28 @@ cell_cpu_us = 5
             c.disk.run_cost_max_us,
             DiskModel::sata_ssd_hdf5().run_cost_max_us
         );
+    }
+
+    #[test]
+    fn sampling_and_workers_tables_parse() {
+        let c = AppConfig::from_toml(
+            r#"
+[sampling]
+batch_size = 128
+fetch_factor = 512
+seed = 3
+
+[workers]
+num_workers = 4
+prefetch_depth = 3
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.batch_size, 128);
+        assert_eq!(c.fetch_factor, 512);
+        assert_eq!(c.seed, 3);
+        assert_eq!(c.workers.num_workers, 4);
+        assert_eq!(c.workers.prefetch_depth, 3);
     }
 
     #[test]
@@ -149,12 +285,12 @@ coalesce_gap_bytes = 65536
 "#,
         )
         .unwrap();
-        assert_eq!(c.decode_threads, 4);
-        assert_eq!(c.coalesce_gap_bytes, 65536);
-        // defaults: serial decode, coalescing off
-        let d = AppConfig::default();
-        assert_eq!(d.decode_threads, 1);
-        assert_eq!(d.coalesce_gap_bytes, 0);
+        assert_eq!(c.io.decode_threads, 4);
+        assert_eq!(c.io.coalesce_gap_bytes, 65536);
+        // library defaults stay conservative: serial decode, coalescing
+        // off (the app-level default enables both; see AppConfig::default)
+        assert_eq!(IoConfig::default().decode_threads, 1);
+        assert_eq!(IoConfig::default().coalesce_gap_bytes, 0);
     }
 
     #[test]
@@ -169,14 +305,14 @@ locality_window = 8
 "#,
         )
         .unwrap();
-        assert_eq!(c.cache_mb, 128);
-        assert_eq!(c.cache_block_rows, 512);
-        assert!(c.readahead);
-        assert_eq!(c.locality_window, 8);
+        assert_eq!(c.cache.bytes, 128 << 20);
+        assert_eq!(c.cache.block_rows, 512);
+        assert!(c.cache.readahead);
+        assert_eq!(c.cache.locality_window, 8);
         // defaults: cache off
         let d = AppConfig::default();
-        assert_eq!(d.cache_mb, 0);
-        assert!(!d.readahead);
+        assert_eq!(d.cache.bytes, 0);
+        assert!(!d.cache.readahead);
     }
 
     #[test]

@@ -1,0 +1,634 @@
+//! The builder-based construction API for [`ScDataset`] — typed
+//! sub-configs, build-time validation with typed errors, and the paper's
+//! composable transform hooks.
+//!
+//! The paper's scDataset is defined as much by its callbacks
+//! (`fetch_callback`, `fetch_transform`, `batch_transform`) as by the
+//! (b, f) sampling parameters. This module is the Rust shape of that API:
+//!
+//! ```text
+//! ScDataset::builder(backend)
+//!     .sampling(SamplingConfig { .. })   // strategy, m, f, seed, drop_last
+//!     .workers(WorkerConfig { .. })      // worker pool + backpressure
+//!     .ddp(DdpConfig { .. })             // rank / world partitioning
+//!     .cache(CacheConfig { .. })         // block cache + readahead + scheduler
+//!     .io(IoConfig { .. })               // decode pool + read coalescing
+//!     .fetch_transform(|view| ..)        // once per fetched block-batch
+//!     .batch_transform(|mb| ..)          // once per emitted minibatch
+//!     .build()?                          // validated; typed BuildError
+//! ```
+//!
+//! Every invalid combination that used to be silent misconfiguration
+//! (readahead without a cache budget, a locality window on a streaming
+//! scan, `rank >= world_size`, a zero batch size, weights that do not
+//! match the dataset, label columns that do not exist) is a
+//! [`BuildError`] at `build()` time.
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::store::Backend;
+
+use super::fetch::{FetchTransform, FetchView};
+use super::loader::{BatchTransform, Hooks, LoaderConfig, Minibatch, ScDataset};
+use super::plan::Strategy;
+
+/// Paper §3.3 sampling parameters: how the epoch order is produced and
+/// partitioned into fetches.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SamplingConfig {
+    /// Epoch-order generator (block shuffling, streaming, weighted, …).
+    pub strategy: Strategy,
+    /// Minibatch size `m`.
+    pub batch_size: usize,
+    /// Fetch factor `f`: one fetch loads `m·f` rows.
+    pub fetch_factor: usize,
+    /// Root seed (rank-0 broadcast value; every rank must agree).
+    pub seed: u64,
+    /// Drop the trailing partial minibatch.
+    pub drop_last: bool,
+}
+
+impl Default for SamplingConfig {
+    fn default() -> SamplingConfig {
+        SamplingConfig {
+            strategy: Strategy::BlockShuffling { block_size: 16 },
+            batch_size: 64,
+            fetch_factor: 16,
+            seed: 0,
+            drop_last: false,
+        }
+    }
+}
+
+/// Worker pool + backpressure (paper Appendix B / E).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkerConfig {
+    /// 0 = synchronous iteration in the caller's thread; >0 spawns that
+    /// many fetch worker threads, each owning a disjoint fetch list.
+    pub num_workers: usize,
+    /// Fetches buffered per worker before backpressure stalls it (the
+    /// PyTorch `prefetch_factor` analogue).
+    pub prefetch_depth: usize,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> WorkerConfig {
+        WorkerConfig {
+            num_workers: 0,
+            prefetch_depth: 2,
+        }
+    }
+}
+
+/// DDP-style fetch partitioning: rank `r` of `world_size` takes every
+/// `world_size`-th fetch (round robin), so ranks exactly partition the
+/// epoch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DdpConfig {
+    pub rank: usize,
+    pub world_size: usize,
+}
+
+impl Default for DdpConfig {
+    fn default() -> DdpConfig {
+        DdpConfig {
+            rank: 0,
+            world_size: 1,
+        }
+    }
+}
+
+/// Block cache + readahead + cache-aware fetch scheduling (`[cache]`
+/// table; `--cache-mb` / `--readahead` / `--locality-window`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheConfig {
+    /// Byte budget for the block-granular LRU cache wrapped around the
+    /// backend; 0 disables caching.
+    pub bytes: usize,
+    /// Rows per cached block — the granularity of both the cache and the
+    /// locality scheduler. Align with the store's chunk size.
+    pub block_rows: usize,
+    /// Asynchronously prefetch the next scheduled fetch's blocks
+    /// (requires `bytes > 0`; enforced at `build()`).
+    pub readahead: bool,
+    /// Cache-aware scheduling window: fetches are *executed* up to this
+    /// many positions out of order to maximize block overlap, then
+    /// delivered in plan order. ≤ 1 disables reordering.
+    pub locality_window: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> CacheConfig {
+        CacheConfig {
+            bytes: 0,
+            block_rows: 256,
+            readahead: false,
+            locality_window: 0,
+        }
+    }
+}
+
+impl CacheConfig {
+    pub fn enabled(&self) -> bool {
+        self.bytes > 0
+    }
+}
+
+/// Execution-only I/O pipeline knobs (`[io]` table; `--decode-threads` /
+/// `--coalesce-gap-bytes`). Changing them never changes the emitted
+/// minibatch stream — only the I/O trace (`tests/determinism.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IoConfig {
+    /// Chunks of one fetch read+decompressed concurrently on the shared
+    /// decode pool. 1 = serial, 0 = auto (one per core).
+    pub decode_threads: usize,
+    /// Merge chunk reads whose file gap is ≤ this many bytes into single
+    /// ranged I/O calls; 0 disables coalescing.
+    pub coalesce_gap_bytes: usize,
+}
+
+impl Default for IoConfig {
+    fn default() -> IoConfig {
+        IoConfig {
+            decode_threads: 1,
+            coalesce_gap_bytes: 0,
+        }
+    }
+}
+
+/// A misconfiguration caught at [`ScDatasetBuilder::build`] time. Every
+/// variant names the offending knob(s) and the fix, instead of the silent
+/// no-op or late runtime failure the flat config allowed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+#[non_exhaustive]
+pub enum BuildError {
+    /// `sampling.batch_size == 0`.
+    ZeroBatchSize,
+    /// `sampling.fetch_factor == 0`.
+    ZeroFetchFactor,
+    /// A block strategy with `block_size == 0`.
+    ZeroBlockSize,
+    /// `ddp.world_size == 0`.
+    ZeroWorldSize,
+    /// `ddp.rank >= ddp.world_size`.
+    RankOutOfRange { rank: usize, world_size: usize },
+    /// `cache.readahead` without a cache budget: the readahead worker
+    /// prefetches *into the cache*, so there is nowhere to put the blocks.
+    ReadaheadWithoutCache,
+    /// A cache budget with `cache.block_rows == 0`.
+    ZeroCacheBlockRows,
+    /// A locality window on a streaming strategy: a sequential scan has
+    /// nothing to reorder, so the window only buys reorder-buffer memory.
+    LocalityWindowWithStreaming { window: usize },
+    /// `Strategy::BlockWeighted` weights whose length is not the row
+    /// count of the backend.
+    WeightsLengthMismatch { expected: usize, got: usize },
+    /// A `label_cols` entry (or `ClassBalanced` label column) that does
+    /// not exist in the backend's obs frame.
+    UnknownLabelColumn { column: String },
+}
+
+impl fmt::Display for BuildError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BuildError::ZeroBatchSize => {
+                write!(f, "sampling.batch_size must be > 0")
+            }
+            BuildError::ZeroFetchFactor => {
+                write!(f, "sampling.fetch_factor must be > 0")
+            }
+            BuildError::ZeroBlockSize => {
+                write!(f, "block strategies need block_size > 0 (b = 1 is true random sampling)")
+            }
+            BuildError::ZeroWorldSize => {
+                write!(f, "ddp.world_size must be > 0 (use the default DdpConfig for single-process)")
+            }
+            BuildError::RankOutOfRange { rank, world_size } => {
+                write!(f, "ddp.rank {rank} out of range for world_size {world_size}")
+            }
+            BuildError::ReadaheadWithoutCache => {
+                write!(
+                    f,
+                    "cache.readahead needs a cache budget (set cache.bytes > 0 / --cache-mb); \
+                     readahead prefetches blocks into the cache"
+                )
+            }
+            BuildError::ZeroCacheBlockRows => {
+                write!(f, "cache.block_rows must be > 0 when the cache is enabled")
+            }
+            BuildError::LocalityWindowWithStreaming { window } => {
+                write!(
+                    f,
+                    "cache.locality_window {window} has no effect on a streaming strategy \
+                     (sequential scans cannot be usefully reordered); drop the window or \
+                     switch to a block strategy"
+                )
+            }
+            BuildError::WeightsLengthMismatch { expected, got } => {
+                write!(
+                    f,
+                    "BlockWeighted weights length {got} != dataset rows {expected}"
+                )
+            }
+            BuildError::UnknownLabelColumn { column } => {
+                write!(f, "label column '{column}' does not exist in the backend's obs frame")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BuildError {}
+
+impl LoaderConfig {
+    /// Validate this configuration against a backend — the check
+    /// [`ScDatasetBuilder::build`] runs.
+    pub fn validate(&self, backend: &dyn Backend) -> Result<(), BuildError> {
+        let s = &self.sampling;
+        if s.batch_size == 0 {
+            return Err(BuildError::ZeroBatchSize);
+        }
+        if s.fetch_factor == 0 {
+            return Err(BuildError::ZeroFetchFactor);
+        }
+        match &s.strategy {
+            Strategy::Streaming { .. } => {
+                if self.cache.locality_window > 1 {
+                    return Err(BuildError::LocalityWindowWithStreaming {
+                        window: self.cache.locality_window,
+                    });
+                }
+            }
+            Strategy::BlockShuffling { block_size } => {
+                if *block_size == 0 {
+                    return Err(BuildError::ZeroBlockSize);
+                }
+            }
+            Strategy::BlockWeighted {
+                block_size,
+                weights,
+            } => {
+                if *block_size == 0 {
+                    return Err(BuildError::ZeroBlockSize);
+                }
+                if weights.len() != backend.n_rows() {
+                    return Err(BuildError::WeightsLengthMismatch {
+                        expected: backend.n_rows(),
+                        got: weights.len(),
+                    });
+                }
+            }
+            Strategy::ClassBalanced {
+                block_size,
+                label_col,
+            } => {
+                if *block_size == 0 {
+                    return Err(BuildError::ZeroBlockSize);
+                }
+                if backend.obs().column(label_col).is_none() {
+                    return Err(BuildError::UnknownLabelColumn {
+                        column: label_col.clone(),
+                    });
+                }
+            }
+        }
+        if self.ddp.world_size == 0 {
+            return Err(BuildError::ZeroWorldSize);
+        }
+        if self.ddp.rank >= self.ddp.world_size {
+            return Err(BuildError::RankOutOfRange {
+                rank: self.ddp.rank,
+                world_size: self.ddp.world_size,
+            });
+        }
+        if self.cache.readahead && !self.cache.enabled() {
+            return Err(BuildError::ReadaheadWithoutCache);
+        }
+        if self.cache.enabled() && self.cache.block_rows == 0 {
+            return Err(BuildError::ZeroCacheBlockRows);
+        }
+        for col in &self.label_cols {
+            if backend.obs().column(col).is_none() {
+                return Err(BuildError::UnknownLabelColumn {
+                    column: col.clone(),
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Builds a validated [`ScDataset`]. Obtain via [`ScDataset::builder`].
+pub struct ScDatasetBuilder {
+    backend: Arc<dyn Backend>,
+    cfg: LoaderConfig,
+    hooks: Hooks,
+}
+
+impl ScDatasetBuilder {
+    pub(crate) fn new(backend: Arc<dyn Backend>) -> ScDatasetBuilder {
+        ScDatasetBuilder {
+            backend,
+            cfg: LoaderConfig::default(),
+            hooks: Hooks::default(),
+        }
+    }
+
+    /// Replace the whole configuration (hooks are kept). Useful when a
+    /// config was assembled elsewhere (e.g. `TrainConfig.loader` or a
+    /// test's base config).
+    pub fn config(mut self, cfg: LoaderConfig) -> ScDatasetBuilder {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Set the sampling sub-config wholesale.
+    pub fn sampling(mut self, sampling: SamplingConfig) -> ScDatasetBuilder {
+        self.cfg.sampling = sampling;
+        self
+    }
+
+    pub fn strategy(mut self, strategy: Strategy) -> ScDatasetBuilder {
+        self.cfg.sampling.strategy = strategy;
+        self
+    }
+
+    pub fn batch_size(mut self, m: usize) -> ScDatasetBuilder {
+        self.cfg.sampling.batch_size = m;
+        self
+    }
+
+    pub fn fetch_factor(mut self, f: usize) -> ScDatasetBuilder {
+        self.cfg.sampling.fetch_factor = f;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> ScDatasetBuilder {
+        self.cfg.sampling.seed = seed;
+        self
+    }
+
+    pub fn drop_last(mut self, drop_last: bool) -> ScDatasetBuilder {
+        self.cfg.sampling.drop_last = drop_last;
+        self
+    }
+
+    /// Replace the obs columns whose codes ride along with each minibatch.
+    pub fn label_cols<I, S>(mut self, cols: I) -> ScDatasetBuilder
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.cfg.label_cols = cols.into_iter().map(Into::into).collect();
+        self
+    }
+
+    /// Append one label column.
+    pub fn label_col(mut self, col: impl Into<String>) -> ScDatasetBuilder {
+        self.cfg.label_cols.push(col.into());
+        self
+    }
+
+    pub fn workers(mut self, workers: WorkerConfig) -> ScDatasetBuilder {
+        self.cfg.workers = workers;
+        self
+    }
+
+    pub fn num_workers(mut self, n: usize) -> ScDatasetBuilder {
+        self.cfg.workers.num_workers = n;
+        self
+    }
+
+    pub fn prefetch_depth(mut self, depth: usize) -> ScDatasetBuilder {
+        self.cfg.workers.prefetch_depth = depth;
+        self
+    }
+
+    pub fn ddp(mut self, ddp: DdpConfig) -> ScDatasetBuilder {
+        self.cfg.ddp = ddp;
+        self
+    }
+
+    pub fn cache(mut self, cache: CacheConfig) -> ScDatasetBuilder {
+        self.cfg.cache = cache;
+        self
+    }
+
+    pub fn io(mut self, io: IoConfig) -> ScDatasetBuilder {
+        self.cfg.io = io;
+        self
+    }
+
+    /// Install the paper's `fetch_transform`: runs **once per fetched
+    /// block-batch**, inside the worker that fetched it, before the
+    /// shuffled split into minibatches — the natural place for
+    /// normalization or tokenization over `m·f` rows at a time. The hook
+    /// may rewrite expression values and label codes but must preserve
+    /// the fetched row count (enforced at runtime). An identity hook
+    /// leaves the emitted stream bit-identical.
+    pub fn fetch_transform<F>(mut self, f: F) -> ScDatasetBuilder
+    where
+        F: Fn(&mut FetchView<'_>) -> anyhow::Result<()> + Send + Sync + 'static,
+    {
+        let hook: FetchTransform = Arc::new(f);
+        self.hooks.fetch_transform = Some(hook);
+        self
+    }
+
+    /// Install the paper's `batch_transform`: runs once per emitted
+    /// [`Minibatch`], after the gather, still inside the worker. The hook
+    /// may rewrite the batch in place but must keep rows/labels aligned
+    /// with the expression matrix (enforced at runtime).
+    pub fn batch_transform<F>(mut self, f: F) -> ScDatasetBuilder
+    where
+        F: Fn(&mut Minibatch) -> anyhow::Result<()> + Send + Sync + 'static,
+    {
+        let hook: BatchTransform = Arc::new(f);
+        self.hooks.batch_transform = Some(hook);
+        self
+    }
+
+    /// Validate the assembled configuration and construct the dataset.
+    pub fn build(self) -> Result<ScDataset, BuildError> {
+        self.cfg.validate(self.backend.as_ref())?;
+        Ok(ScDataset::with_hooks(self.backend, self.cfg, self.hooks))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::{generate, open_collection, TahoeConfig};
+    use crate::util::tempdir::TempDir;
+
+    fn backend() -> (TempDir, Arc<dyn Backend>) {
+        let dir = TempDir::new("builder").unwrap();
+        let mut cfg = TahoeConfig::tiny();
+        cfg.n_plates = 2;
+        cfg.cells_per_plate = 200;
+        generate(&cfg, dir.path()).unwrap();
+        let coll = open_collection(dir.path()).unwrap();
+        (dir, Arc::new(coll))
+    }
+
+    #[test]
+    fn default_builder_builds_and_iterates() {
+        let (_d, b) = backend();
+        let n = b.n_rows();
+        let ds = ScDataset::builder(b).label_col("plate").build().unwrap();
+        let mut rows: Vec<u32> = Vec::new();
+        for mb in ds.epoch(0).unwrap() {
+            rows.extend(mb.unwrap().rows);
+        }
+        rows.sort_unstable();
+        assert_eq!(rows, (0..n as u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn readahead_without_cache_is_typed_error() {
+        let (_d, b) = backend();
+        let err = ScDataset::builder(b)
+            .cache(CacheConfig {
+                readahead: true,
+                ..CacheConfig::default()
+            })
+            .build()
+            .unwrap_err();
+        assert_eq!(err, BuildError::ReadaheadWithoutCache);
+        assert!(err.to_string().contains("cache-mb"), "{err}");
+    }
+
+    #[test]
+    fn locality_window_with_streaming_is_typed_error() {
+        let (_d, b) = backend();
+        let err = ScDataset::builder(b)
+            .strategy(Strategy::Streaming { shuffle_buffer: 0 })
+            .cache(CacheConfig {
+                bytes: 1 << 20,
+                locality_window: 8,
+                ..CacheConfig::default()
+            })
+            .build()
+            .unwrap_err();
+        assert_eq!(
+            err,
+            BuildError::LocalityWindowWithStreaming { window: 8 }
+        );
+    }
+
+    #[test]
+    fn ddp_bounds_are_typed_errors() {
+        let (_d, b) = backend();
+        let err = ScDataset::builder(b.clone())
+            .ddp(DdpConfig {
+                rank: 0,
+                world_size: 0,
+            })
+            .build()
+            .unwrap_err();
+        assert_eq!(err, BuildError::ZeroWorldSize);
+        let err = ScDataset::builder(b)
+            .ddp(DdpConfig {
+                rank: 3,
+                world_size: 3,
+            })
+            .build()
+            .unwrap_err();
+        assert_eq!(
+            err,
+            BuildError::RankOutOfRange {
+                rank: 3,
+                world_size: 3
+            }
+        );
+    }
+
+    #[test]
+    fn zero_sizes_are_typed_errors() {
+        let (_d, b) = backend();
+        let err = ScDataset::builder(b.clone()).batch_size(0).build().unwrap_err();
+        assert_eq!(err, BuildError::ZeroBatchSize);
+        let err = ScDataset::builder(b.clone())
+            .fetch_factor(0)
+            .build()
+            .unwrap_err();
+        assert_eq!(err, BuildError::ZeroFetchFactor);
+        let err = ScDataset::builder(b.clone())
+            .strategy(Strategy::BlockShuffling { block_size: 0 })
+            .build()
+            .unwrap_err();
+        assert_eq!(err, BuildError::ZeroBlockSize);
+        let err = ScDataset::builder(b)
+            .cache(CacheConfig {
+                bytes: 1 << 20,
+                block_rows: 0,
+                ..CacheConfig::default()
+            })
+            .build()
+            .unwrap_err();
+        assert_eq!(err, BuildError::ZeroCacheBlockRows);
+    }
+
+    #[test]
+    fn weights_and_label_columns_are_checked_against_backend() {
+        let (_d, b) = backend();
+        let n = b.n_rows();
+        let err = ScDataset::builder(b.clone())
+            .strategy(Strategy::BlockWeighted {
+                block_size: 4,
+                weights: vec![1.0; n + 5],
+            })
+            .build()
+            .unwrap_err();
+        assert_eq!(
+            err,
+            BuildError::WeightsLengthMismatch {
+                expected: n,
+                got: n + 5
+            }
+        );
+        let err = ScDataset::builder(b.clone())
+            .label_col("no_such_column")
+            .build()
+            .unwrap_err();
+        assert_eq!(
+            err,
+            BuildError::UnknownLabelColumn {
+                column: "no_such_column".into()
+            }
+        );
+        let err = ScDataset::builder(b)
+            .strategy(Strategy::ClassBalanced {
+                block_size: 2,
+                label_col: "nope".into(),
+            })
+            .build()
+            .unwrap_err();
+        assert_eq!(
+            err,
+            BuildError::UnknownLabelColumn {
+                column: "nope".into()
+            }
+        );
+    }
+
+    #[test]
+    fn build_error_converts_to_anyhow() {
+        let (_d, b) = backend();
+        let run = || -> anyhow::Result<ScDataset> {
+            Ok(ScDataset::builder(b.clone()).batch_size(0).build()?)
+        };
+        let err = run().unwrap_err().to_string();
+        assert!(err.contains("batch_size"), "{err}");
+    }
+
+    #[test]
+    fn sub_config_defaults_match_loader_defaults() {
+        let cfg = LoaderConfig::default();
+        assert_eq!(cfg.sampling, SamplingConfig::default());
+        assert_eq!(cfg.workers, WorkerConfig::default());
+        assert_eq!(cfg.ddp, DdpConfig::default());
+        assert_eq!(cfg.cache, CacheConfig::default());
+        assert_eq!(cfg.io, IoConfig::default());
+    }
+}

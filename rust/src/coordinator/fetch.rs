@@ -13,6 +13,49 @@ use anyhow::Result;
 use crate::store::{Backend, BufferPool, CsrBatch, IoReport};
 use crate::util::rng::Rng;
 
+/// Mutable view of one fetched block-batch, handed to a
+/// [`fetch_transform`] hook after the backend load and the line-9
+/// reshuffle bookkeeping, **before** the split into minibatches.
+///
+/// The view exposes the `m·f`-row fetch the way the paper's
+/// `fetch_transform` sees an AnnData slice: expression values and label
+/// codes are mutable (normalize, tokenize, remap), row identity is not.
+/// `x` holds the **unique** sorted rows the backend returned — each
+/// stored row is transformed exactly once even when weighted sampling
+/// repeats it in the emitted multiset.
+///
+/// [`fetch_transform`]: super::builder::ScDatasetBuilder::fetch_transform
+pub struct FetchView<'a> {
+    /// Expression rows for the unique sorted row ids (mutable; the row
+    /// *count* must be preserved — enforced after the hook runs).
+    pub x: &'a mut CsrBatch,
+    /// Global row ids aligned with `x` (sorted, de-duplicated).
+    pub unique_rows: &'a [u32],
+    /// The emitted (post-shuffle) row multiset this fetch will split
+    /// into minibatches.
+    pub rows: &'a [u32],
+    /// Label codes aligned with `rows`, one vec per requested obs column.
+    pub labels: &'a mut [Vec<u16>],
+}
+
+impl FetchView<'_> {
+    /// Unique stored rows in `x`.
+    pub fn n_unique(&self) -> usize {
+        self.unique_rows.len()
+    }
+
+    /// Rows this fetch will emit (the multiset size).
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+/// The paper's `fetch_transform` hook: runs once per fetched block-batch
+/// inside the worker that fetched it. Shared across workers, hence
+/// `Send + Sync`.
+pub type FetchTransform =
+    Arc<dyn Fn(&mut FetchView<'_>) -> Result<()> + Send + Sync>;
+
 /// A loaded, reshuffled fetch buffer ready to be split into minibatches.
 ///
 /// The reshuffle is **lazy** (the fused gather): instead of materializing
@@ -114,6 +157,7 @@ pub fn finish_fetch(
     backend: &Arc<dyn Backend>,
     label_cols: &[String],
     mut shuffle: Option<&mut Rng>,
+    transform: Option<&FetchTransform>,
 ) -> Result<FetchedChunk> {
     let ExecutedFetch {
         sorted,
@@ -124,9 +168,38 @@ pub fn finish_fetch(
         rng.shuffle(&mut positions);
     }
     let rows: Vec<u32> = positions.iter().map(|&p| sorted[p as usize]).collect();
-    let labels = backend.obs().gather(label_cols, &rows)?;
+    let mut labels = backend.obs().gather(label_cols, &rows)?;
+    let mut x = fetched.x;
+    if let Some(t) = transform {
+        let n_unique = x.n_rows;
+        let mut view = FetchView {
+            x: &mut x,
+            unique_rows: &sorted,
+            rows: &rows,
+            labels: &mut labels,
+        };
+        t(&mut view)?;
+        anyhow::ensure!(
+            x.n_rows == n_unique,
+            "fetch_transform must preserve the fetched row count \
+             (got {} rows, expected {n_unique}); hooks may rewrite values \
+             and labels, not add or drop rows",
+            x.n_rows
+        );
+        anyhow::ensure!(
+            labels.iter().all(|col| col.len() == rows.len()),
+            "fetch_transform must keep label columns aligned with the {} \
+             emitted rows (got lengths {:?})",
+            rows.len(),
+            labels.iter().map(Vec::len).collect::<Vec<_>>()
+        );
+        // A hook that rewrites sparsity must leave a structurally valid
+        // CSR behind; catching it here names the culprit instead of
+        // corrupting the downstream gather.
+        x.validate()?;
+    }
     Ok(FetchedChunk {
-        unique: fetched.x,
+        unique: x,
         positions,
         rows,
         labels,
@@ -140,14 +213,17 @@ pub fn finish_fetch(
 ///   blocks).
 /// * `shuffle` — `Some(rng)` applies the line-9 in-memory reshuffle;
 ///   `None` keeps stream order (pure streaming).
+/// * `transform` — optional `fetch_transform` hook applied to the loaded
+///   block-batch before it is split.
 pub fn run_fetch(
     backend: &Arc<dyn Backend>,
     indices: &[u32],
     label_cols: &[String],
     shuffle: Option<&mut Rng>,
+    transform: Option<&FetchTransform>,
 ) -> Result<FetchedChunk> {
     let ex = execute_fetch(backend, indices)?;
-    finish_fetch(ex, backend, label_cols, shuffle)
+    finish_fetch(ex, backend, label_cols, shuffle, transform)
 }
 
 #[cfg(test)]
@@ -172,7 +248,7 @@ mod tests {
         let indices = vec![10u32, 700, 10, 3, 999, 700];
         let mut rng = Rng::new(5);
         let cols = vec!["plate".to_string(), "drug".to_string()];
-        let chunk = run_fetch(&b, &indices, &cols, Some(&mut rng)).unwrap();
+        let chunk = run_fetch(&b, &indices, &cols, Some(&mut rng), None).unwrap();
         assert_eq!(chunk.n_rows(), 6);
         let mut got = chunk.rows.clone();
         got.sort_unstable();
@@ -213,7 +289,7 @@ mod tests {
     fn no_shuffle_keeps_order() {
         let (_d, b) = backend();
         let indices = vec![5u32, 6, 7, 8];
-        let chunk = run_fetch(&b, &indices, &[], None).unwrap();
+        let chunk = run_fetch(&b, &indices, &[], None, None).unwrap();
         assert_eq!(chunk.rows, indices);
         assert!(chunk.labels.is_empty());
     }
@@ -224,8 +300,8 @@ mod tests {
         let indices: Vec<u32> = (0..128).collect();
         let mut r1 = Rng::new(9);
         let mut r2 = Rng::new(9);
-        let a = run_fetch(&b, &indices, &[], Some(&mut r1)).unwrap();
-        let c = run_fetch(&b, &indices, &[], Some(&mut r2)).unwrap();
+        let a = run_fetch(&b, &indices, &[], Some(&mut r1), None).unwrap();
+        let c = run_fetch(&b, &indices, &[], Some(&mut r2), None).unwrap();
         assert_eq!(a.rows, c.rows);
         assert_ne!(a.rows, indices, "shuffle must permute");
     }
@@ -233,10 +309,48 @@ mod tests {
     #[test]
     fn io_reports_dedup_rows() {
         let (_d, b) = backend();
-        let chunk = run_fetch(&b, &[4, 4, 4, 4], &[], None).unwrap();
+        let chunk = run_fetch(&b, &[4, 4, 4, 4], &[], None, None).unwrap();
         assert_eq!(chunk.io.rows, 1, "backend sees unique rows only");
         assert_eq!(chunk.n_rows(), 4, "multiset is reconstructed");
         assert_eq!(chunk.unique.n_rows, 1, "only the unique row is held");
         assert_eq!(chunk.materialize().n_rows, 4);
+    }
+
+    #[test]
+    fn fetch_transform_rewrites_unique_rows_once() {
+        let (_d, b) = backend();
+        let indices = vec![3u32, 9, 3, 12];
+        let base = run_fetch(&b, &indices, &[], None, None).unwrap();
+        let t: FetchTransform = Arc::new(|view: &mut FetchView<'_>| {
+            assert_eq!(view.n_unique(), 3);
+            assert_eq!(view.n_rows(), 4);
+            for v in view.x.data.iter_mut() {
+                *v = v.ln_1p();
+            }
+            Ok(())
+        });
+        let got = run_fetch(&b, &indices, &[], None, Some(&t)).unwrap();
+        assert_eq!(got.rows, base.rows, "row identity is immutable");
+        let (bx, gx) = (base.materialize(), got.materialize());
+        assert_eq!(bx.indices, gx.indices, "sparsity pattern untouched");
+        for (bv, gv) in bx.data.iter().zip(&gx.data) {
+            assert!((bv.ln_1p() - gv).abs() < 1e-6, "{bv} vs {gv}");
+        }
+    }
+
+    #[test]
+    fn fetch_transform_must_preserve_row_count() {
+        let (_d, b) = backend();
+        let t: FetchTransform = Arc::new(|view: &mut FetchView<'_>| {
+            let n = view.x.n_rows;
+            view.x.indptr.truncate(n); // drop a row
+            view.x.n_rows = n - 1;
+            Ok(())
+        });
+        let err = run_fetch(&b, &[1, 2, 3], &[], None, Some(&t)).unwrap_err();
+        assert!(
+            err.to_string().contains("preserve the fetched row count"),
+            "{err}"
+        );
     }
 }

@@ -1,26 +1,72 @@
 //! `ScDataset` — the user-facing loader (the PyTorch `IterableDataset`
-//! analogue) tying the plan, fetch execution, shuffle buffer, worker pool
-//! and DDP partitioning together.
+//! analogue) tying the plan, fetch execution, transform hooks, shuffle
+//! buffer, worker pool and DDP partitioning together.
 //!
-//! * `num_workers == 0`: synchronous iteration in the caller's thread
-//!   (deterministic order — plan order).
-//! * `num_workers > 0`: a thread pool; each worker owns a disjoint fetch
-//!   list (Appendix B round-robin) and streams minibatches into a bounded
-//!   channel — the bound is the backpressure that keeps prefetch memory at
-//!   `prefetch_depth` fetches per worker, like PyTorch's `prefetch_factor`.
+//! # Constructing a loader
+//!
+//! The public construction path is [`ScDataset::builder`]: typed
+//! sub-configs ([`SamplingConfig`], [`WorkerConfig`], [`DdpConfig`],
+//! [`CacheConfig`], [`IoConfig`]), validated at `build()` time with typed
+//! [`BuildError`]s, plus the paper's transform hooks (`fetch_transform`,
+//! `batch_transform`). [`LoaderConfig`] is the assembled configuration the
+//! builder produces; construct it only through the builder (or by mutating
+//! [`LoaderConfig::default`]) — never by struct literal outside this
+//! module.
+//!
+//! ```
+//! use scdata::coordinator::{CacheConfig, LoaderConfig, Strategy};
+//!
+//! // The flags `--cache-mb 64 --readahead --locality-window 8` map onto
+//! // the typed cache sub-config:
+//! let mut cfg = LoaderConfig::default();
+//! cfg.sampling.strategy = Strategy::BlockShuffling { block_size: 16 };
+//! cfg.cache = CacheConfig {
+//!     bytes: 64 << 20,     // --cache-mb 64
+//!     readahead: true,     // --readahead
+//!     locality_window: 8,  // --locality-window 8
+//!     ..CacheConfig::default()
+//! };
+//! assert_eq!(cfg.cache.bytes, 64 << 20);
+//! ```
+//!
+//! The canonical defaults (one source for code, docs and
+//! `configs/default.toml`) are rendered by
+//! [`crate::config::AppConfig::defaults_toml`].
+//!
+//! # Execution model
+//!
+//! * `workers.num_workers == 0`: synchronous iteration in the caller's
+//!   thread (deterministic order — plan order).
+//! * `workers.num_workers > 0`: a thread pool; each worker owns a disjoint
+//!   fetch list (Appendix B round-robin) and streams minibatches into a
+//!   bounded channel — the bound is the backpressure that keeps prefetch
+//!   memory at `prefetch_depth` fetches per worker, like PyTorch's
+//!   `prefetch_factor`.
+//!
+//! Hooks run **inside** the worker that fetched the data:
+//! `fetch_transform` once per fetched block-batch (before the shuffled
+//! split), `batch_transform` once per emitted minibatch (after the
+//! gather). Identity hooks leave the stream bit-identical
+//! (`tests/determinism.rs`).
+//!
+//! [`BuildError`]: super::builder::BuildError
 
 use std::collections::HashMap;
+use std::fmt;
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::store::cache::{CacheConfig, CacheStats, CachingBackend};
+use crate::store::cache::{CacheConfig as BlockCacheConfig, CacheStats, CachingBackend};
 use crate::store::{Backend, CsrBatch, IoPipeline, IoReport};
 use crate::util::rng::Rng;
 
+use super::builder::{
+    CacheConfig, DdpConfig, IoConfig, SamplingConfig, ScDatasetBuilder, WorkerConfig,
+};
 use super::ddp::assigned_fetches;
-use super::fetch::{execute_fetch, finish_fetch, ExecutedFetch};
+use super::fetch::{execute_fetch, finish_fetch, ExecutedFetch, FetchTransform};
 use super::plan::{build_plan, locality_schedule, EpochPlan, Strategy};
 
 /// One training minibatch.
@@ -36,107 +82,81 @@ pub struct Minibatch {
     pub labels: Vec<Vec<u16>>,
 }
 
-/// Loader configuration (paper §3.3 parameters plus runtime knobs).
-///
-/// # Example: enable the block cache + cache-aware scheduling
-///
-/// The CLI flags `--cache-mb 64 --readahead --locality-window 8` map onto
-/// the config like this:
-///
-/// ```
-/// use scdata::coordinator::{LoaderConfig, Strategy};
-///
-/// let cfg = LoaderConfig {
-///     strategy: Strategy::BlockShuffling { block_size: 16 },
-///     cache_bytes: 64 << 20,  // --cache-mb 64
-///     readahead: true,        // --readahead
-///     locality_window: 8,     // --locality-window 8
-///     ..Default::default()
-/// };
-/// assert_eq!(cfg.cache_bytes, 64 << 20);
-/// ```
-///
-/// With identical seeds, the cache and scheduler change only the I/O
-/// trace — never the emitted minibatch stream (`tests/determinism.rs`).
-#[derive(Clone, Debug)]
-pub struct LoaderConfig {
-    pub strategy: Strategy,
-    /// Minibatch size `m`.
-    pub batch_size: usize,
-    /// Fetch factor `f`.
-    pub fetch_factor: usize,
-    /// Obs columns whose codes ride along with each minibatch.
-    pub label_cols: Vec<String>,
-    /// Root seed (rank-0 broadcast value).
-    pub seed: u64,
-    /// 0 = synchronous; >0 spawns that many fetch worker threads.
-    pub num_workers: usize,
-    /// Fetches buffered per worker before backpressure stalls it.
-    pub prefetch_depth: usize,
-    /// Drop the trailing partial fetch.
-    pub drop_last: bool,
-    /// DDP rank / world size (fetch-level round robin).
-    pub rank: usize,
-    pub world_size: usize,
-    /// Byte budget for the block-granular LRU cache wrapped around the
-    /// backend (`--cache-mb`); 0 disables caching. The cache is shared by
-    /// all workers and persists across epochs.
-    pub cache_bytes: usize,
-    /// Rows per cached block — the granularity of both the cache and the
-    /// locality scheduler. Align with the store's chunk size for best
-    /// reuse.
-    pub cache_block_rows: usize,
-    /// Asynchronously prefetch the next scheduled fetch's blocks into the
-    /// cache (`--readahead`; requires `cache_bytes > 0`).
-    pub readahead: bool,
-    /// Cache-aware fetch scheduling window (`--locality-window`): fetches
-    /// are *executed* up to this many positions out of order to maximize
-    /// block overlap between consecutive backend reads, then delivered in
-    /// plan order. ≤ 1 disables reordering. Works without the cache too
-    /// (temporal locality still helps the OS page cache), but pays a
-    /// reorder buffer of up to `window + 1` decoded fetches per worker —
-    /// most useful together with `cache_bytes > 0`.
-    pub locality_window: usize,
-    /// Intra-fetch decode parallelism (`--decode-threads`): how many of
-    /// one fetch's chunks read+decompress concurrently on the shared
-    /// decode pool. `1` = serial (default), `0` = auto (one per core).
-    /// Execution-only — the emitted minibatch stream is bit-identical for
-    /// any setting (`tests/determinism.rs`).
-    pub decode_threads: usize,
-    /// Gap tolerance in bytes for merging near-adjacent chunk reads into
-    /// single ranged I/O calls (`--coalesce-gap-bytes`); `0` disables
-    /// coalescing. Also execution-only.
-    pub coalesce_gap_bytes: usize,
+/// The paper's `batch_transform` hook: runs once per emitted minibatch,
+/// after the gather, inside the worker. Shared across workers, hence
+/// `Send + Sync`.
+pub type BatchTransform = Arc<dyn Fn(&mut Minibatch) -> Result<()> + Send + Sync>;
+
+/// The transform hooks installed by the builder. Both default to `None`
+/// (identity), which is guaranteed not to change the emitted stream.
+#[derive(Clone, Default)]
+pub struct Hooks {
+    /// Once per fetched block-batch, before the shuffled split.
+    pub fetch_transform: Option<FetchTransform>,
+    /// Once per emitted minibatch, after the gather.
+    pub batch_transform: Option<BatchTransform>,
 }
 
-/// The execution-only pipeline knobs a config maps onto the backend.
-fn io_pipeline(cfg: &LoaderConfig) -> IoPipeline {
-    IoPipeline {
-        decode_threads: cfg.decode_threads,
-        coalesce_gap_bytes: cfg.coalesce_gap_bytes as u64,
+impl fmt::Debug for Hooks {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Hooks")
+            .field("fetch_transform", &self.fetch_transform.is_some())
+            .field("batch_transform", &self.batch_transform.is_some())
+            .finish()
     }
+}
+
+/// Loader configuration: the paper's §3.3 parameters plus runtime knobs,
+/// grouped into the typed sub-configs the builder exposes.
+///
+/// Assemble through [`ScDataset::builder`] (validated) or by mutating
+/// [`LoaderConfig::default`]; the struct layout is an implementation
+/// detail of this module.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoaderConfig {
+    /// Strategy, batch size `m`, fetch factor `f`, seed, drop_last.
+    pub sampling: SamplingConfig,
+    /// Obs columns whose codes ride along with each minibatch.
+    pub label_cols: Vec<String>,
+    /// Worker pool + backpressure.
+    pub workers: WorkerConfig,
+    /// DDP rank / world size (fetch-level round robin).
+    pub ddp: DdpConfig,
+    /// Block cache + readahead + cache-aware fetch scheduling.
+    pub cache: CacheConfig,
+    /// Execution-only decode/coalescing pipeline.
+    pub io: IoConfig,
 }
 
 impl Default for LoaderConfig {
     fn default() -> LoaderConfig {
         LoaderConfig {
-            strategy: Strategy::BlockShuffling { block_size: 16 },
-            batch_size: 64,
-            fetch_factor: 16,
+            sampling: SamplingConfig::default(),
             label_cols: Vec::new(),
-            seed: 0,
-            num_workers: 0,
-            prefetch_depth: 2,
-            drop_last: false,
-            rank: 0,
-            world_size: 1,
-            cache_bytes: 0,
-            cache_block_rows: 256,
-            readahead: false,
-            locality_window: 0,
-            decode_threads: 1,
-            coalesce_gap_bytes: 0,
+            workers: WorkerConfig::default(),
+            ddp: DdpConfig::default(),
+            cache: CacheConfig::default(),
+            io: IoConfig::default(),
         }
+    }
+}
+
+impl LoaderConfig {
+    /// A config carrying the given sampling parameters and defaults for
+    /// everything else (the `TrainConfig` construction path).
+    pub fn from_sampling(sampling: SamplingConfig) -> LoaderConfig {
+        LoaderConfig {
+            sampling,
+            ..LoaderConfig::default()
+        }
+    }
+}
+
+/// The execution-only pipeline knobs a config maps onto the backend.
+fn io_pipeline(cfg: &LoaderConfig) -> IoPipeline {
+    IoPipeline {
+        decode_threads: cfg.io.decode_threads,
+        coalesce_gap_bytes: cfg.io.coalesce_gap_bytes as u64,
     }
 }
 
@@ -157,21 +177,50 @@ pub struct LoadStats {
 /// The loader.
 pub struct ScDataset {
     /// The fetch target: the raw backend, or the [`CachingBackend`]
-    /// wrapped around it when `cache_bytes > 0`.
+    /// wrapped around it when `cache.bytes > 0`.
     backend: Arc<dyn Backend>,
     cache: Option<Arc<CachingBackend>>,
     cfg: LoaderConfig,
+    hooks: Hooks,
+}
+
+impl fmt::Debug for ScDataset {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ScDataset")
+            .field("backend", &self.backend.name())
+            .field("cached", &self.cache.is_some())
+            .field("cfg", &self.cfg)
+            .field("hooks", &self.hooks)
+            .finish()
+    }
 }
 
 impl ScDataset {
+    /// Start building a validated loader over `backend` — the public
+    /// construction path (see [`ScDatasetBuilder`]).
+    pub fn builder(backend: Arc<dyn Backend>) -> ScDatasetBuilder {
+        ScDatasetBuilder::new(backend)
+    }
+
+    /// Construct without validation or hooks. Prefer [`ScDataset::builder`];
+    /// this is the internal escape hatch the builder and this module's
+    /// tests use.
     pub fn new(backend: Arc<dyn Backend>, cfg: LoaderConfig) -> ScDataset {
-        let cache = if cfg.cache_bytes > 0 {
+        Self::with_hooks(backend, cfg, Hooks::default())
+    }
+
+    pub(crate) fn with_hooks(
+        backend: Arc<dyn Backend>,
+        cfg: LoaderConfig,
+        hooks: Hooks,
+    ) -> ScDataset {
+        let cache = if cfg.cache.enabled() {
             Some(Arc::new(CachingBackend::new(
                 backend.clone(),
-                CacheConfig {
-                    capacity_bytes: cfg.cache_bytes,
-                    block_rows: cfg.cache_block_rows.max(1),
-                    readahead: cfg.readahead,
+                BlockCacheConfig {
+                    capacity_bytes: cfg.cache.bytes,
+                    block_rows: cfg.cache.block_rows.max(1),
+                    readahead: cfg.cache.readahead,
                 },
             )))
         } else {
@@ -188,6 +237,7 @@ impl ScDataset {
             backend,
             cache,
             cfg,
+            hooks,
         }
     }
 
@@ -214,14 +264,14 @@ impl ScDataset {
     /// Build this epoch's plan (identical on every rank).
     pub fn plan(&self, epoch: u64) -> Result<EpochPlan> {
         build_plan(
-            &self.cfg.strategy,
+            &self.cfg.sampling.strategy,
             self.backend.n_rows(),
-            self.cfg.batch_size,
-            self.cfg.fetch_factor,
-            self.cfg.seed,
+            self.cfg.sampling.batch_size,
+            self.cfg.sampling.fetch_factor,
+            self.cfg.sampling.seed,
             epoch,
             Some(self.backend.obs()),
-            self.cfg.drop_last,
+            self.cfg.sampling.drop_last,
         )
     }
 
@@ -236,17 +286,18 @@ impl ScDataset {
         // datasets over one backend makes read-call accounting reflect a
         // mix of both configs.
         self.backend.set_io_pipeline(io_pipeline(&self.cfg));
+        let sampling = &self.cfg.sampling;
         let plan = Arc::new(self.plan(epoch)?);
         let n_fetches = plan.n_fetches();
         let stats = Arc::new(Mutex::new(LoadStats::default()));
         let use_buffer = matches!(
-            self.cfg.strategy,
+            sampling.strategy,
             Strategy::Streaming { shuffle_buffer } if shuffle_buffer > 0
         );
-        let shuffle_in_fetch = !matches!(self.cfg.strategy, Strategy::Streaming { .. });
-        let window = self.cfg.locality_window;
-        let block_rows = self.cfg.cache_block_rows.max(1);
-        let readahead = self.cfg.readahead && self.cache.is_some();
+        let shuffle_in_fetch = !matches!(sampling.strategy, Strategy::Streaming { .. });
+        let window = self.cfg.cache.locality_window;
+        let block_rows = self.cfg.cache.block_rows.max(1);
+        let readahead = self.cfg.cache.readahead && self.cache.is_some();
         // Shared constructor: the cache-aware scheduler picks the
         // *execution* order within the bounded window; delivery stays in
         // plan order so the emitted stream is schedule-independent.
@@ -269,27 +320,43 @@ impl ScDataset {
                 label_cols: self.cfg.label_cols.clone(),
                 rng,
                 shuffle_in_fetch,
+                fetch_transform: self.hooks.fetch_transform.clone(),
                 stats: stats.clone(),
             }
         };
-        if self.cfg.num_workers == 0 {
-            let fetch_ids = assigned_fetches(n_fetches, self.cfg.rank, self.cfg.world_size, 0, 1);
-            let source = make_stream(fetch_ids, Rng::new(self.cfg.seed).fork(0x10_000 + epoch));
+        if self.cfg.workers.num_workers == 0 {
+            let fetch_ids = assigned_fetches(
+                n_fetches,
+                self.cfg.ddp.rank,
+                self.cfg.ddp.world_size,
+                0,
+                1,
+            );
+            let source = make_stream(fetch_ids, Rng::new(sampling.seed).fork(0x10_000 + epoch));
             let inner: Box<dyn Iterator<Item = Result<Minibatch>> + Send> = if use_buffer {
-                let cap = match self.cfg.strategy {
+                let cap = match sampling.strategy {
                     Strategy::Streaming { shuffle_buffer } => shuffle_buffer,
                     _ => unreachable!(),
                 };
                 Box::new(ShuffleBufferIter::new(
                     source,
-                    self.cfg.batch_size,
+                    sampling.batch_size,
                     cap,
-                    Rng::new(self.cfg.seed).fork(0x20_000 + epoch),
-                    self.cfg.drop_last,
+                    Rng::new(sampling.seed).fork(0x20_000 + epoch),
+                    sampling.drop_last,
                 ))
             } else {
-                Box::new(SplitIter::new(source, self.cfg.batch_size, self.cfg.drop_last))
+                Box::new(SplitIter::new(
+                    source,
+                    sampling.batch_size,
+                    sampling.drop_last,
+                ))
             };
+            let inner: Box<dyn Iterator<Item = Result<Minibatch>> + Send> =
+                match self.hooks.batch_transform.clone() {
+                    Some(hook) => Box::new(BatchHookIter { inner, hook }),
+                    None => inner,
+                };
             return Ok(EpochIter {
                 inner,
                 stats,
@@ -298,33 +365,39 @@ impl ScDataset {
         }
 
         // Worker-pool path.
-        let workers = self.cfg.num_workers;
-        let cap = (self.cfg.prefetch_depth.max(1)) * workers * self.cfg.fetch_factor;
+        let workers = self.cfg.workers.num_workers;
+        let cap = (self.cfg.workers.prefetch_depth.max(1)) * workers * sampling.fetch_factor;
         let (tx, rx) = sync_channel::<Result<Minibatch>>(cap);
         let mut handles = Vec::new();
         for w in 0..workers {
-            let fetch_ids =
-                assigned_fetches(n_fetches, self.cfg.rank, self.cfg.world_size, w, workers);
+            let fetch_ids = assigned_fetches(
+                n_fetches,
+                self.cfg.ddp.rank,
+                self.cfg.ddp.world_size,
+                w,
+                workers,
+            );
             // Distinct shuffle stream per (epoch, worker) — same for
             // every rank.
             let source = make_stream(
                 fetch_ids,
-                Rng::new(self.cfg.seed).fork(0x10_000 + epoch).fork(w as u64),
+                Rng::new(sampling.seed).fork(0x10_000 + epoch).fork(w as u64),
             );
             let tx = tx.clone();
-            let batch_size = self.cfg.batch_size;
-            let drop_last = self.cfg.drop_last;
-            let buffer_cap = match self.cfg.strategy {
+            let batch_size = sampling.batch_size;
+            let drop_last = sampling.drop_last;
+            let buffer_cap = match sampling.strategy {
                 Strategy::Streaming { shuffle_buffer } if shuffle_buffer > 0 => {
                     Some(shuffle_buffer)
                 }
                 _ => None,
             };
-            let seed = self.cfg.seed;
+            let seed = sampling.seed;
+            let batch_hook = self.hooks.batch_transform.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("scdata-worker-{w}"))
                 .spawn(move || {
-                    let iter: Box<dyn Iterator<Item = Result<Minibatch>>> =
+                    let inner: Box<dyn Iterator<Item = Result<Minibatch>>> =
                         if let Some(cap) = buffer_cap {
                             Box::new(ShuffleBufferIter::new(
                                 source,
@@ -336,6 +409,10 @@ impl ScDataset {
                         } else {
                             Box::new(SplitIter::new(source, batch_size, drop_last))
                         };
+                    let iter: Box<dyn Iterator<Item = Result<Minibatch>>> = match batch_hook {
+                        Some(hook) => Box::new(BatchHookIter { inner, hook }),
+                        None => inner,
+                    };
                     for item in iter {
                         // A send error means the consumer hung up: stop.
                         if tx.send(item).is_err() {
@@ -395,13 +472,43 @@ impl Iterator for ChannelIter {
     }
 }
 
+/// Applies the `batch_transform` hook to every emitted minibatch and
+/// enforces that the hook kept rows/labels aligned with the expression
+/// matrix.
+struct BatchHookIter<I> {
+    inner: I,
+    hook: BatchTransform,
+}
+
+impl<I: Iterator<Item = Result<Minibatch>>> Iterator for BatchHookIter<I> {
+    type Item = Result<Minibatch>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        match self.inner.next()? {
+            Err(e) => Some(Err(e)),
+            Ok(mut mb) => Some((self.hook)(&mut mb).and_then(|()| {
+                let n = mb.x.n_rows;
+                anyhow::ensure!(
+                    mb.rows.len() == n && mb.labels.iter().all(|l| l.len() == n),
+                    "batch_transform broke row/label alignment: x has {n} rows, \
+                     rows has {}, label lengths {:?}",
+                    mb.rows.len(),
+                    mb.labels.iter().map(Vec::len).collect::<Vec<_>>()
+                );
+                Ok(mb)
+            })),
+        }
+    }
+}
+
 /// Streams fetched (and optionally reshuffled) chunks from the plan.
 ///
 /// Fetches are *executed* against the backend in `exec_order` (the
 /// cache-aware schedule) but *delivered* in `fetch_ids` (plan) order;
 /// out-of-order completions wait in `pending` (bounded by the locality
-/// window). The line-9 shuffle RNG is consumed at delivery time, so the
-/// emitted minibatch stream is identical whatever the execution order.
+/// window). The line-9 shuffle RNG — and the `fetch_transform` hook —
+/// are consumed at delivery time, so the emitted minibatch stream is
+/// identical whatever the execution order.
 struct FetchStream {
     backend: Arc<dyn Backend>,
     /// Set when caching is enabled — the readahead hook lives here.
@@ -420,6 +527,8 @@ struct FetchStream {
     label_cols: Vec<String>,
     rng: Rng,
     shuffle_in_fetch: bool,
+    /// The paper's `fetch_transform` hook (identity when `None`).
+    fetch_transform: Option<FetchTransform>,
     stats: Arc<Mutex<LoadStats>>,
 }
 
@@ -465,6 +574,7 @@ impl FetchStream {
             } else {
                 None
             },
+            self.fetch_transform.as_ref(),
         ))
     }
 }
@@ -695,10 +805,16 @@ mod tests {
             let ds = ScDataset::new(
                 b.clone(),
                 LoaderConfig {
-                    strategy: Strategy::BlockShuffling { block_size: 8 },
-                    batch_size: 32,
-                    fetch_factor: 4,
-                    num_workers: workers,
+                    sampling: SamplingConfig {
+                        strategy: Strategy::BlockShuffling { block_size: 8 },
+                        batch_size: 32,
+                        fetch_factor: 4,
+                        ..SamplingConfig::default()
+                    },
+                    workers: WorkerConfig {
+                        num_workers: workers,
+                        ..WorkerConfig::default()
+                    },
                     label_cols: vec!["plate".into()],
                     ..Default::default()
                 },
@@ -719,9 +835,12 @@ mod tests {
         let ds = ScDataset::new(
             b,
             LoaderConfig {
-                batch_size: 50,
-                fetch_factor: 2,
-                drop_last: true,
+                sampling: SamplingConfig {
+                    batch_size: 50,
+                    fetch_factor: 2,
+                    drop_last: true,
+                    ..SamplingConfig::default()
+                },
                 ..Default::default()
             },
         );
@@ -736,9 +855,12 @@ mod tests {
         let ds = ScDataset::new(
             b.clone(),
             LoaderConfig {
-                strategy: Strategy::Streaming { shuffle_buffer: 0 },
-                batch_size: 16,
-                fetch_factor: 4,
+                sampling: SamplingConfig {
+                    strategy: Strategy::Streaming { shuffle_buffer: 0 },
+                    batch_size: 16,
+                    fetch_factor: 4,
+                    ..SamplingConfig::default()
+                },
                 ..Default::default()
             },
         );
@@ -753,11 +875,14 @@ mod tests {
         let ds = ScDataset::new(
             b,
             LoaderConfig {
-                strategy: Strategy::Streaming {
-                    shuffle_buffer: 64,
+                sampling: SamplingConfig {
+                    strategy: Strategy::Streaming {
+                        shuffle_buffer: 64,
+                    },
+                    batch_size: 16,
+                    fetch_factor: 4,
+                    ..SamplingConfig::default()
                 },
-                batch_size: 16,
-                fetch_factor: 4,
                 ..Default::default()
             },
         );
@@ -787,9 +912,12 @@ mod tests {
         let ds = ScDataset::new(
             b,
             LoaderConfig {
-                strategy: Strategy::BlockShuffling { block_size: 4 },
-                batch_size: 32,
-                fetch_factor: 2,
+                sampling: SamplingConfig {
+                    strategy: Strategy::BlockShuffling { block_size: 4 },
+                    batch_size: 32,
+                    fetch_factor: 2,
+                    ..SamplingConfig::default()
+                },
                 label_cols: vec!["plate".into(), "drug".into()],
                 ..Default::default()
             },
@@ -813,12 +941,17 @@ mod tests {
             let ds = ScDataset::new(
                 b.clone(),
                 LoaderConfig {
-                    strategy: Strategy::BlockShuffling { block_size: 8 },
-                    batch_size: 16,
-                    fetch_factor: 2,
-                    rank,
-                    world_size: world,
-                    seed: 99,
+                    sampling: SamplingConfig {
+                        strategy: Strategy::BlockShuffling { block_size: 8 },
+                        batch_size: 16,
+                        fetch_factor: 2,
+                        seed: 99,
+                        ..SamplingConfig::default()
+                    },
+                    ddp: DdpConfig {
+                        rank,
+                        world_size: world,
+                    },
                     ..Default::default()
                 },
             );
@@ -834,9 +967,12 @@ mod tests {
         let ds = ScDataset::new(
             b,
             LoaderConfig {
-                strategy: Strategy::BlockShuffling { block_size: 4 },
-                batch_size: 16,
-                fetch_factor: 2,
+                sampling: SamplingConfig {
+                    strategy: Strategy::BlockShuffling { block_size: 4 },
+                    batch_size: 16,
+                    fetch_factor: 2,
+                    ..SamplingConfig::default()
+                },
                 ..Default::default()
             },
         );
@@ -853,8 +989,11 @@ mod tests {
         let ds = ScDataset::new(
             b.clone(),
             LoaderConfig {
-                batch_size: 25,
-                fetch_factor: 2,
+                sampling: SamplingConfig {
+                    batch_size: 25,
+                    fetch_factor: 2,
+                    ..SamplingConfig::default()
+                },
                 ..Default::default()
             },
         );
@@ -878,15 +1017,23 @@ mod tests {
             let ds = ScDataset::new(
                 b.clone(),
                 LoaderConfig {
-                    strategy: Strategy::BlockShuffling { block_size: 8 },
-                    batch_size: 32,
-                    fetch_factor: 2,
+                    sampling: SamplingConfig {
+                        strategy: Strategy::BlockShuffling { block_size: 8 },
+                        batch_size: 32,
+                        fetch_factor: 2,
+                        ..SamplingConfig::default()
+                    },
                     label_cols: vec!["plate".into()],
-                    num_workers: workers,
-                    cache_bytes: 1 << 20,
-                    cache_block_rows: 64,
-                    readahead,
-                    locality_window: window,
+                    workers: WorkerConfig {
+                        num_workers: workers,
+                        ..WorkerConfig::default()
+                    },
+                    cache: CacheConfig {
+                        bytes: 1 << 20,
+                        block_rows: 64,
+                        readahead,
+                        locality_window: window,
+                    },
                     ..Default::default()
                 },
             );
@@ -908,11 +1055,17 @@ mod tests {
         let ds = ScDataset::new(
             b,
             LoaderConfig {
-                strategy: Strategy::BlockShuffling { block_size: 8 },
-                batch_size: 32,
-                fetch_factor: 2,
-                cache_bytes: 64 << 20,
-                cache_block_rows: 64,
+                sampling: SamplingConfig {
+                    strategy: Strategy::BlockShuffling { block_size: 8 },
+                    batch_size: 32,
+                    fetch_factor: 2,
+                    ..SamplingConfig::default()
+                },
+                cache: CacheConfig {
+                    bytes: 64 << 20,
+                    block_rows: 64,
+                    ..CacheConfig::default()
+                },
                 ..Default::default()
             },
         );
@@ -942,12 +1095,17 @@ mod tests {
             let ds = ScDataset::new(
                 b.clone(),
                 LoaderConfig {
-                    strategy: Strategy::BlockShuffling { block_size: 8 },
-                    batch_size: 32,
-                    fetch_factor: 4,
+                    sampling: SamplingConfig {
+                        strategy: Strategy::BlockShuffling { block_size: 8 },
+                        batch_size: 32,
+                        fetch_factor: 4,
+                        ..SamplingConfig::default()
+                    },
                     label_cols: vec!["plate".into()],
-                    decode_threads: threads,
-                    coalesce_gap_bytes: gap,
+                    io: IoConfig {
+                        decode_threads: threads,
+                        coalesce_gap_bytes: gap,
+                    },
                     ..Default::default()
                 },
             );
@@ -968,10 +1126,16 @@ mod tests {
             let ds = ScDataset::new(
                 b.clone(),
                 LoaderConfig {
-                    strategy: Strategy::BlockShuffling { block_size: 8 },
-                    batch_size: 32,
-                    fetch_factor: 4,
-                    coalesce_gap_bytes: gap,
+                    sampling: SamplingConfig {
+                        strategy: Strategy::BlockShuffling { block_size: 8 },
+                        batch_size: 32,
+                        fetch_factor: 4,
+                        ..SamplingConfig::default()
+                    },
+                    io: IoConfig {
+                        coalesce_gap_bytes: gap,
+                        ..IoConfig::default()
+                    },
                     ..Default::default()
                 },
             );
@@ -994,15 +1158,18 @@ mod tests {
 
     #[test]
     fn worker_pool_reports_errors() {
-        // Using a weighted strategy with wrong weights length fails at plan
-        // time (before workers); exercise a run-time error instead by
-        // requesting a missing label column.
+        // The builder rejects unknown label columns at build() time; the
+        // unvalidated ScDataset::new path must still fail loudly at run
+        // time (first batch), including across the worker channel.
         let (_d, b) = backend(100);
         let ds = ScDataset::new(
             b,
             LoaderConfig {
                 label_cols: vec!["not-a-column".into()],
-                num_workers: 2,
+                workers: WorkerConfig {
+                    num_workers: 2,
+                    ..WorkerConfig::default()
+                },
                 ..Default::default()
             },
         );
@@ -1023,12 +1190,15 @@ mod tests {
         let ds = ScDataset::new(
             b,
             LoaderConfig {
-                strategy: Strategy::BlockWeighted {
-                    block_size: 4,
-                    weights,
+                sampling: SamplingConfig {
+                    strategy: Strategy::BlockWeighted {
+                        block_size: 4,
+                        weights,
+                    },
+                    batch_size: 20,
+                    fetch_factor: 2,
+                    ..SamplingConfig::default()
                 },
-                batch_size: 20,
-                fetch_factor: 2,
                 ..Default::default()
             },
         );
@@ -1043,12 +1213,15 @@ mod tests {
         let ds = ScDataset::new(
             b.clone(),
             LoaderConfig {
-                strategy: Strategy::ClassBalanced {
-                    block_size: 1,
-                    label_col: "moa_broad".into(),
+                sampling: SamplingConfig {
+                    strategy: Strategy::ClassBalanced {
+                        block_size: 1,
+                        label_col: "moa_broad".into(),
+                    },
+                    batch_size: 32,
+                    fetch_factor: 4,
+                    ..SamplingConfig::default()
                 },
-                batch_size: 32,
-                fetch_factor: 4,
                 label_cols: vec!["moa_broad".into()],
                 ..Default::default()
             },
@@ -1068,5 +1241,71 @@ mod tests {
                 "class {c} fraction {frac}"
             );
         }
+    }
+
+    #[test]
+    fn hooks_transform_values_and_labels_in_both_modes() {
+        let (_d, b) = backend(200);
+        for workers in [0usize, 2] {
+            let plain = ScDataset::builder(b.clone())
+                .strategy(Strategy::BlockShuffling { block_size: 8 })
+                .batch_size(32)
+                .fetch_factor(2)
+                .label_col("plate")
+                .num_workers(workers)
+                .build()
+                .unwrap();
+            let hooked = ScDataset::builder(b.clone())
+                .strategy(Strategy::BlockShuffling { block_size: 8 })
+                .batch_size(32)
+                .fetch_factor(2)
+                .label_col("plate")
+                .num_workers(workers)
+                .fetch_transform(|view| {
+                    for v in view.x.data.iter_mut() {
+                        *v = v.ln_1p();
+                    }
+                    Ok(())
+                })
+                .batch_transform(|mb| {
+                    for l in mb.labels[0].iter_mut() {
+                        *l += 100;
+                    }
+                    Ok(())
+                })
+                .build()
+                .unwrap();
+            let mut plain_rows = collect_rows(plain.epoch(0).unwrap());
+            let mut sum = 0.0f64;
+            let mut hooked_rows = Vec::new();
+            for mb in hooked.epoch(0).unwrap() {
+                let mb = mb.unwrap();
+                assert!(mb.labels[0].iter().all(|&l| l >= 100), "label remap ran");
+                sum += mb.x.data.iter().map(|&v| v as f64).sum::<f64>();
+                hooked_rows.extend(mb.rows);
+            }
+            plain_rows.sort_unstable();
+            hooked_rows.sort_unstable();
+            assert_eq!(plain_rows, hooked_rows, "hooks must not touch row identity");
+            assert!(sum > 0.0, "log1p data survived");
+        }
+    }
+
+    #[test]
+    fn batch_transform_misalignment_is_an_error() {
+        let (_d, b) = backend(100);
+        let ds = ScDataset::builder(b)
+            .batch_size(16)
+            .fetch_factor(2)
+            .label_col("plate")
+            .batch_transform(|mb| {
+                mb.rows.pop(); // break alignment
+                Ok(())
+            })
+            .build()
+            .unwrap();
+        let first = ds.epoch(0).unwrap().next().unwrap();
+        let err = first.unwrap_err().to_string();
+        assert!(err.contains("alignment"), "{err}");
     }
 }

@@ -2,14 +2,22 @@
 //! Appendices A–B): index planning with block sampling, batched fetching,
 //! sampling strategies, the fetch pipeline with worker pools and
 //! backpressure, DDP-style fetch partitioning, the minibatch-entropy
-//! theory, and the experimental (b, f) auto-tuner.
+//! theory, the experimental (b, f) auto-tuner, and the builder-based
+//! construction API with typed sub-configs and transform hooks.
 
 pub mod autotune;
+pub mod builder;
 pub mod ddp;
 pub mod entropy;
 pub mod fetch;
 pub mod loader;
 pub mod plan;
 
-pub use loader::{EpochIter, LoadStats, LoaderConfig, Minibatch, ScDataset};
+pub use builder::{
+    BuildError, CacheConfig, DdpConfig, IoConfig, SamplingConfig, ScDatasetBuilder, WorkerConfig,
+};
+pub use fetch::{FetchTransform, FetchView};
+pub use loader::{
+    BatchTransform, EpochIter, Hooks, LoadStats, LoaderConfig, Minibatch, ScDataset,
+};
 pub use plan::{build_plan, locality_schedule, EpochPlan, Strategy};

@@ -182,21 +182,18 @@ mod tests {
 
     #[test]
     fn works_through_the_loader_with_shuffling() {
-        use crate::coordinator::{LoaderConfig, ScDataset, Strategy};
+        use crate::coordinator::{ScDataset, Strategy};
         use std::sync::Arc;
         let dir = TempDir::new("zip").unwrap();
         let rna = modality(&dir, "rna.scs", 64, 16, 1.0);
         let protein = modality(&dir, "prot.scs", 64, 4, 100.0);
         let zip: Arc<dyn Backend> = Arc::new(ZipBackend::new(rna, protein).unwrap());
-        let ds = ScDataset::new(
-            zip,
-            LoaderConfig {
-                strategy: Strategy::BlockShuffling { block_size: 4 },
-                batch_size: 8,
-                fetch_factor: 2,
-                ..Default::default()
-            },
-        );
+        let ds = ScDataset::builder(zip)
+            .strategy(Strategy::BlockShuffling { block_size: 4 })
+            .batch_size(8)
+            .fetch_factor(2)
+            .build()
+            .unwrap();
         for mb in ds.epoch(0).unwrap() {
             let mb = mb.unwrap();
             // alignment survives the reshuffle: protein value = 100 × rna

@@ -430,21 +430,18 @@ mod tests {
 
     #[test]
     fn works_through_the_loader() {
-        use crate::coordinator::{LoaderConfig, ScDataset, Strategy};
+        use crate::coordinator::{ScDataset, Strategy};
         use std::sync::Arc;
         let dir = TempDir::new("zarr").unwrap();
         let src = source(&dir, 100);
         let zdir = convert_to_zarr(&src, dir.join("z"), 8, 4).unwrap();
         let z: Arc<dyn Backend> = Arc::new(ShardedZarrStore::open(&zdir).unwrap());
-        let ds = ScDataset::new(
-            z,
-            LoaderConfig {
-                strategy: Strategy::BlockShuffling { block_size: 4 },
-                batch_size: 16,
-                fetch_factor: 2,
-                ..Default::default()
-            },
-        );
+        let ds = ScDataset::builder(z)
+            .strategy(Strategy::BlockShuffling { block_size: 4 })
+            .batch_size(16)
+            .fetch_factor(2)
+            .build()
+            .unwrap();
         let mut rows: Vec<u32> = Vec::new();
         for mb in ds.epoch(0).unwrap() {
             rows.extend(mb.unwrap().rows);

@@ -7,7 +7,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{LoaderConfig, ScDataset, Strategy};
+use crate::coordinator::{LoaderConfig, SamplingConfig, ScDataset, Strategy};
 use crate::runtime::{Runtime, Tensor};
 use crate::store::Backend;
 
@@ -46,16 +46,12 @@ pub struct TrainConfig {
 }
 
 impl TrainConfig {
-    pub fn new(task: TaskSpec, strategy: Strategy, batch: usize, fetch_factor: usize) -> Self {
+    pub fn new(task: TaskSpec, sampling: SamplingConfig) -> Self {
+        let mut loader = LoaderConfig::from_sampling(sampling);
+        loader.label_cols = vec![task.label_col.to_string()];
+        loader.sampling.drop_last = true; // AOT artifacts have a fixed batch dim
         TrainConfig {
-            loader: LoaderConfig {
-                strategy,
-                batch_size: batch,
-                fetch_factor,
-                label_cols: vec![task.label_col.to_string()],
-                drop_last: true, // AOT artifacts have a fixed batch dim
-                ..Default::default()
-            },
+            loader,
             task,
             epochs: 1,
             lr: 1e-5,
@@ -93,12 +89,14 @@ pub fn train_eval(
 ) -> Result<TrainReport> {
     let genes = train_backend.n_cols();
     let classes = cfg.task.n_classes(train_backend.as_ref())?;
-    let m = cfg.loader.batch_size;
+    let m = cfg.loader.sampling.batch_size;
     let mut loader_cfg = cfg.loader.clone();
-    loader_cfg.seed = cfg.seed;
+    loader_cfg.sampling.seed = cfg.seed;
     loader_cfg.label_cols = vec![cfg.task.label_col.to_string()];
-    loader_cfg.drop_last = true;
-    let ds = ScDataset::new(train_backend.clone(), loader_cfg);
+    loader_cfg.sampling.drop_last = true;
+    let ds = ScDataset::builder(train_backend.clone())
+        .config(loader_cfg)
+        .build()?;
 
     // Engine state.
     let mut cpu = CpuModel::new(genes, classes, cfg.lr, cfg.seed);
@@ -180,16 +178,12 @@ pub fn train_eval(
     // Evaluate on the held-out plate (streamed sequentially with a high
     // fetch factor — the paper's §4.2 inference recommendation).
     let t_eval = std::time::Instant::now();
-    let eval_cfg = LoaderConfig {
-        strategy: Strategy::Streaming { shuffle_buffer: 0 },
-        batch_size: m,
-        fetch_factor: 64,
-        label_cols: vec![cfg.task.label_col.to_string()],
-        seed: 0,
-        drop_last: false,
-        ..Default::default()
-    };
-    let eval_ds = ScDataset::new(test_backend.clone(), eval_cfg);
+    let eval_ds = ScDataset::builder(test_backend.clone())
+        .strategy(Strategy::Streaming { shuffle_buffer: 0 })
+        .batch_size(m)
+        .fetch_factor(64)
+        .label_col(cfg.task.label_col)
+        .build()?;
     let mut confusion = Confusion::new(classes);
     let mut predict_exe = None;
     if let Engine::Pjrt(rt) = engine {
@@ -230,16 +224,16 @@ pub fn train_eval(
         train_backend.pattern(),
         &sim_reports,
         1,
-        m * cfg.loader.fetch_factor,
+        m * cfg.loader.sampling.fetch_factor,
     );
 
     Ok(TrainReport {
         task: cfg.task.name.to_string(),
         strategy: format!(
             "{}(b={},f={})",
-            cfg.loader.strategy.name(),
-            cfg.loader.strategy.block_size(),
-            cfg.loader.fetch_factor
+            cfg.loader.sampling.strategy.name(),
+            cfg.loader.sampling.strategy.block_size(),
+            cfg.loader.sampling.fetch_factor
         ),
         engine: engine.name().to_string(),
         steps,
@@ -268,6 +262,15 @@ mod tests {
         (dir, Arc::new(train), Arc::new(test))
     }
 
+    fn sampling(strategy: Strategy, batch_size: usize, fetch_factor: usize) -> SamplingConfig {
+        SamplingConfig {
+            strategy,
+            batch_size,
+            fetch_factor,
+            ..SamplingConfig::default()
+        }
+    }
+
     #[test]
     fn cpu_training_beats_chance_on_cell_line() {
         let (_d, train, test) = dataset();
@@ -275,9 +278,7 @@ mod tests {
         let classes = task.n_classes(train.as_ref()).unwrap();
         let mut cfg = TrainConfig::new(
             task,
-            Strategy::BlockShuffling { block_size: 1 },
-            64,
-            16,
+            sampling(Strategy::BlockShuffling { block_size: 1 }, 64, 16),
         );
         cfg.epochs = 4;
         cfg.lr = 0.01; // tiny data needs a bigger lr than the paper's
@@ -301,7 +302,7 @@ mod tests {
         let (_d, train, test) = dataset();
         let task = TaskSpec::by_name("drug").unwrap();
         let run = |strategy: Strategy| {
-            let mut cfg = TrainConfig::new(task.clone(), strategy, 64, 8);
+            let mut cfg = TrainConfig::new(task.clone(), sampling(strategy, 64, 8));
             cfg.epochs = 2;
             cfg.lr = 0.01;
             train_eval(train.clone(), test.clone(), &Engine::Cpu, &cfg)
@@ -326,9 +327,7 @@ mod tests {
         let task = TaskSpec::by_name("moa_broad").unwrap();
         let mut cfg = TrainConfig::new(
             task,
-            Strategy::BlockShuffling { block_size: 16 },
-            64,
-            4,
+            sampling(Strategy::BlockShuffling { block_size: 16 }, 64, 4),
         );
         cfg.max_steps = Some(12);
         cfg.loss_every = 1;

@@ -61,6 +61,26 @@ fn bench_rejects_unknown_experiment() {
 }
 
 #[test]
+fn train_surfaces_typed_builder_errors() {
+    // --readahead without a cache budget used to be a silent no-op; it is
+    // now a typed BuildError that reaches the CLI user with the fix.
+    let dir = TempDir::new("cli-builderr").unwrap();
+    let data = dir.join("d");
+    run(argv(&format!(
+        "gen-data --out {} --preset tiny --plates 2 --cells 200",
+        data.display()
+    )))
+    .unwrap();
+    let err = run(argv(&format!(
+        "train --data {} --task moa_broad --max-steps 1 --readahead",
+        data.display()
+    )))
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("cache"), "{err}");
+}
+
+#[test]
 fn train_requires_valid_task() {
     let dir = TempDir::new("cli-task").unwrap();
     let data = dir.join("d");

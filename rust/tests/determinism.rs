@@ -1,17 +1,25 @@
-//! Determinism guarantees (ISSUE 2 + ISSUE 3 acceptance):
+//! Determinism guarantees (ISSUE 2 + ISSUE 3 + ISSUE 4 acceptance):
 //!
 //! * with a fixed seed, `num_workers = 0` and `num_workers = 4` yield the
 //!   identical per-epoch multiset of global row ids;
 //! * enabling the block cache and/or the cache-aware scheduler changes
 //!   neither the per-epoch row-id multiset nor (for `num_workers = 0`)
 //!   the exact minibatch stream — rows, expression data and labels;
-//! * the intra-fetch decode pipeline (`decode_threads`,
-//!   `coalesce_gap_bytes`) is execution-only: any setting, combined with
-//!   any cache/scheduler setting, emits the bit-identical stream.
+//! * the intra-fetch decode pipeline (`io.decode_threads`,
+//!   `io.coalesce_gap_bytes`) is execution-only: any setting, combined
+//!   with any cache/scheduler setting, emits the bit-identical stream;
+//! * installing **identity** `fetch_transform`/`batch_transform` hooks
+//!   through the builder leaves the stream bit-identical to a hook-free
+//!   loader.
+//!
+//! All loaders are constructed through `ScDataset::builder` (the public
+//! API); base configs are assembled by mutating `LoaderConfig::default()`
+//! (struct literals for `LoaderConfig` are reserved to the loader module).
+#![allow(clippy::field_reassign_with_default)]
 
 use std::sync::Arc;
 
-use scdata::coordinator::{LoaderConfig, ScDataset, Strategy};
+use scdata::coordinator::{CacheConfig, IoConfig, LoaderConfig, ScDataset, Strategy};
 use scdata::datagen::{generate, open_collection, TahoeConfig};
 use scdata::store::{Backend, CsrBatch};
 use scdata::util::tempdir::TempDir;
@@ -49,28 +57,33 @@ fn multiset(ds: &ScDataset, epoch: u64) -> Vec<u32> {
 }
 
 fn base_cfg() -> LoaderConfig {
-    LoaderConfig {
-        strategy: Strategy::BlockShuffling { block_size: 8 },
-        batch_size: 32,
-        fetch_factor: 2,
-        label_cols: vec!["plate".into()],
-        seed: 11,
-        ..Default::default()
-    }
+    let mut cfg = LoaderConfig::default();
+    cfg.sampling.strategy = Strategy::BlockShuffling { block_size: 8 };
+    cfg.sampling.batch_size = 32;
+    cfg.sampling.fetch_factor = 2;
+    cfg.sampling.seed = 11;
+    cfg.label_cols = vec!["plate".into()];
+    cfg
+}
+
+/// Base config with a mutation applied — the variant constructor every
+/// test uses instead of struct literals.
+fn vary(f: impl FnOnce(&mut LoaderConfig)) -> LoaderConfig {
+    let mut cfg = base_cfg();
+    f(&mut cfg);
+    cfg
+}
+
+fn make(b: &Arc<dyn Backend>, cfg: LoaderConfig) -> ScDataset {
+    ScDataset::builder(b.clone()).config(cfg).build().unwrap()
 }
 
 #[test]
 fn worker_counts_yield_identical_multiset() {
     let (_d, b) = dataset(400);
     for epoch in [0u64, 1] {
-        let w0 = ScDataset::new(b.clone(), base_cfg());
-        let w4 = ScDataset::new(
-            b.clone(),
-            LoaderConfig {
-                num_workers: 4,
-                ..base_cfg()
-            },
-        );
+        let w0 = make(&b, base_cfg());
+        let w4 = make(&b, vary(|c| c.workers.num_workers = 4));
         assert_eq!(
             multiset(&w0, epoch),
             multiset(&w4, epoch),
@@ -83,19 +96,20 @@ fn worker_counts_yield_identical_multiset() {
 fn worker_counts_agree_with_cache_and_scheduler() {
     let (_d, b) = dataset(400);
     let cached = |workers: usize| {
-        ScDataset::new(
-            b.clone(),
-            LoaderConfig {
-                num_workers: workers,
-                cache_bytes: 8 << 20,
-                cache_block_rows: 64,
-                readahead: true,
-                locality_window: 6,
-                ..base_cfg()
-            },
+        make(
+            &b,
+            vary(|c| {
+                c.workers.num_workers = workers;
+                c.cache = CacheConfig {
+                    bytes: 8 << 20,
+                    block_rows: 64,
+                    readahead: true,
+                    locality_window: 6,
+                };
+            }),
         )
     };
-    let plain = ScDataset::new(b.clone(), base_cfg());
+    let plain = make(&b, base_cfg());
     for epoch in [0u64, 1] {
         let expect = multiset(&plain, epoch);
         assert_eq!(multiset(&cached(0), epoch), expect);
@@ -106,57 +120,49 @@ fn worker_counts_agree_with_cache_and_scheduler() {
 #[test]
 fn cache_and_scheduler_do_not_change_the_stream() {
     let (_d, b) = dataset(400);
-    let base = ScDataset::new(b.clone(), base_cfg());
+    let base = make(&b, base_cfg());
     let variants: Vec<(&str, LoaderConfig)> = vec![
         (
             "cache",
-            LoaderConfig {
-                cache_bytes: 8 << 20,
-                cache_block_rows: 64,
-                ..base_cfg()
-            },
+            vary(|c| {
+                c.cache.bytes = 8 << 20;
+                c.cache.block_rows = 64;
+            }),
         ),
-        (
-            "scheduler",
-            LoaderConfig {
-                locality_window: 8,
-                ..base_cfg()
-            },
-        ),
+        ("scheduler", vary(|c| c.cache.locality_window = 8)),
         (
             "cache+scheduler",
-            LoaderConfig {
-                cache_bytes: 8 << 20,
-                cache_block_rows: 64,
-                locality_window: 8,
-                ..base_cfg()
-            },
+            vary(|c| {
+                c.cache.bytes = 8 << 20;
+                c.cache.block_rows = 64;
+                c.cache.locality_window = 8;
+            }),
         ),
         (
             "cache+scheduler+readahead",
-            LoaderConfig {
-                cache_bytes: 8 << 20,
-                cache_block_rows: 64,
-                locality_window: 8,
-                readahead: true,
-                ..base_cfg()
-            },
+            vary(|c| {
+                c.cache = CacheConfig {
+                    bytes: 8 << 20,
+                    block_rows: 64,
+                    readahead: true,
+                    locality_window: 8,
+                };
+            }),
         ),
         (
             "tiny-cache (evicting)",
-            LoaderConfig {
-                cache_bytes: 20_000,
-                cache_block_rows: 32,
-                locality_window: 4,
-                ..base_cfg()
-            },
+            vary(|c| {
+                c.cache.bytes = 20_000;
+                c.cache.block_rows = 32;
+                c.cache.locality_window = 4;
+            }),
         ),
     ];
     for epoch in [0u64, 1] {
         let expect = stream(&base, epoch);
         assert!(!expect.is_empty());
         for (name, cfg) in &variants {
-            let ds = ScDataset::new(b.clone(), cfg.clone());
+            let ds = make(&b, cfg.clone());
             let got = stream(&ds, epoch);
             assert_eq!(
                 got.len(),
@@ -175,62 +181,48 @@ fn cache_and_scheduler_do_not_change_the_stream() {
 #[test]
 fn decode_pipeline_does_not_change_the_stream() {
     let (_d, b) = dataset(400);
-    let base = ScDataset::new(b.clone(), base_cfg());
+    let base = make(&b, base_cfg());
     let variants: Vec<(&str, LoaderConfig)> = vec![
-        (
-            "decode-threads=4",
-            LoaderConfig {
-                decode_threads: 4,
-                ..base_cfg()
-            },
-        ),
-        (
-            "decode-threads=auto",
-            LoaderConfig {
-                decode_threads: 0,
-                ..base_cfg()
-            },
-        ),
+        ("decode-threads=4", vary(|c| c.io.decode_threads = 4)),
+        ("decode-threads=auto", vary(|c| c.io.decode_threads = 0)),
         (
             "coalesce-gap=64k",
-            LoaderConfig {
-                coalesce_gap_bytes: 64 << 10,
-                ..base_cfg()
-            },
+            vary(|c| c.io.coalesce_gap_bytes = 64 << 10),
         ),
         (
             "coalesce-gap=1 (adjacent only)",
-            LoaderConfig {
-                coalesce_gap_bytes: 1,
-                ..base_cfg()
-            },
+            vary(|c| c.io.coalesce_gap_bytes = 1),
         ),
         (
             "decode+coalesce",
-            LoaderConfig {
-                decode_threads: 4,
-                coalesce_gap_bytes: 64 << 10,
-                ..base_cfg()
-            },
+            vary(|c| {
+                c.io = IoConfig {
+                    decode_threads: 4,
+                    coalesce_gap_bytes: 64 << 10,
+                };
+            }),
         ),
         (
             "decode+coalesce+cache+scheduler+readahead",
-            LoaderConfig {
-                decode_threads: 0,
-                coalesce_gap_bytes: 64 << 10,
-                cache_bytes: 8 << 20,
-                cache_block_rows: 64,
-                locality_window: 8,
-                readahead: true,
-                ..base_cfg()
-            },
+            vary(|c| {
+                c.io = IoConfig {
+                    decode_threads: 0,
+                    coalesce_gap_bytes: 64 << 10,
+                };
+                c.cache = CacheConfig {
+                    bytes: 8 << 20,
+                    block_rows: 64,
+                    readahead: true,
+                    locality_window: 8,
+                };
+            }),
         ),
     ];
     for epoch in [0u64, 1] {
         let expect = stream(&base, epoch);
         assert!(!expect.is_empty());
         for (name, cfg) in &variants {
-            let ds = ScDataset::new(b.clone(), cfg.clone());
+            let ds = make(&b, cfg.clone());
             let got = stream(&ds, epoch);
             assert_eq!(
                 got.len(),
@@ -249,18 +241,19 @@ fn decode_pipeline_does_not_change_the_stream() {
 #[test]
 fn decode_pipeline_multiset_invariant_with_workers() {
     let (_d, b) = dataset(400);
-    let plain = ScDataset::new(b.clone(), base_cfg());
+    let plain = make(&b, base_cfg());
     for epoch in [0u64, 1] {
         let expect = multiset(&plain, epoch);
         for workers in [0usize, 4] {
-            let ds = ScDataset::new(
-                b.clone(),
-                LoaderConfig {
-                    num_workers: workers,
-                    decode_threads: 4,
-                    coalesce_gap_bytes: 64 << 10,
-                    ..base_cfg()
-                },
+            let ds = make(
+                &b,
+                vary(|c| {
+                    c.workers.num_workers = workers;
+                    c.io = IoConfig {
+                        decode_threads: 4,
+                        coalesce_gap_bytes: 64 << 10,
+                    };
+                }),
             );
             assert_eq!(
                 multiset(&ds, epoch),
@@ -277,13 +270,7 @@ fn coalescing_engaged_while_streams_match() {
     // was silently bypassed: the merged run must issue fewer reads.
     let (_d, b) = dataset(400);
     let run = |gap: usize| {
-        let ds = ScDataset::new(
-            b.clone(),
-            LoaderConfig {
-                coalesce_gap_bytes: gap,
-                ..base_cfg()
-            },
-        );
+        let ds = make(&b, vary(|c| c.io.coalesce_gap_bytes = gap));
         let mut iter = ds.epoch(0).unwrap();
         while iter.next().is_some() {}
         iter.stats().io
@@ -307,18 +294,16 @@ fn streaming_and_shuffle_buffer_unaffected_by_cache() {
         Strategy::Streaming { shuffle_buffer: 64 },
     ] {
         let mk = |cache: bool| {
-            ScDataset::new(
-                b.clone(),
-                LoaderConfig {
-                    strategy: strategy.clone(),
-                    batch_size: 16,
-                    fetch_factor: 4,
-                    seed: 3,
-                    cache_bytes: if cache { 8 << 20 } else { 0 },
-                    cache_block_rows: 64,
-                    ..Default::default()
-                },
-            )
+            let mut cfg = LoaderConfig::default();
+            cfg.sampling.strategy = strategy.clone();
+            cfg.sampling.batch_size = 16;
+            cfg.sampling.fetch_factor = 4;
+            cfg.sampling.seed = 3;
+            if cache {
+                cfg.cache.bytes = 8 << 20;
+                cfg.cache.block_rows = 64;
+            }
+            make(&b, cfg)
         };
         let off = stream(&mk(false), 0);
         let on = stream(&mk(true), 0);
@@ -336,23 +321,25 @@ fn weighted_sampling_stream_invariant_under_cache() {
     let n = b.n_rows();
     let weights: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64).collect();
     let mk = |cache: bool| {
-        ScDataset::new(
-            b.clone(),
-            LoaderConfig {
-                strategy: Strategy::BlockWeighted {
-                    block_size: 4,
-                    weights: weights.clone(),
-                },
-                batch_size: 25,
-                fetch_factor: 3,
-                seed: 9,
-                cache_bytes: if cache { 4 << 20 } else { 0 },
-                cache_block_rows: 32,
+        let mut cfg = LoaderConfig::default();
+        cfg.sampling.strategy = Strategy::BlockWeighted {
+            block_size: 4,
+            weights: weights.clone(),
+        };
+        cfg.sampling.batch_size = 25;
+        cfg.sampling.fetch_factor = 3;
+        cfg.sampling.seed = 9;
+        if cache {
+            cfg.cache = CacheConfig {
+                bytes: 4 << 20,
+                block_rows: 32,
+                readahead: true,
                 locality_window: 8,
-                readahead: cache,
-                ..Default::default()
-            },
-        )
+            };
+        } else {
+            cfg.cache.locality_window = 8;
+        }
+        make(&b, cfg)
     };
     // With-replacement sampling repeats blocks within one epoch — the
     // cache's best case. The emitted stream must still be identical.
@@ -366,18 +353,126 @@ fn cache_actually_engaged_while_streams_match() {
     // Guard against the invariance tests passing because the cache was
     // silently bypassed: the cached run must record hits.
     let (_d, b) = dataset(300);
-    let ds = ScDataset::new(
-        b,
-        LoaderConfig {
-            cache_bytes: 8 << 20,
-            cache_block_rows: 64,
-            locality_window: 8,
-            ..base_cfg()
-        },
+    let ds = make(
+        &b,
+        vary(|c| {
+            c.cache.bytes = 8 << 20;
+            c.cache.block_rows = 64;
+            c.cache.locality_window = 8;
+        }),
     );
     let _ = stream(&ds, 0);
     let _ = stream(&ds, 1); // warm epoch
     let stats = ds.cache_stats().unwrap();
     assert!(stats.hits > 0, "cache never hit: {stats:?}");
     assert!(stats.misses > 0);
+}
+
+#[test]
+fn identity_hooks_do_not_change_the_stream() {
+    // ISSUE 4 acceptance: installing identity fetch/batch transforms
+    // through the builder is bit-identical to no hooks at all, for the
+    // plain loader and for every cache/scheduler/pipeline combination.
+    let (_d, b) = dataset(400);
+    let configs: Vec<(&str, LoaderConfig)> = vec![
+        ("plain", base_cfg()),
+        (
+            "cache+scheduler+pipeline",
+            vary(|c| {
+                c.cache = CacheConfig {
+                    bytes: 8 << 20,
+                    block_rows: 64,
+                    readahead: true,
+                    locality_window: 8,
+                };
+                c.io = IoConfig {
+                    decode_threads: 4,
+                    coalesce_gap_bytes: 64 << 10,
+                };
+            }),
+        ),
+    ];
+    for (name, cfg) in &configs {
+        let plain = make(&b, cfg.clone());
+        let hooked = ScDataset::builder(b.clone())
+            .config(cfg.clone())
+            .fetch_transform(|_view| Ok(()))
+            .batch_transform(|_mb| Ok(()))
+            .build()
+            .unwrap();
+        for epoch in [0u64, 1] {
+            let expect = stream(&plain, epoch);
+            let got = stream(&hooked, epoch);
+            assert!(!expect.is_empty());
+            assert_eq!(
+                got, expect,
+                "{name}: identity hooks changed the stream (epoch {epoch})"
+            );
+        }
+    }
+}
+
+#[test]
+fn identity_hooks_multiset_invariant_with_workers() {
+    let (_d, b) = dataset(400);
+    let plain = make(&b, base_cfg());
+    for epoch in [0u64, 1] {
+        let expect = multiset(&plain, epoch);
+        for workers in [0usize, 4] {
+            let hooked = ScDataset::builder(b.clone())
+                .config(vary(|c| c.workers.num_workers = workers))
+                .fetch_transform(|_view| Ok(()))
+                .batch_transform(|_mb| Ok(()))
+                .build()
+                .unwrap();
+            assert_eq!(
+                multiset(&hooked, epoch),
+                expect,
+                "workers={workers}, epoch={epoch}"
+            );
+        }
+    }
+}
+
+#[test]
+fn value_hooks_change_data_deterministically_but_not_rows() {
+    // Non-identity hooks: the transformed stream is itself deterministic
+    // (two identically-hooked loaders agree exactly), row identity and
+    // labels-alignment match the hook-free stream, and the data is the
+    // advertised transform of the base data.
+    let (_d, b) = dataset(300);
+    let mk = || {
+        ScDataset::builder(b.clone())
+            .config(base_cfg())
+            .fetch_transform(|view| {
+                for v in view.x.data.iter_mut() {
+                    *v = v.ln_1p();
+                }
+                Ok(())
+            })
+            .batch_transform(|mb| {
+                for l in mb.labels[0].iter_mut() {
+                    *l += 7;
+                }
+                Ok(())
+            })
+            .build()
+            .unwrap()
+    };
+    let base = make(&b, base_cfg());
+    let expect = stream(&base, 0);
+    let a = stream(&mk(), 0);
+    let c = stream(&mk(), 0);
+    assert_eq!(a, c, "hooked stream must be deterministic");
+    assert_eq!(a.len(), expect.len());
+    for (i, ((ra, xa, la), (re, xe, le))) in a.iter().zip(&expect).enumerate() {
+        assert_eq!(ra, re, "rows diverged at minibatch {i}");
+        assert_eq!(xa.indices, xe.indices, "sparsity diverged at minibatch {i}");
+        for (got, base) in xa.data.iter().zip(&xe.data) {
+            assert!((got - base.ln_1p()).abs() < 1e-6, "{got} vs log1p({base})");
+        }
+        for (got, base) in la[0].iter().zip(&le[0]) {
+            assert_eq!(*got, base + 7, "label remap diverged at minibatch {i}");
+        }
+    }
 }

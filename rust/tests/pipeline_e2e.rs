@@ -1,9 +1,10 @@
 //! Cross-module integration: datagen → stores → coordinator, across every
-//! strategy, backend and parallelism mode, plus failure injection.
+//! strategy, backend and parallelism mode, plus failure injection. All
+//! loaders are built through the public `ScDataset::builder` API.
 
 use std::sync::Arc;
 
-use scdata::coordinator::{LoaderConfig, ScDataset, Strategy};
+use scdata::coordinator::{BuildError, DdpConfig, ScDataset, Strategy};
 use scdata::datagen::{generate, open_collection, TahoeConfig};
 use scdata::store::memmap_dense::{convert_to_memmap, DenseMemmapStore};
 use scdata::store::rowgroup::{convert_to_rowgroup, RowGroupStore};
@@ -46,16 +47,13 @@ fn every_strategy_covers_or_samples_correctly() {
     ];
     for strategy in strategies {
         let weighted = matches!(strategy, Strategy::ClassBalanced { .. });
-        let ds = ScDataset::new(
-            backend.clone(),
-            LoaderConfig {
-                strategy: strategy.clone(),
-                batch_size: 48,
-                fetch_factor: 3,
-                label_cols: vec!["plate".into()],
-                ..Default::default()
-            },
-        );
+        let ds = ScDataset::builder(backend.clone())
+            .strategy(strategy.clone())
+            .batch_size(48)
+            .fetch_factor(3)
+            .label_col("plate")
+            .build()
+            .unwrap();
         let mut rows = epoch_rows(&ds);
         rows.sort_unstable();
         if weighted {
@@ -73,16 +71,13 @@ fn worker_counts_agree_on_coverage() {
     let (_d, backend) = dataset(700);
     let n = backend.n_rows();
     for workers in [0usize, 1, 2, 5] {
-        let ds = ScDataset::new(
-            backend.clone(),
-            LoaderConfig {
-                strategy: Strategy::BlockShuffling { block_size: 8 },
-                batch_size: 32,
-                fetch_factor: 2,
-                num_workers: workers,
-                ..Default::default()
-            },
-        );
+        let ds = ScDataset::builder(backend.clone())
+            .strategy(Strategy::BlockShuffling { block_size: 8 })
+            .batch_size(32)
+            .fetch_factor(2)
+            .num_workers(workers)
+            .build()
+            .unwrap();
         let mut rows = epoch_rows(&ds);
         rows.sort_unstable();
         assert_eq!(rows.len(), n, "workers={workers}");
@@ -96,19 +91,18 @@ fn two_level_ddp_times_workers_partition() {
     let n = backend.n_rows();
     let mut all = Vec::new();
     for rank in 0..2 {
-        let ds = ScDataset::new(
-            backend.clone(),
-            LoaderConfig {
-                strategy: Strategy::BlockShuffling { block_size: 4 },
-                batch_size: 16,
-                fetch_factor: 2,
-                num_workers: 3,
+        let ds = ScDataset::builder(backend.clone())
+            .strategy(Strategy::BlockShuffling { block_size: 4 })
+            .batch_size(16)
+            .fetch_factor(2)
+            .num_workers(3)
+            .ddp(DdpConfig {
                 rank,
                 world_size: 2,
-                seed: 5,
-                ..Default::default()
-            },
-        );
+            })
+            .seed(5)
+            .build()
+            .unwrap();
         all.extend(epoch_rows(&ds));
     }
     all.sort_unstable();
@@ -127,16 +121,13 @@ fn all_backends_yield_identical_cells() {
     // identical loader config must yield identical cells in identical
     // order regardless of backend
     let run = |b: &Arc<dyn Backend>| {
-        let ds = ScDataset::new(
-            b.clone(),
-            LoaderConfig {
-                strategy: Strategy::BlockShuffling { block_size: 16 },
-                batch_size: 64,
-                fetch_factor: 4,
-                seed: 9,
-                ..Default::default()
-            },
-        );
+        let ds = ScDataset::builder(b.clone())
+            .strategy(Strategy::BlockShuffling { block_size: 16 })
+            .batch_size(64)
+            .fetch_factor(4)
+            .seed(9)
+            .build()
+            .unwrap();
         let mut out = Vec::new();
         for mb in ds.epoch(0).unwrap() {
             let mb = mb.unwrap();
@@ -172,35 +163,36 @@ fn corrupted_plate_file_reports_error() {
 }
 
 #[test]
-fn missing_label_column_fails_at_first_batch() {
+fn missing_label_column_is_a_typed_build_error() {
+    // The builder catches the misconfiguration at build() time with a
+    // typed error naming the column (the flat-config API only failed at
+    // the first fetched batch).
     let (_d, backend) = dataset(300);
-    let ds = ScDataset::new(
-        backend,
-        LoaderConfig {
-            label_cols: vec!["no_such_column".into()],
-            ..Default::default()
-        },
+    let err = ScDataset::builder(backend)
+        .label_col("no_such_column")
+        .build()
+        .unwrap_err();
+    assert_eq!(
+        err,
+        BuildError::UnknownLabelColumn {
+            column: "no_such_column".into()
+        }
     );
-    let first = ds.epoch(0).unwrap().next().unwrap();
-    let err = first.unwrap_err().to_string();
-    assert!(err.contains("no_such_column"), "{err}");
+    assert!(err.to_string().contains("no_such_column"), "{err}");
 }
 
 #[test]
 fn backpressure_bounded_channel_does_not_deadlock() {
     // Tiny prefetch depth + many workers: consumer drains slowly.
     let (_d, backend) = dataset(500);
-    let ds = ScDataset::new(
-        backend,
-        LoaderConfig {
-            strategy: Strategy::BlockShuffling { block_size: 8 },
-            batch_size: 16,
-            fetch_factor: 2,
-            num_workers: 4,
-            prefetch_depth: 1,
-            ..Default::default()
-        },
-    );
+    let ds = ScDataset::builder(backend)
+        .strategy(Strategy::BlockShuffling { block_size: 8 })
+        .batch_size(16)
+        .fetch_factor(2)
+        .num_workers(4)
+        .prefetch_depth(1)
+        .build()
+        .unwrap();
     let mut count = 0;
     for mb in ds.epoch(0).unwrap() {
         mb.unwrap();
@@ -215,18 +207,52 @@ fn backpressure_bounded_channel_does_not_deadlock() {
 #[test]
 fn dropping_iterator_midway_stops_workers() {
     let (_d, backend) = dataset(800);
-    let ds = ScDataset::new(
-        backend,
-        LoaderConfig {
-            strategy: Strategy::BlockShuffling { block_size: 8 },
-            batch_size: 16,
-            fetch_factor: 2,
-            num_workers: 4,
-            prefetch_depth: 1,
-            ..Default::default()
-        },
-    );
+    let ds = ScDataset::builder(backend)
+        .strategy(Strategy::BlockShuffling { block_size: 8 })
+        .batch_size(16)
+        .fetch_factor(2)
+        .num_workers(4)
+        .prefetch_depth(1)
+        .build()
+        .unwrap();
     let mut iter = ds.epoch(0).unwrap();
     let _ = iter.next().unwrap().unwrap();
     drop(iter); // must not hang on worker join
+}
+
+#[test]
+fn hooks_run_inside_workers_end_to_end() {
+    // fetch_transform (log1p) + batch_transform (label collapse) through
+    // the real worker pool: coverage intact, labels remapped, values
+    // transformed.
+    let (_d, backend) = dataset(600);
+    let n = backend.n_rows();
+    let ds = ScDataset::builder(backend)
+        .strategy(Strategy::BlockShuffling { block_size: 8 })
+        .batch_size(32)
+        .fetch_factor(2)
+        .num_workers(3)
+        .label_col("plate")
+        .fetch_transform(|view| {
+            for v in view.x.data.iter_mut() {
+                *v = v.ln_1p();
+            }
+            Ok(())
+        })
+        .batch_transform(|mb| {
+            for l in mb.labels[0].iter_mut() {
+                *l = (*l).min(1);
+            }
+            Ok(())
+        })
+        .build()
+        .unwrap();
+    let mut rows = Vec::new();
+    for mb in ds.epoch(0).unwrap() {
+        let mb = mb.unwrap();
+        assert!(mb.labels[0].iter().all(|&l| l <= 1), "labels collapsed");
+        rows.extend(mb.rows);
+    }
+    rows.sort_unstable();
+    assert_eq!(rows, (0..n as u32).collect::<Vec<_>>());
 }

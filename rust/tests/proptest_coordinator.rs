@@ -1,14 +1,19 @@
 //! Randomized property tests over the full coordinator stack (the
 //! `proptest`-style suite; generators and replay via
 //! `scdata::util::proptest` — set `SCDATA_PROPTEST_SEED=<seed>` to replay a
-//! reported failure).
+//! reported failure). Loaders are built through `ScDataset::builder`;
+//! configs are assembled by mutating `LoaderConfig::default()`.
+#![allow(clippy::field_reassign_with_default)]
 
 use std::sync::Arc;
 
 use scdata::coordinator::entropy::{
     batch_label_entropy, corollary33_bounds, dist_entropy,
 };
-use scdata::coordinator::{build_plan, locality_schedule, LoaderConfig, ScDataset, Strategy};
+use scdata::coordinator::{
+    build_plan, locality_schedule, CacheConfig, DdpConfig, IoConfig, LoaderConfig, ScDataset,
+    Strategy,
+};
 use scdata::datagen::{generate, open_collection, TahoeConfig};
 use scdata::prop_assert;
 use scdata::store::anndata::{SparseChunkStore, StoreWriter};
@@ -102,27 +107,27 @@ fn prop_epoch_is_exact_cover_for_shuffling_strategies() {
             },
             _ => Strategy::BlockShuffling { block_size: 1 },
         };
-        let cfg = LoaderConfig {
-            strategy,
-            batch_size: rng.range(1, 100),
-            fetch_factor: rng.range(1, 10),
-            num_workers: rng.range(0, 4),
-            seed: rng.next_u64(),
-            drop_last: false,
-            ..Default::default()
-        };
-        let ds = ScDataset::new(backend.clone(), cfg.clone());
+        let mut cfg = LoaderConfig::default();
+        cfg.sampling.strategy = strategy;
+        cfg.sampling.batch_size = rng.range(1, 100);
+        cfg.sampling.fetch_factor = rng.range(1, 10);
+        cfg.sampling.seed = rng.next_u64();
+        cfg.workers.num_workers = rng.range(0, 4);
+        let ds = ScDataset::builder(backend.clone())
+            .config(cfg.clone())
+            .build()
+            .map_err(|e| e.to_string())?;
         let mut rows = Vec::new();
         for mb in ds.epoch(rng.next_u64()).map_err(|e| e.to_string())? {
             let mb = mb.map_err(|e| e.to_string())?;
-            prop_assert!(mb.x.n_rows <= cfg.batch_size, "oversized batch");
+            prop_assert!(mb.x.n_rows <= cfg.sampling.batch_size, "oversized batch");
             rows.extend(mb.rows);
         }
         rows.sort_unstable();
         prop_assert!(
             rows == (0..n as u32).collect::<Vec<_>>(),
             "epoch must cover every row exactly once ({:?})",
-            cfg.strategy
+            cfg.sampling.strategy
         );
         Ok(())
     });
@@ -138,19 +143,16 @@ fn prop_drop_last_yields_only_full_batches() {
     let backend: Arc<dyn Backend> = Arc::new(open_collection(dir.path()).unwrap());
     check("drop-last-fuzz", 16, |rng| {
         let m = rng.range(1, 120);
-        let ds = ScDataset::new(
-            backend.clone(),
-            LoaderConfig {
-                strategy: Strategy::BlockShuffling {
-                    block_size: rng.range(1, 50),
-                },
-                batch_size: m,
-                fetch_factor: rng.range(1, 8),
-                drop_last: true,
-                seed: rng.next_u64(),
-                ..Default::default()
-            },
-        );
+        let ds = ScDataset::builder(backend.clone())
+            .strategy(Strategy::BlockShuffling {
+                block_size: rng.range(1, 50),
+            })
+            .batch_size(m)
+            .fetch_factor(rng.range(1, 8))
+            .drop_last(true)
+            .seed(rng.next_u64())
+            .build()
+            .map_err(|e| e.to_string())?;
         let mut total = 0usize;
         for mb in ds.epoch(0).map_err(|e| e.to_string())? {
             let mb = mb.map_err(|e| e.to_string())?;
@@ -184,19 +186,18 @@ fn prop_ddp_world_partitions_exactly() {
         let block_size = rng.range(1, 64);
         let mut all = Vec::new();
         for rank in 0..world {
-            let ds = ScDataset::new(
-                backend.clone(),
-                LoaderConfig {
-                    strategy: Strategy::BlockShuffling { block_size },
-                    batch_size: 32,
-                    fetch_factor: 2,
-                    num_workers: workers,
+            let ds = ScDataset::builder(backend.clone())
+                .strategy(Strategy::BlockShuffling { block_size })
+                .batch_size(32)
+                .fetch_factor(2)
+                .num_workers(workers)
+                .ddp(DdpConfig {
                     rank,
                     world_size: world,
-                    seed,
-                    ..Default::default()
-                },
-            );
+                })
+                .seed(seed)
+                .build()
+                .map_err(|e| e.to_string())?;
             for mb in ds.epoch(epoch).map_err(|e| e.to_string())? {
                 all.extend(mb.map_err(|e| e.to_string())?.rows);
             }
@@ -223,18 +224,15 @@ fn prop_entropy_bounds_hold_on_real_pipeline() {
         let b = 1usize << rng.range(0, 6);
         let m = 64usize;
         let f = 1usize << rng.range(0, 7);
-        let ds = ScDataset::new(
-            backend.clone(),
-            LoaderConfig {
-                strategy: Strategy::BlockShuffling { block_size: b },
-                batch_size: m,
-                fetch_factor: f,
-                label_cols: vec!["plate".into()],
-                seed: rng.next_u64(),
-                drop_last: true,
-                ..Default::default()
-            },
-        );
+        let ds = ScDataset::builder(backend.clone())
+            .strategy(Strategy::BlockShuffling { block_size: b })
+            .batch_size(m)
+            .fetch_factor(f)
+            .label_col("plate")
+            .seed(rng.next_u64())
+            .drop_last(true)
+            .build()
+            .map_err(|e| e.to_string())?;
         let mut hs = Vec::new();
         for mb in ds.epoch(0).map_err(|e| e.to_string())?.take(40) {
             let mb = mb.map_err(|e| e.to_string())?;
@@ -321,26 +319,27 @@ fn prop_cached_loader_covers_and_matches_plain_stream() {
     let backend: Arc<dyn Backend> = Arc::new(open_collection(dir.path()).unwrap());
     let n = backend.n_rows();
     check("cached-loader", 10, |rng| {
-        let base = LoaderConfig {
-            strategy: Strategy::BlockShuffling {
-                block_size: rng.range(1, 48),
-            },
-            batch_size: rng.range(1, 80),
-            fetch_factor: rng.range(1, 6),
-            seed: rng.next_u64(),
-            num_workers: rng.range(0, 3),
-            ..Default::default()
+        let mut base = LoaderConfig::default();
+        base.sampling.strategy = Strategy::BlockShuffling {
+            block_size: rng.range(1, 48),
         };
-        let cached = LoaderConfig {
-            cache_bytes: rng.range(10_000, 8 << 20),
-            cache_block_rows: rng.range(1, 400),
+        base.sampling.batch_size = rng.range(1, 80);
+        base.sampling.fetch_factor = rng.range(1, 6);
+        base.sampling.seed = rng.next_u64();
+        base.workers.num_workers = rng.range(0, 3);
+        let mut cached = base.clone();
+        cached.cache = CacheConfig {
+            bytes: rng.range(10_000, 8 << 20),
+            block_rows: rng.range(1, 400),
             locality_window: rng.range(0, 12),
             readahead: rng.bernoulli(0.5),
-            ..base.clone()
         };
         let epoch = rng.range(0, 3) as u64;
         let run = |cfg: &LoaderConfig| -> Result<Vec<Vec<u32>>, String> {
-            let ds = ScDataset::new(backend.clone(), cfg.clone());
+            let ds = ScDataset::builder(backend.clone())
+                .config(cfg.clone())
+                .build()
+                .map_err(|e| e.to_string())?;
             let mut out = Vec::new();
             for mb in ds.epoch(epoch).map_err(|e| e.to_string())? {
                 out.push(mb.map_err(|e| e.to_string())?.rows);
@@ -357,7 +356,7 @@ fn prop_cached_loader_covers_and_matches_plain_stream() {
             "cached epoch lost/duplicated rows"
         );
         // single-process: the exact minibatch sequence must be identical
-        if base.num_workers == 0 {
+        if base.workers.num_workers == 0 {
             prop_assert!(
                 plain == with_cache,
                 "cache/scheduler changed the emitted stream"
@@ -380,34 +379,37 @@ fn prop_decode_pipeline_stream_invariant() {
     let backend: Arc<dyn Backend> = Arc::new(open_collection(dir.path()).unwrap());
     let n = backend.n_rows();
     check("decode-pipeline", 10, |rng| {
-        let base = LoaderConfig {
-            strategy: Strategy::BlockShuffling {
-                block_size: rng.range(1, 48),
-            },
-            batch_size: rng.range(1, 80),
-            fetch_factor: rng.range(1, 6),
-            seed: rng.next_u64(),
-            label_cols: vec!["plate".into()],
-            ..Default::default()
+        let mut base = LoaderConfig::default();
+        base.sampling.strategy = Strategy::BlockShuffling {
+            block_size: rng.range(1, 48),
         };
+        base.sampling.batch_size = rng.range(1, 80);
+        base.sampling.fetch_factor = rng.range(1, 6);
+        base.sampling.seed = rng.next_u64();
+        base.label_cols = vec!["plate".into()];
         let cache_on = rng.bernoulli(0.5);
-        let piped = LoaderConfig {
+        let mut piped = base.clone();
+        piped.io = IoConfig {
             decode_threads: rng.range(0, 9),
             coalesce_gap_bytes: match rng.range(0, 3) {
                 0 => 0,
                 1 => rng.range(1, 256),
                 _ => rng.range(256, 2 << 20),
             },
-            cache_bytes: if cache_on { rng.range(10_000, 8 << 20) } else { 0 },
-            cache_block_rows: rng.range(1, 400),
+        };
+        piped.cache = CacheConfig {
+            bytes: if cache_on { rng.range(10_000, 8 << 20) } else { 0 },
+            block_rows: rng.range(1, 400),
             locality_window: rng.range(0, 12),
             readahead: cache_on && rng.bernoulli(0.5),
-            ..base.clone()
         };
         let epoch = rng.range(0, 3) as u64;
         type Stream = Vec<(Vec<u32>, scdata::store::CsrBatch, Vec<Vec<u16>>)>;
         let run = |cfg: &LoaderConfig| -> Result<Stream, String> {
-            let ds = ScDataset::new(backend.clone(), cfg.clone());
+            let ds = ScDataset::builder(backend.clone())
+                .config(cfg.clone())
+                .build()
+                .map_err(|e| e.to_string())?;
             let mut out = Vec::new();
             for mb in ds.epoch(epoch).map_err(|e| e.to_string())? {
                 let mb = mb.map_err(|e| e.to_string())?;
@@ -420,8 +422,8 @@ fn prop_decode_pipeline_stream_invariant() {
         prop_assert!(
             plain == with_pipeline,
             "decode pipeline changed the emitted stream (threads={} gap={} cache={})",
-            piped.decode_threads,
-            piped.coalesce_gap_bytes,
+            piped.io.decode_threads,
+            piped.io.coalesce_gap_bytes,
             cache_on
         );
         let mut all: Vec<u32> = with_pipeline
@@ -516,19 +518,16 @@ fn prop_weighted_sampling_respects_zero_weights() {
         if support == 0 {
             return Ok(());
         }
-        let ds = ScDataset::new(
-            backend.clone(),
-            LoaderConfig {
-                strategy: Strategy::BlockWeighted {
-                    block_size: block,
-                    weights: weights.clone(),
-                },
-                batch_size: 16,
-                fetch_factor: 2,
-                seed: rng.next_u64(),
-                ..Default::default()
-            },
-        );
+        let ds = ScDataset::builder(backend.clone())
+            .strategy(Strategy::BlockWeighted {
+                block_size: block,
+                weights: weights.clone(),
+            })
+            .batch_size(16)
+            .fetch_factor(2)
+            .seed(rng.next_u64())
+            .build()
+            .map_err(|e| e.to_string())?;
         for mb in ds.epoch(0).map_err(|e| e.to_string())?.take(10) {
             let mb = mb.map_err(|e| e.to_string())?;
             for &r in &mb.rows {

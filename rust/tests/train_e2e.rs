@@ -3,7 +3,7 @@
 
 use std::sync::Arc;
 
-use scdata::coordinator::Strategy;
+use scdata::coordinator::{SamplingConfig, Strategy};
 use scdata::datagen::{generate, open_train_test, TahoeConfig};
 use scdata::runtime::Runtime;
 use scdata::store::Backend;
@@ -28,6 +28,15 @@ fn dataset() -> (TempDir, Arc<dyn Backend>, Arc<dyn Backend>) {
     (dir, Arc::new(train), Arc::new(test))
 }
 
+fn sampling(strategy: Strategy, batch_size: usize, fetch_factor: usize) -> SamplingConfig {
+    SamplingConfig {
+        strategy,
+        batch_size,
+        fetch_factor,
+        ..SamplingConfig::default()
+    }
+}
+
 #[test]
 fn pjrt_full_run_all_tasks() {
     let Some(rt) = artifacts() else { return };
@@ -36,9 +45,7 @@ fn pjrt_full_run_all_tasks() {
         let task = TaskSpec::by_name(task_name).unwrap();
         let mut cfg = TrainConfig::new(
             task,
-            Strategy::BlockShuffling { block_size: 16 },
-            64,
-            8,
+            sampling(Strategy::BlockShuffling { block_size: 16 }, 64, 8),
         );
         cfg.max_steps = Some(20);
         cfg.lr = 1e-5;
@@ -62,9 +69,7 @@ fn pjrt_loss_decreases_over_epoch() {
     let task = TaskSpec::by_name("cell_line").unwrap();
     let mut cfg = TrainConfig::new(
         task,
-        Strategy::BlockShuffling { block_size: 16 },
-        64,
-        16,
+        sampling(Strategy::BlockShuffling { block_size: 16 }, 64, 16),
     );
     cfg.epochs = 6;
     cfg.lr = 1e-5;
@@ -91,7 +96,7 @@ fn strategies_rank_as_in_paper_cpu() {
         ("block", Strategy::BlockShuffling { block_size: 16 }),
         ("random", Strategy::BlockShuffling { block_size: 1 }),
     ] {
-        let mut cfg = TrainConfig::new(task.clone(), strategy, 64, 8);
+        let mut cfg = TrainConfig::new(task.clone(), sampling(strategy, 64, 8));
         cfg.epochs = 2;
         cfg.lr = 0.01;
         let r = train_eval(train_be.clone(), test_be.clone(), &Engine::Cpu, &cfg).unwrap();
