@@ -1,7 +1,10 @@
-//! Multi-worker loading demo (paper Appendix E): drives the *real* thread
-//! pool (`num_workers > 0`, bounded-channel backpressure) over real files
-//! and prints wall-clock scaling, then the calibrated DES projection of the
-//! same trace onto the paper's SATA-SSD testbed (Table 2 shape).
+//! Multi-worker loading demo (paper Appendix E): drives the *real*
+//! persistent executor (`num_workers > 0`: shared fetch queue,
+//! out-of-order execution, bounded `in_flight` reorder buffer, in-order
+//! delivery) over real files and prints wall-clock scaling, then the
+//! calibrated DES projection of the same trace onto the paper's SATA-SSD
+//! testbed (Table 2 shape). Every row of the table emits the identical
+//! minibatch stream — worker count is execution-only.
 //!
 //! Run: `cargo run --release --example multiworker_throughput`
 
@@ -40,7 +43,8 @@ fn main() -> anyhow::Result<()> {
             .fetch_factor(64)
             .workers(WorkerConfig {
                 num_workers: workers,
-                prefetch_depth: 2,
+                in_flight: 2 * workers.max(1),
+                pipeline_epochs: 0, // single epoch: nothing to pipeline
             })
             .seed(1)
             .build()?;

@@ -8,8 +8,9 @@ pub mod timing;
 
 pub use sweep::{
     annloader_baseline, measure_cache_epochs, measure_config, measure_decode_point,
-    measure_decode_sweep, multiworker_grid, streaming_sweep, throughput_grid, CacheRun,
-    DecodePoint, SweepOptions, SweepPoint,
+    measure_decode_sweep, measure_executor_point, measure_executor_sweep, multiworker_grid,
+    streaming_sweep, throughput_grid, CacheRun, DecodePoint, ExecutorPoint, SweepOptions,
+    SweepPoint,
 };
 pub use timing::{bench, bench_throughput, black_box, BenchResult};
 

@@ -12,7 +12,9 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::coordinator::entropy::batch_label_entropy;
-use crate::coordinator::{CacheConfig, IoConfig, SamplingConfig, ScDataset, Strategy};
+use crate::coordinator::{
+    CacheConfig, IoConfig, SamplingConfig, ScDataset, Strategy, WorkerConfig,
+};
 use crate::store::iomodel::{simulate_loader, DiskModel, IoReport, SimResult};
 use crate::store::Backend;
 
@@ -447,6 +449,100 @@ pub fn measure_decode_sweep(
         .collect()
 }
 
+/// One measured persistent-executor configuration (Figure 10). Like
+/// Figure 9, the headline is **real wall-clock** rows/s: the executor
+/// changes how this machine overlaps fetch I/O, which the DES does not
+/// model. `row_stream` is the emitted row-id sequence in delivery order —
+/// the executor's ordered-delivery contract makes it byte-identical
+/// across every worker count and run, which `bench fig10` enforces.
+#[derive(Clone, Debug)]
+pub struct ExecutorPoint {
+    pub num_workers: usize,
+    pub in_flight: usize,
+    /// Wall-clock throughput over the drained epochs on the real files.
+    pub real_samples_per_sec: f64,
+    pub rows: u64,
+    /// Emitted global row ids in delivery order, all epochs concatenated.
+    pub row_stream: Vec<u32>,
+}
+
+/// Drain `epochs` full epochs through one loader at the given executor
+/// setting and measure wall clock + the emitted stream. Epoch pipelining
+/// stays on (`pipeline_epochs = 1`) so multi-epoch runs measure the
+/// overlap the executor is for — which deliberately includes its real
+/// cost: after the final epoch the pool speculates up to `in_flight`
+/// fetches of an epoch never requested, exactly as a training loop that
+/// doesn't drop its dataset would pay. (The `num_workers = 0` baseline
+/// pays nothing, so pooled points carry this honest overhead.)
+pub fn measure_executor_point(
+    backend: &Arc<dyn Backend>,
+    strategy: Strategy,
+    fetch_factor: usize,
+    num_workers: usize,
+    in_flight: usize,
+    epochs: usize,
+    opts: &SweepOptions,
+) -> Result<ExecutorPoint> {
+    let ds = ScDataset::builder(backend.clone())
+        .sampling(SamplingConfig {
+            strategy,
+            batch_size: opts.batch_size,
+            fetch_factor,
+            seed: opts.seed,
+            drop_last: false,
+        })
+        .workers(WorkerConfig {
+            num_workers,
+            in_flight,
+            pipeline_epochs: 1,
+        })
+        .cache(opts.cache)
+        .io(opts.io)
+        .build()?;
+    let t0 = std::time::Instant::now();
+    let mut row_stream: Vec<u32> = Vec::new();
+    for epoch in 0..epochs.max(1) {
+        for mb in ds.epoch(epoch as u64)? {
+            row_stream.extend(mb?.rows);
+        }
+    }
+    let real_secs = t0.elapsed().as_secs_f64();
+    Ok(ExecutorPoint {
+        num_workers,
+        in_flight,
+        real_samples_per_sec: row_stream.len() as f64 / real_secs.max(1e-9),
+        rows: row_stream.len() as u64,
+        row_stream,
+    })
+}
+
+/// Figure 10: executor-scaling sweep — one point per worker count at a
+/// fixed `in_flight` budget.
+pub fn measure_executor_sweep(
+    backend: &Arc<dyn Backend>,
+    strategy: Strategy,
+    fetch_factor: usize,
+    workers_grid: &[usize],
+    in_flight: usize,
+    epochs: usize,
+    opts: &SweepOptions,
+) -> Result<Vec<ExecutorPoint>> {
+    workers_grid
+        .iter()
+        .map(|&w| {
+            measure_executor_point(
+                backend,
+                strategy.clone(),
+                fetch_factor,
+                w,
+                in_flight,
+                epochs,
+                opts,
+            )
+        })
+        .collect()
+}
+
 /// Table 2: multiprocessing grid (block × fetch × workers) via the DES.
 pub fn multiworker_grid(
     backend: &Arc<dyn Backend>,
@@ -606,6 +702,28 @@ mod tests {
             off.read_calls
         );
         assert_eq!(pts[0].read_calls_raw, off.read_calls_raw);
+    }
+
+    #[test]
+    fn executor_sweep_streams_are_byte_identical() {
+        let (_d, b) = backend();
+        let mut opts = SweepOptions::default();
+        opts.min_rows = 512;
+        let strategy = Strategy::BlockShuffling { block_size: 16 };
+        let pts =
+            measure_executor_sweep(&b, strategy.clone(), 4, &[0, 1, 3], 4, 2, &opts).unwrap();
+        assert_eq!(pts.len(), 3);
+        for p in &pts {
+            assert_eq!(
+                p.row_stream, pts[0].row_stream,
+                "executor changed the stream at num_workers={}",
+                p.num_workers
+            );
+        }
+        assert!(pts[0].rows > 0);
+        // run-to-run: a fresh dataset at the same setting reproduces
+        let again = measure_executor_point(&b, strategy, 4, 3, 4, 2, &opts).unwrap();
+        assert_eq!(again.row_stream, pts[0].row_stream);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::AppConfig;
-use crate::coordinator::{CacheConfig, IoConfig};
+use crate::coordinator::{CacheConfig, IoConfig, WorkerConfig};
 
 #[derive(Clone, Debug, Default)]
 pub struct Args {
@@ -111,6 +111,16 @@ impl Args {
             decode_threads: self.usize_or("decode-threads", defaults.decode_threads)?,
             coalesce_gap_bytes: self
                 .usize_or("coalesce-gap-bytes", defaults.coalesce_gap_bytes)?,
+        })
+    }
+
+    /// The shared `--workers` / `--in-flight` / `--pipeline-epochs` →
+    /// [`WorkerConfig`] mapping (the persistent-executor knobs).
+    pub fn workers_config(&self, defaults: WorkerConfig) -> Result<WorkerConfig> {
+        Ok(WorkerConfig {
+            num_workers: self.usize_or("workers", defaults.num_workers)?,
+            in_flight: self.usize_or("in-flight", defaults.in_flight)?,
+            pipeline_epochs: self.usize_or("pipeline-epochs", defaults.pipeline_epochs)?,
         })
     }
 
@@ -225,5 +235,21 @@ mod tests {
         assert!(a.cache_config(CacheConfig::default()).is_err());
         let a = parse("train --decode-threads many");
         assert!(a.io_config(IoConfig::default()).is_err());
+        let a = parse("train --in-flight several");
+        assert!(a.workers_config(WorkerConfig::default()).is_err());
+    }
+
+    #[test]
+    fn worker_flags_map_onto_typed_config() {
+        let defaults = WorkerConfig::default();
+        let a = parse("train --workers 4 --in-flight 8 --pipeline-epochs 0");
+        let w = a.workers_config(defaults).unwrap();
+        assert_eq!(w.num_workers, 4);
+        assert_eq!(w.in_flight, 8);
+        assert_eq!(w.pipeline_epochs, 0);
+        let w = parse("train --workers 2").workers_config(defaults).unwrap();
+        assert_eq!(w.num_workers, 2);
+        assert_eq!(w.in_flight, defaults.in_flight, "unset flag keeps defaults");
+        assert_eq!(w.pipeline_epochs, defaults.pipeline_epochs);
     }
 }

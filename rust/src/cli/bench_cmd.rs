@@ -9,8 +9,9 @@ use anyhow::{bail, ensure, Result};
 use crate::bench_harness::report::{grid_table, points_to_json, worker_table, write_result};
 use crate::bench_harness::{
     annloader_baseline, measure_cache_epochs, measure_config, measure_decode_point,
-    measure_decode_sweep, multiworker_grid, streaming_sweep, throughput_grid, SweepOptions,
-    PAPER_GRID, TABLE2_BLOCKS, TABLE2_FETCH, TABLE2_WORKERS,
+    measure_decode_sweep, measure_executor_point, measure_executor_sweep, multiworker_grid,
+    streaming_sweep, throughput_grid, SweepOptions, PAPER_GRID, TABLE2_BLOCKS, TABLE2_FETCH,
+    TABLE2_WORKERS,
 };
 use crate::config::AppConfig;
 use crate::coordinator::entropy::{corollary33_bounds, dist_entropy};
@@ -44,10 +45,12 @@ pub fn bench(args: &Args) -> Result<()> {
         "fig7" => fig7(args, &cfg, quick)?,
         "fig8" => fig8(args, &cfg, quick)?,
         "fig9" => fig9(args, &cfg, quick)?,
+        "fig10" => fig10(args, &cfg, quick)?,
         "table2" => table2(args, &cfg, quick)?,
         "all" => {
             for exp in [
-                "fig2", "fig3", "fig4", "eq5", "fig5", "fig6", "fig7", "fig8", "fig9", "table2",
+                "fig2", "fig3", "fig4", "eq5", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10",
+                "table2",
             ] {
                 println!("\n===== {exp} =====");
                 let mut sub = args.clone();
@@ -55,7 +58,7 @@ pub fn bench(args: &Args) -> Result<()> {
                 bench(&sub)?;
             }
         }
-        other => bail!("unknown experiment '{other}' (fig2..fig9, eq5, table2, all)"),
+        other => bail!("unknown experiment '{other}' (fig2..fig10, eq5, table2, all)"),
     }
     Ok(())
 }
@@ -583,6 +586,90 @@ fn fig9(args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
         .set("read_calls_coalescing_off", Json::Num(coal_off.read_calls as f64))
         .set("sweep", Json::Arr(points));
     write_result(&cfg.results_dir, "fig9", body)?;
+    Ok(())
+}
+
+/// Figure 10: persistent-executor scaling — real wall-clock rows/s over a
+/// `--workers-grid` sweep at a fixed `--in-flight` budget, across
+/// pipelined epochs. The correctness gate (always enforced) is the
+/// executor's headline guarantee: the emitted row stream is
+/// **byte-identical for every worker count and across repeated runs**.
+/// `--smoke` shrinks the run and keeps only the gates so CI fails fast on
+/// ordered-delivery regressions.
+fn fig10(args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
+    let smoke = args.bool("smoke");
+    let quick = quick || smoke;
+    let backend = open(cfg)?;
+    let opts = sweep_opts(cfg, quick);
+    let grid = args.usize_list_or("workers-grid", &[0, 1, 2, 4])?;
+    ensure!(!grid.is_empty(), "--workers-grid must not be empty");
+    let in_flight = args.usize_or("in-flight", cfg.workers.in_flight.max(1))?;
+    ensure!(in_flight >= 1, "--in-flight must be >= 1");
+    let b = args.usize_or("block", 16)?;
+    let f = args.usize_or("fetch", if quick { 8 } else { 64 })?;
+    let epochs = args.usize_or("epochs", 2)?.max(1);
+    let strategy = Strategy::BlockShuffling { block_size: b };
+
+    let pts = measure_executor_sweep(&backend, strategy.clone(), f, &grid, in_flight, epochs, &opts)?;
+
+    println!(
+        "Fig 10 — persistent executor scaling; b={b}, f={f}, in_flight={in_flight}, {} epochs ({} rows)\n",
+        epochs, pts[0].rows
+    );
+    println!("| workers | rows/s (real) | speedup |");
+    println!("|---|---|---|");
+    let base = pts[0].real_samples_per_sec.max(1e-9);
+    for p in &pts {
+        println!(
+            "| {} | {} | {:.2}× |",
+            p.num_workers,
+            fmt_rate(p.real_samples_per_sec),
+            p.real_samples_per_sec / base
+        );
+    }
+
+    // Correctness gates (always enforced — the executor's contract):
+    // 1) byte-identical stream for every worker count;
+    for p in &pts {
+        ensure!(
+            p.row_stream == pts[0].row_stream,
+            "executor changed the emitted stream at num_workers={} (in_flight={in_flight})",
+            p.num_workers
+        );
+    }
+    // 2) byte-identical stream across two consecutive runs at the
+    //    largest worker count (fresh pool, same seed).
+    let wmax = *grid.iter().max().unwrap();
+    let repeat = measure_executor_point(&backend, strategy, f, wmax, in_flight, epochs, &opts)?;
+    ensure!(
+        repeat.row_stream == pts[0].row_stream,
+        "repeated run diverged at num_workers={wmax}"
+    );
+    if smoke {
+        println!(
+            "\nfig10 smoke OK: byte-identical stream across {} worker counts + repeat run",
+            grid.len()
+        );
+    }
+
+    let mut points = Vec::new();
+    for p in &pts {
+        let mut o = Json::obj();
+        o.set("num_workers", Json::Num(p.num_workers as f64))
+            .set("in_flight", Json::Num(p.in_flight as f64))
+            .set("real_samples_per_sec", Json::Num(p.real_samples_per_sec))
+            .set("rows", Json::Num(p.rows as f64));
+        points.push(o);
+    }
+    let mut body = Json::obj();
+    body.set("experiment", Json::Str("fig10".into()))
+        .set("block", Json::Num(b as f64))
+        .set("fetch_factor", Json::Num(f as f64))
+        .set("in_flight", Json::Num(in_flight as f64))
+        .set("epochs", Json::Num(epochs as f64))
+        .set("stream_identical", Json::Bool(true))
+        .set("sweep", Json::Arr(points));
+    write_result(&cfg.results_dir, "fig10", body)?;
     Ok(())
 }
 

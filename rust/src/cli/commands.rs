@@ -149,14 +149,15 @@ pub fn train(args: &Args) -> Result<()> {
     if let Some(ms) = args.flags.get("max-steps") {
         tc.max_steps = Some(ms.parse()?);
     }
-    // Cache + decode-pipeline tuning: flags override the `[cache]`/`[io]`
-    // config tables through the shared helper. The `[workers]` table has
-    // no flags; it applies as-is. (Sweeps/autotune intentionally ignore
-    // it: worker scaling there is modeled by the DES.)
+    // Cache + decode-pipeline + executor tuning: flags override the
+    // `[cache]`/`[io]`/`[workers]` config tables through the shared
+    // helpers. (Sweeps/autotune intentionally ignore `[workers]`: worker
+    // scaling there is modeled by the DES; `bench fig10` measures the
+    // real executor.)
     let (cache, io) = args.loader_tuning(&cfg)?;
     tc.loader.cache = cache;
     tc.loader.io = io;
-    tc.loader.workers = cfg.workers;
+    tc.loader.workers = args.workers_config(cfg.workers)?;
     let report = train_eval(train_be, test_be, &engine, &tc)?;
     println!(
         "task={} strategy={} engine={}",

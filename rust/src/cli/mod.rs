@@ -26,11 +26,12 @@ COMMANDS:
               [--strategy random|streaming|buffer|block] [--block N]
               [--fetch N] [--engine cpu|pjrt] [--artifacts DIR]
               [--epochs N] [--lr F] [--max-steps N] [--seed N]
+              [--workers N] [--in-flight N] [--pipeline-epochs N]
               [--cache-mb N] [--cache-block-rows N] [--readahead]
               [--locality-window N]
               [--decode-threads N] [--coalesce-gap-bytes N]
   bench       Regenerate paper figures/tables
-              fig2|fig3|fig4|eq5|fig5|fig6|fig7|fig8|fig9|table2|all
+              fig2|fig3|fig4|eq5|fig5|fig6|fig7|fig8|fig9|fig10|table2|all
               --data DIR [--results DIR] [--quick] [--engine cpu|pjrt]
               [--config FILE] [--seeds N]
               fig8 also takes [--cache-mb N] [--cache-block-rows N]
@@ -38,6 +39,8 @@ COMMANDS:
               [--block N] [--fetch N]
               fig9 also takes [--threads-grid 1,2,4]
               [--coalesce-gap-bytes N] [--block N] [--fetch N] [--smoke]
+              fig10 also takes [--workers-grid 0,1,2,4] [--in-flight N]
+              [--epochs N] [--block N] [--fetch N] [--smoke]
   autotune    Recommend (block size, fetch factor, decode threads):
               --data DIR [--cache-mb N] [--decode-threads 1,2,4]
   calibrate   Print virtual-disk anchors vs the paper's measurements
@@ -57,6 +60,17 @@ the next scheduled fetch's blocks in the background, and
 N positions out of order to maximize block reuse (delivery order, and
 therefore the minibatch stream, is unchanged). Defaults come from the
 [cache] table of --config FILE.
+
+The executor: --workers N spawns a persistent pool of N fetch threads
+per dataset (0 = synchronous) pulling from one shared queue;
+--in-flight N bounds the reorder buffer (executed-but-undelivered
+fetches, the backpressure/memory knob; legacy prefetch_depth);
+--pipeline-epochs N lets the executor plan up to N epochs ahead so the
+next epoch's head fetches overlap the current tail (0 = off). All
+execution-only: with a fixed seed the emitted minibatch stream is
+bit-identical for every worker count and across runs. Defaults come
+from the [workers] table of --config FILE; `bench fig10` sweeps worker
+counts and enforces the stream guarantee.
 
 The decode pipeline: --decode-threads N reads+decompresses the chunks of
 one fetch concurrently on a shared pool (1 = serial, 0 = one per core)

@@ -34,8 +34,13 @@ pub struct AppConfig {
     /// `[sampling] seed` (legacy top-level `seed` accepted).
     pub seed: u64,
     pub disk: DiskModel,
-    /// `[workers]` table: worker pool + backpressure defaults (applied by
-    /// `train`; sweeps model worker scaling through the DES instead).
+    /// `[workers]` table: persistent-executor defaults (applied by
+    /// `train`; sweeps model worker scaling through the DES instead;
+    /// `bench fig10` measures the real pool). Like `[io]`, the app
+    /// default diverges from the library default on purpose:
+    /// `pipeline_epochs = 1` (CLI training runs epochs sequentially, the
+    /// case speculation is for), while `WorkerConfig::default()` keeps it
+    /// 0 for library callers with arbitrary epoch access patterns.
     pub workers: WorkerConfig,
     /// `[cache]` table: block cache + readahead + locality scheduler.
     pub cache: CacheConfig,
@@ -58,7 +63,10 @@ impl Default for AppConfig {
             fetch_factor: 256,
             seed: 7,
             disk: DiskModel::sata_ssd_hdf5(),
-            workers: WorkerConfig::default(),
+            workers: WorkerConfig {
+                pipeline_epochs: 1, // app default: epoch pipelining on
+                ..WorkerConfig::default()
+            },
             cache: CacheConfig::default(),
             io: IoConfig {
                 decode_threads: 0,          // auto: one per core
@@ -93,10 +101,20 @@ impl AppConfig {
         cfg.fetch_factor = doc.usize_or("sampling.fetch_factor", cfg.fetch_factor);
         cfg.seed =
             doc.usize_or("sampling.seed", doc.usize_or("seed", cfg.seed as usize)) as u64;
-        // [workers] table
+        // [workers] table. The legacy `prefetch_depth` key was *per
+        // worker* (old bounded-channel model); the executor's `in_flight`
+        // is pool-wide, so legacy configs map as depth × workers (min 1 —
+        // the old loader clamped depth 0 to 1) to preserve their total
+        // fetch concurrency. An explicit `in_flight` wins.
         cfg.workers.num_workers = doc.usize_or("workers.num_workers", cfg.workers.num_workers);
-        cfg.workers.prefetch_depth =
-            doc.usize_or("workers.prefetch_depth", cfg.workers.prefetch_depth);
+        let legacy = doc
+            .get("workers.prefetch_depth")
+            .and_then(|v| v.as_usize())
+            .map(|depth| (depth * cfg.workers.num_workers.max(1)).max(1));
+        cfg.workers.in_flight =
+            doc.usize_or("workers.in_flight", legacy.unwrap_or(cfg.workers.in_flight));
+        cfg.workers.pipeline_epochs =
+            doc.usize_or("workers.pipeline_epochs", cfg.workers.pipeline_epochs);
         // [cache] table: block cache + readahead + scheduler
         cfg.cache.bytes = doc.usize_or("cache.mb", cfg.cache.bytes >> 20) << 20;
         cfg.cache.block_rows = doc.usize_or("cache.block_rows", cfg.cache.block_rows);
@@ -147,7 +165,8 @@ impl AppConfig {
              \n\
              [workers]\n\
              num_workers = {nw}\n\
-             prefetch_depth = {pd}\n\
+             in_flight = {inf}\n\
+             pipeline_epochs = {pe}\n\
              \n\
              [cache]\n\
              mb = {mb}\n\
@@ -165,7 +184,8 @@ impl AppConfig {
             f = d.fetch_factor,
             seed = d.seed,
             nw = d.workers.num_workers,
-            pd = d.workers.prefetch_depth,
+            inf = d.workers.in_flight,
+            pe = d.workers.pipeline_epochs,
             mb = d.cache.bytes >> 20,
             br = d.cache.block_rows,
             ra = d.cache.readahead,
@@ -198,10 +218,14 @@ mod tests {
         assert_eq!(c.batch_size, 64);
         assert!(c.data_dir.ends_with("tahoe-mini"));
         // single source: the app defaults ARE the builder sub-config
-        // defaults (fetch_factor and [io] are the documented CLI
-        // exceptions — paper-production fetch size, decode auto +
-        // coalescing on; both execution-only).
-        assert_eq!(c.workers, WorkerConfig::default());
+        // defaults (fetch_factor, [io] and [workers] pipeline_epochs are
+        // the documented CLI exceptions — paper-production fetch size,
+        // decode auto + coalescing on, epoch pipelining on; all
+        // execution-only).
+        assert_eq!(c.workers.num_workers, WorkerConfig::default().num_workers);
+        assert_eq!(c.workers.in_flight, WorkerConfig::default().in_flight);
+        assert_eq!(c.workers.pipeline_epochs, 1, "CLI default: pipelining on");
+        assert_eq!(WorkerConfig::default().pipeline_epochs, 0, "library default: off");
         assert_eq!(c.cache, CacheConfig::default());
         assert_eq!(c.io.decode_threads, 0, "CLI default: auto decode");
         assert_eq!(c.io.coalesce_gap_bytes, 64 << 10, "CLI default: coalescing on");
@@ -264,7 +288,8 @@ seed = 3
 
 [workers]
 num_workers = 4
-prefetch_depth = 3
+in_flight = 6
+pipeline_epochs = 2
 "#,
         )
         .unwrap();
@@ -272,7 +297,29 @@ prefetch_depth = 3
         assert_eq!(c.fetch_factor, 512);
         assert_eq!(c.seed, 3);
         assert_eq!(c.workers.num_workers, 4);
-        assert_eq!(c.workers.prefetch_depth, 3);
+        assert_eq!(c.workers.in_flight, 6);
+        assert_eq!(c.workers.pipeline_epochs, 2);
+    }
+
+    #[test]
+    fn legacy_prefetch_depth_maps_onto_in_flight() {
+        // Old configs keep their throughput: prefetch_depth was per
+        // worker, in_flight is pool-wide, so the alias scales by the
+        // worker count. The new key wins when both are present; depth 0
+        // (which the old loader clamped to 1) stays buildable.
+        let c = AppConfig::from_toml("[workers]\nnum_workers = 8\nprefetch_depth = 2\n")
+            .unwrap();
+        assert_eq!(c.workers.in_flight, 16, "2 per worker × 8 workers");
+        let c = AppConfig::from_toml("[workers]\nprefetch_depth = 3\n").unwrap();
+        assert_eq!(c.workers.in_flight, 3, "num_workers 0 counts as one lane");
+        let c = AppConfig::from_toml("[workers]\nnum_workers = 4\nprefetch_depth = 0\n")
+            .unwrap();
+        assert_eq!(c.workers.in_flight, 1, "legacy depth 0 clamps like the old loader");
+        let c = AppConfig::from_toml(
+            "[workers]\nnum_workers = 8\nprefetch_depth = 3\nin_flight = 8\n",
+        )
+        .unwrap();
+        assert_eq!(c.workers.in_flight, 8, "explicit in_flight wins");
     }
 
     #[test]

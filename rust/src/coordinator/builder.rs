@@ -9,7 +9,7 @@
 //! ```text
 //! ScDataset::builder(backend)
 //!     .sampling(SamplingConfig { .. })   // strategy, m, f, seed, drop_last
-//!     .workers(WorkerConfig { .. })      // worker pool + backpressure
+//!     .workers(WorkerConfig { .. })      // persistent executor: pool + in-flight + pipelining
 //!     .ddp(DdpConfig { .. })             // rank / world partitioning
 //!     .cache(CacheConfig { .. })         // block cache + readahead + scheduler
 //!     .io(IoConfig { .. })               // decode pool + read coalescing
@@ -20,9 +20,11 @@
 //!
 //! Every invalid combination that used to be silent misconfiguration
 //! (readahead without a cache budget, a locality window on a streaming
-//! scan, `rank >= world_size`, a zero batch size, weights that do not
-//! match the dataset, label columns that do not exist) is a
-//! [`BuildError`] at `build()` time.
+//! scan, `rank >= world_size`, a zero batch size, a zero executor
+//! `in_flight` budget, weights that do not match the dataset, label
+//! columns that do not exist) is a [`BuildError`] at `build()` time —
+//! which is also what lets the loader drop the defensive `.max(1)`
+//! clamps it used to scatter over the hot path.
 
 use std::fmt;
 use std::sync::Arc;
@@ -61,22 +63,46 @@ impl Default for SamplingConfig {
     }
 }
 
-/// Worker pool + backpressure (paper Appendix B / E).
+/// The persistent prefetch executor (paper Appendix B / E, upgraded to a
+/// shared-queue model): pool size, in-flight budget, epoch pipelining.
+///
+/// All three knobs are **execution-only** — the emitted minibatch stream
+/// is bit-identical for every setting, including `num_workers = 0`
+/// (`tests/determinism.rs`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct WorkerConfig {
     /// 0 = synchronous iteration in the caller's thread; >0 spawns that
-    /// many fetch worker threads, each owning a disjoint fetch list.
+    /// many executor threads **once per dataset** (reused across epochs),
+    /// all pulling fetches from one shared queue.
     pub num_workers: usize,
-    /// Fetches buffered per worker before backpressure stalls it (the
-    /// PyTorch `prefetch_factor` analogue).
-    pub prefetch_depth: usize,
+    /// Reorder-buffer bound: fetches executed (or executing) but not yet
+    /// delivered. This is the backpressure unit — peak prefetch memory is
+    /// `in_flight` fetches of `m·f` rows — replacing the old per-worker
+    /// channel depth (`prefetch_depth`). Must be ≥ 1 (validated at
+    /// `build()`); keep ≥ `num_workers` to keep every worker busy.
+    pub in_flight: usize,
+    /// How many epochs the executor may plan ahead: once an epoch's queue
+    /// drains, up to this many future epochs are speculatively planned
+    /// and their head fetches started (within the `in_flight` budget), so
+    /// epoch `e+1` overlaps epoch `e`'s tail drain. 0 disables
+    /// pipelining. Plans are pure functions of `(seed, epoch)`, so
+    /// speculation never changes the stream.
+    ///
+    /// Speculation pays off only for sequential epoch access: after the
+    /// *final* epoch of a run (and on every out-of-order replay), up to
+    /// `in_flight` speculative fetches execute for an epoch nobody will
+    /// request. Hence the conservative library default of 0; the CLI
+    /// training path defaults to 1 through the `[workers]` app config
+    /// (the same documented divergence as `[io]`).
+    pub pipeline_epochs: usize,
 }
 
 impl Default for WorkerConfig {
     fn default() -> WorkerConfig {
         WorkerConfig {
             num_workers: 0,
-            prefetch_depth: 2,
+            in_flight: 4,
+            pipeline_epochs: 0,
         }
     }
 }
@@ -169,6 +195,9 @@ pub enum BuildError {
     ZeroFetchFactor,
     /// A block strategy with `block_size == 0`.
     ZeroBlockSize,
+    /// `workers.in_flight == 0`: the reorder buffer needs room for at
+    /// least the fetch being delivered.
+    ZeroInFlight,
     /// `ddp.world_size == 0`.
     ZeroWorldSize,
     /// `ddp.rank >= ddp.world_size`.
@@ -200,6 +229,14 @@ impl fmt::Display for BuildError {
             }
             BuildError::ZeroBlockSize => {
                 write!(f, "block strategies need block_size > 0 (b = 1 is true random sampling)")
+            }
+            BuildError::ZeroInFlight => {
+                write!(
+                    f,
+                    "workers.in_flight must be ≥ 1 (the executor's reorder buffer \
+                     needs room for at least the fetch being delivered); the old \
+                     per-worker prefetch_depth maps onto this knob"
+                )
             }
             BuildError::ZeroWorldSize => {
                 write!(f, "ddp.world_size must be > 0 (use the default DdpConfig for single-process)")
@@ -291,6 +328,9 @@ impl LoaderConfig {
                     });
                 }
             }
+        }
+        if self.workers.in_flight == 0 {
+            return Err(BuildError::ZeroInFlight);
         }
         if self.ddp.world_size == 0 {
             return Err(BuildError::ZeroWorldSize);
@@ -399,8 +439,16 @@ impl ScDatasetBuilder {
         self
     }
 
-    pub fn prefetch_depth(mut self, depth: usize) -> ScDatasetBuilder {
-        self.cfg.workers.prefetch_depth = depth;
+    /// Reorder-buffer bound: executed-but-undelivered fetches (the
+    /// backpressure knob; formerly `prefetch_depth`).
+    pub fn in_flight(mut self, fetches: usize) -> ScDatasetBuilder {
+        self.cfg.workers.in_flight = fetches;
+        self
+    }
+
+    /// Epochs the executor may speculatively plan ahead (0 = off).
+    pub fn pipeline_epochs(mut self, epochs: usize) -> ScDatasetBuilder {
+        self.cfg.workers.pipeline_epochs = epochs;
         self
     }
 
@@ -420,9 +468,10 @@ impl ScDatasetBuilder {
     }
 
     /// Install the paper's `fetch_transform`: runs **once per fetched
-    /// block-batch**, inside the worker that fetched it, before the
-    /// shuffled split into minibatches — the natural place for
-    /// normalization or tokenization over `m·f` rows at a time. The hook
+    /// block-batch**, on the delivery thread in plan order (whatever
+    /// executor worker fetched the data), before the shuffled split into
+    /// minibatches — the natural place for normalization or tokenization
+    /// over `m·f` rows at a time. The hook
     /// may rewrite expression values and label codes but must preserve
     /// the fetched row count (enforced at runtime). An identity hook
     /// leaves the emitted stream bit-identical.
@@ -436,7 +485,7 @@ impl ScDatasetBuilder {
     }
 
     /// Install the paper's `batch_transform`: runs once per emitted
-    /// [`Minibatch`], after the gather, still inside the worker. The hook
+    /// [`Minibatch`], after the gather, still on the delivery thread. The hook
     /// may rewrite the batch in place but must keep rows/labels aligned
     /// with the expression matrix (enforced at runtime).
     pub fn batch_transform<F>(mut self, f: F) -> ScDatasetBuilder
@@ -558,7 +607,7 @@ mod tests {
             .build()
             .unwrap_err();
         assert_eq!(err, BuildError::ZeroBlockSize);
-        let err = ScDataset::builder(b)
+        let err = ScDataset::builder(b.clone())
             .cache(CacheConfig {
                 bytes: 1 << 20,
                 block_rows: 0,
@@ -567,6 +616,9 @@ mod tests {
             .build()
             .unwrap_err();
         assert_eq!(err, BuildError::ZeroCacheBlockRows);
+        let err = ScDataset::builder(b).in_flight(0).build().unwrap_err();
+        assert_eq!(err, BuildError::ZeroInFlight);
+        assert!(err.to_string().contains("prefetch_depth"), "{err}");
     }
 
     #[test]

@@ -1,18 +1,24 @@
 //! Distributed work partitioning (paper Appendix B).
 //!
 //! All ranks deterministically build the *same* epoch plan from a shared
-//! seed (the "broadcast seed"); work is then divided at the **fetch** level:
-//! rank r processes fetches r, r+W, r+2W, … round-robin. With DataLoader
-//! workers enabled, each rank's fetches are further subdivided among its
-//! workers the same way, giving the two-level R × W hierarchy without any
-//! coordination on the data path.
+//! seed (the "broadcast seed"); work is then divided at the **fetch**
+//! level: rank r processes fetches r, r+W, r+2W, … round-robin.
+//!
+//! Partitioning stops at the rank. Within a rank, the loader no longer
+//! statically subdivides fetches among workers (the paper's second level)
+//! — the persistent executor's shared queue load-balances them
+//! dynamically while a reorder buffer keeps delivery in plan order
+//! ([`super::exec`]), so the emitted stream is identical for every worker
+//! count. The worker parameters below remain for the DES simulations and
+//! tests that model the paper's original two-level R × W hierarchy.
 
 /// The fetch ids a given (rank, worker) processes.
 ///
 /// * `n_fetches` — fetches in the epoch plan.
 /// * `rank`, `world_size` — DDP position (world_size ≥ 1).
-/// * `worker`, `num_workers` — worker position within the rank; pass
-///   `(0, 1)` for a single-process loader.
+/// * `worker`, `num_workers` — worker position within the rank; the
+///   loader always passes `(0, 1)` (the executor's shared queue replaces
+///   static worker subdivision).
 pub fn assigned_fetches(
     n_fetches: usize,
     rank: usize,

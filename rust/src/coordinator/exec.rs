@@ -1,0 +1,771 @@
+//! The persistent prefetch executor: one long-lived worker pool per
+//! [`ScDataset`], a shared fetch queue, out-of-order execution, and
+//! strictly in-order delivery.
+//!
+//! # Why this shape
+//!
+//! The paper's Appendix B partitions fetches statically per (rank, worker)
+//! and merges worker outputs through a channel, which makes the emitted
+//! minibatch *order* depend on `num_workers` and thread timing, lets one
+//! straggler fetch idle its whole partition, and re-spawns threads every
+//! epoch. This module replaces that with the execute-out-of-order /
+//! deliver-in-order split already proven by the cache-aware scheduler
+//! (`locality_schedule`), promoted to the whole execution model:
+//!
+//! * **One pool per dataset** — worker threads are spawned once when the
+//!   [`ScDataset`] is built and live until it is dropped, not once per
+//!   epoch.
+//! * **Shared queue** — each epoch's fetches are enqueued in
+//!   `locality_schedule` order; *any* idle worker pulls the next job, so a
+//!   slow fetch delays only itself (dynamic load balancing instead of the
+//!   static round-robin partition).
+//! * **Out-of-order execution, bounded reorder buffer** — workers run
+//!   [`execute_fetch`] (the I/O half: sort/dedup + backend load) in
+//!   whatever order the queue and their speed dictate; completions park in
+//!   a reorder buffer bounded by `WorkerConfig::in_flight` fetches, the
+//!   backpressure unit that replaced the old per-worker channel capacity.
+//! * **In-order delivery** — the consumer drains completions strictly in
+//!   plan order; `finish_fetch` (the shuffle-RNG, the hook layer) and the
+//!   minibatch split run on the consumer thread in that order. With a
+//!   fixed seed the emitted stream is therefore **bit-identical for every
+//!   `num_workers` (including 0) and across repeated runs**.
+//! * **Epoch pipelining** — when a generation's queue drains and
+//!   `WorkerConfig::pipeline_epochs > 0`, an idle worker speculatively
+//!   plans and enqueues the next epoch (plans are a pure function of
+//!   `(seed, epoch)`), so epoch `e+1`'s head fetches overlap epoch `e`'s
+//!   tail drain. A later `epoch()` call for that epoch adopts the
+//!   speculative generation; any other epoch cancels it.
+//!
+//! # Liveness
+//!
+//! The reorder buffer admits a classic deadlock: the consumer needs fetch
+//! `s`, but the `in_flight` budget is fully held by later-in-plan-order
+//! completions, so no worker may start `s`. The queue pop rule prevents
+//! it: a worker may always pop the job the consumer is currently blocked
+//! on (the *needed exemption*), even over budget. Delivery order never
+//! changes — only execution order, which is not contractual — so even
+//! degenerate settings (`in_flight` smaller than the locality window)
+//! make progress.
+//!
+//! # Failure
+//!
+//! A fetch that returns `Err` — or a worker that **panics** inside the
+//! backend — is delivered at its plan position as an `Err` item from
+//! [`EpochIter`]; the stream ends there instead of silently truncating.
+//! Dropping an [`EpochIter`] mid-epoch cancels its generation: queued jobs
+//! are removed, parked completions are discarded, and the drop blocks
+//! until in-flight executions of that generation finish, so an abandoned
+//! epoch can never race the next epoch's backend reconfiguration.
+//!
+//! [`ScDataset`]: super::loader::ScDataset
+//! [`EpochIter`]: super::loader::EpochIter
+
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::store::cache::CachingBackend;
+use crate::store::Backend;
+
+use super::fetch::{execute_fetch, ExecutedFetch};
+use super::plan::EpochPlan;
+
+/// The deterministic work description of one epoch for this rank:
+/// delivery order (`fetch_ids`, plan order) and execution order
+/// (`exec_order`, the locality schedule's permutation of `fetch_ids`).
+pub(crate) struct GenPlan {
+    pub plan: Arc<EpochPlan>,
+    pub fetch_ids: Vec<usize>,
+    pub exec_order: Vec<usize>,
+}
+
+/// Builds the [`GenPlan`] for an epoch — a pure function of the epoch
+/// number (captures the sampling/DDP/cache config), which is what makes
+/// speculative planning of epoch `e+1` safe.
+pub(crate) type GenBuilder = Box<dyn Fn(u64) -> Result<GenPlan> + Send + Sync>;
+
+/// Pool-independent executor knobs, resolved from `WorkerConfig` +
+/// `CacheConfig` by the loader.
+pub(crate) struct ExecutorSettings {
+    pub workers: usize,
+    pub in_flight: usize,
+    pub pipeline_epochs: usize,
+    pub readahead: bool,
+}
+
+/// One queued fetch execution.
+struct Job {
+    gen: u64,
+    /// Delivery position within the generation.
+    seq: u32,
+    fetch_id: usize,
+    plan: Arc<EpochPlan>,
+}
+
+/// An executed fetch parked in the reorder buffer.
+struct Completed {
+    result: Result<ExecutedFetch>,
+    /// Wall-clock nanoseconds of the backend call (stats only).
+    exec_ns: u64,
+}
+
+/// Per-generation bookkeeping.
+struct GenState {
+    epoch: u64,
+    total: u32,
+    /// Jobs of this generation currently inside `execute_fetch`.
+    executing: u32,
+    /// Delivery position the consumer is currently blocked on (enables
+    /// the over-budget needed exemption).
+    needed: Option<u32>,
+    canceled: bool,
+}
+
+#[derive(Default)]
+struct State {
+    /// Jobs not yet started, in execution (locality) order, generations
+    /// back to back.
+    queue: VecDeque<Job>,
+    /// Reorder buffer: executed-but-undelivered fetches.
+    completed: HashMap<(u64, u32), Completed>,
+    gens: HashMap<u64, GenState>,
+    /// Fetches popped but not yet delivered (executing + parked), across
+    /// all generations — the quantity `in_flight` bounds.
+    inflight: usize,
+    next_gen: u64,
+    /// Epoch of the most recently submitted generation (speculation aims
+    /// at `newest_epoch + 1`).
+    newest_epoch: Option<u64>,
+    /// Speculative (not yet adopted) generations, oldest first.
+    spec: VecDeque<u64>,
+    /// A worker is currently building a speculative plan (lock released).
+    spec_building: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for jobs / budget.
+    work: Condvar,
+    /// Consumers (delivery), cancelers and submitters wait here for
+    /// completions / executing-drain / spec-build settle.
+    done: Condvar,
+    backend: Arc<dyn Backend>,
+    cache: Option<Arc<CachingBackend>>,
+    readahead: bool,
+    in_flight: usize,
+    pipeline_epochs: usize,
+    gen_builder: GenBuilder,
+}
+
+/// The long-lived worker pool. Owned by `ScDataset`; dropping it shuts the
+/// workers down and joins them.
+pub(crate) struct Executor {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Executor {
+    pub(crate) fn new(
+        settings: ExecutorSettings,
+        backend: Arc<dyn Backend>,
+        cache: Option<Arc<CachingBackend>>,
+        gen_builder: GenBuilder,
+    ) -> Executor {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State::default()),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            backend,
+            cache,
+            readahead: settings.readahead,
+            in_flight: settings.in_flight,
+            pipeline_epochs: settings.pipeline_epochs,
+            gen_builder,
+        });
+        // The loader only builds an executor for num_workers > 0; a
+        // zero-thread pool would hang its first consumer silently, so
+        // fail loudly in every build profile (once-per-dataset cost).
+        assert!(settings.workers > 0, "executor needs at least one worker");
+        let handles = (0..settings.workers)
+            .map(|w| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("scdata-exec-{w}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn executor worker")
+            })
+            .collect();
+        Executor { shared, handles }
+    }
+
+    /// Submit one epoch: adopt the matching speculative generation if one
+    /// exists (its head fetches are already executing), else plan and
+    /// enqueue a fresh one. Returns the handle the consumer delivers from.
+    pub(crate) fn submit(&self, epoch: u64) -> Result<GenHandle> {
+        let (adopted, stale) = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.spec_building {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            take_spec(&mut st, epoch)
+        };
+        for id in stale {
+            cancel_gen(&self.shared, id);
+        }
+        if let Some((id, total)) = adopted {
+            return Ok(GenHandle {
+                shared: self.shared.clone(),
+                gen: id,
+                total,
+                next: 0,
+            });
+        }
+        let gp = (self.shared.gen_builder)(epoch)?;
+        // Re-check under the lock: a worker may have speculated this very
+        // epoch while our gen_builder call ran unlocked (take_spec's
+        // disarm narrows but cannot fully close that window — the worker
+        // may already have been past its guard). Holding the lock with
+        // spec_building settled makes the check-and-enqueue atomic, so no
+        // duplicate generation can slip in and squat on the in_flight
+        // budget.
+        let stale_after: Vec<u64>;
+        let (id, total) = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.spec_building {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            match take_spec(&mut st, epoch) {
+                (Some((id, total)), stale) => {
+                    // Adopt the raced speculation; drop our plan.
+                    stale_after = stale;
+                    (id, total)
+                }
+                (None, stale) => {
+                    stale_after = stale;
+                    let id = st.next_gen;
+                    st.next_gen += 1;
+                    let total = enqueue_gen(&mut st, id, epoch, gp);
+                    st.newest_epoch = Some(epoch); // re-arms speculation
+                    (id, total)
+                }
+            }
+        };
+        for sid in stale_after {
+            cancel_gen(&self.shared, sid);
+        }
+        self.shared.work.notify_all();
+        Ok(GenHandle {
+            shared: self.shared.clone(),
+            gen: id,
+            total,
+            next: 0,
+        })
+    }
+}
+
+/// With the lock held and `spec_building` settled: adopt the speculative
+/// generation for `epoch` if one exists. On a hit, speculations *before*
+/// it (epochs the caller skipped) are drained for cancellation; on a
+/// miss, every remaining speculation was built from a now-superseded
+/// basis, so all are drained **and speculation is disarmed**
+/// (`newest_epoch = None`) — otherwise an idle worker would immediately
+/// rebuild from the stale basis while the caller plans unlocked. The
+/// caller's enqueue re-arms it. Returns `(adopted, stale ids to cancel
+/// outside the lock)`.
+fn take_spec(st: &mut State, epoch: u64) -> (Option<(u64, u32)>, Vec<u64>) {
+    match st.spec.iter().position(|id| st.gens[id].epoch == epoch) {
+        Some(pos) => {
+            let stale = st.spec.drain(..pos).collect();
+            let id = st.spec.pop_front().expect("position found above");
+            let total = st.gens[&id].total;
+            (Some((id, total)), stale)
+        }
+        None => {
+            st.newest_epoch = None;
+            (None, st.spec.drain(..).collect())
+        }
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            st.queue.clear();
+        }
+        self.shared.work.notify_all();
+        self.shared.done.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Consumer handle for one submitted generation. `next_executed` yields
+/// the generation's fetches strictly in plan order; dropping the handle
+/// cancels whatever was not delivered.
+pub(crate) struct GenHandle {
+    shared: Arc<Shared>,
+    gen: u64,
+    total: u32,
+    next: u32,
+}
+
+impl GenHandle {
+    /// Block until the next plan-order fetch is resident and take it.
+    /// Returns `None` once the generation is exhausted.
+    pub(crate) fn next_executed(&mut self) -> Option<(Result<ExecutedFetch>, u64)> {
+        if self.next >= self.total {
+            return None;
+        }
+        let key = (self.gen, self.next);
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(c) = st.completed.remove(&key) {
+                st.inflight -= 1;
+                if let Some(g) = st.gens.get_mut(&self.gen) {
+                    g.needed = None;
+                }
+                self.next += 1;
+                drop(st);
+                // Budget was released; also lets an idle worker start
+                // speculating once the queue drains.
+                self.shared.work.notify_all();
+                return Some((c.result, c.exec_ns));
+            }
+            if st.shutdown {
+                // Terminal by construction: the next call returns None
+                // rather than an infinite Err stream.
+                self.next = self.total;
+                return Some((
+                    Err(anyhow!(
+                        "executor shut down while epoch was still streaming \
+                         (ScDataset dropped before its EpochIter)"
+                    )),
+                    0,
+                ));
+            }
+            if let Some(g) = st.gens.get_mut(&self.gen) {
+                g.needed = Some(self.next);
+            }
+            // Wake a worker so the needed exemption can apply.
+            self.shared.work.notify_all();
+            st = self.shared.done.wait(st).unwrap();
+        }
+    }
+}
+
+impl Drop for GenHandle {
+    fn drop(&mut self) {
+        cancel_gen(&self.shared, self.gen);
+    }
+}
+
+/// Enqueue a generation's jobs in execution order; returns its fetch
+/// count.
+fn enqueue_gen(st: &mut State, id: u64, epoch: u64, gp: GenPlan) -> u32 {
+    let GenPlan {
+        plan,
+        fetch_ids,
+        exec_order,
+    } = gp;
+    let total = fetch_ids.len() as u32;
+    let seq_of: HashMap<usize, u32> = fetch_ids
+        .iter()
+        .enumerate()
+        .map(|(s, &f)| (f, s as u32))
+        .collect();
+    for &fid in &exec_order {
+        st.queue.push_back(Job {
+            gen: id,
+            seq: seq_of[&fid],
+            fetch_id: fid,
+            plan: plan.clone(),
+        });
+    }
+    st.gens.insert(
+        id,
+        GenState {
+            epoch,
+            total,
+            executing: 0,
+            needed: None,
+            canceled: false,
+        },
+    );
+    total
+}
+
+/// Cancel a generation: purge its queued jobs and parked completions,
+/// then block until its in-flight executions finish (so an abandoned
+/// epoch can never race whatever the caller does next).
+fn cancel_gen(shared: &Shared, gen: u64) {
+    let mut st = shared.state.lock().unwrap();
+    if !st.gens.contains_key(&gen) {
+        return;
+    }
+    {
+        let g = st.gens.get_mut(&gen).expect("checked above");
+        g.canceled = true;
+        g.needed = None;
+    }
+    st.queue.retain(|j| j.gen != gen);
+    let before = st.completed.len();
+    st.completed.retain(|&(g2, _), _| g2 != gen);
+    st.inflight -= before - st.completed.len();
+    st.spec.retain(|&id| id != gen);
+    shared.work.notify_all();
+    while st.gens.get(&gen).map_or(0, |g| g.executing) > 0 {
+        st = shared.done.wait(st).unwrap();
+    }
+    st.gens.remove(&gen);
+}
+
+/// Pop the next startable job: the queue head while the `in_flight`
+/// budget allows, otherwise only the job the consumer is blocked on (the
+/// needed exemption — guarantees in-order delivery can always progress).
+fn pop_eligible(st: &mut State, in_flight: usize) -> Option<Job> {
+    if st.queue.is_empty() {
+        return None;
+    }
+    let pos = if st.inflight < in_flight {
+        0
+    } else {
+        // Over budget: only the fetch a consumer is blocked on may pop.
+        // Gens are few — checking them first skips the O(queue) scan in
+        // the common nobody-blocked case.
+        if !st.gens.values().any(|g| g.needed.is_some()) {
+            return None;
+        }
+        st.queue.iter().position(|j| {
+            st.gens
+                .get(&j.gen)
+                .is_some_and(|g| g.needed == Some(j.seq))
+        })?
+    };
+    let job = st.queue.remove(pos).expect("position in bounds");
+    st.inflight += 1;
+    if let Some(g) = st.gens.get_mut(&job.gen) {
+        g.executing += 1;
+    }
+    Some(job)
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn worker_loop(shared: &Arc<Shared>) {
+    loop {
+        // Phase 1 (locked): acquire a job, speculate, or exit.
+        let (job, readahead_next) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(job) = pop_eligible(&mut st, shared.in_flight) {
+                    let ra = if shared.readahead {
+                        st.queue.front().map(|j| (j.plan.clone(), j.fetch_id))
+                    } else {
+                        None
+                    };
+                    break (job, ra);
+                }
+                // Epoch pipelining: the queue is drained — plan the next
+                // epoch ahead so its head fetches overlap this epoch's
+                // tail drain. Plans are deterministic, so this cannot
+                // change any stream; a mispredicted epoch is canceled at
+                // the next submit().
+                if shared.pipeline_epochs > 0
+                    && st.queue.is_empty()
+                    && !st.spec_building
+                    && st.spec.len() < shared.pipeline_epochs
+                {
+                    let basis = st.newest_epoch;
+                    if let Some(next) = basis.and_then(|e| e.checked_add(1)) {
+                        st.spec_building = true;
+                        drop(st);
+                        // A panic while planning must not kill the worker
+                        // with spec_building stuck true (that would hang
+                        // every later submit()).
+                        let built = catch_unwind(AssertUnwindSafe(|| {
+                            (shared.gen_builder)(next)
+                        }))
+                        .unwrap_or_else(|p| {
+                            Err(anyhow!(
+                                "speculative planning panicked: {}",
+                                panic_message(p.as_ref())
+                            ))
+                        });
+                        let mut st2 = shared.state.lock().unwrap();
+                        st2.spec_building = false;
+                        // A submit() may have raced the unlocked build (its
+                        // own gen_builder call runs without the lock and
+                        // moves newest_epoch when it enqueues). Only keep
+                        // the speculation if the world still matches the
+                        // basis it was built on — otherwise it would
+                        // duplicate a just-submitted epoch's I/O or chase a
+                        // stale epoch sequence.
+                        let still_valid = !st2.shutdown
+                            && st2.newest_epoch == basis
+                            && st2.spec.len() < shared.pipeline_epochs;
+                        if still_valid {
+                            match built {
+                                Ok(gp) => {
+                                    let id = st2.next_gen;
+                                    st2.next_gen += 1;
+                                    enqueue_gen(&mut st2, id, next, gp);
+                                    st2.spec.push_back(id);
+                                    st2.newest_epoch = Some(next);
+                                    shared.work.notify_all();
+                                }
+                                // Planning failed: stop speculating until
+                                // the next submit() re-arms it (that call
+                                // will surface the error to the caller).
+                                Err(_) => st2.newest_epoch = None,
+                            }
+                        }
+                        // submit() may be waiting on spec_building.
+                        shared.done.notify_all();
+                        st = st2;
+                        continue;
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        // Phase 2 (unlocked): readahead hint + the actual I/O. The job's
+        // inflight/executing counts are already committed, so a panic in
+        // the (best-effort) prefetch hint must not unwind past the
+        // accounting in phase 3 — swallow it; the fetch itself decides.
+        if let (Some(cache), Some((plan, fid))) =
+            (shared.cache.as_ref(), readahead_next)
+        {
+            // Prefetch the next *queued* fetch's blocks while this one
+            // loads — the shared-queue replacement for the old per-worker
+            // readahead hook.
+            let _ = catch_unwind(AssertUnwindSafe(|| {
+                cache.prefetch(plan.fetch_indices(fid));
+            }));
+        }
+        let t0 = std::time::Instant::now();
+        let result = match catch_unwind(AssertUnwindSafe(|| {
+            execute_fetch(&shared.backend, job.plan.fetch_indices(job.fetch_id))
+        })) {
+            Ok(r) => r,
+            Err(p) => Err(anyhow!(
+                "worker panicked while executing fetch {}: {}",
+                job.fetch_id,
+                panic_message(p.as_ref())
+            )),
+        };
+        let exec_ns = t0.elapsed().as_nanos() as u64;
+        // Phase 3 (locked): park the result (or discard it if canceled).
+        let mut st = shared.state.lock().unwrap();
+        let discard = match st.gens.get_mut(&job.gen) {
+            Some(g) => {
+                g.executing -= 1;
+                g.canceled
+            }
+            None => true,
+        };
+        if discard {
+            st.inflight -= 1;
+            shared.work.notify_all();
+        } else {
+            st.completed
+                .insert((job.gen, job.seq), Completed { result, exec_ns });
+        }
+        drop(st);
+        // Wakes the consumer (a completion), a canceler (executing
+        // drained), or both.
+        shared.done.notify_all();
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::field_reassign_with_default)]
+mod tests {
+    use super::super::builder::{SamplingConfig, WorkerConfig};
+    use super::super::loader::{LoaderConfig, ScDataset};
+    use super::super::plan::Strategy;
+    use super::*;
+    use crate::store::{AccessPattern, CsrBatch, FetchResult, IoReport, ObsFrame};
+
+    /// Synthetic backend: row r holds one nonzero `(r % 4, r as f32)`.
+    /// `panic_row` injects a worker panic when that row is fetched.
+    struct SynthBackend {
+        n: usize,
+        obs: ObsFrame,
+        panic_row: Option<u32>,
+    }
+
+    impl SynthBackend {
+        fn new(n: usize, panic_row: Option<u32>) -> SynthBackend {
+            SynthBackend {
+                n,
+                obs: ObsFrame::new(n),
+                panic_row,
+            }
+        }
+    }
+
+    impl Backend for SynthBackend {
+        fn n_rows(&self) -> usize {
+            self.n
+        }
+        fn n_cols(&self) -> usize {
+            4
+        }
+        fn obs(&self) -> &ObsFrame {
+            &self.obs
+        }
+        fn pattern(&self) -> AccessPattern {
+            AccessPattern::BatchedCoalesced
+        }
+        fn fetch_rows(&self, sorted: &[u32]) -> Result<FetchResult> {
+            if let Some(p) = self.panic_row {
+                if sorted.contains(&p) {
+                    panic!("injected panic at row {p}");
+                }
+            }
+            let mut x = CsrBatch::empty(4);
+            for &r in sorted {
+                x.indices.push(r % 4);
+                x.data.push(r as f32);
+                x.indptr.push(x.indices.len() as u64);
+                x.n_rows += 1;
+            }
+            Ok(FetchResult {
+                x,
+                io: IoReport {
+                    calls: 1,
+                    runs: 1,
+                    rows: sorted.len() as u64,
+                    bytes: sorted.len() as u64 * 8,
+                    chunks: 1,
+                    ..IoReport::default()
+                },
+            })
+        }
+        fn name(&self) -> &str {
+            "synth"
+        }
+    }
+
+    fn config(workers: usize, in_flight: usize, pipeline: usize) -> LoaderConfig {
+        let mut cfg = LoaderConfig::default();
+        cfg.sampling = SamplingConfig {
+            strategy: Strategy::BlockShuffling { block_size: 4 },
+            batch_size: 8,
+            fetch_factor: 2,
+            seed: 21,
+            drop_last: false,
+        };
+        cfg.workers = WorkerConfig {
+            num_workers: workers,
+            in_flight,
+            pipeline_epochs: pipeline,
+        };
+        cfg
+    }
+
+    fn stream(ds: &ScDataset, epoch: u64) -> Vec<(Vec<u32>, CsrBatch)> {
+        ds.epoch(epoch)
+            .unwrap()
+            .map(|mb| {
+                let mb = mb.unwrap();
+                (mb.rows, mb.x)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pool_matches_synchronous_stream_for_tiny_in_flight() {
+        let b: Arc<dyn Backend> = Arc::new(SynthBackend::new(257, None));
+        let expect = stream(&ScDataset::new(b.clone(), config(0, 4, 0)), 0);
+        assert!(!expect.is_empty());
+        // in_flight = 1 forces maximal reliance on the needed exemption;
+        // in_flight = 16 exercises a deep reorder buffer.
+        for (workers, in_flight, pipeline) in
+            [(1usize, 1usize, 0usize), (3, 1, 1), (3, 16, 1), (8, 2, 2)]
+        {
+            let ds = ScDataset::new(b.clone(), config(workers, in_flight, pipeline));
+            assert_eq!(
+                stream(&ds, 0),
+                expect,
+                "workers={workers} in_flight={in_flight} pipeline={pipeline}"
+            );
+        }
+    }
+
+    #[test]
+    fn epochs_pipeline_through_one_pool() {
+        let b: Arc<dyn Backend> = Arc::new(SynthBackend::new(300, None));
+        let sync = ScDataset::new(b.clone(), config(0, 4, 0));
+        let pooled = ScDataset::new(b.clone(), config(4, 4, 1));
+        // Consecutive epochs reuse the same pool; epoch 1 is speculated
+        // while epoch 0 drains and must still match the sync stream.
+        for epoch in 0..3u64 {
+            assert_eq!(stream(&pooled, epoch), stream(&sync, epoch), "epoch {epoch}");
+        }
+        // Replaying an already-speculated-past epoch discards the
+        // speculation and still reproduces.
+        assert_eq!(stream(&pooled, 0), stream(&sync, 0), "replayed epoch 0");
+    }
+
+    #[test]
+    fn worker_panic_is_delivered_as_err() {
+        let b: Arc<dyn Backend> = Arc::new(SynthBackend::new(200, Some(190)));
+        let ds = ScDataset::new(b, config(3, 4, 0));
+        let mut saw_err = false;
+        for mb in ds.epoch(0).unwrap() {
+            match mb {
+                Ok(_) => {}
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    assert!(msg.contains("panicked"), "{msg}");
+                    assert!(msg.contains("injected panic"), "{msg}");
+                    saw_err = true;
+                    break;
+                }
+            }
+        }
+        assert!(saw_err, "panic must surface as an Err item, not a hang/truncation");
+    }
+
+    #[test]
+    fn dropping_mid_epoch_cancels_and_pool_survives() {
+        let b: Arc<dyn Backend> = Arc::new(SynthBackend::new(400, None));
+        let ds = ScDataset::new(b.clone(), config(4, 8, 1));
+        let expect = stream(&ScDataset::new(b, config(0, 4, 0)), 0);
+        for _ in 0..3 {
+            let mut iter = ds.epoch(0).unwrap();
+            let first = iter.next().unwrap().unwrap();
+            assert_eq!(first.rows, expect[0].0);
+            drop(iter); // cancels the generation, joins in-flight work
+        }
+        // The same pool still delivers a full, correct epoch afterwards.
+        assert_eq!(stream(&ds, 0), expect);
+    }
+
+    #[test]
+    fn dataset_drop_joins_workers() {
+        let b: Arc<dyn Backend> = Arc::new(SynthBackend::new(100, None));
+        let ds = ScDataset::new(b, config(4, 4, 1));
+        let _ = stream(&ds, 0);
+        drop(ds); // must not hang: shutdown + join in Executor::drop
+    }
+}

@@ -50,8 +50,9 @@ impl FetchView<'_> {
     }
 }
 
-/// The paper's `fetch_transform` hook: runs once per fetched block-batch
-/// inside the worker that fetched it. Shared across workers, hence
+/// The paper's `fetch_transform` hook: runs once per fetched block-batch,
+/// at delivery time in plan order (so the transformed stream is identical
+/// for any worker count). Shared across epochs/threads, hence
 /// `Send + Sync`.
 pub type FetchTransform =
     Arc<dyn Fn(&mut FetchView<'_>) -> Result<()> + Send + Sync>;
@@ -105,8 +106,9 @@ impl FetchedChunk {
 
 /// The I/O half of a fetch: the backend result over the sorted unique
 /// indices, before the in-memory reshuffle. Produced by [`execute_fetch`]
-/// (possibly out of delivery order, under the cache-aware scheduler) and
-/// turned into a [`FetchedChunk`] by [`finish_fetch`] at delivery time.
+/// (possibly out of delivery order — by the cache-aware scheduler or the
+/// persistent executor's workers) and turned into a [`FetchedChunk`] by
+/// [`finish_fetch`] at delivery time.
 #[derive(Clone, Debug)]
 pub struct ExecutedFetch {
     /// Sorted, de-duplicated row ids sent to the backend (line 7).

@@ -1,6 +1,6 @@
 //! `ScDataset` — the user-facing loader (the PyTorch `IterableDataset`
 //! analogue) tying the plan, fetch execution, transform hooks, shuffle
-//! buffer, worker pool and DDP partitioning together.
+//! buffer, the persistent prefetch executor and DDP partitioning together.
 //!
 //! # Constructing a loader
 //!
@@ -35,25 +35,48 @@
 //!
 //! # Execution model
 //!
-//! * `workers.num_workers == 0`: synchronous iteration in the caller's
-//!   thread (deterministic order — plan order).
-//! * `workers.num_workers > 0`: a thread pool; each worker owns a disjoint
-//!   fetch list (Appendix B round-robin) and streams minibatches into a
-//!   bounded channel — the bound is the backpressure that keeps prefetch
-//!   memory at `prefetch_depth` fetches per worker, like PyTorch's
-//!   `prefetch_factor`.
+//! Every epoch runs the same four-stage pipeline —
+//! **queue → out-of-order execute → reorder buffer → in-order finish** —
+//! the only difference `workers.num_workers` makes is *who* executes:
 //!
-//! Hooks run **inside** the worker that fetched the data:
-//! `fetch_transform` once per fetched block-batch (before the shuffled
-//! split), `batch_transform` once per emitted minibatch (after the
-//! gather). Identity hooks leave the stream bit-identical
-//! (`tests/determinism.rs`).
+//! * `num_workers == 0`: the caller's thread executes fetches lazily, in
+//!   `locality_schedule` order, delivering in plan order.
+//! * `num_workers > 0`: the dataset's **persistent executor**
+//!   ([`super::exec`]) — a worker pool spawned once per `ScDataset` and
+//!   reused across epochs — pulls fetches from a shared queue (any idle
+//!   worker takes the next job; a straggler delays only itself), executes
+//!   them out of order, and parks completions in a reorder buffer bounded
+//!   by `workers.in_flight` fetches (the backpressure knob: peak prefetch
+//!   memory is `in_flight` fetches of `m·f` rows). With
+//!   `workers.pipeline_epochs > 0` the executor starts epoch `e+1`'s head
+//!   fetches while epoch `e`'s tail drains.
+//!
+//! In both modes the consumer thread drains fetches **strictly in plan
+//! order** and runs `finish_fetch` (the line-9 shuffle RNG), the hook
+//! layer (`fetch_transform`, then the split, then `batch_transform`) in
+//! that order. Deliberate tradeoff: hooks and the gather are serialized
+//! on the delivery thread (the backend I/O and the decode pool still
+//! parallelize); a CPU-bound transform caps at one core regardless of
+//! `num_workers` — if that becomes the bottleneck, move the work into
+//! the decode pool or precompute it, and see the ROADMAP note on
+//! per-fetch RNG forking. The ordered-delivery guarantee: **with a fixed seed the
+//! emitted minibatch stream — row ids, labels and CSR payloads — is
+//! bit-identical for every `num_workers` (including 0) and across
+//! repeated runs** (`tests/determinism.rs`). Worker count, `in_flight`,
+//! epoch pipelining, the cache, the locality scheduler and the decode
+//! pipeline are all execution-only.
+//!
+//! Failure is part of the contract: a failed fetch — including a worker
+//! **panic** — surfaces as an `Err` item at its plan position instead of
+//! silently truncating the stream, and dropping an [`EpochIter`]
+//! mid-epoch cancels its generation (queued work is discarded; the drop
+//! joins in-flight fetches so an abandoned epoch cannot race the next
+//! one).
 //!
 //! [`BuildError`]: super::builder::BuildError
 
 use std::collections::HashMap;
 use std::fmt;
-use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
@@ -66,6 +89,7 @@ use super::builder::{
     CacheConfig, DdpConfig, IoConfig, SamplingConfig, ScDatasetBuilder, WorkerConfig,
 };
 use super::ddp::assigned_fetches;
+use super::exec::{Executor, ExecutorSettings, GenHandle, GenPlan};
 use super::fetch::{execute_fetch, finish_fetch, ExecutedFetch, FetchTransform};
 use super::plan::{build_plan, locality_schedule, EpochPlan, Strategy};
 
@@ -83,8 +107,8 @@ pub struct Minibatch {
 }
 
 /// The paper's `batch_transform` hook: runs once per emitted minibatch,
-/// after the gather, inside the worker. Shared across workers, hence
-/// `Send + Sync`.
+/// after the gather, on the delivery thread (in plan order). Shared
+/// across epochs, hence `Send + Sync`.
 pub type BatchTransform = Arc<dyn Fn(&mut Minibatch) -> Result<()> + Send + Sync>;
 
 /// The transform hooks installed by the builder. Both default to `None`
@@ -118,7 +142,7 @@ pub struct LoaderConfig {
     pub sampling: SamplingConfig,
     /// Obs columns whose codes ride along with each minibatch.
     pub label_cols: Vec<String>,
-    /// Worker pool + backpressure.
+    /// Persistent executor: pool size + in-flight budget + pipelining.
     pub workers: WorkerConfig,
     /// DDP rank / world size (fetch-level round robin).
     pub ddp: DdpConfig,
@@ -161,6 +185,10 @@ fn io_pipeline(cfg: &LoaderConfig) -> IoPipeline {
 }
 
 /// Accumulated loading statistics for one epoch iteration.
+///
+/// Recorded at **delivery** time, so `fetch_reports` is in plan order for
+/// every worker count (it used to interleave nondeterministically under
+/// the old per-worker channels).
 #[derive(Clone, Debug, Default)]
 pub struct LoadStats {
     pub batches: u64,
@@ -182,6 +210,9 @@ pub struct ScDataset {
     cache: Option<Arc<CachingBackend>>,
     cfg: LoaderConfig,
     hooks: Hooks,
+    /// The persistent worker pool (`workers.num_workers > 0`): spawned
+    /// once here, reused by every `epoch()`, joined on drop.
+    exec: Option<Executor>,
 }
 
 impl fmt::Debug for ScDataset {
@@ -191,8 +222,42 @@ impl fmt::Debug for ScDataset {
             .field("cached", &self.cache.is_some())
             .field("cfg", &self.cfg)
             .field("hooks", &self.hooks)
+            .field("executor", &self.exec.is_some())
             .finish()
     }
+}
+
+/// Build the [`GenPlan`] for one epoch: the plan, this rank's fetch ids
+/// (delivery order) and the locality schedule (execution order). Pure in
+/// `(cfg, epoch)` — the executor relies on this to speculate epoch `e+1`.
+fn build_gen_plan(
+    backend: &Arc<dyn Backend>,
+    sampling: &SamplingConfig,
+    ddp: DdpConfig,
+    cache: CacheConfig,
+    epoch: u64,
+) -> Result<GenPlan> {
+    let plan = Arc::new(build_plan(
+        &sampling.strategy,
+        backend.n_rows(),
+        sampling.batch_size,
+        sampling.fetch_factor,
+        sampling.seed,
+        epoch,
+        Some(backend.obs()),
+        sampling.drop_last,
+    )?);
+    let fetch_ids = assigned_fetches(plan.n_fetches(), ddp.rank, ddp.world_size, 0, 1);
+    let exec_order = if cache.locality_window > 1 {
+        locality_schedule(&plan, &fetch_ids, cache.block_rows, cache.locality_window)
+    } else {
+        fetch_ids.clone()
+    };
+    Ok(GenPlan {
+        plan,
+        fetch_ids,
+        exec_order,
+    })
 }
 
 impl ScDataset {
@@ -219,7 +284,7 @@ impl ScDataset {
                 backend.clone(),
                 BlockCacheConfig {
                     capacity_bytes: cfg.cache.bytes,
-                    block_rows: cfg.cache.block_rows.max(1),
+                    block_rows: cfg.cache.block_rows,
                     readahead: cfg.cache.readahead,
                 },
             )))
@@ -233,11 +298,34 @@ impl ScDataset {
         // Execution-only decode/coalescing knobs; the cache wrapper
         // forwards them to the inner store where the read path lives.
         backend.set_io_pipeline(io_pipeline(&cfg));
+        // The persistent executor: spawned once per dataset, reused
+        // across epochs (acceptance: never re-spawned per epoch).
+        let exec = if cfg.workers.num_workers > 0 {
+            let gb_backend = backend.clone();
+            let sampling = cfg.sampling.clone();
+            let (ddp, cache_cfg) = (cfg.ddp, cfg.cache);
+            Some(Executor::new(
+                ExecutorSettings {
+                    workers: cfg.workers.num_workers,
+                    in_flight: cfg.workers.in_flight,
+                    pipeline_epochs: cfg.workers.pipeline_epochs,
+                    readahead: cfg.cache.readahead && cache.is_some(),
+                },
+                backend.clone(),
+                cache.clone(),
+                Box::new(move |epoch| {
+                    build_gen_plan(&gb_backend, &sampling, ddp, cache_cfg, epoch)
+                }),
+            ))
+        } else {
+            None
+        };
         ScDataset {
             backend,
             cache,
             cfg,
             hooks,
+            exec,
         }
     }
 
@@ -287,156 +375,76 @@ impl ScDataset {
         // mix of both configs.
         self.backend.set_io_pipeline(io_pipeline(&self.cfg));
         let sampling = &self.cfg.sampling;
-        let plan = Arc::new(self.plan(epoch)?);
-        let n_fetches = plan.n_fetches();
         let stats = Arc::new(Mutex::new(LoadStats::default()));
-        let use_buffer = matches!(
-            sampling.strategy,
-            Strategy::Streaming { shuffle_buffer } if shuffle_buffer > 0
-        );
-        let shuffle_in_fetch = !matches!(sampling.strategy, Strategy::Streaming { .. });
-        let window = self.cfg.cache.locality_window;
-        let block_rows = self.cfg.cache.block_rows.max(1);
-        let readahead = self.cfg.cache.readahead && self.cache.is_some();
-        // Shared constructor: the cache-aware scheduler picks the
-        // *execution* order within the bounded window; delivery stays in
-        // plan order so the emitted stream is schedule-independent.
-        let make_stream = |fetch_ids: Vec<usize>, rng: Rng| -> FetchStream {
-            let exec_order = if window > 1 {
-                locality_schedule(&plan, &fetch_ids, block_rows, window)
-            } else {
-                fetch_ids.clone()
-            };
-            FetchStream {
-                backend: self.backend.clone(),
-                cache: self.cache.clone(),
-                plan: plan.clone(),
-                fetch_ids,
-                exec_order,
-                next_deliver: 0,
-                next_exec: 0,
-                pending: HashMap::new(),
-                readahead,
-                label_cols: self.cfg.label_cols.clone(),
-                rng,
-                shuffle_in_fetch,
-                fetch_transform: self.hooks.fetch_transform.clone(),
-                stats: stats.clone(),
+        // The only `num_workers` difference: who executes fetches. The
+        // delivery side below is identical, which is what makes the
+        // stream worker-count-invariant by construction.
+        let source = match &self.exec {
+            Some(exec) => FetchSource::Pool(exec.submit(epoch)?),
+            None => {
+                let gp = build_gen_plan(
+                    &self.backend,
+                    sampling,
+                    self.cfg.ddp,
+                    self.cfg.cache,
+                    epoch,
+                )?;
+                FetchSource::Inline(InlineSource {
+                    backend: self.backend.clone(),
+                    cache: self.cache.clone(),
+                    readahead: self.cfg.cache.readahead && self.cache.is_some(),
+                    plan: gp.plan,
+                    fetch_ids: gp.fetch_ids,
+                    exec_order: gp.exec_order,
+                    next_deliver: 0,
+                    next_exec: 0,
+                    pending: HashMap::new(),
+                })
             }
         };
-        if self.cfg.workers.num_workers == 0 {
-            let fetch_ids = assigned_fetches(
-                n_fetches,
-                self.cfg.ddp.rank,
-                self.cfg.ddp.world_size,
-                0,
-                1,
-            );
-            let source = make_stream(fetch_ids, Rng::new(sampling.seed).fork(0x10_000 + epoch));
-            let inner: Box<dyn Iterator<Item = Result<Minibatch>> + Send> = if use_buffer {
-                let cap = match sampling.strategy {
-                    Strategy::Streaming { shuffle_buffer } => shuffle_buffer,
-                    _ => unreachable!(),
-                };
-                Box::new(ShuffleBufferIter::new(
-                    source,
-                    sampling.batch_size,
-                    cap,
-                    Rng::new(sampling.seed).fork(0x20_000 + epoch),
-                    sampling.drop_last,
-                ))
-            } else {
-                Box::new(SplitIter::new(
-                    source,
-                    sampling.batch_size,
-                    sampling.drop_last,
-                ))
-            };
-            let inner: Box<dyn Iterator<Item = Result<Minibatch>> + Send> =
-                match self.hooks.batch_transform.clone() {
-                    Some(hook) => Box::new(BatchHookIter { inner, hook }),
-                    None => inner,
-                };
-            return Ok(EpochIter {
-                inner,
-                stats,
-                _workers: Vec::new(),
-            });
-        }
-
-        // Worker-pool path.
-        let workers = self.cfg.workers.num_workers;
-        let cap = (self.cfg.workers.prefetch_depth.max(1)) * workers * sampling.fetch_factor;
-        let (tx, rx) = sync_channel::<Result<Minibatch>>(cap);
-        let mut handles = Vec::new();
-        for w in 0..workers {
-            let fetch_ids = assigned_fetches(
-                n_fetches,
-                self.cfg.ddp.rank,
-                self.cfg.ddp.world_size,
-                w,
-                workers,
-            );
-            // Distinct shuffle stream per (epoch, worker) — same for
-            // every rank.
-            let source = make_stream(
-                fetch_ids,
-                Rng::new(sampling.seed).fork(0x10_000 + epoch).fork(w as u64),
-            );
-            let tx = tx.clone();
-            let batch_size = sampling.batch_size;
-            let drop_last = sampling.drop_last;
-            let buffer_cap = match sampling.strategy {
+        let stream = DeliverStream {
+            source,
+            backend: self.backend.clone(),
+            label_cols: self.cfg.label_cols.clone(),
+            // One shuffle stream per epoch, identical for every worker
+            // count — the RNG is consumed at delivery, in plan order.
+            rng: Rng::new(sampling.seed).fork(0x10_000 + epoch),
+            shuffle_in_fetch: !matches!(sampling.strategy, Strategy::Streaming { .. }),
+            fetch_transform: self.hooks.fetch_transform.clone(),
+            stats: stats.clone(),
+            failed: false,
+        };
+        let inner: Box<dyn Iterator<Item = Result<Minibatch>> + Send> =
+            match sampling.strategy {
                 Strategy::Streaming { shuffle_buffer } if shuffle_buffer > 0 => {
-                    Some(shuffle_buffer)
+                    Box::new(ShuffleBufferIter::new(
+                        stream,
+                        sampling.batch_size,
+                        shuffle_buffer,
+                        Rng::new(sampling.seed).fork(0x20_000 + epoch),
+                        sampling.drop_last,
+                    ))
                 }
-                _ => None,
+                _ => Box::new(SplitIter::new(
+                    stream,
+                    sampling.batch_size,
+                    sampling.drop_last,
+                )),
             };
-            let seed = sampling.seed;
-            let batch_hook = self.hooks.batch_transform.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("scdata-worker-{w}"))
-                .spawn(move || {
-                    let inner: Box<dyn Iterator<Item = Result<Minibatch>>> =
-                        if let Some(cap) = buffer_cap {
-                            Box::new(ShuffleBufferIter::new(
-                                source,
-                                batch_size,
-                                cap,
-                                Rng::new(seed).fork(0x20_000 + epoch).fork(w as u64),
-                                drop_last,
-                            ))
-                        } else {
-                            Box::new(SplitIter::new(source, batch_size, drop_last))
-                        };
-                    let iter: Box<dyn Iterator<Item = Result<Minibatch>>> = match batch_hook {
-                        Some(hook) => Box::new(BatchHookIter { inner, hook }),
-                        None => inner,
-                    };
-                    for item in iter {
-                        // A send error means the consumer hung up: stop.
-                        if tx.send(item).is_err() {
-                            break;
-                        }
-                    }
-                })
-                .expect("spawn worker");
-            handles.push(handle);
-        }
-        drop(tx); // channel closes when all workers finish
-        Ok(EpochIter {
-            inner: Box::new(ChannelIter { rx }),
-            stats,
-            _workers: handles,
-        })
+        let inner: Box<dyn Iterator<Item = Result<Minibatch>> + Send> =
+            match self.hooks.batch_transform.clone() {
+                Some(hook) => Box::new(BatchHookIter { inner, hook }),
+                None => inner,
+            };
+        Ok(EpochIter { inner, stats })
     }
 }
 
-/// Iterator over an epoch's minibatches.
+/// Iterator over an epoch's minibatches. Dropping it mid-epoch cancels
+/// the underlying generation (pool mode) after joining in-flight fetches.
 pub struct EpochIter {
     inner: Box<dyn Iterator<Item = Result<Minibatch>> + Send>,
     stats: Arc<Mutex<LoadStats>>,
-    _workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl EpochIter {
@@ -457,18 +465,6 @@ impl Iterator for EpochIter {
             s.rows += mb.x.n_rows as u64;
         }
         item
-    }
-}
-
-struct ChannelIter {
-    rx: Receiver<Result<Minibatch>>,
-}
-
-impl Iterator for ChannelIter {
-    type Item = Result<Minibatch>;
-
-    fn next(&mut self) -> Option<Self::Item> {
-        self.rx.recv().ok()
     }
 }
 
@@ -501,39 +497,48 @@ impl<I: Iterator<Item = Result<Minibatch>>> Iterator for BatchHookIter<I> {
     }
 }
 
-/// Streams fetched (and optionally reshuffled) chunks from the plan.
-///
-/// Fetches are *executed* against the backend in `exec_order` (the
-/// cache-aware schedule) but *delivered* in `fetch_ids` (plan) order;
-/// out-of-order completions wait in `pending` (bounded by the locality
-/// window). The line-9 shuffle RNG — and the `fetch_transform` hook —
-/// are consumed at delivery time, so the emitted minibatch stream is
-/// identical whatever the execution order.
-struct FetchStream {
+/// Where executed fetches come from: the caller's thread (`Inline`,
+/// `num_workers == 0`) or the persistent executor (`Pool`). Both yield
+/// `(ExecutedFetch, exec_ns)` strictly in plan order.
+enum FetchSource {
+    Inline(InlineSource),
+    Pool(GenHandle),
+}
+
+impl FetchSource {
+    fn next_executed(&mut self) -> Option<(Result<ExecutedFetch>, u64)> {
+        match self {
+            FetchSource::Inline(s) => s.next_executed(),
+            FetchSource::Pool(h) => h.next_executed(),
+        }
+    }
+}
+
+/// Synchronous execution in the caller's thread: fetches are *executed*
+/// in `exec_order` (the cache-aware schedule) but *delivered* in
+/// `fetch_ids` (plan) order; out-of-order completions wait in `pending`
+/// (bounded by the locality window).
+struct InlineSource {
     backend: Arc<dyn Backend>,
     /// Set when caching is enabled — the readahead hook lives here.
     cache: Option<Arc<CachingBackend>>,
+    /// Prefetch the next scheduled fetch's blocks while executing.
+    readahead: bool,
     plan: Arc<EpochPlan>,
-    /// Delivery order: this stream's fetch ids, in plan order.
+    /// Delivery order: this rank's fetch ids, in plan order.
     fetch_ids: Vec<usize>,
     /// Execution order: bounded-window permutation of `fetch_ids`.
     exec_order: Vec<usize>,
     next_deliver: usize,
     next_exec: usize,
-    /// Executed-but-undelivered fetches (≤ window + 1 entries).
-    pending: HashMap<usize, ExecutedFetch>,
-    /// Prefetch the next scheduled fetch's blocks while executing.
-    readahead: bool,
-    label_cols: Vec<String>,
-    rng: Rng,
-    shuffle_in_fetch: bool,
-    /// The paper's `fetch_transform` hook (identity when `None`).
-    fetch_transform: Option<FetchTransform>,
-    stats: Arc<Mutex<LoadStats>>,
+    /// Executed-but-undelivered fetches (≤ window + 1 entries). Failures
+    /// park here too, keyed by the *failing* fetch — so an error
+    /// surfaces at its own plan position, exactly like the pool path.
+    pending: HashMap<usize, (Result<ExecutedFetch>, u64)>,
 }
 
-impl FetchStream {
-    fn next_chunk(&mut self) -> Option<Result<super::fetch::FetchedChunk>> {
+impl InlineSource {
+    fn next_executed(&mut self) -> Option<(Result<ExecutedFetch>, u64)> {
         let id = *self.fetch_ids.get(self.next_deliver)?;
         self.next_deliver += 1;
         // Run scheduled fetches until the one to deliver is resident.
@@ -550,21 +555,52 @@ impl FetchStream {
                 }
             }
             let t0 = std::time::Instant::now();
-            match execute_fetch(&self.backend, self.plan.fetch_indices(eid)) {
-                Ok(ex) => {
-                    let dt = t0.elapsed().as_nanos() as u64;
-                    let mut s = self.stats.lock().unwrap();
-                    s.fetches += 1;
-                    s.io.add(&ex.fetched.io);
-                    s.fetch_reports.push(ex.fetched.io);
-                    s.real_fetch_ns += dt;
-                    drop(s);
-                    self.pending.insert(eid, ex);
-                }
-                Err(e) => return Some(Err(e)),
-            }
+            let result = execute_fetch(&self.backend, self.plan.fetch_indices(eid));
+            self.pending
+                .insert(eid, (result, t0.elapsed().as_nanos() as u64));
         }
-        let ex = self.pending.remove(&id).expect("executed above");
+        let (result, ns) = self.pending.remove(&id).expect("executed above");
+        Some((result, ns))
+    }
+}
+
+/// The delivery half shared by both modes: takes executed fetches in plan
+/// order, records stats, and runs `finish_fetch` — the line-9 shuffle
+/// RNG and the `fetch_transform` hook — so the emitted stream is
+/// identical whatever executed the fetch, in whatever order.
+struct DeliverStream {
+    source: FetchSource,
+    backend: Arc<dyn Backend>,
+    label_cols: Vec<String>,
+    rng: Rng,
+    shuffle_in_fetch: bool,
+    /// The paper's `fetch_transform` hook (identity when `None`).
+    fetch_transform: Option<FetchTransform>,
+    stats: Arc<Mutex<LoadStats>>,
+    /// An `Err` item ends the stream.
+    failed: bool,
+}
+
+impl DeliverStream {
+    fn next_chunk(&mut self) -> Option<Result<super::fetch::FetchedChunk>> {
+        if self.failed {
+            return None;
+        }
+        let (result, exec_ns) = self.source.next_executed()?;
+        let ex = match result {
+            Err(e) => {
+                self.failed = true;
+                return Some(Err(e));
+            }
+            Ok(ex) => ex,
+        };
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.fetches += 1;
+            s.io.add(&ex.fetched.io);
+            s.fetch_reports.push(ex.fetched.io);
+            s.real_fetch_ns += exec_ns;
+        }
         Some(finish_fetch(
             ex,
             &self.backend,
@@ -581,7 +617,7 @@ impl FetchStream {
 
 /// Splits fetched chunks into minibatches of `m` (Algorithm 1 lines 10–12).
 struct SplitIter {
-    source: FetchStream,
+    source: DeliverStream,
     batch_size: usize,
     drop_last: bool,
     current: Option<super::fetch::FetchedChunk>,
@@ -590,7 +626,7 @@ struct SplitIter {
 }
 
 impl SplitIter {
-    fn new(source: FetchStream, batch_size: usize, drop_last: bool) -> SplitIter {
+    fn new(source: DeliverStream, batch_size: usize, drop_last: bool) -> SplitIter {
         SplitIter {
             source,
             batch_size,
@@ -660,7 +696,7 @@ impl Iterator for SplitIter {
 /// `Strategy::Streaming { shuffle_buffer > 0 }` and the shuffle-buffer
 /// baseline of §4.4.
 struct ShuffleBufferIter {
-    source: FetchStream,
+    source: DeliverStream,
     batch_size: usize,
     capacity: usize,
     rng: Rng,
@@ -674,7 +710,7 @@ struct ShuffleBufferIter {
 
 impl ShuffleBufferIter {
     fn new(
-        source: FetchStream,
+        source: DeliverStream,
         batch_size: usize,
         capacity: usize,
         rng: Rng,
@@ -826,6 +862,42 @@ mod tests {
                 (0..n as u32).collect::<Vec<_>>(),
                 "workers={workers}"
             );
+        }
+    }
+
+    #[test]
+    fn worker_stream_equals_synchronous_stream() {
+        // The headline executor contract at the unit level: identical
+        // (rows, x, labels) sequence for 0 and N workers.
+        let (_d, b) = backend(300);
+        let cfg = |workers: usize| LoaderConfig {
+            sampling: SamplingConfig {
+                strategy: Strategy::BlockShuffling { block_size: 8 },
+                batch_size: 32,
+                fetch_factor: 2,
+                seed: 5,
+                ..SamplingConfig::default()
+            },
+            workers: WorkerConfig {
+                num_workers: workers,
+                ..WorkerConfig::default()
+            },
+            label_cols: vec!["plate".into()],
+            ..Default::default()
+        };
+        let collect = |ds: &ScDataset, epoch: u64| -> Vec<(Vec<u32>, CsrBatch, Vec<Vec<u16>>)> {
+            ds.epoch(epoch)
+                .unwrap()
+                .map(|mb| {
+                    let mb = mb.unwrap();
+                    (mb.rows, mb.x, mb.labels)
+                })
+                .collect()
+        };
+        let sync = ScDataset::new(b.clone(), cfg(0));
+        let pooled = ScDataset::new(b, cfg(3));
+        for epoch in [0u64, 1, 2] {
+            assert_eq!(collect(&sync, epoch), collect(&pooled, epoch), "epoch {epoch}");
         }
     }
 
@@ -1008,6 +1080,36 @@ mod tests {
     }
 
     #[test]
+    fn fetch_reports_are_plan_ordered_for_any_worker_count() {
+        // Stats are recorded at delivery, so the per-fetch report list is
+        // deterministic and identical for 0 and N workers.
+        let (_d, b) = backend(300);
+        let run = |workers: usize| {
+            let ds = ScDataset::new(
+                b.clone(),
+                LoaderConfig {
+                    sampling: SamplingConfig {
+                        strategy: Strategy::BlockShuffling { block_size: 8 },
+                        batch_size: 32,
+                        fetch_factor: 2,
+                        seed: 3,
+                        ..SamplingConfig::default()
+                    },
+                    workers: WorkerConfig {
+                        num_workers: workers,
+                        ..WorkerConfig::default()
+                    },
+                    ..Default::default()
+                },
+            );
+            let mut iter = ds.epoch(0).unwrap();
+            while iter.next().is_some() {}
+            iter.stats().fetch_reports
+        };
+        assert_eq!(run(0), run(4));
+    }
+
+    #[test]
     fn cache_and_scheduler_preserve_coverage() {
         let (_d, b) = backend(300);
         let n = b.n_rows();
@@ -1160,7 +1262,7 @@ mod tests {
     fn worker_pool_reports_errors() {
         // The builder rejects unknown label columns at build() time; the
         // unvalidated ScDataset::new path must still fail loudly at run
-        // time (first batch), including across the worker channel.
+        // time (first batch), including through the executor.
         let (_d, b) = backend(100);
         let ds = ScDataset::new(
             b,

@@ -1,14 +1,16 @@
 //! The scDataset coordinator — the paper's contribution (Sections 3.1–3.4,
 //! Appendices A–B): index planning with block sampling, batched fetching,
-//! sampling strategies, the fetch pipeline with worker pools and
-//! backpressure, DDP-style fetch partitioning, the minibatch-entropy
-//! theory, the experimental (b, f) auto-tuner, and the builder-based
-//! construction API with typed sub-configs and transform hooks.
+//! sampling strategies, the persistent prefetch executor (shared fetch
+//! queue, out-of-order execution, in-order delivery — see [`exec`]),
+//! DDP-style fetch partitioning, the minibatch-entropy theory, the
+//! experimental (b, f) auto-tuner, and the builder-based construction API
+//! with typed sub-configs and transform hooks.
 
 pub mod autotune;
 pub mod builder;
 pub mod ddp;
 pub mod entropy;
+pub mod exec;
 pub mod fetch;
 pub mod loader;
 pub mod plan;

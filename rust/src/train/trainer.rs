@@ -2,6 +2,14 @@
 //! scDataset pipeline into the AOT-compiled train step (PJRT engine) or the
 //! pure-Rust reference model (CPU engine), then evaluate macro-F1 on the
 //! held-out test plate.
+//!
+//! With `cfg.loader.workers.num_workers > 0` the training dataset owns a
+//! persistent executor: its worker pool is spawned once at `build()` and
+//! reused by every `ds.epoch(e)` call in the loop below, and (with
+//! `pipeline_epochs > 0`) epoch `e+1`'s head fetches start while `e`'s
+//! tail is still being consumed. The loss sequence is bit-reproducible
+//! for any worker count — the executor delivers minibatches in plan
+//! order (`tests/determinism.rs`).
 
 use std::sync::Arc;
 
@@ -168,6 +176,10 @@ pub fn train_eval(
         sim_reports = iter.stats().fetch_reports;
     }
     let train_secs = t_train.elapsed().as_secs_f64();
+    // Release the training loader before evaluation: this joins its
+    // executor pool and discards any speculative next-epoch fetches, so
+    // post-training disk bandwidth belongs to the eval pass alone.
+    drop(ds);
     let final_loss = losses.last().map(|&(_, l)| l).unwrap_or(f64::NAN);
 
     // Push final PJRT params into the CPU model for unified evaluation.
@@ -176,7 +188,9 @@ pub fn train_eval(
     }
 
     // Evaluate on the held-out plate (streamed sequentially with a high
-    // fetch factor — the paper's §4.2 inference recommendation).
+    // fetch factor — the paper's §4.2 inference recommendation). The eval
+    // loader is synchronous on purpose: one pass over one plate has no
+    // epoch to pipeline into, so an executor pool would idle after it.
     let t_eval = std::time::Instant::now();
     let eval_ds = ScDataset::builder(test_backend.clone())
         .strategy(Strategy::Streaming { shuffle_buffer: 0 })

@@ -26,7 +26,7 @@ fn full_cli_flow() {
 
     // bench: every experiment that doesn't need artifacts, in quick mode
     for exp in [
-        "fig2", "fig3", "fig4", "eq5", "fig6", "fig7", "fig8", "fig9", "table2",
+        "fig2", "fig3", "fig4", "eq5", "fig6", "fig7", "fig8", "fig9", "fig10", "table2",
     ] {
         run(argv(&format!(
             "bench {exp} --data {data_s} --results {results_s} --quick"
@@ -45,9 +45,10 @@ fn full_cli_flow() {
     .unwrap();
     assert!(results.join("fig5.json").exists());
 
-    // train + autotune + calibrate
+    // train (through the persistent executor) + autotune + calibrate
     run(argv(&format!(
-        "train --data {data_s} --task moa_broad --strategy block --block 8 --fetch 8 --max-steps 5 --lr 0.01"
+        "train --data {data_s} --task moa_broad --strategy block --block 8 --fetch 8 \
+         --max-steps 5 --lr 0.01 --workers 2 --in-flight 2"
     )))
     .unwrap();
     run(argv(&format!("autotune --data {data_s}"))).unwrap();
@@ -78,6 +79,26 @@ fn train_surfaces_typed_builder_errors() {
     .unwrap_err()
     .to_string();
     assert!(err.contains("cache"), "{err}");
+}
+
+#[test]
+fn train_surfaces_zero_in_flight_error() {
+    // --in-flight 0 is a typed BuildError (the reorder buffer needs room
+    // for the fetch being delivered), not a silent clamp.
+    let dir = TempDir::new("cli-inflight").unwrap();
+    let data = dir.join("d");
+    run(argv(&format!(
+        "gen-data --out {} --preset tiny --plates 2 --cells 200",
+        data.display()
+    )))
+    .unwrap();
+    let err = run(argv(&format!(
+        "train --data {} --task moa_broad --max-steps 1 --workers 2 --in-flight 0",
+        data.display()
+    )))
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("in_flight"), "{err}");
 }
 
 #[test]

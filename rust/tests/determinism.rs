@@ -1,16 +1,15 @@
-//! Determinism guarantees (ISSUE 2 + ISSUE 3 + ISSUE 4 acceptance):
+//! Determinism guarantees (ISSUE 2–5 acceptance). The contract was
+//! upgraded from multiset to **stream** equality by the persistent
+//! prefetch executor (ISSUE 5): with a fixed seed the emitted minibatch
+//! stream — row ids, labels and CSR payloads — is bit-identical
 //!
-//! * with a fixed seed, `num_workers = 0` and `num_workers = 4` yield the
-//!   identical per-epoch multiset of global row ids;
-//! * enabling the block cache and/or the cache-aware scheduler changes
-//!   neither the per-epoch row-id multiset nor (for `num_workers = 0`)
-//!   the exact minibatch stream — rows, expression data and labels;
-//! * the intra-fetch decode pipeline (`io.decode_threads`,
-//!   `io.coalesce_gap_bytes`) is execution-only: any setting, combined
-//!   with any cache/scheduler setting, emits the bit-identical stream;
-//! * installing **identity** `fetch_transform`/`batch_transform` hooks
-//!   through the builder leaves the stream bit-identical to a hook-free
-//!   loader.
+//! * for every `num_workers ∈ {0, 1, 4}` (ordered delivery), and across
+//!   two consecutive runs at `num_workers = 4`;
+//! * with the block cache and/or the cache-aware scheduler on or off;
+//! * for any intra-fetch decode pipeline setting (`io.decode_threads`,
+//!   `io.coalesce_gap_bytes`);
+//! * with **identity** `fetch_transform`/`batch_transform` hooks
+//!   installed through the builder.
 //!
 //! All loaders are constructed through `ScDataset::builder` (the public
 //! API); base configs are assembled by mutating `LoaderConfig::default()`
@@ -47,15 +46,6 @@ fn stream(ds: &ScDataset, epoch: u64) -> Stream {
         .collect()
 }
 
-fn multiset(ds: &ScDataset, epoch: u64) -> Vec<u32> {
-    let mut rows: Vec<u32> = stream(ds, epoch)
-        .into_iter()
-        .flat_map(|(r, _, _)| r)
-        .collect();
-    rows.sort_unstable();
-    rows
-}
-
 fn base_cfg() -> LoaderConfig {
     let mut cfg = LoaderConfig::default();
     cfg.sampling.strategy = Strategy::BlockShuffling { block_size: 8 };
@@ -79,16 +69,108 @@ fn make(b: &Arc<dyn Backend>, cfg: LoaderConfig) -> ScDataset {
 }
 
 #[test]
-fn worker_counts_yield_identical_multiset() {
+fn worker_counts_yield_identical_stream() {
+    // ISSUE 5 acceptance: byte-identical stream (rows, expression data,
+    // labels) for num_workers ∈ {0, 1, 4}, across epochs, through one
+    // persistent pool per dataset.
     let (_d, b) = dataset(400);
+    let w0 = make(&b, base_cfg());
+    let w1 = make(&b, vary(|c| c.workers.num_workers = 1));
+    let w4 = make(&b, vary(|c| c.workers.num_workers = 4));
     for epoch in [0u64, 1] {
-        let w0 = make(&b, base_cfg());
-        let w4 = make(&b, vary(|c| c.workers.num_workers = 4));
+        let expect = stream(&w0, epoch);
+        assert!(!expect.is_empty());
         assert_eq!(
-            multiset(&w0, epoch),
-            multiset(&w4, epoch),
-            "workers must not change the epoch-{epoch} row multiset"
+            stream(&w1, epoch),
+            expect,
+            "1 worker changed the epoch-{epoch} stream"
         );
+        assert_eq!(
+            stream(&w4, epoch),
+            expect,
+            "4 workers changed the epoch-{epoch} stream"
+        );
+    }
+}
+
+#[test]
+fn repeated_runs_reproduce_with_workers() {
+    // Run-to-run: two fresh 4-worker datasets (fresh pools, fresh thread
+    // interleavings) emit the identical stream, and the same dataset
+    // replays an epoch identically after its pool has been reused.
+    let (_d, b) = dataset(400);
+    let a = make(&b, vary(|c| c.workers.num_workers = 4));
+    let c2 = make(&b, vary(|c| c.workers.num_workers = 4));
+    for epoch in [0u64, 1] {
+        assert_eq!(
+            stream(&a, epoch),
+            stream(&c2, epoch),
+            "independent runs diverged at epoch {epoch}"
+        );
+    }
+    assert_eq!(
+        stream(&a, 0),
+        stream(&c2, 0),
+        "replay through a reused pool diverged"
+    );
+}
+
+#[test]
+fn executor_knobs_do_not_change_the_stream() {
+    // in_flight and pipeline_epochs are execution-only, including the
+    // in_flight=1 degenerate case (maximal reliance on the executor's
+    // needed-exemption pop rule).
+    let (_d, b) = dataset(400);
+    let plain = make(&b, base_cfg());
+    for (in_flight, pipeline) in [(1usize, 0usize), (2, 1), (16, 2)] {
+        let ds = make(
+            &b,
+            vary(|c| {
+                c.workers.num_workers = 4;
+                c.workers.in_flight = in_flight;
+                c.workers.pipeline_epochs = pipeline;
+            }),
+        );
+        for epoch in [0u64, 1] {
+            assert_eq!(
+                stream(&ds, epoch),
+                stream(&plain, epoch),
+                "in_flight={in_flight} pipeline={pipeline} epoch={epoch}"
+            );
+        }
+    }
+}
+
+#[test]
+fn streaming_stream_invariant_with_workers() {
+    // Streaming — with and without the rolling shuffle buffer, which now
+    // sits on top of the pooled fetch source (the most-restructured
+    // delivery path) — must be byte-identical for 0 vs 4 workers too.
+    let (_d, b) = dataset(300);
+    for shuffle_buffer in [0usize, 64] {
+        let mk = |workers: usize| {
+            let mut cfg = LoaderConfig::default();
+            cfg.sampling.strategy = Strategy::Streaming { shuffle_buffer };
+            cfg.sampling.batch_size = 16;
+            cfg.sampling.fetch_factor = 4;
+            cfg.sampling.seed = 13;
+            cfg.label_cols = vec!["plate".into()];
+            cfg.workers.num_workers = workers;
+            cfg.workers.in_flight = 3;
+            cfg.workers.pipeline_epochs = 1;
+            make(&b, cfg)
+        };
+        let w0 = mk(0);
+        let w4 = mk(4);
+        for epoch in [0u64, 1] {
+            let expect = stream(&w0, epoch);
+            assert!(!expect.is_empty());
+            assert_eq!(
+                stream(&w4, epoch),
+                expect,
+                "buffer={shuffle_buffer} epoch={epoch}"
+            );
+        }
     }
 }
 
@@ -111,9 +193,9 @@ fn worker_counts_agree_with_cache_and_scheduler() {
     };
     let plain = make(&b, base_cfg());
     for epoch in [0u64, 1] {
-        let expect = multiset(&plain, epoch);
-        assert_eq!(multiset(&cached(0), epoch), expect);
-        assert_eq!(multiset(&cached(4), epoch), expect);
+        let expect = stream(&plain, epoch);
+        assert_eq!(stream(&cached(0), epoch), expect, "epoch {epoch}, workers 0");
+        assert_eq!(stream(&cached(4), epoch), expect, "epoch {epoch}, workers 4");
     }
 }
 
@@ -239,11 +321,11 @@ fn decode_pipeline_does_not_change_the_stream() {
 }
 
 #[test]
-fn decode_pipeline_multiset_invariant_with_workers() {
+fn decode_pipeline_stream_invariant_with_workers() {
     let (_d, b) = dataset(400);
     let plain = make(&b, base_cfg());
     for epoch in [0u64, 1] {
-        let expect = multiset(&plain, epoch);
+        let expect = stream(&plain, epoch);
         for workers in [0usize, 4] {
             let ds = make(
                 &b,
@@ -256,7 +338,7 @@ fn decode_pipeline_multiset_invariant_with_workers() {
                 }),
             );
             assert_eq!(
-                multiset(&ds, epoch),
+                stream(&ds, epoch),
                 expect,
                 "workers={workers}, epoch={epoch}"
             );
@@ -413,11 +495,11 @@ fn identity_hooks_do_not_change_the_stream() {
 }
 
 #[test]
-fn identity_hooks_multiset_invariant_with_workers() {
+fn identity_hooks_stream_invariant_with_workers() {
     let (_d, b) = dataset(400);
     let plain = make(&b, base_cfg());
     for epoch in [0u64, 1] {
-        let expect = multiset(&plain, epoch);
+        let expect = stream(&plain, epoch);
         for workers in [0usize, 4] {
             let hooked = ScDataset::builder(b.clone())
                 .config(vary(|c| c.workers.num_workers = workers))
@@ -426,7 +508,7 @@ fn identity_hooks_multiset_invariant_with_workers() {
                 .build()
                 .unwrap();
             assert_eq!(
-                multiset(&hooked, epoch),
+                stream(&hooked, epoch),
                 expect,
                 "workers={workers}, epoch={epoch}"
             );

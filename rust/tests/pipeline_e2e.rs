@@ -67,9 +67,12 @@ fn every_strategy_covers_or_samples_correctly() {
 }
 
 #[test]
-fn worker_counts_agree_on_coverage() {
+fn worker_counts_agree_on_stream() {
+    // Stream equality, not just coverage: the executor delivers in plan
+    // order, so every worker count emits the identical row sequence.
     let (_d, backend) = dataset(700);
     let n = backend.n_rows();
+    let mut expect: Option<Vec<u32>> = None;
     for workers in [0usize, 1, 2, 5] {
         let ds = ScDataset::builder(backend.clone())
             .strategy(Strategy::BlockShuffling { block_size: 8 })
@@ -78,15 +81,23 @@ fn worker_counts_agree_on_coverage() {
             .num_workers(workers)
             .build()
             .unwrap();
-        let mut rows = epoch_rows(&ds);
-        rows.sort_unstable();
-        assert_eq!(rows.len(), n, "workers={workers}");
-        assert_eq!(rows, (0..n as u32).collect::<Vec<_>>());
+        let rows = epoch_rows(&ds);
+        match &expect {
+            None => {
+                let mut sorted = rows.clone();
+                sorted.sort_unstable();
+                assert_eq!(sorted, (0..n as u32).collect::<Vec<_>>());
+                expect = Some(rows);
+            }
+            Some(e) => assert_eq!(&rows, e, "workers={workers} changed the stream"),
+        }
     }
 }
 
 #[test]
 fn two_level_ddp_times_workers_partition() {
+    // Ranks partition fetches; within a rank the executor's shared queue
+    // (not a static per-worker split) serves any worker count.
     let (_d, backend) = dataset(600);
     let n = backend.n_rows();
     let mut all = Vec::new();
@@ -182,15 +193,17 @@ fn missing_label_column_is_a_typed_build_error() {
 }
 
 #[test]
-fn backpressure_bounded_channel_does_not_deadlock() {
-    // Tiny prefetch depth + many workers: consumer drains slowly.
+fn backpressure_bounded_reorder_buffer_does_not_deadlock() {
+    // in_flight = 1 with many workers: all but one worker idle at any
+    // instant and delivery relies on the needed-exemption pop rule; the
+    // consumer drains slowly on top.
     let (_d, backend) = dataset(500);
     let ds = ScDataset::builder(backend)
         .strategy(Strategy::BlockShuffling { block_size: 8 })
         .batch_size(16)
         .fetch_factor(2)
         .num_workers(4)
-        .prefetch_depth(1)
+        .in_flight(1)
         .build()
         .unwrap();
     let mut count = 0;
@@ -205,26 +218,35 @@ fn backpressure_bounded_channel_does_not_deadlock() {
 }
 
 #[test]
-fn dropping_iterator_midway_stops_workers() {
+fn dropping_iterator_midway_cancels_cleanly() {
+    // Dropping an EpochIter mid-epoch cancels its generation (queued
+    // fetches discarded, in-flight ones joined) — and the persistent
+    // pool must then serve the next epoch with no leftover interference:
+    // the replayed epoch equals an untouched dataset's stream exactly.
     let (_d, backend) = dataset(800);
-    let ds = ScDataset::builder(backend)
-        .strategy(Strategy::BlockShuffling { block_size: 8 })
-        .batch_size(16)
-        .fetch_factor(2)
-        .num_workers(4)
-        .prefetch_depth(1)
-        .build()
-        .unwrap();
+    let build = || {
+        ScDataset::builder(backend.clone())
+            .strategy(Strategy::BlockShuffling { block_size: 8 })
+            .batch_size(16)
+            .fetch_factor(2)
+            .num_workers(4)
+            .in_flight(1)
+            .build()
+            .unwrap()
+    };
+    let ds = build();
     let mut iter = ds.epoch(0).unwrap();
     let _ = iter.next().unwrap().unwrap();
-    drop(iter); // must not hang on worker join
+    drop(iter); // must not hang, must not leak detached work
+    let replay = epoch_rows(&ds);
+    assert_eq!(replay, epoch_rows(&build()), "abandoned epoch leaked into the next");
 }
 
 #[test]
 fn hooks_run_inside_workers_end_to_end() {
-    // fetch_transform (log1p) + batch_transform (label collapse) through
-    // the real worker pool: coverage intact, labels remapped, values
-    // transformed.
+    // fetch_transform (log1p) + batch_transform (label collapse) with the
+    // real executor pool fetching: hooks run at delivery in plan order;
+    // coverage intact, labels remapped, values transformed.
     let (_d, backend) = dataset(600);
     let n = backend.n_rows();
     let ds = ScDataset::builder(backend)

@@ -355,13 +355,14 @@ fn prop_cached_loader_covers_and_matches_plain_stream() {
             all == (0..n as u32).collect::<Vec<_>>(),
             "cached epoch lost/duplicated rows"
         );
-        // single-process: the exact minibatch sequence must be identical
-        if base.workers.num_workers == 0 {
-            prop_assert!(
-                plain == with_cache,
-                "cache/scheduler changed the emitted stream"
-            );
-        }
+        // The exact minibatch sequence must be identical for ANY worker
+        // count — the executor delivers in plan order (this used to be
+        // guarded on num_workers == 0).
+        prop_assert!(
+            plain == with_cache,
+            "cache/scheduler changed the emitted stream (workers={})",
+            base.workers.num_workers
+        );
         Ok(())
     });
 }
@@ -434,6 +435,90 @@ fn prop_decode_pipeline_stream_invariant() {
         prop_assert!(
             all == (0..n as u32).collect::<Vec<_>>(),
             "pipeline epoch lost/duplicated rows"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_executor_schedule_stream_invariant() {
+    // ISSUE 5 acceptance: the persistent executor's schedule — worker
+    // count, in-flight budget, epoch pipelining, locality window, cache
+    // on/off — is execution-only. Each case samples a random executor
+    // configuration (the actual queue-pop order is then further
+    // randomized by real thread timing) and requires the full stream
+    // (rows + expression data + labels) to equal the synchronous
+    // num_workers = 0 run, across two consecutive epochs.
+    let dir = TempDir::new("prop-exec").unwrap();
+    let mut cfg = TahoeConfig::tiny();
+    cfg.n_plates = 3;
+    cfg.cells_per_plate = 350;
+    generate(&cfg, dir.path()).unwrap();
+    let backend: Arc<dyn Backend> = Arc::new(open_collection(dir.path()).unwrap());
+    let n = backend.n_rows();
+    check("executor-stream", 10, |rng| {
+        let mut base = LoaderConfig::default();
+        base.sampling.strategy = Strategy::BlockShuffling {
+            block_size: rng.range(1, 48),
+        };
+        base.sampling.batch_size = rng.range(1, 80);
+        base.sampling.fetch_factor = rng.range(1, 6);
+        base.sampling.seed = rng.next_u64();
+        base.label_cols = vec!["plate".into()];
+        let cache_on = rng.bernoulli(0.5);
+        if cache_on {
+            base.cache = CacheConfig {
+                bytes: rng.range(10_000, 8 << 20),
+                block_rows: rng.range(1, 400),
+                locality_window: rng.range(0, 12),
+                readahead: rng.bernoulli(0.5),
+            };
+        }
+        let mut pooled = base.clone();
+        pooled.workers.num_workers = rng.range(1, 6);
+        pooled.workers.in_flight = rng.range(1, 9);
+        pooled.workers.pipeline_epochs = rng.range(0, 3);
+        let first_epoch = rng.range(0, 3) as u64;
+        type Stream = Vec<(Vec<u32>, scdata::store::CsrBatch, Vec<Vec<u16>>)>;
+        let run = |cfg: &LoaderConfig| -> Result<Vec<Stream>, String> {
+            let ds = ScDataset::builder(backend.clone())
+                .config(cfg.clone())
+                .build()
+                .map_err(|e| e.to_string())?;
+            // Two consecutive epochs through ONE dataset: the pooled run
+            // reuses its executor (and, with pipeline_epochs > 0,
+            // speculates the second epoch while the first drains).
+            let mut out = Vec::new();
+            for epoch in [first_epoch, first_epoch + 1] {
+                let mut s = Vec::new();
+                for mb in ds.epoch(epoch).map_err(|e| e.to_string())? {
+                    let mb = mb.map_err(|e| e.to_string())?;
+                    s.push((mb.rows, mb.x, mb.labels));
+                }
+                out.push(s);
+            }
+            Ok(out)
+        };
+        let sync = run(&base)?;
+        let with_pool = run(&pooled)?;
+        prop_assert!(
+            sync == with_pool,
+            "executor changed the emitted stream (workers={} in_flight={} \
+             pipeline={} window={} cache={})",
+            pooled.workers.num_workers,
+            pooled.workers.in_flight,
+            pooled.workers.pipeline_epochs,
+            pooled.cache.locality_window,
+            cache_on
+        );
+        let mut all: Vec<u32> = with_pool[0]
+            .iter()
+            .flat_map(|(r, _, _)| r.iter().copied())
+            .collect();
+        all.sort_unstable();
+        prop_assert!(
+            all == (0..n as u32).collect::<Vec<_>>(),
+            "pooled epoch lost/duplicated rows"
         );
         Ok(())
     });
