@@ -1,79 +1,105 @@
 //! Bench: Figure 10 — persistent prefetch executor. Sweeps the worker
-//! count at a fixed `in_flight` budget over pipelined epochs and reports
-//! **real wall-clock** rows/s, then asserts the executor's headline
-//! contract: the emitted row stream is byte-identical for every worker
-//! count (including 0) and across repeated runs.
+//! count at a fixed `in_flight` budget over pipelined epochs, under both
+//! seed schemas, and reports **real wall-clock** rows/s plus the
+//! delivery thread's occupancy (finish_fetch time vs reorder-buffer
+//! wait). Then asserts the executor's headline contract: within each
+//! schema the emitted row stream is byte-identical for every worker
+//! count (including 0) and across repeated runs, the schemas emit
+//! different streams, and under v2 the delivery thread never runs
+//! finish_fetch.
 
 mod common;
 
 use scdata::bench_harness::{measure_executor_point, measure_executor_sweep};
-use scdata::coordinator::Strategy;
+use scdata::coordinator::{SeedSchema, Strategy};
 use scdata::util::stats::fmt_rate;
 
 fn main() {
     let backend = common::bench_backend();
-    let opts = common::bench_opts();
+    let mut opts = common::bench_opts();
     let strategy = Strategy::BlockShuffling { block_size: 16 };
     let (fetch_factor, in_flight, epochs) = (64usize, 4usize, 2usize);
     let grid = [0usize, 1, 2, 4];
 
-    let pts = measure_executor_sweep(
-        &backend,
-        strategy.clone(),
-        fetch_factor,
-        &grid,
-        in_flight,
-        epochs,
-        &opts,
-    )
-    .unwrap();
+    println!("== Fig 10 — persistent executor (in_flight {in_flight}, {epochs} epochs) ==");
+    let mut schema_streams = Vec::new();
+    for schema in [SeedSchema::V1, SeedSchema::V2] {
+        opts.seed_schema = schema;
+        let pts = measure_executor_sweep(
+            &backend,
+            strategy.clone(),
+            fetch_factor,
+            &grid,
+            in_flight,
+            epochs,
+            &opts,
+        )
+        .unwrap();
 
-    println!("== Fig 10 — persistent executor (in_flight {in_flight}, {epochs} epochs) ==\n");
-    println!("| workers | rows/s (real) | speedup |");
-    println!("|---|---|---|");
-    let base = pts[0].real_samples_per_sec.max(1e-9);
-    for p in &pts {
+        println!("\nseed_schema={schema}:\n");
+        println!("| workers | rows/s (real) | speedup | deliver finish | deliver wait |");
+        println!("|---|---|---|---|---|");
+        let base = pts[0].real_samples_per_sec.max(1e-9);
+        for p in &pts {
+            println!(
+                "| {} | {} | {:.2}× | {:.1} ms | {:.1} ms |",
+                p.num_workers,
+                fmt_rate(p.real_samples_per_sec),
+                p.real_samples_per_sec / base,
+                p.deliver_finish_ns as f64 / 1e6,
+                p.deliver_wait_ns as f64 / 1e6
+            );
+        }
+        let t0 = pts.first().unwrap();
+        let tn = pts.last().unwrap();
         println!(
-            "| {} | {} | {:.2}× |",
-            p.num_workers,
-            fmt_rate(p.real_samples_per_sec),
-            p.real_samples_per_sec / base
+            "executor scaling ({schema}): {} → {} rows/s from {}→{} workers ({:.2}×)",
+            fmt_rate(t0.real_samples_per_sec),
+            fmt_rate(tn.real_samples_per_sec),
+            t0.num_workers,
+            tn.num_workers,
+            tn.real_samples_per_sec / t0.real_samples_per_sec.max(1e-9)
         );
-    }
-    let t0 = pts.first().unwrap();
-    let tn = pts.last().unwrap();
-    println!(
-        "\nexecutor scaling: {} → {} rows/s from {}→{} workers ({:.2}×)",
-        fmt_rate(t0.real_samples_per_sec),
-        fmt_rate(tn.real_samples_per_sec),
-        t0.num_workers,
-        tn.num_workers,
-        tn.real_samples_per_sec / t0.real_samples_per_sec.max(1e-9)
-    );
 
-    // Acceptance: ordered delivery makes the stream worker-count- and
-    // run-invariant. Wall-clock scaling is reported, not asserted — it
-    // depends on this machine's core count and page cache.
-    for p in &pts {
+        // Acceptance: ordered delivery makes the stream worker-count- and
+        // run-invariant. Wall-clock scaling is reported, not asserted — it
+        // depends on this machine's core count and page cache.
+        for p in &pts {
+            assert_eq!(
+                p.row_stream, pts[0].row_stream,
+                "executor changed the emitted stream at num_workers={} ({schema})",
+                p.num_workers
+            );
+            if schema == SeedSchema::V2 {
+                assert_eq!(
+                    p.deliver_finish_ns, 0,
+                    "v2 ran finish_fetch on the delivery thread at num_workers={}",
+                    p.num_workers
+                );
+            }
+        }
+        let repeat = measure_executor_point(
+            &backend,
+            strategy.clone(),
+            fetch_factor,
+            *grid.last().unwrap(),
+            in_flight,
+            epochs,
+            &opts,
+        )
+        .unwrap();
         assert_eq!(
-            p.row_stream, pts[0].row_stream,
-            "executor changed the emitted stream at num_workers={}",
-            p.num_workers
+            repeat.row_stream, pts[0].row_stream,
+            "repeated run diverged ({schema})"
         );
+        schema_streams.push(pts[0].row_stream.clone());
     }
-    let repeat = measure_executor_point(
-        &backend,
-        strategy,
-        fetch_factor,
-        *grid.last().unwrap(),
-        in_flight,
-        epochs,
-        &opts,
-    )
-    .unwrap();
-    assert_eq!(
-        repeat.row_stream, pts[0].row_stream,
-        "repeated run diverged"
+    assert_ne!(
+        schema_streams[0], schema_streams[1],
+        "seed_schema v1 and v2 emitted the same stream"
     );
-    println!("stream check: byte-identical across {} worker counts + repeat run", grid.len());
+    println!(
+        "\nstream check: byte-identical across {} worker counts + repeat run, per schema",
+        grid.len()
+    );
 }

@@ -13,7 +13,7 @@ use anyhow::Result;
 
 use crate::coordinator::entropy::batch_label_entropy;
 use crate::coordinator::{
-    CacheConfig, IoConfig, SamplingConfig, ScDataset, Strategy, WorkerConfig,
+    CacheConfig, IoConfig, SamplingConfig, ScDataset, SeedSchema, Strategy, WorkerConfig,
 };
 use crate::store::iomodel::{simulate_loader, DiskModel, IoReport, SimResult};
 use crate::store::Backend;
@@ -49,6 +49,10 @@ pub struct SweepOptions {
     pub batch_size: usize,
     pub label_col: String,
     pub seed: u64,
+    /// Versioned shuffle-RNG derivation for the measured loaders.
+    /// Defaults to v1 (the pre-schema stream) so existing sweep numbers
+    /// stay comparable; `bench fig10` sweeps both explicitly.
+    pub seed_schema: SeedSchema,
     pub disk: DiskModel,
     /// Block cache + readahead + locality scheduler for the measured
     /// loader (default: off).
@@ -65,6 +69,7 @@ impl Default for SweepOptions {
             batch_size: 64,
             label_col: "plate".into(),
             seed: 7,
+            seed_schema: SeedSchema::V1,
             disk: DiskModel::sata_ssd_hdf5(),
             cache: CacheConfig::default(),
             io: IoConfig::default(),
@@ -89,6 +94,7 @@ pub fn measure_config(
             batch_size: opts.batch_size,
             fetch_factor,
             seed: opts.seed,
+            seed_schema: opts.seed_schema,
             drop_last: false,
         })
         .label_col(opts.label_col.clone())
@@ -287,6 +293,7 @@ pub fn measure_cache_epochs(
             batch_size: opts.batch_size,
             fetch_factor,
             seed: opts.seed,
+            seed_schema: opts.seed_schema,
             drop_last: false,
         })
         .cache(opts.cache)
@@ -394,6 +401,7 @@ pub fn measure_decode_point(
             batch_size: opts.batch_size,
             fetch_factor,
             seed: opts.seed,
+            seed_schema: opts.seed_schema,
             drop_last: false,
         })
         .cache(opts.cache)
@@ -459,9 +467,20 @@ pub fn measure_decode_sweep(
 pub struct ExecutorPoint {
     pub num_workers: usize,
     pub in_flight: usize,
+    /// Which shuffle-RNG derivation the point ran under (from
+    /// `SweepOptions::seed_schema`). v1 and v2 emit different streams,
+    /// so cross-point stream gates must compare within one schema.
+    pub seed_schema: SeedSchema,
     /// Wall-clock throughput over the drained epochs on the real files.
     pub real_samples_per_sec: f64,
     pub rows: u64,
+    /// Delivery-thread ns spent in `finish_fetch` (summed over epochs).
+    /// Nonzero under v1; exactly 0 under v2, where workers finish their
+    /// own fetches — the occupancy drop `bench fig10` reports.
+    pub deliver_finish_ns: u64,
+    /// Delivery-thread ns spent waiting on the next completed fetch
+    /// (summed over epochs).
+    pub deliver_wait_ns: u64,
     /// Emitted global row ids in delivery order, all epochs concatenated.
     pub row_stream: Vec<u32>,
 }
@@ -489,6 +508,7 @@ pub fn measure_executor_point(
             batch_size: opts.batch_size,
             fetch_factor,
             seed: opts.seed,
+            seed_schema: opts.seed_schema,
             drop_last: false,
         })
         .workers(WorkerConfig {
@@ -501,17 +521,26 @@ pub fn measure_executor_point(
         .build()?;
     let t0 = std::time::Instant::now();
     let mut row_stream: Vec<u32> = Vec::new();
+    let mut deliver_finish_ns = 0u64;
+    let mut deliver_wait_ns = 0u64;
     for epoch in 0..epochs.max(1) {
-        for mb in ds.epoch(epoch as u64)? {
+        let mut iter = ds.epoch(epoch as u64)?;
+        for mb in iter.by_ref() {
             row_stream.extend(mb?.rows);
         }
+        let stats = iter.stats();
+        deliver_finish_ns += stats.deliver_finish_ns;
+        deliver_wait_ns += stats.deliver_wait_ns;
     }
     let real_secs = t0.elapsed().as_secs_f64();
     Ok(ExecutorPoint {
         num_workers,
         in_flight,
+        seed_schema: opts.seed_schema,
         real_samples_per_sec: row_stream.len() as f64 / real_secs.max(1e-9),
         rows: row_stream.len() as u64,
+        deliver_finish_ns,
+        deliver_wait_ns,
         row_stream,
     })
 }
@@ -722,8 +751,26 @@ mod tests {
         }
         assert!(pts[0].rows > 0);
         // run-to-run: a fresh dataset at the same setting reproduces
-        let again = measure_executor_point(&b, strategy, 4, 3, 4, 2, &opts).unwrap();
+        let again = measure_executor_point(&b, strategy.clone(), 4, 3, 4, 2, &opts).unwrap();
         assert_eq!(again.row_stream, pts[0].row_stream);
+        // Same sweep under seed-schema v2: byte-identical within the
+        // schema, a different stream than v1, and the delivery thread
+        // never runs finish_fetch (the occupancy headline).
+        opts.seed_schema = SeedSchema::V2;
+        let v2 =
+            measure_executor_sweep(&b, strategy, 4, &[0, 1, 3], 4, 2, &opts).unwrap();
+        for p in &v2 {
+            assert_eq!(p.seed_schema, SeedSchema::V2);
+            assert_eq!(
+                p.row_stream, v2[0].row_stream,
+                "v2 stream changed at num_workers={}",
+                p.num_workers
+            );
+            assert_eq!(p.deliver_finish_ns, 0, "v2 must not finish at delivery");
+        }
+        assert_ne!(v2[0].row_stream, pts[0].row_stream, "schemas must not alias");
+        let pooled_v1 = &pts[2];
+        assert!(pooled_v1.deliver_finish_ns > 0, "v1 finishes at delivery");
     }
 
     #[test]

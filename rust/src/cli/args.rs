@@ -13,7 +13,7 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::AppConfig;
-use crate::coordinator::{CacheConfig, IoConfig, WorkerConfig};
+use crate::coordinator::{CacheConfig, IoConfig, SeedSchema, WorkerConfig};
 
 #[derive(Clone, Debug, Default)]
 pub struct Args {
@@ -122,6 +122,17 @@ impl Args {
             in_flight: self.usize_or("in-flight", defaults.in_flight)?,
             pipeline_epochs: self.usize_or("pipeline-epochs", defaults.pipeline_epochs)?,
         })
+    }
+
+    /// The shared `--seed-schema v1|v2` → [`SeedSchema`] mapping.
+    /// `default` is usually the app config's `[sampling] seed_schema`
+    /// (v2 unless the file pins v1).
+    pub fn seed_schema_or(&self, default: SeedSchema) -> Result<SeedSchema> {
+        match self.flags.get("seed-schema") {
+            None => Ok(default),
+            Some(v) => SeedSchema::parse(v)
+                .ok_or_else(|| anyhow!("--seed-schema expects v1 or v2, got '{v}'")),
+        }
     }
 
     /// Both loader-tuning sub-configs at once, defaulted from the app
@@ -237,6 +248,17 @@ mod tests {
         assert!(a.io_config(IoConfig::default()).is_err());
         let a = parse("train --in-flight several");
         assert!(a.workers_config(WorkerConfig::default()).is_err());
+    }
+
+    #[test]
+    fn seed_schema_flag_parses_and_defaults() {
+        let a = parse("train --seed-schema v1");
+        assert_eq!(a.seed_schema_or(SeedSchema::V2).unwrap(), SeedSchema::V1);
+        let a = parse("train --seed-schema 2");
+        assert_eq!(a.seed_schema_or(SeedSchema::V1).unwrap(), SeedSchema::V2);
+        let a = parse("train");
+        assert_eq!(a.seed_schema_or(SeedSchema::V2).unwrap(), SeedSchema::V2);
+        assert!(parse("train --seed-schema v9").seed_schema_or(SeedSchema::V2).is_err());
     }
 
     #[test]

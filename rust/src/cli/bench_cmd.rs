@@ -15,7 +15,7 @@ use crate::bench_harness::{
 };
 use crate::config::AppConfig;
 use crate::coordinator::entropy::{corollary33_bounds, dist_entropy};
-use crate::coordinator::{SamplingConfig, Strategy};
+use crate::coordinator::{SamplingConfig, SeedSchema, Strategy};
 use crate::datagen;
 use crate::store::memmap_dense::{convert_to_memmap, DenseMemmapStore};
 use crate::store::rowgroup::{convert_to_rowgroup, RowGroupStore};
@@ -591,16 +591,20 @@ fn fig9(args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
 
 /// Figure 10: persistent-executor scaling — real wall-clock rows/s over a
 /// `--workers-grid` sweep at a fixed `--in-flight` budget, across
-/// pipelined epochs. The correctness gate (always enforced) is the
-/// executor's headline guarantee: the emitted row stream is
-/// **byte-identical for every worker count and across repeated runs**.
-/// `--smoke` shrinks the run and keeps only the gates so CI fails fast on
-/// ordered-delivery regressions.
+/// pipelined epochs, under **both seed schemas** (pin one with
+/// `--seed-schema v1|v2`). The correctness gates (always enforced) are
+/// the executor's headline guarantees: within each schema the emitted
+/// row stream is **byte-identical for every worker count and across
+/// repeated runs**, the two schemas emit *different* streams, and under
+/// v2 the delivery thread never runs `finish_fetch` (its finish
+/// occupancy is exactly 0 — the ceiling the per-fetch RNG fork breaks).
+/// `--smoke` shrinks the run and keeps only the gates so CI fails fast
+/// on ordered-delivery or schema regressions.
 fn fig10(args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
     let smoke = args.bool("smoke");
     let quick = quick || smoke;
     let backend = open(cfg)?;
-    let opts = sweep_opts(cfg, quick);
+    let mut opts = sweep_opts(cfg, quick);
     let grid = args.usize_list_or("workers-grid", &[0, 1, 2, 4])?;
     ensure!(!grid.is_empty(), "--workers-grid must not be empty");
     let in_flight = args.usize_or("in-flight", cfg.workers.in_flight.max(1))?;
@@ -609,64 +613,112 @@ fn fig10(args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
     let f = args.usize_or("fetch", if quick { 8 } else { 64 })?;
     let epochs = args.usize_or("epochs", 2)?.max(1);
     let strategy = Strategy::BlockShuffling { block_size: b };
-
-    let pts = measure_executor_sweep(&backend, strategy.clone(), f, &grid, in_flight, epochs, &opts)?;
+    // --seed-schema pins one derivation; by default sweep both so the
+    // report shows the delivery-occupancy drop v2 buys.
+    let schemas = match args.flags.get("seed-schema") {
+        Some(_) => vec![args.seed_schema_or(cfg.seed_schema)?],
+        None => vec![SeedSchema::V1, SeedSchema::V2],
+    };
 
     println!(
-        "Fig 10 — persistent executor scaling; b={b}, f={f}, in_flight={in_flight}, {} epochs ({} rows)\n",
-        epochs, pts[0].rows
+        "Fig 10 — persistent executor scaling; b={b}, f={f}, in_flight={in_flight}, {epochs} epochs"
     );
-    println!("| workers | rows/s (real) | speedup |");
-    println!("|---|---|---|");
-    let base = pts[0].real_samples_per_sec.max(1e-9);
-    for p in &pts {
-        println!(
-            "| {} | {} | {:.2}× |",
-            p.num_workers,
-            fmt_rate(p.real_samples_per_sec),
-            p.real_samples_per_sec / base
-        );
-    }
+    let mut points = Vec::new();
+    let mut schema_streams: Vec<Vec<u32>> = Vec::new();
+    for &schema in &schemas {
+        opts.seed_schema = schema;
+        let pts =
+            measure_executor_sweep(&backend, strategy.clone(), f, &grid, in_flight, epochs, &opts)?;
 
-    // Correctness gates (always enforced — the executor's contract):
-    // 1) byte-identical stream for every worker count;
-    for p in &pts {
-        ensure!(
-            p.row_stream == pts[0].row_stream,
-            "executor changed the emitted stream at num_workers={} (in_flight={in_flight})",
-            p.num_workers
+        println!(
+            "\nseed_schema={schema} ({} rows) — delivery-thread occupancy per run:\n",
+            pts[0].rows
         );
+        println!("| workers | rows/s (real) | speedup | deliver finish | deliver wait |");
+        println!("|---|---|---|---|---|");
+        let base = pts[0].real_samples_per_sec.max(1e-9);
+        for p in &pts {
+            println!(
+                "| {} | {} | {:.2}× | {:.1} ms | {:.1} ms |",
+                p.num_workers,
+                fmt_rate(p.real_samples_per_sec),
+                p.real_samples_per_sec / base,
+                p.deliver_finish_ns as f64 / 1e6,
+                p.deliver_wait_ns as f64 / 1e6
+            );
+        }
+
+        // Correctness gates (always enforced — the executor's contract):
+        // 1) byte-identical stream for every worker count;
+        for p in &pts {
+            ensure!(
+                p.row_stream == pts[0].row_stream,
+                "executor changed the emitted stream at num_workers={} \
+                 (in_flight={in_flight}, seed_schema={schema})",
+                p.num_workers
+            );
+        }
+        // 2) byte-identical stream across two consecutive runs at the
+        //    largest worker count (fresh pool, same seed);
+        let wmax = *grid.iter().max().unwrap();
+        let repeat =
+            measure_executor_point(&backend, strategy.clone(), f, wmax, in_flight, epochs, &opts)?;
+        ensure!(
+            repeat.row_stream == pts[0].row_stream,
+            "repeated run diverged at num_workers={wmax} (seed_schema={schema})"
+        );
+        // 3) under v2, finish_fetch must actually leave the delivery
+        //    thread — its finish occupancy is 0 by construction.
+        if schema == SeedSchema::V2 {
+            for p in &pts {
+                ensure!(
+                    p.deliver_finish_ns == 0,
+                    "seed_schema=v2 ran finish_fetch on the delivery thread at num_workers={}",
+                    p.num_workers
+                );
+            }
+        }
+        schema_streams.push(pts[0].row_stream.clone());
+
+        for p in &pts {
+            let mut o = Json::obj();
+            o.set("num_workers", Json::Num(p.num_workers as f64))
+                .set("in_flight", Json::Num(p.in_flight as f64))
+                .set("seed_schema", Json::Str(schema.as_str().into()))
+                .set("real_samples_per_sec", Json::Num(p.real_samples_per_sec))
+                .set("deliver_finish_ms", Json::Num(p.deliver_finish_ns as f64 / 1e6))
+                .set("deliver_wait_ms", Json::Num(p.deliver_wait_ns as f64 / 1e6))
+                .set("rows", Json::Num(p.rows as f64));
+            points.push(o);
+        }
     }
-    // 2) byte-identical stream across two consecutive runs at the
-    //    largest worker count (fresh pool, same seed).
-    let wmax = *grid.iter().max().unwrap();
-    let repeat = measure_executor_point(&backend, strategy, f, wmax, in_flight, epochs, &opts)?;
-    ensure!(
-        repeat.row_stream == pts[0].row_stream,
-        "repeated run diverged at num_workers={wmax}"
-    );
+    // 4) the schemas are distinct derivations — they must not alias.
+    if let [v1, v2] = &schema_streams[..] {
+        ensure!(v1 != v2, "seed_schema v1 and v2 emitted the same stream");
+    }
     if smoke {
         println!(
-            "\nfig10 smoke OK: byte-identical stream across {} worker counts + repeat run",
-            grid.len()
+            "\nfig10 smoke OK: byte-identical streams across {} worker counts + repeat run, {} schema(s)",
+            grid.len(),
+            schemas.len()
         );
     }
 
-    let mut points = Vec::new();
-    for p in &pts {
-        let mut o = Json::obj();
-        o.set("num_workers", Json::Num(p.num_workers as f64))
-            .set("in_flight", Json::Num(p.in_flight as f64))
-            .set("real_samples_per_sec", Json::Num(p.real_samples_per_sec))
-            .set("rows", Json::Num(p.rows as f64));
-        points.push(o);
-    }
     let mut body = Json::obj();
     body.set("experiment", Json::Str("fig10".into()))
         .set("block", Json::Num(b as f64))
         .set("fetch_factor", Json::Num(f as f64))
         .set("in_flight", Json::Num(in_flight as f64))
         .set("epochs", Json::Num(epochs as f64))
+        .set(
+            "seed_schemas",
+            Json::Arr(
+                schemas
+                    .iter()
+                    .map(|s| Json::Str(s.as_str().into()))
+                    .collect(),
+            ),
+        )
         .set("stream_identical", Json::Bool(true))
         .set("sweep", Json::Arr(points));
     write_result(&cfg.results_dir, "fig10", body)?;

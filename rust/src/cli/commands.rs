@@ -5,7 +5,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::config::AppConfig;
-use crate::coordinator::autotune::{tune, TuneInputs, TuneOptions};
+use crate::coordinator::autotune::{finish_lanes, tune, TuneInputs, TuneOptions};
 use crate::coordinator::{SamplingConfig, Strategy};
 use crate::datagen::{self, TahoeConfig};
 use crate::store::iomodel::{simulate_loader, AccessPattern, IoReport};
@@ -140,6 +140,9 @@ pub fn train(args: &Args) -> Result<()> {
             batch_size: cfg.batch_size,
             fetch_factor: args.usize_or("fetch", cfg.fetch_factor)?,
             seed: args.usize_or("seed", cfg.seed as usize)? as u64,
+            // App default v2 (workers finish their own fetches); pin
+            // --seed-schema v1 to reproduce pre-schema runs.
+            seed_schema: args.seed_schema_or(cfg.seed_schema)?,
             drop_last: true,
         },
     );
@@ -199,16 +202,29 @@ pub fn autotune(args: &Args) -> Result<()> {
     // The shared cache mapping; autotune's --decode-threads is a sweep
     // *list* (unlike train's scalar), so it is parsed separately.
     let cache = args.cache_config(cfg.cache)?;
+    let workers = args.workers_config(cfg.workers)?;
     let opts = TuneOptions {
         cache_bytes: cache.bytes as u64,
         decode_threads: args.usize_list_or(
             "decode-threads",
             &TuneOptions::default().decode_threads,
         )?,
+        seed_schema: args.seed_schema_or(cfg.seed_schema)?,
+        num_workers: workers.num_workers,
         ..TuneOptions::default()
     };
     let result = tune(&inputs, &opts);
     println!("H(plates) = {:.2} bits", result.h_p);
+    println!(
+        "executor shape: seed_schema={} num_workers={}{}",
+        opts.seed_schema,
+        opts.num_workers,
+        if finish_lanes(opts.seed_schema, opts.num_workers) > 1 {
+            " (v2: finish work overlaps across workers)"
+        } else {
+            ""
+        }
+    );
     if opts.cache_bytes > 0 {
         let dataset_bytes = inputs.n_rows as u64 * inputs.avg_row_bytes;
         println!(

@@ -14,7 +14,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{CacheConfig, IoConfig, SamplingConfig, WorkerConfig};
+use crate::coordinator::{CacheConfig, IoConfig, SamplingConfig, SeedSchema, WorkerConfig};
 use crate::store::iomodel::DiskModel;
 use crate::util::toml::TomlDoc;
 
@@ -33,6 +33,14 @@ pub struct AppConfig {
     pub fetch_factor: usize,
     /// `[sampling] seed` (legacy top-level `seed` accepted).
     pub seed: u64,
+    /// `[sampling] seed_schema` — the versioned shuffle-RNG derivation.
+    /// Like `fetch_factor`, the app default diverges from the library
+    /// default on purpose: CLI runs get **v2** (per-fetch RNG forking —
+    /// workers finish their own fetches, breaking the delivery-thread
+    /// ceiling), while `SamplingConfig::default()` stays **v1** so
+    /// library callers keep the pre-schema stream unless they opt in.
+    /// Pin `seed_schema = "v1"` to reproduce old runs bit-for-bit.
+    pub seed_schema: SeedSchema,
     pub disk: DiskModel,
     /// `[workers]` table: persistent-executor defaults (applied by
     /// `train`; sweeps model worker scaling through the DES instead;
@@ -62,6 +70,8 @@ impl Default for AppConfig {
             batch_size: sampling.batch_size,
             fetch_factor: 256,
             seed: 7,
+            seed_schema: SeedSchema::V2, // app default: parallel finish
+
             disk: DiskModel::sata_ssd_hdf5(),
             workers: WorkerConfig {
                 pipeline_epochs: 1, // app default: epoch pipelining on
@@ -101,6 +111,14 @@ impl AppConfig {
         cfg.fetch_factor = doc.usize_or("sampling.fetch_factor", cfg.fetch_factor);
         cfg.seed =
             doc.usize_or("sampling.seed", doc.usize_or("seed", cfg.seed as usize)) as u64;
+        if let Some(v) = doc.get("sampling.seed_schema") {
+            let s = v
+                .as_str()
+                .context("sampling.seed_schema must be a string (\"v1\" or \"v2\")")?;
+            cfg.seed_schema = SeedSchema::parse(s).with_context(|| {
+                format!("unknown sampling.seed_schema {s:?} (expected \"v1\" or \"v2\")")
+            })?;
+        }
         // [workers] table. The legacy `prefetch_depth` key was *per
         // worker* (old bounded-channel model); the executor's `in_flight`
         // is pool-wide, so legacy configs map as depth × workers (min 1 —
@@ -162,6 +180,7 @@ impl AppConfig {
              batch_size = {m}\n\
              fetch_factor = {f}\n\
              seed = {seed}\n\
+             seed_schema = \"{schema}\"\n\
              \n\
              [workers]\n\
              num_workers = {nw}\n\
@@ -183,6 +202,7 @@ impl AppConfig {
             m = d.batch_size,
             f = d.fetch_factor,
             seed = d.seed,
+            schema = d.seed_schema.as_str(),
             nw = d.workers.num_workers,
             inf = d.workers.in_flight,
             pe = d.workers.pipeline_epochs,
@@ -207,6 +227,7 @@ mod tests {
         assert_eq!(a.batch_size, b.batch_size);
         assert_eq!(a.fetch_factor, b.fetch_factor);
         assert_eq!(a.seed, b.seed);
+        assert_eq!(a.seed_schema, b.seed_schema);
         assert_eq!(a.workers, b.workers);
         assert_eq!(a.cache, b.cache);
         assert_eq!(a.io, b.io);
@@ -230,6 +251,12 @@ mod tests {
         assert_eq!(c.io.decode_threads, 0, "CLI default: auto decode");
         assert_eq!(c.io.coalesce_gap_bytes, 64 << 10, "CLI default: coalescing on");
         assert_eq!(c.batch_size, SamplingConfig::default().batch_size);
+        assert_eq!(c.seed_schema, SeedSchema::V2, "CLI default: parallel finish");
+        assert_eq!(
+            SamplingConfig::default().seed_schema,
+            SeedSchema::V1,
+            "library default: the pre-schema stream"
+        );
     }
 
     #[test]
@@ -285,6 +312,7 @@ cell_cpu_us = 5
 batch_size = 128
 fetch_factor = 512
 seed = 3
+seed_schema = "v1"
 
 [workers]
 num_workers = 4
@@ -296,6 +324,7 @@ pipeline_epochs = 2
         assert_eq!(c.batch_size, 128);
         assert_eq!(c.fetch_factor, 512);
         assert_eq!(c.seed, 3);
+        assert_eq!(c.seed_schema, SeedSchema::V1, "explicit v1 pin overrides the v2 app default");
         assert_eq!(c.workers.num_workers, 4);
         assert_eq!(c.workers.in_flight, 6);
         assert_eq!(c.workers.pipeline_epochs, 2);
@@ -366,5 +395,14 @@ locality_window = 8
     fn bad_file_errors() {
         assert!(AppConfig::from_file("/nonexistent.toml").is_err());
         assert!(AppConfig::from_toml("x 1").is_err());
+    }
+
+    #[test]
+    fn unknown_seed_schema_is_an_error() {
+        // Silently falling back would change the stream — reject loudly.
+        let err = AppConfig::from_toml("[sampling]\nseed_schema = \"v3\"\n").unwrap_err();
+        assert!(err.to_string().contains("seed_schema"), "{err}");
+        let err = AppConfig::from_toml("[sampling]\nseed_schema = 2\n").unwrap_err();
+        assert!(err.to_string().contains("string"), "{err}");
     }
 }

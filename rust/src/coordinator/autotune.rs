@@ -10,6 +10,7 @@
 
 use crate::store::iomodel::{AccessPattern, DiskModel, IoReport};
 
+use super::builder::SeedSchema;
 use super::entropy::{corollary33_bounds, dist_entropy};
 
 /// Dataset/hardware facts the tuner needs.
@@ -45,6 +46,15 @@ pub struct TuneOptions {
     /// sweep). Decode parallelism divides the parallelizable share of the
     /// worker-lane per-row CPU ([`DECODE_PARALLEL_FRACTION`], Amdahl).
     pub decode_threads: Vec<usize>,
+    /// Seed schema the loader will run under. Under v2 the per-fetch
+    /// finish work (shuffle-split + `fetch_transform` + gather) runs on
+    /// executor workers, so its share of the per-row CPU overlaps across
+    /// in-flight fetches instead of serializing on the delivery thread.
+    pub seed_schema: SeedSchema,
+    /// Persistent-executor worker count the prediction assumes (the
+    /// number of lanes the v2 finish remainder divides across; ignored
+    /// under v1, where finish is delivery-thread-serial regardless).
+    pub num_workers: usize,
 }
 
 impl Default for TuneOptions {
@@ -56,20 +66,37 @@ impl Default for TuneOptions {
             fetch_factors: vec![1, 4, 16, 64, 256, 1024],
             cache_bytes: 0,
             decode_threads: vec![1, 2, 4],
+            seed_schema: SeedSchema::V1,
+            num_workers: 0,
         }
     }
 }
 
 /// Share of the worker-lane per-row CPU the decode pool parallelizes
 /// (chunk read + decompress + extraction); the rest — reshuffle gather,
-/// batch assembly, tensor hand-off — stays serial per fetch.
+/// batch assembly, tensor hand-off — is serial *within* one fetch. Under
+/// seed-schema v1 that remainder also serializes *across* fetches (it
+/// runs on the single delivery thread); under v2 it runs inside executor
+/// workers, so it overlaps across up to `num_workers` in-flight fetches.
 pub const DECODE_PARALLEL_FRACTION: f64 = 0.7;
 
+/// Lanes the per-fetch finish remainder overlaps across: 1 under v1
+/// (delivery thread), the worker count under v2 (each worker finishes
+/// its own fetch with an independently forked RNG).
+pub fn finish_lanes(schema: SeedSchema, num_workers: usize) -> usize {
+    match schema {
+        SeedSchema::V1 => 1,
+        SeedSchema::V2 => num_workers.max(1),
+    }
+}
+
 /// Amdahl factor the per-row worker CPU shrinks by at `threads`-way
-/// decode parallelism.
-fn decode_scale(threads: usize) -> f64 {
+/// decode parallelism with the finish remainder spread over `lanes`
+/// (`lanes = 1` is the v1 / synchronous-iteration serial finish).
+fn lane_scale(threads: usize, lanes: usize) -> f64 {
     let t = threads.max(1) as f64;
-    (1.0 - DECODE_PARALLEL_FRACTION) + DECODE_PARALLEL_FRACTION / t
+    let l = lanes.max(1) as f64;
+    (1.0 - DECODE_PARALLEL_FRACTION) / l + DECODE_PARALLEL_FRACTION / t
 }
 
 /// One evaluated configuration.
@@ -118,28 +145,47 @@ pub fn predict_throughput(inputs: &TuneInputs, b: usize, f: usize) -> f64 {
 }
 
 /// Worker-lane CPU for one fetch with `decode_threads`-way intra-fetch
-/// decode parallelism: the fixed (per-call) share is untouched, the
-/// per-row share shrinks by the Amdahl factor.
+/// decode parallelism and the finish remainder spread over `lanes`: the
+/// fixed (per-call) share is untouched, the per-row share shrinks by the
+/// Amdahl factor.
 fn worker_us_decode(
     inputs: &TuneInputs,
     io: &IoReport,
     buffer_rows: usize,
     decode_threads: usize,
+    lanes: usize,
 ) -> f64 {
     let full = inputs.disk.cpu_us(inputs.pattern, io, buffer_rows);
     let fixed = inputs
         .disk
         .cpu_us(inputs.pattern, &IoReport { rows: 0, ..*io }, buffer_rows);
-    fixed + (full - fixed) * decode_scale(decode_threads)
+    fixed + (full - fixed) * lane_scale(decode_threads, lanes)
 }
 
-/// [`predict_throughput`] at a given intra-fetch decode parallelism.
+/// [`predict_throughput`] at a given intra-fetch decode parallelism,
+/// with a serial (v1-style) finish remainder.
 pub fn predict_throughput_decode(
     inputs: &TuneInputs,
     b: usize,
     f: usize,
     decode_threads: usize,
 ) -> f64 {
+    predict_throughput_exec(inputs, b, f, decode_threads, SeedSchema::V1, 0)
+}
+
+/// [`predict_throughput_decode`] under an explicit executor shape: seed
+/// schema plus worker count. Under v2 the finish remainder (shuffle +
+/// `fetch_transform` + gather) overlaps across workers instead of
+/// serializing on the delivery thread.
+pub fn predict_throughput_exec(
+    inputs: &TuneInputs,
+    b: usize,
+    f: usize,
+    decode_threads: usize,
+    schema: SeedSchema,
+    num_workers: usize,
+) -> f64 {
+    let lanes = finish_lanes(schema, num_workers);
     let rows = (inputs.batch_size * f) as u64;
     let runs = rows.div_ceil(b as u64).max(1);
     let io = IoReport {
@@ -152,7 +198,7 @@ pub fn predict_throughput_decode(
         ..IoReport::default()
     };
     let us = inputs.disk.disk_us(inputs.pattern, &io, 1)
-        + worker_us_decode(inputs, &io, rows as usize, decode_threads);
+        + worker_us_decode(inputs, &io, rows as usize, decode_threads, lanes);
     rows as f64 / (us / 1e6)
 }
 
@@ -168,9 +214,24 @@ pub fn predict_throughput_cached(
     cache_bytes: u64,
     decode_threads: usize,
 ) -> f64 {
+    predict_throughput_cached_exec(inputs, b, f, cache_bytes, decode_threads, SeedSchema::V1, 0)
+}
+
+/// [`predict_throughput_cached`] under an explicit executor shape (see
+/// [`predict_throughput_exec`]).
+pub fn predict_throughput_cached_exec(
+    inputs: &TuneInputs,
+    b: usize,
+    f: usize,
+    cache_bytes: u64,
+    decode_threads: usize,
+    schema: SeedSchema,
+    num_workers: usize,
+) -> f64 {
     if cache_bytes == 0 {
-        return predict_throughput_decode(inputs, b, f, decode_threads);
+        return predict_throughput_exec(inputs, b, f, decode_threads, schema, num_workers);
     }
+    let lanes = finish_lanes(schema, num_workers);
     let rows = (inputs.batch_size * f) as u64;
     let dataset_bytes = (inputs.n_rows as u64 * inputs.avg_row_bytes).max(1);
     let hit = (cache_bytes as f64 / dataset_bytes as f64).min(1.0);
@@ -197,7 +258,7 @@ pub fn predict_throughput_cached(
         ..IoReport::default()
     };
     let us = inputs.disk.disk_us(inputs.pattern, &disk_io, 1)
-        + worker_us_decode(inputs, &cpu_io, rows as usize, decode_threads);
+        + worker_us_decode(inputs, &cpu_io, rows as usize, decode_threads, lanes);
     rows as f64 / (us / 1e6)
 }
 
@@ -225,9 +286,23 @@ pub fn tune(inputs: &TuneInputs, opts: &TuneOptions) -> TuneResult {
             let feasible = eff_lo >= h_p - opts.entropy_slack_bits
                 && buffer_bytes <= opts.memory_budget_bytes;
             for &dt in decode_grid {
-                let sps = predict_throughput_decode(inputs, b, f, dt);
-                let sps_cached =
-                    predict_throughput_cached(inputs, b, f, opts.cache_bytes, dt);
+                let sps = predict_throughput_exec(
+                    inputs,
+                    b,
+                    f,
+                    dt,
+                    opts.seed_schema,
+                    opts.num_workers,
+                );
+                let sps_cached = predict_throughput_cached_exec(
+                    inputs,
+                    b,
+                    f,
+                    opts.cache_bytes,
+                    dt,
+                    opts.seed_schema,
+                    opts.num_workers,
+                );
                 grid.push(TunePoint {
                     block_size: b,
                     fetch_factor: f,
@@ -322,6 +397,53 @@ mod tests {
         // Amdahl: the 2→4 step buys less than the 1→2 step.
         assert!(t4 / t2 < t2 / t1);
         assert_eq!(predict_throughput(&inp, 16, 64), t1);
+    }
+
+    #[test]
+    fn v2_parallelizes_the_finish_remainder() {
+        let inp = inputs();
+        let v1 = predict_throughput_exec(&inp, 16, 64, 4, SeedSchema::V1, 8);
+        let v2_1 = predict_throughput_exec(&inp, 16, 64, 4, SeedSchema::V2, 1);
+        let v2_4 = predict_throughput_exec(&inp, 16, 64, 4, SeedSchema::V2, 4);
+        let v2_8 = predict_throughput_exec(&inp, 16, 64, 4, SeedSchema::V2, 8);
+        // v1 finish is delivery-thread-serial no matter the worker count,
+        // and v2 with one lane degenerates to the same prediction.
+        assert_eq!(v1, predict_throughput_decode(&inp, 16, 64, 4));
+        assert_eq!(v2_1, v1);
+        // Under v2 the finish remainder divides across workers.
+        assert!(v2_4 > v1, "v2@4 {v2_4} !> v1 {v1}");
+        assert!(v2_8 > v2_4, "v2@8 {v2_8} !> v2@4 {v2_4}");
+        // Amdahl: the 4→8 step buys less than the 1→4 step.
+        assert!(v2_8 / v2_4 < v2_4 / v2_1);
+        // Compounds with the cache: fully cached, the worker lane is all
+        // that remains, so spreading the finish helps at least as much.
+        let payload = inp.n_rows as u64 * inp.avg_row_bytes;
+        let c1 = predict_throughput_cached_exec(&inp, 16, 64, payload, 4, SeedSchema::V1, 8);
+        let c2 = predict_throughput_cached_exec(&inp, 16, 64, payload, 4, SeedSchema::V2, 8);
+        assert!(c2 / c1 >= v2_8 / v1 - 1e-9, "cached v2 gain {} < uncached {}", c2 / c1, v2_8 / v1);
+    }
+
+    #[test]
+    fn tuner_under_v2_predicts_faster_grid() {
+        let inp = inputs();
+        let r1 = tune(&inp, &TuneOptions::default());
+        let opts = TuneOptions {
+            seed_schema: SeedSchema::V2,
+            num_workers: 4,
+            ..TuneOptions::default()
+        };
+        let r2 = tune(&inp, &opts);
+        assert_eq!(r1.grid.len(), r2.grid.len());
+        assert!(
+            r2.best.predicted_samples_per_sec > r1.best.predicted_samples_per_sec,
+            "v2 best {} !> v1 best {}",
+            r2.best.predicted_samples_per_sec,
+            r1.best.predicted_samples_per_sec
+        );
+        // Every point speeds up: the finish remainder shrinks uniformly.
+        for (a, b) in r1.grid.iter().zip(&r2.grid) {
+            assert!(b.predicted_samples_per_sec >= a.predicted_samples_per_sec);
+        }
     }
 
     #[test]

@@ -35,6 +35,54 @@ use super::fetch::{FetchTransform, FetchView};
 use super::loader::{BatchTransform, Hooks, LoaderConfig, Minibatch, ScDataset};
 use super::plan::Strategy;
 
+/// How the per-fetch shuffle RNG is derived from the root seed — the
+/// versioned random-stream contract. The schema pins the exact minibatch
+/// stream a `(seed, epoch)` pair emits, so bumping it is stream-breaking
+/// by definition; both schemas are deterministic and worker-count
+/// invariant (`tests/determinism.rs`).
+///
+/// The derivations live in [`crate::util::rng::domains`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SeedSchema {
+    /// PR 2–5 streams: one sequential per-epoch shuffle RNG, consumed
+    /// fetch-by-fetch in plan order on the delivery thread. Serializes
+    /// `finish_fetch` (shuffle, `fetch_transform`, gather) on that thread
+    /// — the delivery ceiling — but reproduces every historical run
+    /// exactly. The library default, so existing embedders keep their
+    /// streams until they opt in.
+    #[default]
+    V1,
+    /// Per-fetch RNG forking: the shuffle RNG is pure in
+    /// `(seed, epoch, fetch_id)`, so `finish_fetch` runs inside the
+    /// executor workers and the delivery thread only pops in order. The
+    /// app/CLI default (`[sampling] seed_schema`, `--seed-schema`).
+    V2,
+}
+
+impl SeedSchema {
+    /// Parse the config/CLI spelling (`"v1"` / `"v2"`).
+    pub fn parse(s: &str) -> Option<SeedSchema> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "v1" | "1" => Some(SeedSchema::V1),
+            "v2" | "2" => Some(SeedSchema::V2),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SeedSchema::V1 => "v1",
+            SeedSchema::V2 => "v2",
+        }
+    }
+}
+
+impl fmt::Display for SeedSchema {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Paper §3.3 sampling parameters: how the epoch order is produced and
 /// partitioned into fetches.
 #[derive(Clone, Debug, PartialEq)]
@@ -47,6 +95,9 @@ pub struct SamplingConfig {
     pub fetch_factor: usize,
     /// Root seed (rank-0 broadcast value; every rank must agree).
     pub seed: u64,
+    /// Versioned shuffle-RNG derivation (see [`SeedSchema`]); part of the
+    /// reproducibility contract alongside `seed`.
+    pub seed_schema: SeedSchema,
     /// Drop the trailing partial minibatch.
     pub drop_last: bool,
 }
@@ -58,6 +109,7 @@ impl Default for SamplingConfig {
             batch_size: 64,
             fetch_factor: 16,
             seed: 0,
+            seed_schema: SeedSchema::V1,
             drop_last: false,
         }
     }
@@ -408,6 +460,15 @@ impl ScDatasetBuilder {
         self
     }
 
+    /// Pin the shuffle-RNG derivation version (see [`SeedSchema`]). The
+    /// library default is [`SeedSchema::V1`] (PR 2–5 streams); pass
+    /// [`SeedSchema::V2`] to move `finish_fetch` onto the executor
+    /// workers.
+    pub fn seed_schema(mut self, schema: SeedSchema) -> ScDatasetBuilder {
+        self.cfg.sampling.seed_schema = schema;
+        self
+    }
+
     pub fn drop_last(mut self, drop_last: bool) -> ScDatasetBuilder {
         self.cfg.sampling.drop_last = drop_last;
         self
@@ -468,13 +529,14 @@ impl ScDatasetBuilder {
     }
 
     /// Install the paper's `fetch_transform`: runs **once per fetched
-    /// block-batch**, on the delivery thread in plan order (whatever
-    /// executor worker fetched the data), before the shuffled split into
-    /// minibatches — the natural place for normalization or tokenization
-    /// over `m·f` rows at a time. The hook
-    /// may rewrite expression values and label codes but must preserve
-    /// the fetched row count (enforced at runtime). An identity hook
-    /// leaves the emitted stream bit-identical.
+    /// block-batch**, before the shuffled split into minibatches — the
+    /// natural place for normalization or tokenization over `m·f` rows at
+    /// a time. Under seed-schema v2 the hook runs on whichever executor
+    /// worker finished the fetch (which is why it must be `Send + Sync`);
+    /// under v1, or with `num_workers = 0`, it runs on the delivery
+    /// thread in plan order. The hook may rewrite expression values and
+    /// label codes but must preserve the fetched row count (enforced at
+    /// runtime). An identity hook leaves the emitted stream bit-identical.
     pub fn fetch_transform<F>(mut self, f: F) -> ScDatasetBuilder
     where
         F: Fn(&mut FetchView<'_>) -> anyhow::Result<()> + Send + Sync + 'static,
@@ -682,5 +744,29 @@ mod tests {
         assert_eq!(cfg.ddp, DdpConfig::default());
         assert_eq!(cfg.cache, CacheConfig::default());
         assert_eq!(cfg.io, IoConfig::default());
+        // The LIBRARY default must stay v1: embedders who upgrade the
+        // crate keep their historical streams until they opt in.
+        assert_eq!(cfg.sampling.seed_schema, SeedSchema::V1);
+    }
+
+    #[test]
+    fn seed_schema_parses_and_round_trips() {
+        for (s, want) in [
+            ("v1", SeedSchema::V1),
+            ("V2", SeedSchema::V2),
+            (" 1 ", SeedSchema::V1),
+            ("2", SeedSchema::V2),
+        ] {
+            assert_eq!(SeedSchema::parse(s), Some(want), "{s:?}");
+        }
+        assert_eq!(SeedSchema::parse("v3"), None);
+        assert_eq!(SeedSchema::parse(""), None);
+        for schema in [SeedSchema::V1, SeedSchema::V2] {
+            assert_eq!(SeedSchema::parse(schema.as_str()), Some(schema));
+        }
+        let ds_cfg = ScDatasetBuilder::new(backend().1)
+            .seed_schema(SeedSchema::V2)
+            .cfg;
+        assert_eq!(ds_cfg.sampling.seed_schema, SeedSchema::V2);
     }
 }

@@ -25,10 +25,16 @@
 //!   a reorder buffer bounded by `WorkerConfig::in_flight` fetches, the
 //!   backpressure unit that replaced the old per-worker channel capacity.
 //! * **In-order delivery** — the consumer drains completions strictly in
-//!   plan order; `finish_fetch` (the shuffle-RNG, the hook layer) and the
-//!   minibatch split run on the consumer thread in that order. With a
-//!   fixed seed the emitted stream is therefore **bit-identical for every
-//!   `num_workers` (including 0) and across repeated runs**.
+//!   plan order. Where `finish_fetch` (the shuffle-RNG, the hook layer,
+//!   the label gather) runs depends on the seed schema: under v1 the
+//!   shuffle stream is sequential, so it must run on the consumer thread
+//!   in plan order; under v2 the shuffle RNG is pure in
+//!   `(seed, epoch, fetch_id)` ([`FinishSpec`]), so workers finish each
+//!   fetch right after executing it and completions park as ready-to-split
+//!   [`FetchedChunk`]s — the consumer only pops, records stats, splits,
+//!   and runs `batch_transform`. With a fixed seed the emitted stream is
+//!   **bit-identical for every `num_workers` (including 0) and across
+//!   repeated runs** under either schema.
 //! * **Epoch pipelining** — when a generation's queue drains and
 //!   `WorkerConfig::pipeline_epochs > 0`, an idle worker speculatively
 //!   plans and enqueues the next epoch (plans are a pure function of
@@ -69,8 +75,11 @@ use anyhow::{anyhow, Result};
 
 use crate::store::cache::CachingBackend;
 use crate::store::Backend;
+use crate::util::rng::domains;
 
-use super::fetch::{execute_fetch, ExecutedFetch};
+use super::fetch::{
+    execute_fetch, finish_fetch, ExecutedFetch, FetchTransform, FetchedChunk, Shuffle,
+};
 use super::plan::EpochPlan;
 
 /// The deterministic work description of one epoch for this rank:
@@ -96,19 +105,75 @@ pub(crate) struct ExecutorSettings {
     pub readahead: bool,
 }
 
+/// Everything a worker needs to run `finish_fetch` itself under
+/// seed-schema v2. The per-fetch shuffle RNG is derived here — pure in
+/// `(seed, epoch, fetch_id)` via [`domains::shuffle_fetch_v2`] — which is
+/// the whole trick: no thread consumes a shared sequential stream, so any
+/// worker may finish any fetch in any order and the stream stays
+/// bit-identical.
+pub(crate) struct FinishSpec {
+    pub label_cols: Vec<String>,
+    pub fetch_transform: Option<FetchTransform>,
+    pub seed: u64,
+    /// False for the streaming strategy (no per-fetch reshuffle; the
+    /// rolling shuffle buffer stays on the delivery thread).
+    pub shuffle_in_fetch: bool,
+}
+
+impl FinishSpec {
+    /// Finish one executed fetch with its per-fetch RNG. Used by executor
+    /// workers and by the synchronous (`num_workers = 0`) path, which is
+    /// what makes the two bit-identical.
+    pub(crate) fn finish(
+        &self,
+        backend: &Arc<dyn Backend>,
+        ex: ExecutedFetch,
+        epoch: u64,
+        fetch_id: usize,
+    ) -> Result<FetchedChunk> {
+        let shuffle = if self.shuffle_in_fetch {
+            Shuffle::PerFetch(domains::shuffle_fetch_v2(self.seed, epoch, fetch_id))
+        } else {
+            Shuffle::Off
+        };
+        finish_fetch(
+            ex,
+            backend,
+            &self.label_cols,
+            shuffle,
+            self.fetch_transform.as_ref(),
+        )
+    }
+}
+
+/// What the executor hands the consumer for one fetch — how far the
+/// worker took it depends on the seed schema.
+pub(crate) enum ExecOutput {
+    /// Seed-schema v1: the I/O half only; the delivery thread runs
+    /// `finish_fetch` against its sequential shuffle stream.
+    Executed(ExecutedFetch),
+    /// Seed-schema v2: fully finished on the worker (shuffle + label
+    /// gather + `fetch_transform`); ready to split.
+    Finished(FetchedChunk),
+}
+
 /// One queued fetch execution.
 struct Job {
     gen: u64,
     /// Delivery position within the generation.
     seq: u32,
     fetch_id: usize,
+    /// The generation's epoch — carried here so workers can derive the
+    /// per-fetch RNG without re-locking the generation table.
+    epoch: u64,
     plan: Arc<EpochPlan>,
 }
 
-/// An executed fetch parked in the reorder buffer.
+/// An executed (v1) or finished (v2) fetch parked in the reorder buffer.
 struct Completed {
-    result: Result<ExecutedFetch>,
-    /// Wall-clock nanoseconds of the backend call (stats only).
+    result: Result<ExecOutput>,
+    /// Wall-clock nanoseconds of the backend call (plus the worker-side
+    /// finish under seed-schema v2); stats only.
     exec_ns: u64,
 }
 
@@ -159,6 +224,8 @@ struct Shared {
     in_flight: usize,
     pipeline_epochs: usize,
     gen_builder: GenBuilder,
+    /// `Some` = seed-schema v2: workers run `finish_fetch` themselves.
+    finish: Option<FinishSpec>,
 }
 
 /// The long-lived worker pool. Owned by `ScDataset`; dropping it shuts the
@@ -174,6 +241,7 @@ impl Executor {
         backend: Arc<dyn Backend>,
         cache: Option<Arc<CachingBackend>>,
         gen_builder: GenBuilder,
+        finish: Option<FinishSpec>,
     ) -> Executor {
         let shared = Arc::new(Shared {
             state: Mutex::new(State::default()),
@@ -185,6 +253,7 @@ impl Executor {
             in_flight: settings.in_flight,
             pipeline_epochs: settings.pipeline_epochs,
             gen_builder,
+            finish,
         });
         // The loader only builds an executor for num_workers > 0; a
         // zero-thread pool would hang its first consumer silently, so
@@ -319,7 +388,7 @@ pub(crate) struct GenHandle {
 impl GenHandle {
     /// Block until the next plan-order fetch is resident and take it.
     /// Returns `None` once the generation is exhausted.
-    pub(crate) fn next_executed(&mut self) -> Option<(Result<ExecutedFetch>, u64)> {
+    pub(crate) fn next_completed(&mut self) -> Option<(Result<ExecOutput>, u64)> {
         if self.next >= self.total {
             return None;
         }
@@ -385,6 +454,7 @@ fn enqueue_gen(st: &mut State, id: u64, epoch: u64, gp: GenPlan) -> u32 {
             gen: id,
             seq: seq_of[&fid],
             fetch_id: fid,
+            epoch,
             plan: plan.clone(),
         });
     }
@@ -561,8 +631,23 @@ fn worker_loop(shared: &Arc<Shared>) {
             }));
         }
         let t0 = std::time::Instant::now();
-        let result = match catch_unwind(AssertUnwindSafe(|| {
-            execute_fetch(&shared.backend, job.plan.fetch_indices(job.fetch_id))
+        let result = match catch_unwind(AssertUnwindSafe(|| -> Result<ExecOutput> {
+            let ex = execute_fetch(&shared.backend, job.plan.fetch_indices(job.fetch_id))?;
+            match &shared.finish {
+                // Seed-schema v2: finish right here — the per-fetch RNG
+                // is pure in (seed, epoch, fetch_id), so this worker's
+                // shuffle/hook/gather is exactly what the delivery thread
+                // would have computed.
+                Some(spec) => Ok(ExecOutput::Finished(spec.finish(
+                    &shared.backend,
+                    ex,
+                    job.epoch,
+                    job.fetch_id,
+                )?)),
+                // Seed-schema v1: the sequential shuffle stream lives on
+                // the delivery thread; hand over the I/O half only.
+                None => Ok(ExecOutput::Executed(ex)),
+            }
         })) {
             Ok(r) => r,
             Err(p) => Err(anyhow!(
@@ -598,7 +683,7 @@ fn worker_loop(shared: &Arc<Shared>) {
 #[cfg(test)]
 #[allow(clippy::field_reassign_with_default)]
 mod tests {
-    use super::super::builder::{SamplingConfig, WorkerConfig};
+    use super::super::builder::{SamplingConfig, SeedSchema, WorkerConfig};
     use super::super::loader::{LoaderConfig, ScDataset};
     use super::super::plan::Strategy;
     use super::*;
@@ -665,13 +750,19 @@ mod tests {
         }
     }
 
-    fn config(workers: usize, in_flight: usize, pipeline: usize) -> LoaderConfig {
+    fn config_with_schema(
+        workers: usize,
+        in_flight: usize,
+        pipeline: usize,
+        schema: SeedSchema,
+    ) -> LoaderConfig {
         let mut cfg = LoaderConfig::default();
         cfg.sampling = SamplingConfig {
             strategy: Strategy::BlockShuffling { block_size: 4 },
             batch_size: 8,
             fetch_factor: 2,
             seed: 21,
+            seed_schema: schema,
             drop_last: false,
         };
         cfg.workers = WorkerConfig {
@@ -680,6 +771,10 @@ mod tests {
             pipeline_epochs: pipeline,
         };
         cfg
+    }
+
+    fn config(workers: usize, in_flight: usize, pipeline: usize) -> LoaderConfig {
+        config_with_schema(workers, in_flight, pipeline, SeedSchema::V1)
     }
 
     fn stream(ds: &ScDataset, epoch: u64) -> Vec<(Vec<u32>, CsrBatch)> {
@@ -712,6 +807,39 @@ mod tests {
     }
 
     #[test]
+    fn perfetch_schema_pool_matches_its_sync_stream() {
+        // Seed-schema v2: finish_fetch runs on the workers, yet the
+        // stream still matches the synchronous v2 run for any executor
+        // shape — including in_flight = 1 (needed exemption) and deep
+        // pipelining.
+        let b: Arc<dyn Backend> = Arc::new(SynthBackend::new(257, None));
+        let v2 = |w, i, p| config_with_schema(w, i, p, SeedSchema::V2);
+        let expect = stream(&ScDataset::new(b.clone(), v2(0, 4, 0)), 0);
+        assert!(!expect.is_empty());
+        for (workers, in_flight, pipeline) in
+            [(1usize, 1usize, 0usize), (3, 1, 1), (3, 16, 1), (8, 2, 2)]
+        {
+            let ds = ScDataset::new(b.clone(), v2(workers, in_flight, pipeline));
+            assert_eq!(
+                stream(&ds, 0),
+                expect,
+                "workers={workers} in_flight={in_flight} pipeline={pipeline}"
+            );
+        }
+        // The schema bump is real: v1 and v2 emit different streams for
+        // the same seed (same row multiset, different order).
+        let v1 = stream(&ScDataset::new(b, config(0, 4, 0)), 0);
+        assert_ne!(v1, expect, "schemas must not silently alias");
+        let flat = |s: &[(Vec<u32>, CsrBatch)]| {
+            let mut rows: Vec<u32> =
+                s.iter().flat_map(|(r, _)| r.iter().copied()).collect();
+            rows.sort_unstable();
+            rows
+        };
+        assert_eq!(flat(&v1), flat(&expect), "same epoch cover either way");
+    }
+
+    #[test]
     fn epochs_pipeline_through_one_pool() {
         let b: Arc<dyn Backend> = Arc::new(SynthBackend::new(300, None));
         let sync = ScDataset::new(b.clone(), config(0, 4, 0));
@@ -728,22 +856,27 @@ mod tests {
 
     #[test]
     fn worker_panic_is_delivered_as_err() {
-        let b: Arc<dyn Backend> = Arc::new(SynthBackend::new(200, Some(190)));
-        let ds = ScDataset::new(b, config(3, 4, 0));
-        let mut saw_err = false;
-        for mb in ds.epoch(0).unwrap() {
-            match mb {
-                Ok(_) => {}
-                Err(e) => {
-                    let msg = format!("{e:#}");
-                    assert!(msg.contains("panicked"), "{msg}");
-                    assert!(msg.contains("injected panic"), "{msg}");
-                    saw_err = true;
-                    break;
+        for schema in [SeedSchema::V1, SeedSchema::V2] {
+            let b: Arc<dyn Backend> = Arc::new(SynthBackend::new(200, Some(190)));
+            let ds = ScDataset::new(b, config_with_schema(3, 4, 0, schema));
+            let mut saw_err = false;
+            for mb in ds.epoch(0).unwrap() {
+                match mb {
+                    Ok(_) => {}
+                    Err(e) => {
+                        let msg = format!("{e:#}");
+                        assert!(msg.contains("panicked"), "{msg}");
+                        assert!(msg.contains("injected panic"), "{msg}");
+                        saw_err = true;
+                        break;
+                    }
                 }
             }
+            assert!(
+                saw_err,
+                "{schema}: panic must surface as an Err item, not a hang/truncation"
+            );
         }
-        assert!(saw_err, "panic must surface as an Err item, not a hang/truncation");
     }
 
     #[test]

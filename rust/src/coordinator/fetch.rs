@@ -51,11 +51,29 @@ impl FetchView<'_> {
 }
 
 /// The paper's `fetch_transform` hook: runs once per fetched block-batch,
-/// at delivery time in plan order (so the transformed stream is identical
-/// for any worker count). Shared across epochs/threads, hence
-/// `Send + Sync`.
+/// before the split into minibatches. Under seed-schema v2 it runs on
+/// whichever executor worker finished the fetch; under v1 (or with no
+/// workers) on the delivery thread in plan order. Either way the
+/// transformed stream is identical for any worker count. Shared across
+/// epochs/threads, hence `Send + Sync`.
 pub type FetchTransform =
     Arc<dyn Fn(&mut FetchView<'_>) -> Result<()> + Send + Sync>;
+
+/// How [`finish_fetch`] shuffles the emitted row multiset (Algorithm 1
+/// line 9) — the two seed schemas differ exactly here.
+pub enum Shuffle<'a> {
+    /// No reshuffle: emit in plan order (pure streaming).
+    Off,
+    /// Seed-schema v1: consume the caller's sequential per-epoch stream
+    /// in place. Fetches MUST be finished in delivery order on one
+    /// thread, or the stream changes.
+    Seq(&'a mut Rng),
+    /// Seed-schema v2: an owned per-fetch RNG
+    /// ([`crate::util::rng::domains::shuffle_fetch_v2`], pure in
+    /// `(seed, epoch, fetch_id)`) — safe to run on any thread in any
+    /// order.
+    PerFetch(Rng),
+}
 
 /// A loaded, reshuffled fetch buffer ready to be split into minibatches.
 ///
@@ -150,15 +168,18 @@ pub fn execute_fetch(backend: &Arc<dyn Backend>, indices: &[u32]) -> Result<Exec
 }
 
 /// Algorithm 1 line 9: set up the in-memory reshuffle over an executed
-/// fetch. Must be called in **delivery order** — the shuffle RNG stream
-/// is consumed here, which keeps the emitted minibatch sequence
-/// independent of the execution order chosen by the scheduler. The data
-/// itself is gathered lazily by [`FetchedChunk::split`].
+/// fetch. With [`Shuffle::Seq`] (seed-schema v1) this must be called in
+/// **delivery order** — the sequential shuffle stream is consumed here,
+/// which keeps the emitted minibatch sequence independent of the
+/// execution order chosen by the scheduler. With [`Shuffle::PerFetch`]
+/// (v2) the RNG is owned and pure in `(seed, epoch, fetch_id)`, so any
+/// executor worker may finish any fetch in any order. The data itself is
+/// gathered lazily by [`FetchedChunk::split`].
 pub fn finish_fetch(
     ex: ExecutedFetch,
     backend: &Arc<dyn Backend>,
     label_cols: &[String],
-    mut shuffle: Option<&mut Rng>,
+    shuffle: Shuffle<'_>,
     transform: Option<&FetchTransform>,
 ) -> Result<FetchedChunk> {
     let ExecutedFetch {
@@ -166,8 +187,10 @@ pub fn finish_fetch(
         mut positions,
         fetched,
     } = ex;
-    if let Some(rng) = shuffle.as_deref_mut() {
-        rng.shuffle(&mut positions);
+    match shuffle {
+        Shuffle::Off => {}
+        Shuffle::Seq(rng) => rng.shuffle(&mut positions),
+        Shuffle::PerFetch(mut rng) => rng.shuffle(&mut positions),
     }
     let rows: Vec<u32> = positions.iter().map(|&p| sorted[p as usize]).collect();
     let mut labels = backend.obs().gather(label_cols, &rows)?;
@@ -213,15 +236,15 @@ pub fn finish_fetch(
 ///
 /// * `indices` — the fetch batch (multiset; weighted strategies may repeat
 ///   blocks).
-/// * `shuffle` — `Some(rng)` applies the line-9 in-memory reshuffle;
-///   `None` keeps stream order (pure streaming).
+/// * `shuffle` — the line-9 in-memory reshuffle mode ([`Shuffle::Off`]
+///   keeps stream order for pure streaming).
 /// * `transform` — optional `fetch_transform` hook applied to the loaded
 ///   block-batch before it is split.
 pub fn run_fetch(
     backend: &Arc<dyn Backend>,
     indices: &[u32],
     label_cols: &[String],
-    shuffle: Option<&mut Rng>,
+    shuffle: Shuffle<'_>,
     transform: Option<&FetchTransform>,
 ) -> Result<FetchedChunk> {
     let ex = execute_fetch(backend, indices)?;
@@ -250,7 +273,7 @@ mod tests {
         let indices = vec![10u32, 700, 10, 3, 999, 700];
         let mut rng = Rng::new(5);
         let cols = vec!["plate".to_string(), "drug".to_string()];
-        let chunk = run_fetch(&b, &indices, &cols, Some(&mut rng), None).unwrap();
+        let chunk = run_fetch(&b, &indices, &cols, Shuffle::Seq(&mut rng), None).unwrap();
         assert_eq!(chunk.n_rows(), 6);
         let mut got = chunk.rows.clone();
         got.sort_unstable();
@@ -291,7 +314,7 @@ mod tests {
     fn no_shuffle_keeps_order() {
         let (_d, b) = backend();
         let indices = vec![5u32, 6, 7, 8];
-        let chunk = run_fetch(&b, &indices, &[], None, None).unwrap();
+        let chunk = run_fetch(&b, &indices, &[], Shuffle::Off, None).unwrap();
         assert_eq!(chunk.rows, indices);
         assert!(chunk.labels.is_empty());
     }
@@ -302,8 +325,29 @@ mod tests {
         let indices: Vec<u32> = (0..128).collect();
         let mut r1 = Rng::new(9);
         let mut r2 = Rng::new(9);
-        let a = run_fetch(&b, &indices, &[], Some(&mut r1), None).unwrap();
-        let c = run_fetch(&b, &indices, &[], Some(&mut r2), None).unwrap();
+        let a = run_fetch(&b, &indices, &[], Shuffle::Seq(&mut r1), None).unwrap();
+        let c = run_fetch(&b, &indices, &[], Shuffle::Seq(&mut r2), None).unwrap();
+        assert_eq!(a.rows, c.rows);
+        assert_ne!(a.rows, indices, "shuffle must permute");
+    }
+
+    #[test]
+    fn perfetch_shuffle_matches_seq_with_fresh_rng() {
+        // An owned per-fetch RNG must produce exactly the shuffle a
+        // sequential RNG in the same state would — the schemas differ
+        // only in how the RNG state is derived, not in how it is used.
+        let (_d, b) = backend();
+        let indices: Vec<u32> = (0..64).collect();
+        let mut seq = Rng::new(21).fork(3);
+        let a = run_fetch(&b, &indices, &[], Shuffle::Seq(&mut seq), None).unwrap();
+        let c = run_fetch(
+            &b,
+            &indices,
+            &[],
+            Shuffle::PerFetch(Rng::new(21).fork(3)),
+            None,
+        )
+        .unwrap();
         assert_eq!(a.rows, c.rows);
         assert_ne!(a.rows, indices, "shuffle must permute");
     }
@@ -311,7 +355,7 @@ mod tests {
     #[test]
     fn io_reports_dedup_rows() {
         let (_d, b) = backend();
-        let chunk = run_fetch(&b, &[4, 4, 4, 4], &[], None, None).unwrap();
+        let chunk = run_fetch(&b, &[4, 4, 4, 4], &[], Shuffle::Off, None).unwrap();
         assert_eq!(chunk.io.rows, 1, "backend sees unique rows only");
         assert_eq!(chunk.n_rows(), 4, "multiset is reconstructed");
         assert_eq!(chunk.unique.n_rows, 1, "only the unique row is held");
@@ -322,7 +366,7 @@ mod tests {
     fn fetch_transform_rewrites_unique_rows_once() {
         let (_d, b) = backend();
         let indices = vec![3u32, 9, 3, 12];
-        let base = run_fetch(&b, &indices, &[], None, None).unwrap();
+        let base = run_fetch(&b, &indices, &[], Shuffle::Off, None).unwrap();
         let t: FetchTransform = Arc::new(|view: &mut FetchView<'_>| {
             assert_eq!(view.n_unique(), 3);
             assert_eq!(view.n_rows(), 4);
@@ -331,7 +375,7 @@ mod tests {
             }
             Ok(())
         });
-        let got = run_fetch(&b, &indices, &[], None, Some(&t)).unwrap();
+        let got = run_fetch(&b, &indices, &[], Shuffle::Off, Some(&t)).unwrap();
         assert_eq!(got.rows, base.rows, "row identity is immutable");
         let (bx, gx) = (base.materialize(), got.materialize());
         assert_eq!(bx.indices, gx.indices, "sparsity pattern untouched");
@@ -349,7 +393,7 @@ mod tests {
             view.x.n_rows = n - 1;
             Ok(())
         });
-        let err = run_fetch(&b, &[1, 2, 3], &[], None, Some(&t)).unwrap_err();
+        let err = run_fetch(&b, &[1, 2, 3], &[], Shuffle::Off, Some(&t)).unwrap_err();
         assert!(
             err.to_string().contains("preserve the fetched row count"),
             "{err}"

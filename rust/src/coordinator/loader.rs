@@ -52,19 +52,31 @@
 //!   fetches while epoch `e`'s tail drains.
 //!
 //! In both modes the consumer thread drains fetches **strictly in plan
-//! order** and runs `finish_fetch` (the line-9 shuffle RNG), the hook
-//! layer (`fetch_transform`, then the split, then `batch_transform`) in
-//! that order. Deliberate tradeoff: hooks and the gather are serialized
-//! on the delivery thread (the backend I/O and the decode pool still
-//! parallelize); a CPU-bound transform caps at one core regardless of
-//! `num_workers` — if that becomes the bottleneck, move the work into
-//! the decode pool or precompute it, and see the ROADMAP note on
-//! per-fetch RNG forking. The ordered-delivery guarantee: **with a fixed seed the
-//! emitted minibatch stream — row ids, labels and CSR payloads — is
-//! bit-identical for every `num_workers` (including 0) and across
-//! repeated runs** (`tests/determinism.rs`). Worker count, `in_flight`,
-//! epoch pipelining, the cache, the locality scheduler and the decode
-//! pipeline are all execution-only.
+//! order**. *Where* `finish_fetch` — the line-9 shuffle, the
+//! `fetch_transform` hook and the split preparation — runs is governed
+//! by [`SamplingConfig::seed_schema`]:
+//!
+//! * **v1** (library default, the pre-schema stream): one sequential
+//!   shuffle RNG per epoch, consumed on the delivery thread in plan
+//!   order. Hooks and the shuffle serialize on that thread — a
+//!   CPU-bound `fetch_transform` caps at one core regardless of
+//!   `num_workers`.
+//! * **v2** (app default): the shuffle RNG is forked per fetch id —
+//!   pure in `(seed, epoch, fetch_id)`, see
+//!   [`crate::util::rng::domains::shuffle_fetch_v2`] — so whichever
+//!   worker executed a fetch also finishes it. Completions park in the
+//!   reorder buffer as ready-to-split chunks, and the delivery thread
+//!   is left with the in-order pop, stats recording, the minibatch
+//!   split and `batch_transform`. This breaks the delivery-thread
+//!   ceiling at the cost of emitting a *different* (equally
+//!   deterministic) stream than v1.
+//!
+//! Under either schema the ordered-delivery guarantee holds: **with a
+//! fixed seed and seed schema the emitted minibatch stream — row ids,
+//! labels and CSR payloads — is bit-identical for every `num_workers`
+//! (including 0) and across repeated runs** (`tests/determinism.rs`).
+//! Worker count, `in_flight`, epoch pipelining, the cache, the locality
+//! scheduler and the decode pipeline are all execution-only.
 //!
 //! Failure is part of the contract: a failed fetch — including a worker
 //! **panic** — surfaces as an `Err` item at its plan position instead of
@@ -83,14 +95,14 @@ use anyhow::Result;
 
 use crate::store::cache::{CacheConfig as BlockCacheConfig, CacheStats, CachingBackend};
 use crate::store::{Backend, CsrBatch, IoPipeline, IoReport};
-use crate::util::rng::Rng;
+use crate::util::rng::{domains, Rng};
 
 use super::builder::{
-    CacheConfig, DdpConfig, IoConfig, SamplingConfig, ScDatasetBuilder, WorkerConfig,
+    CacheConfig, DdpConfig, IoConfig, SamplingConfig, ScDatasetBuilder, SeedSchema, WorkerConfig,
 };
 use super::ddp::assigned_fetches;
-use super::exec::{Executor, ExecutorSettings, GenHandle, GenPlan};
-use super::fetch::{execute_fetch, finish_fetch, ExecutedFetch, FetchTransform};
+use super::exec::{ExecOutput, Executor, ExecutorSettings, FinishSpec, GenHandle, GenPlan};
+use super::fetch::{execute_fetch, finish_fetch, FetchTransform, Shuffle};
 use super::plan::{build_plan, locality_schedule, EpochPlan, Strategy};
 
 /// One training minibatch.
@@ -198,8 +210,19 @@ pub struct LoadStats {
     pub io: IoReport,
     /// Per-fetch reports (feed these to `iomodel::simulate_loader`).
     pub fetch_reports: Vec<IoReport>,
-    /// Wall-clock nanoseconds spent inside backend fetch calls.
+    /// Wall-clock nanoseconds spent inside backend fetch calls (plus the
+    /// in-fetch `finish_fetch` under seed-schema v2, where the executing
+    /// thread also shuffles/hooks/preps the fetch).
     pub real_fetch_ns: u64,
+    /// Delivery-thread occupancy: ns the delivery thread itself spent in
+    /// `finish_fetch` (shuffle + `fetch_transform` + split prep). Accrues
+    /// under seed-schema v1; exactly 0 under v2, where finishing migrates
+    /// to whichever thread executed the fetch.
+    pub deliver_finish_ns: u64,
+    /// Delivery-thread occupancy: ns spent waiting on the next completed
+    /// fetch — blocked on the executor's reorder buffer (pool mode), or
+    /// executing fetches synchronously (`num_workers == 0`).
+    pub deliver_wait_ns: u64,
 }
 
 /// The loader.
@@ -224,6 +247,29 @@ impl fmt::Debug for ScDataset {
             .field("hooks", &self.hooks)
             .field("executor", &self.exec.is_some())
             .finish()
+    }
+}
+
+/// Whether this strategy reshuffles within each fetch (Algorithm 1
+/// line 9). Streaming preserves order; its randomness, if any, comes
+/// from the downstream shuffle buffer.
+fn shuffles_in_fetch(strategy: &Strategy) -> bool {
+    !matches!(strategy, Strategy::Streaming { .. })
+}
+
+/// The worker-side finish recipe under seed-schema v2 — everything a
+/// thread needs to run `finish_fetch` for any `(epoch, fetch_id)`.
+/// `None` under v1, where the delivery thread owns the one sequential
+/// shuffle stream and finishing cannot leave it.
+fn finish_spec(cfg: &LoaderConfig, hooks: &Hooks) -> Option<FinishSpec> {
+    match cfg.sampling.seed_schema {
+        SeedSchema::V1 => None,
+        SeedSchema::V2 => Some(FinishSpec {
+            label_cols: cfg.label_cols.clone(),
+            fetch_transform: hooks.fetch_transform.clone(),
+            seed: cfg.sampling.seed,
+            shuffle_in_fetch: shuffles_in_fetch(&cfg.sampling.strategy),
+        }),
     }
 }
 
@@ -316,6 +362,7 @@ impl ScDataset {
                 Box::new(move |epoch| {
                     build_gen_plan(&gb_backend, &sampling, ddp, cache_cfg, epoch)
                 }),
+                finish_spec(&cfg, &hooks),
             ))
         } else {
             None
@@ -399,6 +446,11 @@ impl ScDataset {
                     next_deliver: 0,
                     next_exec: 0,
                     pending: HashMap::new(),
+                    // v2: finish inline with the identical per-fetch
+                    // derivation a pool worker would use — this is what
+                    // keeps `num_workers == 0` on the v2 stream.
+                    finish: finish_spec(&self.cfg, &self.hooks),
+                    epoch,
                 })
             }
         };
@@ -406,10 +458,12 @@ impl ScDataset {
             source,
             backend: self.backend.clone(),
             label_cols: self.cfg.label_cols.clone(),
-            // One shuffle stream per epoch, identical for every worker
-            // count — the RNG is consumed at delivery, in plan order.
-            rng: Rng::new(sampling.seed).fork(0x10_000 + epoch),
-            shuffle_in_fetch: !matches!(sampling.strategy, Strategy::Streaming { .. }),
+            // v1's sequential shuffle stream: one per epoch, identical
+            // for every worker count, consumed at delivery in plan
+            // order. Idle under v2 (the source delivers fetches already
+            // finished with per-fetch forks).
+            rng: domains::shuffle_stream_v1(sampling.seed, epoch),
+            shuffle_in_fetch: shuffles_in_fetch(&sampling.strategy),
             fetch_transform: self.hooks.fetch_transform.clone(),
             stats: stats.clone(),
             failed: false,
@@ -421,7 +475,10 @@ impl ScDataset {
                         stream,
                         sampling.batch_size,
                         shuffle_buffer,
-                        Rng::new(sampling.seed).fork(0x20_000 + epoch),
+                        // Sequential by nature (draws depend on buffer
+                        // occupancy), so it stays on the delivery thread
+                        // under BOTH seed schemas.
+                        domains::shuffle_buffer(sampling.seed, epoch),
                         sampling.drop_last,
                     ))
                 }
@@ -497,19 +554,20 @@ impl<I: Iterator<Item = Result<Minibatch>>> Iterator for BatchHookIter<I> {
     }
 }
 
-/// Where executed fetches come from: the caller's thread (`Inline`,
+/// Where completed fetches come from: the caller's thread (`Inline`,
 /// `num_workers == 0`) or the persistent executor (`Pool`). Both yield
-/// `(ExecutedFetch, exec_ns)` strictly in plan order.
+/// `(ExecOutput, exec_ns)` strictly in plan order — raw executed
+/// fetches under seed-schema v1, fully *finished* chunks under v2.
 enum FetchSource {
     Inline(InlineSource),
     Pool(GenHandle),
 }
 
 impl FetchSource {
-    fn next_executed(&mut self) -> Option<(Result<ExecutedFetch>, u64)> {
+    fn next_completed(&mut self) -> Option<(Result<ExecOutput>, u64)> {
         match self {
-            FetchSource::Inline(s) => s.next_executed(),
-            FetchSource::Pool(h) => h.next_executed(),
+            FetchSource::Inline(s) => s.next_completed(),
+            FetchSource::Pool(h) => h.next_completed(),
         }
     }
 }
@@ -534,11 +592,16 @@ struct InlineSource {
     /// Executed-but-undelivered fetches (≤ window + 1 entries). Failures
     /// park here too, keyed by the *failing* fetch — so an error
     /// surfaces at its own plan position, exactly like the pool path.
-    pending: HashMap<usize, (Result<ExecutedFetch>, u64)>,
+    pending: HashMap<usize, (Result<ExecOutput>, u64)>,
+    /// Seed-schema v2: finish each fetch right after executing it, with
+    /// the per-fetch RNG fork — the same derivation a pool worker uses.
+    /// `None` under v1 (the delivery stream finishes sequentially).
+    finish: Option<FinishSpec>,
+    epoch: u64,
 }
 
 impl InlineSource {
-    fn next_executed(&mut self) -> Option<(Result<ExecutedFetch>, u64)> {
+    fn next_completed(&mut self) -> Option<(Result<ExecOutput>, u64)> {
         let id = *self.fetch_ids.get(self.next_deliver)?;
         self.next_deliver += 1;
         // Run scheduled fetches until the one to deliver is resident.
@@ -555,7 +618,17 @@ impl InlineSource {
                 }
             }
             let t0 = std::time::Instant::now();
-            let result = execute_fetch(&self.backend, self.plan.fetch_indices(eid));
+            let result = execute_fetch(&self.backend, self.plan.fetch_indices(eid)).and_then(
+                |ex| match &self.finish {
+                    Some(spec) => Ok(ExecOutput::Finished(spec.finish(
+                        &self.backend,
+                        ex,
+                        self.epoch,
+                        eid,
+                    )?)),
+                    None => Ok(ExecOutput::Executed(ex)),
+                },
+            );
             self.pending
                 .insert(eid, (result, t0.elapsed().as_nanos() as u64));
         }
@@ -564,14 +637,17 @@ impl InlineSource {
     }
 }
 
-/// The delivery half shared by both modes: takes executed fetches in plan
-/// order, records stats, and runs `finish_fetch` — the line-9 shuffle
-/// RNG and the `fetch_transform` hook — so the emitted stream is
-/// identical whatever executed the fetch, in whatever order.
+/// The delivery half shared by both modes: pops completed fetches in
+/// plan order, records stats, and — under seed-schema v1, where the
+/// sequential shuffle stream must be consumed on one thread in plan
+/// order — runs `finish_fetch` itself. Under v2 the source already
+/// finished each fetch with its per-fetch RNG fork, so only the pop and
+/// bookkeeping remain here.
 struct DeliverStream {
     source: FetchSource,
     backend: Arc<dyn Backend>,
     label_cols: Vec<String>,
+    /// The v1 sequential shuffle stream; idle under v2.
     rng: Rng,
     shuffle_in_fetch: bool,
     /// The paper's `fetch_transform` hook (identity when `None`).
@@ -586,32 +662,57 @@ impl DeliverStream {
         if self.failed {
             return None;
         }
-        let (result, exec_ns) = self.source.next_executed()?;
-        let ex = match result {
+        let wait_t0 = std::time::Instant::now();
+        let (result, exec_ns) = self.source.next_completed()?;
+        let wait_ns = wait_t0.elapsed().as_nanos() as u64;
+        let out = match result {
             Err(e) => {
                 self.failed = true;
                 return Some(Err(e));
             }
-            Ok(ex) => ex,
+            Ok(out) => out,
         };
-        {
-            let mut s = self.stats.lock().unwrap();
-            s.fetches += 1;
-            s.io.add(&ex.fetched.io);
-            s.fetch_reports.push(ex.fetched.io);
-            s.real_fetch_ns += exec_ns;
+        match out {
+            // v2: finished on whatever thread executed it — bookkeeping
+            // is all that's left for the delivery thread.
+            ExecOutput::Finished(chunk) => {
+                let mut s = self.stats.lock().unwrap();
+                s.fetches += 1;
+                s.io.add(&chunk.io);
+                s.fetch_reports.push(chunk.io);
+                s.real_fetch_ns += exec_ns;
+                s.deliver_wait_ns += wait_ns;
+                drop(s);
+                Some(Ok(chunk))
+            }
+            // v1: consume the sequential shuffle stream here, in plan
+            // order — the schema's reproducibility contract.
+            ExecOutput::Executed(ex) => {
+                {
+                    let mut s = self.stats.lock().unwrap();
+                    s.fetches += 1;
+                    s.io.add(&ex.fetched.io);
+                    s.fetch_reports.push(ex.fetched.io);
+                    s.real_fetch_ns += exec_ns;
+                    s.deliver_wait_ns += wait_ns;
+                }
+                let finish_t0 = std::time::Instant::now();
+                let chunk = finish_fetch(
+                    ex,
+                    &self.backend,
+                    &self.label_cols,
+                    if self.shuffle_in_fetch {
+                        Shuffle::Seq(&mut self.rng)
+                    } else {
+                        Shuffle::Off
+                    },
+                    self.fetch_transform.as_ref(),
+                );
+                self.stats.lock().unwrap().deliver_finish_ns +=
+                    finish_t0.elapsed().as_nanos() as u64;
+                Some(chunk)
+            }
         }
-        Some(finish_fetch(
-            ex,
-            &self.backend,
-            &self.label_cols,
-            if self.shuffle_in_fetch {
-                Some(&mut self.rng)
-            } else {
-                None
-            },
-            self.fetch_transform.as_ref(),
-        ))
     }
 }
 
@@ -1107,6 +1208,52 @@ mod tests {
             iter.stats().fetch_reports
         };
         assert_eq!(run(0), run(4));
+    }
+
+    #[test]
+    fn occupancy_counters_track_where_finish_runs() {
+        let (_d, b) = backend(300);
+        let run = |workers: usize, schema: SeedSchema| {
+            let ds = ScDataset::new(
+                b.clone(),
+                LoaderConfig {
+                    sampling: SamplingConfig {
+                        strategy: Strategy::BlockShuffling { block_size: 8 },
+                        batch_size: 32,
+                        fetch_factor: 2,
+                        seed_schema: schema,
+                        ..SamplingConfig::default()
+                    },
+                    workers: WorkerConfig {
+                        num_workers: workers,
+                        ..WorkerConfig::default()
+                    },
+                    label_cols: vec!["plate".into()],
+                    ..Default::default()
+                },
+            );
+            let mut iter = ds.epoch(0).unwrap();
+            while iter.next().is_some() {}
+            iter.stats()
+        };
+        // v1: finish_fetch runs on the delivery thread, so time accrues
+        // there no matter how many workers execute.
+        let v1 = run(3, SeedSchema::V1);
+        assert!(v1.deliver_finish_ns > 0, "v1 finishes at delivery");
+        assert!(v1.deliver_wait_ns > 0);
+        // v2 + pool: workers finish their own fetches; the delivery
+        // thread never runs finish_fetch at all.
+        let v2 = run(3, SeedSchema::V2);
+        assert_eq!(v2.deliver_finish_ns, 0, "v2 finish migrated to workers");
+        assert!(v2.real_fetch_ns > 0);
+        // v2 inline: the caller's thread executes AND finishes — it all
+        // lands in wait/exec time, never in delivery-side finish.
+        let v2_sync = run(0, SeedSchema::V2);
+        assert_eq!(v2_sync.deliver_finish_ns, 0);
+        assert!(v2_sync.deliver_wait_ns > 0);
+        // The emitted row counts agree across all of the above.
+        assert_eq!(v1.rows, v2.rows);
+        assert_eq!(v2.rows, v2_sync.rows);
     }
 
     #[test]

@@ -16,7 +16,8 @@ pub mod loader;
 pub mod plan;
 
 pub use builder::{
-    BuildError, CacheConfig, DdpConfig, IoConfig, SamplingConfig, ScDatasetBuilder, WorkerConfig,
+    BuildError, CacheConfig, DdpConfig, IoConfig, SamplingConfig, ScDatasetBuilder, SeedSchema,
+    WorkerConfig,
 };
 pub use fetch::{FetchTransform, FetchView};
 pub use loader::{

@@ -19,7 +19,7 @@
 use anyhow::{bail, Result};
 
 use crate::store::obs::ObsFrame;
-use crate::util::rng::{AliasTable, Rng};
+use crate::util::rng::{domains, AliasTable, Rng};
 
 /// How epoch order is generated (paper §3.3).
 #[derive(Clone, Debug, PartialEq)]
@@ -244,7 +244,7 @@ pub fn build_plan(
     if n > u32::MAX as usize {
         bail!("dataset too large for u32 indices");
     }
-    let mut rng = Rng::new(seed).fork(epoch);
+    let mut rng = domains::plan(seed, epoch);
     let order: Vec<u32> = match strategy {
         Strategy::Streaming { .. } => (0..n as u32).collect(),
         Strategy::BlockShuffling { block_size } => {

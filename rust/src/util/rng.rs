@@ -60,6 +60,16 @@ impl Rng {
         Rng { s, gauss_cache: None }
     }
 
+    /// Derive a sub-stream keyed by a `(domain, index)` pair — a two-level
+    /// fork, so the result is pure in `(self, domain, index)` and any
+    /// thread can reconstruct it without consuming a shared sequential
+    /// stream. This is what makes per-fetch RNGs (seed-schema v2)
+    /// parallel-safe: worker k shuffling fetch 17 derives exactly the same
+    /// stream as the synchronous path would.
+    pub fn fork_keyed(&self, domain: u64, index: u64) -> Rng {
+        self.fork(domain).fork(index)
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -235,6 +245,60 @@ impl Rng {
     }
 }
 
+/// Named RNG fork domains — the single auditable map of every sub-stream
+/// the coordinator derives from the user seed. Each entry documents one
+/// derivation; nothing else in the codebase may fork off `Rng::new(seed)`
+/// with ad-hoc labels.
+///
+/// | domain | derivation | consumed by |
+/// |---|---|---|
+/// | plan            | `Rng::new(seed).fork(epoch)`                           | epoch permutation (Algorithm 1 lines 1–4) |
+/// | shuffle v1      | `Rng::new(seed).fork(SHUFFLE_STREAM_V1 + epoch)`       | one sequential per-epoch shuffle stream on the delivery thread (seed-schema v1, PRs 2–5) |
+/// | shuffle v2      | `Rng::new(seed).fork_keyed(SHUFFLE_FETCH_V2 + epoch, fetch_id)` | one independent shuffle RNG per fetch id — pure in `(seed, epoch, fetch_id)`, so executor workers can run `finish_fetch` (seed-schema v2) |
+/// | shuffle buffer  | `Rng::new(seed).fork(SHUFFLE_BUFFER + epoch)`          | the streaming strategy's rolling shuffle buffer (delivery thread, both schemas) |
+///
+/// The base offsets keep the three per-epoch families disjoint for any
+/// epoch below 2^16; v2 additionally keys on the fetch id through a
+/// second fork level, so no arithmetic on `epoch + fetch_id` can collide
+/// across domains.
+pub mod domains {
+    use super::Rng;
+
+    /// Base label for the v1 sequential per-epoch shuffle stream.
+    pub const SHUFFLE_STREAM_V1: u64 = 0x10_000;
+    /// Base label for the rolling shuffle-buffer stream (streaming
+    /// strategy; identical under both seed schemas).
+    pub const SHUFFLE_BUFFER: u64 = 0x20_000;
+    /// Base label for the v2 per-fetch shuffle domain.
+    pub const SHUFFLE_FETCH_V2: u64 = 0x30_000;
+
+    /// Epoch plan permutation RNG (shared by every seed schema).
+    pub fn plan(seed: u64, epoch: u64) -> Rng {
+        Rng::new(seed).fork(epoch)
+    }
+
+    /// Seed-schema v1: the sequential per-epoch shuffle stream, consumed
+    /// fetch-by-fetch in plan order on the delivery thread.
+    pub fn shuffle_stream_v1(seed: u64, epoch: u64) -> Rng {
+        Rng::new(seed).fork(SHUFFLE_STREAM_V1.wrapping_add(epoch))
+    }
+
+    /// Seed-schema v2: an independent shuffle RNG per fetch id. Pure in
+    /// `(seed, epoch, fetch_id)` — any worker thread derives the exact
+    /// stream the synchronous path would, which is what lets
+    /// `finish_fetch` run inside the executor.
+    pub fn shuffle_fetch_v2(seed: u64, epoch: u64, fetch_id: usize) -> Rng {
+        Rng::new(seed).fork_keyed(SHUFFLE_FETCH_V2.wrapping_add(epoch), fetch_id as u64)
+    }
+
+    /// The streaming strategy's rolling shuffle-buffer RNG (delivery
+    /// thread in both schemas — draws depend on buffer occupancy, which
+    /// is inherently sequential).
+    pub fn shuffle_buffer(seed: u64, epoch: u64) -> Rng {
+        Rng::new(seed).fork(SHUFFLE_BUFFER.wrapping_add(epoch))
+    }
+}
+
 /// Walker alias table for O(1) weighted categorical sampling. Used by the
 /// `BlockWeightedSampling` / `ClassBalancedSampling` strategies where blocks
 /// are drawn with replacement proportionally to their weight.
@@ -333,6 +397,58 @@ mod tests {
         let mut a = root.fork(3);
         let mut b = root.fork(3);
         assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn keyed_forks_deterministic_and_decorrelated() {
+        let root = Rng::new(17);
+        let mut a = root.fork_keyed(5, 100);
+        let mut b = root.fork_keyed(5, 100);
+        assert_eq!(a.next_u64(), b.next_u64());
+        // distinct index, distinct domain, and domain/index swap all give
+        // distinct streams
+        let mut c = root.fork_keyed(5, 101);
+        let mut d = root.fork_keyed(6, 100);
+        let mut e = root.fork_keyed(100, 5);
+        let x = root.fork_keyed(5, 100).next_u64();
+        assert_ne!(c.next_u64(), x);
+        assert_ne!(d.next_u64(), x);
+        assert_ne!(e.next_u64(), x);
+    }
+
+    #[test]
+    fn domain_derivations_match_their_documented_formulas() {
+        // The named domains are the auditable source of truth for the
+        // seed-schema derivations; lock them to the raw fork formulas the
+        // pre-schema code used (v1 streams must reproduce PR 5 exactly).
+        let (seed, epoch) = (11u64, 3u64);
+        assert_eq!(
+            domains::plan(seed, epoch).next_u64(),
+            Rng::new(seed).fork(epoch).next_u64()
+        );
+        assert_eq!(
+            domains::shuffle_stream_v1(seed, epoch).next_u64(),
+            Rng::new(seed).fork(0x10_000 + epoch).next_u64()
+        );
+        assert_eq!(
+            domains::shuffle_buffer(seed, epoch).next_u64(),
+            Rng::new(seed).fork(0x20_000 + epoch).next_u64()
+        );
+        assert_eq!(
+            domains::shuffle_fetch_v2(seed, epoch, 7).next_u64(),
+            Rng::new(seed).fork(0x30_000 + epoch).fork(7).next_u64()
+        );
+    }
+
+    #[test]
+    fn perfetch_domain_is_decorrelated_across_fetches_and_epochs() {
+        let mut seen = std::collections::HashSet::new();
+        for epoch in 0..4u64 {
+            for fetch in 0..16usize {
+                let x = domains::shuffle_fetch_v2(42, epoch, fetch).next_u64();
+                assert!(seen.insert(x), "collision at epoch {epoch} fetch {fetch}");
+            }
+        }
     }
 
     #[test]

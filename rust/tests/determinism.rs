@@ -9,16 +9,23 @@
 //! * for any intra-fetch decode pipeline setting (`io.decode_threads`,
 //!   `io.coalesce_gap_bytes`);
 //! * with **identity** `fetch_transform`/`batch_transform` hooks
-//!   installed through the builder.
+//!   installed through the builder;
+//! * under **both seed schemas** (ISSUE 6): v1 keeps the PR-5 stream
+//!   bit-for-bit (the `base_cfg()` tests above — `SamplingConfig`
+//!   defaults to v1), while v2 forks the shuffle RNG per fetch so
+//!   `finish_fetch` runs on executor workers; its (different) stream is
+//!   equally worker-count- and run-invariant.
 //!
 //! All loaders are constructed through `ScDataset::builder` (the public
 //! API); base configs are assembled by mutating `LoaderConfig::default()`
 //! (struct literals for `LoaderConfig` are reserved to the loader module).
 #![allow(clippy::field_reassign_with_default)]
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
-use scdata::coordinator::{CacheConfig, IoConfig, LoaderConfig, ScDataset, Strategy};
+use scdata::coordinator::{
+    CacheConfig, IoConfig, LoaderConfig, ScDataset, SeedSchema, Strategy,
+};
 use scdata::datagen::{generate, open_collection, TahoeConfig};
 use scdata::store::{Backend, CsrBatch};
 use scdata::util::tempdir::TempDir;
@@ -513,6 +520,109 @@ fn identity_hooks_stream_invariant_with_workers() {
                 "workers={workers}, epoch={epoch}"
             );
         }
+    }
+}
+
+#[test]
+fn v2_stream_invariant_across_worker_counts_and_runs() {
+    // ISSUE 6 acceptance: under seed-schema v2 (per-fetch RNG forking,
+    // finish_fetch on executor workers) the stream is still bit-identical
+    // for num_workers ∈ {0, 1, 4, 8} across epochs, and across two fresh
+    // pools at the highest worker count — while being a *different*
+    // stream from v1's (different derivation, not an alias).
+    let (_d, b) = dataset(400);
+    let v2 = |workers: usize| {
+        make(
+            &b,
+            vary(|c| {
+                c.sampling.seed_schema = SeedSchema::V2;
+                c.workers.num_workers = workers;
+            }),
+        )
+    };
+    let w0 = v2(0);
+    let variants: Vec<(usize, ScDataset)> =
+        [1usize, 4, 8].into_iter().map(|w| (w, v2(w))).collect();
+    let repeat = v2(8);
+    let v1 = make(&b, base_cfg());
+    for epoch in [0u64, 1] {
+        let expect = stream(&w0, epoch);
+        assert!(!expect.is_empty());
+        for (w, ds) in &variants {
+            assert_eq!(
+                stream(ds, epoch),
+                expect,
+                "v2: {w} workers changed the epoch-{epoch} stream"
+            );
+        }
+        assert_eq!(
+            stream(&repeat, epoch),
+            expect,
+            "v2: independent 8-worker run diverged at epoch {epoch}"
+        );
+        // Same rows overall (same plan), different order (different RNG).
+        let v1s = stream(&v1, epoch);
+        assert_ne!(
+            v1s.iter().map(|m| &m.0).collect::<Vec<_>>(),
+            expect.iter().map(|m| &m.0).collect::<Vec<_>>(),
+            "v1 and v2 must not emit the same row stream (epoch {epoch})"
+        );
+        let sorted = |s: &Stream| {
+            let mut rows: Vec<u32> = s.iter().flat_map(|m| m.0.iter().copied()).collect();
+            rows.sort_unstable();
+            rows
+        };
+        assert_eq!(sorted(&v1s), sorted(&expect), "schemas must cover the same rows");
+    }
+}
+
+#[test]
+fn v2_runs_fetch_transform_on_executor_workers() {
+    // ISSUE 6 acceptance: the occupancy claim, asserted structurally —
+    // under v2 with a worker pool the fetch_transform hook executes on
+    // the named executor threads; under v1 (and under v2 with
+    // num_workers = 0) it runs on the delivery/caller thread.
+    let (_d, b) = dataset(300);
+    let run = |schema: SeedSchema, workers: usize| -> Vec<String> {
+        let names: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = names.clone();
+        let ds = ScDataset::builder(b.clone())
+            .config(vary(|c| {
+                c.sampling.seed_schema = schema;
+                c.workers.num_workers = workers;
+            }))
+            .fetch_transform(move |_view| {
+                let name = std::thread::current()
+                    .name()
+                    .unwrap_or("<unnamed>")
+                    .to_string();
+                sink.lock().unwrap().push(name);
+                Ok(())
+            })
+            .build()
+            .unwrap();
+        let _ = stream(&ds, 0);
+        let got = names.lock().unwrap().clone();
+        assert!(!got.is_empty(), "hook never ran ({schema}, {workers} workers)");
+        got
+    };
+    for name in run(SeedSchema::V2, 4) {
+        assert!(
+            name.starts_with("scdata-exec-"),
+            "v2 hook ran off the worker pool: thread {name:?}"
+        );
+    }
+    for name in run(SeedSchema::V1, 4) {
+        assert!(
+            !name.starts_with("scdata-exec-"),
+            "v1 hook ran on a worker thread: {name:?}"
+        );
+    }
+    for name in run(SeedSchema::V2, 0) {
+        assert!(
+            !name.starts_with("scdata-exec-"),
+            "synchronous v2 hook ran on a worker thread: {name:?}"
+        );
     }
 }
 

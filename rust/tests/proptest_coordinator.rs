@@ -12,7 +12,7 @@ use scdata::coordinator::entropy::{
 };
 use scdata::coordinator::{
     build_plan, locality_schedule, CacheConfig, DdpConfig, IoConfig, LoaderConfig, ScDataset,
-    Strategy,
+    SeedSchema, Strategy,
 };
 use scdata::datagen::{generate, open_collection, TahoeConfig};
 use scdata::prop_assert;
@@ -519,6 +519,90 @@ fn prop_executor_schedule_stream_invariant() {
         prop_assert!(
             all == (0..n as u32).collect::<Vec<_>>(),
             "pooled epoch lost/duplicated rows"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_perfetch_rng_stream_invariant() {
+    // ISSUE 6 acceptance: seed-schema v2 (per-fetch RNG forking —
+    // finish_fetch runs on executor workers, in whatever order fetches
+    // complete) is every bit as deterministic as v1. Each case samples a
+    // random sampling config plus a random executor shape per variant
+    // (workers ∈ {0, 1, 4, 8}, in-flight budget, epoch pipelining,
+    // locality window, cache on/off) and requires the full stream (rows +
+    // expression data + labels) to equal the synchronous num_workers = 0
+    // run, across two consecutive epochs, plus exact epoch cover.
+    let dir = TempDir::new("prop-perfetch").unwrap();
+    let mut cfg = TahoeConfig::tiny();
+    cfg.n_plates = 3;
+    cfg.cells_per_plate = 350;
+    generate(&cfg, dir.path()).unwrap();
+    let backend: Arc<dyn Backend> = Arc::new(open_collection(dir.path()).unwrap());
+    let n = backend.n_rows();
+    check("perfetch-rng-stream", 8, |rng| {
+        let mut base = LoaderConfig::default();
+        base.sampling.seed_schema = SeedSchema::V2;
+        base.sampling.strategy = Strategy::BlockShuffling {
+            block_size: rng.range(1, 48),
+        };
+        base.sampling.batch_size = rng.range(1, 80);
+        base.sampling.fetch_factor = rng.range(1, 6);
+        base.sampling.seed = rng.next_u64();
+        base.label_cols = vec!["plate".into()];
+        let first_epoch = rng.range(0, 3) as u64;
+        type Stream = Vec<(Vec<u32>, scdata::store::CsrBatch, Vec<Vec<u16>>)>;
+        let run = |cfg: &LoaderConfig| -> Result<Vec<Stream>, String> {
+            let ds = ScDataset::builder(backend.clone())
+                .config(cfg.clone())
+                .build()
+                .map_err(|e| e.to_string())?;
+            let mut out = Vec::new();
+            for epoch in [first_epoch, first_epoch + 1] {
+                let mut s = Vec::new();
+                for mb in ds.epoch(epoch).map_err(|e| e.to_string())? {
+                    let mb = mb.map_err(|e| e.to_string())?;
+                    s.push((mb.rows, mb.x, mb.labels));
+                }
+                out.push(s);
+            }
+            Ok(out)
+        };
+        let sync = run(&base)?;
+        for &workers in &[0usize, 1, 4, 8] {
+            let mut v = base.clone();
+            v.workers.num_workers = workers;
+            v.workers.in_flight = rng.range(1, 9);
+            v.workers.pipeline_epochs = rng.range(0, 3);
+            if rng.bernoulli(0.5) {
+                v.cache = CacheConfig {
+                    bytes: rng.range(10_000, 8 << 20),
+                    block_rows: rng.range(1, 400),
+                    locality_window: rng.range(0, 12),
+                    readahead: rng.bernoulli(0.5),
+                };
+            }
+            let got = run(&v)?;
+            prop_assert!(
+                got == sync,
+                "v2 stream diverged (workers={} in_flight={} pipeline={} \
+                 window={} cache={})",
+                workers,
+                v.workers.in_flight,
+                v.workers.pipeline_epochs,
+                v.cache.locality_window,
+                v.cache.bytes > 0
+            );
+        }
+        let mut all: Vec<u32> = sync[0]
+            .iter()
+            .flat_map(|(r, _, _)| r.iter().copied())
+            .collect();
+        all.sort_unstable();
+        prop_assert!(
+            all == (0..n as u32).collect::<Vec<_>>(),
+            "v2 epoch lost/duplicated rows"
         );
         Ok(())
     });
