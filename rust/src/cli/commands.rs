@@ -161,6 +161,15 @@ pub fn train(args: &Args) -> Result<()> {
     tc.loader.cache = cache;
     tc.loader.io = io;
     tc.loader.workers = args.workers_config(cfg.workers)?;
+    // Checkpoint/resume: flags override the `[resume]` config table. An
+    // empty config path means "off" unless --checkpoint is given.
+    tc.resume.checkpoint_path = match args.flags.get("checkpoint") {
+        Some(p) => Some(p.into()),
+        None if cfg.resume.path.as_os_str().is_empty() => None,
+        None => Some(cfg.resume.path.clone()),
+    };
+    tc.resume.every_steps = args.usize_or("checkpoint-every", cfg.resume.every_steps)?;
+    tc.resume.resume_from = args.flags.get("resume").map(|p| p.into());
     let report = train_eval(train_be, test_be, &engine, &tc)?;
     println!(
         "task={} strategy={} engine={}",
@@ -365,6 +374,28 @@ mod tests {
         .unwrap();
         train(&argv(&format!(
             "train --data {out} --task moa_broad --strategy block --block 8 --fetch 4 --max-steps 6 --lr 0.01"
+        )))
+        .unwrap();
+    }
+
+    #[test]
+    fn train_checkpoint_resume_smoke() {
+        let data = TempDir::new("cli-resume-data").unwrap();
+        let out = data.path().to_string_lossy().to_string();
+        gen_data(&argv(&format!(
+            "gen-data --out {out} --preset tiny --cells 600"
+        )))
+        .unwrap();
+        let ckdir = TempDir::new("cli-resume-ck").unwrap();
+        let ck = ckdir.path().join("run.ckpt.json");
+        let ck = ck.to_string_lossy();
+        train(&argv(&format!(
+            "train --data {out} --task cell_line --block 8 --fetch 4 --max-steps 4 --lr 0.01 --checkpoint {ck}"
+        )))
+        .unwrap();
+        assert!(ckdir.path().join("run.ckpt.json").exists(), "manifest written");
+        train(&argv(&format!(
+            "train --data {out} --task cell_line --block 8 --fetch 4 --max-steps 8 --lr 0.01 --resume {ck}"
         )))
         .unwrap();
     }

@@ -30,6 +30,7 @@ COMMANDS:
               [--cache-mb N] [--cache-block-rows N] [--readahead]
               [--locality-window N]
               [--decode-threads N] [--coalesce-gap-bytes N]
+              [--checkpoint PATH] [--checkpoint-every N] [--resume PATH]
   bench       Regenerate paper figures/tables
               fig2|fig3|fig4|eq5|fig5|fig6|fig7|fig8|fig9|fig10|table2|all
               --data DIR [--results DIR] [--quick] [--engine cpu|pjrt]
@@ -78,6 +79,18 @@ and --coalesce-gap-bytes N merges chunk reads whose file gap is <= N
 bytes into single ranged I/O calls (0 = off). Both are execution-only:
 the emitted minibatch stream is bit-identical for any setting. Defaults
 come from the [io] table of --config FILE.
+
+Checkpoint/resume: --checkpoint PATH makes train write a small JSON
+manifest (loader position + model/optimizer state) atomically at every
+epoch boundary and at the --max-steps cap; --checkpoint-every N also
+writes every N optimizer steps. --resume PATH restarts a killed run from
+its manifest: the loader replans the epoch from (seed, epoch) and fast-
+forwards by skipping already-delivered fetches entirely (resume cost is
+proportional to position, no re-reads), so the minibatch stream — and
+the loss sequence — continue bit-identically, even under a different
+worker/cache configuration. A manifest from a different stream config
+(seed, strategy, batch/fetch geometry, DDP rank) is rejected with a
+typed error. Defaults come from the [resume] table of --config FILE.
 
 The virtual-disk model can be overridden with --config FILE (TOML, see
 configs/default.toml).";

@@ -58,6 +58,22 @@ pub struct AppConfig {
     /// (both execution-only — the stream is bit-identical), while
     /// `IoConfig::default()` stays serial/off for library callers.
     pub io: IoConfig,
+    /// `[resume]` table: checkpoint/resume policy for `scdata train`.
+    pub resume: ResumeConfig,
+}
+
+/// `[resume]` table (`--checkpoint` / `--checkpoint-every` / `--resume`):
+/// where `scdata train` writes its loader-checkpoint manifest and how
+/// often. Both knobs are execution-only — checkpointing never changes the
+/// emitted stream, and a resumed run continues it bit-identically.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ResumeConfig {
+    /// Manifest path the trainer writes to (atomic tmp+rename) and
+    /// `--resume` reads from. Empty disables checkpointing.
+    pub path: PathBuf,
+    /// Additionally checkpoint every N delivered minibatches; 0 writes
+    /// only at epoch boundaries (when `path` is set).
+    pub every_steps: usize,
 }
 
 impl Default for AppConfig {
@@ -82,6 +98,7 @@ impl Default for AppConfig {
                 decode_threads: 0,          // auto: one per core
                 coalesce_gap_bytes: 64 << 10,
             },
+            resume: ResumeConfig::default(),
         }
     }
 }
@@ -139,6 +156,10 @@ impl AppConfig {
         cfg.cache.readahead = doc.bool_or("cache.readahead", cfg.cache.readahead);
         cfg.cache.locality_window =
             doc.usize_or("cache.locality_window", cfg.cache.locality_window);
+        // [resume] table: train checkpoint policy
+        let resume_path = doc.str_or("resume.path", &cfg.resume.path.to_string_lossy());
+        cfg.resume.path = PathBuf::from(resume_path);
+        cfg.resume.every_steps = doc.usize_or("resume.every_steps", cfg.resume.every_steps);
         // [io] table: decode pipeline + disk-model overrides
         cfg.io.decode_threads = doc.usize_or("io.decode_threads", cfg.io.decode_threads);
         cfg.io.coalesce_gap_bytes =
@@ -195,7 +216,11 @@ impl AppConfig {
              \n\
              [io]\n\
              decode_threads = {dt}\n\
-             coalesce_gap_bytes = {gap}\n",
+             coalesce_gap_bytes = {gap}\n\
+             \n\
+             [resume]\n\
+             path = \"{rp}\"\n\
+             every_steps = {rev}\n",
             data = d.data_dir.display(),
             art = d.artifacts_dir.display(),
             res = d.results_dir.display(),
@@ -212,6 +237,8 @@ impl AppConfig {
             lw = d.cache.locality_window,
             dt = d.io.decode_threads,
             gap = d.io.coalesce_gap_bytes,
+            rp = d.resume.path.display(),
+            rev = d.resume.every_steps,
         )
     }
 }
@@ -231,6 +258,7 @@ mod tests {
         assert_eq!(a.workers, b.workers);
         assert_eq!(a.cache, b.cache);
         assert_eq!(a.io, b.io);
+        assert_eq!(a.resume, b.resume);
     }
 
     #[test]
@@ -349,6 +377,26 @@ pipeline_epochs = 2
         )
         .unwrap();
         assert_eq!(c.workers.in_flight, 8, "explicit in_flight wins");
+        // Regression: sync loader (num_workers = 0) + legacy depth 0 used
+        // to produce in_flight = 0, which is now a typed ZeroInFlight
+        // build error — the alias must clamp to 1 so old configs build.
+        let c = AppConfig::from_toml("[workers]\nnum_workers = 0\nprefetch_depth = 0\n")
+            .unwrap();
+        assert_eq!(c.workers.in_flight, 1, "sync loader + legacy depth 0 stays buildable");
+    }
+
+    #[test]
+    fn resume_table_parses() {
+        let c = AppConfig::from_toml(
+            "[resume]\npath = \"artifacts/train.ckpt.json\"\nevery_steps = 50\n",
+        )
+        .unwrap();
+        assert_eq!(c.resume.path, PathBuf::from("artifacts/train.ckpt.json"));
+        assert_eq!(c.resume.every_steps, 50);
+        // defaults: checkpointing off
+        let d = AppConfig::default();
+        assert_eq!(d.resume.path, PathBuf::new());
+        assert_eq!(d.resume.every_steps, 0);
     }
 
     #[test]

@@ -268,6 +268,19 @@ pub enum BuildError {
     /// A `label_cols` entry (or `ClassBalanced` label column) that does
     /// not exist in the backend's obs frame.
     UnknownLabelColumn { column: String },
+    /// A checkpoint manifest handed to [`ScDataset::resume`] describes a
+    /// different minibatch stream than this dataset produces — resuming
+    /// would silently deliver the wrong data. `field` names the first
+    /// mismatching stream-identity field (`seed`, `seed_schema`, `rank`,
+    /// `world_size`, `version`, or the `config_fingerprint` catch-all for
+    /// strategy/batch/fetch-geometry changes).
+    ///
+    /// [`ScDataset::resume`]: super::loader::ScDataset::resume
+    ResumeMismatch {
+        field: &'static str,
+        manifest: String,
+        config: String,
+    },
 }
 
 impl fmt::Display for BuildError {
@@ -322,6 +335,20 @@ impl fmt::Display for BuildError {
             }
             BuildError::UnknownLabelColumn { column } => {
                 write!(f, "label column '{column}' does not exist in the backend's obs frame")
+            }
+            BuildError::ResumeMismatch {
+                field,
+                manifest,
+                config,
+            } => {
+                write!(
+                    f,
+                    "checkpoint manifest does not match this dataset: {field} is \
+                     {manifest} in the manifest but {config} here; resume needs the \
+                     same stream-identity config (seed, seed_schema, strategy, \
+                     batch/fetch geometry, ddp rank/world) the checkpoint was taken \
+                     under — worker, cache, and io knobs may differ freely"
+                )
             }
         }
     }

@@ -4,42 +4,33 @@
 //! seed (the "broadcast seed"); work is then divided at the **fetch**
 //! level: rank r processes fetches r, r+W, r+2W, … round-robin.
 //!
-//! Partitioning stops at the rank. Within a rank, the loader no longer
-//! statically subdivides fetches among workers (the paper's second level)
+//! Partitioning stops at the rank. Within a rank, the loader does not
+//! statically subdivide fetches among workers (the paper's second level)
 //! — the persistent executor's shared queue load-balances them
 //! dynamically while a reorder buffer keeps delivery in plan order
 //! ([`super::exec`]), so the emitted stream is identical for every worker
-//! count. The worker parameters below remain for the DES simulations and
-//! tests that model the paper's original two-level R × W hierarchy.
+//! count. This also means a checkpoint taken under one worker
+//! configuration resumes bit-identically under any other: the manifest
+//! only needs `(rank, world_size)`, never a worker index.
 
-/// The fetch ids a given (rank, worker) processes.
+/// The fetch ids a given rank processes, in plan order.
 ///
 /// * `n_fetches` — fetches in the epoch plan.
 /// * `rank`, `world_size` — DDP position (world_size ≥ 1).
-/// * `worker`, `num_workers` — worker position within the rank; the
-///   loader always passes `(0, 1)` (the executor's shared queue replaces
-///   static worker subdivision).
-pub fn assigned_fetches(
-    n_fetches: usize,
-    rank: usize,
-    world_size: usize,
-    worker: usize,
-    num_workers: usize,
-) -> Vec<usize> {
+pub fn assigned_fetches(n_fetches: usize, rank: usize, world_size: usize) -> Vec<usize> {
     assert!(world_size >= 1 && rank < world_size, "bad rank");
-    let workers = num_workers.max(1);
-    assert!(worker < workers, "bad worker");
-    (0..n_fetches)
-        .filter(|i| i % world_size == rank)
-        .enumerate()
-        .filter(|(j, _)| j % workers == worker)
-        .map(|(_, i)| i)
-        .collect()
+    (0..n_fetches).filter(|i| i % world_size == rank).collect()
 }
 
-/// Simulated broadcast of the shared seed from rank 0 (in a real deployment
-/// this is a collective; here it documents + tests the contract that every
-/// rank derives plans from rank 0's seed, not its own).
+/// Simulated broadcast of the shared seed from rank 0.
+///
+/// This crate is single-process: there is no collective here, and `_rank`
+/// is deliberately unused — the function *is* the contract that every
+/// rank derives its plans from rank 0's seed rather than its own. A real
+/// multi-process deployment replaces this with its collective of choice
+/// (NCCL/gloo broadcast) and feeds the result to the loader builder; the
+/// checkpoint manifest stores the post-broadcast seed, so resume needs no
+/// re-broadcast.
 pub fn broadcast_seed(rank0_seed: u64, _rank: usize) -> u64 {
     rank0_seed
 }
@@ -54,8 +45,8 @@ mod tests {
     fn paper_example_4_ranks_100_fetches() {
         // Appendix B: with 4 ranks and 100 fetches, rank 0 processes
         // {0, 4, 8, ..., 96}, rank 1 {1, 5, 9, ..., 97}.
-        let r0 = assigned_fetches(100, 0, 4, 0, 1);
-        let r1 = assigned_fetches(100, 1, 4, 0, 1);
+        let r0 = assigned_fetches(100, 0, 4);
+        let r1 = assigned_fetches(100, 1, 4);
         assert_eq!(r0[..3], [0, 4, 8]);
         assert_eq!(*r0.last().unwrap(), 96);
         assert_eq!(r1[..3], [1, 5, 9]);
@@ -63,14 +54,18 @@ mod tests {
     }
 
     #[test]
-    fn workers_subdivide_rank_fetches() {
-        let rank_all = assigned_fetches(40, 1, 2, 0, 1);
-        let w0 = assigned_fetches(40, 1, 2, 0, 2);
-        let w1 = assigned_fetches(40, 1, 2, 1, 2);
-        let mut merged = [w0.clone(), w1.clone()].concat();
+    fn ranks_partition_the_plan() {
+        let world = 3;
+        let mut merged: Vec<usize> = (0..world)
+            .flat_map(|r| assigned_fetches(40, r, world))
+            .collect();
         merged.sort_unstable();
-        assert_eq!(merged, rank_all);
-        assert!(w0.iter().all(|i| !w1.contains(i)));
+        assert_eq!(merged, (0..40).collect::<Vec<_>>());
+        // Each rank's list is strictly increasing (plan order).
+        for r in 0..world {
+            let ids = assigned_fetches(40, r, world);
+            assert!(ids.windows(2).all(|w| w[0] < w[1]));
+        }
     }
 
     #[test]
@@ -78,13 +73,10 @@ mod tests {
         check("ddp-partition", 64, |rng| {
             let n = rng.range(0, 200);
             let world = rng.range(1, 6);
-            let workers = rng.range(1, 5);
             let mut seen = vec![0usize; n];
             for r in 0..world {
-                for w in 0..workers {
-                    for &i in &assigned_fetches(n, r, world, w, workers) {
-                        seen[i] += 1;
-                    }
+                for &i in &assigned_fetches(n, r, world) {
+                    seen[i] += 1;
                 }
             }
             prop_assert!(
@@ -100,13 +92,9 @@ mod tests {
         check("ddp-balance", 32, |rng| {
             let n = rng.range(1, 300);
             let world = rng.range(1, 5);
-            let workers = rng.range(1, 4);
-            let mut counts = Vec::new();
-            for r in 0..world {
-                for w in 0..workers {
-                    counts.push(assigned_fetches(n, r, world, w, workers).len());
-                }
-            }
+            let counts: Vec<usize> = (0..world)
+                .map(|r| assigned_fetches(n, r, world).len())
+                .collect();
             let min = counts.iter().min().unwrap();
             let max = counts.iter().max().unwrap();
             prop_assert!(max - min <= 1, "imbalance: {counts:?}");

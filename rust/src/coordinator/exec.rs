@@ -334,6 +334,49 @@ impl Executor {
             next: 0,
         })
     }
+
+    /// Submit one epoch starting at delivery position `start`
+    /// (checkpoint/resume): jobs with `seq < start` are never enqueued, so
+    /// fetches whose minibatches were delivered before the checkpoint are
+    /// never re-read — resume cost is O(position), not O(epoch).
+    ///
+    /// `start == 0` is a plain [`submit`] (speculation may be adopted).
+    /// With `start > 0` speculative generations are useless — they always
+    /// start at seq 0, and adopting one would re-execute exactly the
+    /// fetches resume exists to skip — so all of them are drained and
+    /// canceled, and speculation is re-armed from this generation.
+    ///
+    /// [`submit`]: Executor::submit
+    pub(crate) fn submit_from(&self, epoch: u64, start: u32) -> Result<GenHandle> {
+        if start == 0 {
+            return self.submit(epoch);
+        }
+        let gp = (self.shared.gen_builder)(epoch)?;
+        let stale: Vec<u64>;
+        let (id, total) = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.spec_building {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            st.newest_epoch = None; // disarm while we swap generations
+            stale = st.spec.drain(..).collect();
+            let id = st.next_gen;
+            st.next_gen += 1;
+            let total = enqueue_gen_from(&mut st, id, epoch, gp, start);
+            st.newest_epoch = Some(epoch); // re-arms speculation at epoch+1
+            (id, total)
+        };
+        for sid in stale {
+            cancel_gen(&self.shared, sid);
+        }
+        self.shared.work.notify_all();
+        Ok(GenHandle {
+            shared: self.shared.clone(),
+            gen: id,
+            total,
+            next: start,
+        })
+    }
 }
 
 /// With the lock held and `spec_building` settled: adopt the speculative
@@ -438,6 +481,14 @@ impl Drop for GenHandle {
 /// Enqueue a generation's jobs in execution order; returns its fetch
 /// count.
 fn enqueue_gen(st: &mut State, id: u64, epoch: u64, gp: GenPlan) -> u32 {
+    enqueue_gen_from(st, id, epoch, gp, 0)
+}
+
+/// [`enqueue_gen`] with a resume offset: delivery positions below `start`
+/// were consumed before a checkpoint, so their jobs are simply not queued
+/// (the generation's seq numbering is unchanged — the consumer starts its
+/// handle at `next = start`).
+fn enqueue_gen_from(st: &mut State, id: u64, epoch: u64, gp: GenPlan, start: u32) -> u32 {
     let GenPlan {
         plan,
         fetch_ids,
@@ -450,9 +501,13 @@ fn enqueue_gen(st: &mut State, id: u64, epoch: u64, gp: GenPlan) -> u32 {
         .map(|(s, &f)| (f, s as u32))
         .collect();
     for &fid in &exec_order {
+        let seq = seq_of[&fid];
+        if seq < start {
+            continue; // delivered before the checkpoint: never re-read
+        }
         st.queue.push_back(Job {
             gen: id,
-            seq: seq_of[&fid],
+            seq,
             fetch_id: fid,
             epoch,
             plan: plan.clone(),

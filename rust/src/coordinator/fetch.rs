@@ -232,6 +232,21 @@ pub fn finish_fetch(
     })
 }
 
+/// Minibatches `SplitIter` emits from one fetched chunk of `len` rows.
+///
+/// Chunks split independently — a partial tail is recycled per chunk
+/// under `drop_last`, never stitched into the next fetch — so the
+/// fetch→batch index mapping checkpoint/resume relies on
+/// ([`super::resume::split_resume`]) is a prefix sum of this per-fetch
+/// count.
+pub fn batches_in_fetch(len: usize, batch_size: usize, drop_last: bool) -> usize {
+    if drop_last {
+        len / batch_size
+    } else {
+        len.div_ceil(batch_size)
+    }
+}
+
 /// Execute one fetch end-to-end (lines 6–9).
 ///
 /// * `indices` — the fetch batch (multiset; weighted strategies may repeat

@@ -87,7 +87,7 @@
 //!
 //! [`BuildError`]: super::builder::BuildError
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::fmt;
 use std::sync::{Arc, Mutex};
 
@@ -95,15 +95,18 @@ use anyhow::Result;
 
 use crate::store::cache::{CacheConfig as BlockCacheConfig, CacheStats, CachingBackend};
 use crate::store::{Backend, CsrBatch, IoPipeline, IoReport};
+use crate::util::json::Json;
 use crate::util::rng::{domains, Rng};
 
 use super::builder::{
-    CacheConfig, DdpConfig, IoConfig, SamplingConfig, ScDatasetBuilder, SeedSchema, WorkerConfig,
+    BuildError, CacheConfig, DdpConfig, IoConfig, SamplingConfig, ScDatasetBuilder, SeedSchema,
+    WorkerConfig,
 };
 use super::ddp::assigned_fetches;
 use super::exec::{ExecOutput, Executor, ExecutorSettings, FinishSpec, GenHandle, GenPlan};
-use super::fetch::{execute_fetch, finish_fetch, FetchTransform, Shuffle};
+use super::fetch::{batches_in_fetch, execute_fetch, finish_fetch, FetchTransform, Shuffle};
 use super::plan::{build_plan, locality_schedule, EpochPlan, Strategy};
+use super::resume::{self, BufferResume, LoaderCheckpoint, SplitResume};
 
 /// One training minibatch.
 #[derive(Clone, Debug)]
@@ -236,6 +239,10 @@ pub struct ScDataset {
     /// The persistent worker pool (`workers.num_workers > 0`): spawned
     /// once here, reused by every `epoch()`, joined on drop.
     exec: Option<Executor>,
+    /// Hash of the stream-determining config knobs + dataset size
+    /// ([`resume::config_fingerprint`]) — stamped into every checkpoint
+    /// manifest and validated by [`ScDataset::resume`].
+    fingerprint: u64,
 }
 
 impl fmt::Debug for ScDataset {
@@ -293,7 +300,7 @@ fn build_gen_plan(
         Some(backend.obs()),
         sampling.drop_last,
     )?);
-    let fetch_ids = assigned_fetches(plan.n_fetches(), ddp.rank, ddp.world_size, 0, 1);
+    let fetch_ids = assigned_fetches(plan.n_fetches(), ddp.rank, ddp.world_size);
     let exec_order = if cache.locality_window > 1 {
         locality_schedule(&plan, &fetch_ids, cache.block_rows, cache.locality_window)
     } else {
@@ -367,12 +374,14 @@ impl ScDataset {
         } else {
             None
         };
+        let fingerprint = resume::config_fingerprint(&cfg, backend.n_rows());
         ScDataset {
             backend,
             cache,
             cfg,
             hooks,
             exec,
+            fingerprint,
         }
     }
 
@@ -413,6 +422,82 @@ impl ScDataset {
     /// Iterate one epoch. Statistics are observable through
     /// [`EpochIter::stats`] while iterating and after exhaustion.
     pub fn epoch(&self, epoch: u64) -> Result<EpochIter> {
+        self.epoch_at(epoch, 0)
+    }
+
+    /// Resume iteration from a checkpoint manifest: validate that the
+    /// manifest describes *this* stream (seed, schema, DDP position,
+    /// config fingerprint — any mismatch is a typed
+    /// [`BuildError::ResumeMismatch`]), replan the epoch (plans are pure
+    /// in `(seed, epoch)`), and fast-forward to the delivered-batch
+    /// boundary by **skipping already-delivered fetches entirely** — the
+    /// executor never reads blocks whose minibatches were delivered
+    /// before the checkpoint, so resume cost is O(position), not
+    /// O(epoch). The returned iterator emits the remainder of the epoch
+    /// bit-identically to the uninterrupted run.
+    ///
+    /// Execution-only knobs (workers, in_flight, cache, io) may differ
+    /// from the checkpointing process — worker migration is free under
+    /// the determinism contract.
+    pub fn resume(&self, ckpt: &LoaderCheckpoint) -> Result<EpochIter> {
+        let s = &self.cfg.sampling;
+        let mismatch = |field: &'static str, manifest: String, config: String| {
+            anyhow::Error::from(BuildError::ResumeMismatch {
+                field,
+                manifest,
+                config,
+            })
+        };
+        if ckpt.version != resume::MANIFEST_VERSION {
+            return Err(mismatch(
+                "version",
+                ckpt.version.to_string(),
+                resume::MANIFEST_VERSION.to_string(),
+            ));
+        }
+        if ckpt.seed != s.seed {
+            return Err(mismatch("seed", ckpt.seed.to_string(), s.seed.to_string()));
+        }
+        if ckpt.seed_schema != s.seed_schema {
+            return Err(mismatch(
+                "seed_schema",
+                ckpt.seed_schema.to_string(),
+                s.seed_schema.to_string(),
+            ));
+        }
+        if ckpt.rank != self.cfg.ddp.rank {
+            return Err(mismatch(
+                "rank",
+                ckpt.rank.to_string(),
+                self.cfg.ddp.rank.to_string(),
+            ));
+        }
+        if ckpt.world_size != self.cfg.ddp.world_size {
+            return Err(mismatch(
+                "world_size",
+                ckpt.world_size.to_string(),
+                self.cfg.ddp.world_size.to_string(),
+            ));
+        }
+        // Catch-all for everything else stream-determining (strategy,
+        // batch size, fetch factor, drop_last, label columns, row count).
+        if ckpt.config_fingerprint != self.fingerprint {
+            return Err(mismatch(
+                "config_fingerprint",
+                format!("0x{:016x}", ckpt.config_fingerprint),
+                format!("0x{:016x}", self.fingerprint),
+            ));
+        }
+        self.epoch_at(ckpt.epoch, ckpt.delivered_batches)
+    }
+
+    /// Iterate epoch `epoch` starting after its first `start_batches`
+    /// minibatches — the shared engine behind [`epoch`] (`start = 0`) and
+    /// [`resume`].
+    ///
+    /// [`epoch`]: ScDataset::epoch
+    /// [`resume`]: ScDataset::resume
+    fn epoch_at(&self, epoch: u64, start_batches: u64) -> Result<EpochIter> {
         // Re-apply this dataset's pipeline knobs: the backend may be
         // shared by several datasets (the knobs live on the backend, and
         // the last writer wins), so whoever starts iterating gets their
@@ -423,26 +508,130 @@ impl ScDataset {
         self.backend.set_io_pipeline(io_pipeline(&self.cfg));
         let sampling = &self.cfg.sampling;
         let stats = Arc::new(Mutex::new(LoadStats::default()));
+        let ckpt = LoaderCheckpoint {
+            version: resume::MANIFEST_VERSION,
+            seed: sampling.seed,
+            seed_schema: sampling.seed_schema,
+            epoch,
+            delivered_batches: start_batches,
+            rank: self.cfg.ddp.rank,
+            world_size: self.cfg.ddp.world_size,
+            config_fingerprint: self.fingerprint,
+            trainer: Json::Null,
+        };
+        let buffered = match sampling.strategy {
+            Strategy::Streaming { shuffle_buffer } if shuffle_buffer > 0 => Some(shuffle_buffer),
+            _ => None,
+        };
+        // Resume geometry: which fetches are still needed, and the state
+        // of the cross-fetch-stateful consumers at the checkpoint. Plans
+        // are pure in `(seed, epoch)`, so replanning + pure re-simulation
+        // recovers everything without touching already-delivered data.
+        let mut split_at: Option<SplitResume> = None;
+        let mut buffer_at: Option<BufferResume> = None;
+        let mut gp_cache: Option<GenPlan> = None;
+        if start_batches > 0 {
+            let gp =
+                build_gen_plan(&self.backend, sampling, self.cfg.ddp, self.cfg.cache, epoch)?;
+            let lens: Vec<usize> =
+                gp.fetch_ids.iter().map(|&i| gp.plan.fetch_len(i)).collect();
+            match buffered {
+                Some(capacity) => {
+                    // The rolling buffer emits rows across fetch
+                    // boundaries, so its batch total is over the rank's
+                    // whole row stream, not per fetch.
+                    let total: usize = lens.iter().sum();
+                    let total_batches =
+                        batches_in_fetch(total, sampling.batch_size, sampling.drop_last) as u64;
+                    if start_batches >= total_batches {
+                        return Ok(EpochIter {
+                            inner: Box::new(std::iter::empty()),
+                            stats,
+                            ckpt,
+                        });
+                    }
+                    buffer_at = Some(resume::plan_buffer_resume(
+                        &lens,
+                        capacity.max(1),
+                        start_batches as usize * sampling.batch_size,
+                        domains::shuffle_buffer(sampling.seed, epoch),
+                    ));
+                }
+                None => match resume::split_resume(
+                    &lens,
+                    sampling.batch_size,
+                    sampling.drop_last,
+                    start_batches,
+                ) {
+                    None => {
+                        return Ok(EpochIter {
+                            inner: Box::new(std::iter::empty()),
+                            stats,
+                            ckpt,
+                        });
+                    }
+                    Some(sr) => split_at = Some(sr),
+                },
+            }
+            gp_cache = Some(gp);
+        }
         // The only `num_workers` difference: who executes fetches. The
         // delivery side below is identical, which is what makes the
-        // stream worker-count-invariant by construction.
-        let source = match &self.exec {
-            Some(exec) => FetchSource::Pool(exec.submit(epoch)?),
-            None => {
-                let gp = build_gen_plan(
-                    &self.backend,
-                    sampling,
-                    self.cfg.ddp,
-                    self.cfg.cache,
-                    epoch,
-                )?;
+        // stream worker-count-invariant by construction. A shuffle-buffer
+        // resume always runs inline even when a pool exists: its needed
+        // fetches are a sparse subset of the plan (window fetches + the
+        // unconsumed tail) that the generation-oriented executor has no
+        // seq numbering for, and the rebuild is delivery-thread
+        // sequential anyway.
+        let source = match (&self.exec, &buffer_at) {
+            (Some(exec), None) => {
+                let start = split_at.as_ref().map_or(0, |sr| sr.start_seq) as u32;
+                FetchSource::Pool(exec.submit_from(epoch, start)?)
+            }
+            _ => {
+                let gp = match gp_cache {
+                    Some(gp) => gp,
+                    None => build_gen_plan(
+                        &self.backend,
+                        sampling,
+                        self.cfg.ddp,
+                        self.cfg.cache,
+                        epoch,
+                    )?,
+                };
+                let (fetch_ids, exec_order) = match (&split_at, &buffer_at) {
+                    (None, None) => (gp.fetch_ids, gp.exec_order),
+                    (Some(sr), None) => {
+                        // Drop delivered fetches from both orders: the
+                        // inline path never executes a block whose
+                        // minibatches were delivered before the
+                        // checkpoint.
+                        let skipped: HashSet<usize> =
+                            gp.fetch_ids[..sr.start_seq].iter().copied().collect();
+                        let ids = gp.fetch_ids[sr.start_seq..].to_vec();
+                        let order: Vec<usize> = gp
+                            .exec_order
+                            .into_iter()
+                            .filter(|id| !skipped.contains(id))
+                            .collect();
+                        (ids, order)
+                    }
+                    (None, Some(br)) => {
+                        // Only the fetches the buffer rebuild needs, in
+                        // plan order (window fetches + tail).
+                        let ids: Vec<usize> =
+                            br.fetch_seqs.iter().map(|&s| gp.fetch_ids[s]).collect();
+                        (ids.clone(), ids)
+                    }
+                    (Some(_), Some(_)) => unreachable!("split and buffer resume are exclusive"),
+                };
                 FetchSource::Inline(InlineSource {
                     backend: self.backend.clone(),
                     cache: self.cache.clone(),
                     readahead: self.cfg.cache.readahead && self.cache.is_some(),
                     plan: gp.plan,
-                    fetch_ids: gp.fetch_ids,
-                    exec_order: gp.exec_order,
+                    fetch_ids,
+                    exec_order,
                     next_deliver: 0,
                     next_exec: 0,
                     pending: HashMap::new(),
@@ -454,15 +643,23 @@ impl ScDataset {
                 })
             }
         };
+        // v1's sequential shuffle stream: one per epoch, identical for
+        // every worker count, consumed at delivery in plan order. On
+        // resume it is fast-forwarded past the skipped fetches by
+        // replaying same-length shuffles (no I/O). Idle under v2 (the
+        // source delivers fetches already finished with per-fetch forks)
+        // and for streaming (no in-fetch shuffle) — no replay needed.
+        let mut rng = domains::shuffle_stream_v1(sampling.seed, epoch);
+        if sampling.seed_schema == SeedSchema::V1 && shuffles_in_fetch(&sampling.strategy) {
+            if let Some(sr) = &split_at {
+                rng = resume::ffwd_stream_rng(rng, &sr.skipped_lens);
+            }
+        }
         let stream = DeliverStream {
             source,
             backend: self.backend.clone(),
             label_cols: self.cfg.label_cols.clone(),
-            // v1's sequential shuffle stream: one per epoch, identical
-            // for every worker count, consumed at delivery in plan
-            // order. Idle under v2 (the source delivers fetches already
-            // finished with per-fetch forks).
-            rng: domains::shuffle_stream_v1(sampling.seed, epoch),
+            rng,
             shuffle_in_fetch: shuffles_in_fetch(&sampling.strategy),
             fetch_transform: self.hooks.fetch_transform.clone(),
             stats: stats.clone(),
@@ -471,7 +668,7 @@ impl ScDataset {
         let inner: Box<dyn Iterator<Item = Result<Minibatch>> + Send> =
             match sampling.strategy {
                 Strategy::Streaming { shuffle_buffer } if shuffle_buffer > 0 => {
-                    Box::new(ShuffleBufferIter::new(
+                    let mut it = ShuffleBufferIter::new(
                         stream,
                         sampling.batch_size,
                         shuffle_buffer,
@@ -480,20 +677,30 @@ impl ScDataset {
                         // under BOTH seed schemas.
                         domains::shuffle_buffer(sampling.seed, epoch),
                         sampling.drop_last,
-                    ))
+                    );
+                    if let Some(br) = buffer_at {
+                        it = it.with_rebuild(br);
+                    }
+                    Box::new(it)
                 }
-                _ => Box::new(SplitIter::new(
-                    stream,
-                    sampling.batch_size,
-                    sampling.drop_last,
-                )),
+                _ => {
+                    let mut it = SplitIter::new(
+                        stream,
+                        sampling.batch_size,
+                        sampling.drop_last,
+                    );
+                    if let Some(sr) = &split_at {
+                        it = it.with_skip(sr.skip_rows);
+                    }
+                    Box::new(it)
+                }
             };
         let inner: Box<dyn Iterator<Item = Result<Minibatch>> + Send> =
             match self.hooks.batch_transform.clone() {
                 Some(hook) => Box::new(BatchHookIter { inner, hook }),
                 None => inner,
             };
-        Ok(EpochIter { inner, stats })
+        Ok(EpochIter { inner, stats, ckpt })
     }
 }
 
@@ -502,12 +709,29 @@ impl ScDataset {
 pub struct EpochIter {
     inner: Box<dyn Iterator<Item = Result<Minibatch>> + Send>,
     stats: Arc<Mutex<LoadStats>>,
+    /// Template manifest: the position this iterator *started* at;
+    /// [`checkpoint`] adds the batches delivered since.
+    ///
+    /// [`checkpoint`]: EpochIter::checkpoint
+    ckpt: LoaderCheckpoint,
 }
 
 impl EpochIter {
     /// Snapshot of loading statistics so far.
     pub fn stats(&self) -> LoadStats {
         self.stats.lock().unwrap().clone()
+    }
+
+    /// The loader's current position as a checkpoint manifest: callable
+    /// between any two `next()` calls (every position is a batch
+    /// boundary — minibatches are atomic). Feed it to
+    /// [`ScDataset::resume`] — possibly in a different process with a
+    /// different worker/cache configuration — to continue the stream
+    /// bit-identically; persist it with [`LoaderCheckpoint::save`].
+    pub fn checkpoint(&self) -> LoaderCheckpoint {
+        let mut ckpt = self.ckpt.clone();
+        ckpt.delivered_batches += self.stats.lock().unwrap().batches;
+        ckpt
     }
 }
 
@@ -723,6 +947,12 @@ struct SplitIter {
     drop_last: bool,
     current: Option<super::fetch::FetchedChunk>,
     offset: usize,
+    /// Resume: row offset into the *first* chunk the source delivers
+    /// (its earlier minibatches were emitted before the checkpoint).
+    /// Consumed when that chunk is installed; always a multiple of
+    /// `batch_size`, so subsequent splits land on the same boundaries as
+    /// the uninterrupted run.
+    skip_first: usize,
     done: bool,
 }
 
@@ -734,8 +964,14 @@ impl SplitIter {
             drop_last,
             current: None,
             offset: 0,
+            skip_first: 0,
             done: false,
         }
+    }
+
+    fn with_skip(mut self, rows: usize) -> SplitIter {
+        self.skip_first = rows;
+        self
     }
 }
 
@@ -784,7 +1020,9 @@ impl Iterator for SplitIter {
                 }
                 Some(Ok(chunk)) => {
                     self.current = Some(chunk);
-                    self.offset = 0;
+                    // First chunk after a resume: skip the rows whose
+                    // minibatches were delivered before the checkpoint.
+                    self.offset = std::mem::take(&mut self.skip_first);
                 }
             }
         }
@@ -807,6 +1045,10 @@ struct ShuffleBufferIter {
     pending: Option<(super::fetch::FetchedChunk, usize)>,
     done_filling: bool,
     finished: bool,
+    /// Resume plan: reconstruct the kill-point window from the (sparse)
+    /// needed-fetch stream before the first draw. `None` in normal
+    /// operation and after the rebuild ran.
+    rebuild: Option<BufferResume>,
 }
 
 impl ShuffleBufferIter {
@@ -827,7 +1069,74 @@ impl ShuffleBufferIter {
             pending: None,
             done_filling: false,
             finished: false,
+            rebuild: None,
         }
+    }
+
+    /// Arm a resume rebuild: the buffer RNG is replaced by the advanced
+    /// one from the re-simulation, and the first `next()` reconstructs
+    /// the window before drawing.
+    fn with_rebuild(mut self, br: BufferResume) -> ShuffleBufferIter {
+        self.rng = br.rng.clone();
+        self.rebuild = Some(br);
+        self
+    }
+
+    /// Rebuild the kill-point window: pull the needed chunks (the source
+    /// delivers exactly `fetch_seqs`, in plan order), keep the rows the
+    /// re-simulation says were still in the window — in the **same Vec
+    /// order**, so subsequent `swap_remove` draws replay bit-identically
+    /// — and park the chunk containing the resume position in `pending`
+    /// at the right offset.
+    fn run_rebuild(&mut self, br: BufferResume) -> Result<()> {
+        let mut slots: Vec<Option<(u32, Vec<u16>, CsrBatch)>> =
+            (0..br.window_src.len()).map(|_| None).collect();
+        for &(s, e) in &br.chunk_ranges {
+            if s >= br.src_pos {
+                // Pure-tail chunks stream normally after the rebuild.
+                break;
+            }
+            let chunk = match self.source.next_chunk() {
+                None => anyhow::bail!(
+                    "stream ended during shuffle-buffer resume — the checkpoint \
+                     does not match this dataset"
+                ),
+                Some(r) => r?,
+            };
+            anyhow::ensure!(
+                chunk.n_rows() == e - s,
+                "shuffle-buffer resume: fetch delivered {} rows where the \
+                 checkpoint geometry expects {}",
+                chunk.n_rows(),
+                e - s
+            );
+            for (slot, &src) in slots.iter_mut().zip(&br.window_src) {
+                if src >= s && src < e {
+                    let off = src - s;
+                    let labels: Vec<u16> = chunk.labels.iter().map(|c| c[off]).collect();
+                    *slot = Some((chunk.rows[off], labels, chunk.split(off, off + 1)));
+                }
+            }
+            if br.src_pos < e {
+                // The resume position is inside this chunk: park it so
+                // pull_row continues from exactly that row.
+                self.pending = Some((chunk, br.src_pos - s));
+            } else {
+                chunk.recycle();
+            }
+        }
+        let mut window = Vec::with_capacity(slots.len());
+        for slot in slots {
+            match slot {
+                Some(entry) => window.push(entry),
+                None => anyhow::bail!(
+                    "shuffle-buffer resume failed to reconstruct the window — \
+                     the checkpoint does not match this dataset"
+                ),
+            }
+        }
+        self.window = window;
+        Ok(())
     }
 
     /// Pull the next stream row into `pending`/window; false when the
@@ -867,6 +1176,12 @@ impl Iterator for ShuffleBufferIter {
     fn next(&mut self) -> Option<Self::Item> {
         if self.finished {
             return None;
+        }
+        if let Some(br) = self.rebuild.take() {
+            if let Err(e) = self.run_rebuild(br) {
+                self.finished = true;
+                return Some(Err(e));
+            }
         }
         let n_cols = self.source.backend.n_cols();
         let n_label_cols = self.source.label_cols.len();
@@ -1556,5 +1871,188 @@ mod tests {
         let first = ds.epoch(0).unwrap().next().unwrap();
         let err = first.unwrap_err().to_string();
         assert!(err.contains("alignment"), "{err}");
+    }
+
+    /// Delegating backend that panics when a fetch touches `panic_at` —
+    /// the worker-failure injection for the shuffle-buffer error-ordering
+    /// test.
+    struct PanickingBackend {
+        inner: Arc<dyn Backend>,
+        panic_at: u32,
+    }
+
+    impl Backend for PanickingBackend {
+        fn n_rows(&self) -> usize {
+            self.inner.n_rows()
+        }
+        fn n_cols(&self) -> usize {
+            self.inner.n_cols()
+        }
+        fn obs(&self) -> &crate::store::ObsFrame {
+            self.inner.obs()
+        }
+        fn pattern(&self) -> crate::store::AccessPattern {
+            self.inner.pattern()
+        }
+        fn fetch_rows(&self, sorted: &[u32]) -> Result<crate::store::FetchResult> {
+            if sorted.contains(&self.panic_at) {
+                panic!("injected panic at row {}", self.panic_at);
+            }
+            self.inner.fetch_rows(sorted)
+        }
+        fn name(&self) -> &str {
+            "panicking"
+        }
+    }
+
+    #[test]
+    fn shuffle_buffer_surfaces_errors_promptly() {
+        // Satellite: an Err item (worker panic) flowing into the rolling
+        // buffer must surface as soon as the refill touches the failing
+        // fetch — at most `capacity` buffered Ok rows may precede it, it
+        // is never swallowed, and the stream ends right after it.
+        let (_d, inner) = backend(200); // 600 rows, streaming order
+        let (m, f, capacity) = (8usize, 4usize, 32usize);
+        let panic_at = 300u32;
+        // Streaming plan = identity order, so rows before the failing
+        // fetch are exactly the fetch-aligned prefix.
+        let ok_prefix = (panic_at as usize / (m * f)) * (m * f);
+        for workers in [0usize, 2] {
+            let b: Arc<dyn Backend> = Arc::new(PanickingBackend {
+                inner: inner.clone(),
+                panic_at,
+            });
+            let ds = ScDataset::new(
+                b,
+                LoaderConfig {
+                    sampling: SamplingConfig {
+                        strategy: Strategy::Streaming {
+                            shuffle_buffer: capacity,
+                        },
+                        batch_size: m,
+                        fetch_factor: f,
+                        ..SamplingConfig::default()
+                    },
+                    workers: WorkerConfig {
+                        num_workers: workers,
+                        ..WorkerConfig::default()
+                    },
+                    ..Default::default()
+                },
+            );
+            let mut iter = ds.epoch(0).unwrap();
+            let mut ok_rows = 0usize;
+            let mut err = None;
+            for mb in &mut iter {
+                match mb {
+                    Ok(mb) => ok_rows += mb.rows.len(),
+                    Err(e) => {
+                        err = Some(e);
+                        break;
+                    }
+                }
+            }
+            let err = err.unwrap_or_else(|| {
+                panic!("workers={workers}: panic swallowed after {ok_rows} rows")
+            });
+            assert!(format!("{err:#}").contains("panic"), "{err:#}");
+            assert!(iter.next().is_none(), "stream must end after the Err");
+            assert!(
+                ok_rows <= ok_prefix,
+                "workers={workers}: Err reordered behind rows of the failing \
+                 fetch ({ok_rows} > {ok_prefix})"
+            );
+            assert!(
+                ok_rows + capacity + m >= ok_prefix,
+                "workers={workers}: Err delayed past the window bound \
+                 ({ok_rows} + {capacity} + {m} < {ok_prefix})"
+            );
+        }
+    }
+
+    #[test]
+    fn checkpoint_resume_continues_the_stream_inline() {
+        // Module-level smoke for the split path; the full matrix
+        // (schemas × workers × cache × kill points) lives in
+        // tests/determinism.rs and the kill/resume proptest.
+        let (_d, b) = backend(200);
+        let cfg = LoaderConfig {
+            sampling: SamplingConfig {
+                strategy: Strategy::BlockShuffling { block_size: 8 },
+                batch_size: 16,
+                fetch_factor: 2,
+                seed: 9,
+                ..SamplingConfig::default()
+            },
+            label_cols: vec!["plate".into()],
+            ..Default::default()
+        };
+        let ds = ScDataset::new(b, cfg);
+        let full = collect_rows(ds.epoch(0).unwrap());
+        for kill in [0usize, 1, 7, 20] {
+            let mut iter = ds.epoch(0).unwrap();
+            for _ in 0..kill {
+                iter.next().unwrap().unwrap();
+            }
+            let ckpt = iter.checkpoint();
+            assert_eq!(ckpt.delivered_batches, kill as u64);
+            drop(iter); // the kill
+            let resumed = collect_rows(ds.resume(&ckpt).unwrap());
+            assert_eq!(resumed, full[kill * 16..], "kill at {kill}");
+        }
+        // Fully-delivered epoch: resume is an empty iterator, not an error.
+        let mut iter = ds.epoch(0).unwrap();
+        while iter.next().is_some() {}
+        let done = iter.checkpoint();
+        assert_eq!(collect_rows(ds.resume(&done).unwrap()), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_manifest() {
+        let (_d, b) = backend(100);
+        let mk = |seed: u64| {
+            ScDataset::new(
+                b.clone(),
+                LoaderConfig {
+                    sampling: SamplingConfig {
+                        seed,
+                        ..SamplingConfig::default()
+                    },
+                    ..Default::default()
+                },
+            )
+        };
+        let ds = mk(1);
+        let ckpt = ds.epoch(0).unwrap().checkpoint();
+        // Same config accepts its own manifest.
+        assert!(ds.resume(&ckpt).is_ok());
+        // A different seed is a typed field mismatch…
+        let err = mk(2).resume(&ckpt).unwrap_err();
+        let err = err.downcast_ref::<BuildError>().expect("typed BuildError");
+        assert!(
+            matches!(err, BuildError::ResumeMismatch { field: "seed", .. }),
+            "{err}"
+        );
+        // …and a changed stream knob trips the fingerprint catch-all.
+        let mut cfg = ds.config().clone();
+        cfg.sampling.batch_size += 1;
+        let other = ScDataset::new(b.clone(), cfg);
+        let err = other.resume(&ckpt).unwrap_err();
+        let err = err.downcast_ref::<BuildError>().expect("typed BuildError");
+        assert!(
+            matches!(
+                err,
+                BuildError::ResumeMismatch {
+                    field: "config_fingerprint",
+                    ..
+                }
+            ),
+            "{err}"
+        );
+        // Execution-only knobs are NOT part of the stream identity.
+        let mut cfg = ds.config().clone();
+        cfg.workers.num_workers = 2;
+        cfg.workers.in_flight = 2;
+        assert!(ScDataset::new(b, cfg).resume(&ckpt).is_ok());
     }
 }

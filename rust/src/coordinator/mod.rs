@@ -3,8 +3,9 @@
 //! sampling strategies, the persistent prefetch executor (shared fetch
 //! queue, out-of-order execution, in-order delivery — see [`exec`]),
 //! DDP-style fetch partitioning, the minibatch-entropy theory, the
-//! experimental (b, f) auto-tuner, and the builder-based construction API
-//! with typed sub-configs and transform hooks.
+//! experimental (b, f) auto-tuner, the builder-based construction API
+//! with typed sub-configs and transform hooks, and deterministic
+//! mid-epoch checkpoint/resume (see [`resume`]).
 
 pub mod autotune;
 pub mod builder;
@@ -14,6 +15,7 @@ pub mod exec;
 pub mod fetch;
 pub mod loader;
 pub mod plan;
+pub mod resume;
 
 pub use builder::{
     BuildError, CacheConfig, DdpConfig, IoConfig, SamplingConfig, ScDatasetBuilder, SeedSchema,
@@ -24,3 +26,4 @@ pub use loader::{
     BatchTransform, EpochIter, Hooks, LoadStats, LoaderConfig, Minibatch, ScDataset,
 };
 pub use plan::{build_plan, locality_schedule, EpochPlan, Strategy};
+pub use resume::{config_fingerprint, LoaderCheckpoint};

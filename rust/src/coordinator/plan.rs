@@ -98,10 +98,17 @@ impl EpochPlan {
         &self.order[start..end]
     }
 
+    /// Row count of fetch `i` — the fetch→batch geometry checkpoint/resume
+    /// maps delivered-batch indices through (see
+    /// [`super::resume::split_resume`]).
+    pub fn fetch_len(&self, i: usize) -> usize {
+        self.fetch_indices(i).len()
+    }
+
     /// Total rows the epoch will yield (full minibatches only if
     /// `drop_last`).
     pub fn epoch_rows(&self) -> usize {
-        (0..self.n_fetches()).map(|i| self.fetch_indices(i).len()).sum()
+        (0..self.n_fetches()).map(|i| self.fetch_len(i)).sum()
     }
 }
 

@@ -1,0 +1,750 @@
+//! Deterministic mid-epoch checkpoint/resume (ROADMAP item 2).
+//!
+//! The determinism contract upgraded by the persistent executor makes the
+//! loader's position in training fully described by
+//! `(seed, seed_schema, epoch, delivered_batch_index)`: plans are pure in
+//! `(seed, epoch)`, the emitted stream is bit-identical for every worker
+//! count, and every stateful consumer below the plan is replayable from
+//! those four values. This module turns that property into a small
+//! versioned manifest ([`LoaderCheckpoint`]) plus the pure geometry that
+//! lets [`ScDataset::resume`] fast-forward **without re-reading delivered
+//! data**:
+//!
+//! * [`split_resume`] maps a delivered-batch count onto the rank's fetch
+//!   sequence — which fetches are fully delivered (skipped entirely; the
+//!   executor never enqueues them), and the row offset inside the first
+//!   still-needed fetch. Resume cost is O(position in the fetch list),
+//!   not O(epoch I/O).
+//! * [`ffwd_stream_rng`] advances seed-schema v1's sequential shuffle
+//!   stream past the skipped fetches by replaying the shuffles on dummy
+//!   index vectors — same lengths, same `below()` consumption, no I/O.
+//!   (Seed-schema v2 needs nothing: its per-fetch RNGs are pure in
+//!   `(seed, epoch, fetch_id)`.)
+//! * [`plan_buffer_resume`] handles the one cross-fetch-stateful consumer,
+//!   the rolling shuffle buffer: the window's content is a pure function
+//!   of `(buffer RNG, plan-order row stream, rows delivered)`, so it is
+//!   re-simulated at the source-position level (integer indices, no I/O)
+//!   to recover the exact window order, the resume offset, and the
+//!   advanced RNG. Only the fetches that still hold a window row — plus
+//!   the unconsumed tail — are re-read.
+//!
+//! The manifest also carries a config fingerprint
+//! ([`config_fingerprint`]): a hash of every *stream-determining* knob.
+//! Execution-only knobs (workers, in_flight, cache, io) are deliberately
+//! excluded — a run checkpointed at 0 workers may resume at 8 (worker
+//! migration is free by the determinism contract); a changed batch size
+//! or strategy is a typed [`BuildError::ResumeMismatch`].
+//!
+//! [`ScDataset::resume`]: super::loader::ScDataset::resume
+//! [`BuildError::ResumeMismatch`]: super::builder::BuildError::ResumeMismatch
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::builder::SeedSchema;
+use super::fetch::batches_in_fetch;
+use super::loader::LoaderConfig;
+use super::plan::Strategy;
+
+/// Manifest format version; bumped whenever the serialized fields or
+/// their meaning change.
+pub const MANIFEST_VERSION: u32 = 1;
+
+/// The `kind` tag that marks a JSON file as a loader checkpoint.
+pub const MANIFEST_KIND: &str = "scdata/loader-checkpoint";
+
+/// A versioned loader-position manifest: everything needed to rebuild the
+/// exact mid-epoch stream position on a fresh process.
+///
+/// Produced by [`EpochIter::checkpoint`], consumed by
+/// [`ScDataset::resume`]. The position is a **batch boundary** —
+/// `delivered_batches` minibatches of this epoch were handed to the
+/// caller; resume emits the remainder of the epoch bit-identically to the
+/// uninterrupted run. Under DDP each rank writes its own manifest (the
+/// rank is part of the stream identity and is validated on resume).
+///
+/// [`EpochIter::checkpoint`]: super::loader::EpochIter::checkpoint
+/// [`ScDataset::resume`]: super::loader::ScDataset::resume
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoaderCheckpoint {
+    /// Manifest format version ([`MANIFEST_VERSION`]).
+    pub version: u32,
+    /// Root seed (rank-0 broadcast value).
+    pub seed: u64,
+    /// The shuffle-RNG derivation the stream was emitted under.
+    pub seed_schema: SeedSchema,
+    /// Epoch being iterated when the checkpoint was taken.
+    pub epoch: u64,
+    /// Minibatches of this epoch delivered before the checkpoint.
+    pub delivered_batches: u64,
+    /// DDP position the stream belongs to.
+    pub rank: usize,
+    pub world_size: usize,
+    /// Hash of every stream-determining config knob
+    /// ([`config_fingerprint`]); execution-only knobs are excluded, so
+    /// resuming with a different worker count / cache setup is allowed.
+    pub config_fingerprint: u64,
+    /// Opaque trainer state riding along with the loader position (model
+    /// weights, optimizer moments, step counters); [`Json::Null`] when
+    /// unused. The loader never interprets it.
+    pub trainer: Json,
+}
+
+/// Always-hex rendering for full-range u64 values (seeds, fingerprints):
+/// [`Json::Num`] is an f64 and silently loses integer precision above
+/// 2^53, so these never go through a number.
+fn hex_u64(v: u64) -> Json {
+    Json::Str(format!("0x{v:016x}"))
+}
+
+/// Small counters (epoch, batch index, rank) serialize as plain numbers
+/// while they fit f64 exactly, hex strings otherwise.
+fn write_u64(v: u64) -> Json {
+    if v < (1u64 << 53) {
+        Json::Num(v as f64)
+    } else {
+        hex_u64(v)
+    }
+}
+
+/// Read a u64 field that may be either a JSON number or a hex string.
+fn read_u64(j: &Json, key: &str) -> Result<u64> {
+    let v = j.req(key)?;
+    if let Some(s) = v.as_str() {
+        let digits = s.strip_prefix("0x").unwrap_or(s);
+        return u64::from_str_radix(digits, 16)
+            .map_err(|e| anyhow!("checkpoint field '{key}': bad hex '{s}': {e}"));
+    }
+    if let Some(x) = v.as_f64() {
+        if x >= 0.0 && x.fract() == 0.0 && x < 9e15 {
+            return Ok(x as u64);
+        }
+    }
+    bail!("checkpoint field '{key}': expected a u64 number or hex string, got {v:?}")
+}
+
+impl LoaderCheckpoint {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("kind", Json::Str(MANIFEST_KIND.into()))
+            .set("version", write_u64(self.version as u64))
+            .set("seed", hex_u64(self.seed))
+            .set("seed_schema", Json::Str(self.seed_schema.as_str().into()))
+            .set("epoch", write_u64(self.epoch))
+            .set("delivered_batches", write_u64(self.delivered_batches))
+            .set("rank", write_u64(self.rank as u64))
+            .set("world_size", write_u64(self.world_size as u64))
+            .set("config_fingerprint", hex_u64(self.config_fingerprint))
+            .set("trainer", self.trainer.clone());
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<LoaderCheckpoint> {
+        let kind = j.req("kind")?.as_str().unwrap_or_default().to_string();
+        ensure!(
+            kind == MANIFEST_KIND,
+            "not a loader checkpoint manifest (kind '{kind}', expected '{MANIFEST_KIND}')"
+        );
+        let version = read_u64(j, "version")? as u32;
+        ensure!(
+            version == MANIFEST_VERSION,
+            "unsupported checkpoint manifest version {version} (this build reads v{MANIFEST_VERSION})"
+        );
+        let schema = j
+            .req("seed_schema")?
+            .as_str()
+            .ok_or_else(|| anyhow!("checkpoint field 'seed_schema' must be a string"))?;
+        let seed_schema = SeedSchema::parse(schema)
+            .ok_or_else(|| anyhow!("unknown seed_schema '{schema}' in checkpoint"))?;
+        Ok(LoaderCheckpoint {
+            version,
+            seed: read_u64(j, "seed")?,
+            seed_schema,
+            epoch: read_u64(j, "epoch")?,
+            delivered_batches: read_u64(j, "delivered_batches")?,
+            rank: read_u64(j, "rank")? as usize,
+            world_size: read_u64(j, "world_size")? as usize,
+            config_fingerprint: read_u64(j, "config_fingerprint")?,
+            trainer: j.get("trainer").cloned().unwrap_or(Json::Null),
+        })
+    }
+
+    /// Write the manifest atomically (tmp + rename), so a kill mid-write
+    /// leaves the previous manifest intact rather than a torn file — the
+    /// whole point of checkpointing under preemption.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_json().to_pretty())
+            .with_context(|| format!("writing checkpoint {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("publishing checkpoint {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<LoaderCheckpoint> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// FNV-1a over a canonical byte rendering — small, dependency-free, and
+/// stable across platforms (explicit little-endian integer encoding).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn bytes(&mut self, b: &[u8]) {
+        for &x in b {
+            self.0 = (self.0 ^ x as u64).wrapping_mul(0x1_0000_0000_01b3);
+        }
+    }
+
+    /// Strings are terminated with a non-UTF-8 byte so `("ab","c")` and
+    /// `("a","bc")` hash differently.
+    fn str(&mut self, s: &str) {
+        self.bytes(s.as_bytes());
+        self.bytes(&[0xff]);
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+}
+
+/// Hash every **stream-determining** knob of a loader config (plus the
+/// dataset row count, which the plan depends on): sampling strategy and
+/// parameters, batch size, fetch factor, seed, seed schema, drop_last,
+/// label columns, and the DDP position.
+///
+/// Deliberately excluded: `workers`, `cache`, `io` — all execution-only
+/// by the determinism contract, so a checkpoint taken at one worker/cache
+/// configuration may resume at another (the spot-fleet migration case).
+pub fn config_fingerprint(cfg: &LoaderConfig, n_rows: usize) -> u64 {
+    let mut h = Fnv::new();
+    h.str("scdata-fingerprint-v1");
+    h.u64(n_rows as u64);
+    let s = &cfg.sampling;
+    match &s.strategy {
+        Strategy::Streaming { shuffle_buffer } => {
+            h.str("streaming");
+            h.u64(*shuffle_buffer as u64);
+        }
+        Strategy::BlockShuffling { block_size } => {
+            h.str("block-shuffling");
+            h.u64(*block_size as u64);
+        }
+        Strategy::BlockWeighted {
+            block_size,
+            weights,
+        } => {
+            h.str("block-weighted");
+            h.u64(*block_size as u64);
+            h.u64(weights.len() as u64);
+            for w in weights {
+                h.u64(w.to_bits());
+            }
+        }
+        Strategy::ClassBalanced {
+            block_size,
+            label_col,
+        } => {
+            h.str("class-balanced");
+            h.u64(*block_size as u64);
+            h.str(label_col);
+        }
+    }
+    h.u64(s.batch_size as u64);
+    h.u64(s.fetch_factor as u64);
+    h.u64(s.seed);
+    h.str(s.seed_schema.as_str());
+    h.u64(s.drop_last as u64);
+    h.u64(cfg.label_cols.len() as u64);
+    for c in &cfg.label_cols {
+        h.str(c);
+    }
+    h.u64(cfg.ddp.rank as u64);
+    h.u64(cfg.ddp.world_size as u64);
+    h.0
+}
+
+/// Where a delivered-batch count lands in the rank's fetch sequence
+/// (split-iterator strategies — everything except the rolling shuffle
+/// buffer, which needs [`plan_buffer_resume`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SplitResume {
+    /// Sequence position (into the rank's plan-order fetch list) of the
+    /// first fetch that still has undelivered minibatches. Every earlier
+    /// fetch is skipped entirely — never enqueued, never read.
+    pub start_seq: usize,
+    /// Rows of fetch `start_seq` already emitted before the checkpoint
+    /// (always a multiple of the batch size; the resumed split starts
+    /// here).
+    pub skip_rows: usize,
+    /// Row counts of the fully-skipped fetches, in delivery order — what
+    /// seed-schema v1 needs to fast-forward its sequential shuffle stream
+    /// ([`ffwd_stream_rng`]).
+    pub skipped_lens: Vec<usize>,
+}
+
+/// Map `delivered` minibatches onto the rank's fetch lengths `lens`
+/// (delivery order). Returns `None` when the epoch was fully delivered.
+///
+/// Chunks split independently (`SplitIter` recycles a partial tail per
+/// chunk under `drop_last` instead of stitching across fetches), so the
+/// mapping is a prefix sum of [`batches_in_fetch`]. A fetch whose batch
+/// count is zero (a `drop_last` tail shorter than one batch) is skipped
+/// like a delivered fetch — it contributes nothing to the remaining
+/// stream, only to v1's RNG fast-forward.
+pub fn split_resume(
+    lens: &[usize],
+    batch_size: usize,
+    drop_last: bool,
+    delivered: u64,
+) -> Option<SplitResume> {
+    let mut remaining = delivered;
+    let mut skipped_lens = Vec::new();
+    for (seq, &len) in lens.iter().enumerate() {
+        let b = batches_in_fetch(len, batch_size, drop_last) as u64;
+        if remaining >= b {
+            remaining -= b;
+            skipped_lens.push(len);
+            continue;
+        }
+        return Some(SplitResume {
+            start_seq: seq,
+            skip_rows: remaining as usize * batch_size,
+            skipped_lens,
+        });
+    }
+    None
+}
+
+/// Advance seed-schema v1's sequential shuffle stream past the skipped
+/// fetches: `finish_fetch` consumes the stream with one
+/// `Rng::shuffle` per delivered fetch (over its emitted-row multiset), so
+/// replaying the same-length shuffles on dummy index vectors consumes the
+/// exact same underlying `below()` sequence — bit-equal RNG state at the
+/// resume point, zero I/O.
+pub fn ffwd_stream_rng(mut rng: Rng, skipped_lens: &[usize]) -> Rng {
+    let mut scratch: Vec<u32> = Vec::new();
+    for &len in skipped_lens {
+        scratch.clear();
+        scratch.extend(0..len as u32);
+        rng.shuffle(&mut scratch);
+    }
+    rng
+}
+
+/// Resume state for `Streaming { shuffle_buffer > 0 }` — the rolling
+/// window re-simulated up to the kill point.
+#[derive(Clone, Debug)]
+pub struct BufferResume {
+    /// Sequence positions (into the rank's plan-order fetch list) of the
+    /// fetches that must be re-read: every fetch still holding a window
+    /// row, plus the whole unconsumed tail. Sorted ascending; everything
+    /// else is skipped.
+    pub fetch_seqs: Vec<usize>,
+    /// For each entry of `fetch_seqs`, its `[start, end)` row range in
+    /// the rank's concatenated plan-order row stream.
+    pub chunk_ranges: Vec<(usize, usize)>,
+    /// Source positions of the rows that were in the window at the kill
+    /// point, in the **exact `Vec` order** the live buffer had them —
+    /// `swap_remove` draws only replay bit-identically if the order (not
+    /// just the set) is reproduced.
+    pub window_src: Vec<usize>,
+    /// Source position the continuing stream resumes at (`== total` when
+    /// the stream was fully pulled and only the window was draining).
+    pub src_pos: usize,
+    /// The buffer RNG advanced past every delivered draw.
+    pub rng: Rng,
+}
+
+/// Re-simulate the rolling shuffle buffer to `delivered_rows` emitted
+/// rows, at the source-position level (no data, no I/O): the buffer's
+/// state is a pure function of `(rng, arrival order, rows delivered)`
+/// because refills are deterministic (fill to capacity, then draw) and
+/// each draw consumes `rng.range(0, window_len)`.
+///
+/// `lens` are the rank's fetch lengths in delivery order; `capacity` is
+/// the (already clamped, ≥ 1) window size.
+pub fn plan_buffer_resume(
+    lens: &[usize],
+    capacity: usize,
+    delivered_rows: usize,
+    mut rng: Rng,
+) -> BufferResume {
+    let total: usize = lens.iter().sum();
+    debug_assert!(delivered_rows <= total, "delivered past the epoch");
+    let mut window: Vec<usize> = Vec::new();
+    let mut src_pos = 0usize;
+    for _ in 0..delivered_rows {
+        // Mirror `ShuffleBufferIter`: refill to capacity (or stream
+        // exhaustion) before every draw.
+        while src_pos < total && window.len() < capacity {
+            window.push(src_pos);
+            src_pos += 1;
+        }
+        debug_assert!(!window.is_empty(), "draw from an empty window");
+        let i = rng.range(0, window.len());
+        window.swap_remove(i);
+    }
+    // Fetch geometry: prefix sums over the rank's fetch lengths (fetch
+    // lengths are ≥ 1, so starts are strictly increasing).
+    let mut starts = Vec::with_capacity(lens.len());
+    let mut acc = 0usize;
+    for &l in lens {
+        starts.push(acc);
+        acc += l;
+    }
+    let fetch_of = |src: usize| match starts.binary_search(&src) {
+        Ok(i) => i,
+        Err(i) => i - 1,
+    };
+    // Needed fetches: those still holding a window row (all before the
+    // resume position by construction) plus the whole unconsumed tail.
+    let t0 = if src_pos < total {
+        fetch_of(src_pos)
+    } else {
+        lens.len()
+    };
+    let mut fetch_seqs: Vec<usize> = window.iter().map(|&s| fetch_of(s)).collect();
+    fetch_seqs.sort_unstable();
+    fetch_seqs.dedup();
+    fetch_seqs.retain(|&s| s < t0);
+    fetch_seqs.extend(t0..lens.len());
+    let chunk_ranges = fetch_seqs
+        .iter()
+        .map(|&s| (starts[s], starts[s] + lens[s]))
+        .collect();
+    BufferResume {
+        fetch_seqs,
+        chunk_ranges,
+        window_src: window,
+        src_pos,
+        rng,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::builder::DdpConfig;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+    use crate::util::rng::domains;
+    use crate::util::tempdir::TempDir;
+
+    fn manifest() -> LoaderCheckpoint {
+        LoaderCheckpoint {
+            version: MANIFEST_VERSION,
+            seed: 0xDEAD_BEEF_CAFE_F00D, // > 2^53: must survive JSON
+            seed_schema: SeedSchema::V2,
+            epoch: 3,
+            delivered_batches: 17,
+            rank: 1,
+            world_size: 4,
+            config_fingerprint: u64::MAX - 5,
+            trainer: Json::Null,
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrips_through_json_and_disk() {
+        let m = manifest();
+        let back = LoaderCheckpoint::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, back, "json roundtrip");
+        let dir = TempDir::new("resume").unwrap();
+        let path = dir.path().join("ckpt.json");
+        m.save(&path).unwrap();
+        assert_eq!(LoaderCheckpoint::load(&path).unwrap(), m, "disk roundtrip");
+        // Saving again overwrites atomically.
+        let mut m2 = m.clone();
+        m2.delivered_batches = 18;
+        m2.trainer = {
+            let mut t = Json::obj();
+            t.set("steps", Json::Num(18.0));
+            t
+        };
+        m2.save(&path).unwrap();
+        assert_eq!(LoaderCheckpoint::load(&path).unwrap(), m2);
+    }
+
+    #[test]
+    fn manifest_rejects_foreign_and_future_files() {
+        let err = LoaderCheckpoint::from_json(&Json::parse(r#"{"a": 1}"#).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("kind"), "{err}");
+        let mut j = manifest().to_json();
+        j.set("version", Json::Num(99.0));
+        let err = LoaderCheckpoint::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
+        let mut j = manifest().to_json();
+        j.set("seed_schema", Json::Str("v9".into()));
+        let err = LoaderCheckpoint::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("seed_schema"), "{err}");
+    }
+
+    #[test]
+    fn u64_fields_survive_above_f64_precision() {
+        // The whole reason seeds/fingerprints serialize as hex strings.
+        let v = (1u64 << 53) + 1;
+        let mut m = manifest();
+        m.seed = v;
+        m.config_fingerprint = v;
+        m.epoch = v; // small-counter fields fall back to hex too
+        let back = LoaderCheckpoint::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.seed, v);
+        assert_eq!(back.config_fingerprint, v);
+        assert_eq!(back.epoch, v);
+    }
+
+    fn base_cfg() -> LoaderConfig {
+        let mut cfg = LoaderConfig::default();
+        cfg.sampling.strategy = Strategy::BlockShuffling { block_size: 8 };
+        cfg.sampling.seed = 11;
+        cfg.label_cols = vec!["plate".into()];
+        cfg
+    }
+
+    #[test]
+    fn fingerprint_tracks_stream_knobs_only() {
+        let base = config_fingerprint(&base_cfg(), 1000);
+        assert_eq!(base, config_fingerprint(&base_cfg(), 1000), "stable");
+        let mut c = base_cfg();
+        c.sampling.seed = 12;
+        assert_ne!(base, config_fingerprint(&c, 1000), "seed");
+        let mut c = base_cfg();
+        c.sampling.seed_schema = SeedSchema::V2;
+        assert_ne!(base, config_fingerprint(&c, 1000), "schema");
+        let mut c = base_cfg();
+        c.sampling.batch_size += 1;
+        assert_ne!(base, config_fingerprint(&c, 1000), "batch size");
+        let mut c = base_cfg();
+        c.sampling.strategy = Strategy::Streaming { shuffle_buffer: 0 };
+        assert_ne!(base, config_fingerprint(&c, 1000), "strategy");
+        let mut c = base_cfg();
+        c.ddp = DdpConfig {
+            rank: 1,
+            world_size: 2,
+        };
+        assert_ne!(base, config_fingerprint(&c, 1000), "ddp");
+        assert_ne!(base, config_fingerprint(&base_cfg(), 1001), "rows");
+        // Execution-only knobs do NOT change the fingerprint: resuming on
+        // different worker/cache hardware is supported.
+        let mut c = base_cfg();
+        c.workers.num_workers = 8;
+        c.workers.in_flight = 2;
+        c.cache.bytes = 1 << 20;
+        c.io.decode_threads = 4;
+        assert_eq!(base, config_fingerprint(&c, 1000), "execution-only");
+    }
+
+    #[test]
+    fn split_resume_walks_fetch_boundaries() {
+        // lens [10, 10, 5], m=4: ceil batches per fetch = [3, 3, 2].
+        let lens = [10usize, 10, 5];
+        assert_eq!(
+            split_resume(&lens, 4, false, 0),
+            Some(SplitResume {
+                start_seq: 0,
+                skip_rows: 0,
+                skipped_lens: vec![]
+            })
+        );
+        assert_eq!(
+            split_resume(&lens, 4, false, 2),
+            Some(SplitResume {
+                start_seq: 0,
+                skip_rows: 8,
+                skipped_lens: vec![]
+            })
+        );
+        assert_eq!(
+            split_resume(&lens, 4, false, 3),
+            Some(SplitResume {
+                start_seq: 1,
+                skip_rows: 0,
+                skipped_lens: vec![10]
+            })
+        );
+        assert_eq!(
+            split_resume(&lens, 4, false, 7),
+            Some(SplitResume {
+                start_seq: 2,
+                skip_rows: 4,
+                skipped_lens: vec![10, 10]
+            })
+        );
+        assert_eq!(split_resume(&lens, 4, false, 8), None, "epoch complete");
+        // drop_last: [2, 2, 1] batches; the short tail of each chunk is
+        // recycled, and a zero-batch fetch is skipped like a delivered one.
+        assert_eq!(
+            split_resume(&lens, 4, true, 4),
+            Some(SplitResume {
+                start_seq: 2,
+                skip_rows: 0,
+                skipped_lens: vec![10, 10]
+            })
+        );
+        assert_eq!(split_resume(&lens, 4, true, 5), None);
+        assert_eq!(
+            split_resume(&[3, 10], 4, true, 0),
+            Some(SplitResume {
+                start_seq: 1,
+                skip_rows: 0,
+                skipped_lens: vec![3]
+            }),
+            "a zero-batch head fetch is never re-read"
+        );
+    }
+
+    #[test]
+    fn prop_split_resume_conserves_batches() {
+        check("split-resume-conserves", 128, |rng| {
+            let m = rng.range(1, 9);
+            let drop_last = rng.bernoulli(0.5);
+            let lens: Vec<usize> = (0..rng.range(1, 12)).map(|_| rng.range(1, 40)).collect();
+            let total: u64 = lens
+                .iter()
+                .map(|&l| batches_in_fetch(l, m, drop_last) as u64)
+                .sum();
+            for delivered in 0..=total {
+                match split_resume(&lens, m, drop_last, delivered) {
+                    None => prop_assert!(
+                        delivered == total,
+                        "None before the end: {delivered}/{total}"
+                    ),
+                    Some(sr) => {
+                        let before: u64 = lens[..sr.start_seq]
+                            .iter()
+                            .map(|&l| batches_in_fetch(l, m, drop_last) as u64)
+                            .sum();
+                        prop_assert!(
+                            before + (sr.skip_rows / m) as u64 == delivered,
+                            "position mismatch: {sr:?} for delivered={delivered}"
+                        );
+                        prop_assert!(
+                            sr.skip_rows < lens[sr.start_seq],
+                            "skip past the fetch: {sr:?}"
+                        );
+                        prop_assert!(
+                            sr.skipped_lens == lens[..sr.start_seq],
+                            "skipped lens must mirror the prefix"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Reference rolling buffer over abstract source positions — the same
+    /// refill-then-draw loop `ShuffleBufferIter` runs, minus the data.
+    fn reference_emit(total: usize, capacity: usize, mut rng: Rng) -> Vec<usize> {
+        let mut window = Vec::new();
+        let mut next = 0usize;
+        let mut out = Vec::new();
+        loop {
+            while next < total && window.len() < capacity {
+                window.push(next);
+                next += 1;
+            }
+            if window.is_empty() {
+                return out;
+            }
+            let i = rng.range(0, window.len());
+            out.push(window.swap_remove(i));
+        }
+    }
+
+    #[test]
+    fn prop_buffer_resume_replays_the_exact_suffix() {
+        // The heart of shuffle-buffer resume, validated without any I/O:
+        // reconstructing the window from `plan_buffer_resume` and
+        // continuing to draw must reproduce the uninterrupted emission
+        // suffix position-for-position.
+        check("buffer-resume-suffix", 96, |rng| {
+            let capacity = rng.range(1, 40);
+            let lens: Vec<usize> = (0..rng.range(1, 8)).map(|_| rng.range(1, 30)).collect();
+            let total: usize = lens.iter().sum();
+            let seed = rng.next_u64();
+            let full = reference_emit(total, capacity, domains::shuffle_buffer(seed, 0));
+            prop_assert!(full.len() == total, "reference emits every row");
+            let delivered = rng.range(0, total + 1);
+            let br = plan_buffer_resume(
+                &lens,
+                capacity,
+                delivered,
+                domains::shuffle_buffer(seed, 0),
+            );
+            // Invariants the loader's rebuild relies on.
+            prop_assert!(
+                br.window_src.iter().all(|&s| s < br.src_pos),
+                "window rows must precede the resume position"
+            );
+            prop_assert!(
+                br.fetch_seqs.windows(2).all(|w| w[0] < w[1]),
+                "needed fetches sorted+unique: {:?}",
+                br.fetch_seqs
+            );
+            for (&s, &(lo, hi)) in br.fetch_seqs.iter().zip(&br.chunk_ranges) {
+                let start: usize = lens[..s].iter().sum();
+                prop_assert!(
+                    (lo, hi) == (start, start + lens[s]),
+                    "range mismatch for seq {s}"
+                );
+            }
+            prop_assert!(
+                br.window_src.iter().all(|&src| br
+                    .chunk_ranges
+                    .iter()
+                    .any(|&(lo, hi)| src >= lo && src < hi)),
+                "every window row is covered by a needed fetch"
+            );
+            // Replay the suffix.
+            let mut window = br.window_src.clone();
+            let mut next = br.src_pos;
+            let mut r = br.rng.clone();
+            let mut out = Vec::new();
+            loop {
+                while next < total && window.len() < capacity {
+                    window.push(next);
+                    next += 1;
+                }
+                if window.is_empty() {
+                    break;
+                }
+                let i = r.range(0, window.len());
+                out.push(window.swap_remove(i));
+            }
+            prop_assert!(
+                out == full[delivered..],
+                "resumed emission diverged at delivered={delivered} \
+                 (capacity={capacity}, lens={lens:?})"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ffwd_matches_real_shuffles() {
+        let lens = [7usize, 1, 0, 32];
+        let mut real = Rng::new(99).fork(5);
+        for &len in &lens {
+            let mut v: Vec<u32> = (0..len as u32).collect();
+            real.shuffle(&mut v);
+        }
+        let mut ffwd = ffwd_stream_rng(Rng::new(99).fork(5), &lens);
+        assert_eq!(real.next_u64(), ffwd.next_u64());
+        assert_eq!(real.next_u64(), ffwd.next_u64());
+    }
+}

@@ -9,4 +9,4 @@ pub mod trainer;
 pub use linear_cpu::CpuModel;
 pub use metrics::{argmax_rows, Confusion};
 pub use tasks::{TaskSpec, TASKS};
-pub use trainer::{train_eval, Engine, TrainConfig, TrainReport};
+pub use trainer::{train_eval, Engine, ResumePolicy, TrainConfig, TrainReport};

@@ -11,13 +11,17 @@
 //! for any worker count — the executor delivers minibatches in plan
 //! order (`tests/determinism.rs`).
 
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::{LoaderConfig, SamplingConfig, ScDataset, Strategy};
+use crate::coordinator::{
+    EpochIter, LoaderCheckpoint, LoaderConfig, SamplingConfig, ScDataset, Strategy,
+};
 use crate::runtime::{Runtime, Tensor};
 use crate::store::Backend;
+use crate::util::json::Json;
 
 use super::linear_cpu::CpuModel;
 use super::metrics::{argmax_rows, Confusion};
@@ -40,6 +44,26 @@ impl Engine {
     }
 }
 
+/// Checkpoint/resume policy for a training run (the `[resume]` config
+/// table; `--checkpoint` / `--checkpoint-every` / `--resume`).
+///
+/// A manifest couples the loader position (see
+/// [`crate::coordinator::resume`]) with the trainer state (model +
+/// optimizer + loss history), so a killed run restarted with `--resume`
+/// continues the minibatch stream — and therefore the loss sequence —
+/// bit-identically, without re-reading already-delivered fetches.
+#[derive(Clone, Debug, Default)]
+pub struct ResumePolicy {
+    /// Write the manifest here (atomic tmp+rename); `None` disables
+    /// checkpointing.
+    pub checkpoint_path: Option<PathBuf>,
+    /// Additionally write every N optimizer steps (0 = only at epoch
+    /// boundaries and the `max_steps` cap).
+    pub every_steps: usize,
+    /// Load this manifest before training and continue from it.
+    pub resume_from: Option<PathBuf>,
+}
+
 /// Training run configuration.
 pub struct TrainConfig {
     pub task: TaskSpec,
@@ -51,6 +75,8 @@ pub struct TrainConfig {
     /// Record the loss every this many steps.
     pub loss_every: usize,
     pub seed: u64,
+    /// Checkpoint/resume policy (off by default).
+    pub resume: ResumePolicy,
 }
 
 impl TrainConfig {
@@ -66,8 +92,54 @@ impl TrainConfig {
             max_steps: None,
             loss_every: 50,
             seed: 0,
+            resume: ResumePolicy::default(),
         }
     }
+}
+
+/// Write the coupled loader+trainer manifest: the loader position from
+/// `iter.checkpoint()` plus `{steps, losses, model}` in the manifest's
+/// `trainer` slot.
+fn save_checkpoint(
+    path: &Path,
+    iter: &EpochIter,
+    cpu: &CpuModel,
+    steps: usize,
+    losses: &[(usize, f64)],
+) -> Result<()> {
+    if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint directory {}", dir.display()))?;
+    }
+    let mut ck = iter.checkpoint();
+    let mut t = Json::obj();
+    t.set("steps", Json::Num(steps as f64));
+    t.set(
+        "losses",
+        Json::Arr(
+            losses
+                .iter()
+                .map(|&(s, l)| Json::Arr(vec![Json::Num(s as f64), Json::Num(l)]))
+                .collect(),
+        ),
+    );
+    t.set("model", cpu.state_json());
+    ck.trainer = t;
+    ck.save(path)
+}
+
+/// Mirror the PJRT train-step state back into the CPU model (the
+/// serialized form), so checkpoints are engine-independent: a run
+/// checkpointed under one engine resumes under either.
+fn sync_cpu_from_pjrt(cpu: &mut CpuModel, state: &[Tensor]) -> Result<()> {
+    cpu.w = state[0].as_f32()?.to_vec();
+    cpu.b = state[1].as_f32()?.to_vec();
+    cpu.m_w = state[2].as_f32()?.to_vec();
+    cpu.v_w = state[3].as_f32()?.to_vec();
+    cpu.m_b = state[4].as_f32()?.to_vec();
+    cpu.v_b = state[5].as_f32()?.to_vec();
+    cpu.step = state[6].as_f32()?[0];
+    Ok(())
 }
 
 /// Result of a training run.
@@ -108,6 +180,36 @@ pub fn train_eval(
 
     // Engine state.
     let mut cpu = CpuModel::new(genes, classes, cfg.lr, cfg.seed);
+    let mut losses: Vec<(usize, f64)> = Vec::new();
+    let mut steps = 0usize;
+
+    // Resume: restore trainer state from the manifest, then let the
+    // loader replan and fast-forward (ds.resume below) — already-delivered
+    // fetches are never re-read.
+    let mut start_epoch = 0u64;
+    let mut resume_ck: Option<LoaderCheckpoint> = None;
+    if let Some(path) = &cfg.resume.resume_from {
+        let ck = LoaderCheckpoint::load(path)?;
+        let t = &ck.trainer;
+        if !matches!(t, Json::Null) {
+            cpu.restore(t.req("model").context("manifest has no trainer model state")?)?;
+            steps = t.get("steps").and_then(Json::as_usize).unwrap_or(0);
+            if let Some(arr) = t.get("losses").and_then(Json::as_arr) {
+                for p in arr {
+                    let p = p.as_arr().context("bad losses entry in manifest")?;
+                    if let (Some(s), Some(l)) = (
+                        p.first().and_then(Json::as_usize),
+                        p.get(1).and_then(Json::as_f64),
+                    ) {
+                        losses.push((s, l));
+                    }
+                }
+            }
+        }
+        start_epoch = ck.epoch;
+        resume_ck = Some(ck);
+    }
+
     let mut pjrt_state: Option<(Arc<crate::runtime::Executable>, Vec<Tensor>)> = None;
     if let Engine::Pjrt(rt) = engine {
         if (rt.manifest().lr - cfg.lr as f64).abs() > 1e-12 {
@@ -124,27 +226,33 @@ pub fn train_eval(
             );
         }
         let exe = rt.load("train_step", genes, classes)?;
-        // Initialize from the CPU model so both engines share init.
+        // Initialize from the CPU model so both engines share init —
+        // including the Adam moments + step, which a resume restored.
         let state = vec![
             Tensor::F32(cpu.w.clone()),
             Tensor::F32(cpu.b.clone()),
-            Tensor::F32(vec![0.0; genes * classes]),
-            Tensor::F32(vec![0.0; genes * classes]),
-            Tensor::F32(vec![0.0; classes]),
-            Tensor::F32(vec![0.0; classes]),
-            Tensor::F32(vec![0.0]),
+            Tensor::F32(cpu.m_w.clone()),
+            Tensor::F32(cpu.v_w.clone()),
+            Tensor::F32(cpu.m_b.clone()),
+            Tensor::F32(cpu.v_b.clone()),
+            Tensor::F32(vec![cpu.step]),
         ];
         pjrt_state = Some((exe, state));
     }
 
-    let mut losses = Vec::new();
-    let mut steps = 0usize;
     let mut dense = vec![0f32; m * genes];
     let mut sim_reports = Vec::new();
+    let ckpt_path = cfg.resume.checkpoint_path.as_deref();
+    let every = cfg.resume.every_steps;
     let t_train = std::time::Instant::now();
-    'epochs: for epoch in 0..cfg.epochs {
-        let mut iter = ds.epoch(epoch as u64)?;
-        for mb in iter.by_ref() {
+    'epochs: for epoch in start_epoch..cfg.epochs as u64 {
+        // The first epoch of a resumed run continues the checkpointed
+        // stream mid-epoch; later epochs start fresh as usual.
+        let mut iter = match resume_ck.take() {
+            Some(ck) => ds.resume(&ck)?,
+            None => ds.epoch(epoch)?,
+        };
+        while let Some(mb) = iter.next() {
             let mb = mb.context("loading minibatch")?;
             if mb.x.n_rows != m {
                 continue; // partial batch (only possible without drop_last)
@@ -168,12 +276,29 @@ pub fn train_eval(
                 losses.push((steps, loss));
             }
             steps += 1;
-            if cfg.max_steps.is_some_and(|cap| steps >= cap) {
+            let capped = cfg.max_steps.is_some_and(|cap| steps >= cap);
+            if let Some(path) = ckpt_path {
+                if capped || (every > 0 && steps % every == 0) {
+                    if let Some((_, state)) = &pjrt_state {
+                        sync_cpu_from_pjrt(&mut cpu, state)?;
+                    }
+                    save_checkpoint(path, &iter, &cpu, steps, &losses)?;
+                }
+            }
+            if capped {
                 sim_reports = iter.stats().fetch_reports;
                 break 'epochs;
             }
         }
         sim_reports = iter.stats().fetch_reports;
+        // Epoch boundary: the manifest points at the drained epoch's end,
+        // so a resume replays nothing and rolls into the next epoch.
+        if let Some(path) = ckpt_path {
+            if let Some((_, state)) = &pjrt_state {
+                sync_cpu_from_pjrt(&mut cpu, state)?;
+            }
+            save_checkpoint(path, &iter, &cpu, steps, &losses)?;
+        }
     }
     let train_secs = t_train.elapsed().as_secs_f64();
     // Release the training loader before evaluation: this joins its
@@ -329,6 +454,44 @@ mod tests {
             shuffled_f1 > stream_f1 + 0.02,
             "shuffled {shuffled_f1} vs streaming {stream_f1}"
         );
+    }
+
+    #[test]
+    fn checkpoint_resume_matches_uninterrupted_run() {
+        // Kill a CPU training run at step 6 (checkpoint written at the
+        // cap), resume it, and demand the exact loss sequence + metrics
+        // of an uninterrupted run: loader stream and optimizer state are
+        // both restored bit-identically.
+        let (_d, train, test) = dataset();
+        let task = TaskSpec::by_name("cell_line").unwrap();
+        let dir = TempDir::new("train-ckpt").unwrap();
+        let path = dir.path().join("run.ckpt.json");
+        let base = |max: usize| {
+            let mut cfg = TrainConfig::new(
+                task.clone(),
+                sampling(Strategy::BlockShuffling { block_size: 8 }, 64, 4),
+            );
+            cfg.epochs = 2;
+            cfg.lr = 0.01;
+            cfg.loss_every = 1;
+            cfg.max_steps = Some(max);
+            cfg
+        };
+        let full = train_eval(train.clone(), test.clone(), &Engine::Cpu, &base(14)).unwrap();
+        let mut first = base(6);
+        first.resume.checkpoint_path = Some(path.clone());
+        train_eval(train.clone(), test.clone(), &Engine::Cpu, &first).unwrap();
+        let mut second = base(14);
+        second.resume.resume_from = Some(path.clone());
+        let resumed = train_eval(train, test, &Engine::Cpu, &second).unwrap();
+        assert_eq!(resumed.steps, full.steps);
+        assert_eq!(resumed.losses.len(), full.losses.len());
+        for ((sa, la), (sb, lb)) in full.losses.iter().zip(&resumed.losses) {
+            assert_eq!(sa, sb);
+            assert_eq!(la.to_bits(), lb.to_bits(), "loss diverged at step {sa}");
+        }
+        assert_eq!(resumed.macro_f1, full.macro_f1);
+        assert_eq!(resumed.accuracy, full.accuracy);
     }
 
     #[test]

@@ -709,3 +709,101 @@ fn prop_weighted_sampling_respects_zero_weights() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_kill_resume_stream_identical() {
+    // Checkpoint/resume acceptance, fuzzed: for a random sampling config
+    // (strategy × schema × batch geometry × drop_last), a random epoch and
+    // a random kill point, draining k minibatches, checkpointing, and
+    // resuming — on a loader with an independently random *execution*
+    // config (workers, in-flight, cache) — must reproduce the exact
+    // suffix of the uninterrupted stream.
+    let dir = TempDir::new("prop-resume").unwrap();
+    let mut cfg = TahoeConfig::tiny();
+    cfg.n_plates = 2;
+    cfg.cells_per_plate = 300;
+    generate(&cfg, dir.path()).unwrap();
+    let backend: Arc<dyn Backend> = Arc::new(open_collection(dir.path()).unwrap());
+    check("kill-resume", 14, |rng| {
+        let mut base = LoaderConfig::default();
+        base.sampling.strategy = match rng.range(0, 3) {
+            0 => Strategy::BlockShuffling {
+                block_size: rng.range(1, 48),
+            },
+            1 => Strategy::Streaming { shuffle_buffer: 0 },
+            _ => Strategy::Streaming {
+                shuffle_buffer: rng.range(1, 200),
+            },
+        };
+        base.sampling.batch_size = rng.range(1, 60);
+        base.sampling.fetch_factor = rng.range(1, 6);
+        base.sampling.seed = rng.next_u64();
+        base.sampling.seed_schema = if rng.bernoulli(0.5) {
+            SeedSchema::V1
+        } else {
+            SeedSchema::V2
+        };
+        base.sampling.drop_last = rng.bernoulli(0.3);
+        base.label_cols = vec!["plate".into()];
+        base.workers.num_workers = rng.range(0, 3);
+        // The resuming process gets its own execution shape — worker
+        // migration across a checkpoint is part of the contract.
+        let mut other = base.clone();
+        other.workers.num_workers = rng.range(0, 5);
+        other.workers.in_flight = rng.range(1, 6);
+        if rng.bernoulli(0.4) {
+            other.cache = CacheConfig {
+                bytes: rng.range(10_000, 4 << 20),
+                block_rows: rng.range(1, 300),
+                locality_window: rng.range(0, 8),
+                readahead: rng.bernoulli(0.5),
+            };
+        }
+        let epoch = rng.range(0, 3) as u64;
+        type Stream = Vec<(Vec<u32>, scdata::store::CsrBatch, Vec<Vec<u16>>)>;
+        let writer = ScDataset::builder(backend.clone())
+            .config(base.clone())
+            .build()
+            .map_err(|e| e.to_string())?;
+        let reader = ScDataset::builder(backend.clone())
+            .config(other.clone())
+            .build()
+            .map_err(|e| e.to_string())?;
+        let mut full: Stream = Vec::new();
+        for mb in writer.epoch(epoch).map_err(|e| e.to_string())? {
+            let mb = mb.map_err(|e| e.to_string())?;
+            full.push((mb.rows, mb.x, mb.labels));
+        }
+        prop_assert!(!full.is_empty(), "empty epoch (m too large?)");
+        let kill = rng.range(0, full.len() + 1);
+        let mut iter = writer.epoch(epoch).map_err(|e| e.to_string())?;
+        for i in 0..kill {
+            iter.next()
+                .ok_or_else(|| format!("stream ended early at {i}"))?
+                .map_err(|e| e.to_string())?;
+        }
+        let ckpt = iter.checkpoint();
+        drop(iter);
+        prop_assert!(
+            ckpt.delivered_batches == kill as u64 && ckpt.epoch == epoch,
+            "manifest position wrong: {ckpt:?}"
+        );
+        let mut resumed: Stream = Vec::new();
+        for mb in reader.resume(&ckpt).map_err(|e| e.to_string())? {
+            let mb = mb.map_err(|e| e.to_string())?;
+            resumed.push((mb.rows, mb.x, mb.labels));
+        }
+        prop_assert!(
+            resumed == full[kill..],
+            "resumed suffix diverged: kill={kill}/{} strategy={:?} \
+             schema={:?} drop_last={} writer_workers={} reader_workers={}",
+            full.len(),
+            base.sampling.strategy,
+            base.sampling.seed_schema,
+            base.sampling.drop_last,
+            base.workers.num_workers,
+            other.workers.num_workers
+        );
+        Ok(())
+    });
+}
