@@ -13,7 +13,9 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::AppConfig;
-use crate::coordinator::{CacheConfig, IoConfig, SeedSchema, WorkerConfig};
+use crate::coordinator::{
+    CacheConfig, DegradeMode, IoConfig, ResilienceConfig, RetryPolicy, SeedSchema, WorkerConfig,
+};
 
 #[derive(Clone, Debug, Default)]
 pub struct Args {
@@ -121,6 +123,35 @@ impl Args {
             num_workers: self.usize_or("workers", defaults.num_workers)?,
             in_flight: self.usize_or("in-flight", defaults.in_flight)?,
             pipeline_epochs: self.usize_or("pipeline-epochs", defaults.pipeline_epochs)?,
+        })
+    }
+
+    /// The shared `--retry-max-attempts` / `--retry-backoff-ms` /
+    /// `--retry-backoff-cap-ms` / `--retry-deadline-ms` / `--degrade` →
+    /// [`ResilienceConfig`] mapping (the fault-tolerance knobs; all
+    /// execution-only). `defaults` is usually the app config's
+    /// `[resilience]` table.
+    pub fn resilience_config(&self, defaults: ResilienceConfig) -> Result<ResilienceConfig> {
+        Ok(ResilienceConfig {
+            retry: RetryPolicy {
+                max_attempts: self
+                    .usize_or("retry-max-attempts", defaults.retry.max_attempts)?,
+                backoff_base_ms: self
+                    .usize_or("retry-backoff-ms", defaults.retry.backoff_base_ms as usize)?
+                    as u64,
+                backoff_cap_ms: self
+                    .usize_or("retry-backoff-cap-ms", defaults.retry.backoff_cap_ms as usize)?
+                    as u64,
+                deadline_ms: self
+                    .usize_or("retry-deadline-ms", defaults.retry.deadline_ms as usize)?
+                    as u64,
+            },
+            degrade: match self.flags.get("degrade") {
+                None => defaults.degrade,
+                Some(v) => DegradeMode::parse(v).ok_or_else(|| {
+                    anyhow!("--degrade expects fail-fast or skip-fetch, got '{v}'")
+                })?,
+            },
         })
     }
 
@@ -259,6 +290,32 @@ mod tests {
         let a = parse("train");
         assert_eq!(a.seed_schema_or(SeedSchema::V2).unwrap(), SeedSchema::V2);
         assert!(parse("train --seed-schema v9").seed_schema_or(SeedSchema::V2).is_err());
+    }
+
+    #[test]
+    fn resilience_flags_map_onto_typed_config() {
+        let defaults = ResilienceConfig::default();
+        let a = parse(
+            "train --retry-max-attempts 5 --retry-backoff-ms 2 \
+             --retry-backoff-cap-ms 100 --retry-deadline-ms 30000 --degrade skip-fetch",
+        );
+        let r = a.resilience_config(defaults).unwrap();
+        assert_eq!(r.retry.max_attempts, 5);
+        assert_eq!(r.retry.backoff_base_ms, 2);
+        assert_eq!(r.retry.backoff_cap_ms, 100);
+        assert_eq!(r.retry.deadline_ms, 30_000);
+        assert_eq!(r.degrade, DegradeMode::SkipFetch);
+        let r = parse("train").resilience_config(defaults).unwrap();
+        assert_eq!(r, defaults, "unset flags keep the given defaults");
+        assert!(
+            parse("train --degrade sometimes")
+                .resilience_config(defaults)
+                .is_err(),
+            "unknown degrade spellings are rejected"
+        );
+        assert!(parse("train --retry-max-attempts lots")
+            .resilience_config(defaults)
+            .is_err());
     }
 
     #[test]

@@ -46,6 +46,7 @@ pub fn bench(args: &Args) -> Result<()> {
         "fig8" => fig8(args, &cfg, quick)?,
         "fig9" => fig9(args, &cfg, quick)?,
         "fig10" => fig10(args, &cfg, quick)?,
+        "chaos" => chaos(args, &cfg, quick)?,
         "table2" => table2(args, &cfg, quick)?,
         "all" => {
             for exp in [
@@ -58,7 +59,7 @@ pub fn bench(args: &Args) -> Result<()> {
                 bench(&sub)?;
             }
         }
-        other => bail!("unknown experiment '{other}' (fig2..fig10, eq5, table2, all)"),
+        other => bail!("unknown experiment '{other}' (fig2..fig10, eq5, table2, chaos, all)"),
     }
     Ok(())
 }
@@ -764,6 +765,293 @@ fn fig10(args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
         .set("stream_identical", Json::Bool(true))
         .set("sweep", Json::Arr(points));
     write_result(&cfg.results_dir, "fig10", body)?;
+    Ok(())
+}
+
+/// `bench chaos`: the fault-tolerance harness — a deterministic
+/// fault-injection sweep over fault rate × retry budget, gated on the
+/// resilience layer's headline guarantees (always enforced):
+///
+/// 1. **recovered ≡ clean** — when every injected fault is transient and
+///    the retry budget covers the injector's worst burst, the emitted
+///    row stream is byte-identical to the fault-free run (with
+///    `LoadStats.io.retries > 0` proving faults actually fired);
+/// 2. **exhausted budget fails typed** — when the budget cannot cover
+///    the burst, the stream ends with an error and the fault counters
+///    classify it;
+/// 3. **skip-fetch degrades exactly** — with a permanently failing row
+///    range under `DegradeMode::SkipFetch`, the stream equals the clean
+///    run minus precisely the failing fetches' minibatches, and
+///    `LoadStats.degraded_fetches` counts them.
+///
+/// `--smoke` shrinks the sweep and keeps only the gates so CI fails
+/// fast on retry/degrade regressions. `--workers`, `--seed-schema`,
+/// `--block`, `--fetch` pin the loader shape.
+fn chaos(args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
+    use crate::coordinator::fetch::batches_in_fetch;
+    use crate::coordinator::{
+        DegradeMode, LoadStats, LoaderConfig, ResilienceConfig, RetryPolicy, ScDataset,
+        WorkerConfig,
+    };
+    use crate::store::fault::{FaultConfig, FaultInjectingBackend};
+
+    let smoke = args.bool("smoke");
+    let quick = quick || smoke;
+    let inner = open(cfg)?;
+    let b = args.usize_or("block", 16)?;
+    let f = args.usize_or("fetch", if quick { 8 } else { 64 })?;
+    let workers = args.usize_or("workers", 2)?;
+    let schema = args.seed_schema_or(cfg.seed_schema)?;
+    let fault_rates: Vec<f64> = if quick { vec![0.25, 1.0] } else { vec![0.1, 0.5, 1.0] };
+    let bursts: Vec<usize> = if quick { vec![1, 2] } else { vec![1, 2, 3] };
+
+    let mk_cfg = |resilience: ResilienceConfig| LoaderConfig {
+        sampling: SamplingConfig {
+            strategy: Strategy::BlockShuffling { block_size: b },
+            batch_size: cfg.batch_size,
+            fetch_factor: f,
+            seed: cfg.seed,
+            seed_schema: schema,
+            ..SamplingConfig::default()
+        },
+        label_cols: vec!["plate".into()],
+        workers: WorkerConfig {
+            num_workers: workers,
+            ..WorkerConfig::default()
+        },
+        resilience,
+        ..LoaderConfig::default()
+    };
+    // Drain one epoch, keeping the stats snapshot AND any terminal error
+    // (gate 2 needs the fault counters of a failed run).
+    let run = |ds: &ScDataset| -> Result<(Vec<u32>, Option<anyhow::Error>, LoadStats)> {
+        let mut iter = ds.epoch(0)?;
+        let mut rows = Vec::new();
+        let mut failure = None;
+        for mb in &mut iter {
+            match mb {
+                Ok(mb) => rows.extend(mb.rows),
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        let stats = iter.stats();
+        Ok((rows, failure, stats))
+    };
+
+    // Fault-free reference stream.
+    let clean_ds = ScDataset::new(inner.clone(), mk_cfg(ResilienceConfig::default()));
+    let (clean, clean_err, _) = run(&clean_ds)?;
+    ensure!(clean_err.is_none(), "the fault-free reference run failed");
+
+    println!(
+        "Chaos — fault rate × retry budget; b={b}, f={f}, workers={workers}, \
+         seed_schema={schema}, {} rows",
+        clean.len()
+    );
+    println!("| fault rate | burst | attempts | retries | recovered | wall |");
+    println!("|---|---|---|---|---|---|");
+    let mut points = Vec::new();
+    // Gate 1: every transient-burst × sufficient-budget cell recovers to
+    // the byte-identical stream. Budget = burst + 1 attempts covers the
+    // injector's worst case by construction.
+    for &rate in &fault_rates {
+        for &burst in &bursts {
+            let attempts = burst + 1;
+            let faulty: Arc<dyn Backend> = Arc::new(FaultInjectingBackend::new(
+                inner.clone(),
+                FaultConfig {
+                    seed: cfg.seed ^ 0xc4a05,
+                    fault_rate: rate,
+                    max_failures: burst as u32,
+                    ..FaultConfig::default()
+                },
+            ));
+            let ds = ScDataset::new(
+                faulty,
+                mk_cfg(ResilienceConfig {
+                    retry: RetryPolicy {
+                        max_attempts: attempts,
+                        backoff_base_ms: 0, // measure retries, not sleeps
+                        backoff_cap_ms: 0,
+                        deadline_ms: 0,
+                    },
+                    degrade: DegradeMode::FailFast,
+                }),
+            );
+            let t0 = std::time::Instant::now();
+            let (got, failure, s) = run(&ds)?;
+            let wall = t0.elapsed();
+            if let Some(e) = failure {
+                bail!(
+                    "a covered burst must recover, but the stream failed \
+                     (fault_rate={rate}, burst={burst}, attempts={attempts}): {e:#}"
+                );
+            }
+            ensure!(
+                got == clean,
+                "recovered stream diverged from the clean run \
+                 (fault_rate={rate}, burst={burst}, attempts={attempts})"
+            );
+            ensure!(
+                s.io.retries > 0,
+                "no retries at fault_rate={rate} — the injector never fired"
+            );
+            ensure!(
+                s.io.retries
+                    == s.io.faults_transient
+                        + s.io.faults_timeout
+                        + s.io.faults_corrupt
+                        + s.io.faults_permanent,
+                "every counted fault must correspond to one retry"
+            );
+            println!(
+                "| {rate} | {burst} | {attempts} | {} | yes | {:.1} ms |",
+                s.io.retries,
+                wall.as_secs_f64() * 1e3
+            );
+            let mut o = Json::obj();
+            o.set("fault_rate", Json::Num(rate))
+                .set("burst", Json::Num(burst as f64))
+                .set("max_attempts", Json::Num(attempts as f64))
+                .set("retries", Json::Num(s.io.retries as f64))
+                .set("recovered", Json::Bool(true))
+                .set("wall_ms", Json::Num(wall.as_secs_f64() * 1e3));
+            points.push(o);
+        }
+    }
+
+    // Gate 2: a budget that cannot cover the burst surfaces a typed
+    // error instead of a wrong stream.
+    let burst = *bursts.last().unwrap() as u32;
+    let faulty: Arc<dyn Backend> = Arc::new(FaultInjectingBackend::new(
+        inner.clone(),
+        FaultConfig {
+            seed: cfg.seed ^ 0xc4a05,
+            fault_rate: 1.0,
+            max_failures: burst,
+            ..FaultConfig::default()
+        },
+    ));
+    let ds = ScDataset::new(
+        faulty,
+        mk_cfg(ResilienceConfig {
+            retry: RetryPolicy {
+                max_attempts: 1,
+                backoff_base_ms: 0,
+                backoff_cap_ms: 0,
+                deadline_ms: 0,
+            },
+            degrade: DegradeMode::FailFast,
+        }),
+    );
+    let (_, failure, s) = run(&ds)?;
+    let err = match failure {
+        Some(e) => e,
+        None => bail!("an uncovered burst must fail the stream"),
+    };
+    ensure!(
+        s.io.faults_transient
+            + s.io.faults_timeout
+            + s.io.faults_corrupt
+            + s.io.faults_permanent
+            > 0,
+        "the terminal error must be classified into the fault counters"
+    );
+    println!("\nexhausted budget fails typed: {err:#}");
+
+    // Gate 3: SkipFetch over a permanently failing row range drops
+    // exactly the failing fetches' minibatches and nothing else.
+    let n = inner.n_rows() as u32;
+    let (lo, hi) = (n / 4, n / 4 + (n / 8).max(1));
+    let faulty: Arc<dyn Backend> = Arc::new(FaultInjectingBackend::new(
+        inner.clone(),
+        FaultConfig {
+            seed: cfg.seed ^ 0xc4a05,
+            permanent_rows: Some((lo, hi)),
+            ..FaultConfig::default()
+        },
+    ));
+    let ds = ScDataset::new(
+        faulty,
+        mk_cfg(ResilienceConfig {
+            retry: RetryPolicy::default(),
+            degrade: DegradeMode::SkipFetch,
+        }),
+    );
+    let (got, failure, s) = run(&ds)?;
+    if let Some(e) = failure {
+        bail!("skip-fetch must keep streaming past permanent faults: {e:#}");
+    }
+    // Expected: the clean run minus the batches of every fetch whose
+    // requested row range overlaps [lo, hi) — the injector's rule.
+    let plan = clean_ds.plan(0)?;
+    let clean_batches: Vec<&[u32]> = {
+        let mut out = Vec::new();
+        let mut at = 0usize;
+        let m = cfg.batch_size;
+        for fid in 0..plan.n_fetches() {
+            let len = plan.fetch_len(fid);
+            for bi in 0..batches_in_fetch(len, m, false) {
+                let take = m.min(len - bi * m);
+                out.push(&clean[at..at + take]);
+                at += take;
+            }
+        }
+        out
+    };
+    let mut expected: Vec<u32> = Vec::new();
+    let mut batch = 0usize;
+    let mut failing = 0u64;
+    for fid in 0..plan.n_fetches() {
+        let nb = batches_in_fetch(plan.fetch_len(fid), cfg.batch_size, false);
+        let idx = plan.fetch_indices(fid);
+        let first = *idx.iter().min().unwrap();
+        let last = *idx.iter().max().unwrap();
+        if first < hi && last >= lo {
+            failing += 1;
+        } else {
+            for g in &clean_batches[batch..batch + nb] {
+                expected.extend(*g);
+            }
+        }
+        batch += nb;
+    }
+    ensure!(failing > 0, "the permanent range must hit at least one fetch");
+    ensure!(
+        got == expected,
+        "skip-fetch stream must equal the clean run minus the failing fetches"
+    );
+    ensure!(
+        s.degraded_fetches == failing,
+        "degraded_fetches must count exactly the failing fetches \
+         (got {}, expected {failing})",
+        s.degraded_fetches
+    );
+    println!(
+        "skip-fetch degraded {failing} of {} fetches; surviving stream identical",
+        plan.n_fetches()
+    );
+
+    if smoke {
+        println!(
+            "\nchaos smoke OK: {} recovered cells byte-identical, exhausted budget \
+             typed, skip-fetch exact",
+            points.len()
+        );
+    }
+
+    let mut body = Json::obj();
+    body.set("experiment", Json::Str("chaos".into()))
+        .set("block", Json::Num(b as f64))
+        .set("fetch_factor", Json::Num(f as f64))
+        .set("workers", Json::Num(workers as f64))
+        .set("seed_schema", Json::Str(schema.as_str().into()))
+        .set("degraded_fetches", Json::Num(failing as f64))
+        .set("sweep", Json::Arr(points));
+    write_result(&cfg.results_dir, "chaos", body)?;
     Ok(())
 }
 

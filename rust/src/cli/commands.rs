@@ -161,6 +161,7 @@ pub fn train(args: &Args) -> Result<()> {
     tc.loader.cache = cache;
     tc.loader.io = io;
     tc.loader.workers = args.workers_config(cfg.workers)?;
+    tc.loader.resilience = args.resilience_config(cfg.resilience)?;
     // Checkpoint/resume: flags override the `[resume]` config table. An
     // empty config path means "off" unless --checkpoint is given.
     tc.resume.checkpoint_path = match args.flags.get("checkpoint") {

@@ -2,10 +2,10 @@
 //! disk-model overrides shared by the CLI, benches and examples.
 //!
 //! The loader knobs are the **same typed sub-configs the builder takes**
-//! ([`WorkerConfig`], [`CacheConfig`], [`IoConfig`] from
-//! `crate::coordinator`), parsed from `[workers]` / `[cache]` / `[io]`
-//! TOML tables plus a `[sampling]` table for batch size, fetch factor and
-//! seed. [`AppConfig::defaults_toml`] renders the canonical defaults from
+//! ([`WorkerConfig`], [`CacheConfig`], [`IoConfig`], [`ResilienceConfig`]
+//! from `crate::coordinator`), parsed from `[workers]` / `[cache]` /
+//! `[io]` / `[resilience]` TOML tables plus a `[sampling]` table for
+//! batch size, fetch factor and seed. [`AppConfig::defaults_toml`] renders the canonical defaults from
 //! the very same `Default` impls, so code, docs and
 //! `configs/default.toml` cannot drift (tests assert the shipped file
 //! parses identically).
@@ -14,7 +14,10 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{CacheConfig, IoConfig, SamplingConfig, SeedSchema, WorkerConfig};
+use crate::coordinator::{
+    CacheConfig, DegradeMode, IoConfig, ResilienceConfig, RetryPolicy, SamplingConfig,
+    SeedSchema, WorkerConfig,
+};
 use crate::store::iomodel::DiskModel;
 use crate::util::toml::TomlDoc;
 
@@ -58,6 +61,13 @@ pub struct AppConfig {
     /// (both execution-only — the stream is bit-identical), while
     /// `IoConfig::default()` stays serial/off for library callers.
     pub io: IoConfig,
+    /// `[resilience]` table: typed-fault retry policy + degrade mode.
+    /// Like `[io]`, the app default diverges from the library default on
+    /// purpose: CLI runs get `retry_max_attempts = 3` (transient I/O
+    /// faults are retried — execution-only, the recovered stream is
+    /// bit-identical), while `ResilienceConfig::default()` keeps retries
+    /// off so library callers see every backend error unless they opt in.
+    pub resilience: ResilienceConfig,
     /// `[resume]` table: checkpoint/resume policy for `scdata train`.
     pub resume: ResumeConfig,
 }
@@ -97,6 +107,13 @@ impl Default for AppConfig {
             io: IoConfig {
                 decode_threads: 0,          // auto: one per core
                 coalesce_gap_bytes: 64 << 10,
+            },
+            resilience: ResilienceConfig {
+                retry: RetryPolicy {
+                    max_attempts: 3, // app default: retry transient faults
+                    ..RetryPolicy::default()
+                },
+                ..ResilienceConfig::default()
             },
             resume: ResumeConfig::default(),
         }
@@ -156,6 +173,28 @@ impl AppConfig {
         cfg.cache.readahead = doc.bool_or("cache.readahead", cfg.cache.readahead);
         cfg.cache.locality_window =
             doc.usize_or("cache.locality_window", cfg.cache.locality_window);
+        // [resilience] table: retry policy + degrade mode
+        let r = &mut cfg.resilience;
+        r.retry.max_attempts =
+            doc.usize_or("resilience.retry_max_attempts", r.retry.max_attempts);
+        r.retry.backoff_base_ms =
+            doc.usize_or("resilience.retry_backoff_ms", r.retry.backoff_base_ms as usize) as u64;
+        r.retry.backoff_cap_ms = doc.usize_or(
+            "resilience.retry_backoff_cap_ms",
+            r.retry.backoff_cap_ms as usize,
+        ) as u64;
+        r.retry.deadline_ms =
+            doc.usize_or("resilience.retry_deadline_ms", r.retry.deadline_ms as usize) as u64;
+        if let Some(v) = doc.get("resilience.degrade") {
+            let s = v.as_str().context(
+                "resilience.degrade must be a string (\"fail-fast\" or \"skip-fetch\")",
+            )?;
+            r.degrade = DegradeMode::parse(s).with_context(|| {
+                format!(
+                    "unknown resilience.degrade {s:?} (expected \"fail-fast\" or \"skip-fetch\")"
+                )
+            })?;
+        }
         // [resume] table: train checkpoint policy
         let resume_path = doc.str_or("resume.path", &cfg.resume.path.to_string_lossy());
         cfg.resume.path = PathBuf::from(resume_path);
@@ -218,6 +257,13 @@ impl AppConfig {
              decode_threads = {dt}\n\
              coalesce_gap_bytes = {gap}\n\
              \n\
+             [resilience]\n\
+             retry_max_attempts = {rma}\n\
+             retry_backoff_ms = {rbb}\n\
+             retry_backoff_cap_ms = {rbc}\n\
+             retry_deadline_ms = {rdl}\n\
+             degrade = \"{deg}\"\n\
+             \n\
              [resume]\n\
              path = \"{rp}\"\n\
              every_steps = {rev}\n",
@@ -237,6 +283,11 @@ impl AppConfig {
             lw = d.cache.locality_window,
             dt = d.io.decode_threads,
             gap = d.io.coalesce_gap_bytes,
+            rma = d.resilience.retry.max_attempts,
+            rbb = d.resilience.retry.backoff_base_ms,
+            rbc = d.resilience.retry.backoff_cap_ms,
+            rdl = d.resilience.retry.deadline_ms,
+            deg = d.resilience.degrade.as_str(),
             rp = d.resume.path.display(),
             rev = d.resume.every_steps,
         )
@@ -258,6 +309,7 @@ mod tests {
         assert_eq!(a.workers, b.workers);
         assert_eq!(a.cache, b.cache);
         assert_eq!(a.io, b.io);
+        assert_eq!(a.resilience, b.resilience);
         assert_eq!(a.resume, b.resume);
     }
 
@@ -279,6 +331,13 @@ mod tests {
         assert_eq!(c.io.decode_threads, 0, "CLI default: auto decode");
         assert_eq!(c.io.coalesce_gap_bytes, 64 << 10, "CLI default: coalescing on");
         assert_eq!(c.batch_size, SamplingConfig::default().batch_size);
+        assert_eq!(c.resilience.retry.max_attempts, 3, "CLI default: retries on");
+        assert_eq!(
+            ResilienceConfig::default().retry.max_attempts,
+            1,
+            "library default: every backend error surfaces"
+        );
+        assert_eq!(c.resilience.degrade, DegradeMode::FailFast);
         assert_eq!(c.seed_schema, SeedSchema::V2, "CLI default: parallel finish");
         assert_eq!(
             SamplingConfig::default().seed_schema,
@@ -397,6 +456,33 @@ pipeline_epochs = 2
         let d = AppConfig::default();
         assert_eq!(d.resume.path, PathBuf::new());
         assert_eq!(d.resume.every_steps, 0);
+    }
+
+    #[test]
+    fn resilience_table_parses() {
+        let c = AppConfig::from_toml(
+            r#"
+[resilience]
+retry_max_attempts = 5
+retry_backoff_ms = 2
+retry_backoff_cap_ms = 250
+retry_deadline_ms = 30000
+degrade = "skip-fetch"
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.resilience.retry.max_attempts, 5);
+        assert_eq!(c.resilience.retry.backoff_base_ms, 2);
+        assert_eq!(c.resilience.retry.backoff_cap_ms, 250);
+        assert_eq!(c.resilience.retry.deadline_ms, 30_000);
+        assert_eq!(c.resilience.degrade, DegradeMode::SkipFetch);
+        // Unknown degrade spellings are rejected loudly, like seed_schema:
+        // silently falling back to fail-fast would mask the operator's
+        // intent to keep streaming through dead shards.
+        let err = AppConfig::from_toml("[resilience]\ndegrade = \"best-effort\"\n").unwrap_err();
+        assert!(err.to_string().contains("degrade"), "{err}");
+        let err = AppConfig::from_toml("[resilience]\ndegrade = 1\n").unwrap_err();
+        assert!(err.to_string().contains("string"), "{err}");
     }
 
     #[test]

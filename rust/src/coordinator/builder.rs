@@ -235,6 +235,103 @@ impl Default for IoConfig {
     }
 }
 
+/// Retry policy for failed `fetch_rows` calls (`[resilience]` table;
+/// `--retry-max-attempts` / `--retry-backoff-ms` / `--retry-backoff-cap-ms`
+/// / `--retry-deadline-ms`).
+///
+/// Execution-only: a retried transient failure lands in the reorder
+/// buffer exactly as if it never failed, so the emitted minibatch stream
+/// is bit-identical to the fault-free run (`tests/determinism.rs`). Only
+/// faults the taxonomy classifies retryable
+/// ([`FaultKind::is_retryable`](crate::store::fault::FaultKind)) are
+/// retried; anything `Permanent` fails immediately.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts per fetch (first try included). 1 disables retries
+    /// — the library default, so embedders opt in; the app config's
+    /// `[resilience]` table defaults to 3 (the same documented divergence
+    /// as `[io]`). Must be ≥ 1 (validated at `build()`).
+    pub max_attempts: usize,
+    /// First backoff sleep, milliseconds (decorrelated jitter: each sleep
+    /// is uniform in `[base, prev*3]`, capped).
+    pub backoff_base_ms: u64,
+    /// Backoff ceiling, milliseconds.
+    pub backoff_cap_ms: u64,
+    /// Per-fetch deadline across all attempts, milliseconds; once
+    /// exceeded no further retry is scheduled (the last error surfaces,
+    /// annotated as a timeout). 0 = no deadline.
+    pub deadline_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 1,
+            backoff_base_ms: 10,
+            backoff_cap_ms: 1_000,
+            deadline_ms: 0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    pub fn enabled(&self) -> bool {
+        self.max_attempts > 1
+    }
+}
+
+/// What to do with a fetch whose failure survives the retry budget.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DegradeMode {
+    /// Deliver one typed in-order `Err` item and end the epoch stream;
+    /// dropping the iterator cancels the generation cleanly. The default:
+    /// training should not silently lose data.
+    #[default]
+    FailFast,
+    /// Drop the failed fetch and continue the epoch with loud accounting
+    /// (`LoadStats::degraded_fetches`, fault-class counters). The
+    /// emitted stream then *differs* from the clean run by exactly the
+    /// skipped fetch's minibatches — subsequent fetches still match
+    /// bit-for-bit (the v1 shuffle stream is fast-forwarded past the
+    /// hole). Checkpoints taken after a skip describe the degraded
+    /// stream, not the clean one.
+    SkipFetch,
+}
+
+impl DegradeMode {
+    /// Parse the config/CLI spelling (`"fail-fast"` / `"skip-fetch"`).
+    pub fn parse(s: &str) -> Option<DegradeMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "fail-fast" | "fail_fast" | "failfast" => Some(DegradeMode::FailFast),
+            "skip-fetch" | "skip_fetch" | "skipfetch" => Some(DegradeMode::SkipFetch),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DegradeMode::FailFast => "fail-fast",
+            DegradeMode::SkipFetch => "skip-fetch",
+        }
+    }
+}
+
+impl fmt::Display for DegradeMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Fault-tolerance sub-config: the retry policy plus the degradation
+/// mode for unrecoverable faults. Execution-only in recovered runs, and
+/// therefore excluded from the resume fingerprint — a checkpoint taken
+/// with retries off resumes fine with retries on.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResilienceConfig {
+    pub retry: RetryPolicy,
+    pub degrade: DegradeMode,
+}
+
 /// A misconfiguration caught at [`ScDatasetBuilder::build`] time. Every
 /// variant names the offending knob(s) and the fix, instead of the silent
 /// no-op or late runtime failure the flat config allowed.
@@ -281,6 +378,13 @@ pub enum BuildError {
         manifest: String,
         config: String,
     },
+    /// `resilience.retry.max_attempts == 0`: the policy counts total
+    /// attempts, so even "retries off" needs the one initial attempt.
+    ZeroRetryAttempts,
+    /// The executor could not spawn one of its worker threads (OS
+    /// resource exhaustion). Already-spawned workers were shut down and
+    /// joined before this error was returned.
+    WorkerSpawn { workers: usize, error: String },
 }
 
 impl fmt::Display for BuildError {
@@ -347,7 +451,20 @@ impl fmt::Display for BuildError {
                      {manifest} in the manifest but {config} here; resume needs the \
                      same stream-identity config (seed, seed_schema, strategy, \
                      batch/fetch geometry, ddp rank/world) the checkpoint was taken \
-                     under — worker, cache, and io knobs may differ freely"
+                     under — worker, cache, io, and resilience knobs may differ freely"
+                )
+            }
+            BuildError::ZeroRetryAttempts => {
+                write!(
+                    f,
+                    "resilience.retry.max_attempts must be ≥ 1 (attempts count the \
+                     first try; 1 disables retries)"
+                )
+            }
+            BuildError::WorkerSpawn { workers, error } => {
+                write!(
+                    f,
+                    "failed to spawn executor worker thread ({workers} requested): {error}"
                 )
             }
         }
@@ -432,6 +549,9 @@ impl LoaderConfig {
                     column: col.clone(),
                 });
             }
+        }
+        if self.resilience.retry.max_attempts == 0 {
+            return Err(BuildError::ZeroRetryAttempts);
         }
         Ok(())
     }
@@ -555,6 +675,26 @@ impl ScDatasetBuilder {
         self
     }
 
+    /// Fault tolerance: retry policy + degradation mode (see
+    /// [`ResilienceConfig`]). Execution-only in recovered runs — a
+    /// retried transient fault leaves the emitted stream bit-identical.
+    pub fn resilience(mut self, resilience: ResilienceConfig) -> ScDatasetBuilder {
+        self.cfg.resilience = resilience;
+        self
+    }
+
+    /// Shorthand for setting just the retry policy.
+    pub fn retry(mut self, retry: RetryPolicy) -> ScDatasetBuilder {
+        self.cfg.resilience.retry = retry;
+        self
+    }
+
+    /// Shorthand for setting just the degradation mode.
+    pub fn degrade(mut self, degrade: DegradeMode) -> ScDatasetBuilder {
+        self.cfg.resilience.degrade = degrade;
+        self
+    }
+
     /// Install the paper's `fetch_transform`: runs **once per fetched
     /// block-batch**, before the shuffled split into minibatches — the
     /// natural place for normalization or tokenization over `m·f` rows at
@@ -589,7 +729,7 @@ impl ScDatasetBuilder {
     /// Validate the assembled configuration and construct the dataset.
     pub fn build(self) -> Result<ScDataset, BuildError> {
         self.cfg.validate(self.backend.as_ref())?;
-        Ok(ScDataset::with_hooks(self.backend, self.cfg, self.hooks))
+        ScDataset::with_hooks(self.backend, self.cfg, self.hooks)
     }
 }
 
@@ -705,9 +845,18 @@ mod tests {
             .build()
             .unwrap_err();
         assert_eq!(err, BuildError::ZeroCacheBlockRows);
-        let err = ScDataset::builder(b).in_flight(0).build().unwrap_err();
+        let err = ScDataset::builder(b.clone()).in_flight(0).build().unwrap_err();
         assert_eq!(err, BuildError::ZeroInFlight);
         assert!(err.to_string().contains("prefetch_depth"), "{err}");
+        let err = ScDataset::builder(b)
+            .retry(RetryPolicy {
+                max_attempts: 0,
+                ..RetryPolicy::default()
+            })
+            .build()
+            .unwrap_err();
+        assert_eq!(err, BuildError::ZeroRetryAttempts);
+        assert!(err.to_string().contains("max_attempts"), "{err}");
     }
 
     #[test]
@@ -771,9 +920,31 @@ mod tests {
         assert_eq!(cfg.ddp, DdpConfig::default());
         assert_eq!(cfg.cache, CacheConfig::default());
         assert_eq!(cfg.io, IoConfig::default());
+        assert_eq!(cfg.resilience, ResilienceConfig::default());
         // The LIBRARY default must stay v1: embedders who upgrade the
         // crate keep their historical streams until they opt in.
         assert_eq!(cfg.sampling.seed_schema, SeedSchema::V1);
+        // The LIBRARY default keeps retries off (the app config's
+        // [resilience] table turns them on — same divergence as [io]).
+        assert!(!cfg.resilience.retry.enabled());
+        assert_eq!(cfg.resilience.degrade, DegradeMode::FailFast);
+    }
+
+    #[test]
+    fn degrade_mode_parses_and_round_trips() {
+        for (s, want) in [
+            ("fail-fast", DegradeMode::FailFast),
+            ("FAIL_FAST", DegradeMode::FailFast),
+            (" skip-fetch ", DegradeMode::SkipFetch),
+            ("skipfetch", DegradeMode::SkipFetch),
+        ] {
+            assert_eq!(DegradeMode::parse(s), Some(want), "{s:?}");
+        }
+        assert_eq!(DegradeMode::parse("drop"), None);
+        for mode in [DegradeMode::FailFast, DegradeMode::SkipFetch] {
+            assert_eq!(DegradeMode::parse(mode.as_str()), Some(mode));
+            assert_eq!(mode.to_string(), mode.as_str());
+        }
     }
 
     #[test]

@@ -77,8 +77,9 @@ use crate::store::cache::CachingBackend;
 use crate::store::Backend;
 use crate::util::rng::domains;
 
+use super::builder::BuildError;
 use super::fetch::{
-    execute_fetch, finish_fetch, ExecutedFetch, FetchTransform, FetchedChunk, Shuffle,
+    finish_fetch, ExecutedFetch, FetchRetry, FetchTransform, FetchedChunk, Shuffle,
 };
 use super::plan::EpochPlan;
 
@@ -103,6 +104,8 @@ pub(crate) struct ExecutorSettings {
     pub in_flight: usize,
     pub pipeline_epochs: usize,
     pub readahead: bool,
+    /// Retry policy + backoff-jitter seed for failed backend fetches.
+    pub retry: FetchRetry,
 }
 
 /// Everything a worker needs to run `finish_fetch` itself under
@@ -175,6 +178,9 @@ struct Completed {
     /// Wall-clock nanoseconds of the backend call (plus the worker-side
     /// finish under seed-schema v2); stats only.
     exec_ns: u64,
+    /// Wall-clock nanoseconds slept between retry attempts; stats only
+    /// (`LoadStats::retry_wait_ns`).
+    retry_wait_ns: u64,
 }
 
 /// Per-generation bookkeeping.
@@ -223,6 +229,7 @@ struct Shared {
     readahead: bool,
     in_flight: usize,
     pipeline_epochs: usize,
+    retry: FetchRetry,
     gen_builder: GenBuilder,
     /// `Some` = seed-schema v2: workers run `finish_fetch` themselves.
     finish: Option<FinishSpec>,
@@ -242,7 +249,7 @@ impl Executor {
         cache: Option<Arc<CachingBackend>>,
         gen_builder: GenBuilder,
         finish: Option<FinishSpec>,
-    ) -> Executor {
+    ) -> Result<Executor, BuildError> {
         let shared = Arc::new(Shared {
             state: Mutex::new(State::default()),
             work: Condvar::new(),
@@ -252,6 +259,7 @@ impl Executor {
             readahead: settings.readahead,
             in_flight: settings.in_flight,
             pipeline_epochs: settings.pipeline_epochs,
+            retry: settings.retry,
             gen_builder,
             finish,
         });
@@ -259,16 +267,32 @@ impl Executor {
         // zero-thread pool would hang its first consumer silently, so
         // fail loudly in every build profile (once-per-dataset cost).
         assert!(settings.workers > 0, "executor needs at least one worker");
-        let handles = (0..settings.workers)
-            .map(|w| {
-                let shared = shared.clone();
-                std::thread::Builder::new()
-                    .name(format!("scdata-exec-{w}"))
-                    .spawn(move || worker_loop(&shared))
-                    .expect("spawn executor worker")
-            })
-            .collect();
-        Executor { shared, handles }
+        let mut handles = Vec::with_capacity(settings.workers);
+        for w in 0..settings.workers {
+            let sh = shared.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("scdata-exec-{w}"))
+                .spawn(move || worker_loop(&sh));
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // OS thread exhaustion mid-spawn: shut down and join
+                    // the workers that did start before surfacing the
+                    // typed error — a half-built pool must not leak.
+                    shared.state.lock().unwrap().shutdown = true;
+                    shared.work.notify_all();
+                    shared.done.notify_all();
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(BuildError::WorkerSpawn {
+                        workers: settings.workers,
+                        error: e.to_string(),
+                    });
+                }
+            }
+        }
+        Ok(Executor { shared, handles })
     }
 
     /// Submit one epoch: adopt the matching speculative generation if one
@@ -430,8 +454,9 @@ pub(crate) struct GenHandle {
 
 impl GenHandle {
     /// Block until the next plan-order fetch is resident and take it.
-    /// Returns `None` once the generation is exhausted.
-    pub(crate) fn next_completed(&mut self) -> Option<(Result<ExecOutput>, u64)> {
+    /// Returns `None` once the generation is exhausted. The tuple is
+    /// `(result, exec_ns, retry_wait_ns)`.
+    pub(crate) fn next_completed(&mut self) -> Option<(Result<ExecOutput>, u64, u64)> {
         if self.next >= self.total {
             return None;
         }
@@ -448,7 +473,7 @@ impl GenHandle {
                 // Budget was released; also lets an idle worker start
                 // speculating once the queue drains.
                 self.shared.work.notify_all();
-                return Some((c.result, c.exec_ns));
+                return Some((c.result, c.exec_ns, c.retry_wait_ns));
             }
             if st.shutdown {
                 // Terminal by construction: the next call returns None
@@ -459,6 +484,7 @@ impl GenHandle {
                         "executor shut down while epoch was still streaming \
                          (ScDataset dropped before its EpochIter)"
                     )),
+                    0,
                     0,
                 ));
             }
@@ -686,30 +712,44 @@ fn worker_loop(shared: &Arc<Shared>) {
             }));
         }
         let t0 = std::time::Instant::now();
-        let result = match catch_unwind(AssertUnwindSafe(|| -> Result<ExecOutput> {
-            let ex = execute_fetch(&shared.backend, job.plan.fetch_indices(job.fetch_id))?;
-            match &shared.finish {
-                // Seed-schema v2: finish right here — the per-fetch RNG
-                // is pure in (seed, epoch, fetch_id), so this worker's
-                // shuffle/hook/gather is exactly what the delivery thread
-                // would have computed.
-                Some(spec) => Ok(ExecOutput::Finished(spec.finish(
+        let (result, retry_wait_ns) = match catch_unwind(AssertUnwindSafe(
+            || -> (Result<ExecOutput>, u64) {
+                // The retry layer wraps only the I/O half, so both seed
+                // schemas' streams are preserved under recovered faults.
+                let (res, wait_ns) = shared.retry.execute(
                     &shared.backend,
-                    ex,
+                    job.plan.fetch_indices(job.fetch_id),
                     job.epoch,
                     job.fetch_id,
-                )?)),
-                // Seed-schema v1: the sequential shuffle stream lives on
-                // the delivery thread; hand over the I/O half only.
-                None => Ok(ExecOutput::Executed(ex)),
-            }
-        })) {
-            Ok(r) => r,
-            Err(p) => Err(anyhow!(
-                "worker panicked while executing fetch {}: {}",
-                job.fetch_id,
-                panic_message(p.as_ref())
-            )),
+                );
+                let out = res.and_then(|ex| match &shared.finish {
+                    // Seed-schema v2: finish right here — the per-fetch
+                    // RNG is pure in (seed, epoch, fetch_id), so this
+                    // worker's shuffle/hook/gather is exactly what the
+                    // delivery thread would have computed.
+                    Some(spec) => Ok(ExecOutput::Finished(spec.finish(
+                        &shared.backend,
+                        ex,
+                        job.epoch,
+                        job.fetch_id,
+                    )?)),
+                    // Seed-schema v1: the sequential shuffle stream lives
+                    // on the delivery thread; hand over the I/O half only.
+                    None => Ok(ExecOutput::Executed(ex)),
+                });
+                (out, wait_ns)
+            },
+        )) {
+            Ok((r, w)) => (r, w),
+            Err(p) => (
+                Err(anyhow!(
+                    "worker panicked while executing fetch {} (epoch {}): {}",
+                    job.fetch_id,
+                    job.epoch,
+                    panic_message(p.as_ref())
+                )),
+                0,
+            ),
         };
         let exec_ns = t0.elapsed().as_nanos() as u64;
         // Phase 3 (locked): park the result (or discard it if canceled).
@@ -725,8 +765,14 @@ fn worker_loop(shared: &Arc<Shared>) {
             st.inflight -= 1;
             shared.work.notify_all();
         } else {
-            st.completed
-                .insert((job.gen, job.seq), Completed { result, exec_ns });
+            st.completed.insert(
+                (job.gen, job.seq),
+                Completed {
+                    result,
+                    exec_ns,
+                    retry_wait_ns,
+                },
+            );
         }
         drop(st);
         // Wakes the consumer (a completion), a canceler (executing
@@ -921,6 +967,7 @@ mod tests {
                     Err(e) => {
                         let msg = format!("{e:#}");
                         assert!(msg.contains("panicked"), "{msg}");
+                        assert!(msg.contains("(epoch 0)"), "panic context names the epoch: {msg}");
                         assert!(msg.contains("injected panic"), "{msg}");
                         saw_err = true;
                         break;
@@ -931,6 +978,63 @@ mod tests {
                 saw_err,
                 "{schema}: panic must surface as an Err item, not a hang/truncation"
             );
+        }
+    }
+
+    #[test]
+    fn transient_faults_recover_to_the_identical_stream() {
+        // Every fetch fails 1–2 times before succeeding; a retry budget
+        // covering the worst burst must reproduce the fault-free stream
+        // bit-for-bit, for both schemas and either executor shape.
+        use crate::store::fault::{FaultConfig, FaultInjectingBackend};
+        use super::super::builder::RetryPolicy;
+        let clean: Arc<dyn Backend> = Arc::new(SynthBackend::new(257, None));
+        for schema in [SeedSchema::V1, SeedSchema::V2] {
+            let expect = stream(
+                &ScDataset::new(clean.clone(), config_with_schema(0, 4, 0, schema)),
+                0,
+            );
+            for workers in [0usize, 3] {
+                let faulty: Arc<dyn Backend> = Arc::new(FaultInjectingBackend::new(
+                    Arc::new(SynthBackend::new(257, None)),
+                    FaultConfig {
+                        seed: 77,
+                        fault_rate: 1.0,
+                        max_failures: 2,
+                        ..FaultConfig::default()
+                    },
+                ));
+                let mut cfg = config_with_schema(workers, 4, 0, schema);
+                cfg.resilience.retry = RetryPolicy {
+                    max_attempts: 3, // covers the worst burst (max_failures + 1)
+                    backoff_base_ms: 0,
+                    backoff_cap_ms: 0, // zero-length sleeps: fast tests
+                    deadline_ms: 0,
+                };
+                let ds = ScDataset::new(faulty, cfg);
+                let mut iter = ds.epoch(0).unwrap();
+                let got: Vec<(Vec<u32>, CsrBatch)> = (&mut iter)
+                    .map(|mb| {
+                        let mb = mb.unwrap();
+                        (mb.rows, mb.x)
+                    })
+                    .collect();
+                assert_eq!(got, expect, "schema={schema} workers={workers}");
+                let s = iter.stats();
+                assert!(
+                    s.io.retries > 0,
+                    "schema={schema} workers={workers}: recovery must be visible"
+                );
+                assert_eq!(
+                    s.io.retries,
+                    s.io.faults_transient
+                        + s.io.faults_timeout
+                        + s.io.faults_corrupt
+                        + s.io.faults_permanent,
+                    "every retry was provoked by a classified fault"
+                );
+                assert_eq!(s.degraded_fetches, 0);
+            }
         }
     }
 

@@ -10,8 +10,11 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::store::fault::{self, IoFault};
 use crate::store::{Backend, BufferPool, CsrBatch, IoReport};
-use crate::util::rng::Rng;
+use crate::util::rng::{domains, Rng};
+
+use super::builder::RetryPolicy;
 
 /// Mutable view of one fetched block-batch, handed to a
 /// [`fetch_transform`] hook after the backend load and the line-9
@@ -160,11 +163,123 @@ pub fn execute_fetch(backend: &Arc<dyn Backend>, indices: &[u32]) -> Result<Exec
         positions[oi as usize] = (sorted.len() - 1) as u32;
     }
     let fetched = backend.fetch_rows(&sorted)?;
+    // A backend that silently returns fewer (or more) rows than requested
+    // would poison the position map and every downstream gather. Catch the
+    // short read here, typed as a corrupt-payload fault (retryable: a
+    // truncated read usually is transient truncation, and a retry either
+    // recovers or converts it into a permanent error at the source).
+    if fetched.x.n_rows != sorted.len() {
+        return Err(IoFault::corrupt(format!(
+            "backend '{}' returned {} rows for {} requested (short read)",
+            backend.name(),
+            fetched.x.n_rows,
+            sorted.len()
+        ))
+        .into());
+    }
     Ok(ExecutedFetch {
         sorted,
         positions,
         fetched,
     })
+}
+
+/// The coordinator's retry layer around [`execute_fetch`] — the I/O half
+/// of a fetch only, so both seed schemas' emitted streams are preserved:
+/// a fetch that fails transiently and then succeeds lands in the reorder
+/// buffer exactly as if it never failed.
+///
+/// Faults are classified through the typed taxonomy
+/// ([`fault::classify`]); only retryable kinds ever re-attempt. Backoff
+/// is decorrelated jitter — each sleep uniform in `[base, prev·3]`,
+/// capped — drawn from [`domains::retry_backoff`], pure in
+/// `(seed, epoch, fetch_id, attempt)` so two workers retrying different
+/// fetches can never correlate. Recovered faults are folded into the
+/// successful fetch's [`IoReport`] (`retries` + per-class counters:
+/// deterministic under a deterministic fault schedule); wall-clock
+/// backoff time is returned separately for `LoadStats::retry_wait_ns`
+/// (never stored per-fetch, which must stay worker-count-invariant).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct FetchRetry {
+    pub policy: RetryPolicy,
+    /// The sampling seed — only used to derive backoff jitter, in its own
+    /// RNG domain, so retry draws cannot correlate with any shuffle.
+    pub seed: u64,
+}
+
+impl FetchRetry {
+    /// Execute one fetch under the retry policy. Returns the result plus
+    /// the wall-clock nanoseconds spent sleeping between attempts.
+    pub(crate) fn execute(
+        &self,
+        backend: &Arc<dyn Backend>,
+        indices: &[u32],
+        epoch: u64,
+        fetch_id: usize,
+    ) -> (Result<ExecutedFetch>, u64) {
+        let p = &self.policy;
+        if p.max_attempts <= 1 {
+            // Retries off (the library default): zero overhead, identical
+            // error surface to the pre-resilience loader.
+            return (execute_fetch(backend, indices), 0);
+        }
+        let mut rng = domains::retry_backoff(self.seed, epoch, fetch_id);
+        let deadline = (p.deadline_ms > 0).then(|| {
+            std::time::Instant::now() + std::time::Duration::from_millis(p.deadline_ms)
+        });
+        let mut wait_ns = 0u64;
+        // Recovered-fault accounting, folded into the eventual success's
+        // IoReport so it rides the normal delivery-time stats plumbing.
+        let mut folded = IoReport::default();
+        let mut prev_ms = p.backoff_base_ms;
+        loop {
+            match execute_fetch(backend, indices) {
+                Ok(mut ex) => {
+                    ex.fetched.io.add(&folded);
+                    return (Ok(ex), wait_ns);
+                }
+                Err(e) => {
+                    let kind = fault::classify(&e);
+                    let attempts = folded.retries + 1;
+                    let budget_left = (attempts as usize) < p.max_attempts;
+                    let in_deadline =
+                        deadline.is_none_or(|d| std::time::Instant::now() < d);
+                    if !kind.is_retryable() || !budget_left || !in_deadline {
+                        let reason = if !kind.is_retryable() {
+                            format!("{kind} faults are not retryable")
+                        } else if !budget_left {
+                            format!("retry budget of {} attempts exhausted", p.max_attempts)
+                        } else {
+                            format!("per-fetch deadline of {} ms exceeded", p.deadline_ms)
+                        };
+                        return (
+                            Err(e.context(format!(
+                                "fetch {fetch_id} (epoch {epoch}) failed after \
+                                 {attempts} attempt(s): {reason}"
+                            ))),
+                            wait_ns,
+                        );
+                    }
+                    folded.retries += 1;
+                    folded.count_fault(kind);
+                    // Decorrelated jitter: uniform in [base, prev·3],
+                    // capped. cap = 0 forces zero-length sleeps (tests).
+                    let hi = prev_ms
+                        .saturating_mul(3)
+                        .min(p.backoff_cap_ms)
+                        .max(p.backoff_base_ms.min(p.backoff_cap_ms));
+                    let lo = p.backoff_base_ms.min(hi);
+                    let sleep_ms = lo + rng.below(hi - lo + 1);
+                    prev_ms = sleep_ms.max(1);
+                    if sleep_ms > 0 {
+                        let t0 = std::time::Instant::now();
+                        std::thread::sleep(std::time::Duration::from_millis(sleep_ms));
+                        wait_ns += t0.elapsed().as_nanos() as u64;
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Algorithm 1 line 9: set up the in-memory reshuffle over an executed

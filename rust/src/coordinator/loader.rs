@@ -94,17 +94,17 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::store::cache::{CacheConfig as BlockCacheConfig, CacheStats, CachingBackend};
-use crate::store::{Backend, CsrBatch, IoPipeline, IoReport};
+use crate::store::{fault, Backend, CsrBatch, IoPipeline, IoReport};
 use crate::util::json::Json;
 use crate::util::rng::{domains, Rng};
 
 use super::builder::{
-    BuildError, CacheConfig, DdpConfig, IoConfig, SamplingConfig, ScDatasetBuilder, SeedSchema,
-    WorkerConfig,
+    BuildError, CacheConfig, DdpConfig, DegradeMode, IoConfig, ResilienceConfig, SamplingConfig,
+    ScDatasetBuilder, SeedSchema, WorkerConfig,
 };
 use super::ddp::assigned_fetches;
 use super::exec::{ExecOutput, Executor, ExecutorSettings, FinishSpec, GenHandle, GenPlan};
-use super::fetch::{batches_in_fetch, execute_fetch, finish_fetch, FetchTransform, Shuffle};
+use super::fetch::{batches_in_fetch, finish_fetch, FetchRetry, FetchTransform, Shuffle};
 use super::plan::{build_plan, locality_schedule, EpochPlan, Strategy};
 use super::resume::{self, BufferResume, LoaderCheckpoint, SplitResume};
 
@@ -165,6 +165,8 @@ pub struct LoaderConfig {
     pub cache: CacheConfig,
     /// Execution-only decode/coalescing pipeline.
     pub io: IoConfig,
+    /// Fault tolerance: fetch retry policy + degradation mode.
+    pub resilience: ResilienceConfig,
 }
 
 impl Default for LoaderConfig {
@@ -176,6 +178,7 @@ impl Default for LoaderConfig {
             ddp: DdpConfig::default(),
             cache: CacheConfig::default(),
             io: IoConfig::default(),
+            resilience: ResilienceConfig::default(),
         }
     }
 }
@@ -226,6 +229,16 @@ pub struct LoadStats {
     /// fetch — blocked on the executor's reorder buffer (pool mode), or
     /// executing fetches synchronously (`num_workers == 0`).
     pub deliver_wait_ns: u64,
+    /// Wall-clock ns slept in retry backoff across all fetches (whichever
+    /// thread executed them). Kept here rather than in the per-fetch
+    /// [`IoReport`]s, which must stay worker-count-invariant — wall
+    /// clocks are not.
+    pub retry_wait_ns: u64,
+    /// Fetches dropped by [`DegradeMode::SkipFetch`] after their retry
+    /// budget was exhausted. Always 0 under
+    /// [`DegradeMode::FailFast`], where the first unrecovered fault ends
+    /// the epoch as an `Err` item instead.
+    pub degraded_fetches: u64,
 }
 
 /// The loader.
@@ -322,16 +335,19 @@ impl ScDataset {
 
     /// Construct without validation or hooks. Prefer [`ScDataset::builder`];
     /// this is the internal escape hatch the builder and this module's
-    /// tests use.
+    /// tests use. Panics only if the OS refuses to spawn the executor's
+    /// worker threads — the builder path surfaces that as a typed
+    /// [`BuildError::WorkerSpawn`] instead.
     pub fn new(backend: Arc<dyn Backend>, cfg: LoaderConfig) -> ScDataset {
         Self::with_hooks(backend, cfg, Hooks::default())
+            .expect("failed to spawn executor workers")
     }
 
     pub(crate) fn with_hooks(
         backend: Arc<dyn Backend>,
         cfg: LoaderConfig,
         hooks: Hooks,
-    ) -> ScDataset {
+    ) -> Result<ScDataset, BuildError> {
         let cache = if cfg.cache.enabled() {
             Some(Arc::new(CachingBackend::new(
                 backend.clone(),
@@ -363,6 +379,10 @@ impl ScDataset {
                     in_flight: cfg.workers.in_flight,
                     pipeline_epochs: cfg.workers.pipeline_epochs,
                     readahead: cfg.cache.readahead && cache.is_some(),
+                    retry: FetchRetry {
+                        policy: cfg.resilience.retry,
+                        seed: cfg.sampling.seed,
+                    },
                 },
                 backend.clone(),
                 cache.clone(),
@@ -370,19 +390,19 @@ impl ScDataset {
                     build_gen_plan(&gb_backend, &sampling, ddp, cache_cfg, epoch)
                 }),
                 finish_spec(&cfg, &hooks),
-            ))
+            )?)
         } else {
             None
         };
         let fingerprint = resume::config_fingerprint(&cfg, backend.n_rows());
-        ScDataset {
+        Ok(ScDataset {
             backend,
             cache,
             cfg,
             hooks,
             exec,
             fingerprint,
-        }
+        })
     }
 
     pub fn config(&self) -> &LoaderConfig {
@@ -639,6 +659,10 @@ impl ScDataset {
                     // derivation a pool worker would use — this is what
                     // keeps `num_workers == 0` on the v2 stream.
                     finish: finish_spec(&self.cfg, &self.hooks),
+                    retry: FetchRetry {
+                        policy: self.cfg.resilience.retry,
+                        seed: sampling.seed,
+                    },
                     epoch,
                 })
             }
@@ -655,6 +679,28 @@ impl ScDataset {
                 rng = resume::ffwd_stream_rng(rng, &sr.skipped_lens);
             }
         }
+        // SkipFetch under v1-with-shuffle: a skipped fetch must still burn
+        // its draws from the sequential shuffle stream (same mechanism as
+        // `resume::ffwd_stream_rng`), or every later fetch would shuffle
+        // differently than the clean run. That needs each delivered
+        // fetch's row count up front — computed only when the mode is on.
+        let fetch_lens: Option<Vec<usize>> = if self.cfg.resilience.degrade
+            == DegradeMode::SkipFetch
+            && sampling.seed_schema == SeedSchema::V1
+            && shuffles_in_fetch(&sampling.strategy)
+        {
+            let gp =
+                build_gen_plan(&self.backend, sampling, self.cfg.ddp, self.cfg.cache, epoch)?;
+            let start = split_at.as_ref().map_or(0, |sr| sr.start_seq);
+            Some(
+                gp.fetch_ids[start..]
+                    .iter()
+                    .map(|&i| gp.plan.fetch_len(i))
+                    .collect(),
+            )
+        } else {
+            None
+        };
         let stream = DeliverStream {
             source,
             backend: self.backend.clone(),
@@ -664,6 +710,9 @@ impl ScDataset {
             fetch_transform: self.hooks.fetch_transform.clone(),
             stats: stats.clone(),
             failed: false,
+            degrade: self.cfg.resilience.degrade,
+            fetch_lens,
+            deliver_seq: 0,
         };
         let inner: Box<dyn Iterator<Item = Result<Minibatch>> + Send> =
             match sampling.strategy {
@@ -780,15 +829,16 @@ impl<I: Iterator<Item = Result<Minibatch>>> Iterator for BatchHookIter<I> {
 
 /// Where completed fetches come from: the caller's thread (`Inline`,
 /// `num_workers == 0`) or the persistent executor (`Pool`). Both yield
-/// `(ExecOutput, exec_ns)` strictly in plan order — raw executed
-/// fetches under seed-schema v1, fully *finished* chunks under v2.
+/// `(ExecOutput, exec_ns, retry_wait_ns)` strictly in plan order — raw
+/// executed fetches under seed-schema v1, fully *finished* chunks under
+/// v2.
 enum FetchSource {
     Inline(InlineSource),
     Pool(GenHandle),
 }
 
 impl FetchSource {
-    fn next_completed(&mut self) -> Option<(Result<ExecOutput>, u64)> {
+    fn next_completed(&mut self) -> Option<(Result<ExecOutput>, u64, u64)> {
         match self {
             FetchSource::Inline(s) => s.next_completed(),
             FetchSource::Pool(h) => h.next_completed(),
@@ -816,16 +866,19 @@ struct InlineSource {
     /// Executed-but-undelivered fetches (≤ window + 1 entries). Failures
     /// park here too, keyed by the *failing* fetch — so an error
     /// surfaces at its own plan position, exactly like the pool path.
-    pending: HashMap<usize, (Result<ExecOutput>, u64)>,
+    pending: HashMap<usize, (Result<ExecOutput>, u64, u64)>,
     /// Seed-schema v2: finish each fetch right after executing it, with
     /// the per-fetch RNG fork — the same derivation a pool worker uses.
     /// `None` under v1 (the delivery stream finishes sequentially).
     finish: Option<FinishSpec>,
+    /// Retry policy + backoff-jitter seed — the identical wrapper a pool
+    /// worker uses, so recovery behavior is worker-count-invariant.
+    retry: FetchRetry,
     epoch: u64,
 }
 
 impl InlineSource {
-    fn next_completed(&mut self) -> Option<(Result<ExecOutput>, u64)> {
+    fn next_completed(&mut self) -> Option<(Result<ExecOutput>, u64, u64)> {
         let id = *self.fetch_ids.get(self.next_deliver)?;
         self.next_deliver += 1;
         // Run scheduled fetches until the one to deliver is resident.
@@ -842,22 +895,26 @@ impl InlineSource {
                 }
             }
             let t0 = std::time::Instant::now();
-            let result = execute_fetch(&self.backend, self.plan.fetch_indices(eid)).and_then(
-                |ex| match &self.finish {
-                    Some(spec) => Ok(ExecOutput::Finished(spec.finish(
-                        &self.backend,
-                        ex,
-                        self.epoch,
-                        eid,
-                    )?)),
-                    None => Ok(ExecOutput::Executed(ex)),
-                },
+            let (res, retry_wait_ns) = self.retry.execute(
+                &self.backend,
+                self.plan.fetch_indices(eid),
+                self.epoch,
+                eid,
             );
+            let result = res.and_then(|ex| match &self.finish {
+                Some(spec) => Ok(ExecOutput::Finished(spec.finish(
+                    &self.backend,
+                    ex,
+                    self.epoch,
+                    eid,
+                )?)),
+                None => Ok(ExecOutput::Executed(ex)),
+            });
             self.pending
-                .insert(eid, (result, t0.elapsed().as_nanos() as u64));
+                .insert(eid, (result, t0.elapsed().as_nanos() as u64, retry_wait_ns));
         }
-        let (result, ns) = self.pending.remove(&id).expect("executed above");
-        Some((result, ns))
+        let (result, ns, retry_wait_ns) = self.pending.remove(&id).expect("executed above");
+        Some((result, ns, retry_wait_ns))
     }
 }
 
@@ -879,63 +936,105 @@ struct DeliverStream {
     stats: Arc<Mutex<LoadStats>>,
     /// An `Err` item ends the stream.
     failed: bool,
+    /// What to do with a fetch whose failure survived the retry budget.
+    degrade: DegradeMode,
+    /// `Some` only for SkipFetch × v1 × in-fetch shuffle: row count of
+    /// each delivered fetch (delivery order, resume offset applied), so a
+    /// skipped fetch's shuffle draws can be burned from the sequential
+    /// stream.
+    fetch_lens: Option<Vec<usize>>,
+    /// Fetches taken from the source so far (indexes `fetch_lens`).
+    deliver_seq: usize,
 }
 
 impl DeliverStream {
     fn next_chunk(&mut self) -> Option<Result<super::fetch::FetchedChunk>> {
-        if self.failed {
-            return None;
-        }
-        let wait_t0 = std::time::Instant::now();
-        let (result, exec_ns) = self.source.next_completed()?;
-        let wait_ns = wait_t0.elapsed().as_nanos() as u64;
-        let out = match result {
-            Err(e) => {
-                self.failed = true;
-                return Some(Err(e));
+        loop {
+            if self.failed {
+                return None;
             }
-            Ok(out) => out,
-        };
-        match out {
-            // v2: finished on whatever thread executed it — bookkeeping
-            // is all that's left for the delivery thread.
-            ExecOutput::Finished(chunk) => {
-                let mut s = self.stats.lock().unwrap();
-                s.fetches += 1;
-                s.io.add(&chunk.io);
-                s.fetch_reports.push(chunk.io);
-                s.real_fetch_ns += exec_ns;
-                s.deliver_wait_ns += wait_ns;
-                drop(s);
-                Some(Ok(chunk))
-            }
-            // v1: consume the sequential shuffle stream here, in plan
-            // order — the schema's reproducibility contract.
-            ExecOutput::Executed(ex) => {
-                {
+            let wait_t0 = std::time::Instant::now();
+            let (result, exec_ns, retry_wait_ns) = self.source.next_completed()?;
+            let wait_ns = wait_t0.elapsed().as_nanos() as u64;
+            let seq = self.deliver_seq;
+            self.deliver_seq += 1;
+            let out = match result {
+                Err(e) => {
+                    // Terminal failure (retries exhausted or not
+                    // retryable): classify it into the fault counters,
+                    // then fail fast or degrade.
+                    let kind = fault::classify(&e);
+                    let mut s = self.stats.lock().unwrap();
+                    s.io.count_fault(kind);
+                    s.retry_wait_ns += retry_wait_ns;
+                    s.deliver_wait_ns += wait_ns;
+                    match self.degrade {
+                        DegradeMode::FailFast => {
+                            drop(s);
+                            self.failed = true;
+                            return Some(Err(e));
+                        }
+                        DegradeMode::SkipFetch => {
+                            s.degraded_fetches += 1;
+                            drop(s);
+                            // Burn the skipped fetch's draws from the v1
+                            // sequential shuffle stream so every later
+                            // fetch shuffles exactly as in the clean run
+                            // (same mechanism as resume's ffwd).
+                            if let Some(lens) = &self.fetch_lens {
+                                let mut scratch: Vec<u32> =
+                                    (0..lens[seq] as u32).collect();
+                                self.rng.shuffle(&mut scratch);
+                            }
+                            continue;
+                        }
+                    }
+                }
+                Ok(out) => out,
+            };
+            return match out {
+                // v2: finished on whatever thread executed it —
+                // bookkeeping is all that's left for the delivery thread.
+                ExecOutput::Finished(chunk) => {
                     let mut s = self.stats.lock().unwrap();
                     s.fetches += 1;
-                    s.io.add(&ex.fetched.io);
-                    s.fetch_reports.push(ex.fetched.io);
+                    s.io.add(&chunk.io);
+                    s.fetch_reports.push(chunk.io);
                     s.real_fetch_ns += exec_ns;
                     s.deliver_wait_ns += wait_ns;
+                    s.retry_wait_ns += retry_wait_ns;
+                    drop(s);
+                    Some(Ok(chunk))
                 }
-                let finish_t0 = std::time::Instant::now();
-                let chunk = finish_fetch(
-                    ex,
-                    &self.backend,
-                    &self.label_cols,
-                    if self.shuffle_in_fetch {
-                        Shuffle::Seq(&mut self.rng)
-                    } else {
-                        Shuffle::Off
-                    },
-                    self.fetch_transform.as_ref(),
-                );
-                self.stats.lock().unwrap().deliver_finish_ns +=
-                    finish_t0.elapsed().as_nanos() as u64;
-                Some(chunk)
-            }
+                // v1: consume the sequential shuffle stream here, in plan
+                // order — the schema's reproducibility contract.
+                ExecOutput::Executed(ex) => {
+                    {
+                        let mut s = self.stats.lock().unwrap();
+                        s.fetches += 1;
+                        s.io.add(&ex.fetched.io);
+                        s.fetch_reports.push(ex.fetched.io);
+                        s.real_fetch_ns += exec_ns;
+                        s.deliver_wait_ns += wait_ns;
+                        s.retry_wait_ns += retry_wait_ns;
+                    }
+                    let finish_t0 = std::time::Instant::now();
+                    let chunk = finish_fetch(
+                        ex,
+                        &self.backend,
+                        &self.label_cols,
+                        if self.shuffle_in_fetch {
+                            Shuffle::Seq(&mut self.rng)
+                        } else {
+                            Shuffle::Off
+                        },
+                        self.fetch_transform.as_ref(),
+                    );
+                    self.stats.lock().unwrap().deliver_finish_ns +=
+                        finish_t0.elapsed().as_nanos() as u64;
+                    Some(chunk)
+                }
+            };
         }
     }
 }
@@ -2049,10 +2148,103 @@ mod tests {
             ),
             "{err}"
         );
-        // Execution-only knobs are NOT part of the stream identity.
+        // Execution-only knobs are NOT part of the stream identity —
+        // including the resilience sub-config: a checkpoint taken with
+        // retries off resumes fine with retries (or SkipFetch) on.
         let mut cfg = ds.config().clone();
         cfg.workers.num_workers = 2;
         cfg.workers.in_flight = 2;
+        cfg.resilience.retry.max_attempts = 5;
+        cfg.resilience.degrade = DegradeMode::SkipFetch;
         assert!(ScDataset::new(b, cfg).resume(&ckpt).is_ok());
+    }
+
+    #[test]
+    fn skip_fetch_drops_failed_fetches_and_preserves_the_tail() {
+        // DegradeMode::SkipFetch: fetches hitting a permanently-failing
+        // row range are dropped; every other fetch's minibatches must
+        // match the clean run bit-for-bit — under v1 that requires the
+        // skipped fetches' shuffle draws to be burned from the sequential
+        // stream, which is exactly what this pins down.
+        use super::super::builder::RetryPolicy;
+        use crate::store::fault::{FaultConfig, FaultInjectingBackend};
+        let (_d, inner) = backend(200); // 600 rows
+        let m = 16usize;
+        let (lo, hi) = (100u32, 140u32);
+        for schema in [SeedSchema::V1, SeedSchema::V2] {
+            for workers in [0usize, 2] {
+                let cfg = LoaderConfig {
+                    sampling: SamplingConfig {
+                        strategy: Strategy::BlockShuffling { block_size: 8 },
+                        batch_size: m,
+                        fetch_factor: 2,
+                        seed: 13,
+                        seed_schema: schema,
+                        ..SamplingConfig::default()
+                    },
+                    label_cols: vec!["plate".into()],
+                    workers: WorkerConfig {
+                        num_workers: workers,
+                        ..WorkerConfig::default()
+                    },
+                    resilience: ResilienceConfig {
+                        retry: RetryPolicy::default(),
+                        degrade: DegradeMode::SkipFetch,
+                    },
+                    ..Default::default()
+                };
+                let clean_ds = ScDataset::new(inner.clone(), cfg.clone());
+                let clean: Vec<Vec<u32>> = clean_ds
+                    .epoch(0)
+                    .unwrap()
+                    .map(|mb| mb.unwrap().rows)
+                    .collect();
+                // Predict which fetches the injector fails (its rule:
+                // the fetch's [min, max] row range overlaps [lo, hi))
+                // and assemble the expected degraded stream from the
+                // clean run's per-fetch batch groups.
+                let plan = clean_ds.plan(0).unwrap();
+                let mut expected: Vec<Vec<u32>> = Vec::new();
+                let mut batch = 0usize;
+                let mut failing = 0u64;
+                for fid in 0..plan.n_fetches() {
+                    let nb = batches_in_fetch(plan.fetch_len(fid), m, false);
+                    let idx = plan.fetch_indices(fid);
+                    let first = *idx.iter().min().unwrap();
+                    let last = *idx.iter().max().unwrap();
+                    if first < hi && last >= lo {
+                        failing += 1;
+                    } else {
+                        expected.extend(clean[batch..batch + nb].iter().cloned());
+                    }
+                    batch += nb;
+                }
+                assert!(failing > 0, "the fault range must hit some fetch");
+                assert!(
+                    (failing as usize) < plan.n_fetches(),
+                    "the fault range must not hit every fetch"
+                );
+                let faulty: Arc<dyn Backend> = Arc::new(FaultInjectingBackend::new(
+                    inner.clone(),
+                    FaultConfig {
+                        seed: 1,
+                        permanent_rows: Some((lo, hi)),
+                        ..FaultConfig::default()
+                    },
+                ));
+                let ds = ScDataset::new(faulty, cfg);
+                let mut iter = ds.epoch(0).unwrap();
+                let got: Vec<Vec<u32>> = (&mut iter).map(|mb| mb.unwrap().rows).collect();
+                assert_eq!(got, expected, "schema={schema} workers={workers}");
+                let s = iter.stats();
+                assert_eq!(s.degraded_fetches, failing, "schema={schema}");
+                assert_eq!(s.io.faults_permanent, failing, "schema={schema}");
+                assert_eq!(
+                    s.fetches + failing,
+                    plan.n_fetches() as u64,
+                    "surviving fetches are all delivered"
+                );
+            }
+        }
     }
 }

@@ -4,8 +4,10 @@
 //! queue, out-of-order execution, in-order delivery — see [`exec`]),
 //! DDP-style fetch partitioning, the minibatch-entropy theory, the
 //! experimental (b, f) auto-tuner, the builder-based construction API
-//! with typed sub-configs and transform hooks, and deterministic
-//! mid-epoch checkpoint/resume (see [`resume`]).
+//! with typed sub-configs and transform hooks, deterministic mid-epoch
+//! checkpoint/resume (see [`resume`]), and fault-tolerant I/O — retry
+//! with decorrelated-jitter backoff plus graceful degradation — that
+//! preserves the bit-identical stream under recovered faults.
 
 pub mod autotune;
 pub mod builder;
@@ -18,8 +20,8 @@ pub mod plan;
 pub mod resume;
 
 pub use builder::{
-    BuildError, CacheConfig, DdpConfig, IoConfig, SamplingConfig, ScDatasetBuilder, SeedSchema,
-    WorkerConfig,
+    BuildError, CacheConfig, DdpConfig, DegradeMode, IoConfig, ResilienceConfig, RetryPolicy,
+    SamplingConfig, ScDatasetBuilder, SeedSchema, WorkerConfig,
 };
 pub use fetch::{FetchTransform, FetchView};
 pub use loader::{

@@ -224,9 +224,10 @@ impl Fnv {
 /// parameters, batch size, fetch factor, seed, seed schema, drop_last,
 /// label columns, and the DDP position.
 ///
-/// Deliberately excluded: `workers`, `cache`, `io` — all execution-only
-/// by the determinism contract, so a checkpoint taken at one worker/cache
-/// configuration may resume at another (the spot-fleet migration case).
+/// Deliberately excluded: `workers`, `cache`, `io`, `resilience` — all
+/// execution-only by the determinism contract, so a checkpoint taken at
+/// one worker/cache/retry configuration may resume at another (the
+/// spot-fleet migration case).
 pub fn config_fingerprint(cfg: &LoaderConfig, n_rows: usize) -> u64 {
     let mut h = Fnv::new();
     h.str("scdata-fingerprint-v1");
@@ -545,6 +546,9 @@ mod tests {
         c.workers.in_flight = 2;
         c.cache.bytes = 1 << 20;
         c.io.decode_threads = 4;
+        c.resilience.retry.max_attempts = 7;
+        c.resilience.retry.backoff_base_ms = 1;
+        c.resilience.degrade = crate::coordinator::DegradeMode::SkipFetch;
         assert_eq!(base, config_fingerprint(&c, 1000), "execution-only");
     }
 

@@ -40,6 +40,7 @@ use flate2::Compression;
 use super::decode::{
     chunk_pieces, extract_chunk_rows, read_decode_groups, BufferPool, IoPipeline, PipelineCell,
 };
+use super::fault::IoFault;
 use super::iomodel::{AccessPattern, IoReport};
 use super::obs::ObsFrame;
 use super::{check_sorted_indices, contiguous_runs, Backend, FetchResult};
@@ -227,12 +228,19 @@ impl SparseChunkStore {
         let mut head = [0u8; 8];
         file.read_exact_at(&mut head, 0)?;
         if &head != MAGIC {
-            bail!("{}: bad magic", path.display());
+            // Structural: retrying an open of the wrong file cannot help.
+            return Err(
+                IoFault::permanent(format!("{}: bad magic", path.display())).into(),
+            );
         }
         let mut fbuf = vec![0u8; FOOTER_LEN as usize];
         file.read_exact_at(&mut fbuf, len - FOOTER_LEN)?;
         if &fbuf[72..80] != MAGIC {
-            bail!("{}: bad footer magic (truncated file?)", path.display());
+            return Err(IoFault::permanent(format!(
+                "{}: bad footer magic (truncated file?)",
+                path.display()
+            ))
+            .into());
         }
         let u = |i: usize| -> u64 {
             u64::from_le_bytes(fbuf[i * 8..(i + 1) * 8].try_into().unwrap())

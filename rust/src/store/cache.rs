@@ -31,6 +31,7 @@ use anyhow::Result;
 
 use super::csr::CsrBatch;
 use super::decode::{BufferPool, IoPipeline};
+use super::fault::IoFault;
 use super::iomodel::{AccessPattern, IoReport};
 use super::obs::ObsFrame;
 use super::{check_sorted_indices, Backend, FetchResult};
@@ -200,6 +201,21 @@ impl CacheCore {
             let row_end = ((blocks[j - 1] as u64 + 1) * br).min(n_rows);
             let idx: Vec<u32> = (row_start as u32..row_end as u32).collect();
             let part = self.inner.fetch_rows(&idx)?;
+            // A short read would be carved into truncated blocks below and
+            // then *cached*, silently corrupting every later hit — reject
+            // it as a typed fault before anything can become resident.
+            if part.x.n_rows != idx.len() {
+                return Err(IoFault::corrupt(format!(
+                    "backend '{}' returned {} rows for {} requested while \
+                     filling cache blocks {}..={} (short read)",
+                    self.inner.name(),
+                    part.x.n_rows,
+                    idx.len(),
+                    blocks[i],
+                    blocks[j - 1]
+                ))
+                .into());
+            }
             io.add(&part.io);
             for &b in &blocks[i..j] {
                 let bs = (b as u64 * br - row_start) as usize;
@@ -833,6 +849,54 @@ mod tests {
         assert_eq!(s.resident_blocks, 0);
         assert_eq!(s.misses, 0);
         assert_eq!(s.bytes_read, 0);
+    }
+
+    #[test]
+    fn failed_loads_never_poison_the_cache() {
+        // Regression: `load_blocks` carves one inner fetch into per-block
+        // cache entries. A failing or short-reading inner backend must
+        // never leave a truncated (or any) block resident, and must
+        // release the in-flight marks so the retry re-reads cleanly.
+        use crate::store::fault::{FaultConfig, FaultInjectingBackend};
+        let dir = TempDir::new("cache").unwrap();
+        let inner = store(&dir, 64);
+        let idx: Vec<u32> = (0..16).collect();
+        let want = inner.fetch_rows(&idx).unwrap();
+        let mut saw_short_read = false;
+        // Sweep seeds so every injected failure mode — including the
+        // short read, which only the new row-count validation catches —
+        // is exercised against the insert path.
+        for seed in 0..64u64 {
+            let faulty: Arc<dyn Backend> = Arc::new(FaultInjectingBackend::new(
+                inner.clone(),
+                FaultConfig {
+                    seed,
+                    fault_rate: 1.0,
+                    max_failures: 1,
+                    ..FaultConfig::default()
+                },
+            ));
+            let c = cache(&faulty, 1 << 20, 8);
+            let err = c.fetch_rows(&idx).unwrap_err();
+            saw_short_read |= format!("{err:#}").contains("short read");
+            let s = c.stats();
+            assert_eq!(
+                s.resident_blocks, 0,
+                "a failed load must not insert blocks (seed {seed})"
+            );
+            // The burst is over (max_failures = 1): the retry reads the
+            // full data, caches it, and later requests are pure hits.
+            let ok = c.fetch_rows(&idx).unwrap();
+            assert_eq!(ok.x, want.x, "retried data differs (seed {seed})");
+            assert!(c.stats().resident_blocks > 0);
+            let hit = c.fetch_rows(&idx).unwrap();
+            assert_eq!(hit.io.bytes, 0, "retried blocks must be resident (seed {seed})");
+            assert_eq!(hit.x, want.x);
+        }
+        assert!(
+            saw_short_read,
+            "no seed exercised the short-read validation — widen the sweep"
+        );
     }
 
     #[test]

@@ -35,7 +35,7 @@ use std::sync::mpsc::channel;
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 use flate2::read::DeflateDecoder;
 
 use super::csr::CsrBatch;
@@ -401,7 +401,13 @@ pub fn decode_payload(comp: &[u8], raw_len: usize, compressed: bool) -> Result<V
         raw.reserve(raw_len);
         DeflateDecoder::new(comp).read_to_end(&mut raw)?;
         if raw.len() != raw_len {
-            bail!("chunk payload: raw length mismatch ({} != {raw_len})", raw.len());
+            // Detected corruption: the stored bytes are wrong but the
+            // source is re-readable, so the retry layer may try again.
+            return Err(super::fault::IoFault::corrupt(format!(
+                "chunk payload: raw length mismatch ({} != {raw_len})",
+                raw.len()
+            ))
+            .into());
         }
     } else {
         raw.extend_from_slice(comp);

@@ -1,0 +1,531 @@
+//! Typed I/O fault taxonomy + deterministic fault injection.
+//!
+//! Storage failures stop being exotic the moment the store moves off the
+//! local disk (object stores, network filesystems, shared cache tiers).
+//! This module gives the loader a vocabulary for them ([`FaultKind`]:
+//! transient / timeout / corrupt / permanent, carried through `anyhow`
+//! chains as [`IoFault`]) and a way to *rehearse* them:
+//! [`FaultInjectingBackend`] wraps any [`Backend`] and injects a fault
+//! schedule that is **pure in `(fault_seed, key)`**, where `key` is the
+//! first requested row of a fetch — the same keyed-fork derivation the
+//! shuffle schemas use (`domains::fault`). Each key is deterministically
+//! assigned a failure burst (the first `n` calls for that key fail, then
+//! succeed), so the schedule is identical for any worker count or thread
+//! interleaving, and a retry budget larger than the longest burst is
+//! *guaranteed* to recover — which is what lets the determinism suite
+//! assert `fault-free stream ≡ faulty-but-recovered stream` bit-for-bit.
+//!
+//! Injected fault modes:
+//! * **transient** — a typed retryable error (flaky read);
+//! * **timeout** — a typed retryable error modeling a deadline miss;
+//! * **corrupt** — a typed retryable error modeling a checksum-detected
+//!   bit-flipped payload;
+//! * **short read** — the call *succeeds* but returns fewer rows than
+//!   requested; caught by the coordinator's post-fetch row-count
+//!   validation (`execute_fetch`) and classified `Corrupt`;
+//! * **latency** — a bounded injected delay (no error);
+//! * **permanent** — any fetch touching a configured row range always
+//!   fails with a non-retryable error.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::util::rng::domains;
+
+use super::decode::IoPipeline;
+use super::iomodel::AccessPattern;
+use super::obs::ObsFrame;
+use super::{Backend, FetchResult};
+
+/// The failure classes the retry layer distinguishes. Everything except
+/// `Permanent` is worth retrying: transient errors and timeouts may
+/// succeed on the next attempt, and a detected-corrupt payload (bad
+/// checksum, short read) is re-readable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultKind {
+    /// Flaky I/O (interrupted syscall, dropped connection): retryable.
+    Transient,
+    /// A deadline elapsed before the data arrived: retryable.
+    Timeout,
+    /// The bytes came back wrong but detectably so (checksum mismatch,
+    /// truncated payload, failed decompression): retryable — the source
+    /// of truth is intact.
+    Corrupt,
+    /// Structural failure (missing file, bad magic, permission denied):
+    /// retrying cannot help.
+    Permanent,
+}
+
+impl FaultKind {
+    /// Whether a retry can plausibly succeed.
+    pub fn is_retryable(self) -> bool {
+        !matches!(self, FaultKind::Permanent)
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultKind::Transient => "transient",
+            FaultKind::Timeout => "timeout",
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::Permanent => "permanent",
+        }
+    }
+}
+
+impl std::fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A typed I/O fault carried through `anyhow` error chains. Backends
+/// attach one at their failure points (`.context(IoFault::corrupt(..))`
+/// or `Err(IoFault::permanent(..).into())`); [`classify`] recovers the
+/// kind anywhere downstream.
+#[derive(Clone, Debug)]
+pub struct IoFault {
+    pub kind: FaultKind,
+    pub detail: String,
+}
+
+impl IoFault {
+    pub fn new(kind: FaultKind, detail: impl Into<String>) -> IoFault {
+        IoFault {
+            kind,
+            detail: detail.into(),
+        }
+    }
+
+    pub fn transient(detail: impl Into<String>) -> IoFault {
+        IoFault::new(FaultKind::Transient, detail)
+    }
+
+    pub fn timeout(detail: impl Into<String>) -> IoFault {
+        IoFault::new(FaultKind::Timeout, detail)
+    }
+
+    pub fn corrupt(detail: impl Into<String>) -> IoFault {
+        IoFault::new(FaultKind::Corrupt, detail)
+    }
+
+    pub fn permanent(detail: impl Into<String>) -> IoFault {
+        IoFault::new(FaultKind::Permanent, detail)
+    }
+}
+
+impl std::fmt::Display for IoFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} I/O fault: {}", self.kind, self.detail)
+    }
+}
+
+impl std::error::Error for IoFault {}
+
+/// Map an [`std::io::ErrorKind`] onto the fault taxonomy. Backends get
+/// this classification for free: raw `io::Error`s in an `anyhow` chain
+/// are classified by [`classify`] without any tagging at the call site.
+pub fn classify_io_kind(kind: std::io::ErrorKind) -> FaultKind {
+    use std::io::ErrorKind::*;
+    match kind {
+        Interrupted | WouldBlock | ConnectionReset | ConnectionAborted | BrokenPipe => {
+            FaultKind::Transient
+        }
+        TimedOut => FaultKind::Timeout,
+        UnexpectedEof | InvalidData => FaultKind::Corrupt,
+        _ => FaultKind::Permanent,
+    }
+}
+
+/// Classify an error chain: an explicit [`IoFault`] anywhere in the chain
+/// wins (including `anyhow` context values), then the outermost
+/// `std::io::Error`'s kind, and anything unclassified is `Permanent` —
+/// the conservative default, so unknown failures are never retried
+/// blindly.
+pub fn classify(err: &anyhow::Error) -> FaultKind {
+    if let Some(f) = err.downcast_ref::<IoFault>() {
+        return f.kind;
+    }
+    for cause in err.chain() {
+        if let Some(io) = cause.downcast_ref::<std::io::Error>() {
+            return classify_io_kind(io.kind());
+        }
+    }
+    FaultKind::Permanent
+}
+
+/// Fault-injection schedule parameters. The schedule is pure in
+/// `(seed, key)`: key = first requested row of the fetch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Chaos seed (independent of the sampling seed; `domains::fault`).
+    pub seed: u64,
+    /// Probability that a key draws a failure burst.
+    pub fault_rate: f64,
+    /// Burst length upper bound: a faulty key fails its first
+    /// `1..=max_failures` calls (uniform draw), then succeeds. A retry
+    /// budget of `max_failures + 1` attempts therefore always recovers.
+    pub max_failures: u32,
+    /// Upper bound (exclusive, microseconds) on injected per-call
+    /// latency; 0 disables. The per-key delay is a deterministic draw.
+    pub latency_us: u64,
+    /// Rows `[lo, hi)`: any fetch touching them fails permanently.
+    pub permanent_rows: Option<(u32, u32)>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> FaultConfig {
+        FaultConfig {
+            seed: 0,
+            fault_rate: 0.0,
+            max_failures: 1,
+            latency_us: 0,
+            permanent_rows: None,
+        }
+    }
+}
+
+/// Injected failure modes for one burst position.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum FailMode {
+    Transient,
+    Timeout,
+    Corrupt,
+    ShortRead,
+}
+
+/// Cumulative injection counters (monotone).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InjectedFaults {
+    pub transient: u64,
+    pub timeout: u64,
+    pub corrupt: u64,
+    pub short_reads: u64,
+    pub permanent: u64,
+}
+
+impl InjectedFaults {
+    pub fn total(&self) -> u64 {
+        self.transient + self.timeout + self.corrupt + self.short_reads + self.permanent
+    }
+}
+
+/// A [`Backend`] wrapper injecting a deterministic fault schedule —
+/// reproducible chaos for tests, the chaos bench, and failure-path
+/// development. See the module docs for the schedule contract.
+pub struct FaultInjectingBackend {
+    inner: Arc<dyn Backend>,
+    cfg: FaultConfig,
+    name: String,
+    /// Calls observed per key so far — burst positions are consumed in
+    /// call order, which is deterministic per key because one fetch's
+    /// retry loop is sequential.
+    attempts: Mutex<HashMap<u64, u32>>,
+    injected_transient: AtomicU64,
+    injected_timeout: AtomicU64,
+    injected_corrupt: AtomicU64,
+    injected_short: AtomicU64,
+    injected_permanent: AtomicU64,
+}
+
+impl FaultInjectingBackend {
+    pub fn new(inner: Arc<dyn Backend>, cfg: FaultConfig) -> FaultInjectingBackend {
+        let name = format!("faulty[{}]", inner.name());
+        FaultInjectingBackend {
+            inner,
+            cfg,
+            name,
+            attempts: Mutex::new(HashMap::new()),
+            injected_transient: AtomicU64::new(0),
+            injected_timeout: AtomicU64::new(0),
+            injected_corrupt: AtomicU64::new(0),
+            injected_short: AtomicU64::new(0),
+            injected_permanent: AtomicU64::new(0),
+        }
+    }
+
+    /// Snapshot of the cumulative injected-fault counters.
+    pub fn injected(&self) -> InjectedFaults {
+        InjectedFaults {
+            transient: self.injected_transient.load(Ordering::Relaxed),
+            timeout: self.injected_timeout.load(Ordering::Relaxed),
+            corrupt: self.injected_corrupt.load(Ordering::Relaxed),
+            short_reads: self.injected_short.load(Ordering::Relaxed),
+            permanent: self.injected_permanent.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn inner(&self) -> &Arc<dyn Backend> {
+        &self.inner
+    }
+
+    /// The deterministic burst for one key: injected latency (µs) plus
+    /// the per-attempt failure modes. Pure in `(cfg.seed, key)`.
+    fn schedule(&self, key: u64) -> (u64, Vec<FailMode>) {
+        let mut rng = domains::fault(self.cfg.seed, key);
+        let latency = if self.cfg.latency_us > 0 {
+            rng.below(self.cfg.latency_us)
+        } else {
+            0
+        };
+        let n_fail = if self.cfg.fault_rate > 0.0
+            && self.cfg.max_failures > 0
+            && rng.f64() < self.cfg.fault_rate
+        {
+            1 + rng.below(self.cfg.max_failures as u64) as u32
+        } else {
+            0
+        };
+        let modes = (0..n_fail)
+            .map(|_| match rng.below(4) {
+                0 => FailMode::Transient,
+                1 => FailMode::Timeout,
+                2 => FailMode::Corrupt,
+                _ => FailMode::ShortRead,
+            })
+            .collect();
+        (latency, modes)
+    }
+}
+
+impl Backend for FaultInjectingBackend {
+    fn n_rows(&self) -> usize {
+        self.inner.n_rows()
+    }
+
+    fn n_cols(&self) -> usize {
+        self.inner.n_cols()
+    }
+
+    fn obs(&self) -> &ObsFrame {
+        self.inner.obs()
+    }
+
+    fn pattern(&self) -> AccessPattern {
+        self.inner.pattern()
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn fetch_rows(&self, sorted: &[u32]) -> Result<FetchResult> {
+        let Some(&first) = sorted.first() else {
+            return self.inner.fetch_rows(sorted);
+        };
+        if let Some((lo, hi)) = self.cfg.permanent_rows {
+            let last = *sorted.last().expect("non-empty");
+            if first < hi && last >= lo {
+                self.injected_permanent.fetch_add(1, Ordering::Relaxed);
+                return Err(IoFault::permanent(format!(
+                    "injected: rows {lo}..{hi} unreadable (fetch [{first}..={last}])"
+                ))
+                .into());
+            }
+        }
+        let key = first as u64;
+        let (latency_us, modes) = self.schedule(key);
+        if latency_us > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(latency_us));
+        }
+        let attempt = {
+            let mut at = self.attempts.lock().unwrap();
+            let slot = at.entry(key).or_insert(0);
+            let a = *slot;
+            *slot += 1;
+            a as usize
+        };
+        match modes.get(attempt) {
+            None => self.inner.fetch_rows(sorted),
+            Some(FailMode::Transient) => {
+                self.injected_transient.fetch_add(1, Ordering::Relaxed);
+                Err(IoFault::transient(format!(
+                    "injected: flaky read of fetch key {key} (attempt {attempt})"
+                ))
+                .into())
+            }
+            Some(FailMode::Timeout) => {
+                self.injected_timeout.fetch_add(1, Ordering::Relaxed);
+                Err(IoFault::timeout(format!(
+                    "injected: read deadline missed for fetch key {key} (attempt {attempt})"
+                ))
+                .into())
+            }
+            Some(FailMode::Corrupt) => {
+                self.injected_corrupt.fetch_add(1, Ordering::Relaxed);
+                Err(IoFault::corrupt(format!(
+                    "injected: bit-flipped payload detected by checksum for fetch key {key} \
+                     (attempt {attempt})"
+                ))
+                .into())
+            }
+            Some(FailMode::ShortRead) => {
+                self.injected_short.fetch_add(1, Ordering::Relaxed);
+                let full = self.inner.fetch_rows(sorted)?;
+                let keep = full.x.n_rows / 2; // strictly fewer rows than asked
+                Ok(FetchResult {
+                    x: full.x.slice_rows(0, keep),
+                    io: full.io,
+                })
+            }
+        }
+    }
+
+    fn set_io_pipeline(&self, pipeline: IoPipeline) {
+        self.inner.set_io_pipeline(pipeline);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::anndata::{SparseChunkStore, StoreWriter};
+    use crate::store::obs::ObsColumn;
+    use crate::util::tempdir::TempDir;
+    use anyhow::Context;
+
+    fn store(dir: &TempDir, n_rows: usize) -> Arc<dyn Backend> {
+        let mut w = StoreWriter::create(dir.join("src.scs"), 8, 4, true).unwrap();
+        for r in 0..n_rows {
+            w.push_row(&[(r % 8) as u32], &[r as f32]).unwrap();
+        }
+        let mut obs = ObsFrame::new(n_rows);
+        obs.push(ObsColumn::new("plate", vec!["p".into()], vec![0; n_rows]).unwrap())
+            .unwrap();
+        Arc::new(SparseChunkStore::open(w.finish(&obs).unwrap()).unwrap())
+    }
+
+    #[test]
+    fn io_error_kinds_map_onto_taxonomy() {
+        use std::io::ErrorKind::*;
+        assert_eq!(classify_io_kind(Interrupted), FaultKind::Transient);
+        assert_eq!(classify_io_kind(WouldBlock), FaultKind::Transient);
+        assert_eq!(classify_io_kind(TimedOut), FaultKind::Timeout);
+        assert_eq!(classify_io_kind(UnexpectedEof), FaultKind::Corrupt);
+        assert_eq!(classify_io_kind(InvalidData), FaultKind::Corrupt);
+        assert_eq!(classify_io_kind(NotFound), FaultKind::Permanent);
+        assert_eq!(classify_io_kind(PermissionDenied), FaultKind::Permanent);
+    }
+
+    #[test]
+    fn classify_finds_typed_faults_and_io_errors_in_chains() {
+        // A typed fault attached as anyhow context wins.
+        let e: anyhow::Error = anyhow::anyhow!("root cause")
+            .context(IoFault::corrupt("chunk checksum mismatch"))
+            .context("while fetching rows");
+        assert_eq!(classify(&e), FaultKind::Corrupt);
+        // A raw io::Error deep in the chain is classified by kind.
+        let io = std::io::Error::new(std::io::ErrorKind::TimedOut, "slow disk");
+        let e: anyhow::Error = anyhow::Error::new(io).context("read chunk 3");
+        assert_eq!(classify(&e), FaultKind::Timeout);
+        // Bare string errors default to Permanent (never blind-retried).
+        assert_eq!(classify(&anyhow::anyhow!("who knows")), FaultKind::Permanent);
+        // is_retryable: everything but Permanent.
+        assert!(FaultKind::Transient.is_retryable());
+        assert!(FaultKind::Timeout.is_retryable());
+        assert!(FaultKind::Corrupt.is_retryable());
+        assert!(!FaultKind::Permanent.is_retryable());
+    }
+
+    #[test]
+    fn schedule_is_pure_in_seed_and_key() {
+        let dir = TempDir::new("fault").unwrap();
+        let inner = store(&dir, 64);
+        let cfg = FaultConfig {
+            seed: 9,
+            fault_rate: 0.7,
+            max_failures: 2,
+            ..FaultConfig::default()
+        };
+        let a = FaultInjectingBackend::new(inner.clone(), cfg);
+        let b = FaultInjectingBackend::new(inner.clone(), cfg);
+        // Same call sequence → identical outcome sequence on two
+        // independent wrappers.
+        for key in [0u32, 8, 16, 24, 32] {
+            let idx = [key, key + 1];
+            for _ in 0..4 {
+                let ra = a.fetch_rows(&idx);
+                let rb = b.fetch_rows(&idx);
+                match (ra, rb) {
+                    (Ok(xa), Ok(xb)) => assert_eq!(xa.x, xb.x, "key {key}"),
+                    (Err(ea), Err(eb)) => {
+                        assert_eq!(classify(&ea), classify(&eb), "key {key}")
+                    }
+                    _ => panic!("schedules diverged at key {key}"),
+                }
+            }
+        }
+        assert_eq!(a.injected().total(), b.injected().total());
+        assert!(a.injected().total() > 0, "rate 0.7 over 5 keys never fired");
+    }
+
+    #[test]
+    fn bursts_end_within_max_failures_and_recover_exactly() {
+        let dir = TempDir::new("fault").unwrap();
+        let inner = store(&dir, 64);
+        let cfg = FaultConfig {
+            seed: 3,
+            fault_rate: 1.0, // every key faults
+            max_failures: 3,
+            ..FaultConfig::default()
+        };
+        let f = FaultInjectingBackend::new(inner.clone(), cfg);
+        for key in (0..64u32).step_by(8) {
+            let idx = [key];
+            let want = inner.fetch_rows(&idx).unwrap();
+            let mut recovered = None;
+            for attempt in 0..4 {
+                match f.fetch_rows(&idx) {
+                    Ok(got) if got.x.n_rows == idx.len() => {
+                        recovered = Some((attempt, got));
+                        break;
+                    }
+                    Ok(_short) => continue, // injected short read
+                    Err(e) => assert!(classify(&e).is_retryable(), "key {key}"),
+                }
+            }
+            let (attempt, got) = recovered.expect("burst exceeded max_failures");
+            assert!(attempt >= 1, "rate 1.0 must fail the first attempt");
+            assert_eq!(got.x, want.x, "recovered data differs at key {key}");
+        }
+        let inj = f.injected();
+        assert!(inj.total() >= 8);
+        assert_eq!(inj.permanent, 0);
+    }
+
+    #[test]
+    fn permanent_rows_always_fail_and_are_not_retryable() {
+        let dir = TempDir::new("fault").unwrap();
+        let inner = store(&dir, 64);
+        let f = FaultInjectingBackend::new(
+            inner,
+            FaultConfig {
+                permanent_rows: Some((16, 24)),
+                ..FaultConfig::default()
+            },
+        );
+        for _ in 0..3 {
+            let e = f.fetch_rows(&[15, 17]).unwrap_err();
+            assert_eq!(classify(&e), FaultKind::Permanent);
+        }
+        // Fetches outside the range are untouched (rate 0).
+        assert!(f.fetch_rows(&[0, 1, 2]).is_ok());
+        assert!(f.fetch_rows(&[24, 30]).is_ok());
+        assert_eq!(f.injected().permanent, 3);
+    }
+
+    #[test]
+    fn zero_rate_is_fully_transparent() {
+        let dir = TempDir::new("fault").unwrap();
+        let inner = store(&dir, 32);
+        let f = FaultInjectingBackend::new(inner.clone(), FaultConfig::default());
+        let idx: Vec<u32> = (0..32).collect();
+        assert_eq!(f.fetch_rows(&idx).unwrap().x, inner.fetch_rows(&idx).unwrap().x);
+        assert_eq!(f.injected().total(), 0);
+        assert_eq!(f.n_rows(), 32);
+        assert_eq!(f.n_cols(), 8);
+        assert!(f.name().starts_with("faulty["));
+    }
+}

@@ -56,6 +56,21 @@ pub struct IoReport {
     /// per storage chunk touched); `read_calls < read_calls_raw` is the
     /// coalescer's win.
     pub read_calls_raw: u64,
+    /// Retries the resilience layer spent recovering this fetch (zero on
+    /// a clean first attempt). Deterministic under injected faults: the
+    /// schedule is pure in `(fault_seed, key)`, so per-fetch reports stay
+    /// worker-count-invariant.
+    pub retries: u64,
+    /// Recovered transient faults observed while serving this fetch.
+    pub faults_transient: u64,
+    /// Recovered timeout faults observed while serving this fetch.
+    pub faults_timeout: u64,
+    /// Recovered corrupt-payload faults (checksum / short read) observed
+    /// while serving this fetch.
+    pub faults_corrupt: u64,
+    /// Permanent (non-retryable) faults — only ever non-zero on reports
+    /// aggregated at delivery for failed or skipped fetches.
+    pub faults_permanent: u64,
 }
 
 impl IoReport {
@@ -71,6 +86,22 @@ impl IoReport {
         self.cache_evictions += other.cache_evictions;
         self.read_calls += other.read_calls;
         self.read_calls_raw += other.read_calls_raw;
+        self.retries += other.retries;
+        self.faults_transient += other.faults_transient;
+        self.faults_timeout += other.faults_timeout;
+        self.faults_corrupt += other.faults_corrupt;
+        self.faults_permanent += other.faults_permanent;
+    }
+
+    /// Record one observed fault of the given class.
+    pub fn count_fault(&mut self, kind: crate::store::fault::FaultKind) {
+        use crate::store::fault::FaultKind::*;
+        match kind {
+            Transient => self.faults_transient += 1,
+            Timeout => self.faults_timeout += 1,
+            Corrupt => self.faults_corrupt += 1,
+            Permanent => self.faults_permanent += 1,
+        }
     }
 }
 

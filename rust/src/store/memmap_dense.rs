@@ -20,6 +20,7 @@ use anyhow::{bail, Context, Result};
 
 use super::csr::CsrBatch;
 use super::decode::{BufferPool, IoPipeline, PipelineCell};
+use super::fault::IoFault;
 use super::iomodel::{AccessPattern, IoReport};
 use super::obs::ObsFrame;
 use super::{check_sorted_indices, contiguous_runs, Backend, FetchResult};
@@ -154,7 +155,10 @@ impl DenseMemmapStore {
         let mut head = vec![0u8; HEADER_LEN as usize];
         file.read_exact_at(&mut head, 0)?;
         if &head[..8] != MAGIC {
-            bail!("{}: bad magic", path.display());
+            // Structural: retrying an open of the wrong file cannot help.
+            return Err(
+                IoFault::permanent(format!("{}: bad magic", path.display())).into(),
+            );
         }
         let u = |i: usize| {
             u64::from_le_bytes(head[8 + i * 8..16 + i * 8].try_into().unwrap())
@@ -162,7 +166,9 @@ impl DenseMemmapStore {
         let (n_rows, n_cols, payload_off, obs_off, obs_len) =
             (u(0) as usize, u(1) as usize, u(2) as usize, u(3) as usize, u(4) as usize);
         if obs_off + obs_len > file_len {
-            bail!("{}: truncated", path.display());
+            return Err(
+                IoFault::permanent(format!("{}: truncated", path.display())).into(),
+            );
         }
         let mut obs_buf = vec![0u8; obs_len];
         file.read_exact_at(&mut obs_buf, obs_off as u64)?;

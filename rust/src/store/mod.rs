@@ -6,15 +6,18 @@
 //! common [`Backend`] trait the coordinator fetches through, plus the
 //! virtual-disk cost model ([`iomodel`]) that maps access patterns back to
 //! the paper's measured cost regime, the block-granular LRU cache +
-//! readahead layer ([`cache`]) that any backend can be wrapped in, and the
+//! readahead layer ([`cache`]) that any backend can be wrapped in, the
 //! intra-fetch parallel decode pipeline ([`decode`]: shared decode thread
-//! pool, gap-tolerant read coalescer, recycled buffer pools).
+//! pool, gap-tolerant read coalescer, recycled buffer pools), and the
+//! typed I/O fault taxonomy + deterministic fault injection ([`fault`])
+//! behind the coordinator's retry layer.
 
 pub mod anndata;
 pub mod cache;
 pub mod collection;
 pub mod csr;
 pub mod decode;
+pub mod fault;
 pub mod iomodel;
 pub mod memmap_dense;
 pub mod multimodal;
@@ -27,6 +30,7 @@ use anyhow::Result;
 pub use cache::{CacheConfig, CacheStats, CachingBackend};
 pub use csr::CsrBatch;
 pub use decode::{BufferPool, DecodePool, IoPipeline};
+pub use fault::{FaultConfig, FaultInjectingBackend, FaultKind, IoFault};
 pub use iomodel::{AccessPattern, DiskModel, IoReport};
 pub use obs::{ObsColumn, ObsFrame};
 

@@ -20,6 +20,7 @@ use flate2::write::DeflateEncoder;
 use flate2::Compression;
 
 use super::csr::CsrBatch;
+use super::fault::IoFault;
 use super::iomodel::{AccessPattern, IoReport};
 use super::obs::ObsFrame;
 use super::{check_sorted_indices, contiguous_runs, Backend, FetchResult};
@@ -122,7 +123,13 @@ fn deserialize_group(raw: &[u8], n_cols: usize) -> Result<CsrBatch> {
     let nnz = u64s(&mut r)? as usize;
     let need = (n_rows + 1) * 8 + nnz * 8;
     if r.len() != need {
-        bail!("group payload size mismatch: {} vs {need}", r.len());
+        // Detected corruption (retryable): the payload decoded but its
+        // layout disagrees with its own header.
+        return Err(IoFault::corrupt(format!(
+            "group payload size mismatch: {} vs {need}",
+            r.len()
+        ))
+        .into());
     }
     let mut indptr = Vec::with_capacity(n_rows + 1);
     for c in r[..(n_rows + 1) * 8].chunks_exact(8) {
@@ -172,7 +179,12 @@ impl RowGroupStore {
         let mut fbuf = vec![0u8; FOOTER_LEN as usize];
         file.read_exact_at(&mut fbuf, len - FOOTER_LEN)?;
         if &fbuf[56..64] != MAGIC {
-            bail!("{}: bad footer magic", path.display());
+            // Structural: retrying an open of the wrong file cannot help.
+            return Err(IoFault::permanent(format!(
+                "{}: bad footer magic",
+                path.display()
+            ))
+            .into());
         }
         let u = |i: usize| u64::from_le_bytes(fbuf[i * 8..(i + 1) * 8].try_into().unwrap());
         let (table_off, n_groups, rows_per_group, n_rows, n_cols, obs_off, obs_len) = (

@@ -22,6 +22,7 @@ use flate2::Compression;
 use super::decode::{
     chunk_pieces, extract_chunk_rows, read_decode_groups, BufferPool, IoPipeline, PipelineCell,
 };
+use super::fault::IoFault;
 use super::iomodel::{AccessPattern, IoReport};
 use super::obs::ObsFrame;
 use super::{check_sorted_indices, contiguous_runs, Backend, FetchResult};
@@ -147,7 +148,9 @@ impl ShardedZarrStore {
 
         let buf = std::fs::read(dir.join("indptr.bin"))?;
         if buf.len() != (n_rows + 1) * 8 {
-            bail!("indptr.bin truncated");
+            // Structural: the store metadata itself is broken — no retry
+            // of this open can help.
+            return Err(IoFault::permanent("indptr.bin truncated").into());
         }
         let indptr: Vec<u64> = buf
             .chunks_exact(8)
@@ -156,7 +159,7 @@ impl ShardedZarrStore {
 
         let buf = std::fs::read(dir.join("chunks.bin"))?;
         if buf.len() != n_chunks * 32 {
-            bail!("chunks.bin truncated");
+            return Err(IoFault::permanent("chunks.bin truncated").into());
         }
         let chunk_index: Vec<(u64, u64, u64, u64)> = buf
             .chunks_exact(32)

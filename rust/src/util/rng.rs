@@ -256,11 +256,15 @@ impl Rng {
 /// | shuffle v1      | `Rng::new(seed).fork(SHUFFLE_STREAM_V1 + epoch)`       | one sequential per-epoch shuffle stream on the delivery thread (seed-schema v1, PRs 2–5) |
 /// | shuffle v2      | `Rng::new(seed).fork_keyed(SHUFFLE_FETCH_V2 + epoch, fetch_id)` | one independent shuffle RNG per fetch id — pure in `(seed, epoch, fetch_id)`, so executor workers can run `finish_fetch` (seed-schema v2) |
 /// | shuffle buffer  | `Rng::new(seed).fork(SHUFFLE_BUFFER + epoch)`          | the streaming strategy's rolling shuffle buffer (delivery thread, both schemas) |
+/// | fault           | `Rng::new(fault_seed).fork_keyed(FAULT, key)`          | the [`FaultInjectingBackend`](crate::store::fault::FaultInjectingBackend) schedule — pure in `(fault_seed, key)` where `key` is the first requested row of a fetch |
+/// | retry           | `Rng::new(seed).fork_keyed(RETRY + epoch, fetch_id)`   | decorrelated-jitter backoff draws for one fetch's retry loop (execution-only: timing never touches the stream) |
 ///
-/// The base offsets keep the three per-epoch families disjoint for any
-/// epoch below 2^16; v2 additionally keys on the fetch id through a
-/// second fork level, so no arithmetic on `epoch + fetch_id` can collide
-/// across domains.
+/// The base offsets keep the per-epoch families disjoint for any epoch
+/// below 2^16; v2 additionally keys on the fetch id through a second
+/// fork level, so no arithmetic on `epoch + fetch_id` can collide
+/// across domains. The fault domain keys off `fault_seed` (a chaos knob,
+/// not the sampling seed), so injected schedules can never correlate
+/// with any shuffle stream.
 pub mod domains {
     use super::Rng;
 
@@ -271,6 +275,10 @@ pub mod domains {
     pub const SHUFFLE_BUFFER: u64 = 0x20_000;
     /// Base label for the v2 per-fetch shuffle domain.
     pub const SHUFFLE_FETCH_V2: u64 = 0x30_000;
+    /// Base label for the deterministic fault-injection schedule.
+    pub const FAULT: u64 = 0x40_000;
+    /// Base label for retry-backoff jitter draws.
+    pub const RETRY: u64 = 0x50_000;
 
     /// Epoch plan permutation RNG (shared by every seed schema).
     pub fn plan(seed: u64, epoch: u64) -> Rng {
@@ -296,6 +304,21 @@ pub mod domains {
     /// is inherently sequential).
     pub fn shuffle_buffer(seed: u64, epoch: u64) -> Rng {
         Rng::new(seed).fork(SHUFFLE_BUFFER.wrapping_add(epoch))
+    }
+
+    /// Deterministic chaos: the fault-injection schedule RNG for one
+    /// fetch key (the first requested row). Pure in `(fault_seed, key)`,
+    /// so the injected faults are identical for any worker count or
+    /// thread interleaving.
+    pub fn fault(fault_seed: u64, key: u64) -> Rng {
+        Rng::new(fault_seed).fork_keyed(FAULT, key)
+    }
+
+    /// Retry-backoff jitter RNG for one fetch's retry loop. Pure in
+    /// `(seed, epoch, fetch_id)`; only ever affects sleep durations,
+    /// never the emitted stream.
+    pub fn retry_backoff(seed: u64, epoch: u64, fetch_id: usize) -> Rng {
+        Rng::new(seed).fork_keyed(RETRY.wrapping_add(epoch), fetch_id as u64)
     }
 }
 
@@ -437,6 +460,14 @@ mod tests {
         assert_eq!(
             domains::shuffle_fetch_v2(seed, epoch, 7).next_u64(),
             Rng::new(seed).fork(0x30_000 + epoch).fork(7).next_u64()
+        );
+        assert_eq!(
+            domains::fault(seed, 19).next_u64(),
+            Rng::new(seed).fork(0x40_000).fork(19).next_u64()
+        );
+        assert_eq!(
+            domains::retry_backoff(seed, epoch, 7).next_u64(),
+            Rng::new(seed).fork(0x50_000 + epoch).fork(7).next_u64()
         );
     }
 

@@ -853,6 +853,128 @@ fn shuffle_buffer_resume_rereads_only_window_and_tail() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Fault tolerance (ISSUE 8 acceptance): recovered faults are invisible.
+// With a deterministic fault injector between the loader and the real
+// backend, and a retry budget that covers every injected burst, the
+// emitted minibatch stream must be bit-identical to the fault-free run —
+// for workers ∈ {0, 1, 4} and under both seed schemas — while the stats
+// prove the retry path actually engaged (`stats().io.retries > 0`).
+// ---------------------------------------------------------------------------
+
+use scdata::coordinator::{DegradeMode, RetryPolicy};
+use scdata::store::{FaultConfig, FaultInjectingBackend};
+
+#[test]
+fn recovered_faults_leave_the_stream_bit_identical() {
+    let (_d, b) = dataset(400);
+    // Every fetch fails 1–2 times before succeeding; 4 attempts always
+    // cover the burst. Zero backoff keeps the test instant.
+    let faults = FaultConfig {
+        seed: 77,
+        fault_rate: 1.0,
+        max_failures: 2,
+        ..FaultConfig::default()
+    };
+    let retry = RetryPolicy {
+        max_attempts: 4,
+        backoff_base_ms: 0,
+        backoff_cap_ms: 0,
+        deadline_ms: 0,
+    };
+    for schema in [SeedSchema::V1, SeedSchema::V2] {
+        let clean = make(&b, vary(|c| c.sampling.seed_schema = schema));
+        for epoch in [0u64, 1] {
+            let expect = stream(&clean, epoch);
+            assert!(!expect.is_empty());
+            for workers in [0usize, 1, 4] {
+                let injector: Arc<dyn Backend> =
+                    Arc::new(FaultInjectingBackend::new(b.clone(), faults));
+                let ds = make(
+                    &injector,
+                    vary(|c| {
+                        c.sampling.seed_schema = schema;
+                        c.workers.num_workers = workers;
+                        c.resilience.retry = retry;
+                    }),
+                );
+                let mut iter = ds.epoch(epoch).unwrap();
+                let mut got: Stream = Vec::new();
+                for mb in &mut iter {
+                    let mb = mb.unwrap();
+                    got.push((mb.rows, mb.x, mb.labels));
+                }
+                let stats = iter.stats();
+                assert_eq!(
+                    got, expect,
+                    "{schema:?} workers={workers} epoch={epoch}: \
+                     recovered faults changed the stream"
+                );
+                assert!(
+                    stats.io.retries > 0,
+                    "{schema:?} workers={workers} epoch={epoch}: \
+                     injector never engaged — weak test"
+                );
+                assert_eq!(
+                    stats.io.retries,
+                    stats.io.faults_transient
+                        + stats.io.faults_timeout
+                        + stats.io.faults_corrupt,
+                    "every recovered fault must be classified"
+                );
+                assert_eq!(stats.io.faults_permanent, 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn exhausted_retry_budget_surfaces_a_typed_error() {
+    // The other side of the invariant: with the budget below the burst
+    // length the epoch must fail — with the fetch id, epoch and attempt
+    // count in the message — rather than emit a corrupted stream.
+    let (_d, b) = dataset(300);
+    for workers in [0usize, 2] {
+        // Fresh injector per run: attempt counters must not carry over.
+        let injector: Arc<dyn Backend> = Arc::new(FaultInjectingBackend::new(
+            b.clone(),
+            FaultConfig {
+                seed: 5,
+                fault_rate: 1.0,
+                max_failures: 3,
+                ..FaultConfig::default()
+            },
+        ));
+        let ds = make(
+            &injector,
+            vary(|c| {
+                c.workers.num_workers = workers;
+                c.resilience.retry = RetryPolicy {
+                    max_attempts: 2, // < 1 + max_failures
+                    backoff_base_ms: 0,
+                    backoff_cap_ms: 0,
+                    deadline_ms: 0,
+                };
+                c.resilience.degrade = DegradeMode::FailFast;
+            }),
+        );
+        let err = ds
+            .epoch(0)
+            .unwrap()
+            .find_map(|r| r.err())
+            .expect("under-budgeted retries must fail the epoch");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("failed after 2 attempt(s)"),
+            "terminal error lost its retry context: {msg}"
+        );
+        assert!(
+            msg.contains("epoch 0"),
+            "terminal error lost its epoch context: {msg}"
+        );
+    }
+}
+
 #[test]
 fn ddp_rank_resume_continues_its_own_stream() {
     // Each rank checkpoints and resumes independently; the manifest pins

@@ -710,6 +710,334 @@ fn prop_weighted_sampling_respects_zero_weights() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// Fault tolerance (ISSUE 8), fuzzed: random fault schedules × retry
+// budgets × worker counts × seed schemas. Whenever every injected burst
+// fits the retry budget the stream must be bit-identical to the
+// fault-free run; when a permanent fault is in range the loader must
+// either deliver a typed error (fail-fast) or drop exactly the failing
+// fetches (skip-fetch) — never emit corrupted data.
+// ---------------------------------------------------------------------------
+
+use scdata::coordinator::{DegradeMode, RetryPolicy};
+use scdata::store::fault::{classify, FaultConfig, FaultInjectingBackend, FaultKind};
+
+#[test]
+fn prop_chaos_recovered_faults_stream_identical() {
+    let dir = TempDir::new("prop-chaos").unwrap();
+    let mut cfg = TahoeConfig::tiny();
+    cfg.n_plates = 3;
+    cfg.cells_per_plate = 300;
+    generate(&cfg, dir.path()).unwrap();
+    let backend: Arc<dyn Backend> = Arc::new(open_collection(dir.path()).unwrap());
+    check("chaos-recovery", 8, |rng| {
+        let mut base = LoaderConfig::default();
+        base.sampling.strategy = Strategy::BlockShuffling {
+            block_size: rng.range(1, 48),
+        };
+        base.sampling.batch_size = rng.range(1, 80);
+        base.sampling.fetch_factor = rng.range(1, 6);
+        base.sampling.seed = rng.next_u64();
+        base.sampling.seed_schema = if rng.bernoulli(0.5) {
+            SeedSchema::V1
+        } else {
+            SeedSchema::V2
+        };
+        base.label_cols = vec!["plate".into()];
+        let faults = FaultConfig {
+            seed: rng.next_u64(),
+            fault_rate: rng.f64(),
+            max_failures: rng.range(1, 4) as u32,
+            ..FaultConfig::default()
+        };
+        // The budget always covers the worst burst → recovery guaranteed.
+        base.resilience.retry = RetryPolicy {
+            max_attempts: faults.max_failures as usize + 1 + rng.range(0, 3),
+            backoff_base_ms: 0,
+            backoff_cap_ms: 0,
+            deadline_ms: 0,
+        };
+        let epoch = rng.range(0, 3) as u64;
+        type Stream = Vec<(Vec<u32>, scdata::store::CsrBatch, Vec<Vec<u16>>)>;
+        let run = |b: Arc<dyn Backend>,
+                   cfg: &LoaderConfig|
+         -> Result<(Stream, IoReport), String> {
+            let ds = ScDataset::builder(b)
+                .config(cfg.clone())
+                .build()
+                .map_err(|e| e.to_string())?;
+            let mut iter = ds.epoch(epoch).map_err(|e| e.to_string())?;
+            let mut s = Vec::new();
+            for mb in &mut iter {
+                let mb = mb.map_err(|e| e.to_string())?;
+                s.push((mb.rows, mb.x, mb.labels));
+            }
+            Ok((s, iter.stats().io))
+        };
+        let (expect, _) = run(backend.clone(), &base)?;
+        prop_assert!(!expect.is_empty(), "empty clean epoch");
+        let mut retry_counts = Vec::new();
+        for workers in [0usize, 1, 4] {
+            let mut cfg = base.clone();
+            cfg.workers.num_workers = workers;
+            // Fresh injector per run: the schedule is pure in (seed, key),
+            // so every run sees the identical fault sequence.
+            let injector: Arc<dyn Backend> =
+                Arc::new(FaultInjectingBackend::new(backend.clone(), faults));
+            let (got, io) = run(injector, &cfg)?;
+            prop_assert!(
+                got == expect,
+                "recovered faults changed the stream (workers={workers} \
+                 schema={:?} rate={:.3} burst={})",
+                base.sampling.seed_schema,
+                faults.fault_rate,
+                faults.max_failures
+            );
+            prop_assert!(
+                io.retries
+                    == io.faults_transient + io.faults_timeout + io.faults_corrupt,
+                "unclassified retries (workers={workers}): {io:?}"
+            );
+            prop_assert!(
+                io.faults_permanent == 0,
+                "spurious permanent fault (workers={workers})"
+            );
+            retry_counts.push(io.retries);
+        }
+        // The retry count is part of the deterministic accounting: it must
+        // not depend on the worker count.
+        prop_assert!(
+            retry_counts.iter().all(|&r| r == retry_counts[0]),
+            "retry accounting diverged across worker counts: {retry_counts:?}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chaos_permanent_faults_fail_typed_or_degrade() {
+    let dir = TempDir::new("prop-chaos-perm").unwrap();
+    let mut cfg = TahoeConfig::tiny();
+    cfg.n_plates = 2;
+    cfg.cells_per_plate = 300;
+    generate(&cfg, dir.path()).unwrap();
+    let backend: Arc<dyn Backend> = Arc::new(open_collection(dir.path()).unwrap());
+    let n = backend.n_rows();
+    check("chaos-permanent", 8, |rng| {
+        let mut base = LoaderConfig::default();
+        base.sampling.strategy = Strategy::BlockShuffling {
+            block_size: rng.range(1, 48),
+        };
+        let m = rng.range(1, 60);
+        let f = rng.range(1, 6);
+        base.sampling.batch_size = m;
+        base.sampling.fetch_factor = f;
+        base.sampling.seed = rng.next_u64();
+        base.sampling.seed_schema = if rng.bernoulli(0.5) {
+            SeedSchema::V1
+        } else {
+            SeedSchema::V2
+        };
+        base.label_cols = vec!["plate".into()];
+        base.workers.num_workers = rng.range(0, 3);
+        // Transient noise on top, fully covered by the budget — only the
+        // permanent range may surface.
+        let burst = rng.range(1, 3) as u32;
+        base.resilience.retry = RetryPolicy {
+            max_attempts: burst as usize + 1,
+            backoff_base_ms: 0,
+            backoff_cap_ms: 0,
+            deadline_ms: 0,
+        };
+        // A non-empty row range: the epoch covers every row, so at least
+        // one fetch is guaranteed to touch it and fail permanently.
+        let lo = rng.range(0, n - 1) as u32;
+        let hi = lo + rng.range(1, n - lo as usize) as u32;
+        let faults = FaultConfig {
+            seed: rng.next_u64(),
+            fault_rate: rng.f64() * 0.5,
+            max_failures: burst,
+            permanent_rows: Some((lo, hi)),
+            ..FaultConfig::default()
+        };
+        let fail_fast = rng.bernoulli(0.5);
+        base.resilience.degrade = if fail_fast {
+            DegradeMode::FailFast
+        } else {
+            DegradeMode::SkipFetch
+        };
+        let injector: Arc<dyn Backend> =
+            Arc::new(FaultInjectingBackend::new(backend.clone(), faults));
+        let ds = ScDataset::builder(injector)
+            .config(base.clone())
+            .build()
+            .map_err(|e| e.to_string())?;
+        let mut iter = ds.epoch(0).map_err(|e| e.to_string())?;
+        let mut rows: Vec<u32> = Vec::new();
+        let mut err = None;
+        for mb in &mut iter {
+            match mb {
+                Ok(mb) => rows.extend(mb.rows),
+                Err(e) => {
+                    err = Some(e);
+                    break;
+                }
+            }
+        }
+        let stats = iter.stats();
+        if fail_fast {
+            let err = err.ok_or("fail-fast never surfaced the permanent fault")?;
+            prop_assert!(
+                classify(&err) == FaultKind::Permanent,
+                "terminal error lost its type: {err:#}"
+            );
+            let msg = format!("{err:#}");
+            prop_assert!(
+                msg.contains("permanent I/O fault"),
+                "taxonomy missing from message: {msg}"
+            );
+            // Permanent faults must not be retried blindly.
+            prop_assert!(
+                msg.contains("failed after 1 attempt(s)"),
+                "permanent fault was blind-retried: {msg}"
+            );
+        } else {
+            prop_assert!(
+                err.is_none(),
+                "skip-fetch leaked an error: {:#}",
+                err.unwrap()
+            );
+            prop_assert!(stats.degraded_fetches >= 1, "nothing was degraded");
+            // Dropped fetches are exactly the ones touching [lo, hi): no
+            // row from the range survives, no row is duplicated, and the
+            // fetch accounting closes.
+            let n_fetches = n.div_ceil(m * f) as u64;
+            prop_assert!(
+                stats.fetches + stats.degraded_fetches == n_fetches,
+                "fetch accounting leaked: {} + {} != {n_fetches}",
+                stats.fetches,
+                stats.degraded_fetches
+            );
+            prop_assert!(
+                rows.iter().all(|&r| r < lo || r >= hi),
+                "a row from the permanent range was emitted"
+            );
+            let mut uniq = rows.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            prop_assert!(uniq.len() == rows.len(), "duplicated rows");
+            prop_assert!(rows.len() < n, "nothing was actually dropped");
+            prop_assert!(stats.io.faults_permanent >= 1, "fault counter silent");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chaos_kill_resume_stream_identical() {
+    // Checkpoint/resume under recovered faults: a writer running over a
+    // fault injector checkpoints mid-epoch; a reader over a *different*
+    // fault schedule (and execution shape) resumes. Both the delivered
+    // prefix and the resumed suffix must match the fault-free stream.
+    let dir = TempDir::new("prop-chaos-resume").unwrap();
+    let mut cfg = TahoeConfig::tiny();
+    cfg.n_plates = 2;
+    cfg.cells_per_plate = 300;
+    generate(&cfg, dir.path()).unwrap();
+    let backend: Arc<dyn Backend> = Arc::new(open_collection(dir.path()).unwrap());
+    check("chaos-kill-resume", 8, |rng| {
+        let mut base = LoaderConfig::default();
+        base.sampling.strategy = Strategy::BlockShuffling {
+            block_size: rng.range(1, 48),
+        };
+        base.sampling.batch_size = rng.range(1, 60);
+        base.sampling.fetch_factor = rng.range(1, 6);
+        base.sampling.seed = rng.next_u64();
+        base.sampling.seed_schema = if rng.bernoulli(0.5) {
+            SeedSchema::V1
+        } else {
+            SeedSchema::V2
+        };
+        base.label_cols = vec!["plate".into()];
+        base.workers.num_workers = rng.range(0, 3);
+        let burst = rng.range(1, 4) as u32;
+        base.resilience.retry = RetryPolicy {
+            max_attempts: burst as usize + 1,
+            backoff_base_ms: 0,
+            backoff_cap_ms: 0,
+            deadline_ms: 0,
+        };
+        let writer_faults = FaultConfig {
+            seed: rng.next_u64(),
+            fault_rate: 0.25 + rng.f64() * 0.75,
+            max_failures: burst,
+            ..FaultConfig::default()
+        };
+        let reader_faults = FaultConfig {
+            seed: rng.next_u64(),
+            ..writer_faults
+        };
+        let epoch = rng.range(0, 3) as u64;
+        type Stream = Vec<(Vec<u32>, scdata::store::CsrBatch, Vec<Vec<u16>>)>;
+        // Fault-free reference.
+        let clean = ScDataset::builder(backend.clone())
+            .config(base.clone())
+            .build()
+            .map_err(|e| e.to_string())?;
+        let mut full: Stream = Vec::new();
+        for mb in clean.epoch(epoch).map_err(|e| e.to_string())? {
+            let mb = mb.map_err(|e| e.to_string())?;
+            full.push((mb.rows, mb.x, mb.labels));
+        }
+        prop_assert!(!full.is_empty(), "empty epoch");
+        // Writer under faults: the delivered prefix must already match.
+        let writer = ScDataset::builder(Arc::new(FaultInjectingBackend::new(
+            backend.clone(),
+            writer_faults,
+        )) as Arc<dyn Backend>)
+            .config(base.clone())
+            .build()
+            .map_err(|e| e.to_string())?;
+        let kill = rng.range(0, full.len() + 1);
+        let mut iter = writer.epoch(epoch).map_err(|e| e.to_string())?;
+        for i in 0..kill {
+            let mb = iter
+                .next()
+                .ok_or_else(|| format!("faulty stream ended early at {i}"))?
+                .map_err(|e| e.to_string())?;
+            prop_assert!(
+                (mb.rows.clone(), mb.x.clone(), mb.labels.clone()) == full[i],
+                "faulty prefix diverged at {i}"
+            );
+        }
+        let ckpt = iter.checkpoint();
+        drop(iter);
+        // Reader under a different schedule and execution shape.
+        let mut other = base.clone();
+        other.workers.num_workers = rng.range(0, 5);
+        other.workers.in_flight = rng.range(1, 6);
+        let reader = ScDataset::builder(Arc::new(FaultInjectingBackend::new(
+            backend.clone(),
+            reader_faults,
+        )) as Arc<dyn Backend>)
+            .config(other)
+            .build()
+            .map_err(|e| e.to_string())?;
+        let mut resumed: Stream = Vec::new();
+        for mb in reader.resume(&ckpt).map_err(|e| e.to_string())? {
+            let mb = mb.map_err(|e| e.to_string())?;
+            resumed.push((mb.rows, mb.x, mb.labels));
+        }
+        prop_assert!(
+            resumed == full[kill..],
+            "resumed-under-faults suffix diverged (kill={kill}/{} schema={:?})",
+            full.len(),
+            base.sampling.seed_schema
+        );
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_kill_resume_stream_identical() {
     // Checkpoint/resume acceptance, fuzzed: for a random sampling config
