@@ -16,6 +16,7 @@ use crate::config::AppConfig;
 use crate::coordinator::{
     CacheConfig, DegradeMode, IoConfig, ResilienceConfig, RetryPolicy, SeedSchema, WorkerConfig,
 };
+use crate::store::{RemoteConfig, REMOTE_COALESCE_GAP_BYTES};
 
 #[derive(Clone, Debug, Default)]
 pub struct Args {
@@ -153,6 +154,34 @@ impl Args {
                 })?,
             },
         })
+    }
+
+    /// The shared `--remote-url` / `--remote-connections` /
+    /// `--remote-timeout-ms` → [`RemoteConfig`] mapping. `defaults` is
+    /// usually the app config's `[remote]` table; an empty resulting
+    /// `url` keeps every backend on the local filesystem.
+    pub fn remote_config(&self, defaults: &RemoteConfig) -> Result<RemoteConfig> {
+        Ok(RemoteConfig {
+            url: self.str_or("remote-url", &defaults.url),
+            connections: self.usize_or("remote-connections", defaults.connections)?,
+            timeout_ms: self.usize_or("remote-timeout-ms", defaults.timeout_ms as usize)? as u64,
+        })
+    }
+
+    /// The effective `[io]` config once the remote decision is made:
+    /// when a remote URL is active and nobody pinned the coalesce gap
+    /// (neither the config file — `AppConfig::io_gap_explicit` — nor a
+    /// `--coalesce-gap-bytes` flag), the network-sized
+    /// [`REMOTE_COALESCE_GAP_BYTES`] replaces the local-disk default:
+    /// per-request overhead over a network dwarfs tolerated gap bytes.
+    /// An explicit gap always wins, local or remote.
+    pub fn effective_io_config(&self, cfg: &AppConfig, remote: &RemoteConfig) -> Result<IoConfig> {
+        let mut io = self.io_config(cfg.io)?;
+        let pinned = cfg.io_gap_explicit || self.flags.contains_key("coalesce-gap-bytes");
+        if remote.enabled() && !pinned {
+            io.coalesce_gap_bytes = REMOTE_COALESCE_GAP_BYTES;
+        }
+        Ok(io)
     }
 
     /// The shared `--seed-schema v1|v2` → [`SeedSchema`] mapping.
@@ -316,6 +345,50 @@ mod tests {
         assert!(parse("train --retry-max-attempts lots")
             .resilience_config(defaults)
             .is_err());
+    }
+
+    #[test]
+    fn remote_flags_map_onto_typed_config() {
+        let defaults = RemoteConfig::default();
+        let a = parse("train --remote-url http://127.0.0.1:9000/t --remote-connections 2 --remote-timeout-ms 500");
+        let r = a.remote_config(&defaults).unwrap();
+        assert_eq!(r.url, "http://127.0.0.1:9000/t");
+        assert_eq!(r.connections, 2);
+        assert_eq!(r.timeout_ms, 500);
+        assert!(r.enabled());
+        let r = parse("train").remote_config(&defaults).unwrap();
+        assert_eq!(r, defaults, "unset flags keep the given defaults");
+        assert!(!r.enabled());
+        assert!(parse("train --remote-connections lots")
+            .remote_config(&defaults)
+            .is_err());
+    }
+
+    #[test]
+    fn remote_widens_unpinned_coalesce_gap() {
+        let cfg = AppConfig::default();
+        let remote = RemoteConfig {
+            url: "http://h/x".into(),
+            ..RemoteConfig::default()
+        };
+        // Remote + no pin anywhere → the network-sized gap.
+        let io = parse("train").effective_io_config(&cfg, &remote).unwrap();
+        assert_eq!(io.coalesce_gap_bytes, REMOTE_COALESCE_GAP_BYTES);
+        // Local stays on the local-disk default.
+        let io = parse("train")
+            .effective_io_config(&cfg, &RemoteConfig::default())
+            .unwrap();
+        assert_eq!(io.coalesce_gap_bytes, cfg.io.coalesce_gap_bytes);
+        // A flag pins the gap — even to the local default value.
+        let io = parse("train --coalesce-gap-bytes 65536")
+            .effective_io_config(&cfg, &remote)
+            .unwrap();
+        assert_eq!(io.coalesce_gap_bytes, 65536);
+        // So does an explicit config-file key.
+        let mut pinned_cfg = cfg.clone();
+        pinned_cfg.io_gap_explicit = true;
+        let io = parse("train").effective_io_config(&pinned_cfg, &remote).unwrap();
+        assert_eq!(io.coalesce_gap_bytes, pinned_cfg.io.coalesce_gap_bytes);
     }
 
     #[test]

@@ -47,6 +47,7 @@ pub fn bench(args: &Args) -> Result<()> {
         "fig9" => fig9(args, &cfg, quick)?,
         "fig10" => fig10(args, &cfg, quick)?,
         "chaos" => chaos(args, &cfg, quick)?,
+        "fig11" => fig11(args, &cfg, quick)?,
         "table2" => table2(args, &cfg, quick)?,
         "all" => {
             for exp in [
@@ -59,7 +60,7 @@ pub fn bench(args: &Args) -> Result<()> {
                 bench(&sub)?;
             }
         }
-        other => bail!("unknown experiment '{other}' (fig2..fig10, eq5, table2, chaos, all)"),
+        other => bail!("unknown experiment '{other}' (fig2..fig11, eq5, table2, chaos, all)"),
     }
     Ok(())
 }
@@ -1052,6 +1053,346 @@ fn chaos(args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
         .set("degraded_fetches", Json::Num(failing as f64))
         .set("sweep", Json::Arr(points));
     write_result(&cfg.results_dir, "chaos", body)?;
+    Ok(())
+}
+
+/// `bench fig11`: the remote object-store harness. An in-process mock
+/// object server (`store::mock_http`) serves `--data DIR` over HTTP/1.1
+/// range requests, and the loader streams it through `store::remote`
+/// while the sweep crosses injected per-request latency × block cache
+/// on/off × executor `--in-flight-grid` × coalesce gap {0, 1 MiB}, under
+/// both seed schemas (pin one with `--seed-schema`). The correctness
+/// gates (always enforced) are the remote backend's headline guarantees:
+///
+/// 1. **remote ≡ local** — every cell's minibatch stream (rows plus a
+///    fingerprint over the expression payload and labels) is
+///    byte-identical to the local-filesystem run of the same sampling
+///    config, for every latency/cache/in-flight/gap setting;
+/// 2. **requests are accounted** — with the cache off,
+///    `LoadStats.io.read_calls == io.http_requests` (remote read calls
+///    are counted post-coalescing, one per ranged GET), the wire-level
+///    request count observed by the connection pool matches the
+///    deterministic per-fetch counters, every request lands in the
+///    latency histogram, and the network-sized gap never issues *more*
+///    requests than gap 0;
+/// 3. **chaos recovers** — under injected 503/408/truncation bursts at
+///    fault rate 1.0 the retry policy recovers the exact stream, with
+///    `retries > 0` proving faults actually fired.
+///
+/// Not part of `bench all` (it measures the mock transport, not the
+/// paper's figures). `--smoke` shrinks the sweep and keeps the gates so
+/// CI fails fast on remote-path regressions.
+fn fig11(args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
+    use crate::coordinator::{
+        CacheConfig, DegradeMode, IoConfig, LoadStats, LoaderConfig, ResilienceConfig,
+        RetryPolicy, ScDataset, WorkerConfig,
+    };
+    use crate::store::{
+        open_remote_handle, LatencyHistogram, MockFaultConfig, MockHttpServer, RemoteConfig,
+        RemoteStats, REMOTE_COALESCE_GAP_BYTES,
+    };
+
+    /// FNV-1a over a byte stream — the stream fingerprint accumulator.
+    fn fnv1a(h: &mut u64, bytes: &[u8]) {
+        for &b in bytes {
+            *h ^= u64::from(b);
+            *h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    /// Pool counters accumulated strictly inside one cell: `after - before`.
+    fn stats_delta(before: &RemoteStats, after: &RemoteStats) -> RemoteStats {
+        let mut latency = LatencyHistogram::default();
+        for (i, d) in latency.buckets.iter_mut().enumerate() {
+            *d = after.latency.buckets[i] - before.latency.buckets[i];
+        }
+        RemoteStats {
+            requests: after.requests - before.requests,
+            bytes_over_wire: after.bytes_over_wire - before.bytes_over_wire,
+            request_wait_ns: after.request_wait_ns - before.request_wait_ns,
+            latency,
+        }
+    }
+
+    let smoke = args.bool("smoke");
+    let quick = quick || smoke;
+    let local = open(cfg)?;
+    let latency_default: &[usize] = if quick { &[0, 3] } else { &[0, 5, 20] };
+    let latency_grid = args.usize_list_or("latency-grid", latency_default)?;
+    ensure!(!latency_grid.is_empty(), "--latency-grid must not be empty");
+    let inflight_default: &[usize] = if quick { &[1, 4] } else { &[1, 4, 8] };
+    let inflight_grid = args.usize_list_or("in-flight-grid", inflight_default)?;
+    ensure!(
+        inflight_grid.iter().all(|&x| x >= 1),
+        "--in-flight-grid entries must be >= 1"
+    );
+    let cache_mb = args.usize_or("cache-mb", 64)?;
+    ensure!(cache_mb > 0, "--cache-mb must be > 0 (the sweep supplies the off cell)");
+    let b = args.usize_or("block", 16)?;
+    let f = args.usize_or("fetch", if quick { 8 } else { 64 })?;
+    let workers = args.usize_or("workers", 2)?;
+    let gaps = [0usize, REMOTE_COALESCE_GAP_BYTES];
+    let schemas = match args.flags.get("seed-schema") {
+        Some(_) => vec![args.seed_schema_or(cfg.seed_schema)?],
+        None => vec![SeedSchema::V1, SeedSchema::V2],
+    };
+
+    // One mock server for the whole run; each sweep cell re-points its
+    // fault schedule. One connection pool per run; per-cell wire stats
+    // come from counter deltas.
+    let srv = MockHttpServer::start(&cfg.data_dir, 0, MockFaultConfig::default())?;
+    let rcfg = RemoteConfig {
+        url: srv.url(),
+        ..RemoteConfig::default()
+    };
+    let handle = open_remote_handle(&srv.url(), &rcfg)?;
+    println!(
+        "Fig 11 — remote object store over {} ({}); b={b}, f={f}, workers={workers}",
+        srv.url(),
+        handle.backend.name()
+    );
+
+    let mk_cfg = |schema: SeedSchema,
+                  in_flight: usize,
+                  cache_bytes: usize,
+                  gap: usize,
+                  resilience: ResilienceConfig| LoaderConfig {
+        sampling: SamplingConfig {
+            strategy: Strategy::BlockShuffling { block_size: b },
+            batch_size: cfg.batch_size,
+            fetch_factor: f,
+            seed: cfg.seed,
+            seed_schema: schema,
+            ..SamplingConfig::default()
+        },
+        label_cols: vec!["plate".into()],
+        workers: WorkerConfig {
+            num_workers: workers,
+            in_flight,
+            ..WorkerConfig::default()
+        },
+        cache: CacheConfig {
+            bytes: cache_bytes,
+            block_rows: cfg.cache.block_rows,
+            readahead: false,
+            locality_window: 0,
+        },
+        io: IoConfig {
+            decode_threads: cfg.io.decode_threads,
+            coalesce_gap_bytes: gap,
+        },
+        resilience,
+        ..LoaderConfig::default()
+    };
+    // Drain one epoch: emitted row ids, a fingerprint over every
+    // minibatch's rows + expression payload + label codes (the
+    // byte-identity witness), the stats snapshot, and the wall clock.
+    let run = |ds: &ScDataset| -> Result<(Vec<u32>, u64, LoadStats, std::time::Duration)> {
+        let t0 = std::time::Instant::now();
+        let mut iter = ds.epoch(0)?;
+        let mut rows = Vec::new();
+        let mut fp: u64 = 0xcbf2_9ce4_8422_2325;
+        for mb in &mut iter {
+            let mb = mb?;
+            for (r, &row) in mb.rows.iter().enumerate() {
+                fnv1a(&mut fp, &row.to_le_bytes());
+                let (idx, vals) = mb.x.row(r);
+                for &i in idx {
+                    fnv1a(&mut fp, &i.to_le_bytes());
+                }
+                for &v in vals {
+                    fnv1a(&mut fp, &v.to_bits().to_le_bytes());
+                }
+            }
+            for col in &mb.labels {
+                for &code in col {
+                    fnv1a(&mut fp, &code.to_le_bytes());
+                }
+            }
+            rows.extend(mb.rows);
+        }
+        let stats = iter.stats();
+        Ok((rows, fp, stats, t0.elapsed()))
+    };
+
+    let mut points = Vec::new();
+    for &schema in &schemas {
+        // Local-filesystem reference stream for this schema (execution
+        // knobs cannot change it, so one reference covers every cell).
+        let local_ds = ScDataset::new(
+            local.clone(),
+            mk_cfg(schema, 1, 0, 0, ResilienceConfig::default()),
+        );
+        let (want_rows, want_fp, _, local_wall) = run(&local_ds)?;
+        println!(
+            "\nseed_schema={schema}: local reference {} rows in {:.0} ms\n",
+            want_rows.len(),
+            local_wall.as_secs_f64() * 1e3
+        );
+        println!("| latency | in-flight | cache | gap | rows/s (real) | GETs | wire | ms/req |");
+        println!("|---|---|---|---|---|---|---|---|");
+        let mut merged: Vec<(usize, LatencyHistogram)> = Vec::new();
+        for &latency in &latency_grid {
+            srv.set_faults(MockFaultConfig {
+                seed: cfg.seed ^ 0xf1611,
+                latency_ms: latency as u64,
+                ..MockFaultConfig::default()
+            });
+            for &in_flight in &inflight_grid {
+                for cache_bytes in [0usize, cache_mb << 20] {
+                    // Gap 0 first: the widened gap must not cost requests.
+                    let mut gap0_requests = u64::MAX;
+                    for &gap in &gaps {
+                        let ds = ScDataset::new(
+                            handle.backend.clone(),
+                            mk_cfg(schema, in_flight, cache_bytes, gap, ResilienceConfig::default()),
+                        );
+                        let before = handle.stats();
+                        let (rows, fp, s, wall) = run(&ds)?;
+                        let wire = stats_delta(&before, &handle.stats());
+                        ensure!(
+                            rows == want_rows && fp == want_fp,
+                            "remote stream diverged from local (schema={schema}, \
+                             latency={latency}, in_flight={in_flight}, \
+                             cache={cache_bytes}, gap={gap})"
+                        );
+                        if cache_bytes == 0 {
+                            // Satellite accounting contract: remote read
+                            // calls are HTTP requests, post-coalescing.
+                            ensure!(
+                                s.io.read_calls == s.io.http_requests,
+                                "read_calls ({}) != http_requests ({}) with the cache off",
+                                s.io.read_calls,
+                                s.io.http_requests
+                            );
+                            ensure!(
+                                wire.requests == s.io.http_requests,
+                                "pool saw {} requests but per-fetch counters say {}",
+                                wire.requests,
+                                s.io.http_requests
+                            );
+                        }
+                        ensure!(
+                            wire.latency.total() == wire.requests,
+                            "every request must land in the latency histogram"
+                        );
+                        if gap == 0 {
+                            gap0_requests = wire.requests;
+                        } else {
+                            ensure!(
+                                wire.requests <= gap0_requests,
+                                "gap {gap} issued more requests ({}) than gap 0 ({gap0_requests})",
+                                wire.requests
+                            );
+                        }
+                        let rate = rows.len() as f64 / wall.as_secs_f64().max(1e-9);
+                        let mean_ms = wire.request_wait_ns as f64 / 1e6
+                            / (wire.requests.max(1)) as f64;
+                        println!(
+                            "| {latency} ms | {in_flight} | {} MiB | {} | {} | {} | {} | {mean_ms:.2} |",
+                            cache_bytes >> 20,
+                            fmt_bytes(gap as u64),
+                            fmt_rate(rate),
+                            wire.requests,
+                            fmt_bytes(wire.bytes_over_wire),
+                        );
+                        match merged.iter_mut().find(|(l, _)| *l == latency) {
+                            Some((_, h)) => h.merge(&wire.latency),
+                            None => merged.push((latency, wire.latency)),
+                        }
+                        let mut o = Json::obj();
+                        o.set("seed_schema", Json::Str(schema.as_str().into()))
+                            .set("latency_ms", Json::Num(latency as f64))
+                            .set("in_flight", Json::Num(in_flight as f64))
+                            .set("cache_mb", Json::Num((cache_bytes >> 20) as f64))
+                            .set("coalesce_gap_bytes", Json::Num(gap as f64))
+                            .set("real_samples_per_sec", Json::Num(rate))
+                            .set("http_requests", Json::Num(wire.requests as f64))
+                            .set("wire_bytes", Json::Num(wire.bytes_over_wire as f64))
+                            .set("mean_request_ms", Json::Num(mean_ms))
+                            .set("latency_histogram", Json::Str(format!("{}", wire.latency)));
+                        points.push(o);
+                    }
+                }
+            }
+        }
+        for (latency, hist) in &merged {
+            println!("request latency @ injected <{latency} ms: {hist}");
+        }
+
+        // Chaos cell: every request key meets a 503/408/truncation burst
+        // of up to 2 before succeeding. Retries re-issue a fetch's ranged
+        // GETs with the same keys, and each attempt stops at its first
+        // still-bursting key, so recovery needs at most
+        // 2 × (keys per fetch) + 1 attempts; 64 covers any gap/geometry
+        // here with a wide margin.
+        srv.set_faults(MockFaultConfig {
+            seed: cfg.seed ^ 0xc4a05,
+            fault_rate: 1.0,
+            max_failures: 2,
+            latency_ms: 0,
+        });
+        let ds = ScDataset::new(
+            handle.backend.clone(),
+            mk_cfg(
+                schema,
+                4,
+                0,
+                REMOTE_COALESCE_GAP_BYTES,
+                ResilienceConfig {
+                    retry: RetryPolicy {
+                        max_attempts: 64,
+                        backoff_base_ms: 0, // measure recovery, not sleeps
+                        backoff_cap_ms: 0,
+                        deadline_ms: 0,
+                    },
+                    degrade: DegradeMode::FailFast,
+                },
+            ),
+        );
+        let (rows, fp, s, _) = run(&ds)?;
+        srv.set_faults(MockFaultConfig::default());
+        ensure!(
+            rows == want_rows && fp == want_fp,
+            "chaos-recovered remote stream diverged from local (schema={schema})"
+        );
+        ensure!(
+            s.io.retries > 0,
+            "chaos cell saw no retries — the injector never fired"
+        );
+        println!(
+            "chaos (rate 1.0, burst <=2): recovered byte-identical with {} retries \
+             ({} transient / {} timeout / {} corrupt)",
+            s.io.retries,
+            s.io.faults_transient,
+            s.io.faults_timeout,
+            s.io.faults_corrupt
+        );
+        let mut o = Json::obj();
+        o.set("seed_schema", Json::Str(schema.as_str().into()))
+            .set("chaos", Json::Bool(true))
+            .set("retries", Json::Num(s.io.retries as f64))
+            .set("recovered", Json::Bool(true));
+        points.push(o);
+    }
+
+    if smoke {
+        println!(
+            "\nfig11 smoke OK: {} remote cells byte-identical to local, chaos recovered, \
+             {} schema(s)",
+            points.len(),
+            schemas.len()
+        );
+    }
+
+    let mut body = Json::obj();
+    body.set("experiment", Json::Str("fig11".into()))
+        .set("block", Json::Num(b as f64))
+        .set("fetch_factor", Json::Num(f as f64))
+        .set("workers", Json::Num(workers as f64))
+        .set("stream_identical", Json::Bool(true))
+        .set("server_requests", Json::Num(srv.stats().requests as f64))
+        .set("sweep", Json::Arr(points));
+    write_result(&cfg.results_dir, "fig11", body)?;
     Ok(())
 }
 

@@ -1,4 +1,5 @@
-//! Non-bench CLI commands: gen-data, info, train, autotune, calibrate.
+//! Non-bench CLI commands: gen-data, info, train, autotune, calibrate,
+//! serve.
 
 use std::sync::Arc;
 
@@ -9,7 +10,7 @@ use crate::coordinator::autotune::{finish_lanes, tune, TuneInputs, TuneOptions};
 use crate::coordinator::{SamplingConfig, Strategy};
 use crate::datagen::{self, TahoeConfig};
 use crate::store::iomodel::{simulate_loader, AccessPattern, IoReport};
-use crate::store::Backend;
+use crate::store::{open_remote_train_test, Backend, MockFaultConfig, MockHttpServer};
 use crate::train::{train_eval, Engine, TaskSpec, TrainConfig};
 use crate::util::stats::{fmt_bytes, fmt_rate};
 
@@ -128,9 +129,16 @@ pub fn train(args: &Args) -> Result<()> {
     let cfg = app_config(args)?;
     let task = TaskSpec::by_name(&args.str_or("task", "cell_line"))
         .ok_or_else(|| anyhow::anyhow!("unknown task (cell_line|drug|moa_broad|moa_fine)"))?;
-    let (train_be, test_be) = datagen::open_train_test(&cfg.data_dir)?;
-    let train_be: Arc<dyn Backend> = Arc::new(train_be);
-    let test_be: Arc<dyn Backend> = Arc::new(test_be);
+    // `--remote-url` (or `[remote] url`) swaps the local plate collection
+    // for the HTTP range-read mirror — same layout, same stream,
+    // bit-identical (rust/tests/determinism.rs).
+    let remote = args.remote_config(&cfg.remote)?;
+    let (train_be, test_be): (Arc<dyn Backend>, Arc<dyn Backend>) = if remote.enabled() {
+        open_remote_train_test(&remote.url, &remote)?
+    } else {
+        let (train_be, test_be) = datagen::open_train_test(&cfg.data_dir)?;
+        (Arc::new(train_be), Arc::new(test_be))
+    };
     let strategy = parse_strategy(args)?;
     let engine = make_engine(args, &cfg)?;
     let mut tc = TrainConfig::new(
@@ -156,10 +164,10 @@ pub fn train(args: &Args) -> Result<()> {
     // `[cache]`/`[io]`/`[workers]` config tables through the shared
     // helpers. (Sweeps/autotune intentionally ignore `[workers]`: worker
     // scaling there is modeled by the DES; `bench fig10` measures the
-    // real executor.)
-    let (cache, io) = args.loader_tuning(&cfg)?;
-    tc.loader.cache = cache;
-    tc.loader.io = io;
+    // real executor.) The effective [io] widens the coalesce gap to the
+    // network-sized default when remote is active and nobody pinned it.
+    tc.loader.cache = args.cache_config(cfg.cache)?;
+    tc.loader.io = args.effective_io_config(&cfg, &remote)?;
     tc.loader.workers = args.workers_config(cfg.workers)?;
     tc.loader.resilience = args.resilience_config(cfg.resilience)?;
     // Checkpoint/resume: flags override the `[resume]` config table. An
@@ -321,6 +329,27 @@ pub fn calibrate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Serve a local dataset directory over HTTP range reads — the in-process
+/// mock object store exposed as a command, so `scdata train --remote-url`
+/// (or any HTTP range client) can be pointed at real data. Fault-injection
+/// flags make it a chaos server: `--fault-rate`/`--max-failures` inject
+/// seed-pure 503/408/truncation bursts, `--latency-ms` adds deterministic
+/// per-request latency draws.
+pub fn serve(args: &Args) -> Result<()> {
+    let cfg = app_config(args)?;
+    let port = args.usize_or("port", 0)? as u16;
+    let faults = MockFaultConfig {
+        seed: args.usize_or("fault-seed", 0)? as u64,
+        fault_rate: args.f64_or("fault-rate", 0.0)?,
+        max_failures: args.usize_or("max-failures", 1)? as u32,
+        latency_ms: args.usize_or("latency-ms", 0)? as u64,
+    };
+    let srv = MockHttpServer::start(&cfg.data_dir, port, faults)?;
+    println!("serving {} at {}", cfg.data_dir.display(), srv.url());
+    println!("  try: scdata train --remote-url {} --max-steps 8", srv.url());
+    srv.run_forever()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -375,6 +404,25 @@ mod tests {
         .unwrap();
         train(&argv(&format!(
             "train --data {out} --task moa_broad --strategy block --block 8 --fetch 4 --max-steps 6 --lr 0.01"
+        )))
+        .unwrap();
+    }
+
+    #[test]
+    fn train_over_remote_url_smoke() {
+        // End-to-end: generate plates, serve them over HTTP, train against
+        // the remote mirror. Exercises open_remote_train_test + the
+        // widened coalesce gap + the full loader path over the wire.
+        let dir = TempDir::new("cli-remote").unwrap();
+        let out = dir.path().to_string_lossy().to_string();
+        gen_data(&argv(&format!(
+            "gen-data --out {out} --preset tiny --cells 600"
+        )))
+        .unwrap();
+        let srv = MockHttpServer::start(dir.path(), 0, MockFaultConfig::default()).unwrap();
+        train(&argv(&format!(
+            "train --remote-url {} --task cell_line --block 8 --fetch 4 --max-steps 4 --lr 0.01",
+            srv.url()
         )))
         .unwrap();
     }

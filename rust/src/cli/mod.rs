@@ -31,6 +31,8 @@ COMMANDS:
               [--locality-window N]
               [--decode-threads N] [--coalesce-gap-bytes N]
               [--checkpoint PATH] [--checkpoint-every N] [--resume PATH]
+              [--remote-url URL] [--remote-connections N]
+              [--remote-timeout-ms N]
   bench       Regenerate paper figures/tables
               fig2|fig3|fig4|eq5|fig5|fig6|fig7|fig8|fig9|fig10|table2|all
               --data DIR [--results DIR] [--quick] [--engine cpu|pjrt]
@@ -42,6 +44,12 @@ COMMANDS:
               [--coalesce-gap-bytes N] [--block N] [--fetch N] [--smoke]
               fig10 also takes [--workers-grid 0,1,2,4] [--in-flight N]
               [--epochs N] [--block N] [--fetch N] [--smoke]
+              fig11 (remote object store; not part of `all`) also takes
+              [--latency-grid 0,5,20] [--in-flight-grid 1,4,8]
+              [--cache-mb N] [--block N] [--fetch N] [--smoke]
+  serve       Serve --data DIR over HTTP range reads (mock object store)
+              [--port N (0 = ephemeral)] [--latency-ms N]
+              [--fault-rate F] [--max-failures N] [--fault-seed N]
   autotune    Recommend (block size, fetch factor, decode threads):
               --data DIR [--cache-mb N] [--decode-threads 1,2,4]
   calibrate   Print virtual-disk anchors vs the paper's measurements
@@ -92,6 +100,19 @@ worker/cache configuration. A manifest from a different stream config
 (seed, strategy, batch/fetch geometry, DDP rank) is rejected with a
 typed error. Defaults come from the [resume] table of --config FILE.
 
+Remote object stores: --remote-url http://host:port/path makes train
+read the dataset over HTTP/1.1 range requests instead of the local
+filesystem — a single .scs object, a dataset.json plate collection, or a
+meta.json zarr-like directory. The stream is bit-identical to the local
+run; chunk reads coalesce into ranged GETs over a small keep-alive
+connection pool (--remote-connections), read timeouts are typed Timeout
+faults handled by the [resilience] retry policy, and when nobody pins
+--coalesce-gap-bytes the gap widens to the network-sized 1 MiB default.
+`scdata serve` turns any local dataset directory into such an endpoint
+(with optional deterministic chaos: injected 503/408/truncation bursts
+and latency draws), and `bench fig11` sweeps injected latency × cache ×
+in-flight × coalesce-gap against it while gating on stream equality.
+
 The virtual-disk model can be overridden with --config FILE (TOML, see
 configs/default.toml).";
 
@@ -105,6 +126,7 @@ pub fn run<I: IntoIterator<Item = String>>(argv: I) -> Result<()> {
         "train" => commands::train(&args),
         "autotune" => commands::autotune(&args),
         "calibrate" => commands::calibrate(&args),
+        "serve" => commands::serve(&args),
         "bench" => bench_cmd::bench(&args),
         "help" | "--help" | "-h" => {
             println!("{HELP}");

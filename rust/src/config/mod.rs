@@ -19,6 +19,7 @@ use crate::coordinator::{
     SeedSchema, WorkerConfig,
 };
 use crate::store::iomodel::DiskModel;
+use crate::store::RemoteConfig;
 use crate::util::toml::TomlDoc;
 
 /// Top-level app configuration.
@@ -61,6 +62,18 @@ pub struct AppConfig {
     /// (both execution-only — the stream is bit-identical), while
     /// `IoConfig::default()` stays serial/off for library callers.
     pub io: IoConfig,
+    /// Whether the config file set `io.coalesce_gap_bytes` explicitly.
+    /// Remote backends want a much larger gap than local disk (per-request
+    /// network overhead dwarfs tolerated gap bytes), so when a remote URL
+    /// is active and the user did **not** pin a gap, the CLI swaps in
+    /// `REMOTE_COALESCE_GAP_BYTES`. Bookkeeping only — never compared by
+    /// the round-trip drift tests, since parsing the generated defaults
+    /// document necessarily marks the key explicit.
+    pub io_gap_explicit: bool,
+    /// `[remote]` table: HTTP object-store access for `--remote-url`
+    /// runs (`store::remote`). Empty `url` (the default) keeps every
+    /// backend on the local filesystem.
+    pub remote: RemoteConfig,
     /// `[resilience]` table: typed-fault retry policy + degrade mode.
     /// Like `[io]`, the app default diverges from the library default on
     /// purpose: CLI runs get `retry_max_attempts = 3` (transient I/O
@@ -108,6 +121,8 @@ impl Default for AppConfig {
                 decode_threads: 0,          // auto: one per core
                 coalesce_gap_bytes: 64 << 10,
             },
+            io_gap_explicit: false,
+            remote: RemoteConfig::default(),
             resilience: ResilienceConfig {
                 retry: RetryPolicy {
                     max_attempts: 3, // app default: retry transient faults
@@ -199,8 +214,14 @@ impl AppConfig {
         let resume_path = doc.str_or("resume.path", &cfg.resume.path.to_string_lossy());
         cfg.resume.path = PathBuf::from(resume_path);
         cfg.resume.every_steps = doc.usize_or("resume.every_steps", cfg.resume.every_steps);
+        // [remote] table: HTTP object-store access
+        cfg.remote.url = doc.str_or("remote.url", &cfg.remote.url);
+        cfg.remote.connections = doc.usize_or("remote.connections", cfg.remote.connections);
+        cfg.remote.timeout_ms =
+            doc.usize_or("remote.timeout_ms", cfg.remote.timeout_ms as usize) as u64;
         // [io] table: decode pipeline + disk-model overrides
         cfg.io.decode_threads = doc.usize_or("io.decode_threads", cfg.io.decode_threads);
+        cfg.io_gap_explicit = doc.get("io.coalesce_gap_bytes").is_some();
         cfg.io.coalesce_gap_bytes =
             doc.usize_or("io.coalesce_gap_bytes", cfg.io.coalesce_gap_bytes);
         let d = &mut cfg.disk;
@@ -257,6 +278,11 @@ impl AppConfig {
              decode_threads = {dt}\n\
              coalesce_gap_bytes = {gap}\n\
              \n\
+             [remote]\n\
+             url = \"{rurl}\"\n\
+             connections = {rcon}\n\
+             timeout_ms = {rtmo}\n\
+             \n\
              [resilience]\n\
              retry_max_attempts = {rma}\n\
              retry_backoff_ms = {rbb}\n\
@@ -283,6 +309,9 @@ impl AppConfig {
             lw = d.cache.locality_window,
             dt = d.io.decode_threads,
             gap = d.io.coalesce_gap_bytes,
+            rurl = d.remote.url,
+            rcon = d.remote.connections,
+            rtmo = d.remote.timeout_ms,
             rma = d.resilience.retry.max_attempts,
             rbb = d.resilience.retry.backoff_base_ms,
             rbc = d.resilience.retry.backoff_cap_ms,
@@ -309,8 +338,12 @@ mod tests {
         assert_eq!(a.workers, b.workers);
         assert_eq!(a.cache, b.cache);
         assert_eq!(a.io, b.io);
+        assert_eq!(a.remote, b.remote);
         assert_eq!(a.resilience, b.resilience);
         assert_eq!(a.resume, b.resume);
+        // (io_gap_explicit is parse bookkeeping, deliberately excluded:
+        // parsing any document that spells out coalesce_gap_bytes — the
+        // generated defaults included — marks it explicit.)
     }
 
     #[test]
@@ -501,6 +534,40 @@ coalesce_gap_bytes = 65536
         // off (the app-level default enables both; see AppConfig::default)
         assert_eq!(IoConfig::default().decode_threads, 1);
         assert_eq!(IoConfig::default().coalesce_gap_bytes, 0);
+    }
+
+    #[test]
+    fn remote_table_parses() {
+        let c = AppConfig::from_toml(
+            r#"
+[remote]
+url = "http://127.0.0.1:9000/tahoe"
+connections = 8
+timeout_ms = 5000
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.remote.url, "http://127.0.0.1:9000/tahoe");
+        assert_eq!(c.remote.connections, 8);
+        assert_eq!(c.remote.timeout_ms, 5000);
+        assert!(c.remote.enabled());
+        // defaults: remote off, everything stays on the local filesystem
+        let d = AppConfig::default();
+        assert_eq!(d.remote, RemoteConfig::default());
+        assert!(!d.remote.enabled());
+    }
+
+    #[test]
+    fn coalesce_gap_explicitness_is_tracked() {
+        // Satellite of the remote backend: an unset gap lets `--remote-url`
+        // runs swap in the network-sized default; a pinned gap — even one
+        // equal to the local default — must win.
+        let c = AppConfig::from_toml("[remote]\nurl = \"http://h/x\"\n").unwrap();
+        assert!(!c.io_gap_explicit, "gap not mentioned → CLI may retune it");
+        let c = AppConfig::from_toml("[io]\ncoalesce_gap_bytes = 65536\n").unwrap();
+        assert!(c.io_gap_explicit, "pinned gap is honored verbatim");
+        let c = AppConfig::from_toml("[io]\ndecode_threads = 2\n").unwrap();
+        assert!(!c.io_gap_explicit, "other [io] keys don't pin the gap");
     }
 
     #[test]

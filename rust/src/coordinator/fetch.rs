@@ -224,9 +224,9 @@ impl FetchRetry {
             return (execute_fetch(backend, indices), 0);
         }
         let mut rng = domains::retry_backoff(self.seed, epoch, fetch_id);
-        let deadline = (p.deadline_ms > 0).then(|| {
-            std::time::Instant::now() + std::time::Duration::from_millis(p.deadline_ms)
-        });
+        let started = std::time::Instant::now();
+        let deadline =
+            (p.deadline_ms > 0).then(|| started + std::time::Duration::from_millis(p.deadline_ms));
         let mut wait_ns = 0u64;
         // Recovered-fault accounting, folded into the eventual success's
         // IoReport so it rides the normal delivery-time stats plumbing.
@@ -245,6 +245,7 @@ impl FetchRetry {
                     let in_deadline =
                         deadline.is_none_or(|d| std::time::Instant::now() < d);
                     if !kind.is_retryable() || !budget_left || !in_deadline {
+                        let deadline_exceeded = kind.is_retryable() && budget_left;
                         let reason = if !kind.is_retryable() {
                             format!("{kind} faults are not retryable")
                         } else if !budget_left {
@@ -252,13 +253,29 @@ impl FetchRetry {
                         } else {
                             format!("per-fetch deadline of {} ms exceeded", p.deadline_ms)
                         };
-                        return (
-                            Err(e.context(format!(
-                                "fetch {fetch_id} (epoch {epoch}) failed after \
-                                 {attempts} attempt(s): {reason}"
-                            ))),
-                            wait_ns,
-                        );
+                        let err = e.context(format!(
+                            "fetch {fetch_id} (epoch {epoch}) failed after \
+                             {attempts} attempt(s): {reason}"
+                        ));
+                        // A fetch that dies purely because attempts (e.g.
+                        // high-latency remote requests) ate the deadline
+                        // must surface as a Timeout, not inherit whatever
+                        // kind the last attempt happened to fail with:
+                        // `classify` takes the outermost IoFault in the
+                        // chain, so degrade-mode and operator triage see
+                        // "deadline exceeded", with the elapsed time and
+                        // attempt count preserved in the error chain.
+                        let err = if deadline_exceeded {
+                            err.context(IoFault::timeout(format!(
+                                "per-fetch deadline of {} ms exceeded after {attempts} \
+                                 attempt(s) ({} ms elapsed)",
+                                p.deadline_ms,
+                                started.elapsed().as_millis()
+                            )))
+                        } else {
+                            err
+                        };
+                        return (Err(err), wait_ns);
                     }
                     folded.retries += 1;
                     folded.count_fault(kind);
@@ -512,6 +529,42 @@ mod tests {
         for (bv, gv) in bx.data.iter().zip(&gx.data) {
             assert!((bv.ln_1p() - gv).abs() < 1e-6, "{bv} vs {gv}");
         }
+    }
+
+    #[test]
+    fn deadline_exhaustion_surfaces_as_timeout() {
+        use crate::store::fault::classify;
+        use crate::store::{FaultConfig, FaultInjectingBackend, FaultKind};
+        let (_d, b) = backend();
+        let faulty: Arc<dyn Backend> = Arc::new(FaultInjectingBackend::new(
+            b,
+            FaultConfig {
+                seed: 3,
+                fault_rate: 1.0,
+                max_failures: u32::MAX, // bursts far outlast the deadline
+                ..FaultConfig::default()
+            },
+        ));
+        let retry = FetchRetry {
+            policy: RetryPolicy {
+                max_attempts: usize::MAX, // budget never exhausts
+                backoff_base_ms: 1,
+                backoff_cap_ms: 1,
+                deadline_ms: 5,
+            },
+            seed: 1,
+        };
+        let (res, _wait) = retry.execute(&faulty, &[0, 1, 2], 0, 0);
+        let err = res.unwrap_err();
+        // The fetch died purely because attempts ate the deadline, so the
+        // outermost classification must be Timeout — whatever kind the
+        // last injected fault happened to be — with the elapsed time and
+        // attempt count preserved in the chain.
+        assert_eq!(classify(&err), FaultKind::Timeout, "{err:#}");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("per-fetch deadline of 5 ms exceeded"), "{msg}");
+        assert!(msg.contains("ms elapsed"), "{msg}");
+        assert!(msg.contains("attempt(s)"), "{msg}");
     }
 
     #[test]

@@ -45,9 +45,11 @@ use super::iomodel::{AccessPattern, IoReport};
 use super::obs::ObsFrame;
 use super::{check_sorted_indices, contiguous_runs, Backend, FetchResult};
 
-const MAGIC: &[u8; 8] = b"SCDATA1\n";
-const FOOTER_LEN: u64 = 80;
-const FLAG_DEFLATE: u64 = 1;
+// Shared with the HTTP range-read mirror in `store::remote`, which parses
+// the same on-disk layout over the wire.
+pub(crate) const MAGIC: &[u8; 8] = b"SCDATA1\n";
+pub(crate) const FOOTER_LEN: u64 = 80;
+pub(crate) const FLAG_DEFLATE: u64 = 1;
 
 /// Streaming writer for `.scs` files.
 pub struct StoreWriter {

@@ -71,6 +71,22 @@ pub struct IoReport {
     /// Permanent (non-retryable) faults — only ever non-zero on reports
     /// aggregated at delivery for failed or skipped fetches.
     pub faults_permanent: u64,
+    /// HTTP range requests a remote backend issued to serve this fetch
+    /// (zero for local backends). Counted *post-coalescing* — one per
+    /// ranged GET — so for remote backends `http_requests ==
+    /// read_calls` and fig8/fig9 read-call accounting stays comparable
+    /// across backends. Deterministic: planned from the requested
+    /// indices and the coalesce gap, never from wall clock, so per-fetch
+    /// reports are bitwise-equal across worker counts. Wall-clock
+    /// request latency lives in
+    /// [`RemoteStats`](crate::store::remote::RemoteStats) instead.
+    pub http_requests: u64,
+    /// Response-body bytes a remote backend received over the wire for
+    /// this fetch (zero for local backends). May exceed `bytes` when the
+    /// gap-tolerant coalescer reads tolerated gaps between chunks, and
+    /// may be below it when payloads are compressed. Deterministic, like
+    /// `http_requests`.
+    pub http_bytes: u64,
 }
 
 impl IoReport {
@@ -91,6 +107,8 @@ impl IoReport {
         self.faults_timeout += other.faults_timeout;
         self.faults_corrupt += other.faults_corrupt;
         self.faults_permanent += other.faults_permanent;
+        self.http_requests += other.http_requests;
+        self.http_bytes += other.http_bytes;
     }
 
     /// Record one observed fault of the given class.
@@ -102,6 +120,76 @@ impl IoReport {
             Corrupt => self.faults_corrupt += 1,
             Permanent => self.faults_permanent += 1,
         }
+    }
+}
+
+/// Fixed power-of-two millisecond buckets for request-latency
+/// observability: `< 1 ms`, `< 2 ms`, `< 4 ms`, …, `< 128 ms`, `≥ 128 ms`.
+pub const LATENCY_BUCKETS: usize = 9;
+
+/// A fixed-bucket histogram of per-request wall-clock latency.
+///
+/// Wall clocks are *not* worker-count-invariant, so this never lives in a
+/// per-fetch [`IoReport`] — remote backends accumulate it in their
+/// cumulative [`RemoteStats`](crate::store::remote::RemoteStats), the same
+/// separation [`LoadStats`](crate::coordinator::LoadStats) applies to
+/// `retry_wait_ns`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    pub buckets: [u64; LATENCY_BUCKETS],
+}
+
+impl LatencyHistogram {
+    /// Bucket index for a latency in nanoseconds.
+    pub fn bucket_of(ns: u64) -> usize {
+        let ms = ns / 1_000_000;
+        (64 - ms.leading_zeros() as usize).min(LATENCY_BUCKETS - 1)
+    }
+
+    /// Record one request's latency.
+    pub fn record(&mut self, ns: u64) {
+        self.buckets[Self::bucket_of(ns)] += 1;
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+    }
+
+    /// Total requests recorded.
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Human label for bucket `i`, e.g. `"<4ms"` / `">=128ms"`.
+    pub fn label(i: usize) -> String {
+        if i + 1 == LATENCY_BUCKETS {
+            format!(">={}ms", 1u64 << (LATENCY_BUCKETS - 2))
+        } else {
+            format!("<{}ms", 1u64 << i)
+        }
+    }
+}
+
+impl std::fmt::Display for LatencyHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut first = true;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            if !first {
+                write!(f, " ")?;
+            }
+            write!(f, "{}:{}", LatencyHistogram::label(i), n)?;
+            first = false;
+        }
+        if first {
+            write!(f, "(empty)")?;
+        }
+        Ok(())
     }
 }
 
@@ -541,5 +629,50 @@ mod tests {
         a.add(&b);
         assert_eq!(a.rows, rows);
         assert_eq!(a.calls, 2);
+    }
+
+    #[test]
+    fn io_report_add_sums_wire_counters() {
+        let mut a = IoReport {
+            http_requests: 3,
+            http_bytes: 100,
+            ..IoReport::default()
+        };
+        let b = IoReport {
+            http_requests: 2,
+            http_bytes: 50,
+            ..IoReport::default()
+        };
+        a.add(&b);
+        assert_eq!(a.http_requests, 5);
+        assert_eq!(a.http_bytes, 150);
+    }
+
+    #[test]
+    fn latency_bucket_boundaries() {
+        let ms = 1_000_000u64;
+        assert_eq!(LatencyHistogram::bucket_of(0), 0);
+        assert_eq!(LatencyHistogram::bucket_of(ms - 1), 0);
+        assert_eq!(LatencyHistogram::bucket_of(ms), 1);
+        assert_eq!(LatencyHistogram::bucket_of(3 * ms), 2);
+        assert_eq!(LatencyHistogram::bucket_of(127 * ms), 7);
+        assert_eq!(LatencyHistogram::bucket_of(128 * ms), LATENCY_BUCKETS - 1);
+        assert_eq!(LatencyHistogram::bucket_of(u64::MAX), LATENCY_BUCKETS - 1);
+    }
+
+    #[test]
+    fn latency_histogram_record_merge_display() {
+        let mut h = LatencyHistogram::default();
+        assert_eq!(format!("{h}"), "(empty)");
+        h.record(0);
+        h.record(2_500_000); // <4ms bucket
+        let mut g = LatencyHistogram::default();
+        g.record(2_000_000);
+        h.merge(&g);
+        assert_eq!(h.total(), 3);
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[2], 2);
+        assert_eq!(format!("{h}"), "<1ms:1 <4ms:2");
+        assert_eq!(LatencyHistogram::label(LATENCY_BUCKETS - 1), ">=128ms");
     }
 }

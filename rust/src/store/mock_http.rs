@@ -1,0 +1,794 @@
+//! In-process mock object server for exercising the remote read path.
+//!
+//! A tiny HTTP/1.1 server (std `TcpListener`, one thread per connection)
+//! that serves a local directory the way an object store would: `GET` /
+//! `HEAD` with single-range, multi-range (`multipart/byteranges`), and
+//! suffix-range support, persistent connections, and **seed-pure fault
+//! injection** so the resilience layer ([`classify`](super::fault::classify)
+//! / `RetryPolicy` / `DegradeMode`) is exercised over the wire:
+//!
+//! * injected `503 Service Unavailable` → [`FaultKind::Transient`],
+//! * injected `408 Request Timeout` → [`FaultKind::Timeout`],
+//! * injected body truncation (full headers, short body, close) →
+//!   [`FaultKind::Corrupt`] at the client,
+//! * injected latency → wall-clock delay only (and, when it outlives the
+//!   client's read timeout, a typed timeout at the client).
+//!
+//! Faults follow the same deterministic-burst contract as
+//! [`FaultInjectingBackend`](super::fault::FaultInjectingBackend): the
+//! schedule is pure in `(seed, key)` where `key` identifies the logical
+//! request (object path + range start), and the first `n` requests for a
+//! key fail before requests for that key succeed. A retried fetch re-issues
+//! byte-identical requests, so a retry budget exceeding the total injected
+//! burst across the ranges a fetch touches is guaranteed to recover —
+//! regardless of worker count, connection reuse, or thread timing.
+//!
+//! [`FaultKind::Transient`]: super::fault::FaultKind::Transient
+//! [`FaultKind::Timeout`]: super::fault::FaultKind::Timeout
+//! [`FaultKind::Corrupt`]: super::fault::FaultKind::Corrupt
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::fs::FileExt;
+use std::path::{Component, Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::rng::domains;
+
+/// Injected-fault knobs for the mock server. The schedule is pure in
+/// `(seed, request key)` — see the module docs for the burst contract.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MockFaultConfig {
+    /// Seed for the injection schedule (a chaos knob, independent of the
+    /// sampling seed).
+    pub seed: u64,
+    /// Probability a request key gets an injected fault burst.
+    pub fault_rate: f64,
+    /// Burst length cap: an afflicted key fails `1..=max_failures` times
+    /// before its requests succeed.
+    pub max_failures: u32,
+    /// Upper bound (exclusive, ms) on injected per-request latency drawn
+    /// per key; `0` disables latency injection.
+    pub latency_ms: u64,
+}
+
+impl Default for MockFaultConfig {
+    fn default() -> MockFaultConfig {
+        MockFaultConfig {
+            seed: 0,
+            fault_rate: 0.0,
+            max_failures: 1,
+            latency_ms: 0,
+        }
+    }
+}
+
+/// What the server injects for one burst position of an afflicted key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum InjectMode {
+    /// Respond `503 Service Unavailable`.
+    Unavailable,
+    /// Respond `408 Request Timeout`.
+    Timeout,
+    /// Send full headers with the true `Content-Length`, write half the
+    /// body, then close the connection (a short read at the client).
+    Truncate,
+}
+
+/// Cumulative request counters (observability for tests and `bench fig11`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MockServerStats {
+    /// Requests parsed (including ones answered with injected faults).
+    pub requests: u64,
+    /// Response-body bytes actually written.
+    pub bytes_served: u64,
+    /// Injected `503` responses.
+    pub injected_503: u64,
+    /// Injected `408` responses.
+    pub injected_408: u64,
+    /// Injected truncated bodies.
+    pub injected_truncations: u64,
+}
+
+struct ServerShared {
+    root: PathBuf,
+    faults: Mutex<MockFaultConfig>,
+    /// Requests seen per key, consumed against the injected burst in
+    /// arrival order.
+    attempts: Mutex<HashMap<u64, u32>>,
+    requests: AtomicU64,
+    bytes_served: AtomicU64,
+    injected_503: AtomicU64,
+    injected_408: AtomicU64,
+    injected_truncations: AtomicU64,
+    stop: AtomicBool,
+}
+
+/// The in-process mock object server. Binds on construction, serves until
+/// dropped (or [`MockHttpServer::run_forever`] for the `scdata serve` CLI).
+pub struct MockHttpServer {
+    addr: SocketAddr,
+    shared: Arc<ServerShared>,
+    accept: Option<JoinHandle<()>>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl MockHttpServer {
+    /// Serve `root` on `127.0.0.1:port` (`port == 0` picks an ephemeral
+    /// port) with the given fault schedule.
+    pub fn start(
+        root: impl AsRef<Path>,
+        port: u16,
+        faults: MockFaultConfig,
+    ) -> Result<MockHttpServer> {
+        let root = root.as_ref().to_path_buf();
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("bind mock server on 127.0.0.1:{port}"))?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(ServerShared {
+            root,
+            faults: Mutex::new(faults),
+            attempts: Mutex::new(HashMap::new()),
+            requests: AtomicU64::new(0),
+            bytes_served: AtomicU64::new(0),
+            injected_503: AtomicU64::new(0),
+            injected_408: AtomicU64::new(0),
+            injected_truncations: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+        });
+        let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let shared = shared.clone();
+            let handlers = handlers.clone();
+            std::thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if shared.stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let shared = shared.clone();
+                    let h = std::thread::spawn(move || handle_connection(&shared, stream));
+                    handlers.lock().unwrap().push(h);
+                }
+            })
+        };
+        Ok(MockHttpServer {
+            addr,
+            shared,
+            accept: Some(accept),
+            handlers,
+        })
+    }
+
+    /// The bound address.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The `http://…` base URL clients should use.
+    pub fn url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    /// Replace the fault schedule. Clears the per-key attempt history so
+    /// the new schedule starts fresh (the usual pattern is: open the
+    /// backend fault-free, then arm faults for the fetch phase — the same
+    /// wrap-after-open shape `FaultInjectingBackend` uses).
+    pub fn set_faults(&self, faults: MockFaultConfig) {
+        *self.shared.faults.lock().unwrap() = faults;
+        self.shared.attempts.lock().unwrap().clear();
+    }
+
+    /// Snapshot of the cumulative request counters.
+    pub fn stats(&self) -> MockServerStats {
+        MockServerStats {
+            requests: self.shared.requests.load(Ordering::Relaxed),
+            bytes_served: self.shared.bytes_served.load(Ordering::Relaxed),
+            injected_503: self.shared.injected_503.load(Ordering::Relaxed),
+            injected_408: self.shared.injected_408.load(Ordering::Relaxed),
+            injected_truncations: self.shared.injected_truncations.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Block the calling thread forever (the `scdata serve` command; the
+    /// process is terminated externally).
+    pub fn run_forever(&self) -> ! {
+        loop {
+            std::thread::park();
+        }
+    }
+}
+
+impl Drop for MockHttpServer {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::Relaxed);
+        // Wake the blocking accept() with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.handlers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// FNV-1a over the path bytes plus the little-endian range start — the
+/// deterministic identity of a logical request. A full-object `GET` uses
+/// `u64::MAX` as its start so it never collides with a range at offset 0.
+fn request_key(path: &str, range_start: u64) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in path.as_bytes().iter().chain(range_start.to_le_bytes().iter()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The seed-pure injection schedule for one request key: the per-request
+/// latency (ms) and the burst of fault modes its first requests meet.
+/// Mirrors `FaultInjectingBackend::schedule`'s draw order.
+fn schedule(f: &MockFaultConfig, key: u64) -> (u64, Vec<InjectMode>) {
+    let mut rng = domains::mock_http(f.seed, key);
+    let latency_ms = if f.latency_ms > 0 {
+        rng.below(f.latency_ms)
+    } else {
+        0
+    };
+    let n_fail = if f.fault_rate > 0.0 && f.max_failures > 0 && rng.f64() < f.fault_rate {
+        1 + rng.below(f.max_failures as u64) as u32
+    } else {
+        0
+    };
+    let modes = (0..n_fail)
+        .map(|_| match rng.below(3) {
+            0 => InjectMode::Unavailable,
+            1 => InjectMode::Timeout,
+            _ => InjectMode::Truncate,
+        })
+        .collect();
+    (latency_ms, modes)
+}
+
+/// One byte range, inclusive bounds, already clamped to the object length.
+type ByteRange = (u64, u64);
+
+/// Parse a `Range: bytes=…` header value against an object of `len` bytes.
+/// Returns `None` for an unsatisfiable or malformed header (→ 416).
+fn parse_ranges(value: &str, len: u64) -> Option<Vec<ByteRange>> {
+    let spec = value.trim().strip_prefix("bytes=")?;
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        let (a, b) = part.split_once('-')?;
+        let range = if a.is_empty() {
+            // suffix range: last n bytes
+            let n: u64 = b.parse().ok()?;
+            if n == 0 || len == 0 {
+                return None;
+            }
+            (len.saturating_sub(n), len - 1)
+        } else {
+            let start: u64 = a.parse().ok()?;
+            if start >= len {
+                return None;
+            }
+            let end = if b.is_empty() {
+                len - 1
+            } else {
+                b.parse::<u64>().ok()?.min(len - 1)
+            };
+            if end < start {
+                return None;
+            }
+            (start, end)
+        };
+        out.push(range);
+    }
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+/// Resolve a request target to a file under `root`, rejecting traversal.
+fn resolve_path(root: &Path, target: &str) -> Option<PathBuf> {
+    let path = target.split('?').next().unwrap_or(target);
+    let rel = path.trim_start_matches('/');
+    let rel = Path::new(rel);
+    for c in rel.components() {
+        match c {
+            Component::Normal(_) => {}
+            _ => return None,
+        }
+    }
+    Some(root.join(rel))
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: &str,
+    headers: &[(&str, String)],
+    body: &[u8],
+    truncate_body_to: Option<usize>,
+) -> std::io::Result<()> {
+    let mut out = Vec::with_capacity(256 + body.len());
+    out.extend_from_slice(format!("HTTP/1.1 {status}\r\n").as_bytes());
+    for (k, v) in headers {
+        out.extend_from_slice(format!("{k}: {v}\r\n").as_bytes());
+    }
+    out.extend_from_slice(format!("Content-Length: {}\r\n\r\n", body.len()).as_bytes());
+    match truncate_body_to {
+        Some(n) => out.extend_from_slice(&body[..n.min(body.len())]),
+        None => out.extend_from_slice(body),
+    }
+    stream.write_all(&out)?;
+    stream.flush()
+}
+
+fn handle_connection(shared: &ServerShared, mut stream: TcpStream) {
+    // Short read timeout so handler threads notice `stop` promptly.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let _ = stream.set_nodelay(true);
+    loop {
+        let req = match read_request(shared, &mut stream) {
+            Some(r) => r,
+            None => return,
+        };
+        if !handle_request(shared, &mut stream, &req) {
+            return;
+        }
+    }
+}
+
+/// Read one request head (through the blank line). `None` on client
+/// close, error, or server shutdown.
+fn read_request(shared: &ServerShared, stream: &mut TcpStream) -> Option<String> {
+    let mut buf: Vec<u8> = Vec::with_capacity(256);
+    let mut byte = [0u8; 1];
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            return None;
+        }
+        match stream.read(&mut byte) {
+            Ok(0) => return None,
+            Ok(_) => {
+                buf.push(byte[0]);
+                if buf.ends_with(b"\r\n\r\n") {
+                    return String::from_utf8(buf).ok();
+                }
+                if buf.len() > 16 * 1024 {
+                    return None;
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Idle keep-alive connection: keep waiting, but re-check
+                // the stop flag (and don't spin if we're mid-request).
+                continue;
+            }
+            Err(_) => return None,
+        }
+    }
+}
+
+/// Serve one parsed request. Returns `false` when the connection must
+/// close (truncation injected, `Connection: close`, or a write failure).
+fn handle_request(shared: &ServerShared, stream: &mut TcpStream, req: &str) -> bool {
+    shared.requests.fetch_add(1, Ordering::Relaxed);
+    let mut lines = req.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let target = parts.next().unwrap_or("/");
+    let mut range_header: Option<String> = None;
+    let mut keep_alive = true;
+    for line in lines {
+        let Some((k, v)) = line.split_once(':') else {
+            continue;
+        };
+        let k = k.trim().to_ascii_lowercase();
+        let v = v.trim();
+        if k == "range" {
+            range_header = Some(v.to_string());
+        } else if k == "connection" && v.eq_ignore_ascii_case("close") {
+            keep_alive = false;
+        }
+    }
+
+    let simple = |stream: &mut TcpStream, status: &str| {
+        write_response(stream, status, &[], b"", None).is_ok()
+    };
+    if method != "GET" && method != "HEAD" {
+        return simple(stream, "405 Method Not Allowed") && keep_alive;
+    }
+    let Some(path) = resolve_path(&shared.root, target) else {
+        return simple(stream, "403 Forbidden") && keep_alive;
+    };
+    let Ok(file) = std::fs::File::open(&path) else {
+        return simple(stream, "404 Not Found") && keep_alive;
+    };
+    let len = match file.metadata() {
+        Ok(m) if m.is_file() => m.len(),
+        _ => return simple(stream, "404 Not Found") && keep_alive,
+    };
+
+    let ranges = match &range_header {
+        Some(v) => match parse_ranges(v, len) {
+            Some(r) => Some(r),
+            None => {
+                let hdrs = [("Content-Range", format!("bytes */{len}"))];
+                return write_response(stream, "416 Range Not Satisfiable", &hdrs, b"", None)
+                    .is_ok()
+                    && keep_alive;
+            }
+        },
+        None => None,
+    };
+
+    // Seed-pure fault injection, keyed on the logical request identity.
+    let key_start = ranges.as_ref().map_or(u64::MAX, |r| r[0].0);
+    let target_path = target.split('?').next().unwrap_or(target);
+    let key = request_key(target_path, key_start);
+    let faults = *shared.faults.lock().unwrap();
+    let (latency_ms, modes) = schedule(&faults, key);
+    let pos = {
+        let mut attempts = shared.attempts.lock().unwrap();
+        let e = attempts.entry(key).or_insert(0);
+        let pos = *e;
+        *e += 1;
+        pos
+    };
+    if latency_ms > 0 {
+        std::thread::sleep(Duration::from_millis(latency_ms));
+    }
+    let inject = modes.get(pos as usize).copied();
+    match inject {
+        Some(InjectMode::Unavailable) => {
+            shared.injected_503.fetch_add(1, Ordering::Relaxed);
+            let hdrs = [("Retry-After", "0".to_string())];
+            return write_response(stream, "503 Service Unavailable", &hdrs, b"", None).is_ok()
+                && keep_alive;
+        }
+        Some(InjectMode::Timeout) => {
+            shared.injected_408.fetch_add(1, Ordering::Relaxed);
+            return simple(stream, "408 Request Timeout") && keep_alive;
+        }
+        Some(InjectMode::Truncate) | None => {}
+    }
+    let truncate = inject == Some(InjectMode::Truncate);
+
+    let read_span = |start: u64, end: u64| -> std::io::Result<Vec<u8>> {
+        let mut buf = vec![0u8; (end - start + 1) as usize];
+        file.read_exact_at(&mut buf, start)?;
+        Ok(buf)
+    };
+
+    // HEAD advertises the true length with no body.
+    if method == "HEAD" {
+        let out =
+            format!("HTTP/1.1 200 OK\r\nAccept-Ranges: bytes\r\nContent-Length: {len}\r\n\r\n");
+        return stream.write_all(out.as_bytes()).is_ok() && keep_alive;
+    }
+
+    let (status, headers, body) = match &ranges {
+        None => {
+            let body = if len == 0 {
+                Vec::new()
+            } else {
+                match read_span(0, len - 1) {
+                    Ok(b) => b,
+                    Err(_) => return simple(stream, "500 Internal Server Error") && keep_alive,
+                }
+            };
+            (
+                "200 OK",
+                vec![("Accept-Ranges", "bytes".to_string())],
+                body,
+            )
+        }
+        Some(rs) if rs.len() == 1 => {
+            let (start, end) = rs[0];
+            let body = match read_span(start, end) {
+                Ok(b) => b,
+                Err(_) => return simple(stream, "500 Internal Server Error") && keep_alive,
+            };
+            (
+                "206 Partial Content",
+                vec![("Content-Range", format!("bytes {start}-{end}/{len}"))],
+                body,
+            )
+        }
+        Some(rs) => {
+            // multipart/byteranges — coalesced multi-range requests.
+            const BOUNDARY: &str = "scdata-byteranges";
+            let mut body = Vec::new();
+            for &(start, end) in rs {
+                body.extend_from_slice(format!("--{BOUNDARY}\r\n").as_bytes());
+                body.extend_from_slice(
+                    format!("Content-Range: bytes {start}-{end}/{len}\r\n\r\n").as_bytes(),
+                );
+                match read_span(start, end) {
+                    Ok(b) => body.extend_from_slice(&b),
+                    Err(_) => return simple(stream, "500 Internal Server Error") && keep_alive,
+                }
+                body.extend_from_slice(b"\r\n");
+            }
+            body.extend_from_slice(format!("--{BOUNDARY}--\r\n").as_bytes());
+            (
+                "206 Partial Content",
+                vec![(
+                    "Content-Type",
+                    format!("multipart/byteranges; boundary={BOUNDARY}"),
+                )],
+                body,
+            )
+        }
+    };
+
+    let truncate_to = if truncate {
+        shared.injected_truncations.fetch_add(1, Ordering::Relaxed);
+        Some(body.len() / 2)
+    } else {
+        None
+    };
+    let served = truncate_to.unwrap_or(body.len()) as u64;
+    let ok = write_response(stream, status, &headers, &body, truncate_to).is_ok();
+    if ok {
+        shared.bytes_served.fetch_add(served, Ordering::Relaxed);
+    }
+    // A truncated body must close the connection: the advertised
+    // Content-Length exceeds what was sent, so the client's read_exact
+    // surfaces UnexpectedEof (→ Corrupt) instead of blocking.
+    ok && keep_alive && !truncate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    /// Minimal raw-socket client: send one request, read one response.
+    fn roundtrip(addr: SocketAddr, request: &str) -> (u16, Vec<(String, String)>, Vec<u8>) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(request.as_bytes()).unwrap();
+        let mut raw = Vec::new();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut byte = [0u8; 1];
+        while !raw.ends_with(b"\r\n\r\n") {
+            match s.read(&mut byte) {
+                Ok(0) => break,
+                Ok(_) => raw.push(byte[0]),
+                Err(e) => panic!("read head: {e}"),
+            }
+        }
+        let head = String::from_utf8(raw).unwrap();
+        let mut lines = head.split("\r\n");
+        let status: u16 = lines
+            .next()
+            .unwrap()
+            .split_whitespace()
+            .nth(1)
+            .unwrap()
+            .parse()
+            .unwrap();
+        let headers: Vec<(String, String)> = lines
+            .filter_map(|l| l.split_once(':'))
+            .map(|(k, v)| (k.trim().to_ascii_lowercase(), v.trim().to_string()))
+            .collect();
+        let content_length: usize = headers
+            .iter()
+            .find(|(k, _)| k == "content-length")
+            .map(|(_, v)| v.parse().unwrap())
+            .unwrap_or(0);
+        let mut body = vec![0u8; content_length];
+        let mut read = 0;
+        while read < content_length {
+            match s.read(&mut body[read..]) {
+                Ok(0) => break, // truncated on purpose
+                Ok(n) => read += n,
+                Err(e) => panic!("read body: {e}"),
+            }
+        }
+        body.truncate(read);
+        (status, headers, body)
+    }
+
+    fn serve_bytes(dir: &TempDir, name: &str, data: &[u8]) -> MockHttpServer {
+        std::fs::write(dir.join(name), data).unwrap();
+        MockHttpServer::start(dir.path(), 0, MockFaultConfig::default()).unwrap()
+    }
+
+    fn get(addr: SocketAddr, target: &str, range: Option<&str>) -> (u16, Vec<u8>) {
+        let range_line = range.map(|r| format!("Range: {r}\r\n")).unwrap_or_default();
+        let req = format!("GET {target} HTTP/1.1\r\nHost: t\r\n{range_line}\r\n");
+        let (status, _, body) = roundtrip(addr, &req);
+        (status, body)
+    }
+
+    #[test]
+    fn full_get_and_head() {
+        let dir = TempDir::new("mockhttp").unwrap();
+        let data: Vec<u8> = (0..=255u8).collect();
+        let srv = serve_bytes(&dir, "obj.bin", &data);
+        let (status, body) = get(srv.addr(), "/obj.bin", None);
+        assert_eq!(status, 200);
+        assert_eq!(body, data);
+        let (status, headers, body) =
+            roundtrip(srv.addr(), "HEAD /obj.bin HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(status, 200);
+        assert!(body.is_empty());
+        let cl = headers.iter().find(|(k, _)| k == "content-length").unwrap();
+        assert_eq!(cl.1, "256");
+        assert_eq!(srv.stats().requests, 2);
+        assert_eq!(srv.stats().bytes_served, 256);
+    }
+
+    #[test]
+    fn single_range_suffix_and_open_ended() {
+        let dir = TempDir::new("mockhttp").unwrap();
+        let data: Vec<u8> = (0..=255u8).collect();
+        let srv = serve_bytes(&dir, "obj.bin", &data);
+        let (status, body) = get(srv.addr(), "/obj.bin", Some("bytes=10-19"));
+        assert_eq!(status, 206);
+        assert_eq!(body, data[10..20]);
+        let (status, body) = get(srv.addr(), "/obj.bin", Some("bytes=250-"));
+        assert_eq!(status, 206);
+        assert_eq!(body, data[250..]);
+        let (status, body) = get(srv.addr(), "/obj.bin", Some("bytes=-4"));
+        assert_eq!(status, 206);
+        assert_eq!(body, data[252..]);
+        // Over-long end clamps to the object.
+        let (status, body) = get(srv.addr(), "/obj.bin", Some("bytes=250-9999"));
+        assert_eq!(status, 206);
+        assert_eq!(body, data[250..]);
+    }
+
+    #[test]
+    fn multi_range_multipart() {
+        let dir = TempDir::new("mockhttp").unwrap();
+        let data: Vec<u8> = (0..=255u8).collect();
+        let srv = serve_bytes(&dir, "obj.bin", &data);
+        let (status, body) = get(srv.addr(), "/obj.bin", Some("bytes=0-3, 100-103"));
+        assert_eq!(status, 206);
+        let text = String::from_utf8_lossy(&body);
+        assert!(text.contains("Content-Range: bytes 0-3/256"), "{text}");
+        assert!(text.contains("Content-Range: bytes 100-103/256"), "{text}");
+        assert!(text.contains("--scdata-byteranges--"), "{text}");
+        // Both payloads present, in order.
+        let i0 = body.windows(4).position(|w| w == [0, 1, 2, 3]).unwrap();
+        let i1 = body
+            .windows(4)
+            .position(|w| w == [100, 101, 102, 103])
+            .unwrap();
+        assert!(i0 < i1);
+    }
+
+    #[test]
+    fn errors_404_416_403_405() {
+        let dir = TempDir::new("mockhttp").unwrap();
+        let srv = serve_bytes(&dir, "obj.bin", &[1, 2, 3]);
+        assert_eq!(get(srv.addr(), "/missing.bin", None).0, 404);
+        assert_eq!(get(srv.addr(), "/obj.bin", Some("bytes=90-99")).0, 416);
+        assert_eq!(get(srv.addr(), "/obj.bin", Some("bytes=junk")).0, 416);
+        assert_eq!(get(srv.addr(), "/../etc/passwd", None).0, 403);
+        let (status, _, _) = roundtrip(srv.addr(), "POST /obj.bin HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(status, 405);
+    }
+
+    #[test]
+    fn keep_alive_serves_many_requests_per_connection() {
+        let dir = TempDir::new("mockhttp").unwrap();
+        let data: Vec<u8> = (0..=255u8).collect();
+        let srv = serve_bytes(&dir, "obj.bin", &data);
+        let mut s = TcpStream::connect(srv.addr()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        for start in [0u64, 16, 32] {
+            let req = format!(
+                "GET /obj.bin HTTP/1.1\r\nHost: t\r\nRange: bytes={start}-{}\r\n\r\n",
+                start + 3
+            );
+            s.write_all(req.as_bytes()).unwrap();
+            let mut head = Vec::new();
+            let mut b = [0u8; 1];
+            while !head.ends_with(b"\r\n\r\n") {
+                assert!(s.read(&mut b).unwrap() > 0, "server closed keep-alive");
+                head.push(b[0]);
+            }
+            let mut body = [0u8; 4];
+            s.read_exact(&mut body).unwrap();
+            assert_eq!(body[0] as u64, start);
+        }
+    }
+
+    #[test]
+    fn fault_schedule_is_pure_and_bursts_then_recovers() {
+        let f = MockFaultConfig {
+            seed: 77,
+            fault_rate: 1.0,
+            max_failures: 3,
+            latency_ms: 0,
+        };
+        let key = request_key("/obj.bin", 0);
+        let (lat_a, modes_a) = schedule(&f, key);
+        let (lat_b, modes_b) = schedule(&f, key);
+        assert_eq!((lat_a, &modes_a), (lat_b, &modes_b), "schedule must be pure");
+        assert!(!modes_a.is_empty() && modes_a.len() <= 3);
+
+        // Over the wire: the same request fails modes.len() times, then
+        // succeeds forever after.
+        let dir = TempDir::new("mockhttp").unwrap();
+        let data: Vec<u8> = (0..=255u8).collect();
+        let srv = serve_bytes(&dir, "obj.bin", &data);
+        srv.set_faults(f);
+        let mut failures = 0;
+        for attempt in 0..6 {
+            let (status, body) = get(srv.addr(), "/obj.bin", Some("bytes=0-15"));
+            let failed = status != 206 || body.len() != 16;
+            if failed {
+                failures += 1;
+                assert_eq!(
+                    attempt as usize + 1,
+                    failures,
+                    "failures must be a prefix burst"
+                );
+            }
+        }
+        assert_eq!(failures, modes_a.len());
+        let stats = srv.stats();
+        assert_eq!(
+            stats.injected_503 + stats.injected_408 + stats.injected_truncations,
+            failures as u64
+        );
+    }
+
+    #[test]
+    fn distinct_ranges_get_distinct_keys() {
+        assert_ne!(request_key("/a", 0), request_key("/a", 512));
+        assert_ne!(request_key("/a", 0), request_key("/b", 0));
+        assert_ne!(request_key("/a", 0), request_key("/a", u64::MAX));
+    }
+
+    #[test]
+    fn truncated_body_closes_connection() {
+        let dir = TempDir::new("mockhttp").unwrap();
+        let data = vec![7u8; 64];
+        let srv = serve_bytes(&dir, "obj.bin", &data);
+        // Find a seed whose first injected mode for this key is Truncate.
+        let key = request_key("/obj.bin", 0);
+        let seed = (0..200u64)
+            .find(|&seed| {
+                let f = MockFaultConfig {
+                    seed,
+                    fault_rate: 1.0,
+                    max_failures: 1,
+                    latency_ms: 0,
+                };
+                schedule(&f, key).1 == vec![InjectMode::Truncate]
+            })
+            .expect("some seed injects a lone truncation");
+        srv.set_faults(MockFaultConfig {
+            seed,
+            fault_rate: 1.0,
+            max_failures: 1,
+            latency_ms: 0,
+        });
+        let (status, body) = get(srv.addr(), "/obj.bin", Some("bytes=0-63"));
+        assert_eq!(status, 206, "headers are intact");
+        assert_eq!(body.len(), 32, "body cut at half the advertised length");
+        assert_eq!(srv.stats().injected_truncations, 1);
+        // Next request (new connection) succeeds: the burst is consumed.
+        let (status, body) = get(srv.addr(), "/obj.bin", Some("bytes=0-63"));
+        assert_eq!(status, 206);
+        assert_eq!(body.len(), 64);
+    }
+}

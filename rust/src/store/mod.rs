@@ -10,7 +10,9 @@
 //! intra-fetch parallel decode pipeline ([`decode`]: shared decode thread
 //! pool, gap-tolerant read coalescer, recycled buffer pools), and the
 //! typed I/O fault taxonomy + deterministic fault injection ([`fault`])
-//! behind the coordinator's retry layer.
+//! behind the coordinator's retry layer, and the HTTP range-read remote
+//! backends ([`remote`]) with their in-process object server
+//! ([`mock_http`]) for tests and benches.
 
 pub mod anndata;
 pub mod cache;
@@ -20,8 +22,10 @@ pub mod decode;
 pub mod fault;
 pub mod iomodel;
 pub mod memmap_dense;
+pub mod mock_http;
 pub mod multimodal;
 pub mod obs;
+pub mod remote;
 pub mod rowgroup;
 pub mod zarr_like;
 
@@ -31,8 +35,13 @@ pub use cache::{CacheConfig, CacheStats, CachingBackend};
 pub use csr::CsrBatch;
 pub use decode::{BufferPool, DecodePool, IoPipeline};
 pub use fault::{FaultConfig, FaultInjectingBackend, FaultKind, IoFault};
-pub use iomodel::{AccessPattern, DiskModel, IoReport};
+pub use iomodel::{AccessPattern, DiskModel, IoReport, LatencyHistogram};
+pub use mock_http::{MockFaultConfig, MockHttpServer, MockServerStats};
 pub use obs::{ObsColumn, ObsFrame};
+pub use remote::{
+    open_remote, open_remote_handle, open_remote_train_test, RemoteConfig, RemoteHandle,
+    RemoteStats, REMOTE_COALESCE_GAP_BYTES,
+};
 
 /// Data returned by one fetch call: the expression submatrix for the
 /// requested rows (in request order) plus the I/O accounting for the

@@ -1,0 +1,1280 @@
+//! Remote object-store backends: HTTP/1.1 range reads over the existing
+//! on-disk layouts.
+//!
+//! The engine built for local disk — gap-tolerant coalescing, the block
+//! cache, executor `in_flight`, typed faults + deterministic retry — is
+//! exactly a remote-read engine once a network [`Backend`] exists. This
+//! module provides it with a std-only client (no TLS, no HTTP/2):
+//!
+//! * [`HttpPool`] — persistent keep-alive connections to one host (small
+//!   pool, capped by [`RemoteConfig::connections`]), issuing
+//!   `Range: bytes=a-b` GETs with a per-request read timeout. Transport
+//!   and status errors map onto the PR-8 fault taxonomy: 5xx →
+//!   [`Transient`](super::fault::FaultKind::Transient), 408/read-timeout →
+//!   [`Timeout`](super::fault::FaultKind::Timeout), short bodies →
+//!   [`Corrupt`](super::fault::FaultKind::Corrupt), 404 and friends →
+//!   [`Permanent`](super::fault::FaultKind::Permanent).
+//! * [`RemoteScsStore`] / [`RemoteZarrStore`] — byte-for-byte mirrors of
+//!   [`SparseChunkStore`](super::anndata::SparseChunkStore) and
+//!   [`ShardedZarrStore`](super::zarr_like::ShardedZarrStore) that read
+//!   the same layouts over the wire. Chunk ranges coalesce through
+//!   [`coalesce_ranges`] (one ranged GET per coalesced read; for the
+//!   sharded store, never across shard objects), so `IoReport.read_calls`
+//!   counts **HTTP requests post-coalescing** and fig8/fig9 read-call
+//!   accounting stays comparable across local and remote backends.
+//! * [`open_remote`] — URL-scheme entry point: a `.scs` object, a
+//!   `dataset.json` plate-collection directory, or a `meta.json`
+//!   zarr-like directory.
+//!
+//! Determinism: which requests are issued (and therefore
+//! `IoReport.http_requests` / `http_bytes`) depends only on the requested
+//! indices and the coalesce gap — never on timing — so per-fetch reports
+//! stay bitwise-equal across worker counts. Wall-clock request latency is
+//! kept out of `IoReport` entirely and accumulated in the cumulative
+//! [`RemoteStats`] (a [`LatencyHistogram`] plus request/byte/wait
+//! counters), the same separation `LoadStats` applies to `retry_wait_ns`.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::anndata::{FLAG_DEFLATE, FOOTER_LEN, MAGIC};
+use super::collection::PlateCollection;
+use super::decode::{
+    chunk_pieces, coalesce_ranges, decode_chunk_batch, extract_chunk_rows, BufferPool, ChunkSrc,
+    IoPipeline, PipelineCell,
+};
+use super::fault::IoFault;
+use super::iomodel::{AccessPattern, IoReport, LatencyHistogram};
+use super::obs::ObsFrame;
+use super::{check_sorted_indices, contiguous_runs, Backend, FetchResult};
+
+use crate::util::json::Json;
+
+/// Default coalesce gap for remote backends: over a network, per-request
+/// overhead (round trips, connection occupancy) dwarfs the cost of
+/// reading tolerated gap bytes, so remote stores merge chunk ranges up to
+/// 1 MiB apart — versus the 64 KiB local-disk default — unless the user
+/// set `io.coalesce_gap_bytes` explicitly (see `configs/default.toml`).
+pub const REMOTE_COALESCE_GAP_BYTES: usize = 1 << 20;
+
+/// `[remote]` config: where (and how) to reach the object store.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RemoteConfig {
+    /// Base URL (`http://host:port[/path]`); empty = remote access off.
+    pub url: String,
+    /// Keep-alive connection pool cap per host.
+    pub connections: usize,
+    /// Per-request read timeout in milliseconds.
+    pub timeout_ms: u64,
+}
+
+impl Default for RemoteConfig {
+    fn default() -> RemoteConfig {
+        RemoteConfig {
+            url: String::new(),
+            connections: 4,
+            timeout_ms: 30_000,
+        }
+    }
+}
+
+impl RemoteConfig {
+    pub fn enabled(&self) -> bool {
+        !self.url.is_empty()
+    }
+}
+
+/// Cumulative wire-level observability for one [`HttpPool`] (and every
+/// store sharing it). Wall-clock fields live here — not in the per-fetch
+/// [`IoReport`] — because they are not worker-count-invariant.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RemoteStats {
+    /// HTTP requests issued (including ones that failed or were retried).
+    pub requests: u64,
+    /// Response-body bytes received on successful (2xx) responses.
+    pub bytes_over_wire: u64,
+    /// Total wall-clock nanoseconds spent waiting on requests.
+    pub request_wait_ns: u64,
+    /// Fixed-bucket per-request latency histogram.
+    pub latency: LatencyHistogram,
+}
+
+/// Split `http://host[:port][/base]` into (`host:port`, base path with no
+/// trailing slash).
+fn split_url(url: &str) -> Result<(String, String)> {
+    let rest = url.strip_prefix("http://").ok_or_else(|| {
+        anyhow!("remote url must start with http:// (the std-only client speaks no TLS): {url}")
+    })?;
+    let (host, base) = match rest.find('/') {
+        Some(i) => (&rest[..i], &rest[i..]),
+        None => (rest, ""),
+    };
+    ensure!(!host.is_empty(), "remote url has no host: {url}");
+    let host = if host.contains(':') {
+        host.to_string()
+    } else {
+        format!("{host}:80")
+    };
+    Ok((host, base.trim_end_matches('/').to_string()))
+}
+
+/// A parsed HTTP response head plus its body.
+struct HttpResponse {
+    status: u16,
+    content_length: u64,
+    keep_alive: bool,
+    body: Vec<u8>,
+}
+
+/// Why one round trip over one connection failed.
+enum TryErr {
+    /// The connection died before any response byte arrived — the classic
+    /// stale-keep-alive signature. Safe to retry once on a fresh
+    /// connection without consuming any server-side fault schedule.
+    Stale,
+    /// A real failure (timeout, mid-response close, transport error).
+    Fail(anyhow::Error),
+}
+
+/// A small keep-alive connection pool to one host. All stores opened from
+/// one URL share a pool, so its [`RemoteStats`] aggregate the whole
+/// dataset's wire activity.
+pub struct HttpPool {
+    host: String,
+    idle: Mutex<Vec<TcpStream>>,
+    cap: usize,
+    timeout: Duration,
+    requests: AtomicU64,
+    bytes: AtomicU64,
+    wait_ns: AtomicU64,
+    latency: Mutex<LatencyHistogram>,
+}
+
+impl HttpPool {
+    fn new(host: String, cfg: &RemoteConfig) -> HttpPool {
+        HttpPool {
+            host,
+            idle: Mutex::new(Vec::new()),
+            cap: cfg.connections.max(1),
+            timeout: Duration::from_millis(cfg.timeout_ms.max(1)),
+            requests: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            wait_ns: AtomicU64::new(0),
+            latency: Mutex::new(LatencyHistogram::default()),
+        }
+    }
+
+    /// The `host:port` this pool talks to (for error messages).
+    pub fn host(&self) -> &str {
+        &self.host
+    }
+
+    /// Snapshot of the cumulative wire stats.
+    pub fn stats(&self) -> RemoteStats {
+        RemoteStats {
+            requests: self.requests.load(Ordering::Relaxed),
+            bytes_over_wire: self.bytes.load(Ordering::Relaxed),
+            request_wait_ns: self.wait_ns.load(Ordering::Relaxed),
+            latency: *self.latency.lock().unwrap(),
+        }
+    }
+
+    fn connect(&self) -> Result<TcpStream> {
+        let s = TcpStream::connect(&self.host)
+            .with_context(|| format!("connect {}", self.host))?;
+        s.set_read_timeout(Some(self.timeout)).ok();
+        s.set_nodelay(true).ok();
+        Ok(s)
+    }
+
+    fn take_idle(&self) -> Option<TcpStream> {
+        self.idle.lock().unwrap().pop()
+    }
+
+    fn give_idle(&self, s: TcpStream) {
+        let mut idle = self.idle.lock().unwrap();
+        if idle.len() < self.cap {
+            idle.push(s);
+        }
+    }
+
+    fn timeout_fault(&self, what: &str) -> anyhow::Error {
+        IoFault::timeout(format!(
+            "{what} from {} within {} ms",
+            self.host,
+            self.timeout.as_millis()
+        ))
+        .into()
+    }
+
+    /// One request/response over one specific connection.
+    fn try_round_trip(
+        &self,
+        stream: &mut TcpStream,
+        request: &[u8],
+        is_head: bool,
+    ) -> std::result::Result<HttpResponse, TryErr> {
+        if stream.write_all(request).is_err() {
+            // Writes to a half-closed socket may only fail here; nothing
+            // was received, so this is at worst a stale connection.
+            return Err(TryErr::Stale);
+        }
+        // Read the head byte-by-byte through the blank line.
+        let mut head: Vec<u8> = Vec::with_capacity(256);
+        let mut byte = [0u8; 1];
+        while !head.ends_with(b"\r\n\r\n") {
+            match stream.read(&mut byte) {
+                Ok(0) => {
+                    return Err(if head.is_empty() {
+                        TryErr::Stale
+                    } else {
+                        TryErr::Fail(
+                            IoFault::corrupt(format!(
+                                "{} closed the connection mid-response-head",
+                                self.host
+                            ))
+                            .into(),
+                        )
+                    });
+                }
+                Ok(_) => {
+                    head.push(byte[0]);
+                    if head.len() > 16 * 1024 {
+                        return Err(TryErr::Fail(
+                            IoFault::corrupt(format!("oversized response head from {}", self.host))
+                                .into(),
+                        ));
+                    }
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    return Err(TryErr::Fail(self.timeout_fault("no response")));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    return Err(if head.is_empty() {
+                        TryErr::Stale
+                    } else {
+                        TryErr::Fail(
+                            anyhow::Error::new(e)
+                                .context(format!("read response head from {}", self.host)),
+                        )
+                    });
+                }
+            }
+        }
+        let head = String::from_utf8_lossy(&head);
+        let mut lines = head.split("\r\n");
+        let status_line = lines.next().unwrap_or("");
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| {
+                TryErr::Fail(
+                    IoFault::corrupt(format!(
+                        "malformed status line from {}: {status_line:?}",
+                        self.host
+                    ))
+                    .into(),
+                )
+            })?;
+        let mut content_length: Option<u64> = None;
+        let mut keep_alive = true;
+        for line in lines {
+            let Some((k, v)) = line.split_once(':') else {
+                continue;
+            };
+            let (k, v) = (k.trim().to_ascii_lowercase(), v.trim());
+            if k == "content-length" {
+                content_length = v.parse().ok();
+            } else if k == "connection" && v.eq_ignore_ascii_case("close") {
+                keep_alive = false;
+            }
+        }
+        let content_length = content_length.ok_or_else(|| {
+            TryErr::Fail(
+                IoFault::corrupt(format!("response from {} has no Content-Length", self.host))
+                    .into(),
+            )
+        })?;
+        let mut body = Vec::new();
+        if !is_head && content_length > 0 {
+            body = BufferPool::global().take_buf();
+            body.resize(content_length as usize, 0);
+            let mut read = 0usize;
+            while read < body.len() {
+                match stream.read(&mut body[read..]) {
+                    Ok(0) => {
+                        return Err(TryErr::Fail(
+                            IoFault::corrupt(format!(
+                                "response body truncated: got {read} of {content_length} \
+                                 bytes from {}",
+                                self.host
+                            ))
+                            .into(),
+                        ));
+                    }
+                    Ok(n) => read += n,
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock
+                            || e.kind() == std::io::ErrorKind::TimedOut =>
+                    {
+                        return Err(TryErr::Fail(self.timeout_fault("incomplete response body")));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        return Err(TryErr::Fail(
+                            anyhow::Error::new(e)
+                                .context(format!("read response body from {}", self.host)),
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(HttpResponse {
+            status,
+            content_length,
+            keep_alive,
+            body,
+        })
+    }
+
+    /// One logical request: reuse an idle connection when possible (with
+    /// a single fresh-connection retry if it turns out stale), record
+    /// wire stats, map error statuses onto the fault taxonomy.
+    fn request(&self, method: &str, path: &str, range: Option<(u64, u64)>) -> Result<HttpResponse> {
+        let range_line = range
+            .map(|(a, b)| format!("Range: bytes={a}-{b}\r\n"))
+            .unwrap_or_default();
+        let request = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {}\r\n{range_line}Connection: keep-alive\r\n\r\n",
+            self.host
+        );
+        let is_head = method == "HEAD";
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let outcome = match self.take_idle() {
+            Some(mut s) => match self.try_round_trip(&mut s, request.as_bytes(), is_head) {
+                Ok(resp) => {
+                    if resp.keep_alive {
+                        self.give_idle(s);
+                    }
+                    Ok(resp)
+                }
+                // Stale keep-alive connection: retry once, fresh.
+                Err(TryErr::Stale) => self.fresh_round_trip(&request, is_head),
+                Err(TryErr::Fail(e)) => Err(e),
+            },
+            None => self.fresh_round_trip(&request, is_head),
+        };
+        let elapsed = t0.elapsed().as_nanos() as u64;
+        self.wait_ns.fetch_add(elapsed, Ordering::Relaxed);
+        self.latency.lock().unwrap().record(elapsed);
+        let resp = outcome.with_context(|| format!("{method} http://{}{path}", self.host))?;
+        match resp.status {
+            200 | 206 => {
+                self.bytes.fetch_add(resp.body.len() as u64, Ordering::Relaxed);
+                Ok(resp)
+            }
+            404 => Err(IoFault::permanent(format!(
+                "HTTP 404: http://{}{path} not found",
+                self.host
+            ))
+            .into()),
+            408 => Err(self.timeout_fault(&format!("HTTP 408 for {path}"))),
+            s if (500..600).contains(&s) => Err(IoFault::transient(format!(
+                "HTTP {s} from http://{}{path}",
+                self.host
+            ))
+            .into()),
+            s => Err(IoFault::permanent(format!(
+                "HTTP {s} from http://{}{path}",
+                self.host
+            ))
+            .into()),
+        }
+    }
+
+    fn fresh_round_trip(&self, request: &str, is_head: bool) -> Result<HttpResponse> {
+        let mut s = self.connect()?;
+        match self.try_round_trip(&mut s, request.as_bytes(), is_head) {
+            Ok(resp) => {
+                if resp.keep_alive {
+                    self.give_idle(s);
+                }
+                Ok(resp)
+            }
+            Err(TryErr::Stale) => Err(IoFault::transient(format!(
+                "{} closed the connection before responding",
+                self.host
+            ))
+            .into()),
+            Err(TryErr::Fail(e)) => Err(e),
+        }
+    }
+
+    /// Full-object GET.
+    pub fn get(&self, path: &str) -> Result<Vec<u8>> {
+        Ok(self.request("GET", path, None)?.body)
+    }
+
+    /// Ranged GET of exactly `len` bytes at `offset`.
+    pub fn get_range(&self, path: &str, offset: u64, len: usize) -> Result<Vec<u8>> {
+        if len == 0 {
+            return Ok(Vec::new());
+        }
+        let resp = self.request("GET", path, Some((offset, offset + len as u64 - 1)))?;
+        if resp.body.len() != len {
+            return Err(IoFault::corrupt(format!(
+                "range {offset}+{len} of {path}: server returned {} bytes",
+                resp.body.len()
+            ))
+            .into());
+        }
+        Ok(resp.body)
+    }
+
+    /// Object length via HEAD.
+    pub fn head_len(&self, path: &str) -> Result<u64> {
+        Ok(self.request("HEAD", path, None)?.content_length)
+    }
+}
+
+/// The execution defaults a freshly opened remote store starts from:
+/// identical to local except for the network-sized coalesce gap
+/// ([`REMOTE_COALESCE_GAP_BYTES`]). `set_io_pipeline` (which the loader
+/// always calls with the configured `[io]` values) replaces this.
+fn remote_default_pipeline() -> IoPipeline {
+    IoPipeline {
+        coalesce_gap_bytes: REMOTE_COALESCE_GAP_BYTES as u64,
+        ..IoPipeline::default()
+    }
+}
+
+/// HTTP mirror of [`SparseChunkStore`](super::anndata::SparseChunkStore):
+/// the same `.scs` layout, fetched with ranged GETs.
+pub struct RemoteScsStore {
+    pool: Arc<HttpPool>,
+    /// Absolute object path on the server (e.g. `/plate00.scs`).
+    path: String,
+    n_rows: usize,
+    n_cols: usize,
+    chunk_rows: usize,
+    compressed: bool,
+    indptr: Vec<u64>,
+    /// (offset, comp_len, raw_len) per chunk.
+    chunk_table: Vec<(u64, u64, u64)>,
+    obs: ObsFrame,
+    pipeline: PipelineCell,
+}
+
+impl RemoteScsStore {
+    /// Open a single `.scs` object by URL.
+    pub fn open(url: &str, cfg: &RemoteConfig) -> Result<RemoteScsStore> {
+        let (host, path) = split_url(url)?;
+        ensure!(!path.is_empty(), "{url}: no object path");
+        Self::open_with_pool(Arc::new(HttpPool::new(host, cfg)), path)
+    }
+
+    pub(crate) fn open_with_pool(pool: Arc<HttpPool>, path: String) -> Result<RemoteScsStore> {
+        let url = || format!("http://{}{path}", pool.host());
+        let len = pool.head_len(&path)?;
+        if len < MAGIC.len() as u64 + FOOTER_LEN {
+            bail!("{}: too short to be a .scs object", url());
+        }
+        let head = pool.get_range(&path, 0, MAGIC.len())?;
+        if head != MAGIC {
+            return Err(IoFault::permanent(format!("{}: bad magic", url())).into());
+        }
+        let fbuf = pool.get_range(&path, len - FOOTER_LEN, FOOTER_LEN as usize)?;
+        if &fbuf[72..80] != MAGIC {
+            return Err(IoFault::permanent(format!(
+                "{}: bad footer magic (truncated object?)",
+                url()
+            ))
+            .into());
+        }
+        let u =
+            |i: usize| -> u64 { u64::from_le_bytes(fbuf[i * 8..(i + 1) * 8].try_into().unwrap()) };
+        let (indptr_off, table_off, obs_off, obs_len) = (u(0), u(1), u(2), u(3));
+        let (n_rows, n_cols, chunk_rows, flags, n_chunks) =
+            (u(4) as usize, u(5) as usize, u(6) as usize, u(7), u(8) as usize);
+
+        let buf = pool.get_range(&path, indptr_off, (n_rows + 1) * 8)?;
+        let indptr: Vec<u64> = buf
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+
+        let buf = pool.get_range(&path, table_off, n_chunks * 24)?;
+        let chunk_table: Vec<(u64, u64, u64)> = buf
+            .chunks_exact(24)
+            .map(|c| {
+                (
+                    u64::from_le_bytes(c[0..8].try_into().unwrap()),
+                    u64::from_le_bytes(c[8..16].try_into().unwrap()),
+                    u64::from_le_bytes(c[16..24].try_into().unwrap()),
+                )
+            })
+            .collect();
+
+        let obs = ObsFrame::deserialize(&pool.get_range(&path, obs_off, obs_len as usize)?)?;
+        if obs.n_rows != n_rows {
+            bail!("{}: obs rows {} != store rows {n_rows}", url(), obs.n_rows);
+        }
+
+        Ok(RemoteScsStore {
+            pool,
+            path,
+            n_rows,
+            n_cols,
+            chunk_rows,
+            compressed: flags & FLAG_DEFLATE != 0,
+            indptr,
+            chunk_table,
+            obs,
+            pipeline: PipelineCell::new(remote_default_pipeline()),
+        })
+    }
+
+    /// Wire stats of the shared connection pool.
+    pub fn stats(&self) -> RemoteStats {
+        self.pool.stats()
+    }
+
+    /// Fetch + decode `chunks` (ascending, unique): coalesce their ranges
+    /// (one ranged GET per coalesced read), decode on the shared pool.
+    /// Returns payloads in `chunks` order, the number of HTTP requests,
+    /// and the bytes received over the wire.
+    fn load_chunks(
+        &self,
+        chunks: &[usize],
+        pipeline: IoPipeline,
+    ) -> Result<(Vec<Vec<u8>>, usize, u64)> {
+        let ranges: Vec<(u64, u64)> = chunks
+            .iter()
+            .map(|&c| {
+                let (off, comp_len, _) = self.chunk_table[c];
+                (off, comp_len)
+            })
+            .collect();
+        let reads = coalesce_ranges(&ranges, pipeline.coalesce_gap_bytes);
+        let mut srcs: Vec<ChunkSrc> = Vec::with_capacity(chunks.len());
+        let mut raw_lens: Vec<usize> = Vec::with_capacity(chunks.len());
+        let mut bufs: Vec<Arc<Vec<u8>>> = Vec::with_capacity(reads.len());
+        let mut wire = 0u64;
+        for rd in &reads {
+            let body = self
+                .pool
+                .get_range(&self.path, rd.offset, rd.len)
+                .with_context(|| format!("fetch chunks from http://{}{}", self.pool.host(), self.path))?;
+            wire += body.len() as u64;
+            let buf = Arc::new(body);
+            for &(ri, off) in &rd.members {
+                let (_, comp_len, raw_len) = self.chunk_table[chunks[ri]];
+                srcs.push((buf.clone(), off, comp_len as usize));
+                raw_lens.push(raw_len as usize);
+            }
+            bufs.push(buf);
+        }
+        let decoded = decode_chunk_batch(
+            srcs,
+            raw_lens,
+            self.compressed,
+            pipeline.resolved_decode_threads(),
+        );
+        let mut payloads = Vec::with_capacity(decoded.len());
+        for (i, d) in decoded.into_iter().enumerate() {
+            payloads.push(d.with_context(|| {
+                format!("decode chunk {} of http://{}{}", chunks[i], self.pool.host(), self.path)
+            })?);
+        }
+        let pool = BufferPool::global();
+        for buf in bufs {
+            if let Ok(b) = Arc::try_unwrap(buf) {
+                pool.give_buf(b);
+            }
+        }
+        Ok((payloads, reads.len(), wire))
+    }
+}
+
+impl Backend for RemoteScsStore {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn obs(&self) -> &ObsFrame {
+        &self.obs
+    }
+
+    fn pattern(&self) -> AccessPattern {
+        AccessPattern::BatchedCoalesced
+    }
+
+    fn name(&self) -> &str {
+        "remote-scs"
+    }
+
+    fn fetch_rows(&self, sorted: &[u32]) -> Result<FetchResult> {
+        check_sorted_indices(sorted, self.n_rows)?;
+        let runs = contiguous_runs(sorted);
+        let pieces = chunk_pieces(&runs, self.chunk_rows, self.n_rows);
+        let mut chunks: Vec<usize> = pieces.iter().map(|&(c, _, _)| c).collect();
+        chunks.dedup();
+        let pipeline = self.pipeline.get();
+        let (payloads, n_requests, wire) = self.load_chunks(&chunks, pipeline)?;
+        let pool = BufferPool::global();
+        let mut x = pool.take_batch(self.n_cols);
+        let total_nnz: usize = pieces
+            .iter()
+            .map(|&(_, s, e)| (self.indptr[e] - self.indptr[s]) as usize)
+            .sum();
+        x.reserve_extra(sorted.len(), total_nnz);
+        let mut bytes = 0u64;
+        let mut ci = 0usize;
+        for &(chunk, s, e) in &pieces {
+            while chunks[ci] != chunk {
+                ci += 1;
+            }
+            extract_chunk_rows(
+                &self.indptr,
+                self.chunk_rows,
+                self.n_rows,
+                chunk,
+                &payloads[ci],
+                s,
+                e,
+                &mut x,
+            );
+            bytes += (self.indptr[e] - self.indptr[s]) * 8;
+        }
+        for p in payloads {
+            pool.give_buf(p);
+        }
+        debug_assert!(x.validate().is_ok());
+        Ok(FetchResult {
+            x,
+            io: IoReport {
+                calls: 1,
+                runs: runs.len() as u64,
+                rows: sorted.len() as u64,
+                bytes,
+                chunks: chunks.len() as u64,
+                read_calls: n_requests as u64,
+                read_calls_raw: chunks.len() as u64,
+                http_requests: n_requests as u64,
+                http_bytes: wire,
+                ..IoReport::default()
+            },
+        })
+    }
+
+    fn set_io_pipeline(&self, pipeline: IoPipeline) {
+        self.pipeline.set(pipeline);
+    }
+}
+
+/// HTTP mirror of [`ShardedZarrStore`](super::zarr_like::ShardedZarrStore):
+/// the same sharded directory layout, each shard fetched as a separate
+/// object (reads coalesce within, never across, shards).
+pub struct RemoteZarrStore {
+    pool: Arc<HttpPool>,
+    /// Base path of the store directory (no trailing slash; may be empty).
+    base: String,
+    n_rows: usize,
+    n_cols: usize,
+    chunk_rows: usize,
+    /// chunk -> (shard, offset, comp_len, raw_len)
+    chunk_index: Vec<(u64, u64, u64, u64)>,
+    indptr: Vec<u64>,
+    obs: ObsFrame,
+    pipeline: PipelineCell,
+}
+
+impl RemoteZarrStore {
+    /// Open a zarr-like directory by URL.
+    pub fn open(url: &str, cfg: &RemoteConfig) -> Result<RemoteZarrStore> {
+        let (host, base) = split_url(url)?;
+        Self::open_with_pool(Arc::new(HttpPool::new(host, cfg)), base)
+    }
+
+    pub(crate) fn open_with_pool(pool: Arc<HttpPool>, base: String) -> Result<RemoteZarrStore> {
+        let url = || format!("http://{}{base}", pool.host());
+        let meta_bytes = pool.get(&format!("{base}/meta.json"))?;
+        let meta = Json::parse(
+            std::str::from_utf8(&meta_bytes)
+                .with_context(|| format!("{}/meta.json is not UTF-8", url()))?,
+        )?;
+        if meta.req("format")?.as_str() != Some("scdata-zarr-like/1") {
+            bail!("{}: unknown zarr-like format", url());
+        }
+        let n_rows = meta.req("n_rows")?.as_usize().unwrap_or(0);
+        let n_cols = meta.req("n_cols")?.as_usize().unwrap_or(0);
+        let chunk_rows = meta.req("chunk_rows")?.as_usize().unwrap_or(1);
+        let n_chunks = meta.req("n_chunks")?.as_usize().unwrap_or(0);
+
+        let buf = pool.get(&format!("{base}/indptr.bin"))?;
+        if buf.len() != (n_rows + 1) * 8 {
+            return Err(IoFault::permanent(format!("{}/indptr.bin truncated", url())).into());
+        }
+        let indptr: Vec<u64> = buf
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+
+        let buf = pool.get(&format!("{base}/chunks.bin"))?;
+        if buf.len() != n_chunks * 32 {
+            return Err(IoFault::permanent(format!("{}/chunks.bin truncated", url())).into());
+        }
+        let chunk_index: Vec<(u64, u64, u64, u64)> = buf
+            .chunks_exact(32)
+            .map(|c| {
+                let u = |i: usize| u64::from_le_bytes(c[i * 8..(i + 1) * 8].try_into().unwrap());
+                (u(0), u(1), u(2), u(3))
+            })
+            .collect();
+        let obs = ObsFrame::deserialize(&pool.get(&format!("{base}/obs.bin"))?)?;
+        if obs.n_rows != n_rows {
+            bail!("{}: obs rows mismatch", url());
+        }
+        Ok(RemoteZarrStore {
+            pool,
+            base,
+            n_rows,
+            n_cols,
+            chunk_rows,
+            chunk_index,
+            indptr,
+            obs,
+            pipeline: PipelineCell::new(remote_default_pipeline()),
+        })
+    }
+
+    /// Wire stats of the shared connection pool.
+    pub fn stats(&self) -> RemoteStats {
+        self.pool.stats()
+    }
+
+    /// Like [`RemoteScsStore::load_chunks`], but grouped by shard object:
+    /// ranges coalesce within a shard and never across shards (they are
+    /// separate objects, as in real cloud storage).
+    fn load_chunks(
+        &self,
+        chunks: &[usize],
+        pipeline: IoPipeline,
+    ) -> Result<(Vec<Vec<u8>>, usize, u64)> {
+        let mut srcs: Vec<ChunkSrc> = Vec::with_capacity(chunks.len());
+        let mut raw_lens: Vec<usize> = Vec::with_capacity(chunks.len());
+        let mut bufs: Vec<Arc<Vec<u8>>> = Vec::new();
+        let mut n_requests = 0usize;
+        let mut wire = 0u64;
+        let mut i = 0usize;
+        while i < chunks.len() {
+            let shard = self.chunk_index[chunks[i]].0;
+            let mut j = i + 1;
+            while j < chunks.len() && self.chunk_index[chunks[j]].0 == shard {
+                j += 1;
+            }
+            let path = format!("{}/shard.{shard:04}.bin", self.base);
+            let ranges: Vec<(u64, u64)> = chunks[i..j]
+                .iter()
+                .map(|&c| {
+                    let (_, off, comp_len, _) = self.chunk_index[c];
+                    (off, comp_len)
+                })
+                .collect();
+            for rd in &coalesce_ranges(&ranges, pipeline.coalesce_gap_bytes) {
+                let body = self
+                    .pool
+                    .get_range(&path, rd.offset, rd.len)
+                    .with_context(|| {
+                        format!("fetch chunks from http://{}{path}", self.pool.host())
+                    })?;
+                n_requests += 1;
+                wire += body.len() as u64;
+                let buf = Arc::new(body);
+                for &(ri, off) in &rd.members {
+                    let (_, _, comp_len, raw_len) = self.chunk_index[chunks[i + ri]];
+                    srcs.push((buf.clone(), off, comp_len as usize));
+                    raw_lens.push(raw_len as usize);
+                }
+                bufs.push(buf);
+            }
+            i = j;
+        }
+        let decoded = decode_chunk_batch(srcs, raw_lens, true, pipeline.resolved_decode_threads());
+        let mut payloads = Vec::with_capacity(decoded.len());
+        for (i, d) in decoded.into_iter().enumerate() {
+            payloads.push(d.with_context(|| {
+                format!("decode chunk {} of http://{}{}", chunks[i], self.pool.host(), self.base)
+            })?);
+        }
+        let pool = BufferPool::global();
+        for buf in bufs {
+            if let Ok(b) = Arc::try_unwrap(buf) {
+                pool.give_buf(b);
+            }
+        }
+        Ok((payloads, n_requests, wire))
+    }
+}
+
+impl Backend for RemoteZarrStore {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn obs(&self) -> &ObsFrame {
+        &self.obs
+    }
+
+    fn pattern(&self) -> AccessPattern {
+        AccessPattern::NativeChunked
+    }
+
+    fn name(&self) -> &str {
+        "remote-zarr"
+    }
+
+    fn fetch_rows(&self, sorted: &[u32]) -> Result<FetchResult> {
+        check_sorted_indices(sorted, self.n_rows)?;
+        let runs = contiguous_runs(sorted);
+        let pieces = chunk_pieces(&runs, self.chunk_rows, self.n_rows);
+        let mut chunks: Vec<usize> = pieces.iter().map(|&(c, _, _)| c).collect();
+        chunks.dedup();
+        let pipeline = self.pipeline.get();
+        let (payloads, n_requests, wire) = self.load_chunks(&chunks, pipeline)?;
+        let pool = BufferPool::global();
+        let mut x = pool.take_batch(self.n_cols);
+        let total_nnz: usize = pieces
+            .iter()
+            .map(|&(_, s, e)| (self.indptr[e] - self.indptr[s]) as usize)
+            .sum();
+        x.reserve_extra(sorted.len(), total_nnz);
+        let mut bytes = 0u64;
+        let mut ci = 0usize;
+        for &(chunk, s, e) in &pieces {
+            while chunks[ci] != chunk {
+                ci += 1;
+            }
+            extract_chunk_rows(
+                &self.indptr,
+                self.chunk_rows,
+                self.n_rows,
+                chunk,
+                &payloads[ci],
+                s,
+                e,
+                &mut x,
+            );
+            bytes += (self.indptr[e] - self.indptr[s]) * 8;
+        }
+        for p in payloads {
+            pool.give_buf(p);
+        }
+        debug_assert!(x.validate().is_ok());
+        Ok(FetchResult {
+            x,
+            io: IoReport {
+                calls: 0, // rust-native reads: no per-call software layer
+                runs: runs.len() as u64,
+                rows: sorted.len() as u64,
+                bytes,
+                chunks: chunks.len() as u64,
+                read_calls: n_requests as u64,
+                read_calls_raw: chunks.len() as u64,
+                http_requests: n_requests as u64,
+                http_bytes: wire,
+                ..IoReport::default()
+            },
+        })
+    }
+
+    fn set_io_pipeline(&self, pipeline: IoPipeline) {
+        self.pipeline.set(pipeline);
+    }
+}
+
+/// An opened remote dataset plus the connection pool behind it, so
+/// callers can read cumulative [`RemoteStats`] (the backend trait itself
+/// stays wire-agnostic).
+pub struct RemoteHandle {
+    pub backend: Arc<dyn Backend>,
+    pool: Arc<HttpPool>,
+}
+
+impl RemoteHandle {
+    /// Cumulative wire stats across every store of this dataset.
+    pub fn stats(&self) -> RemoteStats {
+        self.pool.stats()
+    }
+}
+
+fn join(base: &str, name: &str) -> String {
+    format!("{base}/{name}")
+}
+
+/// Read and parse a `dataset.json` plate manifest, returning plate names.
+fn manifest_plates(pool: &Arc<HttpPool>, base: &str) -> Result<Vec<String>> {
+    let body = pool.get(&join(base, "dataset.json"))?;
+    let meta = Json::parse(std::str::from_utf8(&body).context("dataset.json is not UTF-8")?)?;
+    let names = meta
+        .req("plates")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("plates must be an array"))?;
+    names
+        .iter()
+        .map(|n| {
+            n.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("plate names must be strings"))
+        })
+        .collect()
+}
+
+fn open_plates(
+    pool: &Arc<HttpPool>,
+    base: &str,
+    names: &[String],
+) -> Result<PlateCollection<RemoteScsStore>> {
+    let plates = names
+        .iter()
+        .map(|n| RemoteScsStore::open_with_pool(pool.clone(), join(base, n)))
+        .collect::<Result<Vec<_>>>()?;
+    PlateCollection::new(plates)
+}
+
+/// Open a remote dataset by URL, sniffing the layout:
+///
+/// * `…/name.scs` — a single `.scs` object;
+/// * a directory with `dataset.json` — a tahoe-mini plate collection
+///   (every plate shares one connection pool);
+/// * a directory with `meta.json` — a zarr-like sharded store.
+pub fn open_remote_handle(url: &str, cfg: &RemoteConfig) -> Result<RemoteHandle> {
+    let (host, base) = split_url(url)?;
+    let pool = Arc::new(HttpPool::new(host, cfg));
+    if base.ends_with(".scs") {
+        let store = RemoteScsStore::open_with_pool(pool.clone(), base)?;
+        return Ok(RemoteHandle {
+            backend: Arc::new(store),
+            pool,
+        });
+    }
+    if let Ok(names) = manifest_plates(&pool, &base) {
+        let collection = open_plates(&pool, &base, &names)?;
+        return Ok(RemoteHandle {
+            backend: Arc::new(collection),
+            pool,
+        });
+    }
+    if let Ok(store) = RemoteZarrStore::open_with_pool(pool.clone(), base.clone()) {
+        return Ok(RemoteHandle {
+            backend: Arc::new(store),
+            pool,
+        });
+    }
+    bail!(
+        "{url}: found neither a dataset.json plate manifest, a meta.json zarr-like store, \
+         nor a .scs object"
+    )
+}
+
+/// [`open_remote_handle`] without the stats handle.
+pub fn open_remote(url: &str, cfg: &RemoteConfig) -> Result<Arc<dyn Backend>> {
+    Ok(open_remote_handle(url, cfg)?.backend)
+}
+
+/// The remote analogue of `datagen::open_train_test`: plates `0..n-1`
+/// train, the last plate held out for eval. Requires a `dataset.json`
+/// plate manifest with at least two plates.
+pub fn open_remote_train_test(
+    url: &str,
+    cfg: &RemoteConfig,
+) -> Result<(Arc<dyn Backend>, Arc<dyn Backend>)> {
+    let (host, base) = split_url(url)?;
+    let pool = Arc::new(HttpPool::new(host, cfg));
+    let names = manifest_plates(&pool, &base)
+        .with_context(|| format!("{url}: train/test split needs a dataset.json manifest"))?;
+    ensure!(
+        names.len() >= 2,
+        "{url}: train/test split needs at least 2 plates, got {}",
+        names.len()
+    );
+    let train = open_plates(&pool, &base, &names[..names.len() - 1])?;
+    let test = open_plates(&pool, &base, &names[names.len() - 1..])?;
+    Ok((Arc::new(train), Arc::new(test)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::anndata::{SparseChunkStore, StoreWriter};
+    use crate::store::fault::{classify, FaultKind};
+    use crate::store::mock_http::{MockFaultConfig, MockHttpServer};
+    use crate::store::obs::ObsColumn;
+    use crate::store::zarr_like::{convert_to_zarr, ShardedZarrStore};
+    use crate::util::tempdir::TempDir;
+
+    fn write_store(dir: &TempDir, name: &str, n_rows: usize, compress: bool) -> SparseChunkStore {
+        let mut w = StoreWriter::create(dir.join(name), 16, 8, compress).unwrap();
+        for r in 0..n_rows {
+            let cols = [(r % 16) as u32];
+            w.push_row(&cols, &[r as f32]).unwrap();
+        }
+        let mut obs = ObsFrame::new(n_rows);
+        obs.push(ObsColumn::new("plate", vec!["p".into()], vec![0; n_rows]).unwrap())
+            .unwrap();
+        SparseChunkStore::open(w.finish(&obs).unwrap()).unwrap()
+    }
+
+    fn quick_cfg() -> RemoteConfig {
+        RemoteConfig {
+            timeout_ms: 5_000,
+            ..RemoteConfig::default()
+        }
+    }
+
+    #[test]
+    fn split_url_variants() {
+        assert_eq!(
+            split_url("http://h:8080/a/b/").unwrap(),
+            ("h:8080".to_string(), "/a/b".to_string())
+        );
+        assert_eq!(
+            split_url("http://h").unwrap(),
+            ("h:80".to_string(), String::new())
+        );
+        assert!(split_url("https://h/x").is_err());
+        assert!(split_url("h/x").is_err());
+        assert!(split_url("http:///x").is_err());
+    }
+
+    #[test]
+    fn remote_config_defaults() {
+        let cfg = RemoteConfig::default();
+        assert!(!cfg.enabled());
+        assert_eq!(cfg.connections, 4);
+        assert_eq!(cfg.timeout_ms, 30_000);
+        assert!(RemoteConfig {
+            url: "http://x".into(),
+            ..cfg
+        }
+        .enabled());
+    }
+
+    #[test]
+    fn remote_scs_matches_local_and_counts_requests() {
+        for compress in [false, true] {
+            let dir = TempDir::new("remote").unwrap();
+            let local = write_store(&dir, "t.scs", 57, compress);
+            let srv = MockHttpServer::start(dir.path(), 0, MockFaultConfig::default()).unwrap();
+            let remote =
+                RemoteScsStore::open(&format!("{}/t.scs", srv.url()), &quick_cfg()).unwrap();
+            assert_eq!(remote.n_rows(), 57);
+            assert_eq!(remote.n_cols(), 16);
+            assert_eq!(remote.name(), "remote-scs");
+            assert_eq!(remote.pattern(), AccessPattern::BatchedCoalesced);
+            assert_eq!(remote.obs().column("plate").unwrap().codes.len(), 57);
+            for idx in [
+                (0..57).collect::<Vec<u32>>(),
+                vec![0, 9, 10, 33, 56],
+                vec![3],
+                vec![],
+            ] {
+                let l = local.fetch_rows(&idx).unwrap();
+                let r = remote.fetch_rows(&idx).unwrap();
+                assert_eq!(l.x, r.x, "payload must match local ({idx:?})");
+                assert_eq!(l.io.runs, r.io.runs);
+                assert_eq!(l.io.rows, r.io.rows);
+                assert_eq!(l.io.bytes, r.io.bytes);
+                assert_eq!(l.io.chunks, r.io.chunks);
+                // read_calls counts HTTP requests post-coalescing, and the
+                // two counters agree by construction (satellite: fig8/fig9
+                // accounting stays comparable across backends).
+                assert_eq!(r.io.read_calls, r.io.http_requests);
+            }
+        }
+    }
+
+    #[test]
+    fn remote_default_gap_is_network_sized_and_pipeline_overrides() {
+        let dir = TempDir::new("remote").unwrap();
+        let local = write_store(&dir, "t.scs", 64, true);
+        let srv = MockHttpServer::start(dir.path(), 0, MockFaultConfig::default()).unwrap();
+        let remote = RemoteScsStore::open(&format!("{}/t.scs", srv.url()), &quick_cfg()).unwrap();
+        // chunks 0, 2, 4 of 8 (gaps in between): the fresh remote store
+        // coalesces through its 1 MiB default gap into one request…
+        let idx: Vec<u32> = vec![0, 17, 33];
+        let r = remote.fetch_rows(&idx).unwrap();
+        assert_eq!(r.io.http_requests, 1, "remote default gap merges all: {:?}", r.io);
+        assert_eq!(r.io.read_calls, 1);
+        assert_eq!(r.io.read_calls_raw, 3);
+        assert!(r.io.http_bytes > 0);
+        // …while gap 0 (what a local store defaults to) issues one per chunk.
+        remote.set_io_pipeline(IoPipeline::default());
+        let tight = remote.fetch_rows(&idx).unwrap();
+        assert_eq!(tight.io.http_requests, 3);
+        assert_eq!(tight.x, r.x, "gap is execution-only");
+        assert_eq!(tight.x, local.fetch_rows(&idx).unwrap().x);
+        // Under the same explicit pipeline, remote and local issue the
+        // same number of ranged reads.
+        local.set_io_pipeline(IoPipeline::default());
+        assert_eq!(local.fetch_rows(&idx).unwrap().io.read_calls, 3);
+        let stats = remote.stats();
+        assert!(stats.requests > 0);
+        assert!(stats.bytes_over_wire > 0);
+        assert_eq!(stats.latency.total(), stats.requests);
+    }
+
+    #[test]
+    fn remote_zarr_matches_local_and_respects_shards() {
+        let dir = TempDir::new("remote").unwrap();
+        let src = write_store(&dir, "src.scs", 60, true);
+        // 8 chunks of 8 rows, 2 per shard → 4 shard objects.
+        let zdir = convert_to_zarr(&src, dir.join("z"), 8, 2).unwrap();
+        let local = ShardedZarrStore::open(&zdir).unwrap();
+        let srv = MockHttpServer::start(dir.path(), 0, MockFaultConfig::default()).unwrap();
+        let remote = RemoteZarrStore::open(&format!("{}/z", srv.url()), &quick_cfg()).unwrap();
+        assert_eq!(remote.name(), "remote-zarr");
+        assert_eq!(remote.pattern(), AccessPattern::NativeChunked);
+        let idx: Vec<u32> = (0..60).collect();
+        let l = local.fetch_rows(&idx).unwrap();
+        let r = remote.fetch_rows(&idx).unwrap();
+        assert_eq!(l.x, r.x);
+        assert_eq!(r.io.calls, 0);
+        // All 8 chunks touched; the default network gap coalesces within
+        // each shard but can never cross shard objects → 4 requests.
+        assert_eq!(r.io.read_calls, 4, "{:?}", r.io);
+        assert_eq!(r.io.http_requests, 4);
+        assert_eq!(r.io.read_calls_raw, 8);
+    }
+
+    #[test]
+    fn open_remote_sniffs_collection_scs_and_zarr() {
+        let dir = TempDir::new("remote").unwrap();
+        // Two plates + a manifest, the way datagen writes them.
+        let p0 = write_store(&dir, "plate00.scs", 24, true);
+        let p1 = write_store(&dir, "plate01.scs", 16, true);
+        let mut meta = Json::obj();
+        meta.set("format", Json::Str("tahoe-mini/scs".into())).set(
+            "plates",
+            Json::Arr(vec![
+                Json::Str("plate00.scs".into()),
+                Json::Str("plate01.scs".into()),
+            ]),
+        );
+        std::fs::write(dir.join("dataset.json"), meta.to_pretty()).unwrap();
+        convert_to_zarr(&p0, dir.join("z"), 8, 2).unwrap();
+        let srv = MockHttpServer::start(dir.path(), 0, MockFaultConfig::default()).unwrap();
+
+        let handle = open_remote_handle(&srv.url(), &quick_cfg()).unwrap();
+        assert_eq!(handle.backend.n_rows(), 40);
+        assert!(handle.backend.name().starts_with("collection[2×"));
+        let idx: Vec<u32> = vec![0, 23, 24, 39];
+        let got = handle.backend.fetch_rows(&idx).unwrap();
+        assert_eq!(got.x.row(1).1, p0.fetch_rows(&[23]).unwrap().x.row(0).1);
+        assert_eq!(got.x.row(2).1, p1.fetch_rows(&[0]).unwrap().x.row(0).1);
+        assert!(handle.stats().requests > 0);
+
+        let single = open_remote(&format!("{}/plate01.scs", srv.url()), &quick_cfg()).unwrap();
+        assert_eq!(single.n_rows(), 16);
+
+        let zarr = open_remote(&format!("{}/z", srv.url()), &quick_cfg()).unwrap();
+        assert_eq!(zarr.n_rows(), 24);
+        assert_eq!(zarr.name(), "remote-zarr");
+
+        assert!(open_remote(&format!("{}/nothing-here", srv.url()), &quick_cfg()).is_err());
+
+        let (train, test) = open_remote_train_test(&srv.url(), &quick_cfg()).unwrap();
+        assert_eq!(train.n_rows(), 24);
+        assert_eq!(test.n_rows(), 16);
+    }
+
+    #[test]
+    fn status_errors_map_onto_the_fault_taxonomy() {
+        let dir = TempDir::new("remote").unwrap();
+        write_store(&dir, "t.scs", 16, false);
+        let srv = MockHttpServer::start(dir.path(), 0, MockFaultConfig::default()).unwrap();
+        let (host, _) = split_url(&srv.url()).unwrap();
+        let pool = HttpPool::new(host, &quick_cfg());
+        // 404 → Permanent.
+        let err = pool.get("/missing.bin").unwrap_err();
+        assert_eq!(classify(&err), FaultKind::Permanent, "{err:#}");
+        // Injected 503 → Transient; truncation → Corrupt; 408 → Timeout.
+        // The schedule is pure in (seed, key), so sweep seeds until all
+        // three injected modes have been observed.
+        let mut seen = std::collections::HashSet::new();
+        for seed in 0..400u64 {
+            srv.set_faults(MockFaultConfig {
+                seed,
+                fault_rate: 1.0,
+                max_failures: 1,
+                latency_ms: 0,
+            });
+            let Err(err) = pool.get_range("/t.scs", 0, 64) else {
+                panic!("fault_rate 1.0 must fail the first attempt");
+            };
+            let kind = classify(&err);
+            assert!(
+                matches!(kind, FaultKind::Transient | FaultKind::Timeout | FaultKind::Corrupt),
+                "injected faults must classify as retryable: {kind:?} ({err:#})"
+            );
+            if seen.insert(kind) && seen.len() == 3 {
+                break;
+            }
+        }
+        assert_eq!(seen.len(), 3, "all three injected modes observed: {seen:?}");
+        // And after the burst, the same request succeeds.
+        assert!(pool.get_range("/t.scs", 0, 64).is_ok());
+    }
+
+    #[test]
+    fn server_latency_beyond_client_timeout_classifies_as_timeout() {
+        let dir = TempDir::new("remote").unwrap();
+        write_store(&dir, "t.scs", 16, false);
+        let srv = MockHttpServer::start(dir.path(), 0, MockFaultConfig::default()).unwrap();
+        let (host, _) = split_url(&srv.url()).unwrap();
+        let cfg = RemoteConfig {
+            timeout_ms: 25,
+            ..RemoteConfig::default()
+        };
+        let pool = HttpPool::new(host, &cfg);
+        assert!(pool.get_range("/t.scs", 0, 8).is_ok(), "fast server is fine");
+        srv.set_faults(MockFaultConfig {
+            seed: 1,
+            fault_rate: 0.0,
+            max_failures: 0,
+            latency_ms: 400, // latency draw in [0, 400) ms per key
+        });
+        // Find a range whose injected latency draw clearly exceeds the
+        // 25 ms client timeout (pure in (seed, key), so this terminates).
+        let mut hit = false;
+        for start in 0..32u64 {
+            let err = match pool.get_range("/t.scs", start, 4) {
+                Err(e) => e,
+                Ok(_) => continue, // latency draw below the timeout
+            };
+            assert_eq!(classify(&err), FaultKind::Timeout, "{err:#}");
+            hit = true;
+            break;
+        }
+        assert!(hit, "some latency draw must exceed the client timeout");
+    }
+}

@@ -258,6 +258,7 @@ impl Rng {
 /// | shuffle buffer  | `Rng::new(seed).fork(SHUFFLE_BUFFER + epoch)`          | the streaming strategy's rolling shuffle buffer (delivery thread, both schemas) |
 /// | fault           | `Rng::new(fault_seed).fork_keyed(FAULT, key)`          | the [`FaultInjectingBackend`](crate::store::fault::FaultInjectingBackend) schedule — pure in `(fault_seed, key)` where `key` is the first requested row of a fetch |
 /// | retry           | `Rng::new(seed).fork_keyed(RETRY + epoch, fetch_id)`   | decorrelated-jitter backoff draws for one fetch's retry loop (execution-only: timing never touches the stream) |
+/// | mock-http       | `Rng::new(fault_seed).fork_keyed(MOCK_HTTP, key)`      | the [`MockHttpServer`](crate::store::mock_http::MockHttpServer) injected latency/fault schedule — pure in `(fault_seed, key)` where `key` hashes the requested object path and range start |
 ///
 /// The base offsets keep the per-epoch families disjoint for any epoch
 /// below 2^16; v2 additionally keys on the fetch id through a second
@@ -279,6 +280,8 @@ pub mod domains {
     pub const FAULT: u64 = 0x40_000;
     /// Base label for retry-backoff jitter draws.
     pub const RETRY: u64 = 0x50_000;
+    /// Base label for the mock object server's injected fault schedule.
+    pub const MOCK_HTTP: u64 = 0x60_000;
 
     /// Epoch plan permutation RNG (shared by every seed schema).
     pub fn plan(seed: u64, epoch: u64) -> Rng {
@@ -319,6 +322,14 @@ pub mod domains {
     /// never the emitted stream.
     pub fn retry_backoff(seed: u64, epoch: u64, fetch_id: usize) -> Rng {
         Rng::new(seed).fork_keyed(RETRY.wrapping_add(epoch), fetch_id as u64)
+    }
+
+    /// The mock object server's per-request fault schedule. Pure in
+    /// `(fault_seed, key)` where `key` identifies the logical request
+    /// (object path hash ⊕ range start), so a retried request meets the
+    /// same injected burst regardless of connection, thread, or timing.
+    pub fn mock_http(fault_seed: u64, key: u64) -> Rng {
+        Rng::new(fault_seed).fork_keyed(MOCK_HTTP, key)
     }
 }
 
@@ -468,6 +479,10 @@ mod tests {
         assert_eq!(
             domains::retry_backoff(seed, epoch, 7).next_u64(),
             Rng::new(seed).fork(0x50_000 + epoch).fork(7).next_u64()
+        );
+        assert_eq!(
+            domains::mock_http(seed, 19).next_u64(),
+            Rng::new(seed).fork(0x60_000).fork(19).next_u64()
         );
     }
 

@@ -1135,3 +1135,121 @@ fn prop_kill_resume_stream_identical() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// Remote object store (ISSUE 9), fuzzed: random sampling configs × executor
+// shapes × cache on/off × injected wire-fault schedules. The HTTP-served
+// stream must always equal the local-filesystem stream, with every injected
+// transient fault recovered inside a budget derived from the injector's
+// burst bound (with the 1 MiB remote gap a fetch coalesces to at most one
+// ranged GET per plate, so 3·max_failures + 1 attempts always cover it).
+// ---------------------------------------------------------------------------
+
+use scdata::store::{open_remote, MockFaultConfig, MockHttpServer, RemoteConfig};
+
+#[test]
+fn prop_remote_stream_identical() {
+    let dir = TempDir::new("prop-remote").unwrap();
+    let mut cfg = TahoeConfig::tiny();
+    cfg.n_plates = 3;
+    cfg.cells_per_plate = 300;
+    generate(&cfg, dir.path()).unwrap();
+    let backend: Arc<dyn Backend> = Arc::new(open_collection(dir.path()).unwrap());
+    let srv = MockHttpServer::start(dir.path(), 0, MockFaultConfig::default()).unwrap();
+    let remote = open_remote(&srv.url(), &RemoteConfig::default()).unwrap();
+    check("remote-stream", 8, |rng| {
+        let mut base = LoaderConfig::default();
+        base.sampling.strategy = Strategy::BlockShuffling {
+            block_size: rng.range(1, 48),
+        };
+        base.sampling.batch_size = rng.range(1, 80);
+        base.sampling.fetch_factor = rng.range(1, 6);
+        base.sampling.seed = rng.next_u64();
+        base.sampling.seed_schema = if rng.bernoulli(0.5) {
+            SeedSchema::V1
+        } else {
+            SeedSchema::V2
+        };
+        base.label_cols = vec!["plate".into()];
+        let cache_on = rng.bernoulli(0.5);
+        let faults = MockFaultConfig {
+            seed: rng.next_u64(),
+            // A cache-on fetch can miss on many distinct block-load
+            // request keys, each with its own burst, so no fixed attempt
+            // budget covers rate→1.0; those cases inject latency only.
+            // Cache-off fetches coalesce to at most one GET per plate
+            // (3 here), where 3·max_failures + 1 attempts provably
+            // recover every burst.
+            fault_rate: if cache_on { 0.0 } else { rng.f64() },
+            max_failures: rng.range(1, 4) as u32,
+            latency_ms: rng.range(0, 2) as u64,
+        };
+        srv.set_faults(faults);
+        let mut over_http = base.clone();
+        over_http.workers.num_workers = rng.range(0, 5);
+        over_http.workers.in_flight = rng.range(1, 6);
+        // The network-sized gap is what bounds a cache-off fetch to one
+        // GET per plate; it is execution-only and cannot change the
+        // stream.
+        over_http.io.coalesce_gap_bytes = 1 << 20;
+        over_http.resilience.retry = RetryPolicy {
+            max_attempts: 3 * faults.max_failures as usize + 1,
+            backoff_base_ms: 0,
+            backoff_cap_ms: 0,
+            deadline_ms: 0,
+        };
+        if cache_on {
+            over_http.cache = CacheConfig {
+                bytes: rng.range(10_000, 8 << 20),
+                block_rows: rng.range(1, 400),
+                locality_window: rng.range(0, 12),
+                readahead: rng.bernoulli(0.5),
+            };
+        }
+        let epoch = rng.range(0, 3) as u64;
+        type Stream = Vec<(Vec<u32>, scdata::store::CsrBatch, Vec<Vec<u16>>)>;
+        let run = |b: Arc<dyn Backend>,
+                   cfg: &LoaderConfig|
+         -> Result<(Stream, IoReport), String> {
+            let ds = ScDataset::builder(b)
+                .config(cfg.clone())
+                .build()
+                .map_err(|e| e.to_string())?;
+            let mut iter = ds.epoch(epoch).map_err(|e| e.to_string())?;
+            let mut s = Vec::new();
+            for mb in &mut iter {
+                let mb = mb.map_err(|e| e.to_string())?;
+                s.push((mb.rows, mb.x, mb.labels));
+            }
+            Ok((s, iter.stats().io))
+        };
+        let (expect, _) = run(backend.clone(), &base)?;
+        prop_assert!(!expect.is_empty(), "empty clean epoch");
+        let (got, io) = run(remote.clone(), &over_http)?;
+        prop_assert!(
+            got == expect,
+            "remote stream diverged from local (schema={:?} workers={} \
+             cache={cache_on} rate={:.3} burst={} latency={}ms)",
+            base.sampling.seed_schema,
+            over_http.workers.num_workers,
+            faults.fault_rate,
+            faults.max_failures,
+            faults.latency_ms
+        );
+        prop_assert!(io.http_requests > 0, "no wire traffic — weak case");
+        if !cache_on {
+            prop_assert!(
+                io.read_calls == io.http_requests,
+                "read_calls ({}) must count ranged GETs ({})",
+                io.read_calls,
+                io.http_requests
+            );
+        }
+        prop_assert!(
+            io.retries == io.faults_transient + io.faults_timeout + io.faults_corrupt,
+            "unclassified wire retries: {io:?}"
+        );
+        prop_assert!(io.faults_permanent == 0, "spurious permanent fault");
+        Ok(())
+    });
+}
