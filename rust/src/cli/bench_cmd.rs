@@ -48,6 +48,7 @@ pub fn bench(args: &Args) -> Result<()> {
         "fig10" => fig10(args, &cfg, quick)?,
         "chaos" => chaos(args, &cfg, quick)?,
         "fig11" => fig11(args, &cfg, quick)?,
+        "fig12" => fig12(args, &cfg, quick)?,
         "table2" => table2(args, &cfg, quick)?,
         "all" => {
             for exp in [
@@ -60,7 +61,7 @@ pub fn bench(args: &Args) -> Result<()> {
                 bench(&sub)?;
             }
         }
-        other => bail!("unknown experiment '{other}' (fig2..fig11, eq5, table2, chaos, all)"),
+        other => bail!("unknown experiment '{other}' (fig2..fig12, eq5, table2, chaos, all)"),
     }
     Ok(())
 }
@@ -1393,6 +1394,270 @@ fn fig11(args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
         .set("server_requests", Json::Num(srv.stats().requests as f64))
         .set("sweep", Json::Arr(points));
     write_result(&cfg.results_dir, "fig11", body)?;
+    Ok(())
+}
+
+/// `bench fig12`: the on-disk-format harness — `.scs` v1 vs the
+/// block-compressed `.scs2` v2 produced by `scdata convert`, over the
+/// same sampling config. The sweep crosses v2 block budget
+/// (`--block-bytes-grid`) × decode threads (`--threads-grid`) × block
+/// cache on/off, locally and over the mock HTTP object store. The
+/// correctness gates (always enforced) are the format's headline
+/// guarantees:
+///
+/// 1. **v2 ≡ v1** — every v2 cell's minibatch stream (rows plus a
+///    fingerprint over the expression payload and labels) is
+///    byte-identical to the v1 run of the same sampling config, local
+///    and remote;
+/// 2. **coarser blocks read less** — with the cache off and an equal
+///    coalesce gap, a v2 store whose blocks are at least as coarse as
+///    the v1 chunking issues no more backend read calls than v1 (finer
+///    budgets are reported, not gated — finer random access is what
+///    they buy);
+/// 3. **remote accounting holds** — over HTTP both formats count read
+///    calls as ranged GETs post-coalescing.
+///
+/// Not part of `bench all` (it measures the converter's output, not the
+/// paper's figures). `--smoke` shrinks the sweep and keeps the gates so
+/// CI fails fast on format regressions.
+fn fig12(args: &Args, cfg: &AppConfig, quick: bool) -> Result<()> {
+    use crate::coordinator::{
+        CacheConfig, IoConfig, LoadStats, LoaderConfig, ScDataset, WorkerConfig,
+    };
+    use crate::store::{
+        convert_path, open_remote_handle, ConvertConfig, MockFaultConfig, MockHttpServer,
+        RemoteConfig,
+    };
+
+    /// FNV-1a over a byte stream — the stream fingerprint accumulator.
+    fn fnv1a(h: &mut u64, bytes: &[u8]) {
+        for &b in bytes {
+            *h ^= u64::from(b);
+            *h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    let smoke = args.bool("smoke");
+    let quick = quick || smoke;
+    let v1 = open(cfg)?;
+    let budget_default: &[usize] = if quick {
+        &[4_096, 65_536]
+    } else {
+        &[16_384, 65_536, 262_144]
+    };
+    let budgets = args.usize_list_or("block-bytes-grid", budget_default)?;
+    ensure!(!budgets.is_empty(), "--block-bytes-grid must not be empty");
+    let threads_grid = args.usize_list_or("threads-grid", &[1, 4])?;
+    ensure!(!threads_grid.is_empty(), "--threads-grid must not be empty");
+    let cache_mb = args.usize_or("cache-mb", 64)?;
+    ensure!(cache_mb > 0, "--cache-mb must be > 0 (the sweep supplies the off cell)");
+    let b = args.usize_or("block", 16)?;
+    let f = args.usize_or("fetch", if quick { 8 } else { 64 })?;
+    let workers = args.usize_or("workers", 2)?;
+    let schema = args.seed_schema_or(cfg.seed_schema)?;
+    // Equal read-merge gap on both sides: the read-call gate compares
+    // formats, not coalescing settings.
+    let gap = if cfg.io.coalesce_gap_bytes == 0 {
+        64 << 10
+    } else {
+        cfg.io.coalesce_gap_bytes
+    };
+
+    let mk_cfg = |cache_bytes: usize, decode_threads: usize| LoaderConfig {
+        sampling: SamplingConfig {
+            strategy: Strategy::BlockShuffling { block_size: b },
+            batch_size: cfg.batch_size,
+            fetch_factor: f,
+            seed: cfg.seed,
+            seed_schema: schema,
+            ..SamplingConfig::default()
+        },
+        label_cols: vec!["plate".into()],
+        workers: WorkerConfig {
+            num_workers: workers,
+            ..WorkerConfig::default()
+        },
+        cache: CacheConfig {
+            bytes: cache_bytes,
+            block_rows: cfg.cache.block_rows,
+            readahead: false,
+            locality_window: 0,
+        },
+        io: IoConfig {
+            decode_threads,
+            coalesce_gap_bytes: gap,
+        },
+        ..LoaderConfig::default()
+    };
+    // Drain one epoch: row count, a fingerprint over every minibatch's
+    // rows + expression payload + label codes (the byte-identity
+    // witness), the stats snapshot, and the wall clock.
+    let run = |ds: &ScDataset| -> Result<(u64, usize, LoadStats, std::time::Duration)> {
+        let t0 = std::time::Instant::now();
+        let mut iter = ds.epoch(0)?;
+        let mut fp: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut n = 0usize;
+        for mb in &mut iter {
+            let mb = mb?;
+            for (r, &row) in mb.rows.iter().enumerate() {
+                fnv1a(&mut fp, &row.to_le_bytes());
+                let (idx, vals) = mb.x.row(r);
+                for &i in idx {
+                    fnv1a(&mut fp, &i.to_le_bytes());
+                }
+                for &v in vals {
+                    fnv1a(&mut fp, &v.to_bits().to_le_bytes());
+                }
+            }
+            for col in &mb.labels {
+                for &code in col {
+                    fnv1a(&mut fp, &code.to_le_bytes());
+                }
+            }
+            n += mb.rows.len();
+        }
+        let stats = iter.stats();
+        Ok((fp, n, stats, t0.elapsed()))
+    };
+
+    // v1 reference: stream fingerprint + read calls with the cache off.
+    let v1_ds = ScDataset::new(v1.clone(), mk_cfg(0, threads_grid[0]));
+    let (want_fp, want_rows, v1_stats, v1_wall) = run(&v1_ds)?;
+    let v1_rows_per_block = v1.block_layout().map(|l| l.rows_per_block).unwrap_or(0);
+    println!(
+        "Fig 12 — .scs v1 vs .scs2 v2; b={b}, f={f}, workers={workers}, gap={gap} B",
+    );
+    println!(
+        "v1 reference: {want_rows} rows at {} — {} read calls, {} payload\n",
+        fmt_rate(want_rows as f64 / v1_wall.as_secs_f64().max(1e-9)),
+        v1_stats.io.read_calls,
+        fmt_bytes(v1_stats.io.bytes)
+    );
+    println!("| block budget | rows/block | threads | cache | rows/s (real) | read calls | vs v1 |");
+    println!("|---|---|---|---|---|---|---|");
+
+    let mut points = Vec::new();
+    let mut last_converted = None;
+    for &budget in &budgets {
+        let out = cfg.data_dir.join(format!("converted-b{budget}-scs2"));
+        if !out.join("dataset.json").exists() {
+            let ccfg = ConvertConfig {
+                block_bytes: budget as u64,
+                ..cfg.convert
+            };
+            let rep = convert_path(&cfg.data_dir, &out, &ccfg)?;
+            println!(
+                "| converted @ {} | — | {} | — | {} blocks ({} raw) | {} | — |",
+                fmt_bytes(budget as u64),
+                ccfg.resolved_threads(),
+                rep.blocks,
+                rep.raw_blocks,
+                fmt_bytes(rep.out_bytes)
+            );
+        }
+        let v2: Arc<dyn Backend> = Arc::new(datagen::open_collection(&out)?);
+        let layout = v2.block_layout();
+        let rows_per_block = layout.map(|l| l.rows_per_block).unwrap_or(0);
+        // Gate 2 applies where v2 blocks are at least as coarse as v1's
+        // chunking; finer budgets legitimately read more, smaller pieces.
+        let coarse = rows_per_block >= v1_rows_per_block;
+        for &dt in &threads_grid {
+            for cache_bytes in [0usize, cache_mb << 20] {
+                let ds = ScDataset::new(v2.clone(), mk_cfg(cache_bytes, dt));
+                let (fp, rows, s, wall) = run(&ds)?;
+                ensure!(
+                    fp == want_fp && rows == want_rows,
+                    "v2 stream diverged from v1 (budget={budget}, threads={dt}, \
+                     cache={cache_bytes})"
+                );
+                if cache_bytes == 0 && coarse {
+                    ensure!(
+                        s.io.read_calls <= v1_stats.io.read_calls,
+                        "v2 at budget {budget} ({rows_per_block} rows/block) issued more \
+                         read calls than v1: {} !<= {}",
+                        s.io.read_calls,
+                        v1_stats.io.read_calls
+                    );
+                }
+                let rate = rows as f64 / wall.as_secs_f64().max(1e-9);
+                println!(
+                    "| {} | {rows_per_block} | {dt} | {} MiB | {} | {} | {:.2}× |",
+                    fmt_bytes(budget as u64),
+                    cache_bytes >> 20,
+                    fmt_rate(rate),
+                    s.io.read_calls,
+                    s.io.read_calls as f64 / v1_stats.io.read_calls.max(1) as f64
+                );
+                let mut o = Json::obj();
+                o.set("block_bytes", Json::Num(budget as f64))
+                    .set("rows_per_block", Json::Num(rows_per_block as f64))
+                    .set("decode_threads", Json::Num(dt as f64))
+                    .set("cache_mb", Json::Num((cache_bytes >> 20) as f64))
+                    .set("real_samples_per_sec", Json::Num(rate))
+                    .set("read_calls", Json::Num(s.io.read_calls as f64))
+                    .set("read_calls_v1", Json::Num(v1_stats.io.read_calls as f64))
+                    .set("gated", Json::Bool(coarse));
+                points.push(o);
+            }
+        }
+        last_converted = Some((budget, out));
+    }
+
+    // Remote leg: both formats over the mock object store, gated on the
+    // same fingerprint and on the ranged-GET accounting contract.
+    let (budget, v2_dir) = last_converted.expect("at least one budget");
+    for (name, dir) in [("v1", cfg.data_dir.clone()), ("v2", v2_dir)] {
+        let srv = MockHttpServer::start(&dir, 0, MockFaultConfig::default())?;
+        let rcfg = RemoteConfig {
+            url: srv.url(),
+            ..RemoteConfig::default()
+        };
+        let handle = open_remote_handle(&srv.url(), &rcfg)?;
+        let ds = ScDataset::new(handle.backend.clone(), mk_cfg(0, threads_grid[0]));
+        let (fp, rows, s, wall) = run(&ds)?;
+        ensure!(
+            fp == want_fp && rows == want_rows,
+            "remote {name} stream diverged from the local v1 reference"
+        );
+        ensure!(
+            s.io.read_calls == s.io.http_requests,
+            "remote {name} read calls must count ranged GETs post-coalescing \
+             ({} != {})",
+            s.io.read_calls,
+            s.io.http_requests
+        );
+        println!(
+            "remote {name} ({}): {} at {} — {} GETs, {} over the wire",
+            handle.backend.name(),
+            if name == "v2" { format!("budget {}", fmt_bytes(budget as u64)) } else { "chunked".into() },
+            fmt_rate(rows as f64 / wall.as_secs_f64().max(1e-9)),
+            s.io.http_requests,
+            fmt_bytes(s.io.http_bytes)
+        );
+        let mut o = Json::obj();
+        o.set("remote", Json::Str(name.into()))
+            .set("http_requests", Json::Num(s.io.http_requests as f64))
+            .set("wire_bytes", Json::Num(s.io.http_bytes as f64));
+        points.push(o);
+    }
+
+    if smoke {
+        println!(
+            "\nfig12 smoke OK: v1 ≡ v2 stream across {} local cells + 2 remote legs, \
+             read-call gate held",
+            budgets.len() * threads_grid.len() * 2
+        );
+    }
+
+    let mut body = Json::obj();
+    body.set("experiment", Json::Str("fig12".into()))
+        .set("block", Json::Num(b as f64))
+        .set("fetch_factor", Json::Num(f as f64))
+        .set("coalesce_gap_bytes", Json::Num(gap as f64))
+        .set("v1_read_calls", Json::Num(v1_stats.io.read_calls as f64))
+        .set("stream_identical", Json::Bool(true))
+        .set("sweep", Json::Arr(points));
+    write_result(&cfg.results_dir, "fig12", body)?;
     Ok(())
 }
 

@@ -1,12 +1,14 @@
-//! Non-bench CLI commands: gen-data, info, train, autotune, calibrate,
-//! serve.
+//! Non-bench CLI commands: gen-data, info, convert, train, autotune,
+//! calibrate, serve.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::config::AppConfig;
-use crate::coordinator::autotune::{finish_lanes, tune, TuneInputs, TuneOptions};
+use crate::coordinator::autotune::{
+    derive_cache_geometry, finish_lanes, tune, TuneInputs, TuneOptions,
+};
 use crate::coordinator::{SamplingConfig, Strategy};
 use crate::datagen::{self, TahoeConfig};
 use crate::store::iomodel::{simulate_loader, AccessPattern, IoReport};
@@ -56,6 +58,8 @@ pub fn gen_data(args: &Args) -> Result<()> {
     cfg.n_drugs = args.usize_or("drugs", cfg.n_drugs)?;
     cfg.chunk_rows = args.usize_or("chunk-rows", cfg.chunk_rows)?;
     cfg.seed = args.usize_or("seed", cfg.seed as usize)? as u64;
+    cfg.format = datagen::PlateFormat::parse(&args.str_or("format", "scs"))?;
+    cfg.block_bytes = args.usize_or("block-bytes", cfg.block_bytes as usize)? as u64;
     let t0 = std::time::Instant::now();
     let paths = datagen::generate(&cfg, &out)?;
     let bytes: u64 = paths
@@ -94,6 +98,43 @@ pub fn info(args: &Args) -> Result<()> {
         let (s, e) = coll.plate_range(p);
         println!("  plate {p}: rows {s}..{e} ({} cells)", e - s);
     }
+    Ok(())
+}
+
+/// `scdata convert --data SRC --out DST` — rewrite any readable source
+/// (a `.scs` v1 plate, a zarr-like or dataset directory, a `.dms` dense
+/// memmap) into the block-compressed `.scs2` v2 format. Blocks compress
+/// in parallel on `--threads` workers; the output bytes are identical
+/// for any thread count, so converted artifacts are reproducible.
+pub fn convert(args: &Args) -> Result<()> {
+    let cfg = app_config(args)?;
+    let out = args.req_str("out")?;
+    let mut cc = cfg.convert;
+    cc.block_bytes = args.usize_or("block-bytes", cc.block_bytes as usize)? as u64;
+    if args.bool("no-compress") {
+        cc.compress = false;
+    }
+    cc.threads = args.usize_or("threads", cc.threads)?;
+    cc.progress = true;
+    let t0 = std::time::Instant::now();
+    let report = crate::store::convert_path(&cfg.data_dir, &out, &cc)?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "converted {} rows ({} nnz) -> {} file(s), {} blocks ({} raw), {} in {:.1}s",
+        report.rows,
+        report.nnz,
+        report.files.len(),
+        report.blocks,
+        report.raw_blocks,
+        fmt_bytes(report.out_bytes),
+        secs
+    );
+    println!(
+        "  source I/O: {} over {} read call(s)   output: {}",
+        fmt_bytes(report.io.bytes),
+        report.io.read_calls.max(report.io.calls),
+        out
+    );
     Ok(())
 }
 
@@ -167,6 +208,27 @@ pub fn train(args: &Args) -> Result<()> {
     // real executor.) The effective [io] widens the coalesce gap to the
     // network-sized default when remote is active and nobody pinned it.
     tc.loader.cache = args.cache_config(cfg.cache)?;
+    // Layout-derived cache geometry: when the cache is on and neither a
+    // flag nor the config file pinned block_rows / locality_window, align
+    // them with the store's native block layout (v1 chunks, v2 blocks,
+    // zarr shards all report theirs). Execution-only — the emitted
+    // stream is unchanged — so deriving is always safe.
+    if tc.loader.cache.bytes > 0 {
+        if let Some(layout) = train_be.block_layout() {
+            let defaults = AppConfig::default();
+            let (rows, window) = derive_cache_geometry(&layout);
+            if !args.flags.contains_key("cache-block-rows")
+                && cfg.cache.block_rows == defaults.cache.block_rows
+            {
+                tc.loader.cache.block_rows = rows;
+            }
+            if !args.flags.contains_key("locality-window")
+                && cfg.cache.locality_window == defaults.cache.locality_window
+            {
+                tc.loader.cache.locality_window = window;
+            }
+        }
+    }
     tc.loader.io = args.effective_io_config(&cfg, &remote)?;
     tc.loader.workers = args.workers_config(cfg.workers)?;
     tc.loader.resilience = args.resilience_config(cfg.resilience)?;
@@ -243,6 +305,18 @@ pub fn autotune(args: &Args) -> Result<()> {
             ""
         }
     );
+    if let Some(layout) = coll.block_layout() {
+        let (rows, window) = derive_cache_geometry(&layout);
+        println!(
+            "store layout: {} blocks × ~{} rows (~{}/block{}) → derived cache_block_rows={} locality_window={}",
+            layout.n_blocks,
+            layout.rows_per_block,
+            fmt_bytes(layout.bytes_per_block as u64),
+            if layout.uniform { "" } else { ", non-uniform" },
+            rows,
+            window
+        );
+    }
     if opts.cache_bytes > 0 {
         let dataset_bytes = inputs.n_rows as u64 * inputs.avg_row_bytes;
         println!(
@@ -374,6 +448,50 @@ mod tests {
     #[test]
     fn calibrate_prints() {
         calibrate(&argv("calibrate")).unwrap();
+    }
+
+    #[test]
+    fn convert_then_train_on_v2() {
+        // gen v1 → convert to v2 → info + train on the converted dir:
+        // the full user path for adopting the block-compressed format.
+        let dir = TempDir::new("cli-convert").unwrap();
+        let src = dir.path().join("src").to_string_lossy().to_string();
+        let dst = dir.path().join("dst").to_string_lossy().to_string();
+        gen_data(&argv(&format!(
+            "gen-data --out {src} --preset tiny --plates 2 --cells 400"
+        )))
+        .unwrap();
+        convert(&argv(&format!(
+            "convert --data {src} --out {dst} --block-bytes 4096 --threads 2"
+        )))
+        .unwrap();
+        assert!(dir.path().join("dst/plate00.scs2").exists());
+        info(&argv(&format!("info --data {dst}"))).unwrap();
+        train(&argv(&format!(
+            "train --data {dst} --task cell_line --block 8 --fetch 4 --max-steps 4 --lr 0.01"
+        )))
+        .unwrap();
+    }
+
+    #[test]
+    fn convert_requires_out() {
+        assert!(convert(&argv("convert --data /tmp/nope")).is_err());
+    }
+
+    #[test]
+    fn gen_data_emits_v2_directly() {
+        let dir = TempDir::new("cli-gen2").unwrap();
+        let out = dir.path().to_string_lossy().to_string();
+        gen_data(&argv(&format!(
+            "gen-data --out {out} --preset tiny --plates 2 --cells 300 --format scs2"
+        )))
+        .unwrap();
+        assert!(dir.path().join("plate00.scs2").exists());
+        info(&argv(&format!("info --data {out}"))).unwrap();
+        assert!(gen_data(&argv(&format!(
+            "gen-data --out {out} --preset tiny --format scs9"
+        )))
+        .is_err());
     }
 
     #[test]

@@ -19,8 +19,17 @@ COMMANDS:
   gen-data    Generate the synthetic Tahoe-mini dataset
               --out DIR [--preset tiny|small|default] [--plates N]
               [--cells N] [--genes N] [--cell-lines N] [--drugs N]
-              [--chunk-rows N] [--seed N]
+              [--chunk-rows N] [--seed N] [--format scs|scs2]
+              [--block-bytes N (scs2 block budget)]
   info        Describe a dataset directory: --data DIR
+  convert     Rewrite any readable source into the block-compressed
+              .scs2 v2 format: --data SRC --out DST
+              [--block-bytes N] [--no-compress] [--threads N]
+              Sources: .scs v1 plates, dataset directories
+              (plate-by-plate, manifest rewritten), zarr-like dirs,
+              .dms dense memmaps. Output bytes are identical for any
+              --threads value. Defaults come from the [convert] table
+              of --config FILE.
   train       Train + evaluate one linear probe (§4.4)
               --data DIR --task cell_line|drug|moa_broad|moa_fine
               [--strategy random|streaming|buffer|block] [--block N]
@@ -46,6 +55,9 @@ COMMANDS:
               [--epochs N] [--block N] [--fetch N] [--smoke]
               fig11 (remote object store; not part of `all`) also takes
               [--latency-grid 0,5,20] [--in-flight-grid 1,4,8]
+              [--cache-mb N] [--block N] [--fetch N] [--smoke]
+              fig12 (.scs v1 vs .scs2 v2; not part of `all`) also takes
+              [--block-bytes-grid 16384,65536,262144] [--threads-grid 1,4]
               [--cache-mb N] [--block N] [--fetch N] [--smoke]
   serve       Serve --data DIR over HTTP range reads (mock object store)
               [--port N (0 = ephemeral)] [--latency-ms N]
@@ -123,6 +135,7 @@ pub fn run<I: IntoIterator<Item = String>>(argv: I) -> Result<()> {
     match cmd {
         "gen-data" => commands::gen_data(&args),
         "info" => commands::info(&args),
+        "convert" => commands::convert(&args),
         "train" => commands::train(&args),
         "autotune" => commands::autotune(&args),
         "calibrate" => commands::calibrate(&args),

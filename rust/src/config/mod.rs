@@ -19,7 +19,7 @@ use crate::coordinator::{
     SeedSchema, WorkerConfig,
 };
 use crate::store::iomodel::DiskModel;
-use crate::store::RemoteConfig;
+use crate::store::{ConvertConfig, RemoteConfig};
 use crate::util::toml::TomlDoc;
 
 /// Top-level app configuration.
@@ -83,6 +83,9 @@ pub struct AppConfig {
     pub resilience: ResilienceConfig,
     /// `[resume]` table: checkpoint/resume policy for `scdata train`.
     pub resume: ResumeConfig,
+    /// `[convert]` table: `scdata convert` ingest defaults (`.scs2`
+    /// block byte budget, compression, compressor threads).
+    pub convert: ConvertConfig,
 }
 
 /// `[resume]` table (`--checkpoint` / `--checkpoint-every` / `--resume`):
@@ -131,6 +134,7 @@ impl Default for AppConfig {
                 ..ResilienceConfig::default()
             },
             resume: ResumeConfig::default(),
+            convert: ConvertConfig::default(),
         }
     }
 }
@@ -214,6 +218,11 @@ impl AppConfig {
         let resume_path = doc.str_or("resume.path", &cfg.resume.path.to_string_lossy());
         cfg.resume.path = PathBuf::from(resume_path);
         cfg.resume.every_steps = doc.usize_or("resume.every_steps", cfg.resume.every_steps);
+        // [convert] table: scdata convert ingest defaults
+        cfg.convert.block_bytes =
+            doc.usize_or("convert.block_bytes", cfg.convert.block_bytes as usize) as u64;
+        cfg.convert.compress = doc.bool_or("convert.compress", cfg.convert.compress);
+        cfg.convert.threads = doc.usize_or("convert.threads", cfg.convert.threads);
         // [remote] table: HTTP object-store access
         cfg.remote.url = doc.str_or("remote.url", &cfg.remote.url);
         cfg.remote.connections = doc.usize_or("remote.connections", cfg.remote.connections);
@@ -292,7 +301,12 @@ impl AppConfig {
              \n\
              [resume]\n\
              path = \"{rp}\"\n\
-             every_steps = {rev}\n",
+             every_steps = {rev}\n\
+             \n\
+             [convert]\n\
+             block_bytes = {cbb}\n\
+             compress = {ccp}\n\
+             threads = {cth}\n",
             data = d.data_dir.display(),
             art = d.artifacts_dir.display(),
             res = d.results_dir.display(),
@@ -319,6 +333,9 @@ impl AppConfig {
             deg = d.resilience.degrade.as_str(),
             rp = d.resume.path.display(),
             rev = d.resume.every_steps,
+            cbb = d.convert.block_bytes,
+            ccp = d.convert.compress,
+            cth = d.convert.threads,
         )
     }
 }
@@ -341,6 +358,7 @@ mod tests {
         assert_eq!(a.remote, b.remote);
         assert_eq!(a.resilience, b.resilience);
         assert_eq!(a.resume, b.resume);
+        assert_eq!(a.convert, b.convert);
         // (io_gap_explicit is parse bookkeeping, deliberately excluded:
         // parsing any document that spells out coalesce_gap_bytes — the
         // generated defaults included — marks it explicit.)
@@ -590,6 +608,27 @@ locality_window = 8
         let d = AppConfig::default();
         assert_eq!(d.cache.bytes, 0);
         assert!(!d.cache.readahead);
+    }
+
+    #[test]
+    fn convert_table_parses() {
+        let c = AppConfig::from_toml(
+            r#"
+[convert]
+block_bytes = 65536
+compress = false
+threads = 3
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.convert.block_bytes, 65536);
+        assert!(!c.convert.compress);
+        assert_eq!(c.convert.threads, 3);
+        // defaults: 256 KiB decoded blocks, deflate on, auto threads
+        let d = AppConfig::default();
+        assert_eq!(d.convert.block_bytes, 1 << 18);
+        assert!(d.convert.compress);
+        assert_eq!(d.convert.threads, 0);
     }
 
     #[test]

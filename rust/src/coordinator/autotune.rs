@@ -9,6 +9,7 @@
 //! H(p) and whose fetch buffer fits the memory budget.
 
 use crate::store::iomodel::{AccessPattern, DiskModel, IoReport};
+use crate::store::BlockLayout;
 
 use super::builder::SeedSchema;
 use super::entropy::{corollary33_bounds, dist_entropy};
@@ -97,6 +98,25 @@ fn lane_scale(threads: usize, lanes: usize) -> f64 {
     let t = threads.max(1) as f64;
     let l = lanes.max(1) as f64;
     (1.0 - DECODE_PARALLEL_FRACTION) / l + DECODE_PARALLEL_FRACTION / t
+}
+
+/// Cache geometry derived from a backend's native block layout
+/// ([`crate::store::Backend::block_layout`]): `(cache_block_rows,
+/// locality_window)`.
+///
+/// The cache is block-granular, so a cache block aligned with the
+/// store's own decode unit (a v1 chunk, a v2 compressed block, a zarr
+/// shard chunk) loads in exactly one storage read and never decodes
+/// bytes it doesn't cache — any other size pays partial-block reads on
+/// one side or the other. The locality window (how far the cache-aware
+/// scheduler may execute fetches out of order to stack same-block
+/// fetches together) only pays while distinct blocks outnumber the
+/// window; it is capped because reorder slack past ~16 positions buys
+/// vanishing extra reuse while holding more fetches in flight.
+pub fn derive_cache_geometry(layout: &BlockLayout) -> (usize, usize) {
+    let block_rows = layout.rows_per_block.max(1);
+    let window = layout.n_blocks.clamp(1, 16);
+    (block_rows, window)
 }
 
 /// One evaluated configuration.
@@ -513,6 +533,30 @@ mod tests {
                 p.predicted_samples_per_sec_cached
             );
         }
+    }
+
+    #[test]
+    fn cache_geometry_follows_block_layout() {
+        // Aligned: cache blocks match the store's decode unit exactly.
+        let layout = BlockLayout {
+            rows_per_block: 128,
+            bytes_per_block: 64 << 10,
+            n_blocks: 400,
+            uniform: true,
+        };
+        assert_eq!(derive_cache_geometry(&layout), (128, 16));
+        // Few blocks: the window shrinks to the block count (no point
+        // reordering further than there are distinct blocks).
+        let small = BlockLayout { n_blocks: 3, ..layout };
+        assert_eq!(derive_cache_geometry(&small), (128, 3));
+        // Degenerate layouts still produce usable values.
+        let tiny = BlockLayout {
+            rows_per_block: 0,
+            bytes_per_block: 0,
+            n_blocks: 0,
+            uniform: false,
+        };
+        assert_eq!(derive_cache_geometry(&tiny), (1, 1));
     }
 
     #[test]

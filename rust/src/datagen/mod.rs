@@ -19,5 +19,5 @@
 pub mod tahoe;
 
 pub use tahoe::{
-    generate, open_collection, open_collection_subset, open_train_test, TahoeConfig,
+    generate, open_collection, open_collection_subset, open_train_test, PlateFormat, TahoeConfig,
 };

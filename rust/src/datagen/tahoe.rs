@@ -4,11 +4,68 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::store::anndata::{SparseChunkStore, StoreWriter};
-use crate::store::collection::PlateCollection;
+use crate::store::anndata::StoreWriter;
+use crate::store::collection::{AnyScsStore, PlateCollection};
 use crate::store::obs::{ObsColumn, ObsFrame};
+use crate::store::scs2::{Scs2Writer, DEFAULT_BLOCK_BYTES};
 use crate::util::json::Json;
 use crate::util::rng::{AliasTable, Rng};
+
+/// On-disk plate format emitted by [`generate`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlateFormat {
+    /// v1 `.scs`: fixed `chunk_rows` geometry, whole-file chunk table.
+    Scs,
+    /// v2 `.scs2`: byte-budgeted independently-compressed blocks.
+    Scs2,
+}
+
+impl PlateFormat {
+    pub fn parse(s: &str) -> Result<PlateFormat> {
+        match s {
+            "scs" | "v1" => Ok(PlateFormat::Scs),
+            "scs2" | "v2" => Ok(PlateFormat::Scs2),
+            other => bail!("unknown plate format {other:?} (expected scs|scs2)"),
+        }
+    }
+
+    fn ext(self) -> &'static str {
+        match self {
+            PlateFormat::Scs => "scs",
+            PlateFormat::Scs2 => "scs2",
+        }
+    }
+
+    fn manifest_format(self) -> &'static str {
+        match self {
+            PlateFormat::Scs => "tahoe-mini/scs",
+            PlateFormat::Scs2 => "tahoe-mini/scs2",
+        }
+    }
+}
+
+/// Writer over either plate format — same `push_row`/`finish` surface, so
+/// [`generate`] is format-agnostic past construction.
+enum PlateWriter {
+    V1(StoreWriter),
+    V2(Scs2Writer),
+}
+
+impl PlateWriter {
+    fn push_row(&mut self, indices: &[u32], data: &[f32]) -> Result<()> {
+        match self {
+            PlateWriter::V1(w) => w.push_row(indices, data),
+            PlateWriter::V2(w) => w.push_row(indices, data),
+        }
+    }
+
+    fn finish(self, obs: &ObsFrame) -> Result<PathBuf> {
+        match self {
+            PlateWriter::V1(w) => w.finish(obs),
+            PlateWriter::V2(w) => w.finish(obs),
+        }
+    }
+}
 
 /// Generator parameters. Defaults give a ~700k-cell, ~280 MB dataset that
 /// mirrors Tahoe-100M's structure at 1/143 the cell count.
@@ -24,10 +81,14 @@ pub struct TahoeConfig {
     pub n_moa_fine: usize,
     /// Mean transcripts (nonzeros) per cell.
     pub mean_nnz: f64,
-    /// Rows per compressed storage chunk (HDF5-chunk analogue).
+    /// Rows per compressed storage chunk (HDF5-chunk analogue; v1 only).
     pub chunk_rows: usize,
     pub compress: bool,
     pub seed: u64,
+    /// Plate file format to emit (`.scs` v1 or `.scs2` v2).
+    pub format: PlateFormat,
+    /// Decoded-byte budget per block (v2 only).
+    pub block_bytes: u64,
 }
 
 impl Default for TahoeConfig {
@@ -45,6 +106,8 @@ impl Default for TahoeConfig {
             chunk_rows: 256, // §Perf: 256 balances scattered-block decompress waste vs chunk-table overhead (see hotpath bench ablation)
             compress: true,
             seed: 7,
+            format: PlateFormat::Scs,
+            block_bytes: DEFAULT_BLOCK_BYTES,
         }
     }
 }
@@ -65,6 +128,8 @@ impl TahoeConfig {
             chunk_rows: 128,
             compress: true,
             seed: 7,
+            format: PlateFormat::Scs,
+            block_bytes: DEFAULT_BLOCK_BYTES,
         }
     }
 
@@ -278,8 +343,21 @@ pub fn generate(cfg: &TahoeConfig, dir: impl AsRef<Path>) -> Result<Vec<PathBuf>
         let mut rng = root_rng.fork(1000 + plate as u64);
         let conds = plate_conditions(cfg, plate);
         let per_cond = (cfg.cells_per_plate / conds.len()).max(1);
-        let path = dir.join(format!("plate{plate:02}.scs"));
-        let mut w = StoreWriter::create(&path, cfg.n_genes, cfg.chunk_rows, cfg.compress)?;
+        let path = dir.join(format!("plate{plate:02}.{}", cfg.format.ext()));
+        let mut w = match cfg.format {
+            PlateFormat::Scs => PlateWriter::V1(StoreWriter::create(
+                &path,
+                cfg.n_genes,
+                cfg.chunk_rows,
+                cfg.compress,
+            )?),
+            PlateFormat::Scs2 => PlateWriter::V2(Scs2Writer::create(
+                &path,
+                cfg.n_genes,
+                cfg.block_bytes,
+                cfg.compress,
+            )?),
+        };
         let mut cl_codes = Vec::new();
         let mut drug_codes = Vec::new();
         let mut dos_codes = Vec::new();
@@ -351,7 +429,7 @@ pub fn generate(cfg: &TahoeConfig, dir: impl AsRef<Path>) -> Result<Vec<PathBuf>
     }
     // dataset manifest
     let mut meta = Json::obj();
-    meta.set("format", Json::Str("tahoe-mini/scs".into()))
+    meta.set("format", Json::Str(cfg.format.manifest_format().into()))
         .set("n_plates", Json::Num(cfg.n_plates as f64))
         .set("cells_per_plate", Json::Num(cfg.cells_per_plate as f64))
         .set("n_genes", Json::Num(cfg.n_genes as f64))
@@ -376,8 +454,10 @@ pub fn generate(cfg: &TahoeConfig, dir: impl AsRef<Path>) -> Result<Vec<PathBuf>
     Ok(paths)
 }
 
-/// Open a generated dataset directory as a lazy plate collection.
-pub fn open_collection(dir: impl AsRef<Path>) -> Result<PlateCollection<SparseChunkStore>> {
+/// Open a generated dataset directory as a lazy plate collection. Plates
+/// may be `.scs` v1 or `.scs2` v2 (or a mix, e.g. mid-`scdata convert`):
+/// [`AnyScsStore`] dispatches per plate on the file magic.
+pub fn open_collection(dir: impl AsRef<Path>) -> Result<PlateCollection<AnyScsStore>> {
     open_collection_subset(dir, None)
 }
 
@@ -386,7 +466,7 @@ pub fn open_collection(dir: impl AsRef<Path>) -> Result<PlateCollection<SparseCh
 pub fn open_collection_subset(
     dir: impl AsRef<Path>,
     plates: Option<std::ops::Range<usize>>,
-) -> Result<PlateCollection<SparseChunkStore>> {
+) -> Result<PlateCollection<AnyScsStore>> {
     let dir = dir.as_ref();
     let meta_path = dir.join("dataset.json");
     let meta = Json::parse(
@@ -409,7 +489,7 @@ pub fn open_collection_subset(
         let name = p
             .as_str()
             .ok_or_else(|| anyhow::anyhow!("plate entry must be a string"))?;
-        stores.push(SparseChunkStore::open(dir.join(name))?);
+        stores.push(AnyScsStore::open(dir.join(name))?);
     }
     PlateCollection::new(stores)
 }
@@ -418,8 +498,8 @@ pub fn open_collection_subset(
 pub fn open_train_test(
     dir: impl AsRef<Path>,
 ) -> Result<(
-    PlateCollection<SparseChunkStore>,
-    PlateCollection<SparseChunkStore>,
+    PlateCollection<AnyScsStore>,
+    PlateCollection<AnyScsStore>,
 )> {
     let dir = dir.as_ref();
     let all = open_collection(dir)?;
@@ -438,7 +518,7 @@ mod tests {
     use crate::store::Backend;
     use crate::util::tempdir::TempDir;
 
-    fn tiny_dir() -> (TempDir, PlateCollection<SparseChunkStore>) {
+    fn tiny_dir() -> (TempDir, PlateCollection<AnyScsStore>) {
         let dir = TempDir::new("tahoe").unwrap();
         let cfg = TahoeConfig::tiny();
         generate(&cfg, dir.path()).unwrap();
@@ -568,5 +648,44 @@ mod tests {
     #[test]
     fn open_collection_missing_dir_errors() {
         assert!(open_collection("/nonexistent/scdata-test").is_err());
+    }
+
+    #[test]
+    fn v2_generation_matches_v1_cell_for_cell() {
+        // The expression model is format-independent: the same seed must
+        // produce the same cells whether plates land in v1 chunks or v2
+        // byte-budgeted blocks.
+        let dir_a = TempDir::new("tv1").unwrap();
+        let dir_b = TempDir::new("tv2").unwrap();
+        let mut cfg = TahoeConfig::tiny();
+        cfg.n_plates = 2;
+        cfg.cells_per_plate = 300;
+        generate(&cfg, dir_a.path()).unwrap();
+        cfg.format = PlateFormat::Scs2;
+        cfg.block_bytes = 1 << 12;
+        generate(&cfg, dir_b.path()).unwrap();
+        let a = open_collection(dir_a.path()).unwrap();
+        let b = open_collection(dir_b.path()).unwrap();
+        assert_eq!(a.n_rows(), b.n_rows());
+        let idx: Vec<u32> = (0..a.n_rows() as u32).step_by(3).collect();
+        assert_eq!(a.fetch_rows(&idx).unwrap().x, b.fetch_rows(&idx).unwrap().x);
+        assert_eq!(a.obs().n_rows, b.obs().n_rows);
+        // Plates really are v2 (dispatch is by magic, not extension).
+        assert!(dir_b.path().join("plate00.scs2").exists());
+        let meta = Json::parse(
+            &std::fs::read_to_string(dir_b.path().join("dataset.json")).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(
+            meta.req("format").unwrap().as_str(),
+            Some("tahoe-mini/scs2")
+        );
+    }
+
+    #[test]
+    fn plate_format_parses() {
+        assert_eq!(PlateFormat::parse("scs").unwrap(), PlateFormat::Scs);
+        assert_eq!(PlateFormat::parse("v2").unwrap(), PlateFormat::Scs2);
+        assert!(PlateFormat::parse("hdf5").is_err());
     }
 }

@@ -43,7 +43,7 @@ use super::decode::{
 use super::fault::IoFault;
 use super::iomodel::{AccessPattern, IoReport};
 use super::obs::ObsFrame;
-use super::{check_sorted_indices, contiguous_runs, Backend, FetchResult};
+use super::{check_sorted_indices, contiguous_runs, Backend, BlockLayout, FetchResult};
 
 // Shared with the HTTP range-read mirror in `store::remote`, which parses
 // the same on-disk layout over the wire.
@@ -123,25 +123,32 @@ impl StoreWriter {
         if self.cur_rows == 0 {
             return Ok(());
         }
-        let mut raw =
-            Vec::with_capacity(self.cur_indices.len() * 4 + self.cur_data.len() * 4);
+        // §Perf: writer scratch is pooled — bulk ingest (`scdata
+        // convert`, datagen) previously paid fresh raw + encoder-output
+        // allocations on every chunk.
+        let pool = BufferPool::global();
+        let mut raw = pool.take_buf();
+        raw.reserve(self.cur_indices.len() * 4 + self.cur_data.len() * 4);
         for &i in &self.cur_indices {
             raw.extend_from_slice(&i.to_le_bytes());
         }
         for &v in &self.cur_data {
             raw.extend_from_slice(&v.to_le_bytes());
         }
+        let raw_len = raw.len() as u64;
         let payload = if self.compress {
-            let mut enc = DeflateEncoder::new(Vec::new(), Compression::fast());
+            let mut enc = DeflateEncoder::new(pool.take_buf(), Compression::fast());
             enc.write_all(&raw)?;
             enc.finish()?
         } else {
-            raw.clone()
+            std::mem::take(&mut raw)
         };
         self.file.write_all(&payload)?;
         self.chunk_table
-            .push((self.offset, payload.len() as u64, raw.len() as u64));
+            .push((self.offset, payload.len() as u64, raw_len));
         self.offset += payload.len() as u64;
+        pool.give_buf(raw);
+        pool.give_buf(payload);
         self.cur_indices.clear();
         self.cur_data.clear();
         self.cur_rows = 0;
@@ -398,6 +405,18 @@ impl Backend for SparseChunkStore {
     fn set_io_pipeline(&self, pipeline: IoPipeline) {
         self.pipeline.set(pipeline);
     }
+
+    fn block_layout(&self) -> Option<BlockLayout> {
+        if self.chunk_table.is_empty() {
+            return None;
+        }
+        Some(BlockLayout {
+            rows_per_block: self.chunk_rows,
+            bytes_per_block: (self.nnz() * 8 / self.chunk_table.len() as u64) as usize,
+            n_blocks: self.chunk_table.len(),
+            uniform: true,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -596,6 +615,17 @@ mod tests {
         let mut w = StoreWriter::create(dir.join("m.scs"), 8, 4, false).unwrap();
         w.push_row(&[0], &[1.0]).unwrap();
         assert!(w.finish(&ObsFrame::new(5)).is_err());
+    }
+
+    #[test]
+    fn block_layout_reports_chunk_geometry() {
+        let dir = TempDir::new("scs").unwrap();
+        let (store, _) = build(&dir, 37, 16, 8, true);
+        let l = store.block_layout().unwrap();
+        assert_eq!(l.rows_per_block, 8);
+        assert_eq!(l.n_blocks, 5);
+        assert!(l.uniform);
+        assert!(l.bytes_per_block > 0);
     }
 
     #[test]

@@ -34,7 +34,7 @@ use super::decode::{BufferPool, IoPipeline};
 use super::fault::IoFault;
 use super::iomodel::{AccessPattern, IoReport};
 use super::obs::ObsFrame;
-use super::{check_sorted_indices, Backend, FetchResult};
+use super::{check_sorted_indices, Backend, BlockLayout, FetchResult};
 
 /// Cache configuration.
 #[derive(Clone, Copy, Debug)]
@@ -616,6 +616,10 @@ impl Backend for CachingBackend {
         // Miss fills and readahead loads run through the inner backend,
         // which is where decode parallelism and coalescing live.
         self.core.inner.set_io_pipeline(pipeline);
+    }
+
+    fn block_layout(&self) -> Option<BlockLayout> {
+        self.core.inner.block_layout()
     }
 }
 

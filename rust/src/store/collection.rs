@@ -3,12 +3,94 @@
 //! them as one indexable dataset without rewriting anything on disk —
 //! exactly the property scDataset relies on ("no format conversion").
 
-use anyhow::{bail, Result};
+use std::path::Path;
 
+use anyhow::{bail, Context, Result};
+
+use super::anndata::SparseChunkStore;
 use super::decode::BufferPool;
 use super::iomodel::{AccessPattern, IoReport};
 use super::obs::ObsFrame;
-use super::{Backend, CsrBatch, FetchResult, IoPipeline};
+use super::scs2::Scs2Store;
+use super::{Backend, BlockLayout, CsrBatch, FetchResult, IoPipeline};
+
+/// A plate store of either native format, dispatched by on-disk magic.
+/// Lets one `PlateCollection<AnyScsStore>` hold `.scs` v1 and `.scs2`
+/// plates behind a concrete type (manifest dispatch in `datagen`, source
+/// dispatch in `store::convert`).
+pub enum AnyScsStore {
+    V1(SparseChunkStore),
+    V2(Scs2Store),
+}
+
+impl AnyScsStore {
+    /// Open a plate file, sniffing the format from its leading magic
+    /// (falling back to the `.scs2` extension for unreadable heads so
+    /// the open error comes from the right reader).
+    pub fn open(path: impl AsRef<Path>) -> Result<AnyScsStore> {
+        let path = path.as_ref();
+        let mut head = [0u8; 8];
+        let is_v2 = std::fs::File::open(path)
+            .and_then(|f| {
+                use std::os::unix::fs::FileExt;
+                f.read_exact_at(&mut head, 0)
+            })
+            .map(|_| &head == super::scs2::MAGIC2)
+            .unwrap_or_else(|_| {
+                path.extension().and_then(|e| e.to_str()) == Some("scs2")
+            });
+        if is_v2 {
+            Ok(AnyScsStore::V2(Scs2Store::open(path).with_context(|| {
+                format!("open v2 plate {}", path.display())
+            })?))
+        } else {
+            Ok(AnyScsStore::V1(SparseChunkStore::open(path).with_context(
+                || format!("open v1 plate {}", path.display()),
+            )?))
+        }
+    }
+
+    fn inner(&self) -> &dyn Backend {
+        match self {
+            AnyScsStore::V1(s) => s,
+            AnyScsStore::V2(s) => s,
+        }
+    }
+}
+
+impl Backend for AnyScsStore {
+    fn n_rows(&self) -> usize {
+        self.inner().n_rows()
+    }
+
+    fn n_cols(&self) -> usize {
+        self.inner().n_cols()
+    }
+
+    fn obs(&self) -> &ObsFrame {
+        self.inner().obs()
+    }
+
+    fn pattern(&self) -> AccessPattern {
+        self.inner().pattern()
+    }
+
+    fn name(&self) -> &str {
+        self.inner().name()
+    }
+
+    fn fetch_rows(&self, sorted: &[u32]) -> Result<FetchResult> {
+        self.inner().fetch_rows(sorted)
+    }
+
+    fn set_io_pipeline(&self, pipeline: IoPipeline) {
+        self.inner().set_io_pipeline(pipeline);
+    }
+
+    fn block_layout(&self) -> Option<BlockLayout> {
+        self.inner().block_layout()
+    }
+}
 
 /// A row-wise concatenation of homogeneous backends.
 pub struct PlateCollection<B: Backend> {
@@ -131,6 +213,25 @@ impl<B: Backend> Backend for PlateCollection<B> {
             p.set_io_pipeline(pipeline);
         }
     }
+
+    fn block_layout(&self) -> Option<BlockLayout> {
+        // Aggregate the per-plate geometry: block size hints come from
+        // the first plate (plates are homogeneous by construction),
+        // block counts sum, and the layout is only uniform if every
+        // plate agrees on rows_per_block.
+        let layouts: Option<Vec<BlockLayout>> =
+            self.plates.iter().map(|p| p.block_layout()).collect();
+        let layouts = layouts?;
+        let first = *layouts.first()?;
+        Some(BlockLayout {
+            rows_per_block: first.rows_per_block,
+            bytes_per_block: first.bytes_per_block,
+            n_blocks: layouts.iter().map(|l| l.n_blocks).sum(),
+            uniform: layouts
+                .iter()
+                .all(|l| l.uniform && l.rows_per_block == first.rows_per_block),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -230,6 +331,48 @@ mod tests {
     fn empty_collection_rejected() {
         let r: Result<PlateCollection<SparseChunkStore>> = PlateCollection::new(vec![]);
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn any_store_dispatches_on_magic() {
+        let dir = TempDir::new("coll").unwrap();
+        let v1 = plate(&dir, "p0.scs", 10, "plate0");
+        let mut w =
+            crate::store::scs2::Scs2Writer::create(dir.join("p1.scs2"), 8, 128, true)
+                .unwrap();
+        for r in 0..6usize {
+            w.push_row(&[(r % 8) as u32], &[r as f32]).unwrap();
+        }
+        let mut obs = ObsFrame::new(6);
+        obs.push(ObsColumn::new("plate", vec!["plate1".into()], vec![0; 6]).unwrap())
+            .unwrap();
+        w.finish(&obs).unwrap();
+        let a = AnyScsStore::open(dir.join("p0.scs")).unwrap();
+        let b = AnyScsStore::open(dir.join("p1.scs2")).unwrap();
+        assert!(matches!(a, AnyScsStore::V1(_)));
+        assert!(matches!(b, AnyScsStore::V2(_)));
+        assert_eq!(a.name(), "anndata-scs");
+        assert_eq!(b.name(), "anndata-scs2");
+        drop(v1);
+        // A mixed collection fetches across formats.
+        let c = PlateCollection::new(vec![a, b]).unwrap();
+        assert_eq!(c.n_rows(), 16);
+        let got = c.fetch_rows(&[9, 10, 15]).unwrap();
+        assert_eq!(got.x.row(0).1, &[9.0]);
+        assert_eq!(got.x.row(1).1, &[0.0]);
+        assert_eq!(got.x.row(2).1, &[5.0]);
+        assert!(AnyScsStore::open(dir.join("missing.scs2")).is_err());
+    }
+
+    #[test]
+    fn collection_block_layout_aggregates() {
+        let dir = TempDir::new("coll").unwrap();
+        let c = collection(&dir);
+        let l = c.block_layout().unwrap();
+        assert_eq!(l.rows_per_block, 4, "v1 chunk_rows");
+        // ceil(10/4) + ceil(6/4) + ceil(14/4) chunks
+        assert_eq!(l.n_blocks, 3 + 2 + 4);
+        assert!(l.uniform);
     }
 
     #[test]

@@ -1,0 +1,473 @@
+//! `scdata convert` — parallel ingest of any backend into `.scs` v2.
+//!
+//! BioNeMo SCDL's convert-once pipeline motivates the shape: read the
+//! source once through its own [`Backend`] (so `.scs` v1, the zarr-like
+//! dir, the dense memmap and whole plate collections all work), slice
+//! rows into byte-budgeted blocks, and deflate the blocks on the shared
+//! [`DecodePool`] while an in-order writer appends payloads and builds
+//! the block index — the same submit-in-order / complete-in-order
+//! reorder pattern the executor uses for fetches.
+//!
+//! **Determinism contract:** block boundaries are computed serially from
+//! the row nnz sequence and the byte budget *before* any parallel work,
+//! and `run_batch` returns results in job order — so the output file is
+//! byte-identical for any `--threads`, and identical to what a serial
+//! [`Scs2Writer`] emitting the same rows would produce.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::collection::AnyScsStore;
+use super::decode::{BufferPool, DecodePool, IoPipeline};
+use super::iomodel::IoReport;
+use super::memmap_dense::DenseMemmapStore;
+use super::scs2::{block_raw_bytes, encode_block, Scs2Writer, DEFAULT_BLOCK_BYTES};
+use super::zarr_like::ShardedZarrStore;
+use super::Backend;
+use crate::util::json::Json;
+
+/// Converter knobs (`[convert]` in `configs/default.toml`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ConvertConfig {
+    /// Decoded-bytes-per-block budget for the output file.
+    pub block_bytes: u64,
+    /// Deflate blocks (with per-block raw passthrough when it doesn't
+    /// pay). Off = every block stored raw.
+    pub compress: bool,
+    /// Compressor workers; `0` = one per available core.
+    pub threads: usize,
+    /// Rows per source fetch while streaming the input.
+    pub read_rows: usize,
+    /// Print progress lines while converting.
+    pub progress: bool,
+}
+
+impl Default for ConvertConfig {
+    fn default() -> ConvertConfig {
+        ConvertConfig {
+            block_bytes: DEFAULT_BLOCK_BYTES,
+            compress: true,
+            threads: 0,
+            read_rows: 4096,
+            progress: false,
+        }
+    }
+}
+
+impl ConvertConfig {
+    /// `threads` with `0` resolved to the machine's parallelism (same
+    /// clamp as the decode pipeline).
+    pub fn resolved_threads(&self) -> usize {
+        IoPipeline {
+            decode_threads: self.threads,
+            coalesce_gap_bytes: 0,
+        }
+        .resolved_decode_threads()
+    }
+}
+
+/// What one conversion did (mergeable across plates of a collection).
+#[derive(Clone, Debug, Default)]
+pub struct ConvertReport {
+    /// Rows written.
+    pub rows: usize,
+    /// Nonzeros written.
+    pub nnz: u64,
+    /// Blocks written.
+    pub blocks: usize,
+    /// Blocks stored raw (compression didn't pay, or was off).
+    pub raw_blocks: usize,
+    /// Output bytes on disk (whole files, index + trailer included).
+    pub out_bytes: u64,
+    /// Source-side I/O accounting for the streaming read.
+    pub io: IoReport,
+    /// Output files written, in order.
+    pub files: Vec<PathBuf>,
+}
+
+impl ConvertReport {
+    pub fn add(&mut self, other: &ConvertReport) {
+        self.rows += other.rows;
+        self.nnz += other.nnz;
+        self.blocks += other.blocks;
+        self.raw_blocks += other.raw_blocks;
+        self.out_bytes += other.out_bytes;
+        self.io.add(&other.io);
+        self.files.extend(other.files.iter().cloned());
+    }
+}
+
+/// One byte-budgeted block awaiting compression.
+struct PendingBlock {
+    row_nnz: Vec<u32>,
+    indices: Vec<u32>,
+    data: Vec<f32>,
+}
+
+/// Encode a wave of blocks on the shared pool (results in job order) and
+/// append them to the writer in that order.
+fn flush_wave(
+    wave: &mut Vec<PendingBlock>,
+    writer: &mut Scs2Writer,
+    compress: bool,
+    threads: usize,
+    report: &mut ConvertReport,
+) -> Result<()> {
+    if wave.is_empty() {
+        return Ok(());
+    }
+    let jobs: Vec<_> = wave
+        .drain(..)
+        .map(|b| {
+            move || -> Result<(Vec<u32>, Vec<u8>, u64, bool)> {
+                let raw = block_raw_bytes(&b.indices, &b.data);
+                let raw_len = raw.len() as u64;
+                let (payload, stored_raw) = encode_block(&raw, compress)?;
+                BufferPool::global().give_buf(raw);
+                Ok((b.row_nnz, payload, raw_len, stored_raw))
+            }
+        })
+        .collect();
+    for encoded in DecodePool::global().run_batch(jobs, threads) {
+        let (row_nnz, payload, raw_len, stored_raw) = encoded?;
+        writer.append_encoded(&row_nnz, &payload, raw_len, stored_raw)?;
+        BufferPool::global().give_buf(payload);
+        report.blocks += 1;
+        report.raw_blocks += stored_raw as usize;
+    }
+    Ok(())
+}
+
+/// Stream `src` into a single `.scs2` file at `out`.
+pub fn convert_backend(
+    src: &dyn Backend,
+    out: impl AsRef<Path>,
+    cfg: &ConvertConfig,
+) -> Result<ConvertReport> {
+    let out = out.as_ref();
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("mkdir {}", parent.display()))?;
+        }
+    }
+    let n_rows = src.n_rows();
+    let threads = cfg.resolved_threads();
+    // Keep a few waves' worth of blocks buffered so the compressors stay
+    // busy without holding the whole dataset decoded in memory.
+    let wave_cap = (threads * 4).max(8);
+    let mut writer = Scs2Writer::create(out, src.n_cols(), cfg.block_bytes, cfg.compress)?;
+    let mut report = ConvertReport::default();
+    let mut wave: Vec<PendingBlock> = Vec::with_capacity(wave_cap);
+    let mut cur = PendingBlock {
+        row_nnz: Vec::new(),
+        indices: Vec::new(),
+        data: Vec::new(),
+    };
+    let mut next_pct = 10usize;
+    let mut start = 0usize;
+    while start < n_rows {
+        let end = (start + cfg.read_rows.max(1)).min(n_rows);
+        let idx: Vec<u32> = (start as u32..end as u32).collect();
+        let fetch = src.fetch_rows(&idx)?;
+        report.io.add(&fetch.io);
+        for r in 0..fetch.x.n_rows {
+            let (cols, vals) = fetch.x.row(r);
+            // The writer's boundary rule, verbatim: cut before a row
+            // that would push the decoded block past the budget.
+            if !cur.row_nnz.is_empty()
+                && (cur.indices.len() + cols.len()) as u64 * 8 > cfg.block_bytes
+            {
+                wave.push(std::mem::replace(
+                    &mut cur,
+                    PendingBlock {
+                        row_nnz: Vec::new(),
+                        indices: Vec::new(),
+                        data: Vec::new(),
+                    },
+                ));
+                if wave.len() >= wave_cap {
+                    flush_wave(&mut wave, &mut writer, cfg.compress, threads, &mut report)?;
+                }
+            }
+            cur.row_nnz.push(cols.len() as u32);
+            cur.indices.extend_from_slice(cols);
+            cur.data.extend_from_slice(vals);
+            report.nnz += cols.len() as u64;
+        }
+        report.rows = end;
+        start = end;
+        if cfg.progress && n_rows > 0 {
+            let pct = report.rows * 100 / n_rows;
+            while next_pct <= pct {
+                println!(
+                    "convert: {}/{} rows ({}%) -> {}",
+                    report.rows,
+                    n_rows,
+                    next_pct,
+                    out.display()
+                );
+                next_pct += 10;
+            }
+        }
+    }
+    if !cur.row_nnz.is_empty() {
+        wave.push(cur);
+    }
+    flush_wave(&mut wave, &mut writer, cfg.compress, threads, &mut report)?;
+    let path = writer.finish(src.obs())?;
+    report.out_bytes = std::fs::metadata(&path)?.len();
+    report.files.push(path);
+    Ok(report)
+}
+
+/// Convert a generated dataset directory (`dataset.json` + per-plate
+/// stores) plate-by-plate into `out_dir`, rewriting the manifest with
+/// `format: "tahoe-mini/scs2"` and the `.scs2` plate names — so the
+/// converted directory opens through the same `open_collection` /
+/// `train --data` paths as the source.
+fn convert_dataset_dir(
+    src_dir: &Path,
+    out_dir: &Path,
+    cfg: &ConvertConfig,
+) -> Result<ConvertReport> {
+    let meta_path = src_dir.join("dataset.json");
+    let mut meta = Json::parse(
+        &std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("read {}", meta_path.display()))?,
+    )?;
+    let names: Vec<String> = meta
+        .req("plates")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("plates must be an array"))?
+        .iter()
+        .map(|p| {
+            p.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!("plate entry must be a string"))
+        })
+        .collect::<Result<_>>()?;
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("mkdir {}", out_dir.display()))?;
+    let mut report = ConvertReport::default();
+    let mut out_names = Vec::with_capacity(names.len());
+    for name in &names {
+        let src = AnyScsStore::open(src_dir.join(name))?;
+        let out_name = format!(
+            "{}.scs2",
+            name.strip_suffix(".scs2")
+                .or_else(|| name.strip_suffix(".scs"))
+                .unwrap_or(name)
+        );
+        if cfg.progress {
+            println!("convert: plate {name} -> {out_name}");
+        }
+        report.add(&convert_backend(&src, out_dir.join(&out_name), cfg)?);
+        out_names.push(out_name);
+    }
+    meta.set("format", Json::Str("tahoe-mini/scs2".into())).set(
+        "plates",
+        Json::Arr(out_names.into_iter().map(Json::Str).collect()),
+    );
+    std::fs::write(out_dir.join("dataset.json"), meta.to_pretty())?;
+    Ok(report)
+}
+
+/// Open any local source path as a backend for conversion: a dataset
+/// directory (`dataset.json`), a zarr-like directory (`meta.json`), a
+/// `.scs`/`.scs2` file, or a `.dms` dense memmap.
+pub fn open_source(path: impl AsRef<Path>) -> Result<Arc<dyn Backend>> {
+    let path = path.as_ref();
+    if path.is_dir() {
+        if path.join("dataset.json").exists() {
+            return Ok(Arc::new(crate::datagen::open_collection(path)?));
+        }
+        if path.join("meta.json").exists() {
+            return Ok(Arc::new(ShardedZarrStore::open(path)?));
+        }
+        bail!(
+            "{}: directory is neither a dataset (dataset.json) nor zarr-like (meta.json)",
+            path.display()
+        );
+    }
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("dms") => Ok(Arc::new(DenseMemmapStore::open(path)?)),
+        _ => Ok(Arc::new(AnyScsStore::open(path)?)),
+    }
+}
+
+/// Convert whatever lives at `src` into `.scs2` at `out`: dataset
+/// directories convert plate-by-plate (preserving the collection
+/// layout), everything else streams into a single file.
+pub fn convert_path(
+    src: impl AsRef<Path>,
+    out: impl AsRef<Path>,
+    cfg: &ConvertConfig,
+) -> Result<ConvertReport> {
+    let (src, out) = (src.as_ref(), out.as_ref());
+    if src.is_dir() && src.join("dataset.json").exists() {
+        return convert_dataset_dir(src, out, cfg);
+    }
+    let backend = open_source(src)?;
+    convert_backend(backend.as_ref(), out, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::anndata::StoreWriter;
+    use crate::store::memmap_dense::convert_to_memmap;
+    use crate::store::obs::{ObsColumn, ObsFrame};
+    use crate::store::scs2::Scs2Store;
+    use crate::store::zarr_like::convert_to_zarr;
+    use crate::util::rng::Rng;
+    use crate::util::tempdir::TempDir;
+
+    fn build_v1(dir: &TempDir, n_rows: usize, n_cols: usize) -> PathBuf {
+        let mut rng = Rng::new(123);
+        let mut w = StoreWriter::create(dir.join("src.scs"), n_cols, 8, true).unwrap();
+        for r in 0..n_rows {
+            let nnz = rng.range(1, (n_cols / 2).max(2));
+            let mut cols: Vec<u32> = (0..n_cols as u32).collect();
+            rng.shuffle(&mut cols);
+            let mut cols: Vec<u32> = cols[..nnz].to_vec();
+            cols.sort_unstable();
+            let vals: Vec<f32> = cols.iter().map(|&c| (r as f32) + c as f32 * 0.01).collect();
+            w.push_row(&cols, &vals).unwrap();
+        }
+        let mut obs = ObsFrame::new(n_rows);
+        obs.push(
+            ObsColumn::new(
+                "plate",
+                vec!["p0".into()],
+                vec![0; n_rows],
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        w.finish(&obs).unwrap()
+    }
+
+    fn cfg_with(threads: usize) -> ConvertConfig {
+        ConvertConfig {
+            block_bytes: 256,
+            compress: true,
+            threads,
+            read_rows: 17, // deliberately unaligned with block boundaries
+            progress: false,
+        }
+    }
+
+    #[test]
+    fn v1_to_v2_preserves_contents() {
+        let dir = TempDir::new("cvt").unwrap();
+        let v1_path = build_v1(&dir, 100, 16);
+        let v1 = crate::store::anndata::SparseChunkStore::open(&v1_path).unwrap();
+        let report =
+            convert_path(&v1_path, dir.join("out.scs2"), &cfg_with(1)).unwrap();
+        assert_eq!(report.rows, 100);
+        assert_eq!(report.files.len(), 1);
+        assert!(report.blocks > 1);
+        let v2 = Scs2Store::open(dir.join("out.scs2")).unwrap();
+        assert_eq!(v2.n_rows(), 100);
+        let idx: Vec<u32> = (0..100).collect();
+        assert_eq!(v1.fetch_rows(&idx).unwrap().x, v2.fetch_rows(&idx).unwrap().x);
+        assert_eq!(v1.obs(), v2.obs());
+    }
+
+    #[test]
+    fn output_byte_identical_for_any_thread_count() {
+        let dir = TempDir::new("cvt").unwrap();
+        let v1_path = build_v1(&dir, 200, 16);
+        for (threads, name) in [(1usize, "t1.scs2"), (4, "t4.scs2"), (0, "t0.scs2")] {
+            convert_path(&v1_path, dir.join(name), &cfg_with(threads)).unwrap();
+        }
+        let t1 = std::fs::read(dir.join("t1.scs2")).unwrap();
+        let t4 = std::fs::read(dir.join("t4.scs2")).unwrap();
+        let t0 = std::fs::read(dir.join("t0.scs2")).unwrap();
+        assert_eq!(t1, t4, "thread count must not change output bytes");
+        assert_eq!(t1, t0);
+    }
+
+    #[test]
+    fn matches_serial_writer_bytes() {
+        // The converter and a direct serial Scs2Writer over the same rows
+        // must produce identical files (shared boundary rule + codec).
+        let dir = TempDir::new("cvt").unwrap();
+        let v1_path = build_v1(&dir, 120, 16);
+        let v1 = crate::store::anndata::SparseChunkStore::open(&v1_path).unwrap();
+        convert_path(&v1_path, dir.join("cvt.scs2"), &cfg_with(4)).unwrap();
+        let mut w = Scs2Writer::create(dir.join("direct.scs2"), 16, 256, true).unwrap();
+        let idx: Vec<u32> = (0..120).collect();
+        let all = v1.fetch_rows(&idx).unwrap().x;
+        for r in 0..120 {
+            let (cols, vals) = all.row(r);
+            w.push_row(cols, vals).unwrap();
+        }
+        w.finish(v1.obs()).unwrap();
+        assert_eq!(
+            std::fs::read(dir.join("cvt.scs2")).unwrap(),
+            std::fs::read(dir.join("direct.scs2")).unwrap()
+        );
+    }
+
+    #[test]
+    fn zarr_and_memmap_sources_roundtrip() {
+        let dir = TempDir::new("cvt").unwrap();
+        let v1_path = build_v1(&dir, 64, 16);
+        let v1 = crate::store::anndata::SparseChunkStore::open(&v1_path).unwrap();
+        let idx: Vec<u32> = (0..64).collect();
+        let want = v1.fetch_rows(&idx).unwrap().x;
+
+        let zdir = convert_to_zarr(&v1, dir.join("z"), 8, 2).unwrap();
+        convert_path(&zdir, dir.join("from_zarr.scs2"), &cfg_with(2)).unwrap();
+        let vz = Scs2Store::open(dir.join("from_zarr.scs2")).unwrap();
+        assert_eq!(vz.fetch_rows(&idx).unwrap().x, want);
+
+        convert_to_memmap(&v1, dir.join("m.dms"), 32).unwrap();
+        convert_path(dir.join("m.dms"), dir.join("from_dms.scs2"), &cfg_with(2))
+            .unwrap();
+        let vm = Scs2Store::open(dir.join("from_dms.scs2")).unwrap();
+        assert_eq!(vm.fetch_rows(&idx).unwrap().x, want);
+    }
+
+    #[test]
+    fn dataset_dir_converts_with_manifest() {
+        let dir = TempDir::new("cvt").unwrap();
+        let mut tcfg = crate::datagen::TahoeConfig::tiny();
+        tcfg.n_plates = 2;
+        tcfg.cells_per_plate = 150;
+        crate::datagen::generate(&tcfg, dir.join("src")).unwrap();
+        let report =
+            convert_path(dir.join("src"), dir.join("dst"), &ConvertConfig::default())
+                .unwrap();
+        assert_eq!(report.rows, 300);
+        assert_eq!(report.files.len(), 2);
+        let meta = Json::parse(
+            &std::fs::read_to_string(dir.join("dst/dataset.json")).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(meta.req("format").unwrap().as_str(), Some("tahoe-mini/scs2"));
+        let names = meta.req("plates").unwrap().as_arr().unwrap().to_vec();
+        assert!(names
+            .iter()
+            .all(|n| n.as_str().unwrap().ends_with(".scs2")));
+        // And the converted dir opens as a collection with equal rows.
+        let src = crate::datagen::open_collection(dir.join("src")).unwrap();
+        let dst = crate::datagen::open_collection(dir.join("dst")).unwrap();
+        let idx: Vec<u32> = (0..300).collect();
+        assert_eq!(src.fetch_rows(&idx).unwrap().x, dst.fetch_rows(&idx).unwrap().x);
+        assert_eq!(src.obs(), dst.obs());
+    }
+
+    #[test]
+    fn rejects_unknown_sources() {
+        let dir = TempDir::new("cvt").unwrap();
+        std::fs::create_dir_all(dir.join("empty")).unwrap();
+        assert!(convert_path(dir.join("empty"), dir.join("o.scs2"), &ConvertConfig::default()).is_err());
+        std::fs::write(dir.join("junk.scs"), b"junk").unwrap();
+        assert!(convert_path(dir.join("junk.scs"), dir.join("o.scs2"), &ConvertConfig::default()).is_err());
+    }
+}

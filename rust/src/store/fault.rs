@@ -38,7 +38,7 @@ use crate::util::rng::domains;
 use super::decode::IoPipeline;
 use super::iomodel::AccessPattern;
 use super::obs::ObsFrame;
-use super::{Backend, FetchResult};
+use super::{Backend, BlockLayout, FetchResult};
 
 /// The failure classes the retry layer distinguishes. Everything except
 /// `Permanent` is worth retrying: transient errors and timeouts may
@@ -375,6 +375,10 @@ impl Backend for FaultInjectingBackend {
 
     fn set_io_pipeline(&self, pipeline: IoPipeline) {
         self.inner.set_io_pipeline(pipeline);
+    }
+
+    fn block_layout(&self) -> Option<BlockLayout> {
+        self.inner.block_layout()
     }
 }
 

@@ -17,6 +17,7 @@
 pub mod anndata;
 pub mod cache;
 pub mod collection;
+pub mod convert;
 pub mod csr;
 pub mod decode;
 pub mod fault;
@@ -27,13 +28,17 @@ pub mod multimodal;
 pub mod obs;
 pub mod remote;
 pub mod rowgroup;
+pub mod scs2;
 pub mod zarr_like;
 
 use anyhow::Result;
 
 pub use cache::{CacheConfig, CacheStats, CachingBackend};
+pub use collection::AnyScsStore;
+pub use convert::{convert_path, ConvertConfig, ConvertReport};
 pub use csr::CsrBatch;
 pub use decode::{BufferPool, DecodePool, IoPipeline};
+pub use scs2::{Scs2Store, Scs2Writer, DEFAULT_BLOCK_BYTES};
 pub use fault::{FaultConfig, FaultInjectingBackend, FaultKind, IoFault};
 pub use iomodel::{AccessPattern, DiskModel, IoReport, LatencyHistogram};
 pub use mock_http::{MockFaultConfig, MockHttpServer, MockServerStats};
@@ -50,6 +55,25 @@ pub use remote::{
 pub struct FetchResult {
     pub x: CsrBatch,
     pub io: IoReport,
+}
+
+/// A backend's measured on-disk block geometry (the unit one read must
+/// decode whole). The autotuner derives `cache_block_rows` /
+/// `locality_window` from this instead of config defaults — cache units
+/// that straddle storage blocks decode the same bytes twice, units
+/// smaller than a block over-fetch on every fill.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockLayout {
+    /// Typical decoded rows per block (`.scs2`: mean over the exact
+    /// index; v1/zarr: the fixed chunk geometry).
+    pub rows_per_block: usize,
+    /// Typical decoded bytes per block.
+    pub bytes_per_block: usize,
+    /// Total blocks in the store.
+    pub n_blocks: usize,
+    /// Whether every block holds exactly `rows_per_block` rows (fixed
+    /// geometry; false for byte-budgeted `.scs2` blocks).
+    pub uniform: bool,
 }
 
 /// An indexable on-disk cell × gene collection.
@@ -74,6 +98,13 @@ pub trait Backend: Send + Sync {
     /// pipeline never changes fetched rows — only the I/O trace.
     /// Backends without a tunable read path ignore it.
     fn set_io_pipeline(&self, _pipeline: IoPipeline) {}
+    /// The backend's on-disk block geometry, when it has one. Wrappers
+    /// delegate to the wrapped store; backends without a block structure
+    /// (pure memmap) return `None` and the autotuner falls back to
+    /// config defaults.
+    fn block_layout(&self) -> Option<BlockLayout> {
+        None
+    }
 }
 
 /// Decompose sorted indices into maximal contiguous runs `(start, len)`.

@@ -45,13 +45,17 @@ use anyhow::{anyhow, bail, ensure, Context, Result};
 use super::anndata::{FLAG_DEFLATE, FOOTER_LEN, MAGIC};
 use super::collection::PlateCollection;
 use super::decode::{
-    chunk_pieces, coalesce_ranges, decode_chunk_batch, extract_chunk_rows, BufferPool, ChunkSrc,
-    IoPipeline, PipelineCell,
+    chunk_pieces, coalesce_ranges, decode_chunk_batch, decode_payload, extract_chunk_rows,
+    BufferPool, ChunkSrc, DecodePool, IoPipeline, PipelineCell,
 };
 use super::fault::IoFault;
 use super::iomodel::{AccessPattern, IoReport, LatencyHistogram};
 use super::obs::ObsFrame;
-use super::{check_sorted_indices, contiguous_runs, Backend, FetchResult};
+use super::scs2::{
+    block_pieces, extract_block_rows, parse_index, parse_trailer, BlockEntry, INDEX_ENTRY_LEN,
+    MAGIC2, TRAILER_LEN,
+};
+use super::{check_sorted_indices, contiguous_runs, Backend, BlockLayout, FetchResult};
 
 use crate::util::json::Json;
 
@@ -685,6 +689,251 @@ impl Backend for RemoteScsStore {
     fn set_io_pipeline(&self, pipeline: IoPipeline) {
         self.pipeline.set(pipeline);
     }
+
+    fn block_layout(&self) -> Option<BlockLayout> {
+        let n_chunks = self.chunk_table.len();
+        if n_chunks == 0 {
+            return None;
+        }
+        let nnz = (self.indptr[self.n_rows] - self.indptr[0]) as usize;
+        Some(BlockLayout {
+            rows_per_block: self.chunk_rows,
+            bytes_per_block: nnz * 8 / n_chunks,
+            n_blocks: n_chunks,
+            uniform: true,
+        })
+    }
+}
+
+/// HTTP mirror of [`Scs2Store`](super::scs2::Scs2Store): the same `.scs2`
+/// block layout, fetched with ranged GETs. The trailer/index parse and the
+/// per-block decode (honoring each block's raw-passthrough flag) are the
+/// local reader's — only the byte transport differs, so local and remote
+/// v2 emit identical minibatch streams and identical coalescing counts.
+pub struct RemoteScs2Store {
+    pool: Arc<HttpPool>,
+    /// Absolute object path on the server (e.g. `/plate00.scs2`).
+    path: String,
+    n_rows: usize,
+    n_cols: usize,
+    block_bytes: u64,
+    indptr: Vec<u64>,
+    index: Vec<BlockEntry>,
+    obs: ObsFrame,
+    pipeline: PipelineCell,
+}
+
+impl RemoteScs2Store {
+    /// Open a single `.scs2` object by URL.
+    pub fn open(url: &str, cfg: &RemoteConfig) -> Result<RemoteScs2Store> {
+        let (host, path) = split_url(url)?;
+        ensure!(!path.is_empty(), "{url}: no object path");
+        Self::open_with_pool(Arc::new(HttpPool::new(host, cfg)), path)
+    }
+
+    pub(crate) fn open_with_pool(pool: Arc<HttpPool>, path: String) -> Result<RemoteScs2Store> {
+        let url = format!("http://{}{path}", pool.host());
+        let len = pool.head_len(&path)?;
+        if len < MAGIC2.len() as u64 + TRAILER_LEN {
+            return Err(
+                IoFault::corrupt(format!("{url}: too short to be a .scs2 object")).into(),
+            );
+        }
+        let head = pool.get_range(&path, 0, MAGIC2.len())?;
+        if head != MAGIC2 {
+            return Err(IoFault::permanent(format!("{url}: bad magic")).into());
+        }
+        let trailer = pool.get_range(&path, len - TRAILER_LEN, TRAILER_LEN as usize)?;
+        let meta = parse_trailer(&trailer, len, &url)?;
+        let buf = pool.get_range(&path, meta.indptr_off, (meta.n_rows + 1) * 8)?;
+        let indptr: Vec<u64> = buf
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let ibuf = pool.get_range(&path, meta.index_off, meta.n_blocks * INDEX_ENTRY_LEN)?;
+        let index = parse_index(&ibuf, &meta, &url)?;
+        let obs = ObsFrame::deserialize(&pool.get_range(&path, meta.obs_off, meta.obs_len as usize)?)
+            .map_err(|e| IoFault::corrupt(format!("{url}: bad obs block: {e:#}")))?;
+        if obs.n_rows != meta.n_rows {
+            return Err(IoFault::corrupt(format!(
+                "{url}: obs rows {} != store rows {}",
+                obs.n_rows, meta.n_rows
+            ))
+            .into());
+        }
+        Ok(RemoteScs2Store {
+            pool,
+            path,
+            n_rows: meta.n_rows,
+            n_cols: meta.n_cols,
+            block_bytes: meta.block_bytes,
+            indptr,
+            index,
+            obs,
+            pipeline: PipelineCell::new(remote_default_pipeline()),
+        })
+    }
+
+    /// Wire stats of the shared connection pool.
+    pub fn stats(&self) -> RemoteStats {
+        self.pool.stats()
+    }
+
+    /// Fetch + decode `blocks` (ascending, unique): coalesce their ranges
+    /// (one ranged GET per coalesced read), decode on the shared pool.
+    /// Returns payloads in `blocks` order, the HTTP request count, and
+    /// the bytes received over the wire.
+    fn load_blocks(
+        &self,
+        blocks: &[usize],
+        pipeline: IoPipeline,
+    ) -> Result<(Vec<Vec<u8>>, usize, u64)> {
+        let ranges: Vec<(u64, u64)> = blocks
+            .iter()
+            .map(|&b| (self.index[b].offset, self.index[b].comp_len))
+            .collect();
+        let reads = coalesce_ranges(&ranges, pipeline.coalesce_gap_bytes);
+        let mut srcs: Vec<Option<(Arc<Vec<u8>>, usize)>> = vec![None; blocks.len()];
+        let mut read_bufs = Vec::with_capacity(reads.len());
+        let mut wire = 0u64;
+        for rd in &reads {
+            let body = self
+                .pool
+                .get_range(&self.path, rd.offset, rd.len)
+                .with_context(|| {
+                    format!("fetch blocks from http://{}{}", self.pool.host(), self.path)
+                })?;
+            wire += body.len() as u64;
+            let buf = Arc::new(body);
+            for &(bi, off) in &rd.members {
+                srcs[bi] = Some((buf.clone(), off));
+            }
+            read_bufs.push(buf);
+        }
+        let jobs: Vec<_> = blocks
+            .iter()
+            .zip(srcs)
+            .map(|(&b, src)| {
+                let e = self.index[b];
+                let (buf, off) = src.expect("every block covered by a ranged read");
+                move || {
+                    decode_payload(
+                        &buf[off..off + e.comp_len as usize],
+                        e.raw_len as usize,
+                        !e.stored_raw(),
+                    )
+                }
+            })
+            .collect();
+        let decoded = DecodePool::global().run_batch(jobs, pipeline.resolved_decode_threads());
+        let pool = BufferPool::global();
+        for b in read_bufs {
+            if let Ok(v) = Arc::try_unwrap(b) {
+                pool.give_buf(v);
+            }
+        }
+        let mut payloads = Vec::with_capacity(decoded.len());
+        for (i, p) in decoded.into_iter().enumerate() {
+            // Read fine but won't decode → the stored bytes are wrong —
+            // always Corrupt (same rule as the local v2 reader).
+            payloads.push(p.map_err(|e| {
+                IoFault::corrupt(format!(
+                    "decode block #{} of http://{}{}: {e:#}",
+                    blocks[i],
+                    self.pool.host(),
+                    self.path
+                ))
+            })?);
+        }
+        Ok((payloads, reads.len(), wire))
+    }
+}
+
+impl Backend for RemoteScs2Store {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn obs(&self) -> &ObsFrame {
+        &self.obs
+    }
+
+    fn pattern(&self) -> AccessPattern {
+        AccessPattern::BatchedCoalesced
+    }
+
+    fn name(&self) -> &str {
+        "remote-scs2"
+    }
+
+    fn fetch_rows(&self, sorted: &[u32]) -> Result<FetchResult> {
+        check_sorted_indices(sorted, self.n_rows)?;
+        let runs = contiguous_runs(sorted);
+        let pieces = block_pieces(&self.index, &runs);
+        let mut blocks: Vec<usize> = pieces.iter().map(|&(b, _, _)| b).collect();
+        blocks.dedup();
+        let pipeline = self.pipeline.get();
+        let (payloads, n_requests, wire) = self.load_blocks(&blocks, pipeline)?;
+        let pool = BufferPool::global();
+        let mut x = pool.take_batch(self.n_cols);
+        let total_nnz: usize = pieces
+            .iter()
+            .map(|&(_, s, e)| (self.indptr[e] - self.indptr[s]) as usize)
+            .sum();
+        x.reserve_extra(sorted.len(), total_nnz);
+        let mut bytes = 0u64;
+        let mut bi = 0usize;
+        for &(block, s, e) in &pieces {
+            while blocks[bi] != block {
+                bi += 1;
+            }
+            extract_block_rows(&self.indptr, &self.index[block], &payloads[bi], s, e, &mut x);
+            bytes += (self.indptr[e] - self.indptr[s]) * 8;
+        }
+        for p in payloads {
+            pool.give_buf(p);
+        }
+        debug_assert!(x.validate().is_ok());
+        Ok(FetchResult {
+            x,
+            io: IoReport {
+                calls: 1,
+                runs: runs.len() as u64,
+                rows: sorted.len() as u64,
+                bytes,
+                chunks: blocks.len() as u64,
+                read_calls: n_requests as u64,
+                read_calls_raw: blocks.len() as u64,
+                http_requests: n_requests as u64,
+                http_bytes: wire,
+                ..IoReport::default()
+            },
+        })
+    }
+
+    fn set_io_pipeline(&self, pipeline: IoPipeline) {
+        self.pipeline.set(pipeline);
+    }
+
+    fn block_layout(&self) -> Option<BlockLayout> {
+        if self.index.is_empty() {
+            return None;
+        }
+        let uniform = self
+            .index
+            .iter()
+            .all(|e| e.row_count == self.index[0].row_count);
+        Some(BlockLayout {
+            rows_per_block: (self.n_rows / self.index.len()).max(1),
+            bytes_per_block: self.block_bytes as usize,
+            n_blocks: self.index.len(),
+            uniform,
+        })
+    }
 }
 
 /// HTTP mirror of [`ShardedZarrStore`](super::zarr_like::ShardedZarrStore):
@@ -910,6 +1159,80 @@ impl Backend for RemoteZarrStore {
     fn set_io_pipeline(&self, pipeline: IoPipeline) {
         self.pipeline.set(pipeline);
     }
+
+    fn block_layout(&self) -> Option<BlockLayout> {
+        let n_chunks = self.chunk_index.len();
+        if n_chunks == 0 {
+            return None;
+        }
+        let nnz = (self.indptr[self.n_rows] - self.indptr[0]) as usize;
+        Some(BlockLayout {
+            rows_per_block: self.chunk_rows,
+            bytes_per_block: nnz * 8 / n_chunks,
+            n_blocks: n_chunks,
+            uniform: true,
+        })
+    }
+}
+
+/// One plate of a remote collection: v1 `.scs` or v2 `.scs2`, the remote
+/// analogue of [`AnyScsStore`](super::collection::AnyScsStore). Dispatch
+/// is by object-name extension (manifest plate names carry it; sniffing
+/// the magic would cost an extra round trip per plate).
+enum RemotePlate {
+    V1(RemoteScsStore),
+    V2(RemoteScs2Store),
+}
+
+impl RemotePlate {
+    fn open_with_pool(pool: Arc<HttpPool>, path: String) -> Result<RemotePlate> {
+        if path.ends_with(".scs2") {
+            Ok(RemotePlate::V2(RemoteScs2Store::open_with_pool(pool, path)?))
+        } else {
+            Ok(RemotePlate::V1(RemoteScsStore::open_with_pool(pool, path)?))
+        }
+    }
+
+    fn inner(&self) -> &dyn Backend {
+        match self {
+            RemotePlate::V1(s) => s,
+            RemotePlate::V2(s) => s,
+        }
+    }
+}
+
+impl Backend for RemotePlate {
+    fn n_rows(&self) -> usize {
+        self.inner().n_rows()
+    }
+
+    fn n_cols(&self) -> usize {
+        self.inner().n_cols()
+    }
+
+    fn obs(&self) -> &ObsFrame {
+        self.inner().obs()
+    }
+
+    fn pattern(&self) -> AccessPattern {
+        self.inner().pattern()
+    }
+
+    fn fetch_rows(&self, sorted: &[u32]) -> Result<FetchResult> {
+        self.inner().fetch_rows(sorted)
+    }
+
+    fn name(&self) -> &str {
+        self.inner().name()
+    }
+
+    fn set_io_pipeline(&self, pipeline: IoPipeline) {
+        self.inner().set_io_pipeline(pipeline);
+    }
+
+    fn block_layout(&self) -> Option<BlockLayout> {
+        self.inner().block_layout()
+    }
 }
 
 /// An opened remote dataset plus the connection pool behind it, so
@@ -953,23 +1276,30 @@ fn open_plates(
     pool: &Arc<HttpPool>,
     base: &str,
     names: &[String],
-) -> Result<PlateCollection<RemoteScsStore>> {
+) -> Result<PlateCollection<RemotePlate>> {
     let plates = names
         .iter()
-        .map(|n| RemoteScsStore::open_with_pool(pool.clone(), join(base, n)))
+        .map(|n| RemotePlate::open_with_pool(pool.clone(), join(base, n)))
         .collect::<Result<Vec<_>>>()?;
     PlateCollection::new(plates)
 }
 
 /// Open a remote dataset by URL, sniffing the layout:
 ///
-/// * `…/name.scs` — a single `.scs` object;
+/// * `…/name.scs` / `…/name.scs2` — a single store object (v1 or v2);
 /// * a directory with `dataset.json` — a tahoe-mini plate collection
-///   (every plate shares one connection pool);
+///   (every plate shares one connection pool; plates may mix formats);
 /// * a directory with `meta.json` — a zarr-like sharded store.
 pub fn open_remote_handle(url: &str, cfg: &RemoteConfig) -> Result<RemoteHandle> {
     let (host, base) = split_url(url)?;
     let pool = Arc::new(HttpPool::new(host, cfg));
+    if base.ends_with(".scs2") {
+        let store = RemoteScs2Store::open_with_pool(pool.clone(), base)?;
+        return Ok(RemoteHandle {
+            backend: Arc::new(store),
+            pool,
+        });
+    }
     if base.ends_with(".scs") {
         let store = RemoteScsStore::open_with_pool(pool.clone(), base)?;
         return Ok(RemoteHandle {
@@ -992,7 +1322,7 @@ pub fn open_remote_handle(url: &str, cfg: &RemoteConfig) -> Result<RemoteHandle>
     }
     bail!(
         "{url}: found neither a dataset.json plate manifest, a meta.json zarr-like store, \
-         nor a .scs object"
+         nor a .scs/.scs2 object"
     )
 }
 
@@ -1202,6 +1532,83 @@ mod tests {
 
         assert!(open_remote(&format!("{}/nothing-here", srv.url()), &quick_cfg()).is_err());
 
+        let (train, test) = open_remote_train_test(&srv.url(), &quick_cfg()).unwrap();
+        assert_eq!(train.n_rows(), 24);
+        assert_eq!(test.n_rows(), 16);
+    }
+
+    #[test]
+    fn remote_scs2_matches_local_and_counts_requests() {
+        use crate::store::scs2::{Scs2Store, Scs2Writer};
+        let dir = TempDir::new("remote").unwrap();
+        let mut w = Scs2Writer::create(dir.join("t.scs2"), 16, 256, true).unwrap();
+        for r in 0..57usize {
+            w.push_row(&[(r % 16) as u32], &[r as f32]).unwrap();
+        }
+        let mut obs = ObsFrame::new(57);
+        obs.push(ObsColumn::new("plate", vec!["p".into()], vec![0; 57]).unwrap())
+            .unwrap();
+        let local = Scs2Store::open(w.finish(&obs).unwrap()).unwrap();
+        let srv = MockHttpServer::start(dir.path(), 0, MockFaultConfig::default()).unwrap();
+        let remote =
+            RemoteScs2Store::open(&format!("{}/t.scs2", srv.url()), &quick_cfg()).unwrap();
+        assert_eq!(remote.name(), "remote-scs2");
+        assert_eq!(remote.pattern(), AccessPattern::BatchedCoalesced);
+        assert_eq!(remote.n_rows(), 57);
+        assert_eq!(remote.block_layout(), local.block_layout());
+        for idx in [
+            (0..57).collect::<Vec<u32>>(),
+            vec![0, 9, 10, 33, 56],
+            vec![3],
+            vec![],
+        ] {
+            let l = local.fetch_rows(&idx).unwrap();
+            let r = remote.fetch_rows(&idx).unwrap();
+            assert_eq!(l.x, r.x, "payload must match local ({idx:?})");
+            assert_eq!(l.io.runs, r.io.runs);
+            assert_eq!(l.io.bytes, r.io.bytes);
+            assert_eq!(l.io.chunks, r.io.chunks);
+            assert_eq!(r.io.read_calls, r.io.http_requests);
+        }
+        // Under the same explicit pipeline, remote issues exactly the
+        // ranged reads the local coalescer planned.
+        remote.set_io_pipeline(IoPipeline::default());
+        local.set_io_pipeline(IoPipeline::default());
+        let idx = vec![0u32, 30, 56];
+        assert_eq!(
+            remote.fetch_rows(&idx).unwrap().io.read_calls,
+            local.fetch_rows(&idx).unwrap().io.read_calls
+        );
+    }
+
+    #[test]
+    fn remote_collection_mixes_v1_and_v2_plates() {
+        use crate::store::scs2::Scs2Writer;
+        let dir = TempDir::new("remote").unwrap();
+        let p0 = write_store(&dir, "plate00.scs", 24, true);
+        let mut w = Scs2Writer::create(dir.join("plate01.scs2"), 16, 256, true).unwrap();
+        for r in 0..16usize {
+            w.push_row(&[(r % 16) as u32], &[r as f32 + 100.0]).unwrap();
+        }
+        let mut obs = ObsFrame::new(16);
+        obs.push(ObsColumn::new("plate", vec!["p".into()], vec![0; 16]).unwrap())
+            .unwrap();
+        w.finish(&obs).unwrap();
+        let mut meta = Json::obj();
+        meta.set("format", Json::Str("tahoe-mini/scs2".into())).set(
+            "plates",
+            Json::Arr(vec![
+                Json::Str("plate00.scs".into()),
+                Json::Str("plate01.scs2".into()),
+            ]),
+        );
+        std::fs::write(dir.join("dataset.json"), meta.to_pretty()).unwrap();
+        let srv = MockHttpServer::start(dir.path(), 0, MockFaultConfig::default()).unwrap();
+        let handle = open_remote_handle(&srv.url(), &quick_cfg()).unwrap();
+        assert_eq!(handle.backend.n_rows(), 40);
+        let got = handle.backend.fetch_rows(&[0, 23, 24, 39]).unwrap();
+        assert_eq!(got.x.row(1).1, p0.fetch_rows(&[23]).unwrap().x.row(0).1);
+        assert_eq!(got.x.row(2).1, &[100.0_f32][..]);
         let (train, test) = open_remote_train_test(&srv.url(), &quick_cfg()).unwrap();
         assert_eq!(train.n_rows(), 24);
         assert_eq!(test.n_rows(), 16);

@@ -1,0 +1,1079 @@
+//! `.scs` v2 — the native block-compressed shard format (ISSUE 10).
+//!
+//! v1 (`store/anndata.rs`) deflates whole fixed-row chunks: a chunk's
+//! decoded size swings with row sparsity, cache blocks don't align with
+//! compression units, and the coalescer can only guess at layout. v2
+//! follows the BGZF/bascet-`bbgz` shape instead — independently-compressed
+//! blocks sized by a **byte budget**, so one block = one cache unit = one
+//! decode unit — and appends the exact block index the read path (and the
+//! autotuner, via [`Backend::block_layout`]) can plan against:
+//!
+//! ```text
+//! magic "SCDATA2\n"
+//! [block payloads ...]                  (streamed during write)
+//! indptr:      (n_rows+1) × u64
+//! block index: n_blocks × 48 B:
+//!   offset u64, comp_len u64, raw_len u64, first_row u64,
+//!   row_count u32, nnz u32, flags u32 (bit0 = stored raw), reserved u32
+//! obs block:   ObsFrame::serialize
+//! trailer (88 bytes):
+//!   indptr_off, index_off, obs_off, obs_len,
+//!   n_rows, n_cols, n_blocks, block_bytes, flags (bit0 = deflate),
+//!   checksum (FNV-1a 64 over index bytes + the 9 preceding words),
+//!   magic "SCDATA2\n"
+//! ```
+//!
+//! A block payload is the CSR slice of its rows — all column indices
+//! (u32) concatenated, then all values (f32), the same layout v1 chunks
+//! use — deflate-compressed unless compression doesn't pay for that
+//! block, in which case the bytes are stored raw and the block's flag
+//! bit records it (the per-block raw-passthrough).
+//!
+//! **Determinism contract:** block boundaries are a pure function of the
+//! row nnz sequence and the byte budget (cut before a row that would push
+//! the decoded block past the budget), never of scheduling — so the
+//! serial writer here and the parallel converter (`store/convert.rs`)
+//! produce byte-identical files, and `scdata convert` output is identical
+//! for any `--threads`. Corruption (truncated/bit-flipped trailer, index
+//! or payload) surfaces as typed [`FaultKind::Corrupt`](super::FaultKind)
+//! errors through `store/fault.rs`.
+
+use std::fs::File;
+use std::io::Write;
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+use flate2::write::DeflateEncoder;
+use flate2::Compression;
+
+use super::decode::{
+    coalesce_ranges, copy_le_f32, copy_le_u32, decode_payload, BufferPool, DecodePool,
+    IoPipeline, PipelineCell,
+};
+use super::fault::IoFault;
+use super::iomodel::{AccessPattern, IoReport};
+use super::obs::ObsFrame;
+use super::{check_sorted_indices, contiguous_runs, Backend, BlockLayout, FetchResult};
+
+// Shared with the HTTP range-read mirror in `store::remote`, which parses
+// the same on-disk layout over the wire.
+pub(crate) const MAGIC2: &[u8; 8] = b"SCDATA2\n";
+pub(crate) const TRAILER_LEN: u64 = 88;
+pub(crate) const INDEX_ENTRY_LEN: usize = 48;
+/// File-level trailer flag: blocks may be deflate-compressed.
+pub(crate) const FLAG2_DEFLATE: u64 = 1;
+/// Per-block flag: payload stored raw (compression didn't pay).
+pub(crate) const BLOCK_RAW: u32 = 1;
+
+/// Default decoded-bytes-per-block budget (256 KiB ≈ a few thousand rows
+/// at Tahoe-like sparsity — large enough to amortize one deflate stream,
+/// small enough that a random minibatch over-fetches little).
+pub const DEFAULT_BLOCK_BYTES: u64 = 1 << 18;
+
+/// One entry of the v2 block index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct BlockEntry {
+    /// File offset of the block payload.
+    pub offset: u64,
+    /// On-disk payload length.
+    pub comp_len: u64,
+    /// Decoded payload length (`nnz × 8`).
+    pub raw_len: u64,
+    /// Global index of the block's first row.
+    pub first_row: u64,
+    /// Rows in this block.
+    pub row_count: u32,
+    /// Nonzeros in this block.
+    pub nnz: u32,
+    /// Bit 0 = [`BLOCK_RAW`].
+    pub flags: u32,
+}
+
+impl BlockEntry {
+    pub fn stored_raw(&self) -> bool {
+        self.flags & BLOCK_RAW != 0
+    }
+
+    fn write_to(&self, buf: &mut Vec<u8>) {
+        buf.extend_from_slice(&self.offset.to_le_bytes());
+        buf.extend_from_slice(&self.comp_len.to_le_bytes());
+        buf.extend_from_slice(&self.raw_len.to_le_bytes());
+        buf.extend_from_slice(&self.first_row.to_le_bytes());
+        buf.extend_from_slice(&self.row_count.to_le_bytes());
+        buf.extend_from_slice(&self.nnz.to_le_bytes());
+        buf.extend_from_slice(&self.flags.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+    }
+
+    fn read_from(b: &[u8]) -> BlockEntry {
+        let u64_at =
+            |i: usize| u64::from_le_bytes(b[i..i + 8].try_into().unwrap());
+        let u32_at =
+            |i: usize| u32::from_le_bytes(b[i..i + 4].try_into().unwrap());
+        BlockEntry {
+            offset: u64_at(0),
+            comp_len: u64_at(8),
+            raw_len: u64_at(16),
+            first_row: u64_at(24),
+            row_count: u32_at(32),
+            nnz: u32_at(36),
+            flags: u32_at(40),
+        }
+    }
+}
+
+// ---- FNV-1a 64 (the trailer checksum) ---------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+pub(crate) fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn trailer_checksum(index_bytes: &[u8], words: &[u64; 9]) -> u64 {
+    let mut h = fnv1a(FNV_OFFSET, index_bytes);
+    for w in words {
+        h = fnv1a(h, &w.to_le_bytes());
+    }
+    h
+}
+
+// ---- shared layout parsing (local open + remote mirror) ---------------
+
+/// Everything the 88-byte trailer says about a v2 file.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Scs2Meta {
+    pub indptr_off: u64,
+    pub index_off: u64,
+    pub obs_off: u64,
+    pub obs_len: u64,
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub n_blocks: usize,
+    pub block_bytes: u64,
+    pub flags: u64,
+    pub checksum: u64,
+}
+
+/// Parse + structurally validate a trailer. All failures are typed
+/// [`Corrupt`](super::FaultKind::Corrupt): a v2 trailer that doesn't
+/// parse means truncated or flipped bytes, and the source may be
+/// re-readable.
+pub(crate) fn parse_trailer(buf: &[u8], file_len: u64, src: &str) -> Result<Scs2Meta> {
+    if buf.len() != TRAILER_LEN as usize {
+        return Err(IoFault::corrupt(format!("{src}: short v2 trailer")).into());
+    }
+    if &buf[80..88] != MAGIC2 {
+        return Err(IoFault::corrupt(format!(
+            "{src}: bad trailer magic (truncated file?)"
+        ))
+        .into());
+    }
+    let u = |i: usize| -> u64 { u64::from_le_bytes(buf[i * 8..(i + 1) * 8].try_into().unwrap()) };
+    let meta = Scs2Meta {
+        indptr_off: u(0),
+        index_off: u(1),
+        obs_off: u(2),
+        obs_len: u(3),
+        n_rows: u(4) as usize,
+        n_cols: u(5) as usize,
+        n_blocks: u(6) as usize,
+        block_bytes: u(7),
+        flags: u(8),
+        checksum: u(9),
+    };
+    let body_end = file_len.saturating_sub(TRAILER_LEN);
+    let index_len = (meta.n_blocks * INDEX_ENTRY_LEN) as u64;
+    let indptr_len = (meta.n_rows as u64 + 1) * 8;
+    let ok = meta.indptr_off >= MAGIC2.len() as u64
+        && meta.indptr_off.saturating_add(indptr_len) <= meta.index_off
+        && meta.index_off.saturating_add(index_len) <= meta.obs_off
+        && meta.obs_off.saturating_add(meta.obs_len) <= body_end;
+    if !ok {
+        return Err(IoFault::corrupt(format!(
+            "{src}: v2 trailer offsets out of bounds"
+        ))
+        .into());
+    }
+    Ok(meta)
+}
+
+/// Parse the block index, verify the trailer checksum over it, and check
+/// the entries tile `0..n_rows` contiguously. Corrupt-typed on failure.
+pub(crate) fn parse_index(bytes: &[u8], meta: &Scs2Meta, src: &str) -> Result<Vec<BlockEntry>> {
+    if bytes.len() != meta.n_blocks * INDEX_ENTRY_LEN {
+        return Err(IoFault::corrupt(format!("{src}: short v2 block index")).into());
+    }
+    let words = [
+        meta.indptr_off,
+        meta.index_off,
+        meta.obs_off,
+        meta.obs_len,
+        meta.n_rows as u64,
+        meta.n_cols as u64,
+        meta.n_blocks as u64,
+        meta.block_bytes,
+        meta.flags,
+    ];
+    let want = trailer_checksum(bytes, &words);
+    if want != meta.checksum {
+        return Err(IoFault::corrupt(format!(
+            "{src}: v2 checksum mismatch ({want:#018x} != {:#018x})",
+            meta.checksum
+        ))
+        .into());
+    }
+    let index: Vec<BlockEntry> = bytes
+        .chunks_exact(INDEX_ENTRY_LEN)
+        .map(BlockEntry::read_from)
+        .collect();
+    let mut next_row = 0u64;
+    for (i, e) in index.iter().enumerate() {
+        if e.first_row != next_row
+            || e.row_count == 0
+            || e.raw_len != e.nnz as u64 * 8
+            || (e.stored_raw() && e.comp_len != e.raw_len)
+        {
+            return Err(IoFault::corrupt(format!(
+                "{src}: v2 block index entry #{i} inconsistent"
+            ))
+            .into());
+        }
+        next_row += e.row_count as u64;
+    }
+    if next_row != meta.n_rows as u64 {
+        return Err(IoFault::corrupt(format!(
+            "{src}: v2 block index covers {next_row} rows, trailer says {}",
+            meta.n_rows
+        ))
+        .into());
+    }
+    Ok(index)
+}
+
+/// Split contiguous row runs at block boundaries into extraction pieces
+/// `(block, row_start, row_end)` — the variable-geometry analogue of
+/// [`chunk_pieces`](super::decode::chunk_pieces). Block ids are
+/// non-decreasing because the runs come from sorted indices.
+pub(crate) fn block_pieces(
+    index: &[BlockEntry],
+    runs: &[(u32, u32)],
+) -> Vec<(usize, usize, usize)> {
+    let mut pieces = Vec::with_capacity(runs.len());
+    let mut b = 0usize;
+    for &(start, len) in runs {
+        let mut row = start as usize;
+        let run_end = start as usize + len as usize;
+        // Runs ascend, so resume the block cursor; binary search the
+        // jump instead of scanning when the gap is large.
+        b = index[b..].partition_point(|e| (e.first_row + e.row_count as u64) <= row as u64) + b;
+        while row < run_end {
+            let e = &index[b];
+            let block_end = (e.first_row + e.row_count as u64) as usize;
+            let piece_end = run_end.min(block_end);
+            pieces.push((b, row, piece_end));
+            row = piece_end;
+            if row >= block_end {
+                b += 1;
+            }
+        }
+    }
+    pieces
+}
+
+/// Copy a contiguous row range `[row_start, row_end)` (all inside the
+/// block described by `entry`) out of a decoded block payload into `out`
+/// — the variable-geometry analogue of `extract_chunk_rows`.
+pub(crate) fn extract_block_rows(
+    indptr: &[u64],
+    entry: &BlockEntry,
+    payload: &[u8],
+    row_start: usize,
+    row_end: usize,
+    out: &mut super::csr::CsrBatch,
+) {
+    let base = indptr[entry.first_row as usize];
+    let block_nnz = entry.nnz as usize;
+    let s = (indptr[row_start] - base) as usize;
+    let e = (indptr[row_end] - base) as usize;
+    let idx_bytes = &payload[s * 4..e * 4];
+    let val_off = block_nnz * 4;
+    let val_bytes = &payload[val_off + s * 4..val_off + e * 4];
+    copy_le_u32(idx_bytes, &mut out.indices);
+    copy_le_f32(val_bytes, &mut out.data);
+    let out_base = out.indptr[out.n_rows] as i64 - indptr[row_start] as i64;
+    for r in row_start..row_end {
+        out.indptr.push((indptr[r + 1] as i64 + out_base) as u64);
+    }
+    out.n_rows += row_end - row_start;
+}
+
+/// Encode one block's raw CSR bytes into its on-disk payload. Returns
+/// `(payload, stored_raw)`: deflate when it pays, raw passthrough when it
+/// doesn't (or compression is off). Deterministic — the converter's
+/// parallel workers and the serial writer produce identical bytes.
+pub(crate) fn encode_block(raw: &[u8], compress: bool) -> Result<(Vec<u8>, bool)> {
+    let pool = BufferPool::global();
+    if compress {
+        let mut enc = DeflateEncoder::new(pool.take_buf(), Compression::fast());
+        enc.write_all(raw)?;
+        let comp = enc.finish()?;
+        if comp.len() < raw.len() {
+            return Ok((comp, false));
+        }
+        pool.give_buf(comp);
+    }
+    let mut out = pool.take_buf();
+    out.extend_from_slice(raw);
+    Ok((out, true))
+}
+
+/// Serialize one block's rows (concatenated indices, then values) into a
+/// pooled buffer — the raw bytes [`encode_block`] consumes.
+pub(crate) fn block_raw_bytes(indices: &[u32], data: &[f32]) -> Vec<u8> {
+    let mut raw = BufferPool::global().take_buf();
+    raw.reserve(indices.len() * 4 + data.len() * 4);
+    for &i in indices {
+        raw.extend_from_slice(&i.to_le_bytes());
+    }
+    for &v in data {
+        raw.extend_from_slice(&v.to_le_bytes());
+    }
+    raw
+}
+
+// ---- writer -----------------------------------------------------------
+
+/// Streaming writer for `.scs2` files.
+pub struct Scs2Writer {
+    file: File,
+    path: PathBuf,
+    n_cols: usize,
+    block_bytes: u64,
+    compress: bool,
+    indptr: Vec<u64>,
+    index: Vec<BlockEntry>,
+    cur_indices: Vec<u32>,
+    cur_data: Vec<f32>,
+    cur_rows: usize,
+    offset: u64,
+}
+
+impl Scs2Writer {
+    pub fn create(
+        path: impl AsRef<Path>,
+        n_cols: usize,
+        block_bytes: u64,
+        compress: bool,
+    ) -> Result<Scs2Writer> {
+        assert!(block_bytes > 0);
+        let path = path.as_ref().to_path_buf();
+        let mut file =
+            File::create(&path).with_context(|| format!("create {}", path.display()))?;
+        file.write_all(MAGIC2)?;
+        Ok(Scs2Writer {
+            file,
+            path,
+            n_cols,
+            block_bytes,
+            compress,
+            indptr: vec![0],
+            index: Vec::new(),
+            cur_indices: Vec::new(),
+            cur_data: Vec::new(),
+            cur_rows: 0,
+            offset: MAGIC2.len() as u64,
+        })
+    }
+
+    /// Append one row (sparse, strictly-ascending column indices). The
+    /// block boundary rule — cut before a row that would push the decoded
+    /// block past the byte budget — depends only on the row nnz sequence,
+    /// never on scheduling.
+    pub fn push_row(&mut self, indices: &[u32], data: &[f32]) -> Result<()> {
+        if indices.len() != data.len() {
+            bail!("indices/data length mismatch");
+        }
+        for w in indices.windows(2) {
+            if w[1] <= w[0] {
+                bail!("row column indices must be strictly ascending");
+            }
+        }
+        if let Some(&last) = indices.last() {
+            if last as usize >= self.n_cols {
+                bail!("column {last} out of range ({})", self.n_cols);
+            }
+        }
+        if self.cur_rows > 0
+            && (self.cur_indices.len() + indices.len()) as u64 * 8 > self.block_bytes
+        {
+            self.flush_block()?;
+        }
+        self.cur_indices.extend_from_slice(indices);
+        self.cur_data.extend_from_slice(data);
+        self.cur_rows += 1;
+        self.indptr
+            .push(self.indptr.last().unwrap() + indices.len() as u64);
+        Ok(())
+    }
+
+    fn flush_block(&mut self) -> Result<()> {
+        if self.cur_rows == 0 {
+            return Ok(());
+        }
+        let pool = BufferPool::global();
+        let raw = block_raw_bytes(&self.cur_indices, &self.cur_data);
+        let (payload, stored_raw) = encode_block(&raw, self.compress)?;
+        self.file.write_all(&payload)?;
+        self.index.push(BlockEntry {
+            offset: self.offset,
+            comp_len: payload.len() as u64,
+            raw_len: raw.len() as u64,
+            first_row: (self.indptr.len() - 1 - self.cur_rows) as u64,
+            row_count: self.cur_rows as u32,
+            nnz: self.cur_indices.len() as u32,
+            flags: if stored_raw { BLOCK_RAW } else { 0 },
+        });
+        self.offset += payload.len() as u64;
+        pool.give_buf(raw);
+        pool.give_buf(payload);
+        self.cur_indices.clear();
+        self.cur_data.clear();
+        self.cur_rows = 0;
+        Ok(())
+    }
+
+    /// Append one out-of-band-encoded block in row order (the parallel
+    /// converter's path: its workers run [`encode_block`] concurrently,
+    /// the in-order writer calls this). `row_nnz` lists each row's
+    /// nonzero count; `payload`/`stored_raw` must come from
+    /// [`encode_block`] over the block's [`block_raw_bytes`].
+    pub(crate) fn append_encoded(
+        &mut self,
+        row_nnz: &[u32],
+        payload: &[u8],
+        raw_len: u64,
+        stored_raw: bool,
+    ) -> Result<()> {
+        assert_eq!(self.cur_rows, 0, "mixing push_row and append_encoded");
+        if row_nnz.is_empty() {
+            bail!("empty block");
+        }
+        let nnz: u64 = row_nnz.iter().map(|&n| n as u64).sum();
+        if raw_len != nnz * 8 {
+            bail!("block raw_len {raw_len} != nnz×8 ({nnz} nnz)");
+        }
+        let first_row = (self.indptr.len() - 1) as u64;
+        for &n in row_nnz {
+            self.indptr.push(self.indptr.last().unwrap() + n as u64);
+        }
+        self.file.write_all(payload)?;
+        self.index.push(BlockEntry {
+            offset: self.offset,
+            comp_len: payload.len() as u64,
+            raw_len,
+            first_row,
+            row_count: row_nnz.len() as u32,
+            nnz: nnz as u32,
+            flags: if stored_raw { BLOCK_RAW } else { 0 },
+        });
+        self.offset += payload.len() as u64;
+        Ok(())
+    }
+
+    /// Finish the file, embedding the obs frame (must have one row per
+    /// pushed expression row).
+    pub fn finish(mut self, obs: &ObsFrame) -> Result<PathBuf> {
+        self.flush_block()?;
+        let n_rows = self.indptr.len() - 1;
+        if obs.n_rows != n_rows {
+            bail!("obs has {} rows, store has {n_rows}", obs.n_rows);
+        }
+        let indptr_off = self.offset;
+        let mut buf = Vec::with_capacity(self.indptr.len() * 8);
+        for &p in &self.indptr {
+            buf.extend_from_slice(&p.to_le_bytes());
+        }
+        self.file.write_all(&buf)?;
+        self.offset += buf.len() as u64;
+
+        let index_off = self.offset;
+        let mut index_bytes = Vec::with_capacity(self.index.len() * INDEX_ENTRY_LEN);
+        for e in &self.index {
+            e.write_to(&mut index_bytes);
+        }
+        self.file.write_all(&index_bytes)?;
+        self.offset += index_bytes.len() as u64;
+
+        let obs_bytes = obs.serialize();
+        let obs_off = self.offset;
+        self.file.write_all(&obs_bytes)?;
+        self.offset += obs_bytes.len() as u64;
+
+        let flags = if self.compress { FLAG2_DEFLATE } else { 0 };
+        let words: [u64; 9] = [
+            indptr_off,
+            index_off,
+            obs_off,
+            obs_bytes.len() as u64,
+            n_rows as u64,
+            self.n_cols as u64,
+            self.index.len() as u64,
+            self.block_bytes,
+            flags,
+        ];
+        let checksum = trailer_checksum(&index_bytes, &words);
+        let mut tbuf = Vec::with_capacity(TRAILER_LEN as usize);
+        for v in words {
+            tbuf.extend_from_slice(&v.to_le_bytes());
+        }
+        tbuf.extend_from_slice(&checksum.to_le_bytes());
+        tbuf.extend_from_slice(MAGIC2);
+        self.file.write_all(&tbuf)?;
+        self.file.sync_all().ok();
+        Ok(self.path)
+    }
+}
+
+// ---- reader -----------------------------------------------------------
+
+/// Read-only handle to a `.scs2` file.
+pub struct Scs2Store {
+    file: File,
+    path: PathBuf,
+    n_rows: usize,
+    n_cols: usize,
+    block_bytes: u64,
+    /// Global row extents (8 B/row, in memory like v1 / AnnData backed).
+    indptr: Vec<u64>,
+    index: Vec<BlockEntry>,
+    obs: ObsFrame,
+    pipeline: PipelineCell,
+}
+
+impl Scs2Store {
+    pub fn open(path: impl AsRef<Path>) -> Result<Scs2Store> {
+        let path = path.as_ref().to_path_buf();
+        let src = path.display().to_string();
+        let file = File::open(&path).with_context(|| format!("open {src}"))?;
+        let len = file.metadata()?.len();
+        if len < MAGIC2.len() as u64 + TRAILER_LEN {
+            return Err(
+                IoFault::corrupt(format!("{src}: too short to be a .scs2 file")).into(),
+            );
+        }
+        let mut head = [0u8; 8];
+        file.read_exact_at(&mut head, 0)?;
+        if &head != MAGIC2 {
+            // Not a v2 file at all: opening the wrong file is permanent.
+            return Err(IoFault::permanent(format!("{src}: bad magic")).into());
+        }
+        let mut tbuf = vec![0u8; TRAILER_LEN as usize];
+        file.read_exact_at(&mut tbuf, len - TRAILER_LEN)?;
+        let meta = parse_trailer(&tbuf, len, &src)?;
+
+        let mut buf = vec![0u8; meta.n_blocks * INDEX_ENTRY_LEN];
+        file.read_exact_at(&mut buf, meta.index_off)?;
+        let index = parse_index(&buf, &meta, &src)?;
+
+        let mut buf = vec![0u8; (meta.n_rows + 1) * 8];
+        file.read_exact_at(&mut buf, meta.indptr_off)?;
+        let indptr: Vec<u64> = buf
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+
+        let mut buf = vec![0u8; meta.obs_len as usize];
+        file.read_exact_at(&mut buf, meta.obs_off)?;
+        let obs = ObsFrame::deserialize(&buf)
+            .map_err(|e| IoFault::corrupt(format!("{src}: obs block: {e}")))?;
+        if obs.n_rows != meta.n_rows {
+            return Err(IoFault::corrupt(format!(
+                "{src}: obs rows {} != store rows {}",
+                obs.n_rows, meta.n_rows
+            ))
+            .into());
+        }
+
+        Ok(Scs2Store {
+            file,
+            path,
+            n_rows: meta.n_rows,
+            n_cols: meta.n_cols,
+            block_bytes: meta.block_bytes,
+            indptr,
+            index,
+            obs,
+            pipeline: PipelineCell::default(),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn block_bytes(&self) -> u64 {
+        self.block_bytes
+    }
+
+    pub fn nnz(&self) -> u64 {
+        *self.indptr.last().unwrap()
+    }
+
+    /// Load + decode every block in `blocks` (ascending, unique): one
+    /// gap-tolerant coalescing pass over the index, then per-block decode
+    /// jobs on the shared pool (each honoring its own raw-passthrough
+    /// flag). Returns decoded payloads in `blocks` order plus the ranged
+    /// read count.
+    fn load_blocks(
+        &self,
+        blocks: &[usize],
+        pipeline: IoPipeline,
+    ) -> Result<(Vec<Vec<u8>>, usize)> {
+        let pool = BufferPool::global();
+        let ranges: Vec<(u64, u64)> = blocks
+            .iter()
+            .map(|&b| (self.index[b].offset, self.index[b].comp_len))
+            .collect();
+        let reads = coalesce_ranges(&ranges, pipeline.coalesce_gap_bytes);
+        let n_reads = reads.len();
+        let mut srcs: Vec<Option<(Arc<Vec<u8>>, usize)>> = vec![None; blocks.len()];
+        let mut read_bufs = Vec::with_capacity(n_reads);
+        for r in &reads {
+            let mut buf = pool.take_buf();
+            buf.resize(r.len, 0);
+            self.file.read_exact_at(&mut buf, r.offset).with_context(|| {
+                format!(
+                    "read {} block(s) at offset {} in {}",
+                    r.members.len(),
+                    r.offset,
+                    self.path.display()
+                )
+            })?;
+            let buf = Arc::new(buf);
+            for &(bi, off) in &r.members {
+                srcs[bi] = Some((buf.clone(), off));
+            }
+            read_bufs.push(buf);
+        }
+        let jobs: Vec<_> = blocks
+            .iter()
+            .zip(srcs)
+            .map(|(&b, src)| {
+                let e = self.index[b];
+                let (buf, off) = src.expect("every block covered by a ranged read");
+                move || {
+                    decode_payload(
+                        &buf[off..off + e.comp_len as usize],
+                        e.raw_len as usize,
+                        !e.stored_raw(),
+                    )
+                }
+            })
+            .collect();
+        let decoded =
+            DecodePool::global().run_batch(jobs, pipeline.resolved_decode_threads());
+        for b in read_bufs {
+            if let Ok(v) = Arc::try_unwrap(b) {
+                pool.give_buf(v);
+            }
+        }
+        let mut payloads = Vec::with_capacity(decoded.len());
+        for (i, p) in decoded.into_iter().enumerate() {
+            // A block that read fine but won't decode means the stored
+            // bytes are wrong — always Corrupt, whatever io::ErrorKind
+            // the inflater happened to surface.
+            payloads.push(p.map_err(|e| {
+                IoFault::corrupt(format!(
+                    "decode block #{} of {}: {e:#}",
+                    blocks[i],
+                    self.path.display()
+                ))
+            })?);
+        }
+        Ok((payloads, n_reads))
+    }
+}
+
+impl Backend for Scs2Store {
+    fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    fn obs(&self) -> &ObsFrame {
+        &self.obs
+    }
+
+    fn pattern(&self) -> AccessPattern {
+        AccessPattern::BatchedCoalesced
+    }
+
+    fn name(&self) -> &str {
+        "anndata-scs2"
+    }
+
+    fn fetch_rows(&self, sorted: &[u32]) -> Result<FetchResult> {
+        check_sorted_indices(sorted, self.n_rows)?;
+        let runs = contiguous_runs(sorted);
+        let pieces = block_pieces(&self.index, &runs);
+        let mut blocks: Vec<usize> = pieces.iter().map(|&(b, _, _)| b).collect();
+        blocks.dedup();
+        let pipeline = self.pipeline.get();
+        let (payloads, n_reads) = self.load_blocks(&blocks, pipeline)?;
+        let pool = BufferPool::global();
+        let mut x = pool.take_batch(self.n_cols);
+        let total_nnz: usize = pieces
+            .iter()
+            .map(|&(_, s, e)| (self.indptr[e] - self.indptr[s]) as usize)
+            .sum();
+        x.reserve_extra(sorted.len(), total_nnz);
+        let mut bytes = 0u64;
+        let mut bi = 0usize;
+        for &(block, s, e) in &pieces {
+            while blocks[bi] != block {
+                bi += 1;
+            }
+            extract_block_rows(&self.indptr, &self.index[block], &payloads[bi], s, e, &mut x);
+            bytes += (self.indptr[e] - self.indptr[s]) * 8;
+        }
+        for p in payloads {
+            pool.give_buf(p);
+        }
+        debug_assert!(x.validate().is_ok());
+        Ok(FetchResult {
+            x,
+            io: IoReport {
+                calls: 1,
+                runs: runs.len() as u64,
+                rows: sorted.len() as u64,
+                bytes,
+                chunks: blocks.len() as u64,
+                read_calls: n_reads as u64,
+                read_calls_raw: blocks.len() as u64,
+                ..IoReport::default()
+            },
+        })
+    }
+
+    fn set_io_pipeline(&self, pipeline: IoPipeline) {
+        self.pipeline.set(pipeline);
+    }
+
+    fn block_layout(&self) -> Option<BlockLayout> {
+        if self.index.is_empty() {
+            return None;
+        }
+        let uniform = self
+            .index
+            .iter()
+            .all(|e| e.row_count == self.index[0].row_count);
+        Some(BlockLayout {
+            rows_per_block: (self.n_rows / self.index.len()).max(1),
+            bytes_per_block: self.block_bytes as usize,
+            n_blocks: self.index.len(),
+            uniform,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::anndata::StoreWriter;
+    use crate::store::fault::{classify, FaultKind};
+    use crate::store::obs::ObsColumn;
+    use crate::util::rng::Rng;
+    use crate::util::tempdir::TempDir;
+
+    /// Deterministic row set shared with the v1 test builder's shape.
+    fn make_rows(n_rows: usize, n_cols: usize, seed: u64) -> Vec<(Vec<u32>, Vec<f32>)> {
+        let mut rng = Rng::new(seed);
+        (0..n_rows)
+            .map(|r| {
+                let nnz = rng.range(0, (n_cols / 2).max(2));
+                let mut cols: Vec<u32> = (0..n_cols as u32).collect();
+                rng.shuffle(&mut cols);
+                let mut cols: Vec<u32> = cols[..nnz].to_vec();
+                cols.sort_unstable();
+                let vals: Vec<f32> =
+                    cols.iter().map(|&c| (r as f32) + c as f32 * 0.01).collect();
+                (cols, vals)
+            })
+            .collect()
+    }
+
+    fn obs_for(n_rows: usize) -> ObsFrame {
+        let mut obs = ObsFrame::new(n_rows);
+        obs.push(
+            ObsColumn::new(
+                "plate",
+                vec!["p0".into(), "p1".into()],
+                (0..n_rows).map(|i| (i % 2) as u16).collect(),
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        obs
+    }
+
+    fn build(
+        dir: &TempDir,
+        n_rows: usize,
+        n_cols: usize,
+        block_bytes: u64,
+        compress: bool,
+    ) -> (Scs2Store, Vec<(Vec<u32>, Vec<f32>)>) {
+        let rows = make_rows(n_rows, n_cols, 123);
+        let mut w = Scs2Writer::create(dir.join("t.scs2"), n_cols, block_bytes, compress)
+            .unwrap();
+        for (cols, vals) in &rows {
+            w.push_row(cols, vals).unwrap();
+        }
+        let path = w.finish(&obs_for(n_rows)).unwrap();
+        (Scs2Store::open(path).unwrap(), rows)
+    }
+
+    #[test]
+    fn roundtrip_all_rows() {
+        for compress in [false, true] {
+            let dir = TempDir::new("scs2").unwrap();
+            let (store, rows) = build(&dir, 37, 16, 256, compress);
+            assert_eq!(store.n_rows(), 37);
+            assert_eq!(store.n_cols(), 16);
+            assert!(store.n_blocks() > 1, "budget must split into blocks");
+            let all: Vec<u32> = (0..37).collect();
+            let got = store.fetch_rows(&all).unwrap();
+            got.x.validate().unwrap();
+            for (r, (cols, vals)) in rows.iter().enumerate() {
+                let (gi, gv) = got.x.row(r);
+                assert_eq!(gi, &cols[..], "row {r} indices");
+                assert_eq!(gv, &vals[..], "row {r} values");
+            }
+            assert_eq!(got.io.runs, 1);
+            assert_eq!(got.io.rows, 37);
+            assert_eq!(got.io.chunks, store.n_blocks() as u64);
+        }
+    }
+
+    #[test]
+    fn block_budget_bounds_decoded_size() {
+        let dir = TempDir::new("scs2").unwrap();
+        let (store, _) = build(&dir, 200, 32, 512, true);
+        for e in &store.index {
+            // Each block's decoded bytes stay within the budget unless a
+            // single row alone exceeds it (not the case at this sparsity).
+            assert!(e.raw_len <= 512, "block raw_len {} > budget", e.raw_len);
+        }
+        assert_eq!(
+            store.index.iter().map(|e| e.row_count as usize).sum::<usize>(),
+            200
+        );
+        let layout = store.block_layout().unwrap();
+        assert_eq!(layout.n_blocks, store.n_blocks());
+        assert_eq!(layout.bytes_per_block, 512);
+        assert!(layout.rows_per_block >= 1);
+    }
+
+    #[test]
+    fn matches_v1_contents() {
+        let dir = TempDir::new("scs2").unwrap();
+        let rows = make_rows(64, 16, 123);
+        let obs = obs_for(64);
+        let mut w1 = StoreWriter::create(dir.join("a.scs"), 16, 8, true).unwrap();
+        let mut w2 = Scs2Writer::create(dir.join("a.scs2"), 16, 256, true).unwrap();
+        for (cols, vals) in &rows {
+            w1.push_row(cols, vals).unwrap();
+            w2.push_row(cols, vals).unwrap();
+        }
+        let v1 = crate::store::anndata::SparseChunkStore::open(w1.finish(&obs).unwrap())
+            .unwrap();
+        let v2 = Scs2Store::open(w2.finish(&obs).unwrap()).unwrap();
+        let idx: Vec<u32> = vec![0, 1, 9, 17, 33, 34, 63];
+        let a = v1.fetch_rows(&idx).unwrap();
+        let b = v2.fetch_rows(&idx).unwrap();
+        assert_eq!(a.x, b.x, "v1 and v2 must fetch identical rows");
+        assert_eq!(a.io.bytes, b.io.bytes);
+        assert_eq!(v1.obs(), v2.obs());
+    }
+
+    #[test]
+    fn coalesced_reads_and_parallel_decode_are_identical() {
+        for compress in [false, true] {
+            let dir = TempDir::new("scs2").unwrap();
+            let (store, _) = build(&dir, 128, 16, 256, compress);
+            let idx: Vec<u32> = vec![0, 1, 9, 40, 41, 90, 127];
+            let base = store.fetch_rows(&idx).unwrap();
+            assert_eq!(
+                base.io.read_calls, base.io.chunks,
+                "coalescing off: one read per block"
+            );
+            store.set_io_pipeline(IoPipeline {
+                decode_threads: 4,
+                coalesce_gap_bytes: 1 << 20,
+            });
+            let piped = store.fetch_rows(&idx).unwrap();
+            assert_eq!(piped.x, base.x, "pipeline must be execution-only");
+            assert_eq!(piped.io.read_calls, 1);
+            assert_eq!(piped.io.read_calls_raw, base.io.read_calls_raw);
+            store.set_io_pipeline(IoPipeline::default());
+        }
+    }
+
+    #[test]
+    fn raw_passthrough_when_compression_does_not_pay() {
+        let dir = TempDir::new("scs2").unwrap();
+        // Incompressible rows: every value distinct, indices dense-random.
+        let rows = make_rows(100, 64, 9);
+        let mut w = Scs2Writer::create(dir.join("r.scs2"), 64, 1 << 10, true).unwrap();
+        for (cols, vals) in &rows {
+            w.push_row(cols, vals).unwrap();
+        }
+        let store = Scs2Store::open(w.finish(&ObsFrame::new(100)).unwrap()).unwrap();
+        // Compression always produces comp_len <= raw_len on disk: blocks
+        // where deflate loses are stored raw instead.
+        for e in &store.index {
+            assert!(e.comp_len <= e.raw_len);
+            if e.stored_raw() {
+                assert_eq!(e.comp_len, e.raw_len);
+            }
+        }
+        // And a store written with compress=false is all-raw.
+        let mut w = Scs2Writer::create(dir.join("nc.scs2"), 64, 1 << 10, false).unwrap();
+        for (cols, vals) in &rows {
+            w.push_row(cols, vals).unwrap();
+        }
+        let store = Scs2Store::open(w.finish(&ObsFrame::new(100)).unwrap()).unwrap();
+        assert!(store.index.iter().all(|e| e.stored_raw()));
+        let got = store.fetch_rows(&[0, 50, 99]).unwrap();
+        assert_eq!(got.x.row(1).0, &rows[50].0[..]);
+    }
+
+    #[test]
+    fn empty_rows_roundtrip() {
+        let dir = TempDir::new("scs2").unwrap();
+        let mut w = Scs2Writer::create(dir.join("e.scs2"), 8, 64, true).unwrap();
+        w.push_row(&[], &[]).unwrap();
+        w.push_row(&[1, 3], &[1.0, 3.0]).unwrap();
+        w.push_row(&[], &[]).unwrap();
+        let path = w.finish(&ObsFrame::new(3)).unwrap();
+        let store = Scs2Store::open(path).unwrap();
+        let got = store.fetch_rows(&[0, 1, 2]).unwrap();
+        assert_eq!(got.x.row(0).0.len(), 0);
+        assert_eq!(got.x.row(1).0, &[1, 3]);
+        assert_eq!(got.x.row(2).0.len(), 0);
+    }
+
+    #[test]
+    fn writer_validates_rows() {
+        let dir = TempDir::new("scs2").unwrap();
+        let mut w = Scs2Writer::create(dir.join("v.scs2"), 8, 64, false).unwrap();
+        assert!(w.push_row(&[3, 1], &[1.0, 2.0]).is_err()); // unsorted
+        assert!(w.push_row(&[1], &[1.0, 2.0]).is_err()); // len mismatch
+        assert!(w.push_row(&[9], &[1.0]).is_err()); // out of range
+        w.push_row(&[0], &[1.0]).unwrap();
+        assert!(w.finish(&ObsFrame::new(5)).is_err()); // obs mismatch
+    }
+
+    #[test]
+    fn truncation_and_bitflips_are_corrupt_typed() {
+        let dir = TempDir::new("scs2").unwrap();
+        let (store, _) = build(&dir, 64, 16, 256, true);
+        let path = store.path().to_path_buf();
+        drop(store);
+        let bytes = std::fs::read(&path).unwrap();
+        let check = |mutated: Vec<u8>| {
+            std::fs::write(&path, &mutated).unwrap();
+            let err = Scs2Store::open(&path).unwrap_err();
+            assert_eq!(
+                classify(&err),
+                FaultKind::Corrupt,
+                "expected Corrupt, got: {err:#}"
+            );
+        };
+        // Truncated trailer.
+        check(bytes[..bytes.len() - 10].to_vec());
+        // Bit-flipped trailer word (n_rows).
+        let mut flip = bytes.clone();
+        let w4 = bytes.len() - TRAILER_LEN as usize + 4 * 8;
+        flip[w4] ^= 0x01;
+        check(flip);
+        // Bit-flipped block index byte (caught by the checksum). Find the
+        // index offset from the (intact) trailer.
+        let t = bytes.len() - TRAILER_LEN as usize;
+        let index_off =
+            u64::from_le_bytes(bytes[t + 8..t + 16].try_into().unwrap()) as usize;
+        let mut flip = bytes.clone();
+        flip[index_off + 3] ^= 0x80;
+        check(flip);
+        // Too short to hold a trailer at all.
+        check(b"SCDATA2\nxx".to_vec());
+    }
+
+    #[test]
+    fn wrong_magic_is_permanent() {
+        let dir = TempDir::new("scs2").unwrap();
+        let p = dir.join("not.scs2");
+        std::fs::write(&p, vec![0u8; 256]).unwrap();
+        let err = Scs2Store::open(&p).unwrap_err();
+        assert_eq!(classify(&err), FaultKind::Permanent);
+    }
+
+    #[test]
+    fn corrupt_payload_detected_at_decode() {
+        let dir = TempDir::new("scs2").unwrap();
+        let (store, _) = build(&dir, 64, 16, 256, true);
+        let path = store.path().to_path_buf();
+        let off = store.index[0].offset as usize;
+        drop(store);
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[off] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        // Index + trailer are intact, so open succeeds; the flipped
+        // payload surfaces as a Corrupt fetch error.
+        let store = Scs2Store::open(&path).unwrap();
+        let err = store.fetch_rows(&[0, 1]).unwrap_err();
+        assert_eq!(classify(&err), FaultKind::Corrupt, "got: {err:#}");
+    }
+
+    #[test]
+    fn block_pieces_split_at_index_boundaries() {
+        let entry = |first_row: u64, row_count: u32| BlockEntry {
+            offset: 0,
+            comp_len: 0,
+            raw_len: 0,
+            first_row,
+            row_count,
+            nnz: 0,
+            flags: BLOCK_RAW,
+        };
+        // Blocks of 4, 2, 6 rows over 12 rows.
+        let index = vec![entry(0, 4), entry(4, 2), entry(6, 6)];
+        let pieces = block_pieces(&index, &[(3, 5), (11, 1)]);
+        assert_eq!(pieces, vec![(0, 3, 4), (1, 4, 6), (2, 6, 8), (2, 11, 12)]);
+        assert!(block_pieces(&index, &[]).is_empty());
+    }
+
+    #[test]
+    fn obs_embedded() {
+        let dir = TempDir::new("scs2").unwrap();
+        let (store, _) = build(&dir, 10, 8, 128, true);
+        let col = store.obs().column("plate").unwrap();
+        assert_eq!(col.codes.len(), 10);
+        assert_eq!(col.categories, vec!["p0", "p1"]);
+    }
+}

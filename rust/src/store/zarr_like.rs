@@ -25,7 +25,7 @@ use super::decode::{
 use super::fault::IoFault;
 use super::iomodel::{AccessPattern, IoReport};
 use super::obs::ObsFrame;
-use super::{check_sorted_indices, contiguous_runs, Backend, FetchResult};
+use super::{check_sorted_indices, contiguous_runs, Backend, BlockLayout, FetchResult};
 
 use crate::util::json::Json;
 
@@ -308,6 +308,20 @@ impl Backend for ShardedZarrStore {
 
     fn set_io_pipeline(&self, pipeline: IoPipeline) {
         self.pipeline.set(pipeline);
+    }
+
+    fn block_layout(&self) -> Option<BlockLayout> {
+        let n_chunks = self.chunk_index.len();
+        if n_chunks == 0 {
+            return None;
+        }
+        let nnz = (self.indptr[self.n_rows] - self.indptr[0]) as usize;
+        Some(BlockLayout {
+            rows_per_block: self.chunk_rows,
+            bytes_per_block: nnz * 8 / n_chunks,
+            n_blocks: n_chunks,
+            uniform: true,
+        })
     }
 }
 

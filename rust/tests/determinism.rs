@@ -1167,3 +1167,156 @@ fn remote_chaos_recovers_the_exact_stream() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Block-compressed `.scs2` v2 (ISSUE 10 acceptance): the on-disk format is
+// a transport, not a sampler. A dataset rewritten by `scdata convert` must
+// emit a minibatch stream bit-identical to its `.scs` v1 source — across
+// both seed schemas, workers ∈ {0, 1, 4}, cache on/off, and remote vs
+// local — mid-epoch checkpoint/resume must continue the v2 stream exactly
+// as it does v1's, and the converter's output bytes must not depend on
+// its thread count.
+// ---------------------------------------------------------------------------
+
+use scdata::store::{convert_path, ConvertConfig};
+
+/// A v1 dataset plus its `scdata convert` rewrite: both TempDir guards,
+/// both opened collections. The small block budget forces several
+/// compressed blocks per plate so block extraction is actually exercised.
+fn v2_pair(cells_per_plate: usize) -> (TempDir, TempDir, Arc<dyn Backend>, Arc<dyn Backend>) {
+    let (src_dir, v1) = dataset(cells_per_plate);
+    let dst_dir = TempDir::new("determinism-v2").unwrap();
+    let report = convert_path(
+        src_dir.path(),
+        dst_dir.path(),
+        &ConvertConfig {
+            block_bytes: 4096,
+            ..ConvertConfig::default()
+        },
+    )
+    .unwrap();
+    assert!(
+        report.blocks > report.files.len(),
+        "budget too coarse: every plate fit in one block"
+    );
+    let v2: Arc<dyn Backend> = Arc::new(open_collection(dst_dir.path()).unwrap());
+    (src_dir, dst_dir, v1, v2)
+}
+
+#[test]
+fn v2_converted_dataset_streams_bit_identically() {
+    // The headline: the v1 source is the reference; the converted
+    // dataset — read locally and over the mock object store — must match
+    // it for every schema × worker count × cache setting.
+    let (_src, dst_dir, v1, v2) = v2_pair(400);
+    let srv = MockHttpServer::start(dst_dir.path(), 0, MockFaultConfig::default()).unwrap();
+    let remote_v2 = open_remote(&srv.url(), &RemoteConfig::default()).unwrap();
+    assert_eq!(v1.n_rows(), v2.n_rows());
+    assert_eq!(v1.obs(), v2.obs());
+    for schema in [SeedSchema::V1, SeedSchema::V2] {
+        let reference = make(&v1, vary(|c| c.sampling.seed_schema = schema));
+        for epoch in [0u64, 1] {
+            let expect = stream(&reference, epoch);
+            assert!(!expect.is_empty());
+            for workers in [0usize, 1, 4] {
+                for cache in [false, true] {
+                    for (leg, backend) in [("local", &v2), ("remote", &remote_v2)] {
+                        let ds = make(
+                            backend,
+                            vary(|c| {
+                                c.sampling.seed_schema = schema;
+                                c.workers.num_workers = workers;
+                                if cache {
+                                    c.cache.bytes = 8 << 20;
+                                    c.cache.block_rows = 64;
+                                }
+                            }),
+                        );
+                        assert_eq!(
+                            stream(&ds, epoch),
+                            expect,
+                            "{schema:?} workers={workers} cache={cache} {leg}: \
+                             v2 stream diverged from the v1 source (epoch {epoch})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn v2_kill_resume_continues_bit_identically() {
+    // Mid-epoch checkpoint/resume over the converted store, resuming
+    // under a different execution config (workers + cache) — the same
+    // migration contract the v1 tests assert.
+    let (_src, _dst, v1, v2) = v2_pair(400);
+    for schema in [SeedSchema::V1, SeedSchema::V2] {
+        let writer = make(&v2, vary(|c| c.sampling.seed_schema = schema));
+        let v1_ref = make(&v1, vary(|c| c.sampling.seed_schema = schema));
+        let full = stream(&writer, 0);
+        assert!(full.len() > 10);
+        assert_eq!(full, stream(&v1_ref, 0), "{schema:?}: v2 full epoch != v1");
+        for kill in [1usize, 7, full.len() - 1] {
+            let ckpt = kill_after(&writer, 0, kill);
+            let reader = make(
+                &v2,
+                vary(|c| {
+                    c.sampling.seed_schema = schema;
+                    c.workers.num_workers = 4;
+                    c.cache.bytes = 8 << 20;
+                    c.cache.block_rows = 64;
+                }),
+            );
+            assert_eq!(
+                collect(reader.resume(&ckpt).unwrap()),
+                full[kill..],
+                "{schema:?} kill={kill}: resumed v2 stream diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn v2_convert_is_thread_invariant_over_a_dataset_dir() {
+    // The converter's determinism contract at the integration level:
+    // converting a whole plate collection with 1, 4 and auto threads
+    // produces byte-identical plate files and manifests.
+    let (src_dir, _v1) = dataset(300);
+    let outs: Vec<TempDir> = [1usize, 4, 0]
+        .iter()
+        .map(|&threads| {
+            let out = TempDir::new("determinism-cvt").unwrap();
+            convert_path(
+                src_dir.path(),
+                out.path(),
+                &ConvertConfig {
+                    block_bytes: 2048,
+                    threads,
+                    ..ConvertConfig::default()
+                },
+            )
+            .unwrap();
+            out
+        })
+        .collect();
+    let files = |d: &TempDir| -> Vec<(String, Vec<u8>)> {
+        let mut v: Vec<_> = std::fs::read_dir(d.path())
+            .unwrap()
+            .map(|e| {
+                let e = e.unwrap();
+                (
+                    e.file_name().to_string_lossy().into_owned(),
+                    std::fs::read(e.path()).unwrap(),
+                )
+            })
+            .collect();
+        v.sort();
+        v
+    };
+    let want = files(&outs[0]);
+    assert!(want.iter().any(|(n, _)| n.ends_with(".scs2")));
+    for out in &outs[1..] {
+        assert_eq!(files(out), want, "thread count changed the converted bytes");
+    }
+}
